@@ -1,0 +1,90 @@
+//! End-to-end driver: train a **true-scale ~100M-parameter** decoder
+//! transformer with LOTION at INT4 on the synthetic corpus, logging the
+//! loss curve — the full three-layer stack (rust coordinator → PJRT →
+//! scanned JAX train program → Pallas quantization kernels) on a real
+//! workload.
+//!
+//! Requires the e2e artifact set:
+//!     cd python && python -m compile.aot --out ../artifacts --set e2e
+//! then:
+//!     cargo run --release --example e2e_train_lm -- [steps] [model]
+//!
+//! On this 1-core CPU testbed a step of the 100M config takes tens of
+//! seconds; the default is a short smoke budget (EXPERIMENTS.md §E2E
+//! records a longer run). Pass a different step count / model
+//! (e.g. `lm-150m-sim`) to scale the run to your machine.
+
+use anyhow::{Context, Result};
+use lotion::config::{RunConfig, Schedule};
+use lotion::coordinator::{DataSource, Evaluator, MetricsLogger, Trainer};
+use lotion::data::{ByteTokenizer, TokenBatcher, ZipfMarkovCorpus};
+use lotion::runtime::{Engine, Role};
+use std::path::Path;
+
+fn main() -> Result<()> {
+    lotion::util::logging::init();
+    let args: Vec<String> = std::env::args().collect();
+    let steps: usize = args.get(1).map(|s| s.parse()).transpose()?.unwrap_or(12);
+    let model = args.get(2).cloned().unwrap_or_else(|| "lm-100m".to_string());
+
+    let engine = Engine::new(Path::new("artifacts"))?;
+    let mut cfg = RunConfig::default();
+    cfg.name = format!("e2e_{model}");
+    cfg.model = model.clone();
+    cfg.method = "lotion".into();
+    cfg.format = "int4".into();
+    cfg.steps = steps;
+    cfg.lr = 1e-3;
+    cfg.lambda = 300.0;
+    cfg.eval_every = steps.max(1);
+    cfg.schedule = Schedule::Cosine { warmup: steps / 10, final_frac: 0.1 };
+
+    // batch geometry straight from the manifest
+    let train = engine
+        .manifest
+        .find_train(&cfg.model, &cfg.method, &cfg.format)
+        .context("e2e artifacts missing — run: cd python && python -m compile.aot --out ../artifacts --set e2e")?;
+    let data = train.inputs.iter().find(|s| s.role == Role::Data).context("no data input")?;
+    let (batch, t1) = (data.shape[1], data.shape[2]);
+    let params: usize = train
+        .inputs
+        .iter()
+        .filter(|s| s.role == Role::Param)
+        .map(|s| s.elements())
+        .sum();
+    println!(
+        "e2e: model={model} params={:.1}M batch={batch} seq={} steps={steps}",
+        params as f64 / 1e6,
+        t1 - 1
+    );
+
+    let corpus = ZipfMarkovCorpus::generate(4_000_000, 2048, 4, 7);
+    let tokens = ByteTokenizer::new().encode(&corpus.bytes);
+    let batcher = TokenBatcher::new(tokens, batch, t1 - 1, 0.05);
+
+    let t0 = std::time::Instant::now();
+    let mut trainer = Trainer::new(&engine, cfg.clone(), vec![], DataSource::Tokens(batcher))?;
+    println!("init + state setup: {:.1}s", t0.elapsed().as_secs_f64());
+
+    let mut eval = Evaluator::new(&engine, &cfg.model, cfg.seed)?;
+    let mut metrics = MetricsLogger::to_file(Path::new("results/e2e/metrics.jsonl"))?;
+    let t0 = std::time::Instant::now();
+    while trainer.step < cfg.steps {
+        let (base, total) = trainer.chunk(&mut metrics)?;
+        let tokens_seen = trainer.step * batch * (t1 - 1);
+        println!(
+            "step {:>5}  loss {base:.4}  (+penalty {:.4})  {:.2} s/step  {:.0} tok/s",
+            trainer.step,
+            total - base,
+            t0.elapsed().as_secs_f64() / trainer.step as f64,
+            tokens_seen as f64 / t0.elapsed().as_secs_f64(),
+        );
+    }
+    eval.eval_all(&trainer, &mut metrics)?;
+    println!("\nfinal evals:");
+    for p in metrics.eval_points.iter().rev().take(3) {
+        println!("  {}/{}: {:.4}", p.format, p.rounding, p.val_loss);
+    }
+    println!("loss curve + evals -> results/e2e/metrics.jsonl");
+    Ok(())
+}

@@ -1,0 +1,62 @@
+//! The paper's §4.1 linear-regression story in miniature: train the
+//! same problem with all four methods (LOTION / QAT / RAT / PTQ) and
+//! print the INT4 quantized validation losses side by side — a fast,
+//! small-d version of `lotion-rs exp fig2`.
+//!
+//!     cargo run --release --example linreg_lotion
+
+use anyhow::Result;
+use lotion::config::{RunConfig, Schedule};
+use lotion::coordinator::{DataSource, Evaluator, MetricsLogger, Trainer};
+use lotion::data::synth::population_loss;
+use lotion::experiments::common::synth_statics;
+use lotion::quant::{cast, QuantFormat, Rounding};
+use lotion::runtime::Engine;
+use lotion::util::rng::Rng;
+use std::path::Path;
+
+const D: usize = 256; // the smoke-set problem; fig2 runs d=12000
+
+fn main() -> Result<()> {
+    lotion::util::logging::init();
+    let engine = Engine::new(Path::new("artifacts"))?;
+
+    println!("{:<10} {:>12} {:>12} {:>12}", "method", "fp32", "int4/RTN", "int4/RR");
+    for method in ["lotion", "qat", "rat", "ptq"] {
+        let mut cfg = RunConfig::default();
+        cfg.name = format!("linreg_{method}");
+        cfg.model = format!("linreg_d{D}");
+        cfg.method = method.into();
+        cfg.format = if method == "ptq" { "none".into() } else { "int4".into() };
+        cfg.eval_formats = vec!["int4".into()];
+        cfg.steps = 400;
+        cfg.lr = 0.1;
+        cfg.lambda = 1.0; // exact GN diagonal: Eq. 3 is parameter-free here
+        cfg.eval_every = 400;
+        cfg.schedule = Schedule::Cosine { warmup: 0, final_frac: 0.05 };
+
+        let (statics, _, _) = synth_statics(D, 42);
+        let mut trainer = Trainer::new(&engine, cfg.clone(), statics, DataSource::InGraph)?;
+        let mut eval = Evaluator::new(&engine, &cfg.model, 0)?;
+        let mut metrics = MetricsLogger::in_memory();
+        trainer.run(&mut eval, &mut metrics)?;
+        println!(
+            "{:<10} {:>12.5} {:>12.5} {:>12.5}",
+            method,
+            metrics.final_eval("fp32", "none").unwrap(),
+            metrics.final_eval("int4", "rtn").unwrap(),
+            metrics.final_eval("int4", "rr").unwrap(),
+        );
+    }
+
+    // the paper's PTQ oracle: quantize the target w* directly
+    let (_, lam, wstar) = synth_statics(D, 42);
+    let fmt = QuantFormat::int4();
+    let mut rng = Rng::new(1);
+    for (r, name) in [(Rounding::Rtn, "RTN"), (Rounding::Rr, "RR")] {
+        let mut wq = wstar.clone();
+        cast(&mut wq, &fmt, r, &mut rng);
+        println!("PTQ(w*)/{name}: {:.5}", population_loss(&wq, &wstar, &lam));
+    }
+    Ok(())
+}

@@ -1,0 +1,64 @@
+//! Quantization playground: inspect what the paper's §2.1 quantizer and
+//! §3.1 randomized rounding actually do to a tensor — scales, codes,
+//! per-coordinate RR variance (sigma^2 = s^2 Δ(1-Δ)), and the LOTION
+//! penalty — across INT4 / INT8 / FP4, per-tensor and block-wise.
+//!
+//!     cargo run --release --example quant_playground
+
+use lotion::quant::{cast_rr, cast_rtn, lotion_penalty, sigma2, QuantFormat};
+use lotion::util::rng::Rng;
+
+fn main() {
+    let mut rng = Rng::new(7);
+    let n = 4096;
+    let w: Vec<f32> = (0..n).map(|_| rng.normal_f32() * 0.05).collect();
+    let fisher = vec![1.0f32; n];
+
+    println!(
+        "{:<10} {:>8} {:>12} {:>14} {:>14} {:>14}",
+        "format", "block", "scale[0]", "rtn err (rms)", "rr err (rms)", "penalty"
+    );
+    for fmt_name in ["int4", "int8", "fp4"] {
+        for block in [0usize, 64] {
+            let fmt = QuantFormat::parse(fmt_name, block).unwrap();
+            let scales = lotion::quant::blocks::block_scales(&w, &fmt);
+
+            let mut rtn = w.clone();
+            cast_rtn(&mut rtn, &fmt);
+            let mut rr = w.clone();
+            cast_rr(&mut rr, &fmt, &mut rng);
+            let rms = |q: &[f32]| {
+                (w.iter().zip(q).map(|(a, b)| ((a - b) as f64).powi(2)).sum::<f64>()
+                    / n as f64)
+                    .sqrt()
+            };
+            println!(
+                "{:<10} {:>8} {:>12.6} {:>14.6} {:>14.6} {:>14.6}",
+                fmt_name,
+                if block == 0 { "tensor".to_string() } else { block.to_string() },
+                scales[0],
+                rms(&rtn),
+                rms(&rr),
+                lotion_penalty(&w, &fisher, &fmt),
+            );
+            // the RR identity: E[rr err^2] per coord == sigma2
+            let s2 = sigma2(&w, &fmt);
+            let mean_s2: f64 = s2.iter().map(|&v| v as f64).sum::<f64>() / n as f64;
+            assert!((rms(&rr).powi(2) - mean_s2).abs() < mean_s2 * 0.5 + 1e-9);
+        }
+    }
+
+    // show the INT4 codes of a few values, paper-style
+    println!("\nINT4 per-tensor codes of the first 8 weights:");
+    let fmt = QuantFormat::int4();
+    let s = lotion::quant::blocks::block_scales(&w, &fmt)[0];
+    for &v in w.iter().take(8) {
+        let z = v / s;
+        println!(
+            "  w={v:+.5}  z={z:+.3}  code={:+.0}  cast={:+.5}  sigma2={:.2e}",
+            fmt.rtn(z),
+            fmt.rtn(z) * s,
+            s * s * (z - z.floor()) * (1.0 - (z - z.floor()))
+        );
+    }
+}

@@ -1,0 +1,51 @@
+//! Quickstart: train a tiny LM with LOTION at INT4 for a few hundred
+//! steps and print the quantized validation losses.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use anyhow::Result;
+use lotion::config::RunConfig;
+use lotion::coordinator::{DataSource, Evaluator, MetricsLogger, Trainer};
+use lotion::data::{ByteTokenizer, TokenBatcher, ZipfMarkovCorpus};
+use lotion::runtime::Engine;
+use std::path::Path;
+
+fn main() -> Result<()> {
+    lotion::util::logging::init();
+
+    // 1. the engine loads AOT artifacts (HLO text + manifest) over PJRT
+    let engine = Engine::new(Path::new("artifacts"))?;
+
+    // 2. configure a run: LOTION at INT4 on the lm-tiny preset
+    let mut cfg = RunConfig::default();
+    cfg.name = "quickstart".into();
+    cfg.model = "lm-tiny".into();
+    cfg.method = "lotion".into();
+    cfg.format = "int4".into();
+    cfg.steps = 200;
+    cfg.lr = 3e-3;
+    cfg.lambda = 100.0;
+    cfg.eval_every = 40;
+
+    // 3. data: synthetic Zipf–Markov corpus through the byte tokenizer
+    let corpus = ZipfMarkovCorpus::generate(500_000, 1024, 4, 7);
+    let tokens = ByteTokenizer::new().encode(&corpus.bytes);
+    let batcher = TokenBatcher::new(tokens, 8, 64, 0.1);
+
+    // 4. train; quantized eval (RTN + RR) happens automatically
+    let mut trainer = Trainer::new(&engine, cfg.clone(), vec![], DataSource::Tokens(batcher))?;
+    let mut eval = Evaluator::new(&engine, &cfg.model, cfg.seed)?;
+    let mut metrics = MetricsLogger::in_memory();
+    trainer.run(&mut eval, &mut metrics)?;
+
+    println!("\nquickstart results after {} steps:", trainer.step);
+    println!("  fp32 val loss:      {:.4}", metrics.final_eval("fp32", "none").unwrap());
+    println!("  int4 val loss RTN:  {:.4}", metrics.final_eval("int4", "rtn").unwrap());
+    println!("  int4 val loss RR:   {:.4}", metrics.final_eval("int4", "rr").unwrap());
+    println!(
+        "  train loss: {:.4} -> {:.4}",
+        metrics.train_losses.first().unwrap().1,
+        metrics.train_losses.last().unwrap().1
+    );
+    Ok(())
+}

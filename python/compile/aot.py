@@ -1,0 +1,181 @@
+"""AOT pipeline: lower every program to HLO *text* + write the manifest.
+
+Run once at build time (``make artifacts``); python never appears on the
+request path. Interchange is HLO text, not serialized protos — jax>=0.5
+emits 64-bit instruction ids that the image's xla_extension 0.5.1
+rejects, while the text parser reassigns ids cleanly (see
+/opt/xla-example/README.md).
+
+Usage:  cd python && python -m compile.aot --out ../artifacts --set default
+Sets:   smoke    tiny fixtures for fast tests
+        synth    linreg d=12000 + linear2 k-sweep (Figs. 2/3/7/8)
+        lm       the 150m-sim / 300m-sim presets (Figs. 1/4/5/9-12, Tabs. 1-2)
+        default  smoke + synth + lm
+        e2e      the true-scale lm-100m config (examples/e2e_train_lm.rs)
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import manifest, optim, programs
+from .kernels import make_format
+from .models import linear2, linreg, transformer
+
+# Hidden dims for the Fig. 3 / Fig. 8 k-sweep.
+LINEAR2_KS = (1, 2, 4, 8, 16, 32)
+# Synthetic problem dimension (§4.1/§4.2).
+SYNTH_D = 12000
+
+
+def to_hlo_text(prog: programs.Program) -> str:
+    lowered = jax.jit(prog.fn, keep_unused=True).lower(*programs.example_args(prog))
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _adapter_lm(preset: str, batch: int) -> programs.ModelAdapter:
+    lm = transformer.PRESETS[preset]
+    return programs.make_adapter("lm", programs.LMTrainConfig(lm, batch=batch))
+
+
+def _train(ad, method, fmt_name, opt_name, K, block=0, **opt_kw):
+    fmt = make_format(fmt_name, block) if fmt_name != "none" else None
+    return programs.build_train_program(
+        ad, method, fmt, optim.make_optimizer(opt_name, **opt_kw), K
+    )
+
+
+def set_smoke() -> list:
+    """Small fixtures exercised by rust integration tests + quickstart."""
+    out = []
+    ad = programs.make_adapter("linreg", linreg.LinRegConfig(d=256, batch=64))
+    for m in ("ptq", "qat", "rat", "lotion"):
+        out.append(_train(ad, m, "none" if m == "ptq" else "int4", "sgd", 8))
+    out.append(programs.build_eval_program(ad))
+    out.append(programs.build_init_program(ad))
+    adlm = _adapter_lm("lm-tiny", batch=8)
+    for m, f in (("ptq", "none"), ("qat", "int4"), ("rat", "int4"),
+                 ("lotion", "int4"), ("lotion", "fp4")):
+        out.append(_train(adlm, m, f, "adamw", 4))
+    out.append(programs.build_eval_program(adlm, eval_batches=4))
+    out.append(programs.build_init_program(adlm))
+    return out
+
+
+def set_synth() -> list:
+    """Figs. 2/7 (linreg) and Figs. 3/8 (linear2 k-sweep), INT4."""
+    out = []
+    ad = programs.make_adapter("linreg", linreg.LinRegConfig(d=SYNTH_D, batch=128))
+    for m in ("ptq", "qat", "rat", "lotion"):
+        out.append(_train(ad, m, "none" if m == "ptq" else "int4", "sgd", 16))
+    out.append(programs.build_eval_program(ad))
+    out.append(programs.build_init_program(ad))
+    for k in LINEAR2_KS:
+        adk = programs.make_adapter("linear2", linear2.Linear2Config(d=SYNTH_D, k=k))
+        for m in ("ptq", "qat", "lotion"):
+            out.append(_train(adk, m, "none" if m == "ptq" else "int4", "sgd", 16))
+        out.append(programs.build_eval_program(adk))
+        out.append(programs.build_init_program(adk))
+    return out
+
+
+def set_lm() -> list:
+    """LM presets for Figs. 1/4/5/9-12 + Tables 1-2 (CPU-scaled)."""
+    out = []
+    ad150 = _adapter_lm("lm-150m-sim", batch=4)
+    out.append(_train(ad150, "ptq", "none", "adamw", 8))
+    for f in ("int4", "int8", "fp4"):
+        out.append(_train(ad150, "qat", f, "adamw", 8))
+        out.append(_train(ad150, "lotion", f, "adamw", 8))
+    for f in ("int4", "int8"):
+        out.append(_train(ad150, "rat", f, "adamw", 8))
+    out.append(programs.build_eval_program(ad150, eval_batches=8))
+    out.append(programs.build_init_program(ad150))
+
+    ad300 = _adapter_lm("lm-300m-sim", batch=4)
+    out.append(_train(ad300, "ptq", "none", "adamw", 8))
+    for f in ("int4", "int8"):
+        out.append(_train(ad300, "qat", f, "adamw", 8))
+        out.append(_train(ad300, "lotion", f, "adamw", 8))
+    out.append(programs.build_eval_program(ad300, eval_batches=8))
+    out.append(programs.build_init_program(ad300))
+    return out
+
+
+def set_e2e() -> list:
+    """True-scale ~100M-param config for the end-to-end example."""
+    ad = _adapter_lm("lm-100m", batch=4)
+    return [
+        _train(ad, "lotion", "int4", "adamw", 4),
+        _train(ad, "qat", "int4", "adamw", 4),
+        programs.build_eval_program(ad, eval_batches=2),
+        programs.build_init_program(ad),
+    ]
+
+
+SETS = {
+    "smoke": set_smoke,
+    "synth": set_synth,
+    "lm": set_lm,
+    "e2e": set_e2e,
+}
+
+
+def build(out_dir: str, set_names: list) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    progs: list = []
+    for s in set_names:
+        progs.extend(SETS[s]())
+    # merge with an existing manifest so sets can be built incrementally
+    entries = {}
+    mpath = os.path.join(out_dir, "manifest.json")
+    if os.path.exists(mpath):
+        import json
+
+        with open(mpath) as f:
+            entries = json.load(f).get("artifacts", {})
+    # prune entries whose artifact files have been removed/renamed
+    entries = {
+        k: v
+        for k, v in entries.items()
+        if os.path.exists(os.path.join(out_dir, v["file"]))
+    }
+    t_all = time.time()
+    for prog in progs:
+        fname = prog.name + ".hlo.txt"
+        fpath = os.path.join(out_dir, fname)
+        t0 = time.time()
+        if os.path.exists(fpath) and prog.name in entries:
+            print(f"  [skip] {prog.name}")
+            continue
+        txt = to_hlo_text(prog)
+        with open(fpath, "w") as f:
+            f.write(txt)
+        entries[prog.name] = manifest.program_entry(prog, fname)
+        print(f"  [{time.time()-t0:5.1f}s] {prog.name}  ({len(txt)//1024} KiB)")
+        sys.stdout.flush()
+    manifest.write_manifest(entries, out_dir)
+    print(f"wrote {len(progs)} programs in {time.time()-t_all:.1f}s -> {mpath}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--set", default="default", help="|".join(list(SETS) + ["default"]))
+    args = ap.parse_args()
+    names = ["smoke", "synth", "lm"] if args.set == "default" else [args.set]
+    build(args.out, names)
+
+
+if __name__ == "__main__":
+    main()

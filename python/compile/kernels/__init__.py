@@ -1,0 +1,13 @@
+"""Layer-1 Pallas kernels + pure-jnp oracles for LOTION quantization."""
+
+from .common import FP4_LEVELS, FP4_QMAX, QuantFormat, make_format  # noqa: F401
+from .pallas_ops import (  # noqa: F401
+    fake_quant,
+    lotion_penalty,
+    penalty_grad,
+    penalty_value,
+    sigma2,
+    ste_fake_quant,
+    ste_stochastic_round,
+    stochastic_round,
+)

@@ -1,0 +1,110 @@
+"""Shared quantization-format definitions and block-partitioning helpers.
+
+The paper (§2.1) uses fine-grained shared-scale symmetric quantization:
+parameters are partitioned into blocks ``B``; each block stores one FP16
+scale ``s_B = absmax(block) / qmax`` and an n-bit code per element.
+
+Two format families are implemented:
+
+* ``int<n>`` — uniform signed-integer lattice; ``qmax = 2^(n-1) - 1``
+  (INT4 → 7, INT8 → 127). The representable scaled values are the
+  integers ``[-qmax, qmax]``.
+* ``fp4`` — the E2M1 codebook used by NVFP4/MXFP4-style formats
+  (§4.3.3): ``±{0, 0.5, 1, 1.5, 2, 3, 4, 6}``; ``qmax = 6``. The
+  scaled lattice is non-uniform, denser near zero.
+
+``block_size == 0`` means per-tensor scaling, which is what the paper's
+experiments use ("we scale the entire tensor", §4).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax.numpy as jnp
+import numpy as np
+
+# E2M1 magnitude codebook (positive half, ascending). Full lattice is the
+# signed union, 15 distinct values (zero appears once).
+FP4_POS = (0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0)
+FP4_LEVELS = tuple(sorted({-v for v in FP4_POS} | set(FP4_POS)))
+FP4_QMAX = 6.0
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantFormat:
+    """A weight quantization format: a scaled lattice + block partitioning."""
+
+    name: str            # "int4" | "int8" | "fp4"
+    bits: int
+    qmax: float          # scaled dynamic range: absmax maps to +-qmax
+    uniform: bool        # True => integer lattice, False => codebook
+    block_size: int = 0  # elements per shared-scale block; 0 = per-tensor
+
+    @property
+    def levels(self) -> np.ndarray:
+        """The sorted scaled lattice (codebook formats only)."""
+        if self.uniform:
+            q = int(self.qmax)
+            return np.arange(-q, q + 1, dtype=np.float32)
+        return np.asarray(FP4_LEVELS, dtype=np.float32)
+
+    def with_block(self, block_size: int) -> "QuantFormat":
+        return dataclasses.replace(self, block_size=block_size)
+
+
+def make_format(name: str, block_size: int = 0) -> QuantFormat:
+    """Parse a format name ("int4", "int8", "fp4") into a QuantFormat."""
+    name = name.lower()
+    if name.startswith("int"):
+        bits = int(name[3:])
+        if not 2 <= bits <= 8:
+            raise ValueError(f"unsupported int bit-width: {name}")
+        return QuantFormat(name, bits, float(2 ** (bits - 1) - 1), True, block_size)
+    if name == "fp4":
+        return QuantFormat(name, 4, FP4_QMAX, False, block_size)
+    raise ValueError(f"unknown quantization format: {name!r}")
+
+
+def num_blocks(n: int, block_size: int) -> int:
+    if block_size <= 0:
+        return 1
+    return -(-n // block_size)
+
+
+def to_blocks(w: jnp.ndarray, block_size: int) -> tuple[jnp.ndarray, int]:
+    """Flatten ``w`` and reshape into ``[num_blocks, block]`` with zero pad.
+
+    Returns the blocked view and the original element count. Zero padding
+    is harmless for absmax scales (zeros never dominate) and padded lanes
+    are masked out of penalties by callers via the returned count.
+    """
+    flat = w.reshape(-1)
+    n = flat.shape[0]
+    bs = block_size if block_size > 0 else n
+    nb = num_blocks(n, bs)
+    pad = nb * bs - n
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+    return flat.reshape(nb, bs), n
+
+
+def from_blocks(blocked: jnp.ndarray, n: int, shape) -> jnp.ndarray:
+    """Inverse of :func:`to_blocks`."""
+    return blocked.reshape(-1)[:n].reshape(shape)
+
+
+def pick_kernel_block(n: int, requested: int = 0, cap: int = 65536) -> int:
+    """Choose the Pallas grid block length for an ``n``-element tensor.
+
+    For per-tensor scaling the *scale* is global but the kernel still
+    streams the tensor through VMEM-sized tiles; this picks the tile.
+    """
+    if requested > 0:
+        return requested
+    if n <= cap:
+        # Round up to the next multiple of the 128-lane vector width so a
+        # single grid step covers the tensor.
+        return max(128, int(128 * math.ceil(n / 128)))
+    return cap

@@ -1,0 +1,321 @@
+"""Layer-1 Pallas kernels for LOTION's quantization hot paths.
+
+Four kernels implement the paper's per-parameter math as single-pass
+tiled programs:
+
+* ``absmax rows``      — per-block absmax reduction feeding the shared
+                         scales ``s_B`` (§2.1).
+* ``fake quant``       — round-to-nearest cast onto the scaled lattice.
+* ``stochastic round`` — unbiased randomized rounding (§3.1, A.2.4).
+* ``lotion penalty``   — fused ``0.5 * sum f_i s^2 var_i`` value kernel
+                         and its analytic gradient kernel (Eq. 3), wired
+                         together with ``jax.custom_vjp``.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the Pallas grid iterates
+over shared-scale blocks; each grid step holds one ``(1, block)`` tile of
+``w`` (plus ``fisher``/noise tiles) in VMEM, so every operand is read
+from HBM exactly once. ``interpret=True`` everywhere — the CPU PJRT
+plugin cannot execute Mosaic custom-calls; interpret mode lowers the
+same schedule to plain HLO, which is what the AOT pipeline ships to the
+rust runtime.
+
+All kernels take a per-row ``scales`` operand so that per-tensor scaling
+(one scale broadcast over many tiles) and fine-grained block scaling
+(one scale per tile row) share one code path.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from .common import QuantFormat, pick_kernel_block
+
+INTERPRET = True  # CPU PJRT cannot run Mosaic custom-calls; see module doc.
+
+
+# ---------------------------------------------------------------------------
+# Tiling helpers
+# ---------------------------------------------------------------------------
+
+
+def _tile_rows(w: jnp.ndarray, fmt: QuantFormat) -> tuple[jnp.ndarray, int, int]:
+    """Reshape ``w`` into ``[rows, tile]`` for the kernel grid.
+
+    For block formats the rows *are* the shared-scale blocks. For
+    per-tensor formats the rows are VMEM-sized tiles that all share one
+    scale. Returns (tiled, n_orig, tile).
+    """
+    flat = w.reshape(-1)
+    n = flat.shape[0]
+    tile = pick_kernel_block(n, fmt.block_size)
+    rows = -(-n // tile)
+    pad = rows * tile - n
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+    return flat.reshape(rows, tile), n, tile
+
+
+def _untile(tiled: jnp.ndarray, n: int, shape) -> jnp.ndarray:
+    return tiled.reshape(-1)[:n].reshape(shape)
+
+
+# ---------------------------------------------------------------------------
+# absmax / scales
+# ---------------------------------------------------------------------------
+
+
+def _absmax_rows_kernel(w_ref, o_ref):
+    o_ref[0, 0] = jnp.max(jnp.abs(w_ref[...]))
+
+
+def absmax_rows(tiled: jnp.ndarray) -> jnp.ndarray:
+    """Per-row absolute maximum, shape ``[rows, 1]``."""
+    rows, tile = tiled.shape
+    return pl.pallas_call(
+        _absmax_rows_kernel,
+        grid=(rows,),
+        in_specs=[pl.BlockSpec((1, tile), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, 1), tiled.dtype),
+        interpret=INTERPRET,
+    )(tiled)
+
+
+def row_scales(tiled: jnp.ndarray, fmt: QuantFormat) -> jnp.ndarray:
+    """Shared scales per kernel row (``[rows, 1]``).
+
+    Per-tensor formats finish the hierarchical reduction across tiles
+    with a tiny ``[rows]``-length max — the realistic two-phase schedule
+    for tensors larger than VMEM.
+    """
+    amax = absmax_rows(tiled)
+    if fmt.block_size <= 0:
+        amax = jnp.broadcast_to(jnp.max(amax), amax.shape)
+    s = amax / fmt.qmax
+    return jnp.where(amax > 0, s, jnp.ones_like(s))
+
+
+# ---------------------------------------------------------------------------
+# lattice math (shared between kernels; operates on VMEM-resident tiles)
+# ---------------------------------------------------------------------------
+
+
+def _bracket(z: jnp.ndarray, levels: np.ndarray):
+    """Gather-free enclosing levels: l = max level <= z, u = min level >= z.
+
+    Unrolled over the (small, compile-time) codebook with scalar
+    constants only — Pallas kernels may not capture array constants, and
+    a 15-way unrolled vector select is exactly what a real TPU kernel
+    would emit for an E2M1 codebook.
+    """
+    u = jnp.full_like(z, np.inf)
+    l_ = jnp.full_like(z, -np.inf)
+    for lev in [float(v) for v in levels]:
+        u = jnp.where((lev >= z) & (lev < u), lev, u)
+        l_ = jnp.where((lev <= z) & (lev > l_), lev, l_)
+    return l_, u
+
+
+def _rtn(z: jnp.ndarray, fmt: QuantFormat) -> jnp.ndarray:
+    if fmt.uniform:
+        return jnp.clip(jnp.round(z), -fmt.qmax, fmt.qmax)
+    l_, u = _bracket(z, fmt.levels)
+    mid = (l_ + u) * 0.5
+    return jnp.where(z > mid, u, l_)
+
+
+def _var(z: jnp.ndarray, fmt: QuantFormat) -> jnp.ndarray:
+    if fmt.uniform:
+        delta = z - jnp.floor(z)
+        return delta * (1.0 - delta)
+    l_, u = _bracket(z, fmt.levels)
+    return (u - z) * (z - l_)
+
+
+def _dvar_dz(z: jnp.ndarray, fmt: QuantFormat) -> jnp.ndarray:
+    if fmt.uniform:
+        delta = z - jnp.floor(z)
+        return 1.0 - 2.0 * delta
+    l_, u = _bracket(z, fmt.levels)
+    return u + l_ - 2.0 * z
+
+
+# ---------------------------------------------------------------------------
+# element-wise kernels
+# ---------------------------------------------------------------------------
+
+
+def _fake_quant_kernel(fmt: QuantFormat, w_ref, s_ref, o_ref):
+    s = s_ref[0, 0]
+    z = w_ref[...] / s
+    o_ref[...] = _rtn(z, fmt) * s
+
+
+def _stoch_round_kernel(fmt: QuantFormat, w_ref, u_ref, s_ref, o_ref):
+    s = s_ref[0, 0]
+    z = w_ref[...] / s
+    if fmt.uniform:
+        l_ = jnp.floor(z)
+        u = l_ + 1.0
+        p_up = z - l_
+    else:
+        l_, u = _bracket(z, fmt.levels)
+        gap = u - l_
+        p_up = jnp.where(gap > 0, (z - l_) / jnp.where(gap > 0, gap, 1.0), 0.0)
+    q = jnp.where(u_ref[...] < p_up, u, l_)
+    if fmt.uniform:
+        q = jnp.clip(q, -fmt.qmax, fmt.qmax)
+    o_ref[...] = q * s
+
+
+def _sigma2_kernel(fmt: QuantFormat, w_ref, s_ref, o_ref):
+    s = s_ref[0, 0]
+    z = w_ref[...] / s
+    o_ref[...] = (s * s) * _var(z, fmt)
+
+
+def _penalty_value_kernel(fmt: QuantFormat, w_ref, f_ref, s_ref, acc_ref):
+    # Sequential-grid accumulation: one scalar accumulator revisited by
+    # every grid step (zero-padded lanes have z on-lattice => var == 0).
+    s = s_ref[0, 0]
+    z = w_ref[...] / s
+    part = 0.5 * jnp.sum(f_ref[...] * (s * s) * _var(z, fmt))
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        acc_ref[0, 0] = jnp.zeros((), acc_ref.dtype)
+
+    acc_ref[0, 0] += part
+
+
+def _penalty_grad_kernel(fmt: QuantFormat, w_ref, f_ref, s_ref, o_ref):
+    s = s_ref[0, 0]
+    z = w_ref[...] / s
+    o_ref[...] = 0.5 * f_ref[...] * s * _dvar_dz(z, fmt)
+
+
+def _elementwise_call(kernel: Callable, fmt: QuantFormat, w: jnp.ndarray, *extra):
+    """Run an elementwise tile kernel over (w, *extra, scales)."""
+    tiled, n, tile = _tile_rows(w, fmt)
+    rows = tiled.shape[0]
+    extra_tiled = [_tile_rows(e, fmt)[0] for e in extra]
+    scales = row_scales(tiled, fmt)
+    specs = [pl.BlockSpec((1, tile), lambda i: (i, 0))] * (1 + len(extra)) + [
+        pl.BlockSpec((1, 1), lambda i: (i, 0))
+    ]
+    out = pl.pallas_call(
+        functools.partial(kernel, fmt),
+        grid=(rows,),
+        in_specs=specs,
+        out_specs=pl.BlockSpec((1, tile), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, tile), w.dtype),
+        interpret=INTERPRET,
+    )(tiled, *extra_tiled, scales)
+    return _untile(out, n, w.shape)
+
+
+# ---------------------------------------------------------------------------
+# public kernel API
+# ---------------------------------------------------------------------------
+
+
+def fake_quant(w: jnp.ndarray, fmt: QuantFormat) -> jnp.ndarray:
+    """Round-to-nearest cast onto the scaled lattice (Pallas)."""
+    return _elementwise_call(_fake_quant_kernel, fmt, w)
+
+
+def stochastic_round(w: jnp.ndarray, fmt: QuantFormat, u01: jnp.ndarray) -> jnp.ndarray:
+    """Unbiased randomized-rounding cast (Pallas). ``u01 ~ U(0,1)``."""
+    return _elementwise_call(_stoch_round_kernel, fmt, w, u01)
+
+
+def sigma2(w: jnp.ndarray, fmt: QuantFormat) -> jnp.ndarray:
+    """Per-coordinate RR variance ``s_B^2 * var(z)`` (Pallas)."""
+    return _elementwise_call(_sigma2_kernel, fmt, w)
+
+
+def penalty_value(w: jnp.ndarray, fisher: jnp.ndarray, fmt: QuantFormat) -> jnp.ndarray:
+    """Fused LOTION penalty ``0.5 * sum_i fisher_i * sigma_i^2`` (Eq. 3)."""
+    tiled, _, tile = _tile_rows(w, fmt)
+    ftiled, _, _ = _tile_rows(fisher, fmt)
+    rows = tiled.shape[0]
+    scales = row_scales(tiled, fmt)
+    acc = pl.pallas_call(
+        functools.partial(_penalty_value_kernel, fmt),
+        grid=(rows,),
+        in_specs=[
+            pl.BlockSpec((1, tile), lambda i: (i, 0)),
+            pl.BlockSpec((1, tile), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, 1), w.dtype),
+        interpret=INTERPRET,
+    )(tiled, ftiled, scales)
+    return acc[0, 0]
+
+
+def penalty_grad(w: jnp.ndarray, fisher: jnp.ndarray, fmt: QuantFormat) -> jnp.ndarray:
+    """Analytic penalty gradient (stop-grad through scales and fisher)."""
+    return _elementwise_call(_penalty_grad_kernel, fmt, w, fisher)
+
+
+# -- custom-vjp wrappers -----------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def lotion_penalty(w: jnp.ndarray, fisher: jnp.ndarray, fmt: QuantFormat):
+    """Differentiable LOTION penalty: Pallas value fwd, Pallas grad bwd."""
+    return penalty_value(w, fisher, fmt)
+
+
+def _pen_fwd(w, fisher, fmt):
+    return penalty_value(w, fisher, fmt), (w, fisher)
+
+
+def _pen_bwd(fmt, res, g):
+    w, fisher = res
+    return (g * penalty_grad(w, fisher, fmt), jnp.zeros_like(fisher))
+
+
+lotion_penalty.defvjp(_pen_fwd, _pen_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def ste_fake_quant(w: jnp.ndarray, fmt: QuantFormat):
+    """QAT forward cast with straight-through (identity) backward."""
+    return fake_quant(w, fmt)
+
+
+def _fq_fwd(w, fmt):
+    return fake_quant(w, fmt), None
+
+
+def _fq_bwd(fmt, _res, g):
+    return (g,)
+
+
+ste_fake_quant.defvjp(_fq_fwd, _fq_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def ste_stochastic_round(w: jnp.ndarray, u01: jnp.ndarray, fmt: QuantFormat):
+    """RAT forward cast (randomized rounding) with straight-through backward."""
+    return stochastic_round(w, fmt, u01)
+
+
+def _sr_fwd(w, u01, fmt):
+    return stochastic_round(w, fmt, u01), u01
+
+
+def _sr_bwd(fmt, u01, g):
+    return (g, jnp.zeros_like(u01))
+
+
+ste_stochastic_round.defvjp(_sr_fwd, _sr_bwd)

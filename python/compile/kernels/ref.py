@@ -1,0 +1,138 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the correctness ground truth: straightforward, unoptimized
+implementations of the paper's quantization math (§2.1, §3.1, §3.3,
+A.2.4). The pytest suite asserts the Pallas kernels match these
+element-for-element across hypothesis-generated shapes/dtypes/blocks.
+
+All functions operate on arbitrary-shape arrays and handle the
+``block_size == 0`` (per-tensor scale) case.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import common
+from .common import QuantFormat, from_blocks, to_blocks
+
+
+def block_scales_ref(w: jnp.ndarray, fmt: QuantFormat) -> jnp.ndarray:
+    """Per-block shared scales ``s_B = absmax(B) / qmax`` (§2.1).
+
+    Returns shape ``[num_blocks]``. Blocks whose absmax is zero get scale 1
+    so downstream divisions are safe (every element of such a block is 0,
+    and 0 is exactly representable in all supported formats).
+    """
+    blocked, _ = to_blocks(w, fmt.block_size)
+    amax = jnp.max(jnp.abs(blocked), axis=1)
+    s = amax / fmt.qmax
+    return jnp.where(amax > 0, s, 1.0).astype(w.dtype)
+
+
+def _enclosing_levels(z: jnp.ndarray, levels: np.ndarray):
+    """Lower/upper enclosing codebook levels for scaled values ``z``.
+
+    ``z`` is guaranteed in ``[-qmax, qmax]`` by absmax scaling, so the
+    clamped searchsorted result always yields a valid bracket. Exact
+    lattice points return ``l == u == z``.
+    """
+    lv = jnp.asarray(levels)
+    # index of first level >= z
+    hi = jnp.searchsorted(lv, z, side="left")
+    hi = jnp.clip(hi, 0, len(levels) - 1)
+    lo = jnp.clip(hi - 1, 0, len(levels) - 1)
+    u = lv[hi]
+    l_ = lv[lo]
+    on_lattice = u == z
+    l_ = jnp.where(on_lattice, u, l_)
+    return l_, u
+
+
+def fake_quant_ref(w: jnp.ndarray, fmt: QuantFormat) -> jnp.ndarray:
+    """Round-to-nearest cast: ``cast(w) = s_B * round_to_lattice(w / s_B)``."""
+    blocked, n = to_blocks(w, fmt.block_size)
+    s = block_scales_ref(w, fmt)[:, None]
+    z = blocked / s
+    if fmt.uniform:
+        q = jnp.clip(jnp.round(z), -fmt.qmax, fmt.qmax)
+    else:
+        l_, u = _enclosing_levels(z, fmt.levels)
+        mid = (l_ + u) * 0.5
+        q = jnp.where(z > mid, u, l_)
+    return from_blocks(q * s, n, w.shape).astype(w.dtype)
+
+
+def stochastic_round_ref(
+    w: jnp.ndarray, fmt: QuantFormat, u01: jnp.ndarray
+) -> jnp.ndarray:
+    """Unbiased randomized rounding (Def. 1, A.2.4).
+
+    ``u01`` is uniform(0,1) noise of the same shape as ``w``. Scaled value
+    ``z`` in bracket ``[l, u]`` rounds up with probability ``(z-l)/(u-l)``
+    which makes ``E[RR(w)] = w`` exactly.
+    """
+    blocked, n = to_blocks(w, fmt.block_size)
+    ublk, _ = to_blocks(u01, fmt.block_size)
+    s = block_scales_ref(w, fmt)[:, None]
+    z = blocked / s
+    if fmt.uniform:
+        l_ = jnp.floor(z)
+        up = l_ + 1.0
+        p_up = z - l_
+    else:
+        l_, up = _enclosing_levels(z, fmt.levels)
+        gap = up - l_
+        p_up = jnp.where(gap > 0, (z - l_) / jnp.where(gap > 0, gap, 1.0), 0.0)
+    q = jnp.where(ublk < p_up, up, l_)
+    if fmt.uniform:
+        q = jnp.clip(q, -fmt.qmax, fmt.qmax)
+    return from_blocks(q * s, n, w.shape).astype(w.dtype)
+
+
+def sigma2_ref(w: jnp.ndarray, fmt: QuantFormat) -> jnp.ndarray:
+    """Per-coordinate randomized-rounding variance ``sigma_i^2`` (§3.2/§3.3).
+
+    Uniform lattice:   sigma^2 = s_B^2 * Delta * (1 - Delta)
+    Codebook lattice:  sigma^2 = s_B^2 * (u - z) * (z - l)   (generalizes it)
+    """
+    blocked, n = to_blocks(w, fmt.block_size)
+    s = block_scales_ref(w, fmt)[:, None]
+    z = blocked / s
+    if fmt.uniform:
+        delta = z - jnp.floor(z)
+        var = delta * (1.0 - delta)
+    else:
+        l_, up = _enclosing_levels(z, fmt.levels)
+        var = (up - z) * (z - l_)
+    return from_blocks(s * s * var, n, w.shape).astype(w.dtype)
+
+
+def lotion_penalty_ref(
+    w: jnp.ndarray, fisher: jnp.ndarray, fmt: QuantFormat
+) -> jnp.ndarray:
+    """LOTION regularizer (Eq. 3): ``0.5 * sum_i fisher_i * sigma_i^2``."""
+    return 0.5 * jnp.sum(fisher * sigma2_ref(w, fmt))
+
+
+def lotion_penalty_grad_ref(
+    w: jnp.ndarray, fisher: jnp.ndarray, fmt: QuantFormat
+) -> jnp.ndarray:
+    """d(penalty)/dw with stop-grad through ``s_B`` and ``fisher``.
+
+    Uniform:  d/dw [0.5 f s^2 D(1-D)] = 0.5 f s (1 - 2 D)
+    Codebook: d/dw [0.5 f s^2 (u-z)(z-l)] = 0.5 f s (u + l - 2 z)
+    """
+    blocked, n = to_blocks(w, fmt.block_size)
+    fblk, _ = to_blocks(fisher, fmt.block_size)
+    s = block_scales_ref(w, fmt)[:, None]
+    z = blocked / s
+    if fmt.uniform:
+        delta = z - jnp.floor(z)
+        d = 1.0 - 2.0 * delta
+    else:
+        l_, up = _enclosing_levels(z, fmt.levels)
+        d = up + l_ - 2.0 * z
+    g = 0.5 * fblk * s * d
+    return from_blocks(g, n, w.shape).astype(w.dtype)

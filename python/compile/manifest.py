@@ -1,0 +1,40 @@
+"""Artifact manifest: the L2→L3 contract, serialized as JSON.
+
+The rust runtime is entirely manifest-driven: it never guesses shapes,
+dtypes, argument order, or tuple layout. Every artifact entry records
+the flat input/output TensorSpecs in exactly the positional order the
+compiled executable expects, plus method/format/model metadata the
+coordinator uses to route experiments.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+from .programs import Program
+
+
+def program_entry(prog: Program, filename: str) -> dict:
+    return {
+        "file": filename,
+        "inputs": [s.to_json() for s in prog.inputs],
+        "outputs": [s.to_json() for s in prog.outputs],
+        "meta": prog.meta,
+    }
+
+
+def write_manifest(entries: dict, out_dir: str, extra: dict | None = None) -> str:
+    doc = {
+        "version": 1,
+        "generator": "lotion python/compile/aot.py",
+        "artifacts": entries,
+    }
+    if extra:
+        doc.update(extra)
+    path = os.path.join(out_dir, "manifest.json")
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+    os.replace(tmp, path)
+    return path

@@ -1,0 +1,99 @@
+"""Training-method transformations: PTQ, QAT, RAT, LOTION (§4).
+
+Each method is a transformation of a base loss ``L(params, batch)``:
+
+* ``ptq``    — train in FP32, quantize post hoc (baseline; the cast
+               happens in the rust evaluator, not here).
+* ``qat``    — forward pass through round-to-nearest fake-quantized
+               weights, straight-through backward (standard QAT).
+* ``rat``    — Rounding-Aware Training: forward through *randomly
+               rounded* weights, straight-through backward (§3.2).
+* ``lotion`` — the paper's contribution: FP32 forward plus the
+               curvature-aware penalty  lam * 0.5 sum_i f_i sigma_i^2
+               (Eq. 3), with sigma^2 from the L1 Pallas kernel and the
+               Fisher diagonal from the optimizer (or exact GN for the
+               synthetic models).
+
+All four share one signature so ``programs.py`` can build identical
+scanned train programs for every (method, format) pair.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import (
+    QuantFormat,
+    lotion_penalty,
+    ste_fake_quant,
+    ste_stochastic_round,
+)
+
+METHODS = ("ptq", "qat", "rat", "lotion")
+
+
+def cast_params_qat(params: dict, qkeys: set, fmt: QuantFormat) -> dict:
+    """RTN fake-quantize the quantized subset (STE backward)."""
+    return {
+        k: ste_fake_quant(v, fmt) if k in qkeys else v for k, v in params.items()
+    }
+
+
+def cast_params_rat(params: dict, qkeys: set, fmt: QuantFormat, key) -> dict:
+    """Randomized-rounding cast of the quantized subset (STE backward)."""
+    out = {}
+    for k in sorted(params):
+        v = params[k]
+        if k in qkeys:
+            key, sub = jax.random.split(key)
+            u = jax.random.uniform(sub, v.shape, jnp.float32)
+            out[k] = ste_stochastic_round(v, u, fmt)
+        else:
+            out[k] = v
+    return out
+
+
+def lotion_term(
+    params: dict, qkeys: set, fmt: QuantFormat, fisher: dict
+) -> jnp.ndarray:
+    """Total Eq. 3 penalty over the quantized subset (Fisher is stop-grad:
+    'we do not differentiate through the empirical Fisher', §4.3)."""
+    total = jnp.zeros((), jnp.float32)
+    for k in sorted(qkeys):
+        f = jax.lax.stop_gradient(fisher[k])
+        total = total + lotion_penalty(params[k], f, fmt)
+    return total
+
+
+def make_method_loss(
+    method: str,
+    base_loss: Callable[[dict], jnp.ndarray],
+    qkeys: set,
+    fmt: QuantFormat | None,
+) -> Callable:
+    """Build ``loss(params, key, lam_reg, fisher) -> (total, base)``.
+
+    ``key`` is consumed by RAT only; ``lam_reg``/``fisher`` by LOTION
+    only — unused inputs are simply ignored so the scanned program shape
+    is method-independent.
+    """
+    if method not in METHODS:
+        raise ValueError(f"unknown method {method!r}")
+
+    def loss_fn(params, key, lam_reg, fisher):
+        if method == "qat":
+            base = base_loss(cast_params_qat(params, qkeys, fmt))
+            return base, base
+        if method == "rat":
+            base = base_loss(cast_params_rat(params, qkeys, fmt, key))
+            return base, base
+        base = base_loss(params)
+        if method == "lotion":
+            pen = lotion_term(params, qkeys, fmt, fisher)
+            return base + lam_reg * pen, base
+        return base, base  # ptq
+
+    return loss_fn

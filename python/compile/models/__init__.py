@@ -1,0 +1,16 @@
+"""Layer-2 models: the paper's three testbeds.
+
+* :mod:`linreg`      — §4.1 linear regression, d=12000, power-law spectrum.
+* :mod:`linear2`     — §4.2 two-layer linear network f(x) = (1/k) W2 W1 x.
+* :mod:`transformer` — §4.3 decoder-only LM (OLMo-flavoured).
+
+Every model exposes the same interface consumed by ``programs.py``:
+
+``init(key) -> params``            flat {name: array} dict
+``loss(params, batch) -> scalar``  training objective
+``val_loss(params, batch)``        validation objective
+``quantized_keys() -> set[str]``   tensors the quantizer touches
+``fisher_exact(params, statics)``  closed-form GN diagonal (or None)
+"""
+
+from . import linear2, linreg, transformer  # noqa: F401

@@ -1,0 +1,85 @@
+"""§4.2 two-layer linear network  f(x) = (1/k) W2 W1 x.
+
+The paper trains this with *full gradient descent using the exact
+population Hessian*; with a diagonal covariance the population loss has
+the closed form
+
+    L(W1, W2) = 1/2 (v - w*)^T diag(lam) (v - w*),   v = (1/k) W1^T W2^T
+
+so both training and validation are exact (no sampling). The exact
+Gauss-Newton diagonal used by LOTION:
+
+    G[W1[j,i]] = (W2[0,j]/k)^2 * lam_i
+    G[W2[0,j]] = (1/k^2) * sum_i lam_i W1[j,i]^2
+
+The GT baseline of Fig. 3 (W2 = 1, rows of W1 = w*) is constructed by
+the rust experiment driver via ``init_gt``-shaped parameters.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Linear2Config:
+    d: int = 12000
+    k: int = 4
+    alpha: float = 1.1
+
+    @property
+    def name(self) -> str:
+        return f"linear2_d{self.d}_k{self.k}"
+
+
+def spectrum(cfg: Linear2Config) -> jnp.ndarray:
+    return 1.0 / jnp.arange(1, cfg.d + 1, dtype=jnp.float32) ** cfg.alpha
+
+
+def init(key, cfg: Linear2Config) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "w1": jax.random.normal(k1, (cfg.k, cfg.d), jnp.float32) / jnp.sqrt(cfg.d),
+        "w2": jax.random.normal(k2, (1, cfg.k), jnp.float32),
+    }
+
+
+def init_gt(cfg: Linear2Config, wstar: jnp.ndarray) -> dict:
+    """Ground-truth construction behind Lemma 4: W2 = 1, rows(W1) = w*."""
+    return {
+        "w1": jnp.broadcast_to(wstar[None, :], (cfg.k, cfg.d)).astype(jnp.float32),
+        "w2": jnp.ones((1, cfg.k), jnp.float32),
+    }
+
+
+def statics(key, cfg: Linear2Config) -> dict:
+    wstar = jax.random.normal(key, (cfg.d,), jnp.float32)
+    return {"wstar": wstar, "lam": spectrum(cfg)}
+
+
+def effective_w(params: dict, k: int) -> jnp.ndarray:
+    return (params["w2"] @ params["w1"])[0] / k
+
+
+def loss(params: dict, st: dict, k: int) -> jnp.ndarray:
+    """Exact population loss (this model trains full-batch)."""
+    dv = effective_w(params, k) - st["wstar"]
+    return 0.5 * jnp.sum(st["lam"] * dv * dv)
+
+
+val_loss = loss
+
+
+def quantized_keys() -> set:
+    return {"w1", "w2"}
+
+
+def fisher_exact(params: dict, st: dict, k: int) -> dict:
+    lam = st["lam"]
+    w2 = params["w2"][0]  # [k]
+    g_w1 = (w2[:, None] / k) ** 2 * lam[None, :]
+    g_w2 = (jnp.sum(lam[None, :] * params["w1"] ** 2, axis=1) / (k * k))[None, :]
+    return {"w1": g_w1, "w2": g_w2}

@@ -1,0 +1,76 @@
+"""§4.1 linear regression testbed.
+
+Inputs ``x ~ N(0, Sigma)`` with a power-law spectrum ``lambda_i
+propto 1/i^1.1`` (diagonal by construction — the spectrum *is* the
+covariance in the eigenbasis, which is the basis we work in). Targets
+``y = w*^T x``. The population loss has the closed form
+
+    L(w) = 1/2 (w - w*)^T diag(lam) (w - w*)
+
+so validation is exact, while training draws minibatches in-graph from
+the PJRT-supplied key (SGD, as in the paper). The Gauss-Newton diagonal
+is exactly ``lam``, which LOTION uses directly (no Fisher EMA needed).
+
+``statics`` (non-trained inputs owned by the rust coordinator):
+``wstar [d]`` and ``lam [d]``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class LinRegConfig:
+    d: int = 12000
+    batch: int = 256
+    alpha: float = 1.1  # spectrum exponent: lam_i ~ 1/i^alpha
+
+    @property
+    def name(self) -> str:
+        return f"linreg_d{self.d}"
+
+
+def spectrum(cfg: LinRegConfig) -> jnp.ndarray:
+    lam = 1.0 / jnp.arange(1, cfg.d + 1, dtype=jnp.float32) ** cfg.alpha
+    return lam
+
+
+def init(key, cfg: LinRegConfig) -> dict:
+    return {"w": jnp.zeros((cfg.d,), jnp.float32)}
+
+
+def statics(key, cfg: LinRegConfig) -> dict:
+    wstar = jax.random.normal(key, (cfg.d,), jnp.float32)
+    return {"wstar": wstar, "lam": spectrum(cfg)}
+
+
+def sample_batch(key, cfg: LinRegConfig, st: dict):
+    """Draw x ~ N(0, diag(lam)) and y = w*.x in-graph."""
+    x = jax.random.normal(key, (cfg.batch, cfg.d), jnp.float32) * jnp.sqrt(st["lam"])
+    y = x @ st["wstar"]
+    return x, y
+
+
+def loss(params: dict, batch) -> jnp.ndarray:
+    x, y = batch
+    r = x @ params["w"] - y
+    return 0.5 * jnp.mean(r * r)
+
+
+def val_loss(params: dict, st: dict) -> jnp.ndarray:
+    """Exact population loss 1/2 (w-w*)^T diag(lam) (w-w*)."""
+    dw = params["w"] - st["wstar"]
+    return 0.5 * jnp.sum(st["lam"] * dw * dw)
+
+
+def quantized_keys() -> set:
+    return {"w"}
+
+
+def fisher_exact(params: dict, st: dict) -> dict:
+    """Exact GN diagonal: H = diag(lam)."""
+    return {"w": st["lam"]}

@@ -1,0 +1,149 @@
+"""§4.3 decoder-only transformer LM (OLMo-flavoured).
+
+Pre-norm decoder with RMSNorm, rotary position embeddings, SwiGLU MLP,
+untied embedding / lm_head, byte-level vocab by default. Written so
+every weight tensor is a flat dict entry (canonical AOT layout) and the
+quantizer's target set is an explicit list of 2-D matmul weights.
+
+Size presets mirror the paper's 150M/300M pair plus CPU-scaled
+"simulation" variants (DESIGN.md §6 records the substitution).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    vocab: int = 256
+    d_model: int = 128
+    n_layers: int = 4
+    n_heads: int = 4
+    seq_len: int = 128
+    ffn_mult: float = 8.0 / 3.0  # SwiGLU hidden = mult * d_model, rounded
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    @property
+    def ffn_dim(self) -> int:
+        return int(-(-self.ffn_mult * self.d_model // 64) * 64)
+
+    def param_count(self) -> int:
+        d, f, L, v = self.d_model, self.ffn_dim, self.n_layers, self.vocab
+        per_layer = 4 * d * d + 3 * d * f + 2 * d
+        return v * d + L * per_layer + d + d * v
+
+
+PRESETS = {
+    # CPU-scaled stand-ins (DESIGN.md §6): same shape family as the paper's
+    # models, sized for a 1-core PJRT CPU testbed (measured ~40 GFLOP/s:
+    # these hit ~0.15-0.4 s/step so the full method matrix stays tractable).
+    "lm-tiny": LMConfig("lm-tiny", d_model=64, n_layers=2, n_heads=2, seq_len=64),
+    "lm-150m-sim": LMConfig("lm-150m-sim", d_model=192, n_layers=4, n_heads=4, seq_len=128),
+    "lm-300m-sim": LMConfig("lm-300m-sim", d_model=256, n_layers=6, n_heads=8, seq_len=128),
+    # True-scale config (e2e example / smoke run): ~100M params.
+    "lm-100m": LMConfig("lm-100m", d_model=768, n_layers=14, n_heads=12, seq_len=256),
+}
+
+
+def init(key, cfg: LMConfig) -> dict:
+    """OLMo-style init: normal(0, 0.02), scaled residual out-projections."""
+    p = {}
+    keys = iter(jax.random.split(key, 4 + 7 * cfg.n_layers))
+    sd = 0.02
+    d, f = cfg.d_model, cfg.ffn_dim
+    p["embed"] = jax.random.normal(next(keys), (cfg.vocab, d), jnp.float32) * sd
+    res_sd = sd / jnp.sqrt(2.0 * cfg.n_layers)
+    for i in range(cfg.n_layers):
+        pre = f"layer{i:02d}."
+        p[pre + "attn_wq"] = jax.random.normal(next(keys), (d, d), jnp.float32) * sd
+        p[pre + "attn_wk"] = jax.random.normal(next(keys), (d, d), jnp.float32) * sd
+        p[pre + "attn_wv"] = jax.random.normal(next(keys), (d, d), jnp.float32) * sd
+        p[pre + "attn_wo"] = jax.random.normal(next(keys), (d, d), jnp.float32) * res_sd
+        p[pre + "mlp_wgate"] = jax.random.normal(next(keys), (d, f), jnp.float32) * sd
+        p[pre + "mlp_wup"] = jax.random.normal(next(keys), (d, f), jnp.float32) * sd
+        p[pre + "mlp_wdown"] = jax.random.normal(next(keys), (f, d), jnp.float32) * res_sd
+        p[pre + "norm_attn"] = jnp.ones((d,), jnp.float32)
+        p[pre + "norm_mlp"] = jnp.ones((d,), jnp.float32)
+    p["norm_final"] = jnp.ones((d,), jnp.float32)
+    p["lm_head"] = jax.random.normal(next(keys), (d, cfg.vocab), jnp.float32) * sd
+    return p
+
+
+def quantized_keys(cfg: LMConfig) -> set:
+    """The 2-D matmul weights the quantizer touches (embeddings and norms
+    stay high precision, lm_head is quantized — weight-only scheme)."""
+    ks = {"lm_head"}
+    for i in range(cfg.n_layers):
+        pre = f"layer{i:02d}."
+        ks |= {
+            pre + n
+            for n in (
+                "attn_wq", "attn_wk", "attn_wv", "attn_wo",
+                "mlp_wgate", "mlp_wup", "mlp_wdown",
+            )
+        }
+    return ks
+
+
+def _rmsnorm(x, g):
+    return x * g * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + 1e-6)
+
+
+def _rope(x, cfg: LMConfig):
+    """Rotary embeddings over the head dim. x: [B, T, H, Dh]."""
+    t = x.shape[1]
+    dh = cfg.head_dim
+    half = dh // 2
+    freqs = 1.0 / (10000.0 ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = jnp.arange(t, dtype=jnp.float32)[:, None] * freqs[None, :]  # [T, half]
+    cos = jnp.cos(ang)[None, :, None, :]
+    sin = jnp.sin(ang)[None, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def forward(params: dict, tokens: jnp.ndarray, cfg: LMConfig) -> jnp.ndarray:
+    """Logits [B, T, V] for int32 tokens [B, T]."""
+    b, t = tokens.shape
+    h = params["embed"][tokens]  # [B, T, D]
+    nh, dh = cfg.n_heads, cfg.head_dim
+    mask = jnp.tril(jnp.ones((t, t), jnp.bool_))
+    neg = jnp.asarray(-1e9, jnp.float32)
+    for i in range(cfg.n_layers):
+        pre = f"layer{i:02d}."
+        x = _rmsnorm(h, params[pre + "norm_attn"])
+        q = (x @ params[pre + "attn_wq"]).reshape(b, t, nh, dh)
+        k = (x @ params[pre + "attn_wk"]).reshape(b, t, nh, dh)
+        v = (x @ params[pre + "attn_wv"]).reshape(b, t, nh, dh)
+        q, k = _rope(q, cfg), _rope(k, cfg)
+        att = jnp.einsum("bthd,bshd->bhts", q, k) / jnp.sqrt(float(dh))
+        att = jnp.where(mask[None, None, :, :], att, neg)
+        att = jax.nn.softmax(att, axis=-1)
+        o = jnp.einsum("bhts,bshd->bthd", att, v).reshape(b, t, cfg.d_model)
+        h = h + o @ params[pre + "attn_wo"]
+        x = _rmsnorm(h, params[pre + "norm_mlp"])
+        g = jax.nn.silu(x @ params[pre + "mlp_wgate"])
+        u = x @ params[pre + "mlp_wup"]
+        h = h + (g * u) @ params[pre + "mlp_wdown"]
+    h = _rmsnorm(h, params["norm_final"])
+    return h @ params["lm_head"]
+
+
+def loss(params: dict, batch: jnp.ndarray, cfg: LMConfig) -> jnp.ndarray:
+    """Mean next-token cross-entropy. batch: int32 [B, T+1]."""
+    tokens, targets = batch[:, :-1], batch[:, 1:]
+    logits = forward(params, tokens, cfg)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+val_loss = loss

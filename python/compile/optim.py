@@ -1,0 +1,103 @@
+"""Layer-2 optimizers: SGD (+momentum), Adam, AdamW, built on param dicts.
+
+Parameters and optimizer state are flat ``{name: array}`` dicts — the
+same canonical layout the AOT manifest exposes to the rust coordinator.
+Learning rates arrive *per step* from the coordinator (rust owns the
+cosine schedule), so programs stay schedule-agnostic.
+
+The Adam second moment doubles as the empirical-Fisher diagonal that
+LOTION's Eq. 3 penalty consumes ("we use the empirical Fisher
+approximation as we would with Adam", §4.3).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax.numpy as jnp
+
+Params = dict
+OptState = dict
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    """An optimizer = init + update, plus a fisher view for LOTION."""
+
+    name: str
+    init: Callable[[Params], OptState]
+    update: Callable[[Params, OptState, Params, jnp.ndarray], tuple[Params, OptState]]
+    # fisher(opt_state, name, param) -> empirical-Fisher diagonal estimate
+    # for that tensor, or None if this optimizer does not track one.
+    fisher: Callable[[OptState, str, jnp.ndarray], jnp.ndarray | None]
+
+
+def _sgd(momentum: float = 0.0) -> Optimizer:
+    def init(params):
+        if momentum == 0.0:
+            return {"t": jnp.zeros((), jnp.float32)}
+        st = {f"mu.{k}": jnp.zeros_like(v) for k, v in params.items()}
+        st["t"] = jnp.zeros((), jnp.float32)
+        return st
+
+    def update(params, state, grads, lr):
+        new_state = dict(state)
+        new_state["t"] = state["t"] + 1.0
+        new_params = {}
+        for k, p in params.items():
+            g = grads[k]
+            if momentum != 0.0:
+                mu = momentum * state[f"mu.{k}"] + g
+                new_state[f"mu.{k}"] = mu
+                g = mu
+            new_params[k] = p - lr * g
+        return new_params, new_state
+
+    return Optimizer("sgd", init, update, lambda st, k, p: None)
+
+
+def _adam(b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8, wd: float = 0.0) -> Optimizer:
+    """Adam / AdamW (decoupled weight decay when ``wd > 0``)."""
+
+    def init(params):
+        st = {"t": jnp.zeros((), jnp.float32)}
+        for k, v in params.items():
+            st[f"m.{k}"] = jnp.zeros_like(v)
+            st[f"v.{k}"] = jnp.zeros_like(v)
+        return st
+
+    def update(params, state, grads, lr):
+        t = state["t"] + 1.0
+        new_state = {"t": t}
+        new_params = {}
+        bc1 = 1.0 - b1**t
+        bc2 = 1.0 - b2**t
+        for k, p in params.items():
+            g = grads[k]
+            m = b1 * state[f"m.{k}"] + (1 - b1) * g
+            v = b2 * state[f"v.{k}"] + (1 - b2) * g * g
+            new_state[f"m.{k}"] = m
+            new_state[f"v.{k}"] = v
+            step = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            if wd > 0.0:
+                step = step + wd * p
+            new_params[k] = p - lr * step
+        return new_params, new_state
+
+    def fisher(state, k, p):
+        t = jnp.maximum(state["t"], 1.0)
+        return state[f"v.{k}"] / (1.0 - b2**t)
+
+    return Optimizer("adamw" if wd > 0 else "adam", init, update, fisher)
+
+
+def make_optimizer(name: str, **kw) -> Optimizer:
+    name = name.lower()
+    if name == "sgd":
+        return _sgd(momentum=kw.get("momentum", 0.0))
+    if name == "adam":
+        return _adam(wd=0.0, **{k: v for k, v in kw.items() if k != "wd"})
+    if name == "adamw":
+        return _adam(**kw)
+    raise ValueError(f"unknown optimizer: {name!r}")

@@ -1,0 +1,347 @@
+"""AOT program builders: scanned K-step train programs, eval, init.
+
+A *program* is a pure function over a flat, canonically-ordered tuple of
+arrays — exactly the calling convention the rust runtime uses against
+the compiled PJRT executable (one tuple output; see DESIGN.md §2).
+
+Canonical input order :  params (sorted) | opt state (sorted) |
+                         statics (sorted) | data | key | lrs | lam_reg
+Canonical output order:  params (sorted) | opt state (sorted) |
+                         base_losses [K] | total_losses [K]
+
+The K-step ``lax.scan`` is the key systems decision: the PJRT API on
+this image returns one un-splittable tuple buffer per call, so state
+round-trips through the host once per *chunk* of K optimizer steps,
+amortizing the copy by K (measured in EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from . import optim
+from .kernels import QuantFormat
+from .methods import make_method_loss
+from .models import linear2, linreg, transformer
+
+
+@dataclasses.dataclass(frozen=True)
+class TensorSpec:
+    name: str
+    shape: tuple
+    dtype: str  # "f32" | "i32" | "u32"
+    role: str   # "param" | "opt" | "static" | "data" | "key" | "scalar" | "metric"
+
+    def to_json(self) -> dict:
+        return {
+            "name": self.name,
+            "shape": list(self.shape),
+            "dtype": self.dtype,
+            "role": self.role,
+        }
+
+
+@dataclasses.dataclass
+class Program:
+    """A lowerable flat-arg function plus its I/O contract."""
+
+    name: str
+    fn: Callable
+    inputs: list
+    outputs: list
+    meta: dict
+
+
+_DTYPES = {"f32": jnp.float32, "i32": jnp.int32, "u32": jnp.uint32}
+
+
+def _np_dtype(name: str):
+    return _DTYPES[name]
+
+
+def example_args(prog: Program):
+    """ShapeDtypeStructs for jax.jit(...).lower(...)."""
+    return [
+        jax.ShapeDtypeStruct(tuple(s.shape), _np_dtype(s.dtype)) for s in prog.inputs
+    ]
+
+
+# ---------------------------------------------------------------------------
+# model adapters
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelAdapter:
+    """Uniform view over the three testbed models."""
+
+    kind: str
+    cfg: object
+    param_specs: list          # [TensorSpec]
+    static_specs: list         # [TensorSpec]
+    data_spec: Callable        # (K) -> TensorSpec | None
+    # base_loss(params, statics, data_step, key) -> scalar
+    base_loss: Callable
+    val_loss: Callable         # (params, statics, data) -> scalar
+    quantized: set
+    fisher_exact: Callable | None  # (params, statics) -> {name: arr} | None
+    init_fn: Callable          # (key) -> params dict
+
+
+def _specs_from_tree(tree: dict, role: str) -> list:
+    out = []
+    for k in sorted(tree):
+        v = tree[k]
+        dt = {jnp.float32: "f32", jnp.int32: "i32", jnp.uint32: "u32"}.get(
+            v.dtype.type, "f32"
+        )
+        out.append(TensorSpec(k, tuple(v.shape), dt, role))
+    return out
+
+
+def make_adapter(kind: str, cfg) -> ModelAdapter:
+    if kind == "linreg":
+        shapes = jax.eval_shape(lambda k: linreg.init(k, cfg), jax.random.PRNGKey(0))
+        statics = [
+            TensorSpec("lam", (cfg.d,), "f32", "static"),
+            TensorSpec("wstar", (cfg.d,), "f32", "static"),
+        ]
+
+        def base_loss(params, st, _data, key):
+            return linreg.loss(params, linreg.sample_batch(key, cfg, st))
+
+        return ModelAdapter(
+            kind, cfg, _specs_from_tree(shapes, "param"), statics,
+            lambda K: None, base_loss,
+            lambda params, st, _data: linreg.val_loss(params, st),
+            linreg.quantized_keys(),
+            lambda params, st: linreg.fisher_exact(params, st),
+            lambda key: linreg.init(key, cfg),
+        )
+    if kind == "linear2":
+        shapes = jax.eval_shape(lambda k: linear2.init(k, cfg), jax.random.PRNGKey(0))
+        statics = [
+            TensorSpec("lam", (cfg.d,), "f32", "static"),
+            TensorSpec("wstar", (cfg.d,), "f32", "static"),
+        ]
+
+        def base_loss(params, st, _data, _key):
+            return linear2.loss(params, st, cfg.k)
+
+        return ModelAdapter(
+            kind, cfg, _specs_from_tree(shapes, "param"), statics,
+            lambda K: None, base_loss,
+            lambda params, st, _data: linear2.val_loss(params, st, cfg.k),
+            linear2.quantized_keys(),
+            lambda params, st: linear2.fisher_exact(params, st, cfg.k),
+            lambda key: linear2.init(key, cfg),
+        )
+    if kind == "lm":
+        shapes = jax.eval_shape(lambda k: transformer.init(k, cfg.lm), jax.random.PRNGKey(0))
+
+        def data_spec(K):
+            return TensorSpec(
+                "tokens", (K, cfg.batch, cfg.seq_len + 1), "i32", "data"
+            )
+
+        def base_loss(params, _st, data_step, _key):
+            return transformer.loss(params, data_step, cfg.lm)
+
+        return ModelAdapter(
+            kind, cfg, _specs_from_tree(shapes, "param"), [],
+            data_spec, base_loss,
+            lambda params, _st, data: transformer.loss(params, data, cfg.lm),
+            transformer.quantized_keys(cfg.lm),
+            None,
+            lambda key: transformer.init(key, cfg.lm),
+        )
+    raise ValueError(f"unknown model kind {kind!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class LMTrainConfig:
+    """LM preset + batch geometry (adapter-level cfg for kind='lm')."""
+
+    lm: transformer.LMConfig
+    batch: int = 8
+
+    @property
+    def seq_len(self) -> int:
+        return self.lm.seq_len
+
+    @property
+    def name(self) -> str:
+        return self.lm.name
+
+
+def init(self_key, adapter: ModelAdapter):
+    return adapter.init_fn(self_key)
+
+
+# ---------------------------------------------------------------------------
+# program builders
+# ---------------------------------------------------------------------------
+
+
+def build_train_program(
+    adapter: ModelAdapter,
+    method: str,
+    fmt: QuantFormat | None,
+    optimizer: optim.Optimizer,
+    steps_per_call: int,
+) -> Program:
+    """K optimizer steps of ``method`` as one flat scanned program."""
+    K = steps_per_call
+    opt_shapes = jax.eval_shape(
+        optimizer.init,
+        {s.name: jnp.zeros(s.shape, _np_dtype(s.dtype)) for s in adapter.param_specs},
+    )
+    opt_specs = _specs_from_tree(opt_shapes, "opt")
+    data = adapter.data_spec(K)
+    inputs = (
+        adapter.param_specs
+        + opt_specs
+        + adapter.static_specs
+        + ([data] if data else [])
+        + [
+            TensorSpec("key", (2,), "u32", "key"),
+            TensorSpec("lrs", (K,), "f32", "scalar"),
+            TensorSpec("lam_reg", (), "f32", "scalar"),
+        ]
+    )
+    outputs = (
+        [dataclasses.replace(s) for s in adapter.param_specs]
+        + [dataclasses.replace(s) for s in opt_specs]
+        + [
+            TensorSpec("base_losses", (K,), "f32", "metric"),
+            TensorSpec("total_losses", (K,), "f32", "metric"),
+        ]
+    )
+
+    n_p = len(adapter.param_specs)
+    n_o = len(opt_specs)
+    n_s = len(adapter.static_specs)
+    p_names = [s.name for s in adapter.param_specs]
+    o_names = [s.name for s in opt_specs]
+    s_names = [s.name for s in adapter.static_specs]
+
+    def fn(*flat):
+        i = 0
+        params = dict(zip(p_names, flat[i : i + n_p])); i += n_p
+        opt_state = dict(zip(o_names, flat[i : i + n_o])); i += n_o
+        statics = dict(zip(s_names, flat[i : i + n_s])); i += n_s
+        data_all = None
+        if data is not None:
+            data_all = flat[i]; i += 1
+        key, lrs, lam_reg = flat[i], flat[i + 1], flat[i + 2]
+
+        def step(carry, xs):
+            params, opt_state = carry
+            data_step, lr, k = xs
+            k_data, k_round = jax.random.split(k)
+            if method == "lotion":
+                if adapter.fisher_exact is not None:
+                    fisher = adapter.fisher_exact(params, statics)
+                else:
+                    fisher = {
+                        name: optimizer.fisher(opt_state, name, params[name])
+                        for name in adapter.quantized
+                    }
+            else:
+                fisher = {name: None for name in adapter.quantized}
+
+            loss_fn = make_method_loss(
+                method,
+                lambda p: adapter.base_loss(p, statics, data_step, k_data),
+                adapter.quantized,
+                fmt,
+            )
+            (total, base), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, k_round, lam_reg, fisher
+            )
+            params, opt_state = optimizer.update(params, opt_state, grads, lr)
+            return (params, opt_state), (base, total)
+
+        keys = jax.random.split(key, K)
+        xs = (
+            data_all if data_all is not None else jnp.zeros((K,), jnp.float32),
+            lrs,
+            keys,
+        )
+        (params, opt_state), (bases, totals) = jax.lax.scan(
+            step, (params, opt_state), xs
+        )
+        return tuple(
+            [params[n] for n in p_names]
+            + [opt_state[n] for n in o_names]
+            + [bases, totals]
+        )
+
+    qfmt = fmt.name if fmt else "none"
+    name = f"train_{adapter.cfg.name}_{method}_{qfmt}_k{K}"
+    return Program(
+        name, fn, inputs, outputs,
+        meta={
+            "kind": "train", "model": adapter.kind, "model_name": adapter.cfg.name,
+            "method": method, "format": qfmt,
+            "block_size": fmt.block_size if fmt else 0,
+            "steps_per_call": K, "optimizer": optimizer.name,
+            "quantized": sorted(adapter.quantized),
+        },
+    )
+
+
+def build_eval_program(adapter: ModelAdapter, eval_batches: int = 1) -> Program:
+    """Mean validation loss over the supplied data (or exact, synthetic)."""
+    data = adapter.data_spec(eval_batches)
+    inputs = adapter.param_specs + adapter.static_specs + ([data] if data else [])
+    outputs = [TensorSpec("val_loss", (), "f32", "metric")]
+    n_p = len(adapter.param_specs)
+    n_s = len(adapter.static_specs)
+    p_names = [s.name for s in adapter.param_specs]
+    s_names = [s.name for s in adapter.static_specs]
+
+    def fn(*flat):
+        params = dict(zip(p_names, flat[:n_p]))
+        statics = dict(zip(s_names, flat[n_p : n_p + n_s]))
+        if data is None:
+            return (adapter.val_loss(params, statics, None),)
+        batches = flat[n_p + n_s]
+
+        def one(_, b):
+            return None, adapter.val_loss(params, statics, b)
+
+        _, losses = jax.lax.scan(one, None, batches)
+        return (jnp.mean(losses),)
+
+    name = f"eval_{adapter.cfg.name}"
+    return Program(
+        name, fn, inputs, outputs,
+        meta={
+            "kind": "eval", "model": adapter.kind, "model_name": adapter.cfg.name,
+            "eval_batches": eval_batches,
+            "quantized": sorted(adapter.quantized),
+        },
+    )
+
+
+def build_init_program(adapter: ModelAdapter) -> Program:
+    """(key) -> freshly initialized params, lowered so the rust side never
+    needs python for initialization."""
+    inputs = [TensorSpec("key", (2,), "u32", "key")]
+    outputs = [dataclasses.replace(s) for s in adapter.param_specs]
+    p_names = [s.name for s in adapter.param_specs]
+
+    def fn(key):
+        params = adapter.init_fn(key)
+        return tuple(params[n] for n in p_names)
+
+    name = f"init_{adapter.cfg.name}"
+    return Program(
+        name, fn, inputs, outputs,
+        meta={"kind": "init", "model": adapter.kind, "model_name": adapter.cfg.name},
+    )

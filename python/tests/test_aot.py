@@ -1,0 +1,121 @@
+"""AOT pipeline contract tests: manifest shape, HLO text validity, and the
+scanned-program semantics the rust runtime depends on."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, optim, programs
+from compile.kernels import make_format
+from compile.models import linreg
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def _adapter():
+    return programs.make_adapter("linreg", linreg.LinRegConfig(d=32, batch=16))
+
+
+def test_hlo_text_has_entry_and_params():
+    ad = _adapter()
+    prog = programs.build_train_program(
+        ad, "lotion", make_format("int4", 0), optim.make_optimizer("sgd"), 2
+    )
+    txt = aot.to_hlo_text(prog)
+    assert "ENTRY" in txt and "HloModule" in txt
+    # one HLO parameter per flat input, in order
+    for i in range(len(prog.inputs)):
+        assert f"parameter({i})" in txt
+
+
+def test_flat_io_order_is_canonical():
+    ad = _adapter()
+    prog = programs.build_train_program(
+        ad, "qat", make_format("int4", 0), optim.make_optimizer("sgd"), 2
+    )
+    names = [s.name for s in prog.inputs]
+    assert names == ["w", "t", "lam", "wstar", "key", "lrs", "lam_reg"]
+    out_names = [s.name for s in prog.outputs]
+    assert out_names == ["w", "t", "base_losses", "total_losses"]
+
+
+def test_scanned_program_chunking_contract():
+    """The rust coordinator chains chunks by feeding output state back as
+    input state with a fresh per-call key. Verify: (a) a call is
+    deterministic in its inputs, (b) state round-trips exactly (output
+    specs == input param/opt specs), (c) chained chunks keep training
+    (loss decreases across chunks)."""
+    ad = _adapter()
+    opt = optim.make_optimizer("sgd")
+    fmt = make_format("int4", 0)
+    p4 = programs.build_train_program(ad, "lotion", fmt, opt, 4)
+
+    lam = (1.0 / np.arange(1, 33) ** 1.1).astype(np.float32)
+    wstar = np.random.default_rng(0).normal(size=32).astype(np.float32)
+    args = [
+        jnp.zeros((32,), jnp.float32),
+        jnp.zeros((), jnp.float32),
+        jnp.asarray(lam),
+        jnp.asarray(wstar),
+        jnp.asarray([5, 6], jnp.uint32),
+        jnp.full((4,), 0.1, jnp.float32),
+        jnp.asarray(2.0, jnp.float32),
+    ]
+    f = jax.jit(p4.fn)
+    o1 = f(*args)
+    o2 = f(*args)
+    np.testing.assert_array_equal(np.asarray(o1[0]), np.asarray(o2[0]))  # (a)
+
+    # (b)+(c): chain 10 chunks, check exact population val loss drops
+    ev = jax.jit(programs.build_eval_program(_adapter()).fn)
+    val0 = float(ev(args[0], args[2], args[3])[0])
+    w, t = args[0], args[1]
+    for call in range(10):
+        out = f(w, t, args[2], args[3], jnp.asarray([5, call], jnp.uint32),
+                args[5], args[6])
+        w, t = out[0], out[1]
+    assert float(t) == 40.0  # 10 chunks x 4 steps
+    val1 = float(ev(w, args[2], args[3])[0])
+    assert val1 < val0 * 0.7
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ARTIFACTS, "manifest.json")),
+    reason="artifacts not built",
+)
+class TestManifest:
+    @pytest.fixture(scope="class")
+    def doc(self):
+        with open(os.path.join(ARTIFACTS, "manifest.json")) as f:
+            return json.load(f)
+
+    def test_every_artifact_file_exists(self, doc):
+        for name, e in doc["artifacts"].items():
+            assert os.path.exists(os.path.join(ARTIFACTS, e["file"])), name
+
+    def test_train_entries_have_full_contract(self, doc):
+        trains = {k: v for k, v in doc["artifacts"].items() if v["meta"]["kind"] == "train"}
+        assert len(trains) >= 20
+        for name, e in trains.items():
+            roles = [s["role"] for s in e["inputs"]]
+            assert "key" in roles and "param" in roles, name
+            assert e["meta"]["method"] in ("ptq", "qat", "rat", "lotion")
+            out_names = [s["name"] for s in e["outputs"]]
+            assert out_names[-2:] == ["base_losses", "total_losses"], name
+            # params echo back first, in the same order
+            in_params = [s["name"] for s in e["inputs"] if s["role"] == "param"]
+            assert out_names[: len(in_params)] == in_params, name
+
+    def test_smoke_set_present(self, doc):
+        a = doc["artifacts"]
+        assert "train_linreg_d256_lotion_int4_k8" in a
+        assert "eval_lm-tiny" in a and "init_lm-tiny" in a
+
+    def test_quantized_keys_recorded(self, doc):
+        e = doc["artifacts"]["train_lm-tiny_lotion_int4_k4"]
+        q = e["meta"]["quantized"]
+        assert "lm_head" in q and "embed" not in q

@@ -1,0 +1,85 @@
+"""FP4 (E2M1) codebook specifics (§4.3.3): lattice structure, absmax
+mapping, non-uniform resolution, and the generalized RR variance."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import FP4_LEVELS, make_format, ref, sigma2
+
+
+FMT = make_format("fp4", 0)
+
+
+def test_codebook_is_e2m1():
+    assert sorted(FP4_LEVELS) == [
+        -6.0, -4.0, -3.0, -2.0, -1.5, -1.0, -0.5, 0.0,
+        0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0,
+    ]
+    assert FMT.qmax == 6.0
+    assert not FMT.uniform
+
+
+def test_absmax_maps_to_six():
+    w = jnp.asarray([0.1, -2.4, 0.3], jnp.float32)
+    s = float(ref.block_scales_ref(w, FMT)[0])
+    assert abs(s - 2.4 / 6.0) < 1e-7
+    q = ref.fake_quant_ref(w, FMT)
+    # the absmax element lands exactly on +-6 * s = +-absmax
+    assert abs(float(q[1]) + 2.4) < 1e-6
+
+
+def test_resolution_denser_near_zero():
+    """E2M1's selling point: finer spacing near 0 (0.5) than near the
+    edge (2.0) — quantization error for small values is smaller than a
+    uniform INT4 lattice of the same dynamic range would give."""
+    gaps = np.diff(sorted(FP4_LEVELS))
+    assert gaps.min() == 0.5 and gaps.max() == 2.0
+    # compare RMS error on small-magnitude values vs int4
+    w = jax.random.normal(jax.random.PRNGKey(0), (4096,)) * 0.2
+    w = jnp.concatenate([w, jnp.asarray([3.0, -3.0])])  # pin dynamic range
+    int4 = make_format("int4", 0)
+    err = lambda fmt: float(jnp.sqrt(jnp.mean((ref.fake_quant_ref(w, fmt) - w)[:-2] ** 2)))
+    assert err(FMT) < err(int4), (err(FMT), err(int4))
+
+
+def test_rr_variance_uses_local_gap():
+    """sigma^2 = s^2 (u-z)(z-l): midpoints of wide bins have larger
+    variance than midpoints of narrow bins."""
+    s = 0.5  # pin scale via absmax element 3.0 (=6*0.5)
+    w = jnp.asarray([3.0, 0.125, 2.5], jnp.float32)  # z = 6, 0.25, 5.0
+    v = np.asarray(sigma2(w, FMT))
+    # z=0.25 sits mid-bin in [0, 0.5]: var = s^2 * 0.25*0.25
+    np.testing.assert_allclose(v[1], s * s * 0.25 * 0.25, rtol=1e-5)
+    # z=5.0 sits mid-bin in [4, 6]: var = s^2 * 1.0 * 1.0 (wider bin)
+    np.testing.assert_allclose(v[2], s * s * 1.0, rtol=1e-5)
+    assert v[2] > v[1]
+    assert v[0] == 0.0  # lattice point
+
+
+def test_fp4_rr_unbiased():
+    fmt = FMT
+    w = jax.random.normal(jax.random.PRNGKey(3), (32,)) * 1.5
+    keys = jax.random.split(jax.random.PRNGKey(4), 3000)
+
+    def one(k):
+        u = jax.random.uniform(k, w.shape)
+        return ref.stochastic_round_ref(w, fmt, u)
+
+    qs = jax.vmap(one)(keys)
+    mean = jnp.mean(qs, axis=0)
+    sd = jnp.std(qs, axis=0) / np.sqrt(3000)
+    # atol includes f32 roundoff: the absmax element reconstructs as
+    # (w/6)*6 which differs from w by ~1 ulp
+    tol = 5 * np.asarray(sd) + 1e-5 * np.abs(np.asarray(w)) + 1e-6
+    np.testing.assert_array_less(np.abs(np.asarray(mean - w)), tol)
+
+
+def test_all_casts_land_on_scaled_codebook():
+    w = jax.random.normal(jax.random.PRNGKey(5), (257,)) * 2.0
+    s = float(ref.block_scales_ref(w, FMT)[0])
+    q = np.asarray(ref.fake_quant_ref(w, FMT)) / s
+    lattice = np.asarray(FP4_LEVELS, dtype=np.float32)
+    for z in q:
+        assert np.min(np.abs(lattice - z)) < 1e-5, z

@@ -1,0 +1,174 @@
+"""Pallas kernels vs pure-jnp oracles — the core L1 correctness signal.
+
+Hypothesis sweeps shapes, scales, block sizes and formats; every kernel
+must agree with ``ref.py`` element-for-element (identical lattice, not
+just allclose-to-float-noise).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    fake_quant,
+    lotion_penalty,
+    make_format,
+    penalty_grad,
+    penalty_value,
+    ref,
+    sigma2,
+    ste_fake_quant,
+    ste_stochastic_round,
+    stochastic_round,
+)
+
+FORMATS = ["int4", "int8", "fp4"]
+BLOCKS = [0, 32, 64, 257]
+
+shape_st = st.sampled_from([(7,), (128,), (3, 97), (16, 64), (5, 5, 5), (1, 1), (130, 33)])
+scale_st = st.sampled_from([1e-3, 0.1, 1.0, 37.5])
+seed_st = st.integers(min_value=0, max_value=2**31 - 1)
+
+
+def _w(seed, shape, scale):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape) * scale
+
+
+@pytest.mark.parametrize("fmt_name", FORMATS)
+@pytest.mark.parametrize("block", BLOCKS)
+@settings(max_examples=12, deadline=None)
+@given(shape=shape_st, scale=scale_st, seed=seed_st)
+def test_fake_quant_matches_ref(fmt_name, block, shape, scale, seed):
+    fmt = make_format(fmt_name, block)
+    w = _w(seed, shape, scale)
+    np.testing.assert_allclose(
+        fake_quant(w, fmt), ref.fake_quant_ref(w, fmt), rtol=1e-6, atol=1e-8
+    )
+
+
+@pytest.mark.parametrize("fmt_name", FORMATS)
+@pytest.mark.parametrize("block", BLOCKS)
+@settings(max_examples=12, deadline=None)
+@given(shape=shape_st, scale=scale_st, seed=seed_st)
+def test_stochastic_round_matches_ref(fmt_name, block, shape, scale, seed):
+    fmt = make_format(fmt_name, block)
+    w = _w(seed, shape, scale)
+    u = jax.random.uniform(jax.random.PRNGKey(seed + 1), shape)
+    np.testing.assert_allclose(
+        stochastic_round(w, fmt, u),
+        ref.stochastic_round_ref(w, fmt, u),
+        rtol=1e-6,
+        atol=1e-8,
+    )
+
+
+@pytest.mark.parametrize("fmt_name", FORMATS)
+@pytest.mark.parametrize("block", BLOCKS)
+@settings(max_examples=12, deadline=None)
+@given(shape=shape_st, scale=scale_st, seed=seed_st)
+def test_sigma2_and_penalty_match_ref(fmt_name, block, shape, scale, seed):
+    fmt = make_format(fmt_name, block)
+    w = _w(seed, shape, scale)
+    f = jax.random.uniform(jax.random.PRNGKey(seed + 2), shape)
+    np.testing.assert_allclose(sigma2(w, fmt), ref.sigma2_ref(w, fmt), rtol=1e-5, atol=1e-8)
+    np.testing.assert_allclose(
+        penalty_value(w, f, fmt), ref.lotion_penalty_ref(w, f, fmt), rtol=1e-5, atol=1e-8
+    )
+    np.testing.assert_allclose(
+        penalty_grad(w, f, fmt), ref.lotion_penalty_grad_ref(w, f, fmt), rtol=1e-5, atol=1e-8
+    )
+
+
+@pytest.mark.parametrize("fmt_name", FORMATS)
+def test_custom_vjp_uses_analytic_grad(fmt_name):
+    fmt = make_format(fmt_name, 0)
+    w = _w(3, (4, 33), 0.7)
+    f = jax.random.uniform(jax.random.PRNGKey(4), (4, 33))
+    g = jax.grad(lambda ww: lotion_penalty(ww, f, fmt))(w)
+    np.testing.assert_allclose(g, ref.lotion_penalty_grad_ref(w, f, fmt), rtol=1e-5, atol=1e-8)
+
+
+@pytest.mark.parametrize("fmt_name", FORMATS)
+def test_penalty_grad_matches_finite_difference(fmt_name):
+    """Analytic penalty gradient == centered finite difference of the
+    penalty value, away from lattice boundaries (where it is undefined)."""
+    fmt = make_format(fmt_name, 0)
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.normal(size=(37,)).astype(np.float32))
+    f = jnp.asarray(rng.uniform(0.5, 1.5, size=(37,)).astype(np.float32))
+    s = ref.block_scales_ref(w, fmt)[0]
+    # Perturb only coordinates well inside a bin (and far from the absmax
+    # coordinate so the scale does not move).
+    z = w / s
+    eps = 1e-3
+    g_ref = np.asarray(ref.lotion_penalty_grad_ref(w, f, fmt))
+    amax_idx = int(np.argmax(np.abs(np.asarray(w))))
+    checked = 0
+    for i in range(w.shape[0]):
+        if i == amax_idx:
+            continue
+        zi = float(z[i])
+        if abs(zi - round(zi)) < 0.05 or abs(zi) > fmt.qmax * 0.9:
+            continue
+        dw = np.zeros_like(np.asarray(w))
+        dw[i] = eps * float(s)
+        lp = ref.lotion_penalty_ref(w + dw, f, fmt)
+        lm = ref.lotion_penalty_ref(w - dw, f, fmt)
+        fd = float((lp - lm) / (2 * eps * float(s)))
+        np.testing.assert_allclose(fd, g_ref[i], rtol=0.05, atol=1e-5)
+        checked += 1
+    assert checked > 5
+
+
+@pytest.mark.parametrize("fmt_name", FORMATS)
+def test_ste_wrappers_are_identity_in_backward(fmt_name):
+    fmt = make_format(fmt_name, 0)
+    w = _w(5, (64,), 0.5)
+    u = jax.random.uniform(jax.random.PRNGKey(6), (64,))
+    gq = jax.grad(lambda ww: jnp.sum(jnp.sin(ste_fake_quant(ww, fmt))))(w)
+    # STE: gradient flows as if cast were identity applied at the cast point
+    expect = jnp.cos(fake_quant(w, fmt))
+    np.testing.assert_allclose(gq, expect, rtol=1e-5, atol=1e-6)
+    gr = jax.grad(lambda ww: jnp.sum(ste_stochastic_round(ww, u, fmt)))(w)
+    np.testing.assert_allclose(gr, jnp.ones_like(w), rtol=1e-6)
+
+
+@pytest.mark.parametrize("fmt_name", FORMATS)
+@pytest.mark.parametrize("block", [0, 32])
+def test_cast_is_idempotent(fmt_name, block):
+    """cast(cast(w)) == cast(w): lattice points are fixed points (Def. 1.3)."""
+    fmt = make_format(fmt_name, block)
+    w = _w(7, (130,), 2.0)
+    q1 = fake_quant(w, fmt)
+    q2 = fake_quant(q1, fmt)
+    np.testing.assert_allclose(q1, q2, rtol=1e-6, atol=1e-7)
+
+
+@pytest.mark.parametrize("fmt_name", FORMATS)
+def test_rr_fixed_on_lattice(fmt_name):
+    """RR of an exactly-representable point returns it w.p. 1 (Def. 1.3)."""
+    fmt = make_format(fmt_name, 0)
+    w = fake_quant(_w(8, (64,), 1.0), fmt)
+    for seed in range(4):
+        u = jax.random.uniform(jax.random.PRNGKey(seed), (64,))
+        np.testing.assert_allclose(stochastic_round(w, fmt, u), w, rtol=1e-6, atol=1e-7)
+
+
+def test_zero_tensor_is_safe():
+    for fmt_name in FORMATS:
+        fmt = make_format(fmt_name, 0)
+        w = jnp.zeros((33,))
+        f = jnp.ones((33,))
+        assert not np.any(np.isnan(np.asarray(fake_quant(w, fmt))))
+        assert float(penalty_value(w, f, fmt)) == 0.0
+        assert not np.any(np.isnan(np.asarray(penalty_grad(w, f, fmt))))
+
+
+def test_bf16_roundtrip():
+    fmt = make_format("int8", 0)
+    w = _w(9, (128,), 0.3).astype(jnp.bfloat16)
+    q = fake_quant(w, fmt)
+    assert q.dtype == jnp.bfloat16
+    assert not np.any(np.isnan(np.asarray(q, dtype=np.float32)))

@@ -1,0 +1,145 @@
+"""Method-transformation semantics: QAT/RAT casting, LOTION penalty wiring."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import methods, optim
+from compile.kernels import fake_quant, make_format, ref
+
+
+FMT = make_format("int4", 0)
+
+
+def _quad_loss(target):
+    def f(params):
+        return 0.5 * jnp.sum((params["w"] - target) ** 2)
+
+    return f
+
+
+def test_ptq_is_identity_transformation():
+    w = jax.random.normal(jax.random.PRNGKey(0), (32,))
+    loss = methods.make_method_loss("ptq", _quad_loss(0.0), {"w"}, FMT)
+    total, base = loss({"w": w}, jax.random.PRNGKey(1), jnp.asarray(1.0), {"w": None})
+    assert float(total) == float(base) == float(0.5 * jnp.sum(w * w))
+
+
+def test_qat_forward_uses_rtn_cast():
+    w = jax.random.normal(jax.random.PRNGKey(0), (32,))
+    loss = methods.make_method_loss("qat", _quad_loss(0.0), {"w"}, FMT)
+    total, _ = loss({"w": w}, jax.random.PRNGKey(1), jnp.asarray(0.0), {"w": None})
+    wq = fake_quant(w, FMT)
+    np.testing.assert_allclose(float(total), float(0.5 * jnp.sum(wq * wq)), rtol=1e-6)
+
+
+def test_qat_backward_is_ste():
+    w = jax.random.normal(jax.random.PRNGKey(0), (32,))
+    loss = methods.make_method_loss("qat", _quad_loss(0.0), {"w"}, FMT)
+    g = jax.grad(lambda p: loss(p, jax.random.PRNGKey(1), 0.0, {"w": None})[0])(
+        {"w": w}
+    )
+    wq = fake_quant(w, FMT)
+    np.testing.assert_allclose(g["w"], wq, rtol=1e-6)  # dL/dwq * dwq/dw|STE = wq
+
+
+def test_rat_is_stochastic_but_seed_deterministic():
+    w = jax.random.normal(jax.random.PRNGKey(0), (32,))
+    loss = methods.make_method_loss("rat", _quad_loss(0.0), {"w"}, FMT)
+    t1, _ = loss({"w": w}, jax.random.PRNGKey(1), 0.0, {"w": None})
+    t2, _ = loss({"w": w}, jax.random.PRNGKey(1), 0.0, {"w": None})
+    t3, _ = loss({"w": w}, jax.random.PRNGKey(2), 0.0, {"w": None})
+    assert float(t1) == float(t2)
+    assert float(t1) != float(t3)
+
+
+def test_lotion_total_is_base_plus_lambda_penalty():
+    w = jax.random.normal(jax.random.PRNGKey(0), (32,))
+    fisher = jax.random.uniform(jax.random.PRNGKey(2), (32,)) + 0.1
+    loss = methods.make_method_loss("lotion", _quad_loss(0.0), {"w"}, FMT)
+    lam = 7.0
+    total, base = loss({"w": w}, jax.random.PRNGKey(1), jnp.asarray(lam), {"w": fisher})
+    pen = ref.lotion_penalty_ref(w, fisher, FMT)
+    np.testing.assert_allclose(float(total), float(base) + lam * float(pen), rtol=1e-5)
+
+
+def test_lotion_gradient_includes_penalty_term():
+    w = jax.random.normal(jax.random.PRNGKey(0), (32,))
+    fisher = jnp.ones((32,))
+    loss = methods.make_method_loss("lotion", _quad_loss(0.0), {"w"}, FMT)
+    lam = 3.0
+    g = jax.grad(lambda p: loss(p, jax.random.PRNGKey(1), jnp.asarray(lam), {"w": fisher})[0])(
+        {"w": w}
+    )
+    expect = w + lam * ref.lotion_penalty_grad_ref(w, fisher, FMT)
+    np.testing.assert_allclose(g["w"], expect, rtol=1e-5, atol=1e-7)
+
+
+def test_lotion_fisher_not_differentiated():
+    """Fisher enters through stop_gradient: grads w.r.t. fisher are zero."""
+    w = jax.random.normal(jax.random.PRNGKey(0), (16,))
+    loss = methods.make_method_loss("lotion", _quad_loss(0.0), {"w"}, FMT)
+
+    def f(fi):
+        total, _ = loss({"w": w}, jax.random.PRNGKey(1), jnp.asarray(1.0), {"w": fi})
+        return total
+
+    g = jax.grad(f)(jnp.ones((16,)))
+    np.testing.assert_allclose(g, jnp.zeros((16,)), atol=1e-9)
+
+
+def test_unquantized_tensors_untouched():
+    params = {
+        "w": jax.random.normal(jax.random.PRNGKey(0), (16,)),
+        "norm": jax.random.normal(jax.random.PRNGKey(1), (16,)),
+    }
+
+    def base(p):
+        return jnp.sum(p["w"]) + jnp.sum(p["norm"] ** 3)
+
+    loss = methods.make_method_loss("qat", base, {"w"}, FMT)
+    total, _ = loss(params, jax.random.PRNGKey(2), 0.0, {})
+    expect = jnp.sum(fake_quant(params["w"], FMT)) + jnp.sum(params["norm"] ** 3)
+    np.testing.assert_allclose(float(total), float(expect), rtol=1e-6)
+
+
+class TestOptim:
+    def test_sgd_step(self):
+        opt = optim.make_optimizer("sgd")
+        p = {"w": jnp.asarray([1.0, 2.0])}
+        st = opt.init(p)
+        g = {"w": jnp.asarray([0.5, -0.5])}
+        p2, st2 = opt.update(p, st, g, jnp.asarray(0.1))
+        np.testing.assert_allclose(p2["w"], [0.95, 2.05], rtol=1e-6)
+        assert float(st2["t"]) == 1.0
+
+    def test_adam_matches_reference_formula(self):
+        opt = optim.make_optimizer("adam")
+        p = {"w": jnp.asarray([1.0])}
+        st = opt.init(p)
+        g = {"w": jnp.asarray([0.3])}
+        p2, st2 = opt.update(p, st, g, jnp.asarray(0.01))
+        # first step of Adam: update = lr * g/|g| (bias-corrected) ~ lr
+        np.testing.assert_allclose(p2["w"], [1.0 - 0.01 * 0.3 / (0.3 + 1e-8)], rtol=1e-4)
+
+    def test_adamw_decoupled_decay(self):
+        opt = optim.make_optimizer("adamw", wd=0.1)
+        p = {"w": jnp.asarray([1.0])}
+        st = opt.init(p)
+        g = {"w": jnp.asarray([0.0])}
+        p2, _ = opt.update(p, st, g, jnp.asarray(0.01))
+        np.testing.assert_allclose(p2["w"], [1.0 - 0.01 * 0.1 * 1.0], rtol=1e-5)
+
+    def test_fisher_is_bias_corrected_v(self):
+        opt = optim.make_optimizer("adam")
+        p = {"w": jnp.asarray([1.0, 2.0])}
+        st = opt.init(p)
+        g = {"w": jnp.asarray([0.5, -1.0])}
+        _, st = opt.update(p, st, g, jnp.asarray(0.0))
+        f = opt.fisher(st, "w", p["w"])
+        np.testing.assert_allclose(f, g["w"] ** 2, rtol=1e-4)
+
+    def test_sgd_has_no_fisher(self):
+        opt = optim.make_optimizer("sgd")
+        assert opt.fisher({}, "w", jnp.zeros(3)) is None

@@ -1,0 +1,140 @@
+"""L2 model correctness: shapes, losses, exact-Fisher formulas, LM behaviour."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.models import linear2, linreg, transformer
+
+
+class TestLinReg:
+    cfg = linreg.LinRegConfig(d=128, batch=64)
+
+    def test_init_shape(self):
+        p = linreg.init(jax.random.PRNGKey(0), self.cfg)
+        assert p["w"].shape == (self.cfg.d,)
+        assert float(jnp.sum(jnp.abs(p["w"]))) == 0.0
+
+    def test_val_loss_zero_at_optimum(self):
+        st = linreg.statics(jax.random.PRNGKey(1), self.cfg)
+        assert float(linreg.val_loss({"w": st["wstar"]}, st)) == 0.0
+
+    def test_minibatch_loss_approximates_population(self):
+        st = linreg.statics(jax.random.PRNGKey(1), self.cfg)
+        p = {"w": jnp.zeros((self.cfg.d,))}
+        cfg_big = linreg.LinRegConfig(d=self.cfg.d, batch=8192)
+        batch = linreg.sample_batch(jax.random.PRNGKey(2), cfg_big, st)
+        emp = float(linreg.loss(p, batch))
+        pop = float(linreg.val_loss(p, st))
+        assert abs(emp - pop) / pop < 0.15
+
+    def test_spectrum_power_law(self):
+        lam = np.asarray(linreg.spectrum(self.cfg))
+        assert lam[0] == 1.0
+        np.testing.assert_allclose(lam[9], 10.0 ** -1.1, rtol=1e-5)
+        assert np.all(np.diff(lam) < 0)
+
+    def test_fisher_exact_is_spectrum(self):
+        st = linreg.statics(jax.random.PRNGKey(1), self.cfg)
+        f = linreg.fisher_exact({"w": jnp.zeros(self.cfg.d)}, st)
+        np.testing.assert_allclose(f["w"], st["lam"])
+
+
+class TestLinear2:
+    cfg = linear2.Linear2Config(d=96, k=4)
+
+    def test_loss_zero_at_gt(self):
+        st = linear2.statics(jax.random.PRNGKey(0), self.cfg)
+        p = linear2.init_gt(self.cfg, st["wstar"])
+        assert float(linear2.loss(p, st, self.cfg.k)) < 1e-10
+
+    def test_fisher_matches_autodiff_gauss_newton(self):
+        """Exact-GN formula == diag of J^T diag(lam) J computed by autodiff."""
+        st = linear2.statics(jax.random.PRNGKey(1), self.cfg)
+        p = linear2.init(jax.random.PRNGKey(2), self.cfg)
+        k = self.cfg.k
+        f = linear2.fisher_exact(p, st, k)
+
+        # f(x) = v.x with v = (1/k) W1^T W2^T; GN for the population loss
+        # 1/2 (v-w*)^T diag(lam) (v-w*) over params theta is
+        # (dv/dtheta)^T diag(lam) (dv/dtheta); diagonal via per-param grads.
+        def v_of(params):
+            return linear2.effective_w(params, k)
+
+        jac = jax.jacobian(v_of)(p)  # dict of [d, *param_shape]
+        lam = st["lam"]
+        for name in ("w1", "w2"):
+            j = jac[name].reshape(self.cfg.d, -1)
+            gn_diag = jnp.einsum("di,d->i", j * j, lam).reshape(p[name].shape)
+            np.testing.assert_allclose(f[name], gn_diag, rtol=1e-4, atol=1e-7)
+
+    def test_quantized_keys(self):
+        assert linear2.quantized_keys() == {"w1", "w2"}
+
+
+class TestTransformer:
+    cfg = transformer.LMConfig("t", vocab=61, d_model=32, n_layers=2, n_heads=2, seq_len=16)
+
+    def _params(self):
+        return transformer.init(jax.random.PRNGKey(0), self.cfg)
+
+    def test_param_count_estimate(self):
+        p = self._params()
+        total = sum(int(np.prod(v.shape)) for v in p.values())
+        assert abs(total - self.cfg.param_count()) / total < 0.01
+
+    def test_forward_shape(self):
+        p = self._params()
+        toks = jnp.zeros((3, 16), jnp.int32)
+        logits = transformer.forward(p, toks, self.cfg)
+        assert logits.shape == (3, 16, 61)
+
+    def test_initial_loss_near_uniform(self):
+        p = self._params()
+        batch = jax.random.randint(jax.random.PRNGKey(1), (4, 17), 0, 61)
+        loss = float(transformer.loss(p, batch, self.cfg))
+        assert abs(loss - np.log(61)) < 0.3
+
+    def test_causality(self):
+        """Changing a future token must not affect past logits."""
+        p = self._params()
+        t1 = jax.random.randint(jax.random.PRNGKey(2), (1, 16), 0, 61)
+        t2 = t1.at[0, 10].set((t1[0, 10] + 1) % 61)
+        l1 = transformer.forward(p, t1, self.cfg)
+        l2 = transformer.forward(p, t2, self.cfg)
+        np.testing.assert_allclose(l1[0, :10], l2[0, :10], atol=1e-5)
+        assert not np.allclose(l1[0, 10:], l2[0, 10:], atol=1e-5)
+
+    def test_loss_decreases_under_training(self):
+        from compile import optim
+
+        p = self._params()
+        opt = optim.make_optimizer("adamw")
+        st = opt.init(p)
+        batch = jax.random.randint(jax.random.PRNGKey(3), (8, 17), 0, 61)
+
+        @jax.jit
+        def step(p, st):
+            loss, g = jax.value_and_grad(lambda q: transformer.loss(q, batch, self.cfg))(p)
+            p, st = opt.update(p, st, g, jnp.asarray(3e-3))
+            return p, st, loss
+
+        first = None
+        for i in range(30):
+            p, st, loss = step(p, st)
+            first = first if first is not None else float(loss)
+        assert float(loss) < first - 0.5
+
+    def test_quantized_keys_excludes_embed_and_norms(self):
+        ks = transformer.quantized_keys(self.cfg)
+        assert "embed" not in ks and "norm_final" not in ks
+        assert "lm_head" in ks and "layer00.attn_wq" in ks
+        assert not any("norm" in k for k in ks)
+
+    def test_presets_param_counts(self):
+        p100 = transformer.PRESETS["lm-100m"].param_count()
+        assert 80e6 < p100 < 130e6
+        assert transformer.PRESETS["lm-300m-sim"].param_count() > (
+            2 * transformer.PRESETS["lm-150m-sim"].param_count()
+        )

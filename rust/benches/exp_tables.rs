@@ -1,0 +1,105 @@
+//! One end-to-end bench per paper table/figure workload: measures the
+//! steady-state step throughput of each experiment's training loop
+//! (the quantity that gates regenerating the paper's results) plus the
+//! quantized-eval latency that punctuates it.
+//!
+//! Figure/table mapping (DESIGN.md §4):
+//!   fig2/fig7   linreg d=12000 INT4          -> linreg bench
+//!   fig3/fig8   linear2 k-sweep INT4         -> linear2 bench (k=8)
+//!   fig9/tab1   lm-150m-sim INT4/INT8        -> lm150 benches
+//!   fig10/fig1  lm-150m-sim extended budget  -> same workload as fig9
+//!   fig11/tab2  lm-300m-sim INT4/INT8        -> lm300 bench
+//!   fig12/fig5  lm-150m-sim FP4              -> fp4 bench
+
+use lotion::benchlib::Bench;
+use lotion::config::RunConfig;
+use lotion::coordinator::{DataSource, Evaluator, MetricsLogger, Trainer};
+use lotion::experiments::common::synth_statics;
+use lotion::quant::{QuantFormat, Rounding};
+use lotion::runtime::{Engine, Role};
+use std::path::Path;
+
+fn workload(
+    engine: &Engine,
+    bench: &mut Bench,
+    tag: &str,
+    model: &str,
+    method: &str,
+    format: &str,
+    lambda: f64,
+) {
+    let mut cfg = RunConfig::default();
+    cfg.model = model.into();
+    cfg.method = method.into();
+    cfg.format = format.into();
+    cfg.steps = 1_000_000;
+    cfg.lr = 1e-3;
+    cfg.lambda = lambda;
+    let (statics, data) = if model.starts_with("lin") {
+        let d = engine
+            .manifest
+            .find_eval(model)
+            .unwrap()
+            .inputs
+            .iter()
+            .find(|s| s.name == "lam")
+            .map(|s| s.shape[0])
+            .unwrap();
+        let (s, _, _) = synth_statics(d, 42);
+        (s, DataSource::InGraph)
+    } else {
+        let eval = engine.manifest.find_eval(model).unwrap();
+        let d = eval
+            .inputs
+            .iter()
+            .find(|s| matches!(s.role, Role::Data))
+            .unwrap();
+        let corpus = lotion::data::ZipfMarkovCorpus::generate(400_000, 512, 4, 1);
+        let toks = lotion::data::ByteTokenizer::new().encode(&corpus.bytes);
+        (
+            vec![],
+            DataSource::Tokens(lotion::data::TokenBatcher::new(
+                toks,
+                d.shape[1],
+                d.shape[2] - 1,
+                0.1,
+            )),
+        )
+    };
+    let Ok(mut trainer) = Trainer::new(engine, cfg, statics, data) else {
+        eprintln!("skip {tag}: artifacts missing");
+        return;
+    };
+    let k = trainer.steps_per_call() as f64;
+    let mut metrics = MetricsLogger::in_memory();
+    bench.run_with_items(&format!("{tag}/train_steps"), Some(k), &mut || {
+        trainer.chunk(&mut metrics).unwrap();
+    });
+    // quantized eval latency (cast in rust + eval executable)
+    let mut eval = Evaluator::new(engine, model, 0).unwrap();
+    let fmt = QuantFormat::parse(if format == "none" { "int4" } else { format }, 0).unwrap();
+    bench.run(&format!("{tag}/quantized_eval"), || {
+        std::hint::black_box(eval.eval_cast(&trainer, Some(&fmt), Rounding::Rtn).unwrap());
+    });
+}
+
+fn main() {
+    lotion::util::logging::init();
+    let Ok(engine) = Engine::new(Path::new("artifacts")) else {
+        eprintln!("artifacts/ not built; skipping experiment benches");
+        return;
+    };
+    let mut b = Bench::new(1, 5);
+    workload(&engine, &mut b, "fig2_linreg_lotion_int4", "linreg_d12000", "lotion", "int4", 1.0);
+    workload(&engine, &mut b, "fig2_linreg_qat_int4", "linreg_d12000", "qat", "int4", 0.0);
+    workload(&engine, &mut b, "fig3_linear2_k8_lotion", "linear2_d12000_k8", "lotion", "int4", 1.0);
+    workload(&engine, &mut b, "fig9_lm150_lotion_int4", "lm-150m-sim", "lotion", "int4", 300.0);
+    workload(&engine, &mut b, "fig9_lm150_qat_int4", "lm-150m-sim", "qat", "int4", 0.0);
+    workload(&engine, &mut b, "fig9_lm150_rat_int4", "lm-150m-sim", "rat", "int4", 0.0);
+    workload(&engine, &mut b, "tab1_lm150_lotion_int8", "lm-150m-sim", "lotion", "int8", 300.0);
+    workload(&engine, &mut b, "fig11_lm300_lotion_int4", "lm-300m-sim", "lotion", "int4", 300.0);
+    workload(&engine, &mut b, "fig11_lm300_qat_int4", "lm-300m-sim", "qat", "int4", 0.0);
+    workload(&engine, &mut b, "fig12_lm150_lotion_fp4", "lm-150m-sim", "lotion", "fp4", 300.0);
+    workload(&engine, &mut b, "fig12_lm150_qat_fp4", "lm-150m-sim", "qat", "fp4", 0.0);
+    print!("{}", b.table("experiment workloads (per paper table/figure)"));
+}

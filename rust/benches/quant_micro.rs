@@ -1,0 +1,40 @@
+//! Micro-benchmarks for the rust quantization substrate (the L3 side of
+//! quantized evaluation). Run with `cargo bench` — uses the in-repo
+//! benchlib since criterion is unavailable offline.
+
+use lotion::benchlib::Bench;
+use lotion::quant::{blocks::block_scales, cast_rr, cast_rtn, sigma2, QuantFormat};
+use lotion::util::rng::Rng;
+
+fn main() {
+    let n = 1_000_000;
+    let mut rng = Rng::new(0);
+    let w: Vec<f32> = (0..n).map(|_| rng.normal_f32() * 0.1).collect();
+    let mut b = Bench::new(2, 10);
+
+    for fmt_name in ["int4", "int8", "fp4"] {
+        for block in [0usize, 64] {
+            let fmt = QuantFormat::parse(fmt_name, block).unwrap();
+            let tag = if block == 0 { "tensor" } else { "b64" };
+
+            b.run_with_items(&format!("block_scales/{fmt_name}/{tag}"), Some(n as f64), &mut || {
+                std::hint::black_box(block_scales(&w, &fmt));
+            });
+            b.run_with_items(&format!("cast_rtn/{fmt_name}/{tag}"), Some(n as f64), &mut || {
+                let mut v = w.clone();
+                cast_rtn(&mut v, &fmt);
+                std::hint::black_box(v);
+            });
+            let mut rr_rng = Rng::new(1);
+            b.run_with_items(&format!("cast_rr/{fmt_name}/{tag}"), Some(n as f64), &mut || {
+                let mut v = w.clone();
+                cast_rr(&mut v, &fmt, &mut rr_rng);
+                std::hint::black_box(v);
+            });
+            b.run_with_items(&format!("sigma2/{fmt_name}/{tag}"), Some(n as f64), &mut || {
+                std::hint::black_box(sigma2(&w, &fmt));
+            });
+        }
+    }
+    print!("{}", b.table("quant substrate micro (1M f32 elements)"));
+}

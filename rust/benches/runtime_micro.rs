@@ -1,0 +1,86 @@
+//! PJRT runtime micro-benchmarks: executable call overhead, literal
+//! conversion bandwidth, and train-chunk latency per model preset —
+//! the numbers behind EXPERIMENTS.md §Perf (L3).
+
+use lotion::benchlib::Bench;
+use lotion::config::RunConfig;
+use lotion::coordinator::{DataSource, MetricsLogger, Trainer};
+use lotion::experiments::common::synth_statics;
+use lotion::runtime::literals::{to_host, to_literal};
+use lotion::runtime::Engine;
+use lotion::tensor::HostTensor;
+use std::path::Path;
+
+fn main() {
+    lotion::util::logging::init();
+    let Ok(engine) = Engine::new(Path::new("artifacts")) else {
+        eprintln!("artifacts/ not built; skipping runtime benches");
+        return;
+    };
+    let mut b = Bench::new(2, 10);
+
+    // literal conversion bandwidth (the chunk-boundary copy cost)
+    for n in [1usize << 16, 1 << 22] {
+        let t = HostTensor::from_f32(&[n], vec![1.0; n]);
+        let bytes = (n * 4) as f64;
+        b.run_with_items(&format!("host->literal/{}KiB", n * 4 / 1024), Some(bytes), &mut || {
+            std::hint::black_box(to_literal(&t).unwrap());
+        });
+        let lit = to_literal(&t).unwrap();
+        b.run_with_items(&format!("literal->host/{}KiB", n * 4 / 1024), Some(bytes), &mut || {
+            std::hint::black_box(to_host(&lit).unwrap());
+        });
+    }
+
+    // eval-call latency (tiny program: measures PJRT dispatch overhead)
+    {
+        let entry = engine.manifest.find_eval("linreg_d256").unwrap().clone();
+        let (statics, _, _) = synth_statics(256, 42);
+        let w = to_literal(&HostTensor::zeros(lotion::tensor::DType::F32, &[256])).unwrap();
+        let lam = to_literal(&statics[0].1).unwrap();
+        let wstar = to_literal(&statics[1].1).unwrap();
+        b.run("pjrt_call/eval_linreg_d256", || {
+            std::hint::black_box(engine.call(&entry, &[w.clone(), lam.clone(), wstar.clone()]).unwrap());
+        });
+    }
+
+    // train-chunk latency per preset (K scanned steps per call)
+    for (model, method, steps_label) in [
+        ("linreg_d256", "lotion", "k8"),
+        ("lm-tiny", "lotion", "k4"),
+        ("lm-150m-sim", "lotion", "k8"),
+        ("lm-150m-sim", "qat", "k8"),
+        ("lm-150m-sim", "ptq", "k8"),
+    ] {
+        let mut cfg = RunConfig::default();
+        cfg.model = model.into();
+        cfg.method = method.into();
+        cfg.format = if method == "ptq" { "none".into() } else { "int4".into() };
+        cfg.steps = 10_000; // never reached; we call chunk() directly
+        cfg.lr = 1e-3;
+        let (statics, data) = if model.starts_with("linreg") {
+            let (s, _, _) = synth_statics(256, 42);
+            (s, DataSource::InGraph)
+        } else {
+            let corpus = lotion::data::ZipfMarkovCorpus::generate(300_000, 512, 4, 1);
+            let toks = lotion::data::ByteTokenizer::new().encode(&corpus.bytes);
+            let eval = engine.manifest.find_eval(model).unwrap();
+            let d = eval.inputs.iter().find(|s| matches!(s.role, lotion::runtime::Role::Data)).unwrap();
+            (vec![], DataSource::Tokens(lotion::data::TokenBatcher::new(toks, d.shape[1], d.shape[2] - 1, 0.1)))
+        };
+        let Ok(mut trainer) = Trainer::new(&engine, cfg, statics, data) else {
+            eprintln!("skipping {model}/{method} (artifact missing)");
+            continue;
+        };
+        let k = trainer.steps_per_call() as f64;
+        let mut metrics = MetricsLogger::in_memory();
+        b.run_with_items(
+            &format!("train_chunk/{model}/{method}/{steps_label}"),
+            Some(k),
+            &mut || {
+                trainer.chunk(&mut metrics).unwrap();
+            },
+        );
+    }
+    print!("{}", b.table("PJRT runtime micro"));
+}

@@ -1,0 +1,149 @@
+//! Micro-benchmark harness (criterion is not in the offline vendor
+//! set): warmup + timed iterations, robust summary stats, and a table
+//! printer shared by `cargo bench` targets and `lotion-rs bench`.
+
+use crate::util::stats::Summary;
+use std::time::Instant;
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub std_s: f64,
+    /// optional throughput denominator (elements, steps, bytes...)
+    pub per_iter_items: Option<f64>,
+}
+
+impl BenchResult {
+    pub fn items_per_sec(&self) -> Option<f64> {
+        self.per_iter_items.map(|n| n / self.mean_s)
+    }
+}
+
+pub struct Bench {
+    pub warmup: usize,
+    pub iters: usize,
+    pub results: Vec<BenchResult>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench { warmup: 2, iters: 10, results: Vec::new() }
+    }
+}
+
+impl Bench {
+    pub fn new(warmup: usize, iters: usize) -> Bench {
+        Bench { warmup, iters, ..Default::default() }
+    }
+
+    /// Time `f` (excluding warmup runs). Returns the result and records it.
+    pub fn run(&mut self, name: &str, mut f: impl FnMut()) -> &BenchResult {
+        self.run_with_items(name, None, &mut f)
+    }
+
+    /// Like `run`, with a per-iteration item count for throughput.
+    pub fn run_with_items(
+        &mut self,
+        name: &str,
+        per_iter_items: Option<f64>,
+        f: &mut dyn FnMut(),
+    ) -> &BenchResult {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut s = Summary::new();
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            f();
+            s.add(t0.elapsed().as_secs_f64());
+        }
+        self.results.push(BenchResult {
+            name: name.to_string(),
+            iters: self.iters,
+            mean_s: s.mean(),
+            p50_s: s.median(),
+            p95_s: s.percentile(95.0),
+            std_s: s.std(),
+            per_iter_items,
+        });
+        self.results.last().unwrap()
+    }
+
+    /// Render all recorded results as an aligned table.
+    pub fn table(&self, title: &str) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("\n== {title} ==\n"));
+        out.push_str(&format!(
+            "{:<44} {:>8} {:>12} {:>12} {:>12} {:>14}\n",
+            "benchmark", "iters", "mean", "p50", "p95", "throughput"
+        ));
+        for r in &self.results {
+            let tp = r
+                .items_per_sec()
+                .map(|v| {
+                    if v > 1e6 {
+                        format!("{:.2} M/s", v / 1e6)
+                    } else {
+                        format!("{v:.1} /s")
+                    }
+                })
+                .unwrap_or_else(|| "-".into());
+            out.push_str(&format!(
+                "{:<44} {:>8} {:>12} {:>12} {:>12} {:>14}\n",
+                r.name,
+                r.iters,
+                fmt_time(r.mean_s),
+                fmt_time(r.p50_s),
+                fmt_time(r.p95_s),
+                tp
+            ));
+        }
+        out
+    }
+}
+
+pub fn fmt_time(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2} ms", s * 1e3)
+    } else {
+        format!("{s:.3} s")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_is_sane() {
+        let mut b = Bench::new(1, 5);
+        let r = b.run("sleep 2ms", || std::thread::sleep(std::time::Duration::from_millis(2)));
+        assert!(r.mean_s >= 0.0015, "mean={}", r.mean_s);
+        assert!(r.p95_s >= r.p50_s);
+        assert_eq!(r.iters, 5);
+    }
+
+    #[test]
+    fn throughput() {
+        let mut b = Bench::new(0, 3);
+        let r = b.run_with_items("noop", Some(1000.0), &mut || {});
+        assert!(r.items_per_sec().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn table_formats() {
+        let mut b = Bench::new(0, 2);
+        b.run("x", || {});
+        let t = b.table("test");
+        assert!(t.contains("benchmark") && t.contains('x'));
+        assert_eq!(fmt_time(2e-9), "2.0 ns");
+        assert_eq!(fmt_time(0.5), "500.00 ms");
+    }
+}

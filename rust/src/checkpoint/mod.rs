@@ -1,0 +1,162 @@
+//! Checkpoint archive: a simple length-prefixed binary tensor container
+//! (`.lotn`) holding named tensors + a JSON metadata blob.
+//!
+//! Layout: magic "LOTN1\n" | meta_len:u64 | meta json bytes |
+//!         n_tensors:u64 | per tensor: name_len:u64, name, dtype byte,
+//!         ndim:u64, dims:u64*, data_len:u64, raw little-endian data.
+
+use crate::formats::json::Json;
+use crate::tensor::{DType, HostTensor};
+use anyhow::{anyhow, bail, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 6] = b"LOTN1\n";
+
+pub struct Checkpoint {
+    pub meta: Json,
+    pub tensors: Vec<(String, HostTensor)>,
+}
+
+impl Checkpoint {
+    pub fn new(meta: Json) -> Checkpoint {
+        Checkpoint { meta, tensors: Vec::new() }
+    }
+
+    pub fn push(&mut self, name: &str, t: HostTensor) {
+        self.tensors.push((name.to_string(), t));
+    }
+
+    pub fn get(&self, name: &str) -> Option<&HostTensor> {
+        self.tensors.iter().find(|(n, _)| n == name).map(|(_, t)| t)
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let tmp = path.with_extension("tmp");
+        let mut f = std::io::BufWriter::new(std::fs::File::create(&tmp)?);
+        f.write_all(MAGIC)?;
+        let meta = self.meta.to_string().into_bytes();
+        f.write_all(&(meta.len() as u64).to_le_bytes())?;
+        f.write_all(&meta)?;
+        f.write_all(&(self.tensors.len() as u64).to_le_bytes())?;
+        for (name, t) in &self.tensors {
+            f.write_all(&(name.len() as u64).to_le_bytes())?;
+            f.write_all(name.as_bytes())?;
+            f.write_all(&[dtype_byte(t.dtype)])?;
+            f.write_all(&(t.shape.len() as u64).to_le_bytes())?;
+            for &d in &t.shape {
+                f.write_all(&(d as u64).to_le_bytes())?;
+            }
+            f.write_all(&(t.bytes().len() as u64).to_le_bytes())?;
+            f.write_all(t.bytes())?;
+        }
+        f.flush()?;
+        drop(f);
+        std::fs::rename(&tmp, path)?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Checkpoint> {
+        let mut f = std::io::BufReader::new(
+            std::fs::File::open(path).map_err(|e| anyhow!("opening {path:?}: {e}"))?,
+        );
+        let mut magic = [0u8; 6];
+        f.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("{path:?} is not a LOTN1 checkpoint");
+        }
+        let meta_len = read_u64(&mut f)? as usize;
+        let mut meta_bytes = vec![0u8; meta_len];
+        f.read_exact(&mut meta_bytes)?;
+        let meta = Json::parse(std::str::from_utf8(&meta_bytes)?)?;
+        let n = read_u64(&mut f)? as usize;
+        let mut tensors = Vec::with_capacity(n);
+        for _ in 0..n {
+            let name_len = read_u64(&mut f)? as usize;
+            let mut name = vec![0u8; name_len];
+            f.read_exact(&mut name)?;
+            let mut db = [0u8; 1];
+            f.read_exact(&mut db)?;
+            let dtype = byte_dtype(db[0])?;
+            let ndim = read_u64(&mut f)? as usize;
+            let mut shape = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                shape.push(read_u64(&mut f)? as usize);
+            }
+            let data_len = read_u64(&mut f)? as usize;
+            let mut data = vec![0u8; data_len];
+            f.read_exact(&mut data)?;
+            tensors.push((
+                String::from_utf8(name)?,
+                HostTensor::from_bytes(dtype, &shape, data)?,
+            ));
+        }
+        Ok(Checkpoint { meta, tensors })
+    }
+}
+
+fn dtype_byte(d: DType) -> u8 {
+    match d {
+        DType::F32 => 0,
+        DType::I32 => 1,
+        DType::U32 => 2,
+    }
+}
+
+fn byte_dtype(b: u8) -> Result<DType> {
+    Ok(match b {
+        0 => DType::F32,
+        1 => DType::I32,
+        2 => DType::U32,
+        other => bail!("bad dtype byte {other}"),
+    })
+}
+
+fn read_u64(f: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    f.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::tempdir::TempDir;
+
+    #[test]
+    fn roundtrip() {
+        let dir = TempDir::new();
+        let path = dir.path().join("c.lotn");
+        let mut c = Checkpoint::new(Json::obj(vec![("step", Json::num(42.0))]));
+        c.push("w", HostTensor::from_f32(&[2, 3], vec![1., 2., 3., 4., 5., 6.]));
+        c.push("toks", HostTensor::from_i32(&[2], vec![7, -8]));
+        c.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.meta.get("step").unwrap().as_usize(), Some(42));
+        assert_eq!(back.get("w").unwrap().as_f32(), vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(back.get("toks").unwrap().as_i32(), vec![7, -8]);
+        assert!(back.get("missing").is_none());
+    }
+
+    #[test]
+    fn rejects_non_checkpoint() {
+        let dir = TempDir::new();
+        let path = dir.path().join("junk");
+        std::fs::write(&path, b"not a checkpoint at all").unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+    }
+
+    #[test]
+    fn save_is_atomic_replace() {
+        let dir = TempDir::new();
+        let path = dir.path().join("c.lotn");
+        let c = Checkpoint::new(Json::Null);
+        c.save(&path).unwrap();
+        c.save(&path).unwrap(); // second save overwrites cleanly
+        assert!(Checkpoint::load(&path).is_ok());
+        assert!(!path.with_extension("tmp").exists());
+    }
+}

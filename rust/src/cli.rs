@@ -1,0 +1,120 @@
+//! CLI argument parser substrate (clap is not in the offline vendor
+//! set): subcommand + `--flag value` / `--switch` / positional args.
+
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub subcommand: String,
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, Vec<String>>,
+    switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse `argv[1..]`: first bare word is the subcommand; `--key value`
+    /// pairs become flags (repeatable), `--key` at end-of-args or before
+    /// another `--` is a boolean switch.
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let mut args = Args::default();
+        let mut it = argv.iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if name.is_empty() {
+                    bail!("stray --");
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    args.flags.entry(k.to_string()).or_default().push(v.to_string());
+                    continue;
+                }
+                match it.peek() {
+                    Some(next) if !next.starts_with("--") => {
+                        let v = it.next().unwrap().clone();
+                        args.flags.entry(name.to_string()).or_default().push(v);
+                    }
+                    _ => args.switches.push(name.to_string()),
+                }
+            } else if args.subcommand.is_empty() {
+                args.subcommand = a.clone();
+            } else {
+                args.positional.push(a.clone());
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn from_env() -> Result<Args> {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        Args::parse(&argv)
+    }
+
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).and_then(|v| v.last()).map(|s| s.as_str())
+    }
+
+    pub fn flag_all(&self, name: &str) -> Vec<&str> {
+        self.flags.get(name).map(|v| v.iter().map(|s| s.as_str()).collect()).unwrap_or_default()
+    }
+
+    pub fn required(&self, name: &str) -> Result<&str> {
+        self.flag(name).ok_or_else(|| anyhow!("missing required --{name}"))
+    }
+
+    pub fn switch(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name)
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| anyhow!("--{name}: {e}")),
+        }
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| anyhow!("--{name}: {e}")),
+        }
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.flag(name).unwrap_or(default).to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(&s.split_whitespace().map(String::from).collect::<Vec<_>>()).unwrap()
+    }
+
+    #[test]
+    fn subcommand_flags_positional() {
+        let a = parse("train --config c.toml --steps 100 extra --dry-run");
+        assert_eq!(a.subcommand, "train");
+        assert_eq!(a.flag("config"), Some("c.toml"));
+        assert_eq!(a.usize_or("steps", 0).unwrap(), 100);
+        assert_eq!(a.positional, vec!["extra"]);
+        assert!(a.switch("dry-run"));
+        assert!(!a.switch("verbose"));
+    }
+
+    #[test]
+    fn equals_form_and_repeats() {
+        let a = parse("exp --set a=1 --set b=2");
+        assert_eq!(a.flag_all("set"), vec!["a=1", "b=2"]);
+        assert_eq!(a.flag("set"), Some("b=2"));
+    }
+
+    #[test]
+    fn required_and_defaults() {
+        let a = parse("x");
+        assert!(a.required("missing").is_err());
+        assert_eq!(a.f64_or("lr", 0.5).unwrap(), 0.5);
+        assert_eq!(a.str_or("name", "d"), "d");
+    }
+}

@@ -1,0 +1,11 @@
+//! Config system: TOML-subset parser + typed run configuration.
+//!
+//! `lotion-rs train --config runs/lotion_int4.toml --set train.lr=3e-4`
+//! Files parse into a flat `section.key -> Value` map; [`RunConfig`]
+//! gives the typed view with defaults and validation.
+
+pub mod run;
+pub mod toml;
+
+pub use run::{RunConfig, Schedule};
+pub use toml::{TomlDoc, Value};

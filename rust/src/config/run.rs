@@ -1,0 +1,201 @@
+//! Typed run configuration assembled from a [`TomlDoc`] + CLI overrides.
+
+use super::toml::TomlDoc;
+use crate::quant::Rounding;
+use anyhow::{bail, Result};
+
+/// LR schedule selector (the coordinator computes per-step LRs; the AOT
+/// programs are schedule-agnostic).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Schedule {
+    Constant,
+    /// cosine decay from lr to `final_frac * lr` over the run, with
+    /// linear warmup for the first `warmup` steps
+    Cosine { warmup: usize, final_frac: f64 },
+}
+
+/// One training run: which artifact family, for how long, with what
+/// schedule/eval cadence.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    /// run name (output subdirectory under results_dir)
+    pub name: String,
+    /// model name as it appears in the manifest (e.g. "lm-150m-sim")
+    pub model: String,
+    pub method: String,
+    /// "int4" | "int8" | "fp4" | "none" (ptq trains unquantized)
+    pub format: String,
+    pub steps: usize,
+    pub lr: f64,
+    /// LOTION regularization weight (paper's lambda, §4.3)
+    pub lambda: f64,
+    pub schedule: Schedule,
+    pub seed: u64,
+    /// evaluate quantized val loss every this many steps
+    pub eval_every: usize,
+    /// roundings applied at each eval point
+    pub eval_roundings: Vec<Rounding>,
+    /// eval formats (PTQ evals across all; trained-quantized methods
+    /// typically eval in their training format)
+    pub eval_formats: Vec<String>,
+    pub artifacts_dir: String,
+    pub results_dir: String,
+    pub checkpoint_every: usize,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            name: "run".into(),
+            model: "lm-tiny".into(),
+            method: "lotion".into(),
+            format: "int4".into(),
+            steps: 200,
+            lr: 1e-3,
+            lambda: 1.0,
+            schedule: Schedule::Cosine { warmup: 10, final_frac: 0.1 },
+            seed: 0,
+            eval_every: 50,
+            eval_roundings: vec![Rounding::Rtn, Rounding::Rr],
+            eval_formats: vec![],
+            artifacts_dir: "artifacts".into(),
+            results_dir: "results".into(),
+            checkpoint_every: 0,
+        }
+    }
+}
+
+impl RunConfig {
+    pub fn from_doc(doc: &TomlDoc) -> Result<RunConfig> {
+        let d = RunConfig::default();
+        let schedule = match doc.str_or("train.schedule", "cosine").as_str() {
+            "constant" => Schedule::Constant,
+            "cosine" => Schedule::Cosine {
+                warmup: doc.usize_or("train.warmup", 10),
+                final_frac: doc.f64_or("train.final_frac", 0.1),
+            },
+            other => bail!("unknown schedule {other:?}"),
+        };
+        let mut eval_roundings = Vec::new();
+        if let Some(v) = doc.get("eval.roundings").and_then(|v| v.as_arr().map(|a| a.to_vec())) {
+            for r in v {
+                eval_roundings
+                    .push(Rounding::parse(r.as_str().unwrap_or_default())?);
+            }
+        } else {
+            eval_roundings = d.eval_roundings.clone();
+        }
+        let eval_formats = doc
+            .get("eval.formats")
+            .and_then(|v| v.as_arr().map(|a| a.to_vec()))
+            .map(|a| a.iter().filter_map(|v| v.as_str().map(String::from)).collect())
+            .unwrap_or_default();
+        let cfg = RunConfig {
+            name: doc.str_or("name", &d.name),
+            model: doc.str_or("model", &d.model),
+            method: doc.str_or("method", &d.method),
+            format: doc.str_or("quant.format", &d.format),
+            steps: doc.usize_or("train.steps", d.steps),
+            lr: doc.f64_or("train.lr", d.lr),
+            lambda: doc.f64_or("train.lambda", d.lambda),
+            schedule,
+            seed: doc.i64_or("seed", 0) as u64,
+            eval_every: doc.usize_or("eval.every", d.eval_every),
+            eval_roundings,
+            eval_formats,
+            artifacts_dir: doc.str_or("paths.artifacts", &d.artifacts_dir),
+            results_dir: doc.str_or("paths.results", &d.results_dir),
+            checkpoint_every: doc.usize_or("train.checkpoint_every", 0),
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if !["ptq", "qat", "rat", "lotion"].contains(&self.method.as_str()) {
+            bail!("unknown method {:?}", self.method);
+        }
+        if self.steps == 0 {
+            bail!("train.steps must be > 0");
+        }
+        if self.lr <= 0.0 {
+            bail!("train.lr must be > 0");
+        }
+        if self.method != "ptq" && self.format == "none" {
+            bail!("method {:?} requires a quantization format", self.method);
+        }
+        Ok(())
+    }
+
+    /// Per-step learning rate under the configured schedule.
+    pub fn lr_at(&self, step: usize) -> f64 {
+        match &self.schedule {
+            Schedule::Constant => self.lr,
+            Schedule::Cosine { warmup, final_frac } => {
+                if step < *warmup {
+                    return self.lr * (step + 1) as f64 / *warmup as f64;
+                }
+                let t = (step - warmup) as f64 / (self.steps.saturating_sub(*warmup).max(1)) as f64;
+                let cos = 0.5 * (1.0 + (std::f64::consts::PI * t.min(1.0)).cos());
+                self.lr * (final_frac + (1.0 - final_frac) * cos)
+            }
+        }
+    }
+
+    /// The manifest key of the training artifact for this run.
+    pub fn train_artifact(&self) -> String {
+        let fmt = if self.method == "ptq" { "none" } else { self.format.as_str() };
+        format!("train_{}_{}_{}", self.model, self.method, fmt)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_and_doc() {
+        let doc = TomlDoc::parse(
+            "name = \"t\"\nmodel = \"lm-tiny\"\nmethod = \"qat\"\n[train]\nlr = 0.01\nsteps = 100\n[quant]\nformat = \"int8\"",
+        )
+        .unwrap();
+        let cfg = RunConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.method, "qat");
+        assert_eq!(cfg.format, "int8");
+        assert_eq!(cfg.steps, 100);
+        assert_eq!(cfg.train_artifact(), "train_lm-tiny_qat_int8");
+    }
+
+    #[test]
+    fn ptq_artifact_has_no_format() {
+        let mut cfg = RunConfig::default();
+        cfg.method = "ptq".into();
+        assert_eq!(cfg.train_artifact(), "train_lm-tiny_ptq_none");
+    }
+
+    #[test]
+    fn validation_catches_bad_method() {
+        let doc = TomlDoc::parse("method = \"magic\"").unwrap();
+        assert!(RunConfig::from_doc(&doc).is_err());
+    }
+
+    #[test]
+    fn cosine_schedule_shape() {
+        let mut cfg = RunConfig::default();
+        cfg.steps = 100;
+        cfg.lr = 1.0;
+        cfg.schedule = Schedule::Cosine { warmup: 10, final_frac: 0.1 };
+        assert!(cfg.lr_at(0) < 0.2); // warmup start
+        assert!((cfg.lr_at(9) - 1.0).abs() < 1e-9); // warmup end
+        assert!(cfg.lr_at(55) < 1.0);
+        assert!((cfg.lr_at(99) - 0.1).abs() < 0.03); // decayed to ~final
+    }
+
+    #[test]
+    fn constant_schedule() {
+        let mut cfg = RunConfig::default();
+        cfg.schedule = Schedule::Constant;
+        assert_eq!(cfg.lr_at(0), cfg.lr);
+        assert_eq!(cfg.lr_at(1000), cfg.lr);
+    }
+}

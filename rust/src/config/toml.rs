@@ -1,0 +1,284 @@
+//! TOML-subset parser (serde/toml crates unavailable offline).
+//!
+//! Supported grammar — everything the run configs need:
+//!   [section] / [a.b] headers, `key = value` pairs, comments (#),
+//!   strings ("..." with basic escapes), integers, floats (incl.
+//!   scientific), booleans, homogeneous arrays of the above.
+
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Value]> {
+        match self {
+            Value::Arr(a) => Some(a),
+            _ => None,
+        }
+    }
+}
+
+/// A parsed document: flat `"section.key" -> Value` map (keys outside
+/// any section are stored bare).
+#[derive(Clone, Debug, Default)]
+pub struct TomlDoc {
+    pub entries: BTreeMap<String, Value>,
+}
+
+impl TomlDoc {
+    pub fn parse(text: &str) -> Result<TomlDoc> {
+        let mut doc = TomlDoc::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| anyhow!("line {}: unterminated section", lineno + 1))?
+                    .trim();
+                if name.is_empty() {
+                    bail!("line {}: empty section name", lineno + 1);
+                }
+                section = name.to_string();
+                continue;
+            }
+            let eq = line
+                .find('=')
+                .ok_or_else(|| anyhow!("line {}: expected key = value", lineno + 1))?;
+            let key = line[..eq].trim();
+            if key.is_empty() {
+                bail!("line {}: empty key", lineno + 1);
+            }
+            let value = parse_value(line[eq + 1..].trim())
+                .map_err(|e| anyhow!("line {}: {e}", lineno + 1))?;
+            let full = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            doc.entries.insert(full, value);
+        }
+        Ok(doc)
+    }
+
+    pub fn from_file(path: &std::path::Path) -> Result<TomlDoc> {
+        TomlDoc::parse(
+            &std::fs::read_to_string(path).map_err(|e| anyhow!("reading {path:?}: {e}"))?,
+        )
+    }
+
+    /// Apply a `--set section.key=value` override (value re-parsed with
+    /// the TOML value grammar; bare words become strings).
+    pub fn set_override(&mut self, spec: &str) -> Result<()> {
+        let eq = spec
+            .find('=')
+            .ok_or_else(|| anyhow!("override must be key=value: {spec:?}"))?;
+        let key = spec[..eq].trim().to_string();
+        let vtext = spec[eq + 1..].trim();
+        let value = parse_value(vtext).unwrap_or_else(|_| Value::Str(vtext.to_string()));
+        self.entries.insert(key, value);
+        Ok(())
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.entries.get(key)
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).and_then(|v| v.as_str().map(String::from)).unwrap_or_else(|| default.into())
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.as_f64()).unwrap_or(default)
+    }
+
+    pub fn i64_or(&self, key: &str, default: i64) -> i64 {
+        self.get(key).and_then(|v| v.as_i64()).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.i64_or(key, default as i64) as usize
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(|v| v.as_bool()).unwrap_or(default)
+    }
+
+    pub fn f64_list(&self, key: &str) -> Option<Vec<f64>> {
+        self.get(key)?.as_arr().map(|a| a.iter().filter_map(|v| v.as_f64()).collect())
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' inside a quoted string does not start a comment
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(text: &str) -> Result<Value> {
+    if text.is_empty() {
+        bail!("empty value");
+    }
+    if let Some(rest) = text.strip_prefix('"') {
+        let inner = rest.strip_suffix('"').ok_or_else(|| anyhow!("unterminated string"))?;
+        return Ok(Value::Str(
+            inner.replace("\\\"", "\"").replace("\\n", "\n").replace("\\\\", "\\"),
+        ));
+    }
+    if let Some(rest) = text.strip_prefix('[') {
+        let inner = rest.strip_suffix(']').ok_or_else(|| anyhow!("unterminated array"))?;
+        let mut items = Vec::new();
+        if !inner.trim().is_empty() {
+            for part in split_top_level(inner) {
+                items.push(parse_value(part.trim())?);
+            }
+        }
+        return Ok(Value::Arr(items));
+    }
+    match text {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = text.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = text.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    bail!("cannot parse value {text:?}")
+}
+
+/// Split on commas not nested inside brackets/strings.
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut depth = 0;
+    let mut in_str = false;
+    let mut start = 0;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth -= 1,
+            ',' if !in_str && depth == 0 => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# run config
+name = "fig2"          # inline comment
+[train]
+lr = 3e-4
+steps = 400
+lrs = [0.1, 0.3, 1.0]
+resume = false
+[quant]
+format = "int4"
+block_size = 0
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let d = TomlDoc::parse(SAMPLE).unwrap();
+        assert_eq!(d.str_or("name", ""), "fig2");
+        assert_eq!(d.f64_or("train.lr", 0.0), 3e-4);
+        assert_eq!(d.i64_or("train.steps", 0), 400);
+        assert_eq!(d.bool_or("train.resume", true), false);
+        assert_eq!(d.f64_list("train.lrs").unwrap(), vec![0.1, 0.3, 1.0]);
+        assert_eq!(d.str_or("quant.format", ""), "int4");
+    }
+
+    #[test]
+    fn overrides() {
+        let mut d = TomlDoc::parse(SAMPLE).unwrap();
+        d.set_override("train.lr=0.5").unwrap();
+        d.set_override("quant.format=fp4").unwrap();
+        assert_eq!(d.f64_or("train.lr", 0.0), 0.5);
+        assert_eq!(d.str_or("quant.format", ""), "fp4");
+        assert!(d.set_override("no-equals").is_err());
+    }
+
+    #[test]
+    fn hash_inside_string() {
+        let d = TomlDoc::parse(r##"k = "a#b" # real comment"##).unwrap();
+        assert_eq!(d.str_or("k", ""), "a#b");
+    }
+
+    #[test]
+    fn errors_are_line_numbered() {
+        let err = TomlDoc::parse("x = 1\ny 2").unwrap_err().to_string();
+        assert!(err.contains("line 2"), "{err}");
+    }
+
+    #[test]
+    fn nested_arrays() {
+        let d = TomlDoc::parse("a = [[1, 2], [3]]").unwrap();
+        let a = d.get("a").unwrap().as_arr().unwrap();
+        assert_eq!(a.len(), 2);
+        assert_eq!(a[0].as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let d = TomlDoc::parse("").unwrap();
+        assert_eq!(d.usize_or("missing", 7), 7);
+    }
+}

@@ -1,0 +1,111 @@
+//! Quantized evaluation — the paper's measurement protocol (§4):
+//! snapshot the FP32 weights, cast the quantized subset with RTN or
+//! randomized rounding *in rust* (the `quant` substrate), and run the
+//! FP32 eval executable on the cast weights.
+
+use crate::quant::{cast, QuantFormat, Rounding};
+use crate::runtime::literals::{self, Literal};
+use crate::runtime::manifest::{ArtifactEntry, Role};
+use crate::runtime::Engine;
+use crate::util::rng::Rng;
+use anyhow::{anyhow, Result};
+
+use super::metrics::MetricsLogger;
+use super::trainer::{DataSource, Trainer};
+
+pub struct Evaluator {
+    pub entry: ArtifactEntry,
+    /// eval RNG for RR casts and val batches — independent of training
+    pub rng: Rng,
+    /// fixed val chunk per evaluator (same data at every eval point, so
+    /// curves are comparable across steps and methods)
+    val_tokens: Option<Literal>,
+}
+
+impl Evaluator {
+    pub fn new(engine: &Engine, model: &str, seed: u64) -> Result<Evaluator> {
+        let entry = engine.manifest.find_eval(model)?.clone();
+        Ok(Evaluator { entry, rng: Rng::new(seed ^ 0xE7A1_5EED), val_tokens: None })
+    }
+
+    /// Evaluate the current weights with a given cast. `format == None`
+    /// means FP32 (no cast).
+    pub fn eval_cast(
+        &mut self,
+        trainer: &Trainer,
+        format: Option<&QuantFormat>,
+        rounding: Rounding,
+    ) -> Result<f64> {
+        let engine = trainer.engine;
+        let specs = self.entry.inputs.clone();
+        // snapshot params (literals are cheap clones of host buffers)
+        let mut args: Vec<Literal> = Vec::with_capacity(specs.len());
+        for spec in &specs {
+            let lit = match spec.role {
+                Role::Param => {
+                    let lit = trainer.state.literal(&spec.name)?;
+                    if let Some(fmt) = format {
+                        if trainer.quantized_keys().iter().any(|k| k == &spec.name) {
+                            let mut host = literals::to_host(lit)?;
+                            let mut rng = self.rng.fork(1);
+                            host.map_f32_inplace(|w| cast(w, fmt, rounding, &mut rng));
+                            literals::to_literal(&host)?
+                        } else {
+                            lit.clone()
+                        }
+                    } else {
+                        lit.clone()
+                    }
+                }
+                Role::Static => trainer
+                    .statics
+                    .iter()
+                    .find(|(n, _)| n == &spec.name)
+                    .map(|(_, l)| l.clone())
+                    .ok_or_else(|| anyhow!("missing static {:?}", spec.name))?,
+                Role::Data => self.val_chunk(trainer)?,
+                other => return Err(anyhow!("unexpected eval input role {other:?}")),
+            };
+            args.push(lit);
+        }
+        let out = engine.call_to_host(&self.entry, &args, &["val_loss"])?;
+        Ok(out[0].scalar_to_f32() as f64)
+    }
+
+    fn val_chunk(&mut self, trainer: &Trainer) -> Result<Literal> {
+        if let Some(l) = &self.val_tokens {
+            return Ok(l.clone());
+        }
+        let ke = self.entry.eval_batches.max(1);
+        let lit = match &trainer.data {
+            DataSource::Tokens(b) => literals::to_literal(&b.val_chunk(ke, &mut self.rng))?,
+            DataSource::InGraph => return Err(anyhow!("eval artifact wants data for a synthetic task")),
+        };
+        self.val_tokens = Some(lit.clone());
+        Ok(lit)
+    }
+
+    /// The paper's standard eval battery at the current step: FP32 loss
+    /// plus quantized loss per (format × rounding) in the run config.
+    pub fn eval_all(&mut self, trainer: &Trainer, metrics: &mut MetricsLogger) -> Result<()> {
+        let fp32 = self.eval_cast(trainer, None, Rounding::Rtn)?;
+        metrics.log_eval(trainer.step, "fp32", "none", fp32);
+        let formats: Vec<String> = if trainer.cfg.eval_formats.is_empty() {
+            if trainer.cfg.format == "none" {
+                vec!["int4".into(), "int8".into()]
+            } else {
+                vec![trainer.cfg.format.clone()]
+            }
+        } else {
+            trainer.cfg.eval_formats.clone()
+        };
+        for fname in &formats {
+            let fmt = QuantFormat::parse(fname, 0)?;
+            for &r in &trainer.cfg.eval_roundings {
+                let loss = self.eval_cast(trainer, Some(&fmt), r)?;
+                metrics.log_eval(trainer.step, fname, r.name(), loss);
+            }
+        }
+        Ok(())
+    }
+}

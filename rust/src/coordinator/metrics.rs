@@ -1,0 +1,115 @@
+//! Run metrics: append-only JSONL (one object per event) + in-memory
+//! rows for end-of-run summaries.
+
+use crate::formats::json::Json;
+use anyhow::Result;
+use std::io::Write;
+use std::path::Path;
+
+#[derive(Clone, Debug)]
+pub struct EvalPoint {
+    pub step: usize,
+    pub format: String,
+    pub rounding: String,
+    pub val_loss: f64,
+}
+
+pub struct MetricsLogger {
+    file: Option<std::fs::File>,
+    pub train_losses: Vec<(usize, f64)>,
+    pub eval_points: Vec<EvalPoint>,
+}
+
+impl MetricsLogger {
+    pub fn to_file(path: &Path) -> Result<MetricsLogger> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        Ok(MetricsLogger {
+            file: Some(std::fs::File::create(path)?),
+            train_losses: Vec::new(),
+            eval_points: Vec::new(),
+        })
+    }
+
+    pub fn in_memory() -> MetricsLogger {
+        MetricsLogger { file: None, train_losses: Vec::new(), eval_points: Vec::new() }
+    }
+
+    fn emit(&mut self, j: Json) {
+        if let Some(f) = &mut self.file {
+            let _ = writeln!(f, "{}", j.to_string());
+        }
+    }
+
+    pub fn log_train(&mut self, step: usize, base_loss: f64, total_loss: f64, lr: f64, wall_s: f64) {
+        self.train_losses.push((step, base_loss));
+        self.emit(Json::obj(vec![
+            ("kind", Json::str("train")),
+            ("step", Json::num(step as f64)),
+            ("loss", Json::num(base_loss)),
+            ("total_loss", Json::num(total_loss)),
+            ("lr", Json::num(lr)),
+            ("wall_s", Json::num(wall_s)),
+        ]));
+    }
+
+    pub fn log_eval(&mut self, step: usize, format: &str, rounding: &str, val_loss: f64) {
+        self.eval_points.push(EvalPoint {
+            step,
+            format: format.into(),
+            rounding: rounding.into(),
+            val_loss,
+        });
+        self.emit(Json::obj(vec![
+            ("kind", Json::str("eval")),
+            ("step", Json::num(step as f64)),
+            ("format", Json::str(format)),
+            ("rounding", Json::str(rounding)),
+            ("val_loss", Json::num(val_loss)),
+        ]));
+    }
+
+    /// Best (minimum) quantized val loss for a (format, rounding) pair.
+    pub fn best_eval(&self, format: &str, rounding: &str) -> Option<f64> {
+        self.eval_points
+            .iter()
+            .filter(|p| p.format == format && p.rounding == rounding)
+            .map(|p| p.val_loss)
+            .fold(None, |m, v| Some(m.map_or(v, |m: f64| m.min(v))))
+    }
+
+    /// Final (last-step) quantized val loss for a (format, rounding) pair.
+    pub fn final_eval(&self, format: &str, rounding: &str) -> Option<f64> {
+        self.eval_points
+            .iter()
+            .filter(|p| p.format == format && p.rounding == rounding)
+            .last()
+            .map(|p| p.val_loss)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::tempdir::TempDir;
+
+    #[test]
+    fn logs_jsonl_and_tracks_best() {
+        let dir = TempDir::new();
+        let path = dir.path().join("run.jsonl");
+        let mut m = MetricsLogger::to_file(&path).unwrap();
+        m.log_train(1, 2.0, 2.5, 0.1, 0.01);
+        m.log_eval(1, "int4", "rtn", 3.0);
+        m.log_eval(2, "int4", "rtn", 2.5);
+        m.log_eval(2, "int4", "rr", 2.7);
+        drop(m.file.take());
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 4);
+        let first = Json::parse(text.lines().next().unwrap()).unwrap();
+        assert_eq!(first.get("kind").unwrap().as_str(), Some("train"));
+        assert_eq!(m.best_eval("int4", "rtn"), Some(2.5));
+        assert_eq!(m.final_eval("int4", "rr"), Some(2.7));
+        assert_eq!(m.best_eval("int8", "rtn"), None);
+    }
+}

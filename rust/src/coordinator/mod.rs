@@ -1,0 +1,17 @@
+//! Training coordination: the L3 control plane.
+//!
+//! * [`trainer`] — chunked train loop over a scanned artifact.
+//! * [`evaluator`] — quantized evaluation (RTN/RR casts in rust,
+//!   FP32 eval executable).
+//! * [`metrics`] — JSONL/CSV run logs.
+//! * [`sweep`] — learning-rate sweeps (best-per-method, as the paper
+//!   reports).
+
+pub mod evaluator;
+pub mod metrics;
+pub mod sweep;
+pub mod trainer;
+
+pub use evaluator::Evaluator;
+pub use metrics::MetricsLogger;
+pub use trainer::{DataSource, Trainer};

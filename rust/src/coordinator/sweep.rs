@@ -1,0 +1,89 @@
+//! Learning-rate sweeps. The paper reports the best run per method
+//! (App. A.5 grids); this module runs a grid of RunConfigs and selects
+//! by final quantized validation loss.
+
+use crate::config::RunConfig;
+use crate::runtime::Engine;
+use anyhow::Result;
+
+use super::evaluator::Evaluator;
+use super::metrics::MetricsLogger;
+use super::trainer::{DataSource, Trainer};
+use crate::tensor::HostTensor;
+
+/// Outcome of one run inside a sweep.
+pub struct SweepResult {
+    pub lr: f64,
+    pub metrics: MetricsLogger,
+    /// final quantized val loss in the run's primary (format, rounding)
+    pub score: f64,
+    pub diverged: bool,
+}
+
+/// Run `base` at each LR; score by final quantized val loss under
+/// (`score_format`, `score_rounding`). Diverged runs score +inf.
+/// `inputs` rebuilds (statics, data source) per run so every LR sees
+/// identical data streams.
+pub fn lr_sweep(
+    engine: &Engine,
+    base: &RunConfig,
+    lrs: &[f64],
+    score_format: &str,
+    score_rounding: &str,
+    inputs: &dyn Fn() -> Result<(Vec<(String, HostTensor)>, DataSource)>,
+) -> Result<Vec<SweepResult>> {
+    let mut results = Vec::new();
+    for &lr in lrs {
+        let mut cfg = base.clone();
+        cfg.lr = lr;
+        cfg.name = format!("{}_lr{lr:.0e}", base.name);
+        let (statics, data) = inputs()?;
+        let mut metrics = MetricsLogger::in_memory();
+        let outcome = (|| -> Result<()> {
+            let mut trainer = Trainer::new(engine, cfg.clone(), statics, data)?;
+            let mut eval = Evaluator::new(engine, &cfg.model, cfg.seed)?;
+            trainer.run(&mut eval, &mut metrics)
+        })();
+        let diverged = outcome.is_err();
+        if let Err(e) = &outcome {
+            crate::warn_!("sweep lr={lr:.1e}: {e}");
+        }
+        let score = if diverged {
+            f64::INFINITY
+        } else {
+            metrics
+                .final_eval(score_format, score_rounding)
+                .unwrap_or(f64::INFINITY)
+        };
+        crate::info!("sweep {} lr={lr:.2e} -> score {score:.5}", base.name);
+        results.push(SweepResult { lr, metrics, score, diverged });
+    }
+    Ok(results)
+}
+
+/// Index of the best (lowest-score) run.
+pub fn best(results: &[SweepResult]) -> Option<usize> {
+    results
+        .iter()
+        .enumerate()
+        .min_by(|a, b| a.1.score.partial_cmp(&b.1.score).unwrap())
+        .map(|(i, _)| i)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn best_picks_minimum_and_skips_nan_free() {
+        let mk = |score| SweepResult {
+            lr: 0.1,
+            metrics: MetricsLogger::in_memory(),
+            score,
+            diverged: false,
+        };
+        let rs = vec![mk(2.0), mk(0.5), mk(f64::INFINITY)];
+        assert_eq!(best(&rs), Some(1));
+        assert_eq!(best(&[]), None);
+    }
+}

@@ -1,0 +1,153 @@
+//! The chunked training loop: one PJRT call runs `steps_per_call`
+//! optimizer steps (a `lax.scan` inside the artifact); state
+//! round-trips as literals between chunks (DESIGN.md §2).
+
+use crate::config::RunConfig;
+use crate::data::TokenBatcher;
+use crate::runtime::literals::{self, Literal};
+use crate::runtime::manifest::{ArtifactEntry, Role};
+use crate::runtime::{state, Engine, TrainState};
+use crate::tensor::HostTensor;
+use crate::util::rng::Rng;
+use anyhow::{anyhow, bail, Result};
+use std::time::Instant;
+
+use super::evaluator::Evaluator;
+use super::metrics::MetricsLogger;
+
+/// Where per-step batches come from.
+pub enum DataSource {
+    /// synthetic tasks sample in-graph from the PJRT key
+    InGraph,
+    /// token LM: host-side batcher supplies `[K, B, T+1]` chunks
+    Tokens(TokenBatcher),
+}
+
+pub struct Trainer<'e> {
+    pub engine: &'e Engine,
+    pub cfg: RunConfig,
+    pub train: ArtifactEntry,
+    pub state: TrainState,
+    /// named non-trained inputs (lam, wstar) — empty for the LM
+    pub statics: Vec<(String, Literal)>,
+    pub data: DataSource,
+    pub rng: Rng,
+    pub step: usize,
+}
+
+impl<'e> Trainer<'e> {
+    /// Build a trainer: resolve artifacts, init params via the init
+    /// program, zero the optimizer state, set up statics.
+    pub fn new(
+        engine: &'e Engine,
+        cfg: RunConfig,
+        statics: Vec<(String, HostTensor)>,
+        data: DataSource,
+    ) -> Result<Trainer<'e>> {
+        let train = engine
+            .manifest
+            .find_train(&cfg.model, &cfg.method, &cfg.format)?
+            .clone();
+        let init = engine.manifest.find_init(&cfg.model)?.clone();
+        let mut rng = Rng::new(cfg.seed);
+        let state = state::init_train_state(engine, &train, &init, rng.jax_key())?;
+        let statics = statics
+            .into_iter()
+            .map(|(n, t)| Ok((n, literals::to_literal(&t)?)))
+            .collect::<Result<Vec<_>>>()?;
+        // validate statics against the manifest up front
+        for s in train.input_specs(Role::Static) {
+            if !statics.iter().any(|(n, _)| n == &s.name) {
+                bail!("missing static input {:?} for {}", s.name, train.name);
+            }
+        }
+        Ok(Trainer { engine, cfg, train, state, statics, data, rng, step: 0 })
+    }
+
+    pub fn steps_per_call(&self) -> usize {
+        self.train.steps_per_call.max(1)
+    }
+
+    /// Assemble the positional argument list for one chunk call.
+    fn build_args(&mut self) -> Result<Vec<Literal>> {
+        let k = self.steps_per_call();
+        let mut args = Vec::with_capacity(self.train.inputs.len());
+        let mut state_iter = self.state.literals().iter();
+        let lrs: Vec<f32> = (0..k).map(|i| self.cfg.lr_at(self.step + i) as f32).collect();
+        for spec in self.train.inputs.clone() {
+            let lit = match spec.role {
+                Role::Param | Role::Opt => state_iter
+                    .next()
+                    .ok_or_else(|| anyhow!("state exhausted at {:?}", spec.name))?
+                    .clone(),
+                Role::Static => self
+                    .statics
+                    .iter()
+                    .find(|(n, _)| n == &spec.name)
+                    .map(|(_, l)| l.clone())
+                    .ok_or_else(|| anyhow!("missing static {:?}", spec.name))?,
+                Role::Data => match &mut self.data {
+                    DataSource::Tokens(b) => {
+                        literals::to_literal(&b.train_chunk(k, &mut self.rng))?
+                    }
+                    DataSource::InGraph => bail!("{} wants data input", self.train.name),
+                },
+                Role::Key => {
+                    let key = self.rng.jax_key();
+                    literals::to_literal(&HostTensor::from_u32(&[2], key.to_vec()))?
+                }
+                Role::Scalar => match spec.name.as_str() {
+                    "lrs" => literals::to_literal(&HostTensor::from_f32(&[k], lrs.clone()))?,
+                    "lam_reg" => {
+                        literals::to_literal(&HostTensor::scalar_f32(self.cfg.lambda as f32))?
+                    }
+                    other => bail!("unknown scalar input {other:?}"),
+                },
+                Role::Metric => bail!("metric role on an input"),
+            };
+            args.push(lit);
+        }
+        Ok(args)
+    }
+
+    /// Run one chunk (K steps). Returns (mean base loss, mean total loss).
+    pub fn chunk(&mut self, metrics: &mut MetricsLogger) -> Result<(f64, f64)> {
+        let t0 = Instant::now();
+        let args = self.build_args()?;
+        let mut out = self.engine.call(&self.train, &args)?;
+        let n_metrics = 2; // base_losses, total_losses
+        let metrics_start = out.len() - n_metrics;
+        let totals = literals::to_host(&out[metrics_start + 1])?.as_f32();
+        let bases = literals::to_host(&out[metrics_start])?.as_f32();
+        out.truncate(metrics_start);
+        self.state.adopt(&mut out)?;
+        let k = self.steps_per_call();
+        self.step += k;
+        let base = bases.iter().map(|&v| v as f64).sum::<f64>() / bases.len() as f64;
+        let total = totals.iter().map(|&v| v as f64).sum::<f64>() / totals.len() as f64;
+        if !base.is_finite() {
+            bail!("{}: loss diverged (nan/inf) at step {}", self.train.name, self.step);
+        }
+        metrics.log_train(self.step, base, total, self.cfg.lr_at(self.step), t0.elapsed().as_secs_f64());
+        Ok((base, total))
+    }
+
+    /// Full run: chunks until `cfg.steps`, evaluating per `eval_every`.
+    pub fn run(&mut self, eval: &mut Evaluator, metrics: &mut MetricsLogger) -> Result<()> {
+        let mut next_eval = 0usize;
+        while self.step < self.cfg.steps {
+            if self.step >= next_eval {
+                eval.eval_all(self, metrics)?;
+                next_eval = self.step + self.cfg.eval_every.max(1);
+            }
+            self.chunk(metrics)?;
+        }
+        eval.eval_all(self, metrics)?;
+        Ok(())
+    }
+
+    /// The quantized-subset tensor names (from the manifest).
+    pub fn quantized_keys(&self) -> &[String] {
+        &self.train.quantized
+    }
+}

@@ -1,0 +1,122 @@
+//! Zipf–Markov synthetic corpus — the offline stand-in for C4
+//! (DESIGN.md §6). A first-order Markov chain over a Zipfian "word"
+//! vocabulary rendered to bytes. The chain gives real sequential
+//! structure (so an LM has something to learn and validation loss
+//! separates methods), while staying fully deterministic from a seed.
+
+use crate::util::rng::Rng;
+
+pub struct ZipfMarkovCorpus {
+    /// rendered byte stream
+    pub bytes: Vec<u8>,
+}
+
+/// Sample a Zipf(s)-distributed rank in [0, n) via inverse CDF.
+fn zipf_sample(cdf: &[f64], rng: &mut Rng) -> usize {
+    let u = rng.uniform();
+    match cdf.binary_search_by(|p| p.partial_cmp(&u).unwrap()) {
+        Ok(i) => i,
+        Err(i) => i.min(cdf.len() - 1),
+    }
+}
+
+impl ZipfMarkovCorpus {
+    /// Generate `n_bytes` of text: `vocab` synthetic words with Zipfian
+    /// unigram frequencies, chained by a per-word sparse transition
+    /// table (each word prefers `branch` successors), space-separated,
+    /// sentence breaks every ~16 words.
+    pub fn generate(n_bytes: usize, vocab: usize, branch: usize, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        // synthetic word strings: 2-8 lowercase letters, deterministic
+        let words: Vec<Vec<u8>> = (0..vocab)
+            .map(|_| {
+                let len = 2 + rng.below(7) as usize;
+                (0..len).map(|_| b'a' + rng.below(26) as u8).collect()
+            })
+            .collect();
+        // Zipf CDF over ranks
+        let s = 1.1;
+        let mut weights: Vec<f64> = (1..=vocab).map(|i| 1.0 / (i as f64).powf(s)).collect();
+        let total: f64 = weights.iter().sum();
+        let mut acc = 0.0;
+        for w in weights.iter_mut() {
+            acc += *w / total;
+            *w = acc;
+        }
+        let cdf = weights;
+        // sparse successor table: word -> `branch` candidate next-words
+        let succ: Vec<Vec<usize>> = (0..vocab)
+            .map(|_| (0..branch).map(|_| zipf_sample(&cdf, &mut rng)).collect())
+            .collect();
+
+        let mut bytes = Vec::with_capacity(n_bytes + 16);
+        let mut cur = zipf_sample(&cdf, &mut rng);
+        let mut words_in_sentence = 0;
+        while bytes.len() < n_bytes {
+            bytes.extend_from_slice(&words[cur]);
+            words_in_sentence += 1;
+            if words_in_sentence >= 8 + rng.below(16) as usize {
+                bytes.extend_from_slice(b". ");
+                words_in_sentence = 0;
+                cur = zipf_sample(&cdf, &mut rng);
+            } else {
+                bytes.push(b' ');
+                // mostly follow the chain; occasionally re-draw globally
+                cur = if rng.uniform() < 0.85 {
+                    succ[cur][rng.below(branch as u64) as usize]
+                } else {
+                    zipf_sample(&cdf, &mut rng)
+                };
+            }
+        }
+        bytes.truncate(n_bytes);
+        ZipfMarkovCorpus { bytes }
+    }
+
+    pub fn len(&self) -> usize {
+        self.bytes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.bytes.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_sized() {
+        let a = ZipfMarkovCorpus::generate(10_000, 512, 4, 7);
+        let b = ZipfMarkovCorpus::generate(10_000, 512, 4, 7);
+        assert_eq!(a.bytes, b.bytes);
+        assert_eq!(a.len(), 10_000);
+        let c = ZipfMarkovCorpus::generate(10_000, 512, 4, 8);
+        assert_ne!(a.bytes, c.bytes);
+    }
+
+    #[test]
+    fn is_ascii_text() {
+        let c = ZipfMarkovCorpus::generate(5_000, 256, 4, 1);
+        assert!(c.bytes.iter().all(|&b| b.is_ascii_lowercase() || b == b' ' || b == b'.'));
+    }
+
+    #[test]
+    fn has_markov_structure() {
+        // bigram entropy must be well below unigram entropy — i.e. the
+        // chain is learnable, which is what the LM experiments rely on.
+        let c = ZipfMarkovCorpus::generate(200_000, 256, 4, 3);
+        let mut uni = [0f64; 256];
+        let mut bi = std::collections::HashMap::new();
+        for w in c.bytes.windows(2) {
+            uni[w[0] as usize] += 1.0;
+            *bi.entry((w[0], w[1])).or_insert(0f64) += 1.0;
+        }
+        let n = (c.len() - 1) as f64;
+        let h1: f64 = uni.iter().filter(|&&c| c > 0.0).map(|&c| -(c / n) * (c / n).log2()).sum();
+        let h2joint: f64 = bi.values().map(|&c| -(c / n) * (c / n).log2()).sum();
+        let h_cond = h2joint - h1;
+        assert!(h_cond < h1 * 0.85, "h1={h1:.3} h_cond={h_cond:.3}");
+    }
+}

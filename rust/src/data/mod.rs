@@ -1,0 +1,14 @@
+//! Data pipeline substrates: synthetic regression streams (§4.1/§4.2),
+//! a Zipf–Markov synthetic corpus + byte tokenizer for the LM
+//! experiments (the paper's C4 corpus is substituted per DESIGN.md §6),
+//! and the token batcher feeding the scanned train programs.
+
+pub mod batcher;
+pub mod corpus;
+pub mod synth;
+pub mod tokenizer;
+
+pub use batcher::TokenBatcher;
+pub use corpus::ZipfMarkovCorpus;
+pub use synth::{power_law_spectrum, sample_wstar};
+pub use tokenizer::ByteTokenizer;

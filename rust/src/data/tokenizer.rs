@@ -1,0 +1,67 @@
+//! Byte-level tokenizer: identity over bytes (vocab 256), plus corpus
+//! statistics. The LM presets use vocab=256, so token ids == bytes;
+//! the type exists to give the pipeline a seam where a learned
+//! subword vocabulary would slot in.
+
+#[derive(Clone, Debug)]
+pub struct ByteTokenizer {
+    pub vocab_size: usize,
+}
+
+impl Default for ByteTokenizer {
+    fn default() -> Self {
+        ByteTokenizer { vocab_size: 256 }
+    }
+}
+
+impl ByteTokenizer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn encode(&self, text: &[u8]) -> Vec<i32> {
+        text.iter().map(|&b| b as i32).collect()
+    }
+
+    pub fn decode(&self, tokens: &[i32]) -> Vec<u8> {
+        tokens.iter().map(|&t| (t.clamp(0, 255)) as u8).collect()
+    }
+
+    /// Unigram distribution over the corpus (used by tests and the
+    /// data-quality report).
+    pub fn unigram_counts(&self, text: &[u8]) -> Vec<u64> {
+        let mut counts = vec![0u64; self.vocab_size];
+        for &b in text {
+            counts[b as usize] += 1;
+        }
+        counts
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let t = ByteTokenizer::new();
+        let text = b"hello world.";
+        assert_eq!(t.decode(&t.encode(text)), text);
+    }
+
+    #[test]
+    fn tokens_in_vocab() {
+        let t = ByteTokenizer::new();
+        for tok in t.encode(b"anything at all \xff\x00") {
+            assert!((0..256).contains(&tok));
+        }
+    }
+
+    #[test]
+    fn unigram_counts_sum() {
+        let t = ByteTokenizer::new();
+        let counts = t.unigram_counts(b"aab");
+        assert_eq!(counts[b'a' as usize], 2);
+        assert_eq!(counts.iter().sum::<u64>(), 3);
+    }
+}

@@ -1,0 +1,78 @@
+//! Ablation: shared-scale block size (§2.1's "fine-grained" design
+//! axis). Trains one FP32 linreg model, then measures quantized val
+//! loss casting the same checkpoint with per-tensor vs progressively
+//! finer block scales, across formats and roundings.
+//!
+//! The paper's experiments use per-tensor scales; this ablation
+//! quantifies what fine-grained blocks buy (smaller blocks → smaller
+//! absmax per block → lower RR variance s_B^2 Δ(1-Δ)).
+
+use crate::config::{RunConfig, Schedule};
+use crate::coordinator::{DataSource, Evaluator, MetricsLogger, Trainer};
+use crate::formats::csv::CsvWriter;
+use crate::quant::{cast, QuantFormat, Rounding};
+use crate::runtime::Engine;
+use crate::util::rng::Rng;
+use anyhow::Result;
+use std::path::Path;
+
+use super::common::{scaled, synth_statics};
+
+const D: usize = 12000;
+const BLOCKS: [usize; 5] = [0, 1024, 256, 64, 16];
+
+pub fn run(engine: &Engine, out_dir: &Path) -> Result<()> {
+    std::fs::create_dir_all(out_dir)?;
+    // one FP32 training run (PTQ-style master weights)
+    let mut cfg = RunConfig::default();
+    cfg.name = "ablation_base".into();
+    cfg.model = format!("linreg_d{D}");
+    cfg.method = "ptq".into();
+    cfg.format = "none".into();
+    cfg.eval_formats = vec!["int4".into()];
+    cfg.steps = scaled(1500);
+    cfg.lr = 0.6;
+    cfg.eval_every = cfg.steps;
+    cfg.schedule = Schedule::Cosine { warmup: 0, final_frac: 0.05 };
+    let (statics, _, _) = synth_statics(D, 42);
+    let mut trainer = Trainer::new(engine, cfg.clone(), statics, DataSource::InGraph)?;
+    let mut eval = Evaluator::new(engine, &cfg.model, 0)?;
+    let mut metrics = MetricsLogger::in_memory();
+    trainer.run(&mut eval, &mut metrics)?;
+    let fp32 = metrics.final_eval("fp32", "none").unwrap_or(f64::NAN);
+    crate::info!("ablation base fp32 val loss: {fp32:.5}");
+
+    // cast the same weights at every (format, block, rounding)
+    let w = trainer.state.fetch("w")?.as_f32();
+    let mut csv = CsvWriter::create(
+        &out_dir.join("ablation_blocks.csv"),
+        &["format", "block_size", "rounding", "val_loss", "fp32_val_loss"],
+    )?;
+    let mut rng = Rng::new(7);
+    for fmt_name in ["int4", "int8", "fp4"] {
+        for &bs in &BLOCKS {
+            let fmt = QuantFormat::parse(fmt_name, bs)?;
+            for r in [Rounding::Rtn, Rounding::Rr] {
+                let mut wq = w.clone();
+                cast(&mut wq, &fmt, r, &mut rng);
+                trainer
+                    .state
+                    .replace("w", &crate::tensor::HostTensor::from_f32(&[D], wq))?;
+                let loss = eval.eval_cast(&trainer, None, Rounding::Rtn)?;
+                csv.row(&[
+                    fmt_name.into(),
+                    bs.to_string(),
+                    r.name().into(),
+                    format!("{loss:.6}"),
+                    format!("{fp32:.6}"),
+                ])?;
+                crate::info!("  {fmt_name} block={bs} {}: {loss:.5}", r.name());
+            }
+        }
+        // restore master weights for the next format
+        trainer
+            .state
+            .replace("w", &crate::tensor::HostTensor::from_f32(&[D], w.clone()))?;
+    }
+    Ok(())
+}

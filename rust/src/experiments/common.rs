@@ -1,0 +1,116 @@
+//! Shared experiment machinery: run a configured method, dump loss
+//! curves as CSV, and print paper-style summary tables.
+
+use crate::config::RunConfig;
+use crate::coordinator::{DataSource, Evaluator, MetricsLogger, Trainer};
+use crate::data::{power_law_spectrum, sample_wstar};
+use crate::formats::csv::CsvWriter;
+use crate::info;
+use crate::runtime::Engine;
+use crate::tensor::HostTensor;
+use crate::util::rng::Rng;
+use anyhow::Result;
+use std::path::Path;
+
+/// Run one (method, format) training run and return its metrics.
+/// `label` names the CSV rows + jsonl file.
+pub fn run_method(
+    engine: &Engine,
+    cfg: &RunConfig,
+    statics: Vec<(String, HostTensor)>,
+    data: DataSource,
+    out_dir: &Path,
+    label: &str,
+) -> Result<MetricsLogger> {
+    let mut metrics = MetricsLogger::to_file(&out_dir.join(format!("{label}.jsonl")))?;
+    let mut trainer = Trainer::new(engine, cfg.clone(), statics, data)?;
+    let mut eval = Evaluator::new(engine, &cfg.model, cfg.seed)?;
+    let t0 = std::time::Instant::now();
+    trainer.run(&mut eval, &mut metrics)?;
+    info!(
+        "[{label}] {} steps in {:.1}s; final fp32={:.4}",
+        trainer.step,
+        t0.elapsed().as_secs_f64(),
+        metrics.final_eval("fp32", "none").unwrap_or(f64::NAN)
+    );
+    Ok(metrics)
+}
+
+/// Statics for the synthetic tasks: (lam, wstar) plus the raw vectors
+/// for host-side baselines.
+pub fn synth_statics(d: usize, seed: u64) -> (Vec<(String, HostTensor)>, Vec<f32>, Vec<f32>) {
+    let mut rng = Rng::new(seed);
+    let lam = power_law_spectrum(d, 1.1);
+    let wstar = sample_wstar(d, &mut rng);
+    let statics = vec![
+        ("lam".to_string(), HostTensor::from_f32(&[d], lam.clone())),
+        ("wstar".to_string(), HostTensor::from_f32(&[d], wstar.clone())),
+    ];
+    (statics, lam, wstar)
+}
+
+/// Write all eval curves from a set of labelled runs into one CSV:
+/// label,step,format,rounding,val_loss
+pub fn write_curves(out_dir: &Path, runs: &[(String, &MetricsLogger)]) -> Result<()> {
+    let mut w = CsvWriter::create(
+        &out_dir.join("curves.csv"),
+        &["run", "step", "format", "rounding", "val_loss"],
+    )?;
+    for (label, m) in runs {
+        for p in &m.eval_points {
+            w.row(&[
+                label.clone(),
+                p.step.to_string(),
+                p.format.clone(),
+                p.rounding.clone(),
+                format!("{:.6}", p.val_loss),
+            ])?;
+        }
+    }
+    Ok(())
+}
+
+/// A final-loss table row.
+#[derive(Clone, Debug)]
+pub struct TableRow {
+    pub method: String,
+    pub metric: String, // rounding label ("RTN"/"RR")
+    pub format: String,
+    pub val_loss: f64,
+}
+
+/// Render rows as an aligned paper-style table and write table.csv.
+pub fn write_table(out_dir: &Path, title: &str, rows: &[TableRow]) -> Result<String> {
+    let mut w = CsvWriter::create(
+        &out_dir.join("table.csv"),
+        &["method", "metric", "format", "val_loss"],
+    )?;
+    let mut sorted = rows.to_vec();
+    sorted.sort_by(|a, b| a.val_loss.partial_cmp(&b.val_loss).unwrap());
+    let mut text = format!("\n== {title} ==\n{:<16} {:<8} {:<8} {:>12}\n", "Method", "Metric", "Format", "Val. loss");
+    for r in &sorted {
+        w.row(&[
+            r.method.clone(),
+            r.metric.clone(),
+            r.format.clone(),
+            format!("{:.6}", r.val_loss),
+        ])?;
+        text.push_str(&format!(
+            "{:<16} {:<8} {:<8} {:>12.5}\n",
+            r.method, r.metric, r.format, r.val_loss
+        ));
+    }
+    println!("{text}");
+    std::fs::write(out_dir.join("table.txt"), &text)?;
+    Ok(text)
+}
+
+/// Environment-tunable step budget so `exp all` can be scaled to the
+/// testbed: LOTION_EXP_SCALE=0.25 quarters every run length.
+pub fn scaled(steps: usize) -> usize {
+    let scale: f64 = std::env::var("LOTION_EXP_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1.0);
+    ((steps as f64 * scale) as usize).max(16)
+}

@@ -1,0 +1,87 @@
+//! Figs. 3 & 8 (§4.2): two-layer linear network f(x) = (1/k) W2 W1 x,
+//! INT4, sweeping the hidden dimension k. Methods: LOTION / QAT / PTQ
+//! (trained) + the GT construction of Lemma 4 (W2 = 1, rows(W1) = w*),
+//! all cast with RTN and RR. Reports final quantized *training* loss
+//! (== exact population loss for this model).
+
+use crate::config::{RunConfig, Schedule};
+use crate::coordinator::DataSource;
+use crate::data::synth::population_loss;
+use crate::formats::csv::CsvWriter;
+use crate::quant::{cast, QuantFormat, Rounding};
+use crate::runtime::Engine;
+use crate::util::rng::Rng;
+use anyhow::Result;
+use std::path::Path;
+
+use super::common::{run_method, scaled, synth_statics};
+
+const D: usize = 12000;
+pub const KS: [usize; 6] = [1, 2, 4, 8, 16, 32];
+
+fn cfg_for(k: usize, method: &str, lr: f64, steps: usize) -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.name = format!("fig3_k{k}_{method}");
+    cfg.model = format!("linear2_d{D}_k{k}");
+    cfg.method = method.into();
+    cfg.format = if method == "ptq" { "none".into() } else { "int4".into() };
+    cfg.eval_formats = vec!["int4".into()];
+    cfg.steps = steps;
+    cfg.lr = lr;
+    cfg.lambda = 1.0;
+    cfg.eval_every = steps; // final eval only (plus step-0 baseline)
+    cfg.schedule = Schedule::Cosine { warmup: 0, final_frac: 0.05 };
+    cfg
+}
+
+/// GT baseline: construct Lemma 4's solution, cast, exact loss on host.
+fn gt_loss(k: usize, lam: &[f32], wstar: &[f32], rounding: Rounding, rng: &mut Rng) -> f64 {
+    let fmt = QuantFormat::int4();
+    // W1 rows = w*, W2 = ones; flat per-tensor casts as the quantizer sees them
+    let mut w1: Vec<f32> = (0..k).flat_map(|_| wstar.iter().copied()).collect();
+    let mut w2 = vec![1.0f32; k];
+    cast(&mut w1, &fmt, rounding, rng);
+    cast(&mut w2, &fmt, rounding, rng);
+    // effective w = (1/k) sum_j w2_j * w1_row_j
+    let mut v = vec![0f32; wstar.len()];
+    for j in 0..k {
+        let row = &w1[j * wstar.len()..(j + 1) * wstar.len()];
+        for (vi, &r) in v.iter_mut().zip(row) {
+            *vi += w2[j] * r;
+        }
+    }
+    for vi in v.iter_mut() {
+        *vi /= k as f32;
+    }
+    population_loss(&v, wstar, lam)
+}
+
+pub fn run(engine: &Engine, out_dir: &Path) -> Result<()> {
+    std::fs::create_dir_all(out_dir)?;
+    let steps = scaled(1600);
+    let mut w = CsvWriter::create(
+        &out_dir.join("fig3.csv"),
+        &["k", "method", "rounding", "final_loss"],
+    )?;
+    let mut rng = Rng::new(99);
+    for &k in &KS {
+        let (_, lam, wstar) = synth_statics(D, 42);
+        for method in ["lotion", "qat", "ptq"] {
+            let (statics, _, _) = synth_statics(D, 42);
+            let cfg = cfg_for(k, method, 0.3, steps);
+            let label = format!("k{k}_{method}");
+            let m = run_method(engine, &cfg, statics, DataSource::InGraph, out_dir, &label)?;
+            for r in ["rtn", "rr"] {
+                if let Some(v) = m.final_eval("int4", r) {
+                    w.row(&[k.to_string(), method.into(), r.into(), format!("{v:.6}")])?;
+                }
+            }
+        }
+        for (r, name) in [(Rounding::Rtn, "rtn"), (Rounding::Rr, "rr")] {
+            let v = gt_loss(k, &lam, &wstar, r, &mut rng);
+            w.row(&[k.to_string(), "gt".into(), name.into(), format!("{v:.6}")])?;
+            crate::info!("fig3 k={k} gt/{name}: {v:.5}");
+        }
+    }
+    Ok(())
+}

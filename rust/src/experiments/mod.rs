@@ -1,0 +1,10 @@
+//! Experiment registry: one regenerator per paper figure/table
+//! (DESIGN.md §4 maps ids to paper artifacts).
+
+pub mod ablation;
+pub mod common;
+pub mod fig2;
+pub mod fig3;
+pub mod fig6;
+pub mod lm_exps;
+pub mod registry;

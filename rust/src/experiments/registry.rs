@@ -1,0 +1,69 @@
+//! Experiment id → regenerator dispatch.
+//!
+//! | id    | paper artifact                       |
+//! |-------|--------------------------------------|
+//! | fig2  | Fig. 2 + Fig. 7 table (linreg INT4)  |
+//! | fig3  | Fig. 3 / Fig. 8 (linear2 k-sweep)    |
+//! | fig6  | Fig. 6 (1-D smoothing visualization) |
+//! | fig9  | Fig. 9 + Table 1 (150m INT4/INT8)    |
+//! | fig10 | Fig. 1 / Fig. 10 (extended budget)   |
+//! | fig11 | Fig. 4 / Fig. 11 + Table 2 (300m)    |
+//! | fig12 | Fig. 5 / Fig. 12 (FP4)               |
+//! | all   | everything above                     |
+
+use crate::runtime::Engine;
+use anyhow::{bail, Result};
+use std::path::Path;
+
+use super::{ablation, fig2, fig3, fig6, lm_exps};
+
+pub const ALL: [&str; 7] = ["fig6", "fig2", "fig3", "fig9", "fig10", "fig11", "fig12"];
+
+/// Paper-artifact aliases accepted on the CLI.
+pub fn canonical(id: &str) -> &str {
+    match id {
+        "fig7" => "fig2",
+        "fig8" => "fig3",
+        "fig1" => "fig10",
+        "fig4" | "table2" => "fig11",
+        "fig5" => "fig12",
+        "table1" => "fig9",
+        other => other,
+    }
+}
+
+pub fn run(engine: &Engine, id: &str, results_dir: &Path) -> Result<()> {
+    let id = canonical(id);
+    if id == "all" {
+        for e in ALL {
+            run(engine, e, results_dir)?;
+        }
+        return Ok(());
+    }
+    let out = results_dir.join(id);
+    crate::info!("=== experiment {id} -> {out:?} ===");
+    match id {
+        "fig2" => fig2::run(engine, &out),
+        "fig3" => fig3::run(engine, &out),
+        "fig6" => fig6::run(None, &out),
+        "fig9" => lm_exps::run_exp(engine, &lm_exps::FIG9, &out),
+        "fig10" => lm_exps::run_exp(engine, &lm_exps::FIG10, &out),
+        "fig11" => lm_exps::run_exp(engine, &lm_exps::FIG11, &out),
+        "fig12" => lm_exps::run_exp(engine, &lm_exps::FIG12, &out),
+        "ablation" => ablation::run(engine, &out),
+        other => bail!("unknown experiment {other:?} (try: {:?} or all)", ALL),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aliases_resolve() {
+        assert_eq!(canonical("fig7"), "fig2");
+        assert_eq!(canonical("table1"), "fig9");
+        assert_eq!(canonical("fig5"), "fig12");
+        assert_eq!(canonical("fig2"), "fig2");
+    }
+}

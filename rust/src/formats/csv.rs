@@ -1,0 +1,83 @@
+//! Tiny CSV writer for experiment outputs (figures are regenerated as
+//! CSV series; the paper-table printers format from the same rows).
+
+use anyhow::Result;
+use std::io::Write;
+use std::path::Path;
+
+pub struct CsvWriter {
+    file: std::fs::File,
+    n_cols: usize,
+}
+
+impl CsvWriter {
+    pub fn create(path: &Path, header: &[&str]) -> Result<Self> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut file = std::fs::File::create(path)?;
+        writeln!(file, "{}", header.join(","))?;
+        Ok(CsvWriter { file, n_cols: header.len() })
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> Result<()> {
+        assert_eq!(cells.len(), self.n_cols, "csv row arity mismatch");
+        let escaped: Vec<String> = cells
+            .iter()
+            .map(|c| {
+                if c.contains(',') || c.contains('"') || c.contains('\n') {
+                    format!("\"{}\"", c.replace('"', "\"\""))
+                } else {
+                    c.clone()
+                }
+            })
+            .collect();
+        writeln!(self.file, "{}", escaped.join(","))?;
+        Ok(())
+    }
+
+    pub fn row_mixed(&mut self, cells: &[CsvCell]) -> Result<()> {
+        self.row(&cells.iter().map(|c| c.to_string()).collect::<Vec<_>>())
+    }
+}
+
+pub enum CsvCell {
+    S(String),
+    I(i64),
+    F(f64),
+}
+
+impl std::fmt::Display for CsvCell {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CsvCell::S(s) => write!(f, "{s}"),
+            CsvCell::I(i) => write!(f, "{i}"),
+            CsvCell::F(x) => write!(f, "{x:.6}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_and_escapes() {
+        let dir = std::env::temp_dir().join("lotion_csv_test");
+        let path = dir.join("t.csv");
+        let mut w = CsvWriter::create(&path, &["a", "b"]).unwrap();
+        w.row(&["x".into(), "y,z".into()]).unwrap();
+        w.row_mixed(&[CsvCell::I(3), CsvCell::F(0.5)]).unwrap();
+        drop(w);
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "a,b\nx,\"y,z\"\n3,0.500000\n");
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_checked() {
+        let path = std::env::temp_dir().join("lotion_csv_test2").join("t.csv");
+        let mut w = CsvWriter::create(&path, &["a", "b"]).unwrap();
+        let _ = w.row(&["only-one".into()]);
+    }
+}

@@ -1,0 +1,7 @@
+//! Serialization substrates implemented in-repo (serde is not in the
+//! offline vendor set): a full JSON parser/writer and a CSV writer.
+
+pub mod csv;
+pub mod json;
+
+pub use json::Json;

@@ -1,0 +1,42 @@
+//! # lotion-rs — LOTION quantized-training framework (rust coordinator)
+//!
+//! Reproduction of *LOTION: Smoothing the Optimization Landscape for
+//! Quantized Training* (Kwun et al., 2025) as a three-layer
+//! rust + JAX + Pallas system. This crate is **Layer 3**: the runtime
+//! coordinator that owns training orchestration, data pipelines,
+//! quantized evaluation, checkpointing, experiment regeneration and
+//! benchmarking. The JAX/Pallas layers exist only at build time; their
+//! AOT-lowered HLO artifacts are loaded here through the PJRT C API
+//! (`xla` crate) and executed with no python on the request path.
+//!
+//! Module map (see DESIGN.md §5):
+//!
+//! * [`util`] — PRNG, statistics, logging, mini property-testing.
+//! * [`formats`] — JSON/CSV substrates (no serde available offline).
+//! * [`tensor`] — host tensors (shape/dtype/bytes) shared by all layers.
+//! * [`quant`] — rust-native block quantizer: INT4/INT8/FP4, RTN + RR,
+//!   the paper's §2.1 scheme; bit-parity with the python oracles.
+//! * [`config`] — TOML-subset config system + typed run configs.
+//! * [`data`] — synthetic regression streams, Zipf–Markov corpus,
+//!   byte tokenizer, batcher.
+//! * [`runtime`] — PJRT client, manifest-driven artifact registry,
+//!   train-state management, chunked execution.
+//! * [`coordinator`] — trainer, evaluator, LR schedules, sweeps, metrics.
+//! * [`checkpoint`] — binary tensor archive.
+//! * [`experiments`] — one regenerator per paper figure/table.
+//! * [`benchlib`] — micro-benchmark harness (criterion unavailable).
+
+pub mod benchlib;
+pub mod cli;
+pub mod checkpoint;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod formats;
+pub mod quant;
+pub mod runtime;
+pub mod tensor;
+pub mod util;
+
+pub use anyhow::{anyhow, bail, Context, Result};

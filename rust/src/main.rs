@@ -1,0 +1,237 @@
+//! lotion-rs — the L3 coordinator CLI.
+//!
+//! ```text
+//! lotion-rs train --config runs/example.toml [--set k=v ...]
+//! lotion-rs exp <fig2|fig3|fig6|fig9|fig10|fig11|fig12|table1|table2|all>
+//! lotion-rs sweep --config runs/example.toml --lrs 0.1,0.3,1.0
+//! lotion-rs inspect [--artifacts artifacts]
+//! lotion-rs data-report
+//! ```
+
+use anyhow::{bail, Context, Result};
+use lotion::cli::Args;
+use lotion::config::{RunConfig, TomlDoc};
+use lotion::coordinator::{DataSource, Evaluator, MetricsLogger, Trainer};
+use lotion::data::{ByteTokenizer, TokenBatcher, ZipfMarkovCorpus};
+use lotion::experiments::registry;
+use lotion::runtime::{Engine, Role};
+use lotion::{checkpoint::Checkpoint, formats::json::Json, info};
+use std::path::{Path, PathBuf};
+
+fn main() {
+    lotion::util::logging::init();
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+const USAGE: &str = "usage: lotion-rs <train|exp|sweep|inspect|data-report> [flags]
+  train       --config <toml> [--set k=v ...] [--out results/<name>]
+  exp         <id|all> [--results results] [--artifacts artifacts]
+  sweep       --config <toml> --lrs 0.1,0.3 [--score-format int4] [--score-rounding rtn]
+  inspect     [--artifacts artifacts]           list artifacts + compile timings
+  data-report [--bytes 1000000]                 corpus statistics";
+
+fn run() -> Result<()> {
+    let args = Args::from_env()?;
+    match args.subcommand.as_str() {
+        "train" => cmd_train(&args),
+        "exp" => cmd_exp(&args),
+        "sweep" => cmd_sweep(&args),
+        "inspect" => cmd_inspect(&args),
+        "data-report" => cmd_data_report(&args),
+        "" => bail!("{USAGE}"),
+        other => bail!("unknown subcommand {other:?}\n{USAGE}"),
+    }
+}
+
+fn load_config(args: &Args) -> Result<RunConfig> {
+    let mut doc = match args.flag("config") {
+        Some(path) => TomlDoc::from_file(Path::new(path))?,
+        None => TomlDoc::default(),
+    };
+    for ov in args.flag_all("set") {
+        doc.set_override(ov)?;
+    }
+    RunConfig::from_doc(&doc)
+}
+
+/// Build the data source a model needs (token batcher for LMs,
+/// in-graph sampling for the synthetic tasks) plus synthetic statics.
+fn build_inputs(
+    engine: &Engine,
+    cfg: &RunConfig,
+    corpus_seed: u64,
+) -> Result<(Vec<(String, lotion::tensor::HostTensor)>, DataSource)> {
+    let train = engine.manifest.find_train(&cfg.model, &cfg.method, &cfg.format)?;
+    let wants_data = train.inputs.iter().any(|s| s.role == Role::Data);
+    let wants_statics = train.inputs.iter().any(|s| s.role == Role::Static);
+    if wants_data {
+        let data = train
+            .inputs
+            .iter()
+            .find(|s| s.role == Role::Data)
+            .expect("data spec");
+        let (batch, t1) = (data.shape[1], data.shape[2]);
+        let corpus = ZipfMarkovCorpus::generate(2_000_000, 2048, 4, corpus_seed);
+        let toks = ByteTokenizer::new().encode(&corpus.bytes);
+        Ok((vec![], DataSource::Tokens(TokenBatcher::new(toks, batch, t1 - 1, 0.05))))
+    } else if wants_statics {
+        let d = train
+            .inputs
+            .iter()
+            .find(|s| s.name == "lam")
+            .map(|s| s.shape[0])
+            .context("no lam static")?;
+        let (statics, _, _) = lotion::experiments::common::synth_statics(d, 42);
+        Ok((statics, DataSource::InGraph))
+    } else {
+        Ok((vec![], DataSource::InGraph))
+    }
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let engine = Engine::new(Path::new(&cfg.artifacts_dir))?;
+    let out_dir = PathBuf::from(args.str_or("out", &format!("{}/{}", cfg.results_dir, cfg.name)));
+    std::fs::create_dir_all(&out_dir)?;
+    let (statics, data) = build_inputs(&engine, &cfg, 7)?;
+    let mut metrics = MetricsLogger::to_file(&out_dir.join("metrics.jsonl"))?;
+    let mut trainer = Trainer::new(&engine, cfg.clone(), statics, data)?;
+    let mut eval = Evaluator::new(&engine, &cfg.model, cfg.seed)?;
+
+    if cfg.checkpoint_every > 0 {
+        // checkpointed loop
+        let mut next_ckpt = cfg.checkpoint_every;
+        let mut next_eval = 0usize;
+        while trainer.step < cfg.steps {
+            if trainer.step >= next_eval {
+                eval.eval_all(&trainer, &mut metrics)?;
+                next_eval = trainer.step + cfg.eval_every.max(1);
+            }
+            trainer.chunk(&mut metrics)?;
+            if trainer.step >= next_ckpt {
+                save_checkpoint(&trainer, &out_dir.join(format!("step{:06}.lotn", trainer.step)))?;
+                next_ckpt = trainer.step + cfg.checkpoint_every;
+            }
+        }
+        eval.eval_all(&trainer, &mut metrics)?;
+    } else {
+        trainer.run(&mut eval, &mut metrics)?;
+    }
+    save_checkpoint(&trainer, &out_dir.join("final.lotn"))?;
+    let fp32 = metrics.final_eval("fp32", "none").unwrap_or(f64::NAN);
+    info!("run {} done: {} steps, final fp32 val loss {:.4}", cfg.name, trainer.step, fp32);
+    for p in metrics.eval_points.iter().rev().take(8) {
+        info!("  final {}/{}: {:.4}", p.format, p.rounding, p.val_loss);
+    }
+    Ok(())
+}
+
+fn save_checkpoint(trainer: &Trainer, path: &Path) -> Result<()> {
+    let mut ckpt = Checkpoint::new(Json::obj(vec![
+        ("step", Json::num(trainer.step as f64)),
+        ("model", Json::str(trainer.cfg.model.clone())),
+        ("method", Json::str(trainer.cfg.method.clone())),
+        ("format", Json::str(trainer.cfg.format.clone())),
+    ]));
+    for name in trainer.state.names.clone() {
+        ckpt.push(&name, trainer.state.fetch(&name)?);
+    }
+    ckpt.save(path)?;
+    info!("checkpoint -> {path:?}");
+    Ok(())
+}
+
+fn cmd_exp(args: &Args) -> Result<()> {
+    let id = args.positional.first().map(String::as_str).unwrap_or("all");
+    let artifacts = args.str_or("artifacts", "artifacts");
+    let results = PathBuf::from(args.str_or("results", "results"));
+    let engine = Engine::new(Path::new(&artifacts))?;
+    registry::run(&engine, id, &results)?;
+    // dump the L3 execution profile alongside results
+    let mut prof = String::from("artifact,compile_s,calls,exec_s\n");
+    for (name, c, n, e) in engine.timing_report() {
+        prof.push_str(&format!("{name},{c:.3},{n},{e:.3}\n"));
+    }
+    std::fs::create_dir_all(&results)?;
+    std::fs::write(results.join("engine_profile.csv"), prof)?;
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let lrs: Vec<f64> = args
+        .required("lrs")?
+        .split(',')
+        .map(|s| s.parse().map_err(|e| anyhow::anyhow!("bad lr {s:?}: {e}")))
+        .collect::<Result<_>>()?;
+    let score_fmt = args.str_or("score-format", &cfg.format);
+    let score_rounding = args.str_or("score-rounding", "rtn");
+    let engine = Engine::new(Path::new(&cfg.artifacts_dir))?;
+    let results = lotion::coordinator::sweep::lr_sweep(
+        &engine,
+        &cfg,
+        &lrs,
+        &score_fmt,
+        &score_rounding,
+        &|| build_inputs(&engine, &cfg, 7),
+    )?;
+    println!("{:<12} {:>14} {:>10}", "lr", "score", "diverged");
+    for r in &results {
+        println!("{:<12.4e} {:>14.6} {:>10}", r.lr, r.score, r.diverged);
+    }
+    if let Some(i) = lotion::coordinator::sweep::best(&results) {
+        println!("best: lr={:.4e} score={:.6}", results[i].lr, results[i].score);
+    }
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> Result<()> {
+    let artifacts = args.str_or("artifacts", "artifacts");
+    let engine = Engine::new(Path::new(&artifacts))?;
+    println!(
+        "{:<48} {:>6} {:>8} {:>10} {:>10}",
+        "artifact", "kind", "inputs", "params(M)", "K"
+    );
+    for e in engine.manifest.artifacts.values() {
+        let params: usize = e
+            .inputs
+            .iter()
+            .filter(|s| s.role == Role::Param)
+            .map(|s| s.elements())
+            .sum();
+        println!(
+            "{:<48} {:>6} {:>8} {:>10.2} {:>10}",
+            e.name,
+            e.kind,
+            e.inputs.len(),
+            params as f64 / 1e6,
+            e.steps_per_call
+        );
+    }
+    Ok(())
+}
+
+fn cmd_data_report(args: &Args) -> Result<()> {
+    let n = args.usize_or("bytes", 1_000_000)?;
+    let corpus = ZipfMarkovCorpus::generate(n, 2048, 4, 7);
+    let tok = ByteTokenizer::new();
+    let counts = tok.unigram_counts(&corpus.bytes);
+    let total: u64 = counts.iter().sum();
+    let h: f64 = counts
+        .iter()
+        .filter(|&&c| c > 0)
+        .map(|&c| {
+            let p = c as f64 / total as f64;
+            -p * p.log2()
+        })
+        .sum();
+    let distinct = counts.iter().filter(|&&c| c > 0).count();
+    println!("corpus bytes: {total}");
+    println!("distinct byte values: {distinct}");
+    println!("unigram entropy: {h:.3} bits/byte ({:.3} nats)", h * std::f64::consts::LN_2);
+    println!("sample: {:?}", String::from_utf8_lossy(&corpus.bytes[..120.min(n)]));
+    Ok(())
+}

@@ -1,0 +1,77 @@
+//! Block partitioning + shared-scale computation (§2.1).
+
+use super::format::QuantFormat;
+
+/// Iterator over (start, end) element ranges of the shared-scale blocks
+/// of an `n`-element tensor.
+pub fn block_ranges(n: usize, block_size: usize) -> impl Iterator<Item = (usize, usize)> {
+    let bs = if block_size == 0 { n.max(1) } else { block_size };
+    (0..n.div_ceil(bs)).map(move |b| (b * bs, ((b + 1) * bs).min(n)))
+}
+
+/// Per-block scales `s_B = absmax(B)/qmax`; zero-absmax blocks get 1.0
+/// (all-zero blocks quantize to exact zeros under any scale).
+pub fn block_scales(w: &[f32], fmt: &QuantFormat) -> Vec<f32> {
+    block_ranges(w.len(), fmt.block_size)
+        .map(|(s, e)| {
+            let amax = w[s..e].iter().fold(0f32, |m, v| m.max(v.abs()));
+            if amax > 0.0 {
+                amax / fmt.qmax
+            } else {
+                1.0
+            }
+        })
+        .collect()
+}
+
+/// Apply `f(element, scale)` over the tensor, block by block.
+pub fn map_blocks(w: &mut [f32], fmt: &QuantFormat, scales: &[f32], mut f: impl FnMut(f32, f32) -> f32) {
+    for (bi, (s, e)) in block_ranges(w.len(), fmt.block_size).enumerate() {
+        let sb = scales[bi];
+        for v in &mut w[s..e] {
+            *v = f(*v, sb);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ranges_cover_exactly() {
+        let r: Vec<_> = block_ranges(10, 4).collect();
+        assert_eq!(r, vec![(0, 4), (4, 8), (8, 10)]);
+        let r: Vec<_> = block_ranges(10, 0).collect();
+        assert_eq!(r, vec![(0, 10)]);
+        let r: Vec<_> = block_ranges(8, 4).collect();
+        assert_eq!(r, vec![(0, 4), (4, 8)]);
+    }
+
+    #[test]
+    fn per_tensor_scale() {
+        let fmt = QuantFormat::int4();
+        let w = [1.0f32, -14.0, 3.5];
+        let s = block_scales(&w, &fmt);
+        assert_eq!(s, vec![2.0]); // 14/7
+    }
+
+    #[test]
+    fn per_block_scales_and_zero_block() {
+        let mut fmt = QuantFormat::int4();
+        fmt.block_size = 2;
+        let w = [7.0f32, -7.0, 0.0, 0.0, 1.0];
+        let s = block_scales(&w, &fmt);
+        assert_eq!(s, vec![1.0, 1.0, 1.0 / 7.0]);
+    }
+
+    #[test]
+    fn map_blocks_applies_scales() {
+        let mut fmt = QuantFormat::int4();
+        fmt.block_size = 2;
+        let mut w = vec![7.0f32, -7.0, 14.0, 7.0];
+        let s = block_scales(&w, &fmt);
+        map_blocks(&mut w, &fmt, &s, |v, sb| v / sb);
+        assert_eq!(w, vec![7.0, -7.0, 7.0, 3.5]);
+    }
+}

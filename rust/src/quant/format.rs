@@ -1,0 +1,144 @@
+//! Quantization format descriptors (mirror of python `kernels/common.py`).
+
+use anyhow::{bail, Result};
+
+/// E2M1 lattice: ±{0, 0.5, 1, 1.5, 2, 3, 4, 6}, 15 distinct values.
+pub const FP4_LEVELS: [f32; 15] = [
+    -6.0, -4.0, -3.0, -2.0, -1.5, -1.0, -0.5, 0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0,
+];
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct QuantFormat {
+    pub name: String,
+    pub bits: u32,
+    /// absmax maps to ±qmax in the scaled domain
+    pub qmax: f32,
+    /// true => integer lattice; false => FP4 codebook
+    pub uniform: bool,
+    /// elements per shared-scale block; 0 = per-tensor
+    pub block_size: usize,
+}
+
+impl QuantFormat {
+    pub fn parse(name: &str, block_size: usize) -> Result<QuantFormat> {
+        let lower = name.to_ascii_lowercase();
+        if let Some(bits_s) = lower.strip_prefix("int") {
+            let bits: u32 = bits_s.parse()?;
+            if !(2..=8).contains(&bits) {
+                bail!("unsupported int width {name:?}");
+            }
+            return Ok(QuantFormat {
+                name: lower,
+                bits,
+                qmax: (2i32.pow(bits - 1) - 1) as f32,
+                uniform: true,
+                block_size,
+            });
+        }
+        if lower == "fp4" {
+            return Ok(QuantFormat { name: lower, bits: 4, qmax: 6.0, uniform: false, block_size });
+        }
+        bail!("unknown quantization format {name:?}")
+    }
+
+    pub fn int4() -> QuantFormat {
+        Self::parse("int4", 0).unwrap()
+    }
+
+    pub fn int8() -> QuantFormat {
+        Self::parse("int8", 0).unwrap()
+    }
+
+    pub fn fp4() -> QuantFormat {
+        Self::parse("fp4", 0).unwrap()
+    }
+
+    /// Enclosing lattice bracket for a scaled value `z` ∈ [-qmax, qmax]:
+    /// `(l, u)` with `l = max level <= z`, `u = min level >= z`.
+    ///
+    /// Codebook path is a branchless unrolled select over the 15 E2M1
+    /// levels — LLVM vectorizes it. (Perf pass note: a 4-step binary
+    /// search was tried and *reverted*: it sped sigma2/RR by ~1.45x but
+    /// cost 3x on the RTN cast due to data-dependent branches; see
+    /// EXPERIMENTS.md §Perf.)
+    #[inline]
+    pub fn bracket(&self, z: f32) -> (f32, f32) {
+        if self.uniform {
+            let l = z.floor();
+            if l == z {
+                (z, z)
+            } else {
+                (l, l + 1.0)
+            }
+        } else {
+            let mut l = f32::NEG_INFINITY;
+            let mut u = f32::INFINITY;
+            for &lev in FP4_LEVELS.iter() {
+                l = if lev <= z && lev > l { lev } else { l };
+                u = if lev >= z && lev < u { lev } else { u };
+            }
+            (l, u)
+        }
+    }
+
+    /// Round-to-nearest on the scaled lattice (python-parity semantics).
+    #[inline]
+    pub fn rtn(&self, z: f32) -> f32 {
+        if self.uniform {
+            // jnp.round = half-to-even
+            z.round_ties_even().clamp(-self.qmax, self.qmax)
+        } else {
+            let (l, u) = self.bracket(z);
+            let mid = 0.5 * (l + u);
+            if z > mid {
+                u
+            } else {
+                l
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_formats() {
+        assert_eq!(QuantFormat::int4().qmax, 7.0);
+        assert_eq!(QuantFormat::int8().qmax, 127.0);
+        assert_eq!(QuantFormat::fp4().qmax, 6.0);
+        assert!(QuantFormat::parse("int16", 0).is_err());
+        assert!(QuantFormat::parse("fp8", 0).is_err());
+    }
+
+    #[test]
+    fn uniform_rtn_half_to_even() {
+        let f = QuantFormat::int8();
+        assert_eq!(f.rtn(0.5), 0.0); // ties to even
+        assert_eq!(f.rtn(1.5), 2.0);
+        assert_eq!(f.rtn(2.5), 2.0);
+        assert_eq!(f.rtn(-0.5), -0.0);
+        assert_eq!(f.rtn(3.4), 3.0);
+    }
+
+    #[test]
+    fn fp4_bracket_and_rtn() {
+        let f = QuantFormat::fp4();
+        assert_eq!(f.bracket(0.7), (0.5, 1.0));
+        assert_eq!(f.bracket(-2.5), (-3.0, -2.0));
+        assert_eq!(f.bracket(1.0), (1.0, 1.0));
+        assert_eq!(f.rtn(0.7), 0.5); // mid=0.75, 0.7 <= mid -> lower
+        assert_eq!(f.rtn(0.8), 1.0);
+        assert_eq!(f.rtn(5.0), 4.0); // mid(4,6)=5, tie -> lower
+        assert_eq!(f.rtn(5.01), 6.0);
+    }
+
+    #[test]
+    fn int_bracket_on_lattice() {
+        let f = QuantFormat::int4();
+        assert_eq!(f.bracket(3.0), (3.0, 3.0));
+        assert_eq!(f.bracket(3.25), (3.0, 4.0));
+        assert_eq!(f.bracket(-3.25), (-4.0, -3.0));
+    }
+}

@@ -1,0 +1,23 @@
+//! Rust-native quantization substrate — the paper's §2.1 fine-grained
+//! shared-scale scheme, mirrored bit-for-bit from the python oracles.
+//!
+//! The coordinator uses this for *quantized evaluation*: training keeps
+//! FP32 master weights (in PJRT literals); at eval points the
+//! checkpointed weights are cast here with round-to-nearest (RTN) or
+//! unbiased randomized rounding (RR) and fed to the FP32 eval
+//! executable — exactly the paper's protocol ("model checkpoints are
+//! quantized or rounded for evaluations", §4).
+//!
+//! Parity contract with `python/compile/kernels/ref.py` (tested by
+//! golden files + the python test suite):
+//! * scales: `s_B = absmax(B) / qmax`, zero-absmax blocks get `s = 1`;
+//! * RTN (uniform): round-half-to-even (`jnp.round` semantics);
+//! * RTN (codebook): ties toward the lower level (`z > mid ? u : l`);
+//! * RR: round up w.p. `(z - l)/(u - l)`.
+
+pub mod blocks;
+pub mod format;
+pub mod rounding;
+
+pub use format::{QuantFormat, FP4_LEVELS};
+pub use rounding::{cast, cast_rr, cast_rtn, lotion_penalty, sigma2, Rounding};

@@ -1,0 +1,139 @@
+//! PJRT engine: client + compiled-executable cache + flat-tuple calls.
+//!
+//! Executables are compiled from HLO text once per process and cached.
+//! A call takes positional `Literal`s matching the manifest's input
+//! specs and returns the decomposed output tuple (the PJRT build on
+//! this image returns one tuple buffer; `decompose_tuple` splits it on
+//! the host — see DESIGN.md §2).
+
+use super::literals;
+use super::manifest::{ArtifactEntry, Manifest};
+use crate::info;
+use anyhow::{anyhow, bail, Context, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+use std::time::Instant;
+
+pub struct Engine {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    /// cumulative timing: (artifact, compile_s, calls, exec_s)
+    timings: RefCell<HashMap<String, (f64, u64, f64)>>,
+}
+
+impl Engine {
+    pub fn new(artifacts_dir: &std::path::Path) -> Result<Engine> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e}"))?;
+        info!(
+            "PJRT client up: platform={} devices={} artifacts={}",
+            client.platform_name(),
+            client.device_count(),
+            manifest.artifacts.len()
+        );
+        Ok(Engine {
+            client,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+            timings: RefCell::new(HashMap::new()),
+        })
+    }
+
+    /// Compile (or fetch from cache) the executable for an artifact.
+    pub fn load(&self, entry: &ArtifactEntry) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(&entry.name) {
+            return Ok(exe.clone());
+        }
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            entry.file.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parsing {:?}: {e}", entry.file))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(
+            self.client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {}: {e}", entry.name))?,
+        );
+        let dt = t0.elapsed().as_secs_f64();
+        info!("compiled {} in {:.2}s", entry.name, dt);
+        self.timings.borrow_mut().entry(entry.name.clone()).or_insert((dt, 0, 0.0));
+        self.cache.borrow_mut().insert(entry.name.clone(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute an artifact with positional literal inputs; returns the
+    /// decomposed output tuple (one literal per manifest output spec).
+    pub fn call(&self, entry: &ArtifactEntry, args: &[literals::Literal]) -> Result<Vec<literals::Literal>> {
+        if args.len() != entry.inputs.len() {
+            bail!(
+                "{}: got {} args, manifest expects {}",
+                entry.name,
+                args.len(),
+                entry.inputs.len()
+            );
+        }
+        if cfg!(debug_assertions) {
+            for (lit, spec) in args.iter().zip(&entry.inputs) {
+                literals::check_spec(lit, spec).with_context(|| entry.name.clone())?;
+            }
+        }
+        let exe = self.load(entry)?;
+        let t0 = Instant::now();
+        let out = exe
+            .execute::<literals::Literal>(args)
+            .map_err(|e| anyhow!("executing {}: {e}", entry.name))?;
+        let tuple = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching {} output: {e}", entry.name))?;
+        let parts = tuple.to_tuple().map_err(|e| anyhow!("untupling {}: {e}", entry.name))?;
+        if parts.len() != entry.outputs.len() {
+            bail!(
+                "{}: executable returned {} outputs, manifest expects {}",
+                entry.name,
+                parts.len(),
+                entry.outputs.len()
+            );
+        }
+        if let Some(t) = self.timings.borrow_mut().get_mut(&entry.name) {
+            t.1 += 1;
+            t.2 += t0.elapsed().as_secs_f64();
+        }
+        Ok(parts)
+    }
+
+    /// Call and pick named outputs as host tensors (convenience for
+    /// metrics / eval values).
+    pub fn call_to_host(
+        &self,
+        entry: &ArtifactEntry,
+        args: &[literals::Literal],
+        outputs: &[&str],
+    ) -> Result<Vec<crate::tensor::HostTensor>> {
+        let parts = self.call(entry, args)?;
+        outputs
+            .iter()
+            .map(|name| {
+                let idx = entry
+                    .output_index(name)
+                    .ok_or_else(|| anyhow!("{}: no output {name:?}", entry.name))?;
+                literals::to_host(&parts[idx])
+            })
+            .collect()
+    }
+
+    /// Per-artifact (compile_s, calls, total_exec_s) — the L3 profile
+    /// used by the perf pass and `lotion-rs inspect`.
+    pub fn timing_report(&self) -> Vec<(String, f64, u64, f64)> {
+        let mut rows: Vec<_> = self
+            .timings
+            .borrow()
+            .iter()
+            .map(|(k, (c, n, e))| (k.clone(), *c, *n, *e))
+            .collect();
+        rows.sort_by(|a, b| b.3.partial_cmp(&a.3).unwrap());
+        rows
+    }
+}

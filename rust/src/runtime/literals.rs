@@ -1,0 +1,98 @@
+//! HostTensor ⇄ `xla::Literal` conversions and spec validation.
+
+use super::manifest::TensorSpec;
+use crate::tensor::{DType, HostTensor};
+use anyhow::{bail, Result};
+
+fn element(dt: DType) -> xla::ElementType {
+    match dt {
+        DType::F32 => xla::ElementType::F32,
+        DType::I32 => xla::ElementType::S32,
+        DType::U32 => xla::ElementType::U32,
+    }
+}
+
+fn dtype_of(p: xla::PrimitiveType) -> Result<DType> {
+    Ok(match p {
+        xla::PrimitiveType::F32 => DType::F32,
+        xla::PrimitiveType::S32 => DType::I32,
+        xla::PrimitiveType::U32 => DType::U32,
+        other => bail!("unsupported literal element type {other:?}"),
+    })
+}
+
+/// Host → Literal (one untyped byte copy).
+pub fn to_literal(t: &HostTensor) -> Result<Literal> {
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        element(t.dtype),
+        &t.shape,
+        t.bytes(),
+    )?)
+}
+
+/// Literal → Host (one copy).
+pub fn to_host(lit: &Literal) -> Result<HostTensor> {
+    let shape = lit.array_shape()?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let dt = dtype_of(shape.primitive_type())?;
+    match dt {
+        DType::F32 => Ok(HostTensor::from_f32(&dims, lit.to_vec::<f32>()?)),
+        DType::I32 => Ok(HostTensor::from_i32(&dims, lit.to_vec::<i32>()?)),
+        DType::U32 => Ok(HostTensor::from_u32(&dims, lit.to_vec::<u32>()?)),
+    }
+}
+
+/// Check a literal against a manifest spec.
+pub fn check_spec(lit: &Literal, spec: &TensorSpec) -> Result<()> {
+    let shape = lit.array_shape()?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    if dims != spec.shape {
+        bail!("tensor {:?}: shape {:?} != manifest {:?}", spec.name, dims, spec.shape);
+    }
+    let dt = dtype_of(shape.primitive_type())?;
+    if dt != spec.dtype {
+        bail!("tensor {:?}: dtype {:?} != manifest {:?}", spec.name, dt, spec.dtype);
+    }
+    Ok(())
+}
+
+pub use xla::Literal;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_roundtrip() {
+        let t = HostTensor::from_f32(&[2, 2], vec![1., 2., 3., 4.]);
+        let lit = to_literal(&t).unwrap();
+        let back = to_host(&lit).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn i32_and_u32_roundtrip() {
+        let t = HostTensor::from_i32(&[3], vec![-1, 0, 7]);
+        assert_eq!(to_host(&to_literal(&t).unwrap()).unwrap(), t);
+        let t = HostTensor::from_u32(&[2], vec![1, u32::MAX]);
+        assert_eq!(to_host(&to_literal(&t).unwrap()).unwrap(), t);
+    }
+
+    #[test]
+    fn scalar_roundtrip() {
+        let t = HostTensor::scalar_f32(2.5);
+        let lit = to_literal(&t).unwrap();
+        assert_eq!(to_host(&lit).unwrap().scalar_to_f32(), 2.5);
+    }
+
+    #[test]
+    fn spec_check() {
+        use crate::runtime::manifest::Role;
+        let t = HostTensor::from_f32(&[4], vec![0.0; 4]);
+        let lit = to_literal(&t).unwrap();
+        let good = TensorSpec { name: "w".into(), shape: vec![4], dtype: DType::F32, role: Role::Param };
+        assert!(check_spec(&lit, &good).is_ok());
+        let bad = TensorSpec { name: "w".into(), shape: vec![5], dtype: DType::F32, role: Role::Param };
+        assert!(check_spec(&lit, &bad).is_err());
+    }
+}

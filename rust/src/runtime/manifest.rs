@@ -1,0 +1,232 @@
+//! Typed view of the AOT manifest (the L2→L3 contract).
+
+use crate::formats::json::Json;
+use crate::tensor::DType;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Role {
+    Param,
+    Opt,
+    Static,
+    Data,
+    Key,
+    Scalar,
+    Metric,
+}
+
+impl Role {
+    fn parse(s: &str) -> Result<Role> {
+        Ok(match s {
+            "param" => Role::Param,
+            "opt" => Role::Opt,
+            "static" => Role::Static,
+            "data" => Role::Data,
+            "key" => Role::Key,
+            "scalar" => Role::Scalar,
+            "metric" => Role::Metric,
+            other => bail!("unknown tensor role {other:?}"),
+        })
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+    pub role: Role,
+}
+
+impl TensorSpec {
+    fn from_json(j: &Json) -> Result<TensorSpec> {
+        Ok(TensorSpec {
+            name: j.expect("name")?.as_str().unwrap_or_default().to_string(),
+            shape: j
+                .expect("shape")?
+                .as_arr()
+                .ok_or_else(|| anyhow!("shape not an array"))?
+                .iter()
+                .map(|v| v.as_usize().unwrap_or(0))
+                .collect(),
+            dtype: DType::parse(j.expect("dtype")?.as_str().unwrap_or_default())?,
+            role: Role::parse(j.expect("role")?.as_str().unwrap_or_default())?,
+        })
+    }
+
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One AOT program: file + positional I/O contract + metadata.
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub kind: String,
+    pub model_name: String,
+    pub method: String,
+    pub format: String,
+    pub steps_per_call: usize,
+    pub eval_batches: usize,
+    pub optimizer: String,
+    pub quantized: Vec<String>,
+}
+
+impl ArtifactEntry {
+    pub fn input_specs(&self, role: Role) -> Vec<&TensorSpec> {
+        self.inputs.iter().filter(|s| s.role == role).collect()
+    }
+
+    pub fn input_index(&self, name: &str) -> Option<usize> {
+        self.inputs.iter().position(|s| s.name == name)
+    }
+
+    pub fn output_index(&self, name: &str) -> Option<usize> {
+        self.outputs.iter().position(|s| s.name == name)
+    }
+}
+
+/// The whole artifact directory.
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: BTreeMap<String, ArtifactEntry>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let doc = Json::from_file(&dir.join("manifest.json"))
+            .context("loading artifact manifest (run `make artifacts` first)")?;
+        let mut artifacts = BTreeMap::new();
+        for (name, e) in doc.expect("artifacts")?.members() {
+            let meta = e.expect("meta")?;
+            let get_s = |k: &str| meta.get(k).and_then(|v| v.as_str()).unwrap_or("").to_string();
+            let get_u = |k: &str| meta.get(k).and_then(|v| v.as_usize()).unwrap_or(0);
+            let quantized = meta
+                .get("quantized")
+                .and_then(|v| v.as_arr())
+                .map(|a| a.iter().filter_map(|v| v.as_str().map(String::from)).collect())
+                .unwrap_or_default();
+            let parse_specs = |key: &str| -> Result<Vec<TensorSpec>> {
+                e.expect(key)?
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("{key} not an array"))?
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect()
+            };
+            artifacts.insert(
+                name.clone(),
+                ArtifactEntry {
+                    name: name.clone(),
+                    file: dir.join(e.expect("file")?.as_str().unwrap_or_default()),
+                    inputs: parse_specs("inputs").with_context(|| name.clone())?,
+                    outputs: parse_specs("outputs").with_context(|| name.clone())?,
+                    kind: get_s("kind"),
+                    model_name: get_s("model_name"),
+                    method: get_s("method"),
+                    format: get_s("format"),
+                    steps_per_call: get_u("steps_per_call"),
+                    eval_batches: get_u("eval_batches"),
+                    optimizer: get_s("optimizer"),
+                    quantized,
+                },
+            );
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), artifacts })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactEntry> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact {name:?} not in manifest"))
+    }
+
+    /// Find the train program for (model, method, format) — the manifest
+    /// key carries a `_k<steps>` suffix chosen at AOT time.
+    pub fn find_train(&self, model: &str, method: &str, format: &str) -> Result<&ArtifactEntry> {
+        let fmt = if method == "ptq" { "none" } else { format };
+        let prefix = format!("train_{model}_{method}_{fmt}_k");
+        self.artifacts
+            .values()
+            .find(|e| e.name.starts_with(&prefix))
+            .ok_or_else(|| anyhow!("no train artifact matching {prefix}*"))
+    }
+
+    pub fn find_eval(&self, model: &str) -> Result<&ArtifactEntry> {
+        self.get(&format!("eval_{model}"))
+    }
+
+    pub fn find_init(&self, model: &str) -> Result<&ArtifactEntry> {
+        self.get(&format!("init_{model}"))
+    }
+
+    /// All (method, format) pairs with a train artifact for this model.
+    pub fn methods_for(&self, model: &str) -> Vec<(String, String)> {
+        self.artifacts
+            .values()
+            .filter(|e| e.kind == "train" && e.model_name == model)
+            .map(|e| (e.method.clone(), e.format.clone()))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    use crate::util::tempdir::TempDir;
+
+    fn sample_manifest() -> (TempDir, Manifest) {
+        let doc = r#"{"artifacts": {
+            "train_m_lotion_int4_k8": {"file": "t.hlo.txt",
+                "inputs": [
+                    {"name": "w", "shape": [4], "dtype": "f32", "role": "param"},
+                    {"name": "t", "shape": [], "dtype": "f32", "role": "opt"},
+                    {"name": "key", "shape": [2], "dtype": "u32", "role": "key"}],
+                "outputs": [
+                    {"name": "w", "shape": [4], "dtype": "f32", "role": "param"},
+                    {"name": "t", "shape": [], "dtype": "f32", "role": "opt"},
+                    {"name": "base_losses", "shape": [8], "dtype": "f32", "role": "metric"}],
+                "meta": {"kind": "train", "model_name": "m", "method": "lotion",
+                         "format": "int4", "steps_per_call": 8, "optimizer": "sgd",
+                         "quantized": ["w"]}},
+            "eval_m": {"file": "e.hlo.txt", "inputs": [], "outputs": [],
+                "meta": {"kind": "eval", "model_name": "m", "eval_batches": 4}}
+        }, "version": 1}"#;
+        let dir = TempDir::new();
+        std::fs::write(dir.path().join("manifest.json"), doc).unwrap();
+        let m = Manifest::load(dir.path()).unwrap();
+        (dir, m)
+    }
+
+    #[test]
+    fn loads_and_indexes() {
+        let (_d, m) = sample_manifest();
+        let t = m.find_train("m", "lotion", "int4").unwrap();
+        assert_eq!(t.steps_per_call, 8);
+        assert_eq!(t.quantized, vec!["w"]);
+        assert_eq!(t.input_index("key"), Some(2));
+        assert_eq!(t.input_specs(Role::Param).len(), 1);
+        assert!(m.find_eval("m").is_ok());
+        assert!(m.find_train("m", "qat", "int4").is_err());
+        assert_eq!(m.methods_for("m"), vec![("lotion".to_string(), "int4".to_string())]);
+    }
+
+    #[test]
+    fn missing_manifest_is_helpful() {
+        let dir = TempDir::new();
+        let err = match Manifest::load(&dir.path().join("nope")) {
+            Err(e) => format!("{e:#}"),
+            Ok(_) => panic!("expected error"),
+        };
+        assert!(err.contains("make artifacts"), "{err}");
+    }
+
+
+}

@@ -1,0 +1,18 @@
+//! PJRT runtime: loads the AOT artifacts (HLO text + manifest) and
+//! executes them from the coordinator's hot path.
+//!
+//! * [`manifest`] — typed view of `artifacts/manifest.json`.
+//! * [`literals`] — HostTensor ⇄ `xla::Literal` conversions.
+//! * [`engine`] — PJRT client + compiled-executable cache + the
+//!   flat-tuple calling convention (DESIGN.md §2).
+//! * [`state`] — named train state (params + optimizer) that round-trips
+//!   through executions.
+
+pub mod engine;
+pub mod literals;
+pub mod manifest;
+pub mod state;
+
+pub use engine::Engine;
+pub use manifest::{ArtifactEntry, Manifest, Role, TensorSpec};
+pub use state::TrainState;

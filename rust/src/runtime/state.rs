@@ -1,0 +1,124 @@
+//! Train state: named parameter + optimizer tensors that round-trip
+//! through scanned train calls as PJRT literals.
+
+use super::literals::{self, Literal};
+use super::manifest::{ArtifactEntry, Role};
+use crate::tensor::{DType, HostTensor};
+use anyhow::{anyhow, bail, Result};
+
+/// Named literal store. Params and optimizer state live here between
+/// chunks; literals go straight back into the next `Engine::call`
+/// without re-encoding.
+pub struct TrainState {
+    pub names: Vec<String>,
+    values: Vec<Literal>,
+}
+
+impl TrainState {
+    /// Zero-initialized state for the given specs (optimizer state init:
+    /// Adam moments and the step counter all start at zero).
+    pub fn zeros(specs: &[&super::manifest::TensorSpec]) -> Result<TrainState> {
+        let mut names = Vec::new();
+        let mut values = Vec::new();
+        for s in specs {
+            names.push(s.name.clone());
+            values.push(literals::to_literal(&HostTensor::zeros(s.dtype, &s.shape))?)
+        }
+        Ok(TrainState { names, values })
+    }
+
+    pub fn from_named(pairs: Vec<(String, Literal)>) -> TrainState {
+        let (names, values) = pairs.into_iter().unzip();
+        TrainState { names, values }
+    }
+
+    pub fn len(&self) -> usize {
+        self.names.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.names.is_empty()
+    }
+
+    pub fn index(&self, name: &str) -> Option<usize> {
+        self.names.iter().position(|n| n == name)
+    }
+
+    pub fn literal(&self, name: &str) -> Result<&Literal> {
+        Ok(&self.values[self.index(name).ok_or_else(|| anyhow!("no tensor {name:?}"))?])
+    }
+
+    pub fn literals(&self) -> &[Literal] {
+        &self.values
+    }
+
+    /// Copy a named tensor to the host.
+    pub fn fetch(&self, name: &str) -> Result<HostTensor> {
+        literals::to_host(self.literal(name)?)
+    }
+
+    /// Replace a named tensor (e.g. with a quantized cast for eval).
+    pub fn replace(&mut self, name: &str, t: &HostTensor) -> Result<()> {
+        let idx = self.index(name).ok_or_else(|| anyhow!("no tensor {name:?}"))?;
+        self.values[idx] = literals::to_literal(t)?;
+        Ok(())
+    }
+
+    /// Clone the underlying literals (params snapshot for eval casts).
+    pub fn clone_literals(&self) -> Vec<Literal> {
+        self.values.clone()
+    }
+
+    /// Adopt the leading `names.len()` outputs of a train call as the
+    /// new state (the manifest guarantees outputs echo params+opt first,
+    /// in input order).
+    pub fn adopt(&mut self, outputs: &mut Vec<Literal>) -> Result<()> {
+        if outputs.len() < self.len() {
+            bail!("outputs shorter than state ({} < {})", outputs.len(), self.len());
+        }
+        for (i, lit) in outputs.drain(..self.len()).enumerate() {
+            self.values[i] = lit;
+        }
+        Ok(())
+    }
+
+    /// Total number of f32-equivalent elements (for memory accounting).
+    pub fn total_elements(&self) -> usize {
+        self.values
+            .iter()
+            .map(|l| l.element_count())
+            .sum()
+    }
+}
+
+/// Assemble the state sections of a train artifact:
+/// params from an init call + zeroed optimizer state.
+pub fn init_train_state(
+    engine: &super::engine::Engine,
+    train: &ArtifactEntry,
+    init: &ArtifactEntry,
+    seed_key: [u32; 2],
+) -> Result<TrainState> {
+    let key = literals::to_literal(&HostTensor::from_u32(&[2], seed_key.to_vec()))?;
+    let params = engine.call(init, &[key])?;
+    let param_specs = train.input_specs(Role::Param);
+    if params.len() != param_specs.len() {
+        bail!(
+            "init returned {} tensors, train expects {} params",
+            params.len(),
+            param_specs.len()
+        );
+    }
+    let mut pairs: Vec<(String, Literal)> = param_specs
+        .iter()
+        .zip(params)
+        .map(|(s, l)| (s.name.clone(), l))
+        .collect();
+    for s in train.input_specs(Role::Opt) {
+        pairs.push((
+            s.name.clone(),
+            literals::to_literal(&HostTensor::zeros(DType::F32, &s.shape))?,
+        ));
+    }
+    Ok(TrainState::from_named(pairs))
+}

@@ -1,0 +1,180 @@
+//! Host tensors: the L3-side value type for parameters, optimizer
+//! state, batches and metrics. Deliberately xla-free so the quant /
+//! data / checkpoint substrates stay testable without a PJRT client;
+//! `runtime::literals` owns the Literal conversions.
+
+use anyhow::{bail, Result};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum DType {
+    F32,
+    I32,
+    U32,
+}
+
+impl DType {
+    pub fn size(self) -> usize {
+        4
+    }
+
+    pub fn parse(s: &str) -> Result<DType> {
+        Ok(match s {
+            "f32" => DType::F32,
+            "i32" => DType::I32,
+            "u32" => DType::U32,
+            other => bail!("unsupported dtype {other:?}"),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            DType::F32 => "f32",
+            DType::I32 => "i32",
+            DType::U32 => "u32",
+        }
+    }
+}
+
+/// Dense host tensor: shape + dtype + little-endian bytes.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HostTensor {
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+    data: Vec<u8>,
+}
+
+impl HostTensor {
+    pub fn zeros(dtype: DType, shape: &[usize]) -> Self {
+        let n: usize = shape.iter().product();
+        HostTensor { dtype, shape: shape.to_vec(), data: vec![0u8; n * dtype.size()] }
+    }
+
+    pub fn from_f32(shape: &[usize], values: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), values.len());
+        let mut data = Vec::with_capacity(values.len() * 4);
+        for v in &values {
+            data.extend_from_slice(&v.to_le_bytes());
+        }
+        HostTensor { dtype: DType::F32, shape: shape.to_vec(), data }
+    }
+
+    pub fn from_i32(shape: &[usize], values: Vec<i32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), values.len());
+        let mut data = Vec::with_capacity(values.len() * 4);
+        for v in &values {
+            data.extend_from_slice(&v.to_le_bytes());
+        }
+        HostTensor { dtype: DType::I32, shape: shape.to_vec(), data }
+    }
+
+    pub fn from_u32(shape: &[usize], values: Vec<u32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), values.len());
+        let mut data = Vec::with_capacity(values.len() * 4);
+        for v in &values {
+            data.extend_from_slice(&v.to_le_bytes());
+        }
+        HostTensor { dtype: DType::U32, shape: shape.to_vec(), data }
+    }
+
+    pub fn scalar_f32(v: f32) -> Self {
+        Self::from_f32(&[], vec![v])
+    }
+
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn bytes(&self) -> &[u8] {
+        &self.data
+    }
+
+    pub fn bytes_mut(&mut self) -> &mut [u8] {
+        &mut self.data
+    }
+
+    pub fn from_bytes(dtype: DType, shape: &[usize], data: Vec<u8>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if data.len() != n * dtype.size() {
+            bail!("byte length {} != {} elements x 4", data.len(), n);
+        }
+        Ok(HostTensor { dtype, shape: shape.to_vec(), data })
+    }
+
+    /// View as f32 (panics on dtype mismatch — programmer error).
+    pub fn as_f32(&self) -> Vec<f32> {
+        assert_eq!(self.dtype, DType::F32);
+        self.data
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect()
+    }
+
+    pub fn as_i32(&self) -> Vec<i32> {
+        assert_eq!(self.dtype, DType::I32);
+        self.data
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+            .collect()
+    }
+
+    /// In-place f32 mutation through a callback (avoids copies on the
+    /// hot path: quantized eval casts params this way).
+    pub fn map_f32_inplace(&mut self, f: impl FnOnce(&mut [f32])) {
+        assert_eq!(self.dtype, DType::F32);
+        // Safety-free path: decode, mutate, re-encode. The data is
+        // little-endian f32 on every supported platform; do it with
+        // chunk views to avoid unsafe.
+        let mut vals = self.as_f32();
+        f(&mut vals);
+        for (chunk, v) in self.data.chunks_exact_mut(4).zip(&vals) {
+            chunk.copy_from_slice(&v.to_le_bytes());
+        }
+    }
+
+    pub fn scalar_to_f32(&self) -> f32 {
+        assert_eq!(self.len(), 1);
+        f32::from_le_bytes(self.data[..4].try_into().unwrap())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_f32() {
+        let t = HostTensor::from_f32(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.len(), 6);
+        assert_eq!(t.as_f32(), vec![1., 2., 3., 4., 5., 6.]);
+    }
+
+    #[test]
+    fn zeros_and_scalar() {
+        let t = HostTensor::zeros(DType::I32, &[4]);
+        assert_eq!(t.as_i32(), vec![0; 4]);
+        assert_eq!(HostTensor::scalar_f32(2.5).scalar_to_f32(), 2.5);
+    }
+
+    #[test]
+    fn map_inplace() {
+        let mut t = HostTensor::from_f32(&[3], vec![1., -2., 3.]);
+        t.map_f32_inplace(|v| v.iter_mut().for_each(|x| *x *= 2.0));
+        assert_eq!(t.as_f32(), vec![2., -4., 6.]);
+    }
+
+    #[test]
+    fn from_bytes_validates() {
+        assert!(HostTensor::from_bytes(DType::F32, &[2], vec![0u8; 7]).is_err());
+        assert!(HostTensor::from_bytes(DType::F32, &[2], vec![0u8; 8]).is_ok());
+    }
+
+    #[test]
+    fn dtype_parse() {
+        assert_eq!(DType::parse("f32").unwrap(), DType::F32);
+        assert!(DType::parse("f64").is_err());
+    }
+}

@@ -1,0 +1,61 @@
+//! Minimal leveled logger writing to stderr; level picked via
+//! `LOTION_LOG` (error|warn|info|debug, default info).
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::Instant;
+
+static LEVEL: AtomicU8 = AtomicU8::new(2); // info
+static INIT: std::sync::Once = std::sync::Once::new();
+static START: std::sync::OnceLock<Instant> = std::sync::OnceLock::new();
+
+pub const ERROR: u8 = 0;
+pub const WARN: u8 = 1;
+pub const INFO: u8 = 2;
+pub const DEBUG: u8 = 3;
+
+pub fn init() {
+    INIT.call_once(|| {
+        let lvl = match std::env::var("LOTION_LOG").as_deref() {
+            Ok("error") => ERROR,
+            Ok("warn") => WARN,
+            Ok("debug") => DEBUG,
+            _ => INFO,
+        };
+        LEVEL.store(lvl, Ordering::Relaxed);
+        let _ = START.set(Instant::now());
+    });
+}
+
+pub fn enabled(level: u8) -> bool {
+    level <= LEVEL.load(Ordering::Relaxed)
+}
+
+pub fn log(level: u8, msg: std::fmt::Arguments) {
+    init();
+    if !enabled(level) {
+        return;
+    }
+    let t = START.get().map(|s| s.elapsed().as_secs_f64()).unwrap_or(0.0);
+    let tag = match level {
+        ERROR => "ERROR",
+        WARN => "WARN ",
+        INFO => "INFO ",
+        _ => "DEBUG",
+    };
+    eprintln!("[{t:9.3}s {tag}] {msg}");
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => { $crate::util::logging::log($crate::util::logging::INFO, format_args!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! warn_ {
+    ($($arg:tt)*) => { $crate::util::logging::log($crate::util::logging::WARN, format_args!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)*) => { $crate::util::logging::log($crate::util::logging::DEBUG, format_args!($($arg)*)) };
+}

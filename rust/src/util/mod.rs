@@ -1,0 +1,11 @@
+//! Small substrates: deterministic PRNG, summary statistics, logging,
+//! and a mini property-testing harness (proptest is unavailable offline).
+
+pub mod logging;
+pub mod prop;
+pub mod rng;
+pub mod tempdir;
+pub mod stats;
+
+pub use rng::Rng;
+pub use stats::Summary;

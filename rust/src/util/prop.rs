@@ -1,0 +1,91 @@
+//! Mini property-testing harness (the proptest crate is not in the
+//! offline vendor set). Seeded, size-driven generators + a `forall`
+//! runner that reports the failing seed so any counterexample is
+//! reproducible with `LOTION_PROP_SEED=<seed>`.
+
+use super::rng::Rng;
+
+/// Number of cases per property (override with LOTION_PROP_CASES).
+pub fn cases() -> u64 {
+    std::env::var("LOTION_PROP_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(64)
+}
+
+fn base_seed() -> u64 {
+    std::env::var("LOTION_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE)
+}
+
+/// Run `prop` over `cases()` seeded generators; panics with the seed on
+/// the first failure.
+pub fn forall<F: FnMut(&mut Rng)>(name: &str, mut prop: F) {
+    let base = base_seed();
+    for case in 0..cases() {
+        let seed = base.wrapping_add(case.wrapping_mul(0x9E3779B97F4A7C15));
+        let mut rng = Rng::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut rng)));
+        if let Err(e) = result {
+            eprintln!("property '{name}' failed at case {case} (LOTION_PROP_SEED={seed})");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+/// Generator helpers over [`Rng`].
+pub trait Gen {
+    fn usize_in(&mut self, lo: usize, hi: usize) -> usize;
+    fn f32_in(&mut self, lo: f32, hi: f32) -> f32;
+    fn vec_normal(&mut self, len: usize, scale: f32) -> Vec<f32>;
+    fn vec_uniform(&mut self, len: usize) -> Vec<f32>;
+}
+
+impl Gen for Rng {
+    fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.below((hi - lo + 1) as u64) as usize
+    }
+
+    fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + self.uniform_f32() * (hi - lo)
+    }
+
+    fn vec_normal(&mut self, len: usize, scale: f32) -> Vec<f32> {
+        (0..len).map(|_| self.normal_f32() * scale).collect()
+    }
+
+    fn vec_uniform(&mut self, len: usize) -> Vec<f32> {
+        (0..len).map(|_| self.uniform_f32()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_runs_all_cases() {
+        let mut n = 0;
+        forall("count", |_| n += 1);
+        assert_eq!(n as u64, cases());
+    }
+
+    #[test]
+    #[should_panic]
+    fn forall_propagates_failure() {
+        forall("fail", |r| assert!(r.uniform() < -1.0));
+    }
+
+    #[test]
+    fn gen_ranges() {
+        forall("ranges", |r| {
+            let u = r.usize_in(3, 9);
+            assert!((3..=9).contains(&u));
+            let f = r.f32_in(-2.0, 2.0);
+            assert!((-2.0..=2.0).contains(&f));
+            assert_eq!(r.vec_normal(5, 1.0).len(), 5);
+        });
+    }
+}

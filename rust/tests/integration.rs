@@ -1,0 +1,141 @@
+//! End-to-end integration: load real AOT artifacts, train, evaluate.
+//! Requires `make artifacts` (skips gracefully otherwise).
+
+use lotion::config::RunConfig;
+use lotion::coordinator::{DataSource, Evaluator, MetricsLogger, Trainer};
+use lotion::data::{power_law_spectrum, sample_wstar, ByteTokenizer, TokenBatcher, ZipfMarkovCorpus};
+use lotion::quant::{QuantFormat, Rounding};
+use lotion::runtime::Engine;
+use lotion::tensor::HostTensor;
+use lotion::util::rng::Rng;
+use std::path::Path;
+
+fn engine() -> Option<Engine> {
+    let dir = Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts/ not built");
+        return None;
+    }
+    Some(Engine::new(dir).expect("engine"))
+}
+
+fn linreg_statics(d: usize, seed: u64) -> Vec<(String, HostTensor)> {
+    let mut rng = Rng::new(seed);
+    vec![
+        ("lam".into(), HostTensor::from_f32(&[d], power_law_spectrum(d, 1.1))),
+        ("wstar".into(), HostTensor::from_f32(&[d], sample_wstar(d, &mut rng))),
+    ]
+}
+
+fn linreg_cfg(method: &str) -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.model = "linreg_d256".into();
+    cfg.method = method.into();
+    cfg.format = if method == "ptq" { "none".into() } else { "int4".into() };
+    cfg.steps = 160;
+    cfg.lr = 0.1;
+    cfg.lambda = 1.0;
+    cfg.eval_every = 80;
+    cfg
+}
+
+#[test]
+fn linreg_lotion_trains_and_beats_init() {
+    let Some(engine) = engine() else { return };
+    let cfg = linreg_cfg("lotion");
+    let statics = linreg_statics(256, 3);
+    let mut trainer =
+        Trainer::new(&engine, cfg.clone(), statics, DataSource::InGraph).expect("trainer");
+    let mut eval = Evaluator::new(&engine, &cfg.model, 0).unwrap();
+    let mut metrics = MetricsLogger::in_memory();
+
+    let fmt = QuantFormat::int4();
+    let v0 = eval.eval_cast(&trainer, Some(&fmt), Rounding::Rtn).unwrap();
+    trainer.run(&mut eval, &mut metrics).unwrap();
+    let v1 = eval.eval_cast(&trainer, Some(&fmt), Rounding::Rtn).unwrap();
+    assert!(v1 < v0 * 0.8, "quantized val loss {v0} -> {v1}");
+    assert_eq!(trainer.step, 160);
+    // metrics got both train chunks and eval points
+    assert!(!metrics.train_losses.is_empty());
+    assert!(metrics.best_eval("int4", "rtn").is_some());
+    assert!(metrics.best_eval("int4", "rr").is_some());
+    assert!(metrics.final_eval("fp32", "none").is_some());
+}
+
+#[test]
+fn all_four_methods_run_on_linreg() {
+    let Some(engine) = engine() else { return };
+    for method in ["ptq", "qat", "rat", "lotion"] {
+        let mut cfg = linreg_cfg(method);
+        cfg.steps = 32;
+        cfg.eval_every = 32;
+        let statics = linreg_statics(256, 5);
+        let mut trainer =
+            Trainer::new(&engine, cfg.clone(), statics, DataSource::InGraph).unwrap();
+        let mut eval = Evaluator::new(&engine, &cfg.model, 1).unwrap();
+        let mut metrics = MetricsLogger::in_memory();
+        trainer.run(&mut eval, &mut metrics).expect(method);
+        assert!(metrics.final_eval("fp32", "none").unwrap().is_finite(), "{method}");
+    }
+}
+
+#[test]
+fn trainer_is_deterministic_per_seed() {
+    let Some(engine) = engine() else { return };
+    let run = |seed: u64| {
+        let mut cfg = linreg_cfg("qat");
+        cfg.steps = 24;
+        cfg.seed = seed;
+        let statics = linreg_statics(256, 7);
+        let mut trainer = Trainer::new(&engine, cfg, statics, DataSource::InGraph).unwrap();
+        let mut metrics = MetricsLogger::in_memory();
+        for _ in 0..3 {
+            trainer.chunk(&mut metrics).unwrap();
+        }
+        trainer.state.fetch("w").unwrap().as_f32()
+    };
+    assert_eq!(run(9), run(9));
+    assert_ne!(run(9), run(10));
+}
+
+#[test]
+fn lm_tiny_trains_on_corpus() {
+    let Some(engine) = engine() else { return };
+    let mut cfg = RunConfig::default();
+    cfg.model = "lm-tiny".into();
+    cfg.method = "lotion".into();
+    cfg.format = "int4".into();
+    cfg.steps = 16;
+    cfg.lr = 3e-3;
+    cfg.lambda = 10.0;
+    cfg.eval_every = 16;
+
+    let corpus = ZipfMarkovCorpus::generate(200_000, 512, 4, 1);
+    let toks = ByteTokenizer::new().encode(&corpus.bytes);
+    let batcher = TokenBatcher::new(toks, 8, 64, 0.1);
+    let mut trainer =
+        Trainer::new(&engine, cfg.clone(), vec![], DataSource::Tokens(batcher)).unwrap();
+    let mut eval = Evaluator::new(&engine, &cfg.model, 2).unwrap();
+    let mut metrics = MetricsLogger::in_memory();
+    trainer.run(&mut eval, &mut metrics).unwrap();
+
+    // initial loss ~ ln(256) = 5.55; must improve within 16 steps
+    let (_, first) = (metrics.train_losses[0].0, metrics.train_losses[0].1);
+    let last = metrics.train_losses.last().unwrap().1;
+    assert!(first > 4.0, "first={first}");
+    assert!(last < first, "first={first} last={last}");
+    // quantized eval tracks fp32 eval (at this early stage the INT4 cast
+    // perturbs loss by well under 1 nat either way)
+    let fp32 = metrics.final_eval("fp32", "none").unwrap();
+    let q = metrics.final_eval("int4", "rtn").unwrap();
+    assert!((q - fp32).abs() < 1.0, "fp32={fp32} int4={q}");
+}
+
+#[test]
+fn engine_rejects_wrong_arity_and_missing_artifacts() {
+    let Some(engine) = engine() else { return };
+    let entry = engine.manifest.find_eval("linreg_d256").unwrap();
+    assert!(engine.call(entry, &[]).is_err());
+    assert!(engine.manifest.get("no_such_artifact").is_err());
+    assert!(engine.manifest.find_train("linreg_d256", "nope", "int4").is_err());
+}
