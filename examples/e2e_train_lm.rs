@@ -18,7 +18,7 @@ use anyhow::{Context, Result};
 use lotion::config::{RunConfig, Schedule};
 use lotion::coordinator::{DataSource, Evaluator, MetricsLogger, Trainer};
 use lotion::data::{ByteTokenizer, TokenBatcher, ZipfMarkovCorpus};
-use lotion::runtime::{Engine, Role};
+use lotion::runtime::{auto_executor, Executor, Role};
 use std::path::Path;
 
 fn main() -> Result<()> {
@@ -27,7 +27,11 @@ fn main() -> Result<()> {
     let steps: usize = args.get(1).map(|s| s.parse()).transpose()?.unwrap_or(12);
     let model = args.get(2).cloned().unwrap_or_else(|| "lm-100m".to_string());
 
-    let engine = Engine::new(Path::new("artifacts"))?;
+    // LM presets exist only as AOT artifacts: this needs the e2e set +
+    // a `--features pjrt` build (the native backend covers the
+    // synthetic testbeds only; the find_train below says so if not)
+    let engine = auto_executor(Path::new("artifacts"))?;
+    let engine: &dyn Executor = &*engine;
     let mut cfg = RunConfig::default();
     cfg.name = format!("e2e_{model}");
     cfg.model = model.clone();
@@ -41,9 +45,9 @@ fn main() -> Result<()> {
 
     // batch geometry straight from the manifest
     let train = engine
-        .manifest
+        .manifest()
         .find_train(&cfg.model, &cfg.method, &cfg.format)
-        .context("e2e artifacts missing — run: cd python && python -m compile.aot --out ../artifacts --set e2e")?;
+        .context("e2e artifacts missing — run: cd python && python -m compile.aot --out ../artifacts --set e2e (then build with --features pjrt)")?;
     let data = train.inputs.iter().find(|s| s.role == Role::Data).context("no data input")?;
     let (batch, t1) = (data.shape[1], data.shape[2]);
     let params: usize = train
@@ -63,10 +67,10 @@ fn main() -> Result<()> {
     let batcher = TokenBatcher::new(tokens, batch, t1 - 1, 0.05);
 
     let t0 = std::time::Instant::now();
-    let mut trainer = Trainer::new(&engine, cfg.clone(), vec![], DataSource::Tokens(batcher))?;
+    let mut trainer = Trainer::new(engine, cfg.clone(), vec![], DataSource::Tokens(batcher))?;
     println!("init + state setup: {:.1}s", t0.elapsed().as_secs_f64());
 
-    let mut eval = Evaluator::new(&engine, &cfg.model, cfg.seed)?;
+    let mut eval = Evaluator::new(engine, &cfg.model, cfg.seed)?;
     let mut metrics = MetricsLogger::to_file(Path::new("results/e2e/metrics.jsonl"))?;
     let t0 = std::time::Instant::now();
     while trainer.step < cfg.steps {

@@ -1,7 +1,8 @@
 //! The paper's §4.1 linear-regression story in miniature: train the
 //! same problem with all four methods (LOTION / QAT / RAT / PTQ) and
 //! print the INT4 quantized validation losses side by side — a fast,
-//! small-d version of `lotion-rs exp fig2`.
+//! small-d version of `lotion-rs exp fig2`. Runs on the native backend
+//! with no artifacts (or on PJRT when built with it).
 //!
 //!     cargo run --release --example linreg_lotion
 
@@ -11,7 +12,7 @@ use lotion::coordinator::{DataSource, Evaluator, MetricsLogger, Trainer};
 use lotion::data::synth::population_loss;
 use lotion::experiments::common::synth_statics;
 use lotion::quant::{cast, QuantFormat, Rounding};
-use lotion::runtime::Engine;
+use lotion::runtime::{auto_executor, Executor};
 use lotion::util::rng::Rng;
 use std::path::Path;
 
@@ -19,7 +20,8 @@ const D: usize = 256; // the smoke-set problem; fig2 runs d=12000
 
 fn main() -> Result<()> {
     lotion::util::logging::init();
-    let engine = Engine::new(Path::new("artifacts"))?;
+    let engine = auto_executor(Path::new("artifacts"))?;
+    let engine: &dyn Executor = &*engine;
 
     println!("{:<10} {:>12} {:>12} {:>12}", "method", "fp32", "int4/RTN", "int4/RR");
     for method in ["lotion", "qat", "rat", "ptq"] {
@@ -36,8 +38,8 @@ fn main() -> Result<()> {
         cfg.schedule = Schedule::Cosine { warmup: 0, final_frac: 0.05 };
 
         let (statics, _, _) = synth_statics(D, 42);
-        let mut trainer = Trainer::new(&engine, cfg.clone(), statics, DataSource::InGraph)?;
-        let mut eval = Evaluator::new(&engine, &cfg.model, 0)?;
+        let mut trainer = Trainer::new(engine, cfg.clone(), statics, DataSource::InGraph)?;
+        let mut eval = Evaluator::new(engine, &cfg.model, 0)?;
         let mut metrics = MetricsLogger::in_memory();
         trainer.run(&mut eval, &mut metrics)?;
         println!(

@@ -1,49 +1,57 @@
-//! Quickstart: train a tiny LM with LOTION at INT4 for a few hundred
-//! steps and print the quantized validation losses.
+//! Quickstart: train the §4.1 linear-regression testbed with LOTION at
+//! INT4 on the native pure-rust backend and print the quantized
+//! validation losses. Runs out of the box — no artifacts, no python:
 //!
-//!     make artifacts && cargo run --release --example quickstart
+//!     cargo run --release --example quickstart
+//!
+//! (With `make artifacts` + `--features pjrt` the same code runs the
+//! AOT/XLA path instead; `auto_executor` picks whichever is available.)
 
 use anyhow::Result;
-use lotion::config::RunConfig;
+use lotion::config::{RunConfig, Schedule};
 use lotion::coordinator::{DataSource, Evaluator, MetricsLogger, Trainer};
-use lotion::data::{ByteTokenizer, TokenBatcher, ZipfMarkovCorpus};
-use lotion::runtime::Engine;
+use lotion::experiments::common::synth_statics;
+use lotion::runtime::{auto_executor, Executor};
 use std::path::Path;
+
+const D: usize = 256;
 
 fn main() -> Result<()> {
     lotion::util::logging::init();
 
-    // 1. the engine loads AOT artifacts (HLO text + manifest) over PJRT
-    let engine = Engine::new(Path::new("artifacts"))?;
+    // 1. pick a backend: PJRT if artifacts exist (and the feature is
+    //    compiled in), the native pure-rust engine otherwise
+    let engine = auto_executor(Path::new("artifacts"))?;
+    let engine: &dyn Executor = &*engine;
 
-    // 2. configure a run: LOTION at INT4 on the lm-tiny preset
+    // 2. configure a run: LOTION at INT4 on the smoke-scale linreg
     let mut cfg = RunConfig::default();
     cfg.name = "quickstart".into();
-    cfg.model = "lm-tiny".into();
+    cfg.model = format!("linreg_d{D}");
     cfg.method = "lotion".into();
     cfg.format = "int4".into();
-    cfg.steps = 200;
-    cfg.lr = 3e-3;
-    cfg.lambda = 100.0;
-    cfg.eval_every = 40;
+    cfg.steps = 400;
+    cfg.lr = 0.1;
+    cfg.lambda = 1.0; // exact GN diagonal: Eq. 3 is parameter-free here
+    cfg.eval_every = 80;
+    cfg.schedule = Schedule::Cosine { warmup: 0, final_frac: 0.05 };
 
-    // 3. data: synthetic Zipf–Markov corpus through the byte tokenizer
-    let corpus = ZipfMarkovCorpus::generate(500_000, 1024, 4, 7);
-    let tokens = ByteTokenizer::new().encode(&corpus.bytes);
-    let batcher = TokenBatcher::new(tokens, 8, 64, 0.1);
+    // 3. statics: the power-law spectrum and the target w*
+    let (statics, _, _) = synth_statics(D, 42);
 
-    // 4. train; quantized eval (RTN + RR) happens automatically
-    let mut trainer = Trainer::new(&engine, cfg.clone(), vec![], DataSource::Tokens(batcher))?;
-    let mut eval = Evaluator::new(&engine, &cfg.model, cfg.seed)?;
+    // 4. train; quantized eval (RTN + RR casts in rust) happens
+    //    automatically at every eval point
+    let mut trainer = Trainer::new(engine, cfg.clone(), statics, DataSource::InGraph)?;
+    let mut eval = Evaluator::new(engine, &cfg.model, cfg.seed)?;
     let mut metrics = MetricsLogger::in_memory();
     trainer.run(&mut eval, &mut metrics)?;
 
     println!("\nquickstart results after {} steps:", trainer.step);
-    println!("  fp32 val loss:      {:.4}", metrics.final_eval("fp32", "none").unwrap());
-    println!("  int4 val loss RTN:  {:.4}", metrics.final_eval("int4", "rtn").unwrap());
-    println!("  int4 val loss RR:   {:.4}", metrics.final_eval("int4", "rr").unwrap());
+    println!("  fp32 val loss:      {:.5}", metrics.final_eval("fp32", "none").unwrap());
+    println!("  int4 val loss RTN:  {:.5}", metrics.final_eval("int4", "rtn").unwrap());
+    println!("  int4 val loss RR:   {:.5}", metrics.final_eval("int4", "rr").unwrap());
     println!(
-        "  train loss: {:.4} -> {:.4}",
+        "  train loss: {:.5} -> {:.5}",
         metrics.train_losses.first().unwrap().1,
         metrics.train_losses.last().unwrap().1
     );

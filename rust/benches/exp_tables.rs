@@ -1,7 +1,9 @@
 //! One end-to-end bench per paper table/figure workload: measures the
 //! steady-state step throughput of each experiment's training loop
 //! (the quantity that gates regenerating the paper's results) plus the
-//! quantized-eval latency that punctuates it.
+//! quantized-eval latency that punctuates it. Runs on whichever
+//! backend `auto_executor` picks: native covers the synthetic figures,
+//! the LM rows need PJRT artifacts and are skipped otherwise.
 //!
 //! Figure/table mapping (DESIGN.md §4):
 //!   fig2/fig7   linreg d=12000 INT4          -> linreg bench
@@ -16,11 +18,11 @@ use lotion::config::RunConfig;
 use lotion::coordinator::{DataSource, Evaluator, MetricsLogger, Trainer};
 use lotion::experiments::common::synth_statics;
 use lotion::quant::{QuantFormat, Rounding};
-use lotion::runtime::{Engine, Role};
+use lotion::runtime::{auto_executor, Executor, Role};
 use std::path::Path;
 
 fn workload(
-    engine: &Engine,
+    engine: &dyn Executor,
     bench: &mut Bench,
     tag: &str,
     model: &str,
@@ -35,25 +37,27 @@ fn workload(
     cfg.steps = 1_000_000;
     cfg.lr = 1e-3;
     cfg.lambda = lambda;
+    let Ok(eval_entry) = engine.manifest().find_eval(model) else {
+        eprintln!("skip {tag}: no eval program for {model} on this backend");
+        return;
+    };
     let (statics, data) = if model.starts_with("lin") {
-        let d = engine
-            .manifest
-            .find_eval(model)
-            .unwrap()
+        let Some(d) = eval_entry
             .inputs
             .iter()
             .find(|s| s.name == "lam")
             .map(|s| s.shape[0])
-            .unwrap();
+        else {
+            eprintln!("skip {tag}: eval program has no lam spec");
+            return;
+        };
         let (s, _, _) = synth_statics(d, 42);
         (s, DataSource::InGraph)
     } else {
-        let eval = engine.manifest.find_eval(model).unwrap();
-        let d = eval
-            .inputs
-            .iter()
-            .find(|s| matches!(s.role, Role::Data))
-            .unwrap();
+        let Some(d) = eval_entry.inputs.iter().find(|s| matches!(s.role, Role::Data)) else {
+            eprintln!("skip {tag}: eval program has no data spec");
+            return;
+        };
         let corpus = lotion::data::ZipfMarkovCorpus::generate(400_000, 512, 4, 1);
         let toks = lotion::data::ByteTokenizer::new().encode(&corpus.bytes);
         (
@@ -67,7 +71,7 @@ fn workload(
         )
     };
     let Ok(mut trainer) = Trainer::new(engine, cfg, statics, data) else {
-        eprintln!("skip {tag}: artifacts missing");
+        eprintln!("skip {tag}: train program missing");
         return;
     };
     let k = trainer.steps_per_call() as f64;
@@ -75,7 +79,7 @@ fn workload(
     bench.run_with_items(&format!("{tag}/train_steps"), Some(k), &mut || {
         trainer.chunk(&mut metrics).unwrap();
     });
-    // quantized eval latency (cast in rust + eval executable)
+    // quantized eval latency (cast in rust + eval program)
     let mut eval = Evaluator::new(engine, model, 0).unwrap();
     let fmt = QuantFormat::parse(if format == "none" { "int4" } else { format }, 0).unwrap();
     bench.run(&format!("{tag}/quantized_eval"), || {
@@ -85,21 +89,30 @@ fn workload(
 
 fn main() {
     lotion::util::logging::init();
-    let Ok(engine) = Engine::new(Path::new("artifacts")) else {
-        eprintln!("artifacts/ not built; skipping experiment benches");
-        return;
+    let engine = match auto_executor(Path::new("artifacts")) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("no backend available: {e:#}");
+            return;
+        }
     };
+    let engine: &dyn Executor = &*engine;
     let mut b = Bench::new(1, 5);
-    workload(&engine, &mut b, "fig2_linreg_lotion_int4", "linreg_d12000", "lotion", "int4", 1.0);
-    workload(&engine, &mut b, "fig2_linreg_qat_int4", "linreg_d12000", "qat", "int4", 0.0);
-    workload(&engine, &mut b, "fig3_linear2_k8_lotion", "linear2_d12000_k8", "lotion", "int4", 1.0);
-    workload(&engine, &mut b, "fig9_lm150_lotion_int4", "lm-150m-sim", "lotion", "int4", 300.0);
-    workload(&engine, &mut b, "fig9_lm150_qat_int4", "lm-150m-sim", "qat", "int4", 0.0);
-    workload(&engine, &mut b, "fig9_lm150_rat_int4", "lm-150m-sim", "rat", "int4", 0.0);
-    workload(&engine, &mut b, "tab1_lm150_lotion_int8", "lm-150m-sim", "lotion", "int8", 300.0);
-    workload(&engine, &mut b, "fig11_lm300_lotion_int4", "lm-300m-sim", "lotion", "int4", 300.0);
-    workload(&engine, &mut b, "fig11_lm300_qat_int4", "lm-300m-sim", "qat", "int4", 0.0);
-    workload(&engine, &mut b, "fig12_lm150_lotion_fp4", "lm-150m-sim", "lotion", "fp4", 300.0);
-    workload(&engine, &mut b, "fig12_lm150_qat_fp4", "lm-150m-sim", "qat", "fp4", 0.0);
+    workload(engine, &mut b, "fig2_linreg_lotion_int4", "linreg_d12000", "lotion", "int4", 1.0);
+    workload(engine, &mut b, "fig2_linreg_qat_int4", "linreg_d12000", "qat", "int4", 0.0);
+    workload(engine, &mut b, "fig3_linear2_k8_lotion", "linear2_d12000_k8", "lotion", "int4", 1.0);
+    workload(engine, &mut b, "fig9_lm150_lotion_int4", "lm-150m-sim", "lotion", "int4", 300.0);
+    workload(engine, &mut b, "fig9_lm150_qat_int4", "lm-150m-sim", "qat", "int4", 0.0);
+    workload(engine, &mut b, "fig9_lm150_rat_int4", "lm-150m-sim", "rat", "int4", 0.0);
+    workload(engine, &mut b, "tab1_lm150_lotion_int8", "lm-150m-sim", "lotion", "int8", 300.0);
+    workload(engine, &mut b, "fig11_lm300_lotion_int4", "lm-300m-sim", "lotion", "int4", 300.0);
+    workload(engine, &mut b, "fig11_lm300_qat_int4", "lm-300m-sim", "qat", "int4", 0.0);
+    workload(engine, &mut b, "fig12_lm150_lotion_fp4", "lm-150m-sim", "lotion", "fp4", 300.0);
+    workload(engine, &mut b, "fig12_lm150_qat_fp4", "lm-150m-sim", "qat", "fp4", 0.0);
     print!("{}", b.table("experiment workloads (per paper table/figure)"));
+    let out = Path::new("BENCH_exp_tables.json");
+    match b.write_json(out, "exp_tables") {
+        Ok(()) => println!("wrote {}", out.display()),
+        Err(e) => eprintln!("could not write {}: {e}", out.display()),
+    }
 }

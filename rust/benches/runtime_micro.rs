@@ -1,23 +1,95 @@
-//! PJRT runtime micro-benchmarks: executable call overhead, literal
-//! conversion bandwidth, and train-chunk latency per model preset —
-//! the numbers behind EXPERIMENTS.md §Perf (L3).
+//! Runtime micro-benchmarks: native-backend train-step throughput
+//! (steps/sec for linreg and linear2 at 1k / 100k parameters) plus,
+//! with `--features pjrt`, the PJRT call-overhead and literal
+//! conversion numbers behind EXPERIMENTS.md §Perf (L3).
+//!
+//! Emits `BENCH_runtime_micro.json` (benchlib JSON) next to the cwd so
+//! per-PR throughput trajectories can be tracked.
 
 use lotion::benchlib::Bench;
-use lotion::config::RunConfig;
+use lotion::config::{RunConfig, Schedule};
 use lotion::coordinator::{DataSource, MetricsLogger, Trainer};
 use lotion::experiments::common::synth_statics;
-use lotion::runtime::literals::{to_host, to_literal};
-use lotion::runtime::Engine;
-use lotion::tensor::HostTensor;
+use lotion::runtime::native::{ModelSpec, NativeEngine, NativeModel, OptKind};
+use lotion::runtime::Executor;
 use std::path::Path;
+
+/// One native train-chunk throughput measurement.
+fn native_train_bench(b: &mut Bench, engine: &dyn Executor, model: &str, tag: &str, d: usize) {
+    let mut cfg = RunConfig::default();
+    cfg.model = model.into();
+    cfg.method = "lotion".into();
+    cfg.format = "int4".into();
+    cfg.steps = 1_000_000; // never reached; we call chunk() directly
+    cfg.lr = 0.05;
+    cfg.lambda = 1.0;
+    cfg.schedule = Schedule::Constant;
+    let (statics, _, _) = synth_statics(d, 42);
+    let mut trainer =
+        Trainer::new(engine, cfg, statics, DataSource::InGraph).expect("native trainer");
+    let k = trainer.steps_per_call() as f64;
+    let mut metrics = MetricsLogger::in_memory();
+    b.run_with_items(&format!("native_train_step/{tag}"), Some(k), &mut || {
+        trainer.chunk(&mut metrics).unwrap();
+    });
+}
 
 fn main() {
     lotion::util::logging::init();
+    let mut b = Bench::new(1, 5);
+
+    // Native backend: steps/sec at ~1k and ~100k parameters for both
+    // synthetic testbeds (throughput denominator = optimizer steps).
+    let engine = NativeEngine::with_models(&[
+        NativeModel {
+            spec: ModelSpec::LinReg { d: 1_000, batch: 32 },
+            opt: OptKind::Sgd,
+            steps_per_call: 8,
+        },
+        NativeModel {
+            spec: ModelSpec::LinReg { d: 100_000, batch: 32 },
+            opt: OptKind::Sgd,
+            steps_per_call: 8,
+        },
+        NativeModel {
+            spec: ModelSpec::Linear2 { d: 500, k: 2 },
+            opt: OptKind::Sgd,
+            steps_per_call: 8,
+        },
+        NativeModel {
+            spec: ModelSpec::Linear2 { d: 50_000, k: 2 },
+            opt: OptKind::Sgd,
+            steps_per_call: 8,
+        },
+    ]);
+    native_train_bench(&mut b, &engine, "linreg_d1000", "linreg/1k_params", 1_000);
+    native_train_bench(&mut b, &engine, "linreg_d100000", "linreg/100k_params", 100_000);
+    native_train_bench(&mut b, &engine, "linear2_d500_k2", "linear2/1k_params", 500);
+    native_train_bench(&mut b, &engine, "linear2_d50000_k2", "linear2/100k_params", 50_000);
+
+    #[cfg(feature = "pjrt")]
+    pjrt_benches(&mut b);
+
+    print!("{}", b.table("runtime micro"));
+    let out = Path::new("BENCH_runtime_micro.json");
+    match b.write_json(out, "runtime_micro") {
+        Ok(()) => println!("wrote {}", out.display()),
+        Err(e) => eprintln!("could not write {}: {e}", out.display()),
+    }
+}
+
+/// PJRT-path numbers: literal conversion bandwidth, dispatch overhead,
+/// and train-chunk latency per AOT preset (needs `make artifacts`).
+#[cfg(feature = "pjrt")]
+fn pjrt_benches(b: &mut Bench) {
+    use lotion::runtime::literals::{to_host, to_literal};
+    use lotion::runtime::{Engine, Role};
+    use lotion::tensor::HostTensor;
+
     let Ok(engine) = Engine::new(Path::new("artifacts")) else {
-        eprintln!("artifacts/ not built; skipping runtime benches");
+        eprintln!("artifacts/ not built; skipping PJRT runtime benches");
         return;
     };
-    let mut b = Bench::new(2, 10);
 
     // literal conversion bandwidth (the chunk-boundary copy cost)
     for n in [1usize << 16, 1 << 22] {
@@ -40,7 +112,9 @@ fn main() {
         let lam = to_literal(&statics[0].1).unwrap();
         let wstar = to_literal(&statics[1].1).unwrap();
         b.run("pjrt_call/eval_linreg_d256", || {
-            std::hint::black_box(engine.call(&entry, &[w.clone(), lam.clone(), wstar.clone()]).unwrap());
+            std::hint::black_box(
+                engine.call_literals(&entry, &[w.clone(), lam.clone(), wstar.clone()]).unwrap(),
+            );
         });
     }
 
@@ -64,9 +138,23 @@ fn main() {
         } else {
             let corpus = lotion::data::ZipfMarkovCorpus::generate(300_000, 512, 4, 1);
             let toks = lotion::data::ByteTokenizer::new().encode(&corpus.bytes);
-            let eval = engine.manifest.find_eval(model).unwrap();
-            let d = eval.inputs.iter().find(|s| matches!(s.role, lotion::runtime::Role::Data)).unwrap();
-            (vec![], DataSource::Tokens(lotion::data::TokenBatcher::new(toks, d.shape[1], d.shape[2] - 1, 0.1)))
+            let Ok(eval) = engine.manifest.find_eval(model) else {
+                eprintln!("skipping {model}/{method} (eval artifact missing)");
+                continue;
+            };
+            let Some(d) = eval.inputs.iter().find(|s| matches!(s.role, Role::Data)) else {
+                eprintln!("skipping {model}/{method} (no data spec)");
+                continue;
+            };
+            (
+                vec![],
+                DataSource::Tokens(lotion::data::TokenBatcher::new(
+                    toks,
+                    d.shape[1],
+                    d.shape[2] - 1,
+                    0.1,
+                )),
+            )
         };
         let Ok(mut trainer) = Trainer::new(&engine, cfg, statics, data) else {
             eprintln!("skipping {model}/{method} (artifact missing)");
@@ -82,5 +170,4 @@ fn main() {
             },
         );
     }
-    print!("{}", b.table("PJRT runtime micro"));
 }

@@ -1,8 +1,11 @@
 //! Micro-benchmark harness (criterion is not in the offline vendor
-//! set): warmup + timed iterations, robust summary stats, and a table
-//! printer shared by `cargo bench` targets and `lotion-rs bench`.
+//! set): warmup + timed iterations, robust summary stats, a table
+//! printer shared by `cargo bench` targets, and a JSON emitter so
+//! `BENCH_*.json` trajectories can be tracked across PRs.
 
+use crate::formats::json::Json;
 use crate::util::stats::Summary;
+use std::path::Path;
 use std::time::Instant;
 
 pub struct BenchResult {
@@ -72,6 +75,38 @@ impl Bench {
         self.results.last().unwrap()
     }
 
+    /// All recorded results as a `BENCH_*.json`-shaped document.
+    pub fn to_json(&self, suite: &str) -> Json {
+        let results: Vec<Json> = self
+            .results
+            .iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("name", Json::str(r.name.clone())),
+                    ("iters", Json::num(r.iters as f64)),
+                    ("mean_s", Json::num(r.mean_s)),
+                    ("p50_s", Json::num(r.p50_s)),
+                    ("p95_s", Json::num(r.p95_s)),
+                    ("std_s", Json::num(r.std_s)),
+                    (
+                        "items_per_sec",
+                        r.items_per_sec()
+                            .filter(|v| v.is_finite())
+                            .map(Json::num)
+                            .unwrap_or(Json::Null),
+                    ),
+                ])
+            })
+            .collect();
+        Json::obj(vec![("suite", Json::str(suite)), ("results", Json::Arr(results))])
+    }
+
+    /// Write the JSON document (e.g. `BENCH_runtime_micro.json`).
+    pub fn write_json(&self, path: &Path, suite: &str) -> anyhow::Result<()> {
+        std::fs::write(path, self.to_json(suite).to_string())?;
+        Ok(())
+    }
+
     /// Render all recorded results as an aligned table.
     pub fn table(&self, title: &str) -> String {
         let mut out = String::new();
@@ -135,6 +170,21 @@ mod tests {
         let mut b = Bench::new(0, 3);
         let r = b.run_with_items("noop", Some(1000.0), &mut || {});
         assert!(r.items_per_sec().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn json_roundtrips() {
+        let mut b = Bench::new(0, 2);
+        let mut tick = || std::thread::sleep(std::time::Duration::from_micros(200));
+        b.run_with_items("fast", Some(100.0), &mut tick);
+        b.run("slow", tick);
+        let doc = Json::parse(&b.to_json("suite_x").to_string()).unwrap();
+        assert_eq!(doc.get("suite").unwrap().as_str(), Some("suite_x"));
+        let rs = doc.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(rs.len(), 2);
+        assert_eq!(rs[0].get("name").unwrap().as_str(), Some("fast"));
+        assert!(rs[0].get("items_per_sec").unwrap().as_f64().unwrap() > 0.0);
+        assert_eq!(rs[1].get("items_per_sec"), Some(&Json::Null));
     }
 
     #[test]

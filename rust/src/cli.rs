@@ -82,6 +82,18 @@ impl Args {
     pub fn str_or(&self, name: &str, default: &str) -> String {
         self.flag(name).unwrap_or(default).to_string()
     }
+
+    /// The `--backend {auto|native|pjrt}` selector shared by every
+    /// subcommand; validates here so all commands report flag typos
+    /// the same way.
+    pub fn backend(&self) -> Result<&str> {
+        let b = self.flag("backend").unwrap_or("auto");
+        if b == "auto" || b == "native" || b == "pjrt" {
+            Ok(b)
+        } else {
+            bail!("unknown backend {b:?} (expected auto|native|pjrt)")
+        }
+    }
 }
 
 #[cfg(test)]
@@ -116,5 +128,13 @@ mod tests {
         assert!(a.required("missing").is_err());
         assert_eq!(a.f64_or("lr", 0.5).unwrap(), 0.5);
         assert_eq!(a.str_or("name", "d"), "d");
+    }
+
+    #[test]
+    fn backend_flag_is_validated() {
+        assert_eq!(parse("train").backend().unwrap(), "auto");
+        assert_eq!(parse("train --backend native").backend().unwrap(), "native");
+        assert_eq!(parse("train --backend pjrt").backend().unwrap(), "pjrt");
+        assert!(parse("train --backend tpu").backend().is_err());
     }
 }

@@ -46,12 +46,15 @@ pub struct RunConfig {
 impl Default for RunConfig {
     fn default() -> Self {
         RunConfig {
+            // smoke-scale linreg: present in both the native backend's
+            // registry and the AOT smoke set, so a bare `lotion-rs
+            // train` works on any backend with no artifacts built
             name: "run".into(),
-            model: "lm-tiny".into(),
+            model: "linreg_d256".into(),
             method: "lotion".into(),
             format: "int4".into(),
             steps: 200,
-            lr: 1e-3,
+            lr: 0.1,
             lambda: 1.0,
             schedule: Schedule::Cosine { warmup: 10, final_frac: 0.1 },
             seed: 0,
@@ -170,7 +173,7 @@ mod tests {
     fn ptq_artifact_has_no_format() {
         let mut cfg = RunConfig::default();
         cfg.method = "ptq".into();
-        assert_eq!(cfg.train_artifact(), "train_lm-tiny_ptq_none");
+        assert_eq!(cfg.train_artifact(), "train_linreg_d256_ptq_none");
     }
 
     #[test]

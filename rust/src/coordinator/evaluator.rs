@@ -1,12 +1,12 @@
 //! Quantized evaluation — the paper's measurement protocol (§4):
 //! snapshot the FP32 weights, cast the quantized subset with RTN or
 //! randomized rounding *in rust* (the `quant` substrate), and run the
-//! FP32 eval executable on the cast weights.
+//! FP32 eval program on the cast weights. Backend-agnostic: the cast
+//! happens on host tensors before they enter `Executor::call`.
 
 use crate::quant::{cast, QuantFormat, Rounding};
-use crate::runtime::literals::{self, Literal};
+use crate::runtime::executor::{value, Executor, Value};
 use crate::runtime::manifest::{ArtifactEntry, Role};
-use crate::runtime::Engine;
 use crate::util::rng::Rng;
 use anyhow::{anyhow, Result};
 
@@ -19,12 +19,12 @@ pub struct Evaluator {
     pub rng: Rng,
     /// fixed val chunk per evaluator (same data at every eval point, so
     /// curves are comparable across steps and methods)
-    val_tokens: Option<Literal>,
+    val_tokens: Option<Value>,
 }
 
 impl Evaluator {
-    pub fn new(engine: &Engine, model: &str, seed: u64) -> Result<Evaluator> {
-        let entry = engine.manifest.find_eval(model)?.clone();
+    pub fn new(engine: &dyn Executor, model: &str, seed: u64) -> Result<Evaluator> {
+        let entry = engine.manifest().find_eval(model)?.clone();
         Ok(Evaluator { entry, rng: Rng::new(seed ^ 0xE7A1_5EED), val_tokens: None })
     }
 
@@ -38,51 +38,51 @@ impl Evaluator {
     ) -> Result<f64> {
         let engine = trainer.engine;
         let specs = self.entry.inputs.clone();
-        // snapshot params (literals are cheap clones of host buffers)
-        let mut args: Vec<Literal> = Vec::with_capacity(specs.len());
+        // snapshot params (values are Rc-shared host buffers)
+        let mut args: Vec<Value> = Vec::with_capacity(specs.len());
         for spec in &specs {
-            let lit = match spec.role {
+            let arg = match spec.role {
                 Role::Param => {
-                    let lit = trainer.state.literal(&spec.name)?;
+                    let v = trainer.state.value(&spec.name)?;
                     if let Some(fmt) = format {
                         if trainer.quantized_keys().iter().any(|k| k == &spec.name) {
-                            let mut host = literals::to_host(lit)?;
+                            let mut host = v.as_ref().clone();
                             let mut rng = self.rng.fork(1);
                             host.map_f32_inplace(|w| cast(w, fmt, rounding, &mut rng));
-                            literals::to_literal(&host)?
+                            value(host)
                         } else {
-                            lit.clone()
+                            v.clone()
                         }
                     } else {
-                        lit.clone()
+                        v.clone()
                     }
                 }
                 Role::Static => trainer
                     .statics
                     .iter()
                     .find(|(n, _)| n == &spec.name)
-                    .map(|(_, l)| l.clone())
+                    .map(|(_, v)| v.clone())
                     .ok_or_else(|| anyhow!("missing static {:?}", spec.name))?,
                 Role::Data => self.val_chunk(trainer)?,
                 other => return Err(anyhow!("unexpected eval input role {other:?}")),
             };
-            args.push(lit);
+            args.push(arg);
         }
         let out = engine.call_to_host(&self.entry, &args, &["val_loss"])?;
         Ok(out[0].scalar_to_f32() as f64)
     }
 
-    fn val_chunk(&mut self, trainer: &Trainer) -> Result<Literal> {
-        if let Some(l) = &self.val_tokens {
-            return Ok(l.clone());
+    fn val_chunk(&mut self, trainer: &Trainer) -> Result<Value> {
+        if let Some(v) = &self.val_tokens {
+            return Ok(v.clone());
         }
         let ke = self.entry.eval_batches.max(1);
-        let lit = match &trainer.data {
-            DataSource::Tokens(b) => literals::to_literal(&b.val_chunk(ke, &mut self.rng))?,
-            DataSource::InGraph => return Err(anyhow!("eval artifact wants data for a synthetic task")),
+        let v = match &trainer.data {
+            DataSource::Tokens(b) => value(b.val_chunk(ke, &mut self.rng)),
+            DataSource::InGraph => return Err(anyhow!("eval program wants data for a synthetic task")),
         };
-        self.val_tokens = Some(lit.clone());
-        Ok(lit)
+        self.val_tokens = Some(v.clone());
+        Ok(v)
     }
 
     /// The paper's standard eval battery at the current step: FP32 loss

@@ -3,7 +3,7 @@
 //! by final quantized validation loss.
 
 use crate::config::RunConfig;
-use crate::runtime::Engine;
+use crate::runtime::Executor;
 use anyhow::Result;
 
 use super::evaluator::Evaluator;
@@ -25,7 +25,7 @@ pub struct SweepResult {
 /// `inputs` rebuilds (statics, data source) per run so every LR sees
 /// identical data streams.
 pub fn lr_sweep(
-    engine: &Engine,
+    engine: &dyn Executor,
     base: &RunConfig,
     lrs: &[f64],
     score_format: &str,

@@ -1,12 +1,13 @@
-//! The chunked training loop: one PJRT call runs `steps_per_call`
-//! optimizer steps (a `lax.scan` inside the artifact); state
-//! round-trips as literals between chunks (DESIGN.md §2).
+//! The chunked training loop: one backend call runs `steps_per_call`
+//! optimizer steps (a `lax.scan` inside the PJRT artifact, an
+//! interpreted loop in the native backend); state round-trips as
+//! backend-neutral values between chunks (DESIGN.md §2).
 
 use crate::config::RunConfig;
 use crate::data::TokenBatcher;
-use crate::runtime::literals::{self, Literal};
+use crate::runtime::executor::{value, Executor, Value};
 use crate::runtime::manifest::{ArtifactEntry, Role};
-use crate::runtime::{state, Engine, TrainState};
+use crate::runtime::{state, TrainState};
 use crate::tensor::HostTensor;
 use crate::util::rng::Rng;
 use anyhow::{anyhow, bail, Result};
@@ -17,44 +18,42 @@ use super::metrics::MetricsLogger;
 
 /// Where per-step batches come from.
 pub enum DataSource {
-    /// synthetic tasks sample in-graph from the PJRT key
+    /// synthetic tasks sample in-graph from the per-chunk key
     InGraph,
     /// token LM: host-side batcher supplies `[K, B, T+1]` chunks
     Tokens(TokenBatcher),
 }
 
 pub struct Trainer<'e> {
-    pub engine: &'e Engine,
+    pub engine: &'e dyn Executor,
     pub cfg: RunConfig,
     pub train: ArtifactEntry,
     pub state: TrainState,
     /// named non-trained inputs (lam, wstar) — empty for the LM
-    pub statics: Vec<(String, Literal)>,
+    pub statics: Vec<(String, Value)>,
     pub data: DataSource,
     pub rng: Rng,
     pub step: usize,
 }
 
 impl<'e> Trainer<'e> {
-    /// Build a trainer: resolve artifacts, init params via the init
+    /// Build a trainer: resolve programs, init params via the init
     /// program, zero the optimizer state, set up statics.
     pub fn new(
-        engine: &'e Engine,
+        engine: &'e dyn Executor,
         cfg: RunConfig,
         statics: Vec<(String, HostTensor)>,
         data: DataSource,
     ) -> Result<Trainer<'e>> {
         let train = engine
-            .manifest
+            .manifest()
             .find_train(&cfg.model, &cfg.method, &cfg.format)?
             .clone();
-        let init = engine.manifest.find_init(&cfg.model)?.clone();
+        let init = engine.manifest().find_init(&cfg.model)?.clone();
         let mut rng = Rng::new(cfg.seed);
         let state = state::init_train_state(engine, &train, &init, rng.jax_key())?;
-        let statics = statics
-            .into_iter()
-            .map(|(n, t)| Ok((n, literals::to_literal(&t)?)))
-            .collect::<Result<Vec<_>>>()?;
+        let statics: Vec<(String, Value)> =
+            statics.into_iter().map(|(n, t)| (n, value(t))).collect();
         // validate statics against the manifest up front
         for s in train.input_specs(Role::Static) {
             if !statics.iter().any(|(n, _)| n == &s.name) {
@@ -69,13 +68,13 @@ impl<'e> Trainer<'e> {
     }
 
     /// Assemble the positional argument list for one chunk call.
-    fn build_args(&mut self) -> Result<Vec<Literal>> {
+    fn build_args(&mut self) -> Result<Vec<Value>> {
         let k = self.steps_per_call();
         let mut args = Vec::with_capacity(self.train.inputs.len());
-        let mut state_iter = self.state.literals().iter();
+        let mut state_iter = self.state.values().iter();
         let lrs: Vec<f32> = (0..k).map(|i| self.cfg.lr_at(self.step + i) as f32).collect();
         for spec in self.train.inputs.clone() {
-            let lit = match spec.role {
+            let arg = match spec.role {
                 Role::Param | Role::Opt => state_iter
                     .next()
                     .ok_or_else(|| anyhow!("state exhausted at {:?}", spec.name))?
@@ -84,28 +83,24 @@ impl<'e> Trainer<'e> {
                     .statics
                     .iter()
                     .find(|(n, _)| n == &spec.name)
-                    .map(|(_, l)| l.clone())
+                    .map(|(_, v)| v.clone())
                     .ok_or_else(|| anyhow!("missing static {:?}", spec.name))?,
                 Role::Data => match &mut self.data {
-                    DataSource::Tokens(b) => {
-                        literals::to_literal(&b.train_chunk(k, &mut self.rng))?
-                    }
+                    DataSource::Tokens(b) => value(b.train_chunk(k, &mut self.rng)),
                     DataSource::InGraph => bail!("{} wants data input", self.train.name),
                 },
                 Role::Key => {
                     let key = self.rng.jax_key();
-                    literals::to_literal(&HostTensor::from_u32(&[2], key.to_vec()))?
+                    value(HostTensor::from_u32(&[2], key.to_vec()))
                 }
                 Role::Scalar => match spec.name.as_str() {
-                    "lrs" => literals::to_literal(&HostTensor::from_f32(&[k], lrs.clone()))?,
-                    "lam_reg" => {
-                        literals::to_literal(&HostTensor::scalar_f32(self.cfg.lambda as f32))?
-                    }
+                    "lrs" => value(HostTensor::from_f32(&[k], lrs.clone())),
+                    "lam_reg" => value(HostTensor::scalar_f32(self.cfg.lambda as f32)),
                     other => bail!("unknown scalar input {other:?}"),
                 },
                 Role::Metric => bail!("metric role on an input"),
             };
-            args.push(lit);
+            args.push(arg);
         }
         Ok(args)
     }
@@ -117,8 +112,8 @@ impl<'e> Trainer<'e> {
         let mut out = self.engine.call(&self.train, &args)?;
         let n_metrics = 2; // base_losses, total_losses
         let metrics_start = out.len() - n_metrics;
-        let totals = literals::to_host(&out[metrics_start + 1])?.as_f32();
-        let bases = literals::to_host(&out[metrics_start])?.as_f32();
+        let totals = out[metrics_start + 1].as_f32();
+        let bases = out[metrics_start].as_f32();
         out.truncate(metrics_start);
         self.state.adopt(&mut out)?;
         let k = self.steps_per_call();

@@ -11,7 +11,7 @@ use crate::config::{RunConfig, Schedule};
 use crate::coordinator::{DataSource, Evaluator, MetricsLogger, Trainer};
 use crate::formats::csv::CsvWriter;
 use crate::quant::{cast, QuantFormat, Rounding};
-use crate::runtime::Engine;
+use crate::runtime::Executor;
 use crate::util::rng::Rng;
 use anyhow::Result;
 use std::path::Path;
@@ -21,7 +21,7 @@ use super::common::{scaled, synth_statics};
 const D: usize = 12000;
 const BLOCKS: [usize; 5] = [0, 1024, 256, 64, 16];
 
-pub fn run(engine: &Engine, out_dir: &Path) -> Result<()> {
+pub fn run(engine: &dyn Executor, out_dir: &Path) -> Result<()> {
     std::fs::create_dir_all(out_dir)?;
     // one FP32 training run (PTQ-style master weights)
     let mut cfg = RunConfig::default();

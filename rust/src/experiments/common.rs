@@ -6,7 +6,7 @@ use crate::coordinator::{DataSource, Evaluator, MetricsLogger, Trainer};
 use crate::data::{power_law_spectrum, sample_wstar};
 use crate::formats::csv::CsvWriter;
 use crate::info;
-use crate::runtime::Engine;
+use crate::runtime::Executor;
 use crate::tensor::HostTensor;
 use crate::util::rng::Rng;
 use anyhow::Result;
@@ -15,7 +15,7 @@ use std::path::Path;
 /// Run one (method, format) training run and return its metrics.
 /// `label` names the CSV rows + jsonl file.
 pub fn run_method(
-    engine: &Engine,
+    engine: &dyn Executor,
     cfg: &RunConfig,
     statics: Vec<(String, HostTensor)>,
     data: DataSource,

@@ -7,7 +7,7 @@ use crate::config::{RunConfig, Schedule};
 use crate::coordinator::DataSource;
 use crate::data::synth::population_loss;
 use crate::quant::{cast, QuantFormat, Rounding};
-use crate::runtime::Engine;
+use crate::runtime::Executor;
 use crate::util::rng::Rng;
 use anyhow::Result;
 use std::path::Path;
@@ -31,7 +31,7 @@ fn cfg_for(method: &str, lr: f64, steps: usize) -> RunConfig {
     cfg
 }
 
-pub fn run(engine: &Engine, out_dir: &Path) -> Result<()> {
+pub fn run(engine: &dyn Executor, out_dir: &Path) -> Result<()> {
     std::fs::create_dir_all(out_dir)?;
     let steps = scaled(3000);
     // Small per-method LR grid (the paper sweeps App. A.5 and reports

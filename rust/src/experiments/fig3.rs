@@ -9,7 +9,7 @@ use crate::coordinator::DataSource;
 use crate::data::synth::population_loss;
 use crate::formats::csv::CsvWriter;
 use crate::quant::{cast, QuantFormat, Rounding};
-use crate::runtime::Engine;
+use crate::runtime::Executor;
 use crate::util::rng::Rng;
 use anyhow::Result;
 use std::path::Path;
@@ -56,7 +56,7 @@ fn gt_loss(k: usize, lam: &[f32], wstar: &[f32], rounding: Rounding, rng: &mut R
     population_loss(&v, wstar, lam)
 }
 
-pub fn run(engine: &Engine, out_dir: &Path) -> Result<()> {
+pub fn run(engine: &dyn Executor, out_dir: &Path) -> Result<()> {
     std::fs::create_dir_all(out_dir)?;
     let steps = scaled(1600);
     let mut w = CsvWriter::create(

@@ -9,7 +9,7 @@
 use crate::config::{RunConfig, Schedule};
 use crate::coordinator::{DataSource, MetricsLogger};
 use crate::data::{ByteTokenizer, TokenBatcher, ZipfMarkovCorpus};
-use crate::runtime::Engine;
+use crate::runtime::Executor;
 use anyhow::Result;
 use std::path::Path;
 
@@ -85,9 +85,9 @@ pub const FIG12: LmExp = LmExp {
 
 /// Corpus shared by every run in an experiment (identical data stream
 /// per method, as in the paper's controlled comparisons).
-fn make_batcher(model: &str, engine: &Engine) -> Result<TokenBatcher> {
+fn make_batcher(model: &str, engine: &dyn Executor) -> Result<TokenBatcher> {
     // read batch geometry from the eval artifact's data spec
-    let eval = engine.manifest.find_eval(model)?;
+    let eval = engine.manifest().find_eval(model)?;
     let data = eval
         .inputs
         .iter()
@@ -99,7 +99,7 @@ fn make_batcher(model: &str, engine: &Engine) -> Result<TokenBatcher> {
     Ok(TokenBatcher::new(toks, batch, t1 - 1, 0.05))
 }
 
-pub fn run_exp(engine: &Engine, exp: &LmExp, out_dir: &Path) -> Result<()> {
+pub fn run_exp(engine: &dyn Executor, exp: &LmExp, out_dir: &Path) -> Result<()> {
     std::fs::create_dir_all(out_dir)?;
     let steps = scaled(exp.steps);
     let mut labelled: Vec<(String, MetricsLogger)> = Vec::new();

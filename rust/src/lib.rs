@@ -5,9 +5,15 @@
 //! rust + JAX + Pallas system. This crate is **Layer 3**: the runtime
 //! coordinator that owns training orchestration, data pipelines,
 //! quantized evaluation, checkpointing, experiment regeneration and
-//! benchmarking. The JAX/Pallas layers exist only at build time; their
-//! AOT-lowered HLO artifacts are loaded here through the PJRT C API
-//! (`xla` crate) and executed with no python on the request path.
+//! benchmarking.
+//!
+//! Execution is backend-pluggable behind the `runtime::Executor` trait
+//! (DESIGN.md §3): the default **native** backend runs the synthetic
+//! train/eval programs in pure rust — exact RR/RTN casts and the Eq. 3
+//! penalty included — with no artifacts, python, or XLA anywhere;
+//! `--features pjrt` adds the PJRT backend that loads AOT-lowered HLO
+//! artifacts from the JAX/Pallas build layers and executes them with no
+//! python on the request path.
 //!
 //! Module map (see DESIGN.md §5):
 //!
@@ -19,8 +25,9 @@
 //! * [`config`] — TOML-subset config system + typed run configs.
 //! * [`data`] — synthetic regression streams, Zipf–Markov corpus,
 //!   byte tokenizer, batcher.
-//! * [`runtime`] — PJRT client, manifest-driven artifact registry,
-//!   train-state management, chunked execution.
+//! * [`runtime`] — the `Executor` backend trait, manifest-driven
+//!   program registry, train-state management, the native backend and
+//!   (feature-gated) the PJRT engine.
 //! * [`coordinator`] — trainer, evaluator, LR schedules, sweeps, metrics.
 //! * [`checkpoint`] — binary tensor archive.
 //! * [`experiments`] — one regenerator per paper figure/table.

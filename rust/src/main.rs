@@ -1,12 +1,17 @@
 //! lotion-rs — the L3 coordinator CLI.
 //!
 //! ```text
-//! lotion-rs train --config runs/example.toml [--set k=v ...]
+//! lotion-rs train --config runs/example.toml [--set k=v ...] [--backend native|pjrt|auto]
 //! lotion-rs exp <fig2|fig3|fig6|fig9|fig10|fig11|fig12|table1|table2|all>
 //! lotion-rs sweep --config runs/example.toml --lrs 0.1,0.3,1.0
 //! lotion-rs inspect [--artifacts artifacts]
 //! lotion-rs data-report
 //! ```
+//!
+//! Every subcommand runs against a backend picked by `--backend`:
+//! `native` (pure-rust, no artifacts needed — the default when no
+//! artifact directory is present), `pjrt` (the AOT/XLA path, needs
+//! `--features pjrt` and `make artifacts`), or `auto` (the default).
 
 use anyhow::{bail, Context, Result};
 use lotion::cli::Args;
@@ -14,7 +19,7 @@ use lotion::config::{RunConfig, TomlDoc};
 use lotion::coordinator::{DataSource, Evaluator, MetricsLogger, Trainer};
 use lotion::data::{ByteTokenizer, TokenBatcher, ZipfMarkovCorpus};
 use lotion::experiments::registry;
-use lotion::runtime::{Engine, Role};
+use lotion::runtime::{auto_executor, Executor, NativeEngine, Role};
 use lotion::{checkpoint::Checkpoint, formats::json::Json, info};
 use std::path::{Path, PathBuf};
 
@@ -30,8 +35,12 @@ const USAGE: &str = "usage: lotion-rs <train|exp|sweep|inspect|data-report> [fla
   train       --config <toml> [--set k=v ...] [--out results/<name>]
   exp         <id|all> [--results results] [--artifacts artifacts]
   sweep       --config <toml> --lrs 0.1,0.3 [--score-format int4] [--score-rounding rtn]
-  inspect     [--artifacts artifacts]           list artifacts + compile timings
-  data-report [--bytes 1000000]                 corpus statistics";
+  inspect     [--artifacts artifacts]           list programs + execution timings
+  data-report [--bytes 1000000]                 corpus statistics
+common flags:
+  --backend {auto|native|pjrt}   execution backend (default: auto — pjrt
+                                 if built with it and artifacts exist,
+                                 else the pure-rust native backend)";
 
 fn run() -> Result<()> {
     let args = Args::from_env()?;
@@ -43,6 +52,18 @@ fn run() -> Result<()> {
         "data-report" => cmd_data_report(&args),
         "" => bail!("{USAGE}"),
         other => bail!("unknown subcommand {other:?}\n{USAGE}"),
+    }
+}
+
+/// Resolve the `--backend` flag into an executor.
+fn make_executor(args: &Args, artifacts_dir: &str) -> Result<Box<dyn Executor>> {
+    match args.backend()? {
+        "native" => Ok(Box::new(NativeEngine::new())),
+        "pjrt" => match lotion::runtime::pjrt_executor(Path::new(artifacts_dir))? {
+            Some(engine) => Ok(engine),
+            None => bail!("this build has no PJRT backend (rebuild with `--features pjrt`)"),
+        },
+        _ => auto_executor(Path::new(artifacts_dir)),
     }
 }
 
@@ -60,11 +81,11 @@ fn load_config(args: &Args) -> Result<RunConfig> {
 /// Build the data source a model needs (token batcher for LMs,
 /// in-graph sampling for the synthetic tasks) plus synthetic statics.
 fn build_inputs(
-    engine: &Engine,
+    engine: &dyn Executor,
     cfg: &RunConfig,
     corpus_seed: u64,
 ) -> Result<(Vec<(String, lotion::tensor::HostTensor)>, DataSource)> {
-    let train = engine.manifest.find_train(&cfg.model, &cfg.method, &cfg.format)?;
+    let train = engine.manifest().find_train(&cfg.model, &cfg.method, &cfg.format)?;
     let wants_data = train.inputs.iter().any(|s| s.role == Role::Data);
     let wants_statics = train.inputs.iter().any(|s| s.role == Role::Static);
     if wants_data {
@@ -93,13 +114,14 @@ fn build_inputs(
 
 fn cmd_train(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
-    let engine = Engine::new(Path::new(&cfg.artifacts_dir))?;
+    let engine = make_executor(args, &cfg.artifacts_dir)?;
+    let engine: &dyn Executor = &*engine;
     let out_dir = PathBuf::from(args.str_or("out", &format!("{}/{}", cfg.results_dir, cfg.name)));
     std::fs::create_dir_all(&out_dir)?;
-    let (statics, data) = build_inputs(&engine, &cfg, 7)?;
+    let (statics, data) = build_inputs(engine, &cfg, 7)?;
     let mut metrics = MetricsLogger::to_file(&out_dir.join("metrics.jsonl"))?;
-    let mut trainer = Trainer::new(&engine, cfg.clone(), statics, data)?;
-    let mut eval = Evaluator::new(&engine, &cfg.model, cfg.seed)?;
+    let mut trainer = Trainer::new(engine, cfg.clone(), statics, data)?;
+    let mut eval = Evaluator::new(engine, &cfg.model, cfg.seed)?;
 
     if cfg.checkpoint_every > 0 {
         // checkpointed loop
@@ -148,10 +170,10 @@ fn cmd_exp(args: &Args) -> Result<()> {
     let id = args.positional.first().map(String::as_str).unwrap_or("all");
     let artifacts = args.str_or("artifacts", "artifacts");
     let results = PathBuf::from(args.str_or("results", "results"));
-    let engine = Engine::new(Path::new(&artifacts))?;
-    registry::run(&engine, id, &results)?;
-    // dump the L3 execution profile alongside results
-    let mut prof = String::from("artifact,compile_s,calls,exec_s\n");
+    let engine = make_executor(args, &artifacts)?;
+    registry::run(&*engine, id, &results)?;
+    // dump the execution profile alongside results
+    let mut prof = String::from("program,compile_s,calls,exec_s\n");
     for (name, c, n, e) in engine.timing_report() {
         prof.push_str(&format!("{name},{c:.3},{n},{e:.3}\n"));
     }
@@ -169,14 +191,15 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         .collect::<Result<_>>()?;
     let score_fmt = args.str_or("score-format", &cfg.format);
     let score_rounding = args.str_or("score-rounding", "rtn");
-    let engine = Engine::new(Path::new(&cfg.artifacts_dir))?;
+    let engine = make_executor(args, &cfg.artifacts_dir)?;
+    let engine: &dyn Executor = &*engine;
     let results = lotion::coordinator::sweep::lr_sweep(
-        &engine,
+        engine,
         &cfg,
         &lrs,
         &score_fmt,
         &score_rounding,
-        &|| build_inputs(&engine, &cfg, 7),
+        &|| build_inputs(engine, &cfg, 7),
     )?;
     println!("{:<12} {:>14} {:>10}", "lr", "score", "diverged");
     for r in &results {
@@ -190,12 +213,12 @@ fn cmd_sweep(args: &Args) -> Result<()> {
 
 fn cmd_inspect(args: &Args) -> Result<()> {
     let artifacts = args.str_or("artifacts", "artifacts");
-    let engine = Engine::new(Path::new(&artifacts))?;
+    let engine = make_executor(args, &artifacts)?;
     println!(
         "{:<48} {:>6} {:>8} {:>10} {:>10}",
-        "artifact", "kind", "inputs", "params(M)", "K"
+        "program", "kind", "inputs", "params(M)", "K"
     );
-    for e in engine.manifest.artifacts.values() {
+    for e in engine.manifest().artifacts.values() {
         let params: usize = e
             .inputs
             .iter()

@@ -49,6 +49,24 @@ mod tests {
     }
 
     #[test]
+    fn ranges_empty_tensor_yields_no_blocks() {
+        assert_eq!(block_ranges(0, 4).count(), 0);
+        assert_eq!(block_ranges(0, 0).count(), 0);
+        let fmt = QuantFormat::int4();
+        assert!(block_scales(&[], &fmt).is_empty());
+    }
+
+    #[test]
+    fn block_size_larger_than_tensor_is_one_partial_block() {
+        let r: Vec<_> = block_ranges(3, 8).collect();
+        assert_eq!(r, vec![(0, 3)]);
+        let mut fmt = QuantFormat::int4();
+        fmt.block_size = 8;
+        let s = block_scales(&[1.0, -14.0, 3.5], &fmt);
+        assert_eq!(s, vec![2.0]); // same as per-tensor: 14/7
+    }
+
+    #[test]
     fn per_tensor_scale() {
         let fmt = QuantFormat::int4();
         let w = [1.0f32, -14.0, 3.5];

@@ -141,4 +141,45 @@ mod tests {
         assert_eq!(f.bracket(3.25), (3.0, 4.0));
         assert_eq!(f.bracket(-3.25), (-4.0, -3.0));
     }
+
+    #[test]
+    fn fp4_negative_zero_behaves_like_zero() {
+        // -0.0 == 0.0 in IEEE comparisons, so the codebook search must
+        // land exactly on the zero level, not a (-0.5, 0) bracket
+        let f = QuantFormat::fp4();
+        assert_eq!(f.bracket(-0.0), (0.0, 0.0));
+        assert_eq!(f.rtn(-0.0), 0.0);
+        // near-zero negatives: mid(-0.5, 0) = -0.25
+        assert_eq!(f.rtn(-0.2), 0.0);
+        assert_eq!(f.rtn(-0.3), -0.5);
+        assert_eq!(f.rtn(-0.25), -0.5); // tie goes to the lower level
+    }
+
+    #[test]
+    fn fp4_clamps_at_codebook_extremes() {
+        // absmax scaling keeps |z| <= 6, but the lattice ops must still
+        // saturate for out-of-range queries (bracket upper = +inf)
+        let f = QuantFormat::fp4();
+        assert_eq!(f.bracket(6.0), (6.0, 6.0));
+        assert_eq!(f.bracket(6.5), (6.0, f32::INFINITY));
+        assert_eq!(f.rtn(6.5), 6.0);
+        assert_eq!(f.rtn(100.0), 6.0);
+        assert_eq!(f.rtn(-6.0), -6.0);
+        assert_eq!(f.rtn(-100.0), -6.0);
+        // just inside the boundary: mid(4, 6) = 5
+        assert_eq!(f.rtn(5.999), 6.0);
+    }
+
+    #[test]
+    fn fp4_cast_absmax_maps_to_qmax_exactly() {
+        use crate::quant::rounding::cast_rtn;
+        let f = QuantFormat::fp4();
+        let mut w = vec![0.1f32, -9.0, 0.0];
+        cast_rtn(&mut w, &f);
+        // scale = 9/6 = 1.5; the absmax element sits exactly on +-qmax
+        assert_eq!(w[1], -9.0);
+        assert_eq!(w[2], 0.0);
+        // 0.1/1.5 = 0.0667 -> rounds to 0 (mid(0, 0.5) = 0.25)
+        assert_eq!(w[0], 0.0);
+    }
 }

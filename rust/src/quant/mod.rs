@@ -20,4 +20,7 @@ pub mod format;
 pub mod rounding;
 
 pub use format::{QuantFormat, FP4_LEVELS};
-pub use rounding::{cast, cast_rr, cast_rtn, lotion_penalty, sigma2, Rounding};
+pub use rounding::{
+    cast, cast_rr, cast_rtn, lotion_penalty, lotion_penalty_and_grad, lotion_penalty_grad,
+    sigma2, Rounding,
+};

@@ -90,14 +90,45 @@ pub fn sigma2(w: &[f32], fmt: &QuantFormat) -> Vec<f32> {
     out
 }
 
-/// LOTION penalty (Eq. 3) on the host side — used by Fig. 6 and parity
-/// tests, not the training hot path (that runs in the L1 kernel).
+/// LOTION penalty (Eq. 3) on the host side — used by the native
+/// backend's train step, Fig. 6 and parity tests. (The PJRT path runs
+/// it in the L1 kernel instead.)
 pub fn lotion_penalty(w: &[f32], fisher: &[f32], fmt: &QuantFormat) -> f64 {
     sigma2(w, fmt)
         .iter()
         .zip(fisher)
         .map(|(s2, f)| 0.5 * (*s2 as f64) * (*f as f64))
         .sum()
+}
+
+/// Gradient of the Eq. 3 penalty w.r.t. `w`, with stop-grad through the
+/// block scales and the Fisher diagonal (the kernel's VJP semantics,
+/// `ref.py::lotion_penalty_grad_ref`):
+///
+/// uniform lattice:  `d/dw [0.5 f s^2 Δ(1-Δ)] = 0.5 f s (1 - 2Δ)`
+/// codebook lattice: `d/dw [0.5 f s^2 (u-z)(z-l)] = 0.5 f s (u+l-2z)`
+pub fn lotion_penalty_grad(w: &[f32], fisher: &[f32], fmt: &QuantFormat) -> Vec<f32> {
+    lotion_penalty_and_grad(w, fisher, fmt).1
+}
+
+/// Penalty value + gradient in one lattice pass (one `block_scales` +
+/// one `bracket` per element instead of two — the native backend calls
+/// this every optimizer step on every quantized tensor).
+pub fn lotion_penalty_and_grad(w: &[f32], fisher: &[f32], fmt: &QuantFormat) -> (f64, Vec<f32>) {
+    let scales = block_scales(w, fmt);
+    let mut grad = vec![0f32; w.len()];
+    let mut penalty = 0.0f64;
+    for (bi, (s, e)) in block_ranges(w.len(), fmt.block_size).enumerate() {
+        let sb = scales[bi];
+        for i in s..e {
+            let z = w[i] / sb;
+            let (l, u) = fmt.bracket(z);
+            penalty += 0.5 * (fisher[i] as f64) * (sb as f64) * (sb as f64)
+                * ((u - z) as f64) * ((z - l) as f64);
+            grad[i] = 0.5 * fisher[i] * sb * (u + l - 2.0 * z);
+        }
+    }
+    (penalty, grad)
 }
 
 #[cfg(test)]
@@ -194,16 +225,51 @@ mod tests {
 
     #[test]
     fn sigma2_zero_on_lattice() {
+        // direct lattice construction (a cast tensor is only on the
+        // lattice w.r.t. its *own* absmax scale, so build one exactly)
         let fmt = QuantFormat::int4();
-        let mut w = vec![0.3f32, -0.7, 1.1];
-        cast_rtn(&mut w, &fmt);
-        // after casting, every element is on the lattice w.r.t. the *new*
-        // scale only if the absmax element kept its magnitude; use the
-        // direct construction instead:
         let s = 0.25f32;
         let w = vec![0.0f32, s * 3.0, -s * 7.0, s * 5.0];
         for v in sigma2(&w, &fmt) {
             assert!(v.abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn penalty_grad_matches_finite_differences() {
+        // absmax element (1.4) is left unperturbed, so the block scale —
+        // stop-grad in the analytic form — is constant under the FD too
+        let w0 = vec![0.31f32, -0.77, 0.05, 1.4];
+        let fisher = vec![2.0f32, 1.0, 0.5, 0.0];
+        for fmt in [QuantFormat::int4(), QuantFormat::int8(), QuantFormat::fp4()] {
+            let grad = lotion_penalty_grad(&w0, &fisher, &fmt);
+            let eps = 1e-4f32;
+            for i in 0..3 {
+                let mut hi = w0.clone();
+                hi[i] += eps;
+                let mut lo = w0.clone();
+                lo[i] -= eps;
+                let fd = (lotion_penalty(&hi, &fisher, &fmt)
+                    - lotion_penalty(&lo, &fisher, &fmt)) as f32
+                    / (2.0 * eps);
+                assert!(
+                    (fd - grad[i]).abs() < 2e-2 * grad[i].abs().max(1.0),
+                    "{} i={i}: fd={fd} analytic={}",
+                    fmt.name,
+                    grad[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn penalty_grad_zero_on_lattice() {
+        let fmt = QuantFormat::int4();
+        let s = 0.5f32;
+        let w = vec![0.0f32, s * 2.0, -s * 7.0];
+        let fisher = vec![1.0f32; 3];
+        for g in lotion_penalty_grad(&w, &fisher, &fmt) {
+            assert!(g.abs() < 1e-6, "{g}");
         }
     }
 

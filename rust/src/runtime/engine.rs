@@ -1,11 +1,14 @@
-//! PJRT engine: client + compiled-executable cache + flat-tuple calls.
+//! PJRT engine (`--features pjrt`): client + compiled-executable cache
+//! + flat-tuple calls.
 //!
 //! Executables are compiled from HLO text once per process and cached.
 //! A call takes positional `Literal`s matching the manifest's input
 //! specs and returns the decomposed output tuple (the PJRT build on
 //! this image returns one tuple buffer; `decompose_tuple` splits it on
-//! the host — see DESIGN.md §2).
+//! the host — see DESIGN.md §2). The [`Executor`] impl converts the
+//! coordinator's backend-neutral [`Value`]s at the call boundary.
 
+use super::executor::{check_args, value, Executor, Value};
 use super::literals;
 use super::manifest::{ArtifactEntry, Manifest};
 use crate::info;
@@ -66,7 +69,11 @@ impl Engine {
 
     /// Execute an artifact with positional literal inputs; returns the
     /// decomposed output tuple (one literal per manifest output spec).
-    pub fn call(&self, entry: &ArtifactEntry, args: &[literals::Literal]) -> Result<Vec<literals::Literal>> {
+    pub fn call_literals(
+        &self,
+        entry: &ArtifactEntry,
+        args: &[literals::Literal],
+    ) -> Result<Vec<literals::Literal>> {
         if args.len() != entry.inputs.len() {
             bail!(
                 "{}: got {} args, manifest expects {}",
@@ -103,30 +110,29 @@ impl Engine {
         }
         Ok(parts)
     }
+}
 
-    /// Call and pick named outputs as host tensors (convenience for
-    /// metrics / eval values).
-    pub fn call_to_host(
-        &self,
-        entry: &ArtifactEntry,
-        args: &[literals::Literal],
-        outputs: &[&str],
-    ) -> Result<Vec<crate::tensor::HostTensor>> {
-        let parts = self.call(entry, args)?;
-        outputs
+impl Executor for Engine {
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn call(&self, entry: &ArtifactEntry, args: &[Value]) -> Result<Vec<Value>> {
+        check_args(entry, args)?;
+        let lits: Vec<literals::Literal> = args
             .iter()
-            .map(|name| {
-                let idx = entry
-                    .output_index(name)
-                    .ok_or_else(|| anyhow!("{}: no output {name:?}", entry.name))?;
-                literals::to_host(&parts[idx])
-            })
+            .map(|v| literals::to_literal(v))
+            .collect::<Result<_>>()?;
+        let parts = self.call_literals(entry, &lits)?;
+        parts
+            .iter()
+            .map(|l| Ok(value(literals::to_host(l)?)))
             .collect()
     }
 
     /// Per-artifact (compile_s, calls, total_exec_s) — the L3 profile
     /// used by the perf pass and `lotion-rs inspect`.
-    pub fn timing_report(&self) -> Vec<(String, f64, u64, f64)> {
+    fn timing_report(&self) -> Vec<(String, f64, u64, f64)> {
         let mut rows: Vec<_> = self
             .timings
             .borrow()

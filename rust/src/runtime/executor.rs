@@ -1,0 +1,111 @@
+//! The backend abstraction: every execution backend (PJRT, native
+//! pure-rust, future sharded/threaded engines) implements [`Executor`]
+//! and the whole coordinator — trainer, evaluator, sweeps, experiments,
+//! CLI — runs against `&dyn Executor` (DESIGN.md §3).
+//!
+//! Values cross the backend boundary as [`Value`]s: reference-counted
+//! [`HostTensor`]s, so state round-trips between chunks without copies
+//! and a snapshot for a quantized eval cast is one `Rc::clone`.
+
+use super::manifest::{ArtifactEntry, Manifest, TensorSpec};
+use crate::tensor::HostTensor;
+use anyhow::{anyhow, bail, Result};
+use std::rc::Rc;
+
+/// The coordinator-side value type: a cheaply clonable host tensor.
+pub type Value = Rc<HostTensor>;
+
+/// Wrap a tensor as a [`Value`].
+pub fn value(t: HostTensor) -> Value {
+    Rc::new(t)
+}
+
+/// An execution backend: a program registry (the manifest) plus a
+/// positional call interface matching the AOT calling convention
+/// (DESIGN.md §2). Object-safe on purpose — the coordinator holds
+/// `&dyn Executor` so backends can be picked at runtime (`--backend`).
+pub trait Executor {
+    /// The program registry: names, positional I/O specs, metadata.
+    fn manifest(&self) -> &Manifest;
+
+    /// Execute one program with positional inputs; returns one value
+    /// per manifest output spec, in manifest order.
+    fn call(&self, entry: &ArtifactEntry, args: &[Value]) -> Result<Vec<Value>>;
+
+    /// Per-program (compile_s, calls, total_exec_s) — the profile behind
+    /// `lotion-rs inspect` and the exp-run profile dump.
+    fn timing_report(&self) -> Vec<(String, f64, u64, f64)> {
+        Vec::new()
+    }
+
+    /// Call and pick named outputs as host tensors (convenience for
+    /// metrics / eval values).
+    fn call_to_host(
+        &self,
+        entry: &ArtifactEntry,
+        args: &[Value],
+        outputs: &[&str],
+    ) -> Result<Vec<HostTensor>> {
+        let parts = self.call(entry, args)?;
+        outputs
+            .iter()
+            .map(|name| {
+                let idx = entry
+                    .output_index(name)
+                    .ok_or_else(|| anyhow!("{}: no output {name:?}", entry.name))?;
+                Ok(parts[idx].as_ref().clone())
+            })
+            .collect()
+    }
+}
+
+/// Check a host tensor against a manifest spec (shape + dtype).
+pub fn check_value(t: &HostTensor, spec: &TensorSpec) -> Result<()> {
+    if t.shape != spec.shape {
+        bail!("tensor {:?}: shape {:?} != manifest {:?}", spec.name, t.shape, spec.shape);
+    }
+    if t.dtype != spec.dtype {
+        bail!("tensor {:?}: dtype {:?} != manifest {:?}", spec.name, t.dtype, spec.dtype);
+    }
+    Ok(())
+}
+
+/// Validate a positional argument list against an entry's input specs.
+/// Always on: a shape-vector compare per argument is trivial next to
+/// the K-step program it guards, and a silently truncated static (e.g.
+/// a short `lam`) would otherwise train on wrong data in release.
+pub fn check_args(entry: &ArtifactEntry, args: &[Value]) -> Result<()> {
+    use anyhow::Context;
+    if args.len() != entry.inputs.len() {
+        bail!(
+            "{}: got {} args, manifest expects {}",
+            entry.name,
+            args.len(),
+            entry.inputs.len()
+        );
+    }
+    for (v, spec) in args.iter().zip(&entry.inputs) {
+        check_value(v, spec).with_context(|| entry.name.clone())?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::Role;
+    use crate::tensor::DType;
+
+    #[test]
+    fn check_value_catches_mismatches() {
+        let spec = TensorSpec {
+            name: "w".into(),
+            shape: vec![4],
+            dtype: DType::F32,
+            role: Role::Param,
+        };
+        assert!(check_value(&HostTensor::zeros(DType::F32, &[4]), &spec).is_ok());
+        assert!(check_value(&HostTensor::zeros(DType::F32, &[5]), &spec).is_err());
+        assert!(check_value(&HostTensor::zeros(DType::I32, &[4]), &spec).is_err());
+    }
+}

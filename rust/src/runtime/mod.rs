@@ -1,18 +1,63 @@
-//! PJRT runtime: loads the AOT artifacts (HLO text + manifest) and
-//! executes them from the coordinator's hot path.
+//! Runtime layer: execution backends behind the [`Executor`] trait
+//! (DESIGN.md §3) plus the manifest-driven program registry and train
+//! state shared by all of them.
 //!
-//! * [`manifest`] — typed view of `artifacts/manifest.json`.
-//! * [`literals`] — HostTensor ⇄ `xla::Literal` conversions.
-//! * [`engine`] — PJRT client + compiled-executable cache + the
-//!   flat-tuple calling convention (DESIGN.md §2).
+//! * [`executor`] — the backend trait + the [`Value`] tensor currency.
+//! * [`manifest`] — typed program registry (the backend⇄coordinator
+//!   contract; for PJRT it is `artifacts/manifest.json`, the native
+//!   backend synthesizes an equivalent one in memory).
+//! * [`native`] — pure-rust CPU backend: interprets the synthetic
+//!   train/eval/init programs directly over `HostTensor`s.
+//! * [`engine`] / [`literals`] — PJRT client + compiled-executable
+//!   cache + the flat-tuple calling convention (DESIGN.md §2); only
+//!   with `--features pjrt`.
 //! * [`state`] — named train state (params + optimizer) that round-trips
 //!   through executions.
 
+#[cfg(feature = "pjrt")]
 pub mod engine;
+pub mod executor;
+#[cfg(feature = "pjrt")]
 pub mod literals;
 pub mod manifest;
+pub mod native;
 pub mod state;
 
-pub use engine::Engine;
-pub use manifest::{ArtifactEntry, Manifest, Role, TensorSpec};
-pub use state::TrainState;
+#[cfg(feature = "pjrt")]
+pub use self::engine::Engine;
+pub use self::executor::{Executor, Value};
+pub use self::manifest::{ArtifactEntry, Manifest, Role, TensorSpec};
+pub use self::native::NativeEngine;
+pub use self::state::TrainState;
+
+use anyhow::Result;
+use std::path::Path;
+
+/// Pick a backend automatically: PJRT when this build has the `pjrt`
+/// feature *and* an artifact directory is present, the native pure-rust
+/// backend otherwise (it needs no artifacts at all).
+pub fn auto_executor(artifacts_dir: &Path) -> Result<Box<dyn Executor>> {
+    if artifacts_dir.join("manifest.json").exists() {
+        if let Some(engine) = pjrt_executor(artifacts_dir)? {
+            return Ok(engine);
+        }
+    }
+    crate::debug!("no usable PJRT artifacts at {artifacts_dir:?}; using the native backend");
+    Ok(Box::new(NativeEngine::new()))
+}
+
+/// Construct the PJRT backend, or `None` when this build lacks the
+/// `pjrt` feature. The single cfg point shared by [`auto_executor`] and
+/// the CLI's explicit `--backend pjrt`.
+#[cfg(feature = "pjrt")]
+pub fn pjrt_executor(artifacts_dir: &Path) -> Result<Option<Box<dyn Executor>>> {
+    Ok(Some(Box::new(Engine::new(artifacts_dir)?)))
+}
+
+/// Construct the PJRT backend, or `None` when this build lacks the
+/// `pjrt` feature. The single cfg point shared by [`auto_executor`] and
+/// the CLI's explicit `--backend pjrt`.
+#[cfg(not(feature = "pjrt"))]
+pub fn pjrt_executor(_artifacts_dir: &Path) -> Result<Option<Box<dyn Executor>>> {
+    Ok(None)
+}

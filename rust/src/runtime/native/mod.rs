@@ -1,0 +1,519 @@
+//! Native pure-rust CPU backend: executes the synthetic train/eval/init
+//! programs directly over [`HostTensor`]s — no PJRT client, no AOT
+//! artifacts, no python anywhere (DESIGN.md §3).
+//!
+//! The backend exposes the *same* manifest-driven program registry as
+//! the PJRT engine: entry names, positional I/O specs and metadata all
+//! follow the AOT calling convention (DESIGN.md §2), so `Trainer`,
+//! `Evaluator`, sweeps and the experiment regenerators run unchanged on
+//! either backend. What differs is purely how `call` executes: here a
+//! scanned K-step train program is an interpreted loop of
+//! forward/backward/optimizer steps built on the `quant` substrate's
+//! exact RTN/RR casts and the Eq. 3 penalty.
+//!
+//! * [`model`] — linreg / linear2 math (loss, grads, methods, fisher).
+//! * [`optim`] — SGD / Adam steppers + manifest-shaped state packing.
+
+pub mod model;
+pub mod optim;
+
+pub use self::model::{Method, ModelSpec};
+pub use self::optim::OptKind;
+
+use super::executor::{check_args, value, Executor, Value};
+use super::manifest::{ArtifactEntry, Manifest, Role, TensorSpec};
+use crate::quant::QuantFormat;
+use crate::tensor::{DType, HostTensor};
+use crate::util::rng::Rng;
+use anyhow::{anyhow, bail, Result};
+use self::optim::OptState;
+use std::cell::RefCell;
+use std::collections::{BTreeMap, HashMap};
+use std::path::PathBuf;
+use std::time::Instant;
+
+/// A model registered with the native backend: which testbed, which
+/// optimizer, and the chunk length K of its scanned train programs.
+#[derive(Clone, Copy, Debug)]
+pub struct NativeModel {
+    pub spec: ModelSpec,
+    pub opt: OptKind,
+    pub steps_per_call: usize,
+}
+
+/// One executable native program (the registry value behind an entry).
+enum Program {
+    Train {
+        spec: ModelSpec,
+        opt: OptKind,
+        method: Method,
+        fmt: Option<QuantFormat>,
+        k: usize,
+    },
+    Eval {
+        spec: ModelSpec,
+    },
+    Init {
+        spec: ModelSpec,
+    },
+}
+
+/// The native executor: manifest-compatible registry + interpreter.
+pub struct NativeEngine {
+    manifest: Manifest,
+    programs: HashMap<String, Program>,
+    /// cumulative (calls, exec_s) per program
+    timings: RefCell<HashMap<String, (u64, f64)>>,
+}
+
+impl Default for NativeEngine {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl NativeEngine {
+    /// The default registry: the smoke-scale linreg (d=256) used by
+    /// tests/examples plus the paper-scale synthetic problems behind
+    /// `exp fig2`/`exp fig3` (mirrors the AOT `smoke` + `synth` sets).
+    pub fn new() -> NativeEngine {
+        Self::with_models(&Self::default_models())
+    }
+
+    pub fn default_models() -> Vec<NativeModel> {
+        let mut models = vec![
+            NativeModel {
+                spec: ModelSpec::LinReg { d: 256, batch: 64 },
+                opt: OptKind::Sgd,
+                steps_per_call: 8,
+            },
+            NativeModel {
+                spec: ModelSpec::LinReg { d: 12000, batch: 128 },
+                opt: OptKind::Sgd,
+                steps_per_call: 16,
+            },
+        ];
+        for k in [1, 2, 4, 8, 16, 32] {
+            models.push(NativeModel {
+                spec: ModelSpec::Linear2 { d: 12000, k },
+                opt: OptKind::Sgd,
+                steps_per_call: 16,
+            });
+        }
+        models
+    }
+
+    /// Build an engine for an explicit model list (benches and tests
+    /// register custom sizes/optimizers this way).
+    pub fn with_models(models: &[NativeModel]) -> NativeEngine {
+        let mut artifacts = BTreeMap::new();
+        let mut programs = HashMap::new();
+        let mut add = |entry: ArtifactEntry, prog: Program| {
+            programs.insert(entry.name.clone(), prog);
+            artifacts.insert(entry.name.clone(), entry);
+        };
+        for m in models {
+            for method in [Method::Ptq, Method::Qat, Method::Rat, Method::Lotion] {
+                let fmts: Vec<Option<QuantFormat>> = if method == Method::Ptq {
+                    vec![None]
+                } else {
+                    ["int4", "int8", "fp4"]
+                        .iter()
+                        .map(|n| Some(QuantFormat::parse(n, 0).expect("builtin format")))
+                        .collect()
+                };
+                for fmt in fmts {
+                    let entry = train_entry(m, method, fmt.as_ref());
+                    add(
+                        entry,
+                        Program::Train {
+                            spec: m.spec,
+                            opt: m.opt,
+                            method,
+                            fmt,
+                            k: m.steps_per_call.max(1),
+                        },
+                    );
+                }
+            }
+            add(eval_entry(&m.spec), Program::Eval { spec: m.spec });
+            add(init_entry(&m.spec), Program::Init { spec: m.spec });
+        }
+        NativeEngine {
+            manifest: Manifest { dir: PathBuf::from("<native>"), artifacts },
+            programs,
+            timings: RefCell::new(HashMap::new()),
+        }
+    }
+
+    fn run_train(
+        &self,
+        entry: &ArtifactEntry,
+        spec: ModelSpec,
+        opt_kind: OptKind,
+        method: Method,
+        fmt: Option<&QuantFormat>,
+        k: usize,
+        args: &[Value],
+    ) -> Result<Vec<Value>> {
+        let get = input_lookup(entry, args);
+        let lam = get("lam")?.as_f32();
+        let wstar = get("wstar")?.as_f32();
+        let lrs = get("lrs")?.as_f32();
+        let lam_reg = get("lam_reg")?.scalar_to_f32();
+        let param_names: Vec<String> = entry
+            .input_specs(Role::Param)
+            .iter()
+            .map(|s| s.name.clone())
+            .collect();
+        let mut params: Vec<Vec<f32>> = param_names
+            .iter()
+            .map(|n| Ok(get(n)?.as_f32()))
+            .collect::<Result<Vec<_>>>()?;
+        let opt_named: Vec<(String, Vec<f32>)> = entry
+            .input_specs(Role::Opt)
+            .iter()
+            .map(|s| Ok((s.name.clone(), get(&s.name)?.as_f32())))
+            .collect::<Result<Vec<_>>>()?;
+        let mut opt = OptState::unpack(opt_kind, &param_names, &opt_named)?;
+        if lrs.len() != k {
+            bail!("{}: lrs has {} entries, expected K={k}", entry.name, lrs.len());
+        }
+
+        // One stream per chunk, forked per step into data/rounding
+        // streams — the native analogue of the scanned key splits.
+        let mut master = Rng::new(key_seed(get("key")?));
+        let mut bases = Vec::with_capacity(k);
+        let mut totals = Vec::with_capacity(k);
+        for i in 0..k {
+            let mut step_rng = master.fork(i as u64 + 1);
+            let mut data_rng = step_rng.fork(1);
+            let mut round_rng = step_rng.fork(2);
+            let out = spec.step(
+                &params,
+                &lam,
+                &wstar,
+                method,
+                fmt,
+                lam_reg,
+                &mut data_rng,
+                &mut round_rng,
+            );
+            opt.update(&mut params, &out.grads, lrs[i])?;
+            bases.push(out.base as f32);
+            totals.push(out.total as f32);
+        }
+
+        let mut out = Vec::with_capacity(entry.outputs.len());
+        let mut params_iter = params.into_iter();
+        for o in &entry.outputs {
+            let data = match o.role {
+                Role::Param => params_iter
+                    .next()
+                    .ok_or_else(|| anyhow!("output {:?} has no produced param", o.name))?,
+                Role::Opt => opt.pack(&o.name, &param_names)?,
+                Role::Metric if o.name == "base_losses" => bases.clone(),
+                Role::Metric if o.name == "total_losses" => totals.clone(),
+                _ => bail!("unexpected train output {:?} ({:?})", o.name, o.role),
+            };
+            out.push(value(HostTensor::from_f32(&o.shape, data)));
+        }
+        Ok(out)
+    }
+
+    fn run_eval(
+        &self,
+        entry: &ArtifactEntry,
+        spec: ModelSpec,
+        args: &[Value],
+    ) -> Result<Vec<Value>> {
+        let get = input_lookup(entry, args);
+        let lam = get("lam")?.as_f32();
+        let wstar = get("wstar")?.as_f32();
+        let params: Vec<Vec<f32>> = entry
+            .input_specs(Role::Param)
+            .iter()
+            .map(|s| Ok(get(&s.name)?.as_f32()))
+            .collect::<Result<Vec<_>>>()?;
+        let loss = spec.val_loss(&params, &lam, &wstar) as f32;
+        Ok(vec![value(HostTensor::scalar_f32(loss))])
+    }
+
+    fn run_init(
+        &self,
+        entry: &ArtifactEntry,
+        spec: ModelSpec,
+        args: &[Value],
+    ) -> Result<Vec<Value>> {
+        let get = input_lookup(entry, args);
+        let mut rng = Rng::new(key_seed(get("key")?));
+        let params = spec.init(&mut rng);
+        if params.len() != entry.outputs.len() {
+            bail!("init produced {} tensors, manifest expects {}", params.len(), entry.outputs.len());
+        }
+        Ok(entry
+            .outputs
+            .iter()
+            .zip(params)
+            .map(|(o, p)| value(HostTensor::from_f32(&o.shape, p)))
+            .collect())
+    }
+}
+
+impl Executor for NativeEngine {
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn call(&self, entry: &ArtifactEntry, args: &[Value]) -> Result<Vec<Value>> {
+        check_args(entry, args)?;
+        let prog = self
+            .programs
+            .get(&entry.name)
+            .ok_or_else(|| anyhow!("{:?} is not a native program", entry.name))?;
+        let t0 = Instant::now();
+        let out = match prog {
+            Program::Train { spec, opt, method, fmt, k } => {
+                self.run_train(entry, *spec, *opt, *method, fmt.as_ref(), *k, args)
+            }
+            Program::Eval { spec } => self.run_eval(entry, *spec, args),
+            Program::Init { spec } => self.run_init(entry, *spec, args),
+        }?;
+        let mut t = self.timings.borrow_mut();
+        let slot = t.entry(entry.name.clone()).or_insert((0, 0.0));
+        slot.0 += 1;
+        slot.1 += t0.elapsed().as_secs_f64();
+        Ok(out)
+    }
+
+    fn timing_report(&self) -> Vec<(String, f64, u64, f64)> {
+        let mut rows: Vec<_> = self
+            .timings
+            .borrow()
+            .iter()
+            .map(|(k, (n, e))| (k.clone(), 0.0, *n, *e))
+            .collect();
+        rows.sort_by(|a, b| b.3.partial_cmp(&a.3).unwrap());
+        rows
+    }
+}
+
+/// Positional-args lookup by manifest input name.
+fn input_lookup<'a>(
+    entry: &'a ArtifactEntry,
+    args: &'a [Value],
+) -> impl Fn(&str) -> Result<&'a HostTensor> {
+    move |name: &str| {
+        entry
+            .input_index(name)
+            .map(|i| args[i].as_ref())
+            .ok_or_else(|| anyhow!("{}: no input {name:?}", entry.name))
+    }
+}
+
+/// Collapse a `[2]` u32 PRNG key tensor into one rust-side seed.
+fn key_seed(key: &HostTensor) -> u64 {
+    let k = key.as_u32();
+    ((k.first().copied().unwrap_or(0) as u64) << 32) | k.get(1).copied().unwrap_or(0) as u64
+}
+
+fn scalar_spec(name: &str, role: Role) -> TensorSpec {
+    TensorSpec { name: name.to_string(), shape: vec![], dtype: DType::F32, role }
+}
+
+fn train_entry(m: &NativeModel, method: Method, fmt: Option<&QuantFormat>) -> ArtifactEntry {
+    let spec = &m.spec;
+    let k = m.steps_per_call.max(1);
+    let params = spec.param_specs();
+    let opt = m.opt.state_specs(&params);
+    let mut inputs = params.clone();
+    inputs.extend(opt.iter().cloned());
+    inputs.extend(spec.static_specs());
+    inputs.push(TensorSpec {
+        name: "key".to_string(),
+        shape: vec![2],
+        dtype: DType::U32,
+        role: Role::Key,
+    });
+    inputs.push(TensorSpec {
+        name: "lrs".to_string(),
+        shape: vec![k],
+        dtype: DType::F32,
+        role: Role::Scalar,
+    });
+    inputs.push(scalar_spec("lam_reg", Role::Scalar));
+    let mut outputs = params;
+    outputs.extend(opt);
+    for metric in ["base_losses", "total_losses"] {
+        outputs.push(TensorSpec {
+            name: metric.to_string(),
+            shape: vec![k],
+            dtype: DType::F32,
+            role: Role::Metric,
+        });
+    }
+    let fmt_name = fmt.map(|f| f.name.clone()).unwrap_or_else(|| "none".to_string());
+    let name = format!("train_{}_{}_{}_k{}", spec.name(), method.name(), fmt_name, k);
+    ArtifactEntry {
+        file: PathBuf::from(format!("native:{name}")),
+        name,
+        inputs,
+        outputs,
+        kind: "train".to_string(),
+        model_name: spec.name(),
+        method: method.name().to_string(),
+        format: fmt_name,
+        steps_per_call: k,
+        eval_batches: 0,
+        optimizer: m.opt.name().to_string(),
+        quantized: spec.quantized(),
+    }
+}
+
+fn eval_entry(spec: &ModelSpec) -> ArtifactEntry {
+    let mut inputs = spec.param_specs();
+    inputs.extend(spec.static_specs());
+    let name = format!("eval_{}", spec.name());
+    ArtifactEntry {
+        file: PathBuf::from(format!("native:{name}")),
+        name,
+        inputs,
+        outputs: vec![scalar_spec("val_loss", Role::Metric)],
+        kind: "eval".to_string(),
+        model_name: spec.name(),
+        method: String::new(),
+        format: String::new(),
+        steps_per_call: 0,
+        eval_batches: 1,
+        optimizer: String::new(),
+        quantized: spec.quantized(),
+    }
+}
+
+fn init_entry(spec: &ModelSpec) -> ArtifactEntry {
+    let name = format!("init_{}", spec.name());
+    ArtifactEntry {
+        file: PathBuf::from(format!("native:{name}")),
+        name,
+        inputs: vec![TensorSpec {
+            name: "key".to_string(),
+            shape: vec![2],
+            dtype: DType::U32,
+            role: Role::Key,
+        }],
+        outputs: spec.param_specs(),
+        kind: "init".to_string(),
+        model_name: spec.name(),
+        method: String::new(),
+        format: String::new(),
+        steps_per_call: 0,
+        eval_batches: 0,
+        optimizer: String::new(),
+        quantized: spec.quantized(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn zero_args(entry: &ArtifactEntry) -> Vec<Value> {
+        entry
+            .inputs
+            .iter()
+            .map(|s| match s.role {
+                Role::Key => value(HostTensor::from_u32(&[2], vec![7, 11])),
+                Role::Scalar if s.name == "lrs" => {
+                    value(HostTensor::from_f32(&s.shape, vec![0.1; s.elements()]))
+                }
+                _ => value(HostTensor::zeros(s.dtype, &s.shape)),
+            })
+            .collect()
+    }
+
+    #[test]
+    fn registry_is_manifest_compatible() {
+        let eng = NativeEngine::new();
+        let m = eng.manifest();
+        let t = m.find_train("linreg_d256", "lotion", "int4").unwrap();
+        assert_eq!(t.steps_per_call, 8);
+        assert_eq!(t.quantized, vec!["w"]);
+        assert_eq!(t.optimizer, "sgd");
+        assert!(t.input_index("lam_reg").is_some());
+        assert!(m.find_eval("linreg_d256").is_ok());
+        assert!(m.find_init("linear2_d12000_k8").is_ok());
+        // ptq trains unquantized: format key collapses to "none"
+        assert!(m.find_train("linreg_d256", "ptq", "int4").is_ok());
+        let methods = m.methods_for("linreg_d256");
+        assert!(methods.iter().any(|(me, f)| me == "lotion" && f == "fp4"));
+        assert!(m.find_train("lm-tiny", "lotion", "int4").is_err());
+    }
+
+    #[test]
+    fn init_train_eval_roundtrip() {
+        let eng = NativeEngine::with_models(&[NativeModel {
+            spec: ModelSpec::LinReg { d: 16, batch: 8 },
+            opt: OptKind::Sgd,
+            steps_per_call: 4,
+        }]);
+        let m = eng.manifest();
+        let init = m.find_init("linreg_d16").unwrap();
+        let params = eng.call(init, &zero_args(init)).unwrap();
+        assert_eq!(params.len(), 1);
+        assert_eq!(params[0].shape, vec![16]);
+
+        let train = m.find_train("linreg_d16", "lotion", "int4").unwrap();
+        let mut args = zero_args(train);
+        // a non-trivial target makes losses non-zero
+        args[train.input_index("wstar").unwrap()] =
+            value(HostTensor::from_f32(&[16], (0..16).map(|i| i as f32 / 8.0).collect()));
+        args[train.input_index("lam").unwrap()] =
+            value(HostTensor::from_f32(&[16], vec![1.0; 16]));
+        let out = eng.call(train, &args).unwrap();
+        assert_eq!(out.len(), train.outputs.len());
+        let bases = out[train.outputs.len() - 2].as_f32();
+        assert_eq!(bases.len(), 4);
+        assert!(bases.iter().all(|b| b.is_finite()));
+
+        let eval = m.find_eval("linreg_d16").unwrap();
+        let mut eargs = zero_args(eval);
+        eargs[eval.input_index("lam").unwrap()] =
+            value(HostTensor::from_f32(&[16], vec![1.0; 16]));
+        let v = eng.call(eval, &eargs).unwrap();
+        assert!(v[0].scalar_to_f32().is_finite());
+    }
+
+    #[test]
+    fn train_calls_are_deterministic() {
+        let eng = NativeEngine::new();
+        let train = eng.manifest().find_train("linreg_d256", "rat", "int4").unwrap();
+        let mut args = zero_args(train);
+        let d = 256;
+        args[train.input_index("lam").unwrap()] =
+            value(HostTensor::from_f32(&[d], vec![0.5; d]));
+        args[train.input_index("wstar").unwrap()] =
+            value(HostTensor::from_f32(&[d], (0..d).map(|i| (i as f32).sin()).collect()));
+        let a = eng.call(train, &args).unwrap();
+        let b = eng.call(train, &args).unwrap();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.as_ref(), y.as_ref());
+        }
+        // a different key moves the data stream, so the weights differ
+        args[train.input_index("key").unwrap()] =
+            value(HostTensor::from_u32(&[2], vec![99, 100]));
+        let c = eng.call(train, &args).unwrap();
+        assert_ne!(a[0].as_ref(), c[0].as_ref());
+        assert_eq!(eng.timing_report().len(), 1);
+        assert_eq!(eng.timing_report()[0].2, 3);
+    }
+
+    #[test]
+    fn rejects_foreign_entries_and_bad_arity() {
+        let eng = NativeEngine::new();
+        let train = eng.manifest().find_train("linreg_d256", "qat", "int4").unwrap();
+        assert!(eng.call(train, &[]).is_err());
+        let mut fake = train.clone();
+        fake.name = "no_such_program".to_string();
+        assert!(eng.call(&fake, &zero_args(train)).is_err());
+    }
+}

@@ -1,0 +1,421 @@
+//! Native model math: the synthetic testbeds (§4.1 linreg, §4.2
+//! linear2) implemented directly over flat `f32` buffers — forward,
+//! backward, method transformations (PTQ/QAT/RAT/LOTION) and exact
+//! validation losses. Semantics mirror `python/compile/models/*` and
+//! `methods.py`; rounding and the Eq. 3 penalty reuse the `quant`
+//! substrate bit-for-bit (DESIGN.md §3).
+
+use crate::data::synth::population_loss;
+use crate::quant::{cast_rr, cast_rtn, lotion_penalty_and_grad, QuantFormat};
+use crate::runtime::manifest::{Role, TensorSpec};
+use crate::tensor::DType;
+use crate::util::rng::Rng;
+use anyhow::{bail, Result};
+
+/// Training-method transformation of the base loss (methods.py).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Method {
+    Ptq,
+    Qat,
+    Rat,
+    Lotion,
+}
+
+impl Method {
+    pub fn parse(s: &str) -> Result<Method> {
+        Ok(match s {
+            "ptq" => Method::Ptq,
+            "qat" => Method::Qat,
+            "rat" => Method::Rat,
+            "lotion" => Method::Lotion,
+            other => bail!("unknown method {other:?}"),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Method::Ptq => "ptq",
+            Method::Qat => "qat",
+            Method::Rat => "rat",
+            Method::Lotion => "lotion",
+        }
+    }
+}
+
+/// A native testbed model: defines parameter layout, data distribution,
+/// loss/gradients, and the exact Gauss-Newton diagonal LOTION uses.
+#[derive(Clone, Copy, Debug)]
+pub enum ModelSpec {
+    /// §4.1: `y = w*.x`, `x ~ N(0, diag(lam))`, minibatch SGD in-graph.
+    LinReg { d: usize, batch: usize },
+    /// §4.2: `f(x) = (1/k) W2 W1 x`, full-batch exact population loss.
+    Linear2 { d: usize, k: usize },
+}
+
+/// One train step's result: losses plus gradients per parameter.
+pub struct StepOut {
+    pub base: f64,
+    pub total: f64,
+    pub grads: Vec<Vec<f32>>,
+}
+
+fn spec(name: &str, shape: &[usize], role: Role) -> TensorSpec {
+    TensorSpec { name: name.to_string(), shape: shape.to_vec(), dtype: DType::F32, role }
+}
+
+/// Forward weights for a method: QAT sees the RTN cast, RAT the RR
+/// cast (both straight-through on the backward pass), PTQ/LOTION train
+/// on the FP32 master weights.
+fn method_weights(
+    w: &[f32],
+    method: Method,
+    fmt: Option<&QuantFormat>,
+    round_rng: &mut Rng,
+) -> Vec<f32> {
+    let mut out = w.to_vec();
+    if let Some(fmt) = fmt {
+        match method {
+            Method::Qat => cast_rtn(&mut out, fmt),
+            Method::Rat => cast_rr(&mut out, fmt, round_rng),
+            Method::Ptq | Method::Lotion => {}
+        }
+    }
+    out
+}
+
+impl ModelSpec {
+    pub fn name(&self) -> String {
+        match self {
+            ModelSpec::LinReg { d, .. } => format!("linreg_d{d}"),
+            ModelSpec::Linear2 { d, k } => format!("linear2_d{d}_k{k}"),
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        match self {
+            ModelSpec::LinReg { d, .. } | ModelSpec::Linear2 { d, .. } => *d,
+        }
+    }
+
+    /// Parameter specs in canonical (sorted-name) order.
+    pub fn param_specs(&self) -> Vec<TensorSpec> {
+        match self {
+            ModelSpec::LinReg { d, .. } => vec![spec("w", &[*d], Role::Param)],
+            ModelSpec::Linear2 { d, k } => vec![
+                spec("w1", &[*k, *d], Role::Param),
+                spec("w2", &[1, *k], Role::Param),
+            ],
+        }
+    }
+
+    /// Non-trained inputs owned by the coordinator, sorted by name.
+    pub fn static_specs(&self) -> Vec<TensorSpec> {
+        let d = self.dim();
+        vec![spec("lam", &[d], Role::Static), spec("wstar", &[d], Role::Static)]
+    }
+
+    /// Names of the quantized parameter subset.
+    pub fn quantized(&self) -> Vec<String> {
+        match self {
+            ModelSpec::LinReg { .. } => vec!["w".to_string()],
+            ModelSpec::Linear2 { .. } => vec!["w1".to_string(), "w2".to_string()],
+        }
+    }
+
+    /// Fresh parameters in spec order (models/linreg.py, linear2.py).
+    pub fn init(&self, rng: &mut Rng) -> Vec<Vec<f32>> {
+        match self {
+            ModelSpec::LinReg { d, .. } => vec![vec![0.0; *d]],
+            ModelSpec::Linear2 { d, k } => {
+                let mut k1 = rng.fork(1);
+                let mut k2 = rng.fork(2);
+                let scale = 1.0 / (*d as f32).sqrt();
+                let mut w1 = vec![0.0f32; k * d];
+                k1.fill_normal(&mut w1);
+                for v in w1.iter_mut() {
+                    *v *= scale;
+                }
+                let mut w2 = vec![0.0f32; *k];
+                k2.fill_normal(&mut w2);
+                vec![w1, w2]
+            }
+        }
+    }
+
+    /// One training step: method-transformed loss + gradients at the
+    /// current parameters (STE backward through the QAT/RAT casts).
+    #[allow(clippy::too_many_arguments)]
+    pub fn step(
+        &self,
+        params: &[Vec<f32>],
+        lam: &[f32],
+        wstar: &[f32],
+        method: Method,
+        fmt: Option<&QuantFormat>,
+        lam_reg: f32,
+        data_rng: &mut Rng,
+        round_rng: &mut Rng,
+    ) -> StepOut {
+        let (base, mut grads) = match self {
+            ModelSpec::LinReg { d, batch } => {
+                let wq = method_weights(&params[0], method, fmt, round_rng);
+                linreg_loss_grad(*d, *batch, &wq, lam, wstar, data_rng)
+            }
+            ModelSpec::Linear2 { d, k } => {
+                let w1q = method_weights(&params[0], method, fmt, round_rng);
+                let w2q = method_weights(&params[1], method, fmt, round_rng);
+                linear2_loss_grad(*d, *k, &w1q, &w2q, lam, wstar)
+            }
+        };
+        let mut total = base;
+        if method == Method::Lotion {
+            if let Some(fmt) = fmt {
+                for (i, fisher) in self.fisher_exact(params, lam).iter().enumerate() {
+                    let (pen, pg) = lotion_penalty_and_grad(&params[i], fisher, fmt);
+                    total += lam_reg as f64 * pen;
+                    for (g, p) in grads[i].iter_mut().zip(&pg) {
+                        *g += lam_reg * p;
+                    }
+                }
+            }
+        }
+        StepOut { base, total, grads }
+    }
+
+    /// Exact Gauss-Newton diagonal per parameter (the synthetic models'
+    /// `fisher_exact`; stop-grad, evaluated at the master weights).
+    fn fisher_exact(&self, params: &[Vec<f32>], lam: &[f32]) -> Vec<Vec<f32>> {
+        match self {
+            ModelSpec::LinReg { .. } => vec![lam.to_vec()],
+            ModelSpec::Linear2 { d, k } => {
+                let (w1, w2) = (&params[0], &params[1]);
+                let kf = *k as f32;
+                let mut f1 = vec![0.0f32; k * d];
+                let mut f2 = vec![0.0f32; *k];
+                for j in 0..*k {
+                    let wj = w2[j] / kf;
+                    let row = &w1[j * d..(j + 1) * d];
+                    let frow = &mut f1[j * d..(j + 1) * d];
+                    let mut acc = 0.0f32;
+                    for i in 0..*d {
+                        frow[i] = wj * wj * lam[i];
+                        acc += lam[i] * row[i] * row[i];
+                    }
+                    f2[j] = acc / (kf * kf);
+                }
+                vec![f1, f2]
+            }
+        }
+    }
+
+    /// Exact validation loss at the given parameters.
+    pub fn val_loss(&self, params: &[Vec<f32>], lam: &[f32], wstar: &[f32]) -> f64 {
+        match self {
+            ModelSpec::LinReg { .. } => population_loss(&params[0], wstar, lam),
+            ModelSpec::Linear2 { d, k } => {
+                let v = effective_w(*d, *k, &params[0], &params[1]);
+                population_loss(&v, wstar, lam)
+            }
+        }
+    }
+}
+
+/// `v = (1/k) W2 W1` — the effective linear map of the two-layer model.
+fn effective_w(d: usize, k: usize, w1: &[f32], w2: &[f32]) -> Vec<f32> {
+    let mut v = vec![0.0f32; d];
+    for j in 0..k {
+        let wj = w2[j];
+        let row = &w1[j * d..(j + 1) * d];
+        for i in 0..d {
+            v[i] += wj * row[i];
+        }
+    }
+    let kf = k as f32;
+    for vi in v.iter_mut() {
+        *vi /= kf;
+    }
+    v
+}
+
+/// Minibatch loss + gradient for linreg at forward weights `wq`:
+/// `x ~ N(0, diag(lam))`, `y = w*.x`, `L = 0.5 mean((x.wq - y)^2)`,
+/// `dL/dwq = (1/B) X^T r`. Streams one row at a time — no `[B, d]`
+/// batch materialization on the hot path.
+fn linreg_loss_grad(
+    d: usize,
+    batch: usize,
+    wq: &[f32],
+    lam: &[f32],
+    wstar: &[f32],
+    data_rng: &mut Rng,
+) -> (f64, Vec<Vec<f32>>) {
+    let sqrt_lam: Vec<f32> = lam.iter().map(|l| l.sqrt()).collect();
+    let mut grad = vec![0.0f32; d];
+    let mut xrow = vec![0.0f32; d];
+    let mut loss_acc = 0.0f64;
+    for _ in 0..batch {
+        for (x, sl) in xrow.iter_mut().zip(&sqrt_lam) {
+            *x = data_rng.normal_f32() * sl;
+        }
+        let mut y = 0.0f32;
+        let mut pred = 0.0f32;
+        for i in 0..d {
+            y += xrow[i] * wstar[i];
+            pred += xrow[i] * wq[i];
+        }
+        let r = pred - y;
+        loss_acc += (r as f64) * (r as f64);
+        for i in 0..d {
+            grad[i] += r * xrow[i];
+        }
+    }
+    let bf = batch as f32;
+    for g in grad.iter_mut() {
+        *g /= bf;
+    }
+    (0.5 * loss_acc / batch as f64, vec![grad])
+}
+
+/// Exact full-batch loss + gradients for linear2 at forward weights
+/// `(w1q, w2q)`: `L = 0.5 (v - w*)^T diag(lam) (v - w*)` with
+/// `v = (1/k) W2 W1`; gradients by the chain rule through `v`.
+fn linear2_loss_grad(
+    d: usize,
+    k: usize,
+    w1q: &[f32],
+    w2q: &[f32],
+    lam: &[f32],
+    wstar: &[f32],
+) -> (f64, Vec<Vec<f32>>) {
+    let v = effective_w(d, k, w1q, w2q);
+    let kf = k as f32;
+    let mut loss = 0.0f64;
+    let mut g = vec![0.0f32; d]; // dL/dv
+    for i in 0..d {
+        let dv = v[i] - wstar[i];
+        loss += 0.5 * (lam[i] as f64) * (dv as f64) * (dv as f64);
+        g[i] = lam[i] * dv;
+    }
+    let mut gw1 = vec![0.0f32; k * d];
+    let mut gw2 = vec![0.0f32; k];
+    for j in 0..k {
+        let wj = w2q[j] / kf;
+        let row = &w1q[j * d..(j + 1) * d];
+        let grow = &mut gw1[j * d..(j + 1) * d];
+        let mut acc = 0.0f32;
+        for i in 0..d {
+            grow[i] = wj * g[i];
+            acc += g[i] * row[i];
+        }
+        gw2[j] = acc / kf;
+    }
+    (loss, vec![gw1, gw2])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Finite-difference check of linear2 gradients (exact loss, so FD
+    /// converges cleanly).
+    #[test]
+    fn linear2_grads_match_finite_differences() {
+        let (d, k) = (6, 2);
+        let mut rng = Rng::new(3);
+        let mut w1 = vec![0.0f32; k * d];
+        rng.fill_normal(&mut w1);
+        let mut w2 = vec![0.0f32; k];
+        rng.fill_normal(&mut w2);
+        let lam: Vec<f32> = (1..=d).map(|i| 1.0 / i as f32).collect();
+        let mut wstar = vec![0.0f32; d];
+        rng.fill_normal(&mut wstar);
+
+        let (_, grads) = linear2_loss_grad(d, k, &w1, &w2, &lam, &wstar);
+        let eps = 1e-3f32;
+        for idx in 0..k * d {
+            let mut hi = w1.clone();
+            hi[idx] += eps;
+            let mut lo = w1.clone();
+            lo[idx] -= eps;
+            let (lh, _) = linear2_loss_grad(d, k, &hi, &w2, &lam, &wstar);
+            let (ll, _) = linear2_loss_grad(d, k, &lo, &w2, &lam, &wstar);
+            let fd = ((lh - ll) / (2.0 * eps as f64)) as f32;
+            assert!((fd - grads[0][idx]).abs() < 1e-3, "w1[{idx}]: fd={fd} an={}", grads[0][idx]);
+        }
+        for j in 0..k {
+            let mut hi = w2.clone();
+            hi[j] += eps;
+            let mut lo = w2.clone();
+            lo[j] -= eps;
+            let (lh, _) = linear2_loss_grad(d, k, &w1, &hi, &lam, &wstar);
+            let (ll, _) = linear2_loss_grad(d, k, &w1, &lo, &lam, &wstar);
+            let fd = ((lh - ll) / (2.0 * eps as f64)) as f32;
+            assert!((fd - grads[1][j]).abs() < 1e-3, "w2[{j}]: fd={fd} an={}", grads[1][j]);
+        }
+    }
+
+    /// Linreg minibatch gradient is unbiased for the population gradient
+    /// `diag(lam) (w - w*)`; check with a large batch.
+    #[test]
+    fn linreg_grad_approximates_population_gradient() {
+        let d = 8;
+        let mut rng = Rng::new(7);
+        let lam: Vec<f32> = (1..=d).map(|i| 1.0 / (i as f32).powf(1.1)).collect();
+        let mut wstar = vec![0.0f32; d];
+        rng.fill_normal(&mut wstar);
+        let mut w = vec![0.0f32; d];
+        rng.fill_normal(&mut w);
+        let mut data_rng = Rng::new(11);
+        let (_, grads) = linreg_loss_grad(d, 20000, &w, &lam, &wstar, &mut data_rng);
+        for i in 0..d {
+            let pop = lam[i] * (w[i] - wstar[i]);
+            // B = 20000 puts the estimator's std well under this band
+            assert!(
+                (grads[0][i] - pop).abs() < 0.15 * pop.abs() + 0.08,
+                "i={i} grad={} pop={pop}",
+                grads[0][i]
+            );
+        }
+    }
+
+    #[test]
+    fn effective_w_of_gt_construction_is_wstar() {
+        // Lemma 4's GT: rows(W1) = w*, W2 = 1 -> v = w*
+        let (d, k) = (5, 3);
+        let wstar = vec![0.5f32, -1.0, 2.0, 0.0, -0.25];
+        let w1: Vec<f32> = (0..k).flat_map(|_| wstar.iter().copied()).collect();
+        let w2 = vec![1.0f32; k];
+        assert_eq!(effective_w(d, k, &w1, &w2), wstar);
+    }
+
+    #[test]
+    fn lotion_step_adds_penalty_to_total_only() {
+        let m = ModelSpec::Linear2 { d: 4, k: 2 };
+        let mut rng = Rng::new(5);
+        let params = m.init(&mut rng);
+        let lam = vec![1.0f32, 0.5, 0.25, 0.125];
+        let wstar = vec![1.0f32, -1.0, 0.5, -0.5];
+        let fmt = QuantFormat::int4();
+        let mut dr = Rng::new(1);
+        let mut rr = Rng::new(2);
+        let out_ptq =
+            m.step(&params, &lam, &wstar, Method::Ptq, None, 0.0, &mut dr, &mut rr);
+        let mut dr = Rng::new(1);
+        let mut rr = Rng::new(2);
+        let out_lotion =
+            m.step(&params, &lam, &wstar, Method::Lotion, Some(&fmt), 1.0, &mut dr, &mut rr);
+        assert!((out_ptq.base - out_lotion.base).abs() < 1e-9);
+        assert!(out_lotion.total >= out_lotion.base); // penalty is >= 0
+        assert_eq!(out_lotion.grads.len(), 2);
+    }
+
+    #[test]
+    fn val_loss_zero_at_gt() {
+        let m = ModelSpec::Linear2 { d: 3, k: 2 };
+        let wstar = vec![0.25f32, -0.75, 1.5];
+        let lam = vec![1.0f32, 0.5, 0.25];
+        let w1: Vec<f32> = (0..2).flat_map(|_| wstar.iter().copied()).collect();
+        let w2 = vec![1.0f32; 2];
+        assert_eq!(m.val_loss(&[w1, w2], &lam, &wstar), 0.0);
+    }
+}

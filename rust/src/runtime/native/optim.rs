@@ -1,0 +1,215 @@
+//! Native optimizer steppers: SGD and Adam over named parameter lists,
+//! mirroring `python/compile/optim.py` (DESIGN.md §3). Optimizer state
+//! crosses the manifest boundary as flat tensors whose names follow the
+//! python layout — `t` (step counter), `m.<param>` / `v.<param>` for
+//! Adam moments — sorted lexicographically, exactly as
+//! `_specs_from_tree` orders them on the AOT side.
+
+use crate::runtime::manifest::{Role, TensorSpec};
+use crate::tensor::DType;
+use anyhow::{anyhow, bail, Result};
+
+const B1: f32 = 0.9;
+const B2: f32 = 0.999;
+const EPS: f32 = 1e-8;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OptKind {
+    Sgd,
+    Adam,
+}
+
+impl OptKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            OptKind::Sgd => "sgd",
+            OptKind::Adam => "adam",
+        }
+    }
+
+    /// Optimizer-state tensor specs for a parameter list, in the
+    /// canonical (sorted-by-name) manifest order.
+    pub fn state_specs(self, params: &[TensorSpec]) -> Vec<TensorSpec> {
+        let mut specs = vec![TensorSpec {
+            name: "t".to_string(),
+            shape: vec![],
+            dtype: DType::F32,
+            role: Role::Opt,
+        }];
+        if self == OptKind::Adam {
+            for p in params {
+                for prefix in ["m", "v"] {
+                    specs.push(TensorSpec {
+                        name: format!("{prefix}.{}", p.name),
+                        shape: p.shape.clone(),
+                        dtype: DType::F32,
+                        role: Role::Opt,
+                    });
+                }
+            }
+        }
+        specs.sort_by(|a, b| a.name.cmp(&b.name));
+        specs
+    }
+}
+
+/// In-flight optimizer state for one train call. Moments are indexed by
+/// parameter position (the order of the train entry's param specs).
+pub struct OptState {
+    pub kind: OptKind,
+    pub t: f32,
+    /// Adam first/second moments per parameter (empty for SGD).
+    pub m: Vec<Vec<f32>>,
+    pub v: Vec<Vec<f32>>,
+}
+
+impl OptState {
+    /// Rebuild state from named flat tensors (one `(name, data)` pair
+    /// per opt-role input, manifest order).
+    pub fn unpack(
+        kind: OptKind,
+        param_names: &[String],
+        named: &[(String, Vec<f32>)],
+    ) -> Result<OptState> {
+        let find = |name: &str| -> Result<&Vec<f32>> {
+            named
+                .iter()
+                .find(|(n, _)| n == name)
+                .map(|(_, d)| d)
+                .ok_or_else(|| anyhow!("missing optimizer tensor {name:?}"))
+        };
+        let t = *find("t")?
+            .first()
+            .ok_or_else(|| anyhow!("empty optimizer step counter"))?;
+        let (mut m, mut v) = (Vec::new(), Vec::new());
+        if kind == OptKind::Adam {
+            for p in param_names {
+                m.push(find(&format!("m.{p}"))?.clone());
+                v.push(find(&format!("v.{p}"))?.clone());
+            }
+        }
+        Ok(OptState { kind, t, m, v })
+    }
+
+    /// One optimizer step: `params[i] -= lr * step(grads[i])`.
+    pub fn update(&mut self, params: &mut [Vec<f32>], grads: &[Vec<f32>], lr: f32) -> Result<()> {
+        if params.len() != grads.len() {
+            bail!("optimizer: {} params vs {} grads", params.len(), grads.len());
+        }
+        self.t += 1.0;
+        match self.kind {
+            OptKind::Sgd => {
+                for (p, g) in params.iter_mut().zip(grads) {
+                    for (pi, gi) in p.iter_mut().zip(g) {
+                        *pi -= lr * gi;
+                    }
+                }
+            }
+            OptKind::Adam => {
+                let bc1 = 1.0 - B1.powf(self.t);
+                let bc2 = 1.0 - B2.powf(self.t);
+                for (idx, (p, g)) in params.iter_mut().zip(grads).enumerate() {
+                    let (m, v) = (&mut self.m[idx], &mut self.v[idx]);
+                    for i in 0..p.len() {
+                        m[i] = B1 * m[i] + (1.0 - B1) * g[i];
+                        v[i] = B2 * v[i] + (1.0 - B2) * g[i] * g[i];
+                        p[i] -= lr * (m[i] / bc1) / ((v[i] / bc2).sqrt() + EPS);
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Emit the state tensor for a named opt spec (inverse of `unpack`).
+    pub fn pack(&self, name: &str, param_names: &[String]) -> Result<Vec<f32>> {
+        if name == "t" {
+            return Ok(vec![self.t]);
+        }
+        let pos = |p: &str| param_names.iter().position(|n| n == p);
+        if let Some(p) = name.strip_prefix("m.") {
+            return pos(p)
+                .map(|i| self.m[i].clone())
+                .ok_or_else(|| anyhow!("unknown moment tensor {name:?}"));
+        }
+        if let Some(p) = name.strip_prefix("v.") {
+            return pos(p)
+                .map(|i| self.v[i].clone())
+                .ok_or_else(|| anyhow!("unknown moment tensor {name:?}"));
+        }
+        bail!("unknown optimizer tensor {name:?}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn specs(names: &[(&str, &[usize])]) -> Vec<TensorSpec> {
+        names
+            .iter()
+            .map(|(n, s)| TensorSpec {
+                name: n.to_string(),
+                shape: s.to_vec(),
+                dtype: DType::F32,
+                role: Role::Param,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn sgd_state_is_just_the_counter() {
+        let s = OptKind::Sgd.state_specs(&specs(&[("w", &[4])]));
+        assert_eq!(s.len(), 1);
+        assert_eq!(s[0].name, "t");
+        assert!(s[0].shape.is_empty());
+    }
+
+    #[test]
+    fn adam_state_specs_sorted_like_python() {
+        // python sorts the flat opt dict: m.w1, m.w2, t, v.w1, v.w2
+        let s = OptKind::Adam.state_specs(&specs(&[("w1", &[2, 3]), ("w2", &[1, 2])]));
+        let names: Vec<&str> = s.iter().map(|x| x.name.as_str()).collect();
+        assert_eq!(names, vec!["m.w1", "m.w2", "t", "v.w1", "v.w2"]);
+        assert_eq!(s[0].shape, vec![2, 3]);
+    }
+
+    #[test]
+    fn sgd_step_moves_against_gradient() {
+        let mut st = OptState { kind: OptKind::Sgd, t: 0.0, m: vec![], v: vec![] };
+        let mut p = vec![vec![1.0f32, -1.0]];
+        st.update(&mut p, &[vec![0.5, -0.5]], 0.1).unwrap();
+        assert_eq!(p[0], vec![0.95, -0.95]);
+        assert_eq!(st.t, 1.0);
+    }
+
+    #[test]
+    fn adam_first_step_is_lr_sized() {
+        // with bias correction, |step 1| = lr * g / (|g| + eps) ~= lr
+        let mut st = OptState {
+            kind: OptKind::Adam,
+            t: 0.0,
+            m: vec![vec![0.0; 2]],
+            v: vec![vec![0.0; 2]],
+        };
+        let mut p = vec![vec![0.0f32, 0.0]];
+        st.update(&mut p, &[vec![3.0, -0.01]], 0.1).unwrap();
+        assert!((p[0][0] + 0.1).abs() < 1e-4, "{}", p[0][0]);
+        assert!((p[0][1] - 0.1).abs() < 1e-4, "{}", p[0][1]);
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let params = vec!["w".to_string()];
+        let named = vec![
+            ("t".to_string(), vec![3.0f32]),
+            ("m.w".to_string(), vec![1.0, 2.0]),
+            ("v.w".to_string(), vec![4.0, 5.0]),
+        ];
+        let st = OptState::unpack(OptKind::Adam, &params, &named).unwrap();
+        assert_eq!(st.t, 3.0);
+        assert_eq!(st.pack("m.w", &params).unwrap(), vec![1.0, 2.0]);
+        assert_eq!(st.pack("t", &params).unwrap(), vec![3.0]);
+        assert!(st.pack("z.w", &params).is_err());
+    }
+}

@@ -1,33 +1,33 @@
 //! Train state: named parameter + optimizer tensors that round-trip
-//! through scanned train calls as PJRT literals.
+//! through scanned train calls as backend-neutral [`Value`]s.
 
-use super::literals::{self, Literal};
-use super::manifest::{ArtifactEntry, Role};
-use crate::tensor::{DType, HostTensor};
+use super::executor::{value, Executor, Value};
+use super::manifest::{ArtifactEntry, Role, TensorSpec};
+use crate::tensor::HostTensor;
 use anyhow::{anyhow, bail, Result};
 
-/// Named literal store. Params and optimizer state live here between
-/// chunks; literals go straight back into the next `Engine::call`
-/// without re-encoding.
+/// Named value store. Params and optimizer state live here between
+/// chunks; values go straight back into the next `Executor::call`
+/// without re-encoding (they are `Rc`-shared host tensors).
 pub struct TrainState {
     pub names: Vec<String>,
-    values: Vec<Literal>,
+    values: Vec<Value>,
 }
 
 impl TrainState {
     /// Zero-initialized state for the given specs (optimizer state init:
     /// Adam moments and the step counter all start at zero).
-    pub fn zeros(specs: &[&super::manifest::TensorSpec]) -> Result<TrainState> {
+    pub fn zeros(specs: &[&TensorSpec]) -> TrainState {
         let mut names = Vec::new();
         let mut values = Vec::new();
         for s in specs {
             names.push(s.name.clone());
-            values.push(literals::to_literal(&HostTensor::zeros(s.dtype, &s.shape))?)
+            values.push(value(HostTensor::zeros(s.dtype, &s.shape)));
         }
-        Ok(TrainState { names, values })
+        TrainState { names, values }
     }
 
-    pub fn from_named(pairs: Vec<(String, Literal)>) -> TrainState {
+    pub fn from_named(pairs: Vec<(String, Value)>) -> TrainState {
         let (names, values) = pairs.into_iter().unzip();
         TrainState { names, values }
     }
@@ -44,63 +44,55 @@ impl TrainState {
         self.names.iter().position(|n| n == name)
     }
 
-    pub fn literal(&self, name: &str) -> Result<&Literal> {
+    pub fn value(&self, name: &str) -> Result<&Value> {
         Ok(&self.values[self.index(name).ok_or_else(|| anyhow!("no tensor {name:?}"))?])
     }
 
-    pub fn literals(&self) -> &[Literal] {
+    pub fn values(&self) -> &[Value] {
         &self.values
     }
 
-    /// Copy a named tensor to the host.
+    /// Copy a named tensor to an owned host tensor.
     pub fn fetch(&self, name: &str) -> Result<HostTensor> {
-        literals::to_host(self.literal(name)?)
+        Ok(self.value(name)?.as_ref().clone())
     }
 
     /// Replace a named tensor (e.g. with a quantized cast for eval).
     pub fn replace(&mut self, name: &str, t: &HostTensor) -> Result<()> {
         let idx = self.index(name).ok_or_else(|| anyhow!("no tensor {name:?}"))?;
-        self.values[idx] = literals::to_literal(t)?;
+        self.values[idx] = value(t.clone());
         Ok(())
-    }
-
-    /// Clone the underlying literals (params snapshot for eval casts).
-    pub fn clone_literals(&self) -> Vec<Literal> {
-        self.values.clone()
     }
 
     /// Adopt the leading `names.len()` outputs of a train call as the
     /// new state (the manifest guarantees outputs echo params+opt first,
     /// in input order).
-    pub fn adopt(&mut self, outputs: &mut Vec<Literal>) -> Result<()> {
+    pub fn adopt(&mut self, outputs: &mut Vec<Value>) -> Result<()> {
         if outputs.len() < self.len() {
             bail!("outputs shorter than state ({} < {})", outputs.len(), self.len());
         }
-        for (i, lit) in outputs.drain(..self.len()).enumerate() {
-            self.values[i] = lit;
+        for (i, v) in outputs.drain(..self.len()).enumerate() {
+            self.values[i] = v;
         }
         Ok(())
     }
 
-    /// Total number of f32-equivalent elements (for memory accounting).
+    /// Total number of elements (for memory accounting).
     pub fn total_elements(&self) -> usize {
-        self.values
-            .iter()
-            .map(|l| l.element_count())
-            .sum()
+        self.values.iter().map(|v| v.len()).sum()
     }
 }
 
 /// Assemble the state sections of a train artifact:
 /// params from an init call + zeroed optimizer state.
 pub fn init_train_state(
-    engine: &super::engine::Engine,
+    exec: &dyn Executor,
     train: &ArtifactEntry,
     init: &ArtifactEntry,
     seed_key: [u32; 2],
 ) -> Result<TrainState> {
-    let key = literals::to_literal(&HostTensor::from_u32(&[2], seed_key.to_vec()))?;
-    let params = engine.call(init, &[key])?;
+    let key = value(HostTensor::from_u32(&[2], seed_key.to_vec()));
+    let params = exec.call(init, &[key])?;
     let param_specs = train.input_specs(Role::Param);
     if params.len() != param_specs.len() {
         bail!(
@@ -109,16 +101,44 @@ pub fn init_train_state(
             param_specs.len()
         );
     }
-    let mut pairs: Vec<(String, Literal)> = param_specs
+    let mut pairs: Vec<(String, Value)> = param_specs
         .iter()
         .zip(params)
-        .map(|(s, l)| (s.name.clone(), l))
+        .map(|(s, v)| (s.name.clone(), v))
         .collect();
     for s in train.input_specs(Role::Opt) {
-        pairs.push((
-            s.name.clone(),
-            literals::to_literal(&HostTensor::zeros(DType::F32, &s.shape))?,
-        ));
+        pairs.push((s.name.clone(), value(HostTensor::zeros(s.dtype, &s.shape))));
     }
     Ok(TrainState::from_named(pairs))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::DType;
+
+    #[test]
+    fn zeros_replace_fetch_adopt() {
+        let specs = [
+            TensorSpec { name: "w".into(), shape: vec![3], dtype: DType::F32, role: Role::Param },
+            TensorSpec { name: "t".into(), shape: vec![], dtype: DType::F32, role: Role::Opt },
+        ];
+        let refs: Vec<&TensorSpec> = specs.iter().collect();
+        let mut st = TrainState::zeros(&refs);
+        assert_eq!(st.len(), 2);
+        assert_eq!(st.total_elements(), 4);
+        assert_eq!(st.fetch("w").unwrap().as_f32(), vec![0.0; 3]);
+        st.replace("w", &HostTensor::from_f32(&[3], vec![1.0, 2.0, 3.0])).unwrap();
+        assert_eq!(st.fetch("w").unwrap().as_f32(), vec![1.0, 2.0, 3.0]);
+        assert!(st.replace("missing", &HostTensor::scalar_f32(0.0)).is_err());
+
+        let mut outs = vec![
+            value(HostTensor::from_f32(&[3], vec![4.0, 5.0, 6.0])),
+            value(HostTensor::scalar_f32(9.0)),
+            value(HostTensor::scalar_f32(0.5)), // trailing metric stays
+        ];
+        st.adopt(&mut outs).unwrap();
+        assert_eq!(outs.len(), 1);
+        assert_eq!(st.fetch("t").unwrap().scalar_to_f32(), 9.0);
+    }
 }

@@ -121,6 +121,14 @@ impl HostTensor {
             .collect()
     }
 
+    pub fn as_u32(&self) -> Vec<u32> {
+        assert_eq!(self.dtype, DType::U32);
+        self.data
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+            .collect()
+    }
+
     /// In-place f32 mutation through a callback (avoids copies on the
     /// hot path: quantized eval casts params this way).
     pub fn map_f32_inplace(&mut self, f: impl FnOnce(&mut [f32])) {
@@ -157,6 +165,12 @@ mod tests {
         let t = HostTensor::zeros(DType::I32, &[4]);
         assert_eq!(t.as_i32(), vec![0; 4]);
         assert_eq!(HostTensor::scalar_f32(2.5).scalar_to_f32(), 2.5);
+    }
+
+    #[test]
+    fn u32_roundtrip() {
+        let t = HostTensor::from_u32(&[3], vec![0, 7, u32::MAX]);
+        assert_eq!(t.as_u32(), vec![0, 7, u32::MAX]);
     }
 
     #[test]

@@ -1,5 +1,8 @@
-//! End-to-end integration: load real AOT artifacts, train, evaluate.
-//! Requires `make artifacts` (skips gracefully otherwise).
+//! End-to-end integration on the PJRT backend: load real AOT
+//! artifacts, train, evaluate. Needs `--features pjrt` to compile and
+//! `make artifacts` to run (skips gracefully otherwise). The native
+//! backend's equivalent suite is `tests/native_backend.rs`.
+#![cfg(feature = "pjrt")]
 
 use lotion::config::RunConfig;
 use lotion::coordinator::{DataSource, Evaluator, MetricsLogger, Trainer};
@@ -133,6 +136,7 @@ fn lm_tiny_trains_on_corpus() {
 
 #[test]
 fn engine_rejects_wrong_arity_and_missing_artifacts() {
+    use lotion::runtime::Executor;
     let Some(engine) = engine() else { return };
     let entry = engine.manifest.find_eval("linreg_d256").unwrap();
     assert!(engine.call(entry, &[]).is_err());

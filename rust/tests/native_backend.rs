@@ -1,0 +1,195 @@
+//! End-to-end integration on the native pure-rust backend: no AOT
+//! artifacts, no python, no PJRT — the whole coordinator stack
+//! (trainer, evaluator with real RR/RTN eval casts, sweeps) against
+//! `runtime::native`. This is the suite that keeps the default build
+//! honest (DESIGN.md §3).
+
+use lotion::config::{RunConfig, Schedule};
+use lotion::coordinator::{sweep, DataSource, Evaluator, MetricsLogger, Trainer};
+use lotion::data::synth::population_loss;
+use lotion::experiments::common::synth_statics;
+use lotion::quant::{QuantFormat, Rounding};
+use lotion::runtime::native::{ModelSpec, NativeEngine, NativeModel, OptKind};
+use lotion::runtime::Executor;
+
+fn linreg_cfg(method: &str, steps: usize) -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.name = format!("native_{method}");
+    cfg.model = "linreg_d256".into();
+    cfg.method = method.into();
+    cfg.format = if method == "ptq" { "none".into() } else { "int4".into() };
+    cfg.eval_formats = vec!["int4".into()];
+    cfg.steps = steps;
+    cfg.lr = 0.1;
+    cfg.lambda = 1.0;
+    cfg.eval_every = steps;
+    cfg.schedule = Schedule::Constant;
+    cfg
+}
+
+/// The ISSUE's acceptance check: train linreg for ~50 steps with LOTION
+/// on the native backend and watch both the train loss and the
+/// quantized validation loss drop.
+#[test]
+fn linreg_lotion_50_steps_loss_decreases() {
+    let engine = NativeEngine::new();
+    let cfg = linreg_cfg("lotion", 56); // 7 chunks of K=8
+    let (statics, _, _) = synth_statics(256, 3);
+    let mut trainer = Trainer::new(&engine, cfg.clone(), statics, DataSource::InGraph).unwrap();
+    let mut eval = Evaluator::new(&engine, &cfg.model, 0).unwrap();
+    let mut metrics = MetricsLogger::in_memory();
+
+    let fmt = QuantFormat::int4();
+    let v0 = eval.eval_cast(&trainer, Some(&fmt), Rounding::Rtn).unwrap();
+    trainer.run(&mut eval, &mut metrics).unwrap();
+    let v1 = eval.eval_cast(&trainer, Some(&fmt), Rounding::Rtn).unwrap();
+    assert_eq!(trainer.step, 56);
+    assert!(v1 < v0 * 0.8, "quantized val loss {v0} -> {v1}");
+
+    let first = metrics.train_losses.first().unwrap().1;
+    let last = metrics.train_losses.last().unwrap().1;
+    assert!(last < first, "train loss {first} -> {last}");
+    // the full eval battery ran: fp32 + int4 under both roundings
+    assert!(metrics.final_eval("fp32", "none").is_some());
+    assert!(metrics.final_eval("int4", "rtn").is_some());
+    assert!(metrics.final_eval("int4", "rr").is_some());
+}
+
+#[test]
+fn all_four_methods_run_on_native_linreg() {
+    let engine = NativeEngine::new();
+    for method in ["ptq", "qat", "rat", "lotion"] {
+        let cfg = linreg_cfg(method, 32);
+        let (statics, _, _) = synth_statics(256, 5);
+        let mut trainer =
+            Trainer::new(&engine, cfg.clone(), statics, DataSource::InGraph).unwrap();
+        let mut eval = Evaluator::new(&engine, &cfg.model, 1).unwrap();
+        let mut metrics = MetricsLogger::in_memory();
+        trainer.run(&mut eval, &mut metrics).expect(method);
+        assert!(metrics.final_eval("fp32", "none").unwrap().is_finite(), "{method}");
+        assert!(metrics.final_eval("int4", "rr").unwrap().is_finite(), "{method}");
+    }
+}
+
+#[test]
+fn native_trainer_is_deterministic_per_seed() {
+    let engine = NativeEngine::new();
+    let run = |seed: u64| {
+        let mut cfg = linreg_cfg("rat", 24);
+        cfg.seed = seed;
+        let (statics, _, _) = synth_statics(256, 7);
+        let mut trainer = Trainer::new(&engine, cfg, statics, DataSource::InGraph).unwrap();
+        let mut metrics = MetricsLogger::in_memory();
+        for _ in 0..3 {
+            trainer.chunk(&mut metrics).unwrap();
+        }
+        trainer.state.fetch("w").unwrap().as_f32()
+    };
+    assert_eq!(run(9), run(9));
+    assert_ne!(run(9), run(10));
+}
+
+/// FP32 eval must agree with the host-side closed form — the native
+/// eval program and `population_loss` compute the same quantity.
+#[test]
+fn native_eval_matches_population_loss() {
+    let engine = NativeEngine::new();
+    let cfg = linreg_cfg("lotion", 16);
+    let (statics, lam, wstar) = synth_statics(256, 11);
+    let mut trainer = Trainer::new(&engine, cfg.clone(), statics, DataSource::InGraph).unwrap();
+    let mut eval = Evaluator::new(&engine, &cfg.model, 2).unwrap();
+    let mut metrics = MetricsLogger::in_memory();
+    trainer.run(&mut eval, &mut metrics).unwrap();
+    let w = trainer.state.fetch("w").unwrap().as_f32();
+    let direct = population_loss(&w, &wstar, &lam);
+    let via_eval = eval.eval_cast(&trainer, None, Rounding::Rtn).unwrap();
+    assert!(
+        (direct - via_eval).abs() < 1e-5 * direct.abs().max(1e-6),
+        "direct={direct} eval={via_eval}"
+    );
+}
+
+#[test]
+fn linear2_trains_on_native_backend() {
+    let engine = NativeEngine::with_models(&[NativeModel {
+        spec: ModelSpec::Linear2 { d: 128, k: 4 },
+        opt: OptKind::Sgd,
+        steps_per_call: 8,
+    }]);
+    let mut cfg = RunConfig::default();
+    cfg.model = "linear2_d128_k4".into();
+    cfg.method = "lotion".into();
+    cfg.format = "int4".into();
+    cfg.eval_formats = vec!["int4".into()];
+    cfg.steps = 64;
+    cfg.lr = 0.3;
+    cfg.lambda = 1.0;
+    cfg.eval_every = 64;
+    cfg.schedule = Schedule::Constant;
+    let (statics, _, _) = synth_statics(128, 21);
+    let mut trainer = Trainer::new(&engine, cfg.clone(), statics, DataSource::InGraph).unwrap();
+    let mut eval = Evaluator::new(&engine, &cfg.model, 0).unwrap();
+    let mut metrics = MetricsLogger::in_memory();
+    let v0 = eval.eval_cast(&trainer, None, Rounding::Rtn).unwrap();
+    trainer.run(&mut eval, &mut metrics).unwrap();
+    let v1 = eval.eval_cast(&trainer, None, Rounding::Rtn).unwrap();
+    assert!(v1 < v0, "linear2 fp32 val loss {v0} -> {v1}");
+    // both quantized tensors (w1, w2) survive the eval casts
+    assert!(metrics.final_eval("int4", "rtn").unwrap().is_finite());
+}
+
+#[test]
+fn adam_trains_linreg_on_native_backend() {
+    let engine = NativeEngine::with_models(&[NativeModel {
+        spec: ModelSpec::LinReg { d: 64, batch: 32 },
+        opt: OptKind::Adam,
+        steps_per_call: 8,
+    }]);
+    let train = engine.manifest().find_train("linreg_d64", "lotion", "int4").unwrap();
+    assert_eq!(train.optimizer, "adam");
+    // adam state tensors ride along in canonical order: m.w, t, v.w
+    let opt_names: Vec<&str> = train
+        .inputs
+        .iter()
+        .filter(|s| s.role == lotion::runtime::Role::Opt)
+        .map(|s| s.name.as_str())
+        .collect();
+    assert_eq!(opt_names, vec!["m.w", "t", "v.w"]);
+
+    let mut cfg = linreg_cfg("lotion", 48);
+    cfg.model = "linreg_d64".into();
+    cfg.lr = 0.05;
+    let (statics, _, _) = synth_statics(64, 13);
+    let mut trainer = Trainer::new(&engine, cfg.clone(), statics, DataSource::InGraph).unwrap();
+    let mut eval = Evaluator::new(&engine, &cfg.model, 0).unwrap();
+    let mut metrics = MetricsLogger::in_memory();
+    trainer.run(&mut eval, &mut metrics).unwrap();
+    let first = metrics.train_losses.first().unwrap().1;
+    let last = metrics.train_losses.last().unwrap().1;
+    assert!(last < first, "adam train loss {first} -> {last}");
+    // the step counter advanced with the run
+    assert_eq!(trainer.state.fetch("t").unwrap().scalar_to_f32(), 48.0);
+}
+
+#[test]
+fn lr_sweep_runs_on_native_backend() {
+    let engine = NativeEngine::new();
+    let cfg = linreg_cfg("lotion", 16);
+    let results = sweep::lr_sweep(
+        &engine,
+        &cfg,
+        &[0.02, 0.2],
+        "int4",
+        "rtn",
+        &|| {
+            let (statics, _, _) = synth_statics(256, 3);
+            Ok((statics, DataSource::InGraph))
+        },
+    )
+    .unwrap();
+    assert_eq!(results.len(), 2);
+    assert!(results.iter().all(|r| !r.diverged));
+    assert!(sweep::best(&results).is_some());
+    // the larger LR should fit this easy quadratic better in 16 steps
+    assert!(results[1].score < results[0].score);
+}

@@ -1,0 +1,20 @@
+#!/usr/bin/env bash
+# Tier-1 gate (see README.md / ROADMAP.md): build + test the rust crate
+# on default features — no PJRT, no python, no artifacts, fully offline.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "== cargo build --release =="
+cargo build --release
+
+echo "== cargo test -q =="
+cargo test -q
+
+echo "== cargo fmt --check =="
+if cargo fmt --version >/dev/null 2>&1; then
+    cargo fmt --check
+else
+    echo "rustfmt not installed on this toolchain; skipping format check"
+fi
+
+echo "ci.sh: all green"

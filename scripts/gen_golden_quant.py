@@ -1,0 +1,169 @@
+#!/usr/bin/env python3
+"""Generate rust/tests/golden_quant.json from the python quant oracle.
+
+The rust `quant` substrate promises bit-parity with
+`python/compile/kernels/ref.py` (scales, RTN casts, sigma^2, the LOTION
+penalty). This script evaluates the python oracle over a deterministic
+case grid and writes the goldens the `parity.rs` integration test
+checks. It also runs a pure-numpy transliteration of the *rust*
+algorithms against the oracle so a drift in either side is caught at
+generation time, before it ever reaches CI.
+
+Usage:  python3 scripts/gen_golden_quant.py
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "python"))
+
+from compile.kernels import ref  # noqa: E402
+from compile.kernels.common import make_format  # noqa: E402
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "rust", "tests", "golden_quant.json")
+
+FP4_LEVELS = np.array(
+    [-6.0, -4.0, -3.0, -2.0, -1.5, -1.0, -0.5, 0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0],
+    dtype=np.float32,
+)
+
+
+# --- numpy transliteration of rust/src/quant (generation-time check) ---
+
+
+def rust_block_ranges(n: int, block_size: int):
+    bs = max(n, 1) if block_size == 0 else block_size
+    return [(b * bs, min((b + 1) * bs, n)) for b in range(-(-n // bs))]
+
+
+def rust_block_scales(w: np.ndarray, fmt) -> np.ndarray:
+    out = []
+    for s, e in rust_block_ranges(len(w), fmt.block_size):
+        amax = np.max(np.abs(w[s:e])) if e > s else 0.0
+        out.append(np.float32(amax) / np.float32(fmt.qmax) if amax > 0 else np.float32(1.0))
+    return np.array(out, dtype=np.float32)
+
+
+def rust_bracket(z: np.float32, fmt):
+    if fmt.uniform:
+        l = np.floor(z)
+        return (z, z) if l == z else (l, l + 1)
+    lo, up = -np.inf, np.inf
+    for lev in FP4_LEVELS:
+        if lev <= z and lev > lo:
+            lo = lev
+        if lev >= z and lev < up:
+            up = lev
+    return np.float32(lo), np.float32(up)
+
+
+def rust_rtn_one(z: np.float32, fmt) -> np.float32:
+    if fmt.uniform:
+        # rust f32::round_ties_even == np.round (banker's rounding)
+        return np.clip(np.round(z), -fmt.qmax, fmt.qmax)
+    lo, up = rust_bracket(z, fmt)
+    mid = np.float32(0.5) * (lo + up)
+    return up if z > mid else lo
+
+
+def rust_cast_rtn(w: np.ndarray, fmt) -> np.ndarray:
+    scales = rust_block_scales(w, fmt)
+    out = w.copy()
+    for bi, (s, e) in enumerate(rust_block_ranges(len(w), fmt.block_size)):
+        sb = scales[bi]
+        for i in range(s, e):
+            out[i] = rust_rtn_one(np.float32(w[i] / sb), fmt) * sb
+    return out
+
+
+def rust_sigma2(w: np.ndarray, fmt) -> np.ndarray:
+    scales = rust_block_scales(w, fmt)
+    out = np.zeros_like(w)
+    for bi, (s, e) in enumerate(rust_block_ranges(len(w), fmt.block_size)):
+        sb = scales[bi]
+        for i in range(s, e):
+            z = np.float32(w[i] / sb)
+            lo, up = rust_bracket(z, fmt)
+            out[i] = sb * sb * (up - z) * (z - lo)
+    return out
+
+
+def rust_penalty(w: np.ndarray, fisher: np.ndarray, fmt) -> float:
+    s2 = rust_sigma2(w, fmt)
+    return float(np.sum(0.5 * s2.astype(np.float64) * fisher.astype(np.float64)))
+
+
+# --- case grid ---------------------------------------------------------
+
+
+def cases():
+    rng = np.random.default_rng(20260729)
+    grid = [
+        ("int4", 0, 48),
+        ("int4", 16, 48),
+        ("int4", 64, 96),   # partial final block (96 = 1.5 * 64)
+        ("int8", 0, 48),
+        ("int8", 16, 40),   # partial final block
+        ("int8", 64, 64),
+        ("fp4", 0, 48),
+        ("fp4", 16, 48),
+        ("fp4", 64, 80),    # partial final block
+    ]
+    out = []
+    for fmt_name, block, n in grid:
+        for scale in (0.08, 2.5):
+            w = (rng.standard_normal(n) * scale).astype(np.float32)
+            fisher = np.abs(rng.standard_normal(n)).astype(np.float32)
+            out.append((fmt_name, block, w, fisher))
+    # an all-zero block exercises the s = 1 fallback
+    w = np.zeros(32, dtype=np.float32)
+    w[16:] = (rng.standard_normal(16) * 0.5).astype(np.float32)
+    fisher = np.ones(32, dtype=np.float32)
+    out.append(("int4", 16, w, fisher))
+    return out
+
+
+def main() -> None:
+    docs = []
+    for fmt_name, block, w, fisher in cases():
+        fmt = make_format(fmt_name, block)
+        scales = np.asarray(ref.block_scales_ref(w, fmt))
+        rtn = np.asarray(ref.fake_quant_ref(w, fmt))
+        s2 = np.asarray(ref.sigma2_ref(w, fmt))
+        pen = float(np.asarray(ref.lotion_penalty_ref(w, fisher, fmt)))
+
+        # cross-check the rust transliteration against the oracle
+        np.testing.assert_allclose(rust_block_scales(w, fmt), scales, rtol=1e-7)
+        np.testing.assert_allclose(rust_cast_rtn(w, fmt), rtn, rtol=1e-6, atol=1e-7)
+        np.testing.assert_allclose(rust_sigma2(w, fmt), s2, rtol=2e-5, atol=1e-9)
+        assert abs(rust_penalty(w, fisher, fmt) - pen) <= 1e-5 * max(abs(pen), 1e-9), (
+            fmt_name,
+            block,
+            rust_penalty(w, fisher, fmt),
+            pen,
+        )
+
+        docs.append(
+            {
+                "format": fmt_name,
+                "block": block,
+                "w": [float(v) for v in w],
+                "fisher": [float(v) for v in fisher],
+                "scales": [float(v) for v in scales],
+                "rtn": [float(v) for v in rtn],
+                "sigma2": [float(v) for v in s2],
+                "penalty": pen,
+            }
+        )
+    with open(OUT, "w") as f:
+        json.dump(docs, f)
+    print(f"wrote {len(docs)} cases -> {OUT}")
+
+
+if __name__ == "__main__":
+    main()
