@@ -1,10 +1,18 @@
 //! Micro-benchmarks for the rust quantization substrate (the L3 side of
 //! quantized evaluation). Run with `cargo bench` — uses the in-repo
 //! benchlib since criterion is unavailable offline.
+//!
+//! Emits `BENCH_quant_micro.json` so the kernel-throughput trajectory
+//! (incl. the thread-scaling rows) is tracked per PR.
 
 use lotion::benchlib::Bench;
-use lotion::quant::{blocks::block_scales, cast_rr, cast_rtn, sigma2, QuantFormat};
+use lotion::quant::{
+    blocks::block_scales, cast_rr, cast_rr_seeded, cast_rtn, cast_rtn_pool,
+    lotion_penalty_and_grad_pool, sigma2, sigma2_pool, QuantFormat,
+};
+use lotion::util::pool::Pool;
 use lotion::util::rng::Rng;
+use std::path::Path;
 
 fn main() {
     let n = 1_000_000;
@@ -36,5 +44,36 @@ fn main() {
             });
         }
     }
+
+    // Thread-scaling rows (ISSUE 2): the 1M-element kernels pinned to
+    // 1 / 2 / all worker threads on an explicit pool. Results are
+    // bit-identical across rows; only throughput moves.
+    let fisher: Vec<f32> = (0..n).map(|i| 1.0 / (1 + i % 7) as f32).collect();
+    for (tag, threads) in [("t1", 1usize), ("t2", 2), ("tall", 0)] {
+        let pool = Pool::new(threads);
+        let fmt = QuantFormat::parse("int4", 64).unwrap();
+        b.run_with_items(&format!("cast_rtn/int4/b64/{tag}"), Some(n as f64), &mut || {
+            let mut v = w.clone();
+            cast_rtn_pool(&mut v, &fmt, &pool);
+            std::hint::black_box(v);
+        });
+        b.run_with_items(&format!("cast_rr/int4/b64/{tag}"), Some(n as f64), &mut || {
+            let mut v = w.clone();
+            cast_rr_seeded(&mut v, &fmt, 1, &pool);
+            std::hint::black_box(v);
+        });
+        b.run_with_items(&format!("sigma2/int4/b64/{tag}"), Some(n as f64), &mut || {
+            std::hint::black_box(sigma2_pool(&w, &fmt, &pool));
+        });
+        b.run_with_items(&format!("lotion_penalty_grad/int4/b64/{tag}"), Some(n as f64), &mut || {
+            std::hint::black_box(lotion_penalty_and_grad_pool(&w, &fisher, &fmt, &pool));
+        });
+    }
+
     print!("{}", b.table("quant substrate micro (1M f32 elements)"));
+    let out = Path::new("BENCH_quant_micro.json");
+    match b.write_json(out, "quant_micro") {
+        Ok(()) => println!("wrote {}", out.display()),
+        Err(e) => eprintln!("could not write {}: {e}", out.display()),
+    }
 }

@@ -67,6 +67,40 @@ fn main() {
     native_train_bench(&mut b, &engine, "linear2_d500_k2", "linear2/1k_params", 500);
     native_train_bench(&mut b, &engine, "linear2_d50000_k2", "linear2/100k_params", 50_000);
 
+    // Thread-scaling entries (ISSUE 2): the same workloads pinned to
+    // 1 / 2 / all worker threads, so the per-PR BENCH json tracks the
+    // threaded backend's speedup explicitly. Output is bit-identical
+    // across rows — only wall clock moves.
+    for (tag, threads) in [("t1", 1usize), ("t2", 2), ("tall", 0)] {
+        let engine = NativeEngine::with_models(&[
+            NativeModel {
+                spec: ModelSpec::LinReg { d: 1_000, batch: 32 },
+                opt: OptKind::Sgd,
+                steps_per_call: 8,
+            },
+            NativeModel {
+                spec: ModelSpec::LinReg { d: 100_000, batch: 32 },
+                opt: OptKind::Sgd,
+                steps_per_call: 8,
+            },
+        ])
+        .with_threads(threads);
+        native_train_bench(
+            &mut b,
+            &engine,
+            "linreg_d1000",
+            &format!("linreg/1k_params/{tag}"),
+            1_000,
+        );
+        native_train_bench(
+            &mut b,
+            &engine,
+            "linreg_d100000",
+            &format!("linreg/100k_params/{tag}"),
+            100_000,
+        );
+    }
+
     #[cfg(feature = "pjrt")]
     pjrt_benches(&mut b);
 

@@ -41,6 +41,10 @@ pub struct RunConfig {
     pub artifacts_dir: String,
     pub results_dir: String,
     pub checkpoint_every: usize,
+    /// native-backend worker threads: 0 = auto (`LOTION_THREADS` env
+    /// var, else all cores). Output is bit-identical at any value —
+    /// a pure throughput knob (DESIGN.md §3).
+    pub threads: usize,
 }
 
 impl Default for RunConfig {
@@ -64,6 +68,7 @@ impl Default for RunConfig {
             artifacts_dir: "artifacts".into(),
             results_dir: "results".into(),
             checkpoint_every: 0,
+            threads: 0,
         }
     }
 }
@@ -109,6 +114,7 @@ impl RunConfig {
             artifacts_dir: doc.str_or("paths.artifacts", &d.artifacts_dir),
             results_dir: doc.str_or("paths.results", &d.results_dir),
             checkpoint_every: doc.usize_or("train.checkpoint_every", 0),
+            threads: doc.usize_or("train.threads", 0),
         };
         cfg.validate()?;
         Ok(cfg)
@@ -167,6 +173,13 @@ mod tests {
         assert_eq!(cfg.format, "int8");
         assert_eq!(cfg.steps, 100);
         assert_eq!(cfg.train_artifact(), "train_lm-tiny_qat_int8");
+        assert_eq!(cfg.threads, 0); // auto unless [train] threads is set
+    }
+
+    #[test]
+    fn threads_from_doc() {
+        let doc = TomlDoc::parse("[train]\nthreads = 3").unwrap();
+        assert_eq!(RunConfig::from_doc(&doc).unwrap().threads, 3);
     }
 
     #[test]

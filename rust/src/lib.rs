@@ -17,7 +17,8 @@
 //!
 //! Module map (see DESIGN.md §5):
 //!
-//! * [`util`] — PRNG, statistics, logging, mini property-testing.
+//! * [`util`] — PRNG (+ counter-split streams), scoped worker pool,
+//!   statistics, logging, mini property-testing.
 //! * [`formats`] — JSON/CSV substrates (no serde available offline).
 //! * [`tensor`] — host tensors (shape/dtype/bytes) shared by all layers.
 //! * [`quant`] — rust-native block quantizer: INT4/INT8/FP4, RTN + RR,

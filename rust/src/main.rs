@@ -19,7 +19,7 @@ use lotion::config::{RunConfig, TomlDoc};
 use lotion::coordinator::{DataSource, Evaluator, MetricsLogger, Trainer};
 use lotion::data::{ByteTokenizer, TokenBatcher, ZipfMarkovCorpus};
 use lotion::experiments::registry;
-use lotion::runtime::{auto_executor, Executor, NativeEngine, Role};
+use lotion::runtime::{Executor, NativeEngine, Role};
 use lotion::{checkpoint::Checkpoint, formats::json::Json, info};
 use std::path::{Path, PathBuf};
 
@@ -40,7 +40,10 @@ const USAGE: &str = "usage: lotion-rs <train|exp|sweep|inspect|data-report> [fla
 common flags:
   --backend {auto|native|pjrt}   execution backend (default: auto — pjrt
                                  if built with it and artifacts exist,
-                                 else the pure-rust native backend)";
+                                 else the pure-rust native backend)
+  --threads N                    native-backend worker threads (default:
+                                 LOTION_THREADS env var, else all cores;
+                                 output is bit-identical at any N)";
 
 fn run() -> Result<()> {
     let args = Args::from_env()?;
@@ -55,15 +58,25 @@ fn run() -> Result<()> {
     }
 }
 
-/// Resolve the `--backend` flag into an executor.
-fn make_executor(args: &Args, artifacts_dir: &str) -> Result<Box<dyn Executor>> {
+/// Resolve the `--backend` / `--threads` flags into an executor.
+/// Thread resolution: `--threads` > `[train] threads` in the config
+/// (`cfg_threads`) > `LOTION_THREADS` env var > all cores.
+fn make_executor(
+    args: &Args,
+    artifacts_dir: &str,
+    cfg_threads: usize,
+) -> Result<Box<dyn Executor>> {
+    let threads = args.usize_or("threads", cfg_threads)?;
+    // coordinator-side quant casts (the evaluator's RTN/RR eval casts)
+    // go through Pool::global(); keep them on the same knob
+    lotion::util::pool::set_global_threads(threads);
     match args.backend()? {
-        "native" => Ok(Box::new(NativeEngine::new())),
+        "native" => Ok(Box::new(NativeEngine::new().with_threads(threads))),
         "pjrt" => match lotion::runtime::pjrt_executor(Path::new(artifacts_dir))? {
             Some(engine) => Ok(engine),
             None => bail!("this build has no PJRT backend (rebuild with `--features pjrt`)"),
         },
-        _ => auto_executor(Path::new(artifacts_dir)),
+        _ => lotion::runtime::auto_executor_threads(Path::new(artifacts_dir), threads),
     }
 }
 
@@ -114,7 +127,7 @@ fn build_inputs(
 
 fn cmd_train(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
-    let engine = make_executor(args, &cfg.artifacts_dir)?;
+    let engine = make_executor(args, &cfg.artifacts_dir, cfg.threads)?;
     let engine: &dyn Executor = &*engine;
     let out_dir = PathBuf::from(args.str_or("out", &format!("{}/{}", cfg.results_dir, cfg.name)));
     std::fs::create_dir_all(&out_dir)?;
@@ -170,7 +183,7 @@ fn cmd_exp(args: &Args) -> Result<()> {
     let id = args.positional.first().map(String::as_str).unwrap_or("all");
     let artifacts = args.str_or("artifacts", "artifacts");
     let results = PathBuf::from(args.str_or("results", "results"));
-    let engine = make_executor(args, &artifacts)?;
+    let engine = make_executor(args, &artifacts, 0)?;
     registry::run(&*engine, id, &results)?;
     // dump the execution profile alongside results
     let mut prof = String::from("program,compile_s,calls,exec_s\n");
@@ -191,7 +204,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         .collect::<Result<_>>()?;
     let score_fmt = args.str_or("score-format", &cfg.format);
     let score_rounding = args.str_or("score-rounding", "rtn");
-    let engine = make_executor(args, &cfg.artifacts_dir)?;
+    let engine = make_executor(args, &cfg.artifacts_dir, cfg.threads)?;
     let engine: &dyn Executor = &*engine;
     let results = lotion::coordinator::sweep::lr_sweep(
         engine,
@@ -213,7 +226,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
 
 fn cmd_inspect(args: &Args) -> Result<()> {
     let artifacts = args.str_or("artifacts", "artifacts");
-    let engine = make_executor(args, &artifacts)?;
+    let engine = make_executor(args, &artifacts, 0)?;
     println!(
         "{:<48} {:>6} {:>8} {:>10} {:>10}",
         "program", "kind", "inputs", "params(M)", "K"

@@ -1,6 +1,7 @@
 //! Block partitioning + shared-scale computation (§2.1).
 
 use super::format::QuantFormat;
+use crate::util::pool::{chunk_ranges, Pool, PAR_CHUNK, PAR_MIN};
 
 /// Iterator over (start, end) element ranges of the shared-scale blocks
 /// of an `n`-element tensor.
@@ -9,19 +10,67 @@ pub fn block_ranges(n: usize, block_size: usize) -> impl Iterator<Item = (usize,
     (0..n.div_ceil(bs)).map(move |b| (b * bs, ((b + 1) * bs).min(n)))
 }
 
+/// Like [`block_ranges`] but clipped to `lo..hi`: yields
+/// `(block_index, start, end)` for every shared-scale block overlapping
+/// the range. Lets a parallel worker handle an arbitrary element chunk
+/// while still indexing the right per-block scale.
+pub fn block_ranges_in(
+    n: usize,
+    block_size: usize,
+    lo: usize,
+    hi: usize,
+) -> impl Iterator<Item = (usize, usize, usize)> {
+    let bs = if block_size == 0 { n.max(1) } else { block_size };
+    let b0 = lo / bs;
+    let b1 = hi.div_ceil(bs);
+    (b0..b1).map(move |b| (b, (b * bs).max(lo), ((b + 1) * bs).min(hi)))
+}
+
+fn abs_max(w: &[f32]) -> f32 {
+    w.iter().fold(0f32, |m, v| m.max(v.abs()))
+}
+
 /// Per-block scales `s_B = absmax(B)/qmax`; zero-absmax blocks get 1.0
 /// (all-zero blocks quantize to exact zeros under any scale).
 pub fn block_scales(w: &[f32], fmt: &QuantFormat) -> Vec<f32> {
-    block_ranges(w.len(), fmt.block_size)
-        .map(|(s, e)| {
-            let amax = w[s..e].iter().fold(0f32, |m, v| m.max(v.abs()));
-            if amax > 0.0 {
-                amax / fmt.qmax
-            } else {
-                1.0
-            }
-        })
-        .collect()
+    block_scales_pool(w, fmt, &Pool::global())
+}
+
+/// [`block_scales`] on an explicit pool. Bit-identical to the serial
+/// path at any thread count: small blocks are grouped whole into fixed
+/// chunks, and big blocks split their absmax reduction — `max` is
+/// order-independent, so the grouping can't change the result.
+pub fn block_scales_pool(w: &[f32], fmt: &QuantFormat, pool: &Pool) -> Vec<f32> {
+    let n = w.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let amax_to_scale = |amax: f32| if amax > 0.0 { amax / fmt.qmax } else { 1.0 };
+    if n < PAR_MIN || pool.threads() == 1 {
+        return block_ranges(n, fmt.block_size)
+            .map(|(s, e)| amax_to_scale(abs_max(&w[s..e])))
+            .collect();
+    }
+    let bs = if fmt.block_size == 0 { n } else { fmt.block_size };
+    let nblocks = n.div_ceil(bs);
+    if nblocks == 1 {
+        // single block (per-tensor): parallelize the absmax reduction
+        // inside it via partial maxes
+        let parts = pool.run(chunk_ranges(n, PAR_CHUNK), |_, r| abs_max(&w[r]));
+        return vec![amax_to_scale(parts.into_iter().fold(0f32, f32::max))];
+    }
+    // several blocks: whole blocks per task (>= 1 block each), all
+    // dispatched through one pool call
+    let blocks_per_task = (PAR_CHUNK / bs).max(1);
+    let mut scales = vec![0f32; nblocks];
+    let ranges = chunk_ranges(nblocks, blocks_per_task);
+    pool.run_on_chunks_mut(&mut scales, &ranges, |_, r, out| {
+        for (j, b) in (r.start..r.end).enumerate() {
+            let (s, e) = (b * bs, ((b + 1) * bs).min(n));
+            out[j] = amax_to_scale(abs_max(&w[s..e]));
+        }
+    });
+    scales
 }
 
 /// Apply `f(element, scale)` over the tensor, block by block.
@@ -81,6 +130,34 @@ mod tests {
         let w = [7.0f32, -7.0, 0.0, 0.0, 1.0];
         let s = block_scales(&w, &fmt);
         assert_eq!(s, vec![1.0, 1.0, 1.0 / 7.0]);
+    }
+
+    #[test]
+    fn block_ranges_in_clips_to_chunk() {
+        // blocks of 4 over n=10, chunk [3, 9): touches blocks 0,1,2
+        let r: Vec<_> = block_ranges_in(10, 4, 3, 9).collect();
+        assert_eq!(r, vec![(0, 3, 4), (1, 4, 8), (2, 8, 9)]);
+        // per-tensor: one block covering the chunk
+        let r: Vec<_> = block_ranges_in(10, 0, 2, 7).collect();
+        assert_eq!(r, vec![(0, 2, 7)]);
+        // chunk aligned exactly on block boundaries
+        let r: Vec<_> = block_ranges_in(8, 4, 4, 8).collect();
+        assert_eq!(r, vec![(1, 4, 8)]);
+        assert_eq!(block_ranges_in(8, 4, 4, 4).count(), 0);
+    }
+
+    #[test]
+    fn pooled_scales_match_serial_bitwise() {
+        use crate::util::Rng;
+        let mut rng = Rng::new(3);
+        let mut w = vec![0f32; 100_000];
+        rng.fill_normal(&mut w);
+        for block in [0usize, 64, 20_000] {
+            let fmt = QuantFormat::parse("int4", block).unwrap();
+            let serial = block_scales_pool(&w, &fmt, &Pool::serial());
+            let par = block_scales_pool(&w, &fmt, &Pool::new(4));
+            assert_eq!(serial, par, "block={block}");
+        }
     }
 
     #[test]

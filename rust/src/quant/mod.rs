@@ -14,6 +14,11 @@
 //! * RTN (uniform): round-half-to-even (`jnp.round` semantics);
 //! * RTN (codebook): ties toward the lower level (`z > mid ? u : l`);
 //! * RR: round up w.p. `(z - l)/(u - l)`.
+//!
+//! Kernels are block-parallel on `util::pool` (serial below a size
+//! threshold) and bit-identical at any thread count; RR noise comes
+//! from counter-split streams keyed per fixed element chunk
+//! (`rounding::cast_rr_seeded`).
 
 pub mod blocks;
 pub mod format;
@@ -21,6 +26,7 @@ pub mod rounding;
 
 pub use format::{QuantFormat, FP4_LEVELS};
 pub use rounding::{
-    cast, cast_rr, cast_rtn, lotion_penalty, lotion_penalty_and_grad, lotion_penalty_grad,
-    sigma2, Rounding,
+    cast, cast_rr, cast_rr_seeded, cast_rtn, cast_rtn_pool, lotion_penalty,
+    lotion_penalty_and_grad, lotion_penalty_and_grad_pool, lotion_penalty_grad, sigma2,
+    sigma2_pool, Rounding,
 };

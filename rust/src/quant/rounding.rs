@@ -1,9 +1,30 @@
 //! Casting: round-to-nearest and unbiased randomized rounding (§3.1),
 //! plus the per-coordinate RR variance used by Fig. 6 and tests.
+//!
+//! Every kernel here is block-parallel over pre-split scale ranges on a
+//! [`Pool`], with a serial fallback below [`PAR_MIN`] total elements.
+//! Chunk boundaries, RR noise streams and reduction order are pure
+//! functions of the tensor size — never of the thread count — so every
+//! kernel is bit-identical at `--threads 1` and `--threads N`
+//! (DESIGN.md §3). RTN casts, scales and σ² are element-wise and
+//! therefore also bit-identical to the pre-threaded serial kernels,
+//! which keeps the python parity goldens (`tests/parity.rs`) exact.
 
-use super::blocks::{block_ranges, block_scales};
+use super::blocks::{block_ranges_in, block_scales_pool};
 use super::format::QuantFormat;
+use crate::util::pool::{chunk_ranges, Pool, PAR_CHUNK};
 use crate::util::rng::Rng;
+use std::cell::RefCell;
+use std::ops::Range;
+
+thread_local! {
+    /// RR noise buffer, at most one chunk (`PAR_CHUNK` f32s) long —
+    /// replaces the old full-tensor-length noise `Vec` per call. On
+    /// the serial path it is reused across calls; pooled workers are
+    /// scoped threads, so they each allocate one chunk per cast (a
+    /// persistent-worker pool would remove that too; see ROADMAP).
+    static NOISE: RefCell<Vec<f32>> = RefCell::new(Vec::new());
+}
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Rounding {
@@ -32,38 +53,69 @@ impl Rounding {
 
 /// In-place RTN cast: `w <- s_B * rtn(w / s_B)`.
 pub fn cast_rtn(w: &mut [f32], fmt: &QuantFormat) {
-    let scales = block_scales(w, fmt);
-    for (bi, (s, e)) in block_ranges(w.len(), fmt.block_size).enumerate() {
-        let sb = scales[bi];
-        for v in &mut w[s..e] {
-            *v = fmt.rtn(*v / sb) * sb;
+    cast_rtn_pool(w, fmt, &Pool::global())
+}
+
+/// [`cast_rtn`] on an explicit pool (element-wise, so the parallel and
+/// serial paths are bitwise interchangeable).
+pub fn cast_rtn_pool(w: &mut [f32], fmt: &QuantFormat, pool: &Pool) {
+    let n = w.len();
+    let scales = block_scales_pool(w, fmt, pool);
+    pool.for_chunks_mut(w, &chunk_ranges(n, PAR_CHUNK), n, |_, r, chunk| {
+        for (bi, s, e) in block_ranges_in(n, fmt.block_size, r.start, r.end) {
+            let sb = scales[bi];
+            for v in &mut chunk[s - r.start..e - r.start] {
+                *v = fmt.rtn(*v / sb) * sb;
+            }
         }
-    }
+    });
 }
 
 /// In-place unbiased randomized-rounding cast (Def. 1 / A.2.4):
 /// round up with probability `(z - l)/(u - l)`, making `E[cast] = w`.
 ///
-/// The uniform noise is generated in a batched pre-pass so the
-/// element loop has no serial RNG dependency and vectorizes (perf
-/// pass: ~1.5x on the 1M-element eval cast; EXPERIMENTS.md §Perf).
+/// The serial RNG is only used to derive one stream seed; see
+/// [`cast_rr_seeded`] for the actual noise model.
 pub fn cast_rr(w: &mut [f32], fmt: &QuantFormat, rng: &mut Rng) {
-    let scales = block_scales(w, fmt);
-    let mut noise = vec![0f32; w.len()];
-    rng.fill_uniform(&mut noise);
-    for (bi, (s, e)) in block_ranges(w.len(), fmt.block_size).enumerate() {
-        let sb = scales[bi];
-        for (v, n) in w[s..e].iter_mut().zip(&noise[s..e]) {
-            let z = *v / sb;
-            let (l, u) = fmt.bracket(z);
-            if u > l {
-                let p_up = (z - l) / (u - l);
-                *v = if *n < p_up { u } else { l } * sb;
-            } else {
-                *v = l * sb;
+    cast_rr_seeded(w, fmt, rng.next_u64(), &Pool::global())
+}
+
+/// [`cast_rr`] with an explicit noise seed + pool. The uniform noise
+/// for elements `[c*PAR_CHUNK, (c+1)*PAR_CHUNK)` comes from the
+/// counter stream `Rng::stream(seed, &[c])` — a pure function of
+/// `(seed, element index)`, so there is no serial RNG dependency to
+/// break: workers cast their chunks independently and the result is
+/// bit-identical at any thread count. (This replaced the PR-1 serial
+/// noise pre-pass and changed the per-seed RR bitstream once.)
+pub fn cast_rr_seeded(w: &mut [f32], fmt: &QuantFormat, seed: u64, pool: &Pool) {
+    let n = w.len();
+    let scales = block_scales_pool(w, fmt, pool);
+    let kernel = |ci: usize, r: Range<usize>, chunk: &mut [f32]| {
+        let mut rng = Rng::stream(seed, &[ci as u64]);
+        NOISE.with(|buf| {
+            let mut noise = buf.borrow_mut();
+            if noise.len() < r.len() {
+                noise.resize(r.len(), 0.0);
             }
-        }
-    }
+            let noise = &mut noise[..r.len()];
+            rng.fill_uniform(noise);
+            for (bi, s, e) in block_ranges_in(n, fmt.block_size, r.start, r.end) {
+                let sb = scales[bi];
+                for i in s..e {
+                    let z = chunk[i - r.start] / sb;
+                    let (l, u) = fmt.bracket(z);
+                    let q = if u > l {
+                        let p_up = (z - l) / (u - l);
+                        if noise[i - r.start] < p_up { u } else { l }
+                    } else {
+                        l
+                    };
+                    chunk[i - r.start] = q * sb;
+                }
+            }
+        });
+    };
+    pool.for_chunks_mut(w, &chunk_ranges(n, PAR_CHUNK), n, kernel);
 }
 
 /// Cast with either rounding mode.
@@ -77,22 +129,31 @@ pub fn cast(w: &mut [f32], fmt: &QuantFormat, rounding: Rounding, rng: &mut Rng)
 /// Per-coordinate RR variance `sigma_i^2 = s_B^2 (u - z)(z - l)` —
 /// equals `s^2 Delta (1-Delta)` on the uniform lattice (§3.2).
 pub fn sigma2(w: &[f32], fmt: &QuantFormat) -> Vec<f32> {
-    let scales = block_scales(w, fmt);
-    let mut out = vec![0f32; w.len()];
-    for (bi, (s, e)) in block_ranges(w.len(), fmt.block_size).enumerate() {
-        let sb = scales[bi];
-        for i in s..e {
-            let z = w[i] / sb;
-            let (l, u) = fmt.bracket(z);
-            out[i] = sb * sb * (u - z) * (z - l);
+    sigma2_pool(w, fmt, &Pool::global())
+}
+
+/// [`sigma2`] on an explicit pool (element-wise, bitwise path-neutral).
+pub fn sigma2_pool(w: &[f32], fmt: &QuantFormat, pool: &Pool) -> Vec<f32> {
+    let n = w.len();
+    let scales = block_scales_pool(w, fmt, pool);
+    let mut out = vec![0f32; n];
+    pool.for_chunks_mut(&mut out, &chunk_ranges(n, PAR_CHUNK), n, |_, r, dst| {
+        for (bi, s, e) in block_ranges_in(n, fmt.block_size, r.start, r.end) {
+            let sb = scales[bi];
+            for i in s..e {
+                let z = w[i] / sb;
+                let (l, u) = fmt.bracket(z);
+                dst[i - r.start] = sb * sb * (u - z) * (z - l);
+            }
         }
-    }
+    });
     out
 }
 
-/// LOTION penalty (Eq. 3) on the host side — used by the native
-/// backend's train step, Fig. 6 and parity tests. (The PJRT path runs
-/// it in the L1 kernel instead.)
+/// LOTION penalty (Eq. 3) on the host side — used by Fig. 6 and parity
+/// tests. Serial on purpose: its full-stream f64 sum is the quantity
+/// pinned bit-for-bit by the python goldens; the train hot path uses
+/// [`lotion_penalty_and_grad`] instead.
 pub fn lotion_penalty(w: &[f32], fisher: &[f32], fmt: &QuantFormat) -> f64 {
     sigma2(w, fmt)
         .iter()
@@ -115,25 +176,46 @@ pub fn lotion_penalty_grad(w: &[f32], fisher: &[f32], fmt: &QuantFormat) -> Vec<
 /// one `bracket` per element instead of two — the native backend calls
 /// this every optimizer step on every quantized tensor).
 pub fn lotion_penalty_and_grad(w: &[f32], fisher: &[f32], fmt: &QuantFormat) -> (f64, Vec<f32>) {
-    let scales = block_scales(w, fmt);
-    let mut grad = vec![0f32; w.len()];
-    let mut penalty = 0.0f64;
-    for (bi, (s, e)) in block_ranges(w.len(), fmt.block_size).enumerate() {
-        let sb = scales[bi];
-        for i in s..e {
-            let z = w[i] / sb;
-            let (l, u) = fmt.bracket(z);
-            penalty += 0.5 * (fisher[i] as f64) * (sb as f64) * (sb as f64)
-                * ((u - z) as f64) * ((z - l) as f64);
-            grad[i] = 0.5 * fisher[i] * sb * (u + l - 2.0 * z);
+    lotion_penalty_and_grad_pool(w, fisher, fmt, &Pool::global())
+}
+
+/// [`lotion_penalty_and_grad`] on an explicit pool. The penalty is
+/// accumulated per fixed [`PAR_CHUNK`] and the partials folded in
+/// chunk order, so serial and parallel runs agree bit-for-bit.
+pub fn lotion_penalty_and_grad_pool(
+    w: &[f32],
+    fisher: &[f32],
+    fmt: &QuantFormat,
+    pool: &Pool,
+) -> (f64, Vec<f32>) {
+    let n = w.len();
+    let scales = block_scales_pool(w, fmt, pool);
+    let mut grad = vec![0f32; n];
+    let partials = pool.for_chunks_mut(&mut grad, &chunk_ranges(n, PAR_CHUNK), n, |_, r, g| {
+        let mut pen = 0.0f64;
+        for (bi, s, e) in block_ranges_in(n, fmt.block_size, r.start, r.end) {
+            let sb = scales[bi];
+            for i in s..e {
+                let z = w[i] / sb;
+                let (l, u) = fmt.bracket(z);
+                pen += 0.5
+                    * (fisher[i] as f64)
+                    * (sb as f64)
+                    * (sb as f64)
+                    * ((u - z) as f64)
+                    * ((z - l) as f64);
+                g[i - r.start] = 0.5 * fisher[i] * sb * (u + l - 2.0 * z);
+            }
         }
-    }
-    (penalty, grad)
+        pen
+    });
+    (partials.iter().sum(), grad)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::quant::blocks::block_scales;
     use crate::util::prop::{forall, Gen};
 
     #[test]
@@ -295,5 +377,73 @@ mod tests {
                 assert!((o - q).abs() <= 0.5 * scales[0] + 1e-6);
             }
         });
+    }
+
+    /// The tentpole's determinism contract: every kernel bit-identical
+    /// at thread counts 1 / 3 / 4, above and below the serial cutoff.
+    #[test]
+    fn kernels_are_thread_count_invariant() {
+        let mut rng = Rng::new(17);
+        for n in [1000usize, 100_000] {
+            let mut w = vec![0f32; n];
+            rng.fill_normal(&mut w);
+            let fisher: Vec<f32> = (0..n).map(|i| 1.0 / (1 + i % 7) as f32).collect();
+            for block in [0usize, 64] {
+                let fmt = QuantFormat::parse("int4", block).unwrap();
+                let pools = [Pool::serial(), Pool::new(3), Pool::new(4)];
+
+                let rtn: Vec<Vec<f32>> = pools
+                    .iter()
+                    .map(|p| {
+                        let mut v = w.clone();
+                        cast_rtn_pool(&mut v, &fmt, p);
+                        v
+                    })
+                    .collect();
+                assert_eq!(rtn[0], rtn[1], "rtn n={n} block={block}");
+                assert_eq!(rtn[0], rtn[2], "rtn n={n} block={block}");
+
+                let rr: Vec<Vec<f32>> = pools
+                    .iter()
+                    .map(|p| {
+                        let mut v = w.clone();
+                        cast_rr_seeded(&mut v, &fmt, 99, p);
+                        v
+                    })
+                    .collect();
+                assert_eq!(rr[0], rr[1], "rr n={n} block={block}");
+                assert_eq!(rr[0], rr[2], "rr n={n} block={block}");
+
+                let s2: Vec<Vec<f32>> =
+                    pools.iter().map(|p| sigma2_pool(&w, &fmt, p)).collect();
+                assert_eq!(s2[0], s2[1], "sigma2 n={n} block={block}");
+                assert_eq!(s2[0], s2[2], "sigma2 n={n} block={block}");
+
+                let pg: Vec<(f64, Vec<f32>)> = pools
+                    .iter()
+                    .map(|p| lotion_penalty_and_grad_pool(&w, &fisher, &fmt, p))
+                    .collect();
+                assert_eq!(pg[0].0.to_bits(), pg[1].0.to_bits(), "pen n={n} block={block}");
+                assert_eq!(pg[0].1, pg[1].1, "pen grad n={n} block={block}");
+                assert_eq!(pg[0].0.to_bits(), pg[2].0.to_bits(), "pen n={n} block={block}");
+                assert_eq!(pg[0].1, pg[2].1, "pen grad n={n} block={block}");
+            }
+        }
+    }
+
+    /// Same seed -> same RR cast; different seed -> different cast.
+    #[test]
+    fn rr_seeded_is_deterministic_per_seed() {
+        let fmt = QuantFormat::int4();
+        let mut rng = Rng::new(23);
+        let mut w = vec![0f32; 4096];
+        rng.fill_normal(&mut w);
+        let cast_with = |seed: u64| {
+            let mut v = w.clone();
+            cast_rr_seeded(&mut v, &fmt, seed, &Pool::new(2));
+            v
+        };
+        assert_eq!(cast_with(7), cast_with(7));
+        assert_ne!(cast_with(7), cast_with(8));
     }
 }

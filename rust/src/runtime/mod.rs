@@ -37,13 +37,20 @@ use std::path::Path;
 /// feature *and* an artifact directory is present, the native pure-rust
 /// backend otherwise (it needs no artifacts at all).
 pub fn auto_executor(artifacts_dir: &Path) -> Result<Box<dyn Executor>> {
+    auto_executor_threads(artifacts_dir, 0)
+}
+
+/// [`auto_executor`] with an explicit native worker-thread count
+/// (`0` = auto: `LOTION_THREADS`, else all cores). The PJRT backend
+/// ignores the knob — XLA owns its own threading.
+pub fn auto_executor_threads(artifacts_dir: &Path, threads: usize) -> Result<Box<dyn Executor>> {
     if artifacts_dir.join("manifest.json").exists() {
         if let Some(engine) = pjrt_executor(artifacts_dir)? {
             return Ok(engine);
         }
     }
     crate::debug!("no usable PJRT artifacts at {artifacts_dir:?}; using the native backend");
-    Ok(Box::new(NativeEngine::new()))
+    Ok(Box::new(NativeEngine::new().with_threads(threads)))
 }
 
 /// Construct the PJRT backend, or `None` when this build lacks the

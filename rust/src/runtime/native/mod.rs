@@ -11,19 +11,25 @@
 //! forward/backward/optimizer steps built on the `quant` substrate's
 //! exact RTN/RR casts and the Eq. 3 penalty.
 //!
+//! Hot loops (minibatch sampling, linear2 row math, quant block
+//! kernels) run on a scoped worker pool (`util::pool`); RNG use is
+//! counter-split (`Rng::stream`), so for a fixed seed the trained
+//! bitstream is identical at every `--threads` setting.
+//!
 //! * [`model`] — linreg / linear2 math (loss, grads, methods, fisher).
 //! * [`optim`] — SGD / Adam steppers + manifest-shaped state packing.
 
 pub mod model;
 pub mod optim;
 
-pub use self::model::{Method, ModelSpec};
+pub use self::model::{Method, ModelSpec, StepScratch, StepStreams};
 pub use self::optim::OptKind;
 
 use super::executor::{check_args, value, Executor, Value};
 use super::manifest::{ArtifactEntry, Manifest, Role, TensorSpec};
 use crate::quant::QuantFormat;
 use crate::tensor::{DType, HostTensor};
+use crate::util::pool::Pool;
 use crate::util::rng::Rng;
 use anyhow::{anyhow, bail, Result};
 use self::optim::OptState;
@@ -59,9 +65,12 @@ enum Program {
 }
 
 /// The native executor: manifest-compatible registry + interpreter.
+/// Hot kernels run on `pool` (tentpole: scoped worker threads; results
+/// are bit-identical at any thread count, see `util::pool`).
 pub struct NativeEngine {
     manifest: Manifest,
     programs: HashMap<String, Program>,
+    pool: Pool,
     /// cumulative (calls, exec_s) per program
     timings: RefCell<HashMap<String, (u64, f64)>>,
 }
@@ -142,8 +151,23 @@ impl NativeEngine {
         NativeEngine {
             manifest: Manifest { dir: PathBuf::from("<native>"), artifacts },
             programs,
+            pool: Pool::new(0),
             timings: RefCell::new(HashMap::new()),
         }
+    }
+
+    /// Set the worker-thread count for this engine's kernels:
+    /// `0` = auto (`LOTION_THREADS` env var, else all cores). Training
+    /// output is bit-identical for a fixed seed at any value — the
+    /// thread count is a pure throughput knob (DESIGN.md §3).
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.pool = Pool::new(threads);
+        self
+    }
+
+    /// The resolved worker-thread count.
+    pub fn threads(&self) -> usize {
+        self.pool.threads()
     }
 
     fn run_train(
@@ -180,15 +204,20 @@ impl NativeEngine {
             bail!("{}: lrs has {} entries, expected K={k}", entry.name, lrs.len());
         }
 
-        // One stream per chunk, forked per step into data/rounding
-        // streams — the native analogue of the scanned key splits.
-        let mut master = Rng::new(key_seed(get("key")?));
+        // Counter-split streams (tentpole): each step derives stateless
+        // data/rounding stream roots from (chunk key, step index), and
+        // the kernels key per-row / per-chunk sub-streams off those —
+        // no serial RNG dependency anywhere, so the interpreted loop
+        // parallelizes and stays bit-identical at any thread count.
+        let chunk_seed = key_seed(get("key")?);
+        let mut scratch = StepScratch::new(&spec, &lam);
         let mut bases = Vec::with_capacity(k);
         let mut totals = Vec::with_capacity(k);
         for i in 0..k {
-            let mut step_rng = master.fork(i as u64 + 1);
-            let mut data_rng = step_rng.fork(1);
-            let mut round_rng = step_rng.fork(2);
+            let streams = StepStreams {
+                data: Rng::stream_seed(chunk_seed, &[i as u64, 1]),
+                round: Rng::stream_seed(chunk_seed, &[i as u64, 2]),
+            };
             let out = spec.step(
                 &params,
                 &lam,
@@ -196,8 +225,9 @@ impl NativeEngine {
                 method,
                 fmt,
                 lam_reg,
-                &mut data_rng,
-                &mut round_rng,
+                streams,
+                &mut scratch,
+                &self.pool,
             );
             opt.update(&mut params, &out.grads, lrs[i])?;
             bases.push(out.base as f32);
@@ -235,7 +265,7 @@ impl NativeEngine {
             .iter()
             .map(|s| Ok(get(&s.name)?.as_f32()))
             .collect::<Result<Vec<_>>>()?;
-        let loss = spec.val_loss(&params, &lam, &wstar) as f32;
+        let loss = spec.val_loss_pool(&params, &lam, &wstar, &self.pool) as f32;
         Ok(vec![value(HostTensor::scalar_f32(loss))])
     }
 

@@ -4,13 +4,27 @@
 //! validation losses. Semantics mirror `python/compile/models/*` and
 //! `methods.py`; rounding and the Eq. 3 penalty reuse the `quant`
 //! substrate bit-for-bit (DESIGN.md §3).
+//!
+//! Hot loops are row-parallel on a [`Pool`]: minibatch rows sample
+//! from per-row counter streams (`Rng::stream(data_seed, &[row])`),
+//! partial gradients accumulate per fixed [`ROW_CHUNK`] and fold in
+//! chunk order, and the linear2 row loops split by output row — all
+//! partitioned independently of the thread count, so training is
+//! bit-identical at `--threads 1` and `--threads N`.
 
 use crate::data::synth::population_loss;
-use crate::quant::{cast_rr, cast_rtn, lotion_penalty_and_grad, QuantFormat};
+use crate::quant::{cast_rr_seeded, cast_rtn_pool, lotion_penalty_and_grad_pool, QuantFormat};
 use crate::runtime::manifest::{Role, TensorSpec};
 use crate::tensor::DType;
+use crate::util::pool::{chunk_ranges, Pool, PAR_CHUNK, PAR_MIN};
 use crate::util::rng::Rng;
 use anyhow::{bail, Result};
+use std::ops::Range;
+
+/// Minibatch rows per parallel task — a fixed constant (never derived
+/// from the thread count) so the gradient reduction order, and with it
+/// the trained bitstream, is invariant to `--threads`.
+const ROW_CHUNK: usize = 4;
 
 /// Training-method transformation of the base loss (methods.py).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -59,28 +73,74 @@ pub struct StepOut {
     pub grads: Vec<Vec<f32>>,
 }
 
+/// Per-step RNG stream roots (counter-split, DESIGN.md §3): consumers
+/// derive their own `Rng::stream` keyed by row / chunk counters, so
+/// sampling parallelizes with no serial RNG dependency.
+#[derive(Clone, Copy, Debug)]
+pub struct StepStreams {
+    /// root for the step's minibatch sampling
+    pub data: u64,
+    /// root for the step's randomized-rounding noise
+    pub round: u64,
+}
+
+/// Reusable per-chunk buffers: built once per train call, reused
+/// across the K interpreted steps so the hot path allocates nothing
+/// per step (`sqrt_lam` hoist + forward-weight and Fisher scratch).
+pub struct StepScratch {
+    /// element-wise `sqrt(lam)` for linreg sampling (empty for linear2)
+    pub sqrt_lam: Vec<f32>,
+    /// forward-weight buffers, one per parameter (replaces the
+    /// per-step `w.to_vec()` in the old `method_weights`)
+    pub wq: Vec<Vec<f32>>,
+    /// linear2 Gauss-Newton diagonal buffers (empty for linreg, whose
+    /// Fisher *is* `lam` and is borrowed directly)
+    pub fisher: Vec<Vec<f32>>,
+}
+
+impl StepScratch {
+    pub fn new(spec: &ModelSpec, lam: &[f32]) -> StepScratch {
+        let sqrt_lam = match spec {
+            ModelSpec::LinReg { .. } => lam.iter().map(|l| l.sqrt()).collect(),
+            ModelSpec::Linear2 { .. } => Vec::new(),
+        };
+        let wq = spec
+            .param_specs()
+            .iter()
+            .map(|s| Vec::with_capacity(s.elements()))
+            .collect();
+        let fisher = match spec {
+            ModelSpec::LinReg { .. } => Vec::new(),
+            ModelSpec::Linear2 { d, k } => vec![vec![0.0f32; k * d], vec![0.0f32; *k]],
+        };
+        StepScratch { sqrt_lam, wq, fisher }
+    }
+}
+
 fn spec(name: &str, shape: &[usize], role: Role) -> TensorSpec {
     TensorSpec { name: name.to_string(), shape: shape.to_vec(), dtype: DType::F32, role }
 }
 
-/// Forward weights for a method: QAT sees the RTN cast, RAT the RR
-/// cast (both straight-through on the backward pass), PTQ/LOTION train
-/// on the FP32 master weights.
-fn method_weights(
+/// Forward weights for a method, written into a reusable buffer: QAT
+/// sees the RTN cast, RAT the RR cast (both straight-through on the
+/// backward pass), PTQ/LOTION train on the FP32 master weights.
+fn method_weights_into(
     w: &[f32],
     method: Method,
     fmt: Option<&QuantFormat>,
-    round_rng: &mut Rng,
-) -> Vec<f32> {
-    let mut out = w.to_vec();
+    round_seed: u64,
+    pool: &Pool,
+    out: &mut Vec<f32>,
+) {
+    out.clear();
+    out.extend_from_slice(w);
     if let Some(fmt) = fmt {
         match method {
-            Method::Qat => cast_rtn(&mut out, fmt),
-            Method::Rat => cast_rr(&mut out, fmt, round_rng),
+            Method::Qat => cast_rtn_pool(out, fmt, pool),
+            Method::Rat => cast_rr_seeded(out, fmt, round_seed, pool),
             Method::Ptq | Method::Lotion => {}
         }
     }
-    out
 }
 
 impl ModelSpec {
@@ -153,27 +213,67 @@ impl ModelSpec {
         method: Method,
         fmt: Option<&QuantFormat>,
         lam_reg: f32,
-        data_rng: &mut Rng,
-        round_rng: &mut Rng,
+        streams: StepStreams,
+        scratch: &mut StepScratch,
+        pool: &Pool,
     ) -> StepOut {
         let (base, mut grads) = match self {
             ModelSpec::LinReg { d, batch } => {
-                let wq = method_weights(&params[0], method, fmt, round_rng);
-                linreg_loss_grad(*d, *batch, &wq, lam, wstar, data_rng)
+                method_weights_into(
+                    &params[0],
+                    method,
+                    fmt,
+                    streams.round,
+                    pool,
+                    &mut scratch.wq[0],
+                );
+                linreg_loss_grad(
+                    *d,
+                    *batch,
+                    &scratch.wq[0],
+                    &scratch.sqrt_lam,
+                    wstar,
+                    streams.data,
+                    pool,
+                )
             }
             ModelSpec::Linear2 { d, k } => {
-                let w1q = method_weights(&params[0], method, fmt, round_rng);
-                let w2q = method_weights(&params[1], method, fmt, round_rng);
-                linear2_loss_grad(*d, *k, &w1q, &w2q, lam, wstar)
+                method_weights_into(
+                    &params[0],
+                    method,
+                    fmt,
+                    Rng::stream_seed(streams.round, &[0]),
+                    pool,
+                    &mut scratch.wq[0],
+                );
+                method_weights_into(
+                    &params[1],
+                    method,
+                    fmt,
+                    Rng::stream_seed(streams.round, &[1]),
+                    pool,
+                    &mut scratch.wq[1],
+                );
+                linear2_loss_grad(*d, *k, &scratch.wq[0], &scratch.wq[1], lam, wstar, pool)
             }
         };
         let mut total = base;
         if method == Method::Lotion {
             if let Some(fmt) = fmt {
-                for (i, fisher) in self.fisher_exact(params, lam).iter().enumerate() {
-                    let (pen, pg) = lotion_penalty_and_grad(&params[i], fisher, fmt);
+                // Gauss-Newton diagonal per parameter: `lam` itself for
+                // linreg (borrowed, no copy), the exact closed form into
+                // scratch for linear2.
+                if let ModelSpec::Linear2 { .. } = self {
+                    self.fisher_exact_into(params, lam, &mut scratch.fisher, pool);
+                }
+                for (i, grad) in grads.iter_mut().enumerate() {
+                    let fisher: &[f32] = match self {
+                        ModelSpec::LinReg { .. } => lam,
+                        ModelSpec::Linear2 { .. } => scratch.fisher[i].as_slice(),
+                    };
+                    let (pen, pg) = lotion_penalty_and_grad_pool(&params[i], fisher, fmt, pool);
                     total += lam_reg as f64 * pen;
-                    for (g, p) in grads[i].iter_mut().zip(&pg) {
+                    for (g, p) in grad.iter_mut().zip(&pg) {
                         *g += lam_reg * p;
                     }
                 }
@@ -182,91 +282,134 @@ impl ModelSpec {
         StepOut { base, total, grads }
     }
 
-    /// Exact Gauss-Newton diagonal per parameter (the synthetic models'
-    /// `fisher_exact`; stop-grad, evaluated at the master weights).
-    fn fisher_exact(&self, params: &[Vec<f32>], lam: &[f32]) -> Vec<Vec<f32>> {
-        match self {
-            ModelSpec::LinReg { .. } => vec![lam.to_vec()],
-            ModelSpec::Linear2 { d, k } => {
-                let (w1, w2) = (&params[0], &params[1]);
-                let kf = *k as f32;
-                let mut f1 = vec![0.0f32; k * d];
-                let mut f2 = vec![0.0f32; *k];
-                for j in 0..*k {
-                    let wj = w2[j] / kf;
-                    let row = &w1[j * d..(j + 1) * d];
-                    let frow = &mut f1[j * d..(j + 1) * d];
-                    let mut acc = 0.0f32;
-                    for i in 0..*d {
-                        frow[i] = wj * wj * lam[i];
-                        acc += lam[i] * row[i] * row[i];
-                    }
-                    f2[j] = acc / (kf * kf);
-                }
-                vec![f1, f2]
+    /// Exact Gauss-Newton diagonal for linear2 (the synthetic models'
+    /// `fisher_exact`; stop-grad, evaluated at the master weights),
+    /// written row-parallel into the scratch buffers.
+    fn fisher_exact_into(
+        &self,
+        params: &[Vec<f32>],
+        lam: &[f32],
+        fisher: &mut [Vec<f32>],
+        pool: &Pool,
+    ) {
+        let ModelSpec::Linear2 { d, k } = self else {
+            return;
+        };
+        let (d, k) = (*d, *k);
+        let (w1, w2) = (&params[0], &params[1]);
+        let kf = k as f32;
+        let (f1, rest) = fisher.split_at_mut(1);
+        let f1 = &mut f1[0][..];
+        let f2 = &mut rest[0][..];
+        let row_ranges: Vec<Range<usize>> = (0..k).map(|j| j * d..(j + 1) * d).collect();
+        let accs = pool.for_chunks_mut(f1, &row_ranges, k * d, |j, _, frow| {
+            let wj = w2[j] / kf;
+            let row = &w1[j * d..(j + 1) * d];
+            let mut acc = 0.0f32;
+            for i in 0..d {
+                frow[i] = wj * wj * lam[i];
+                acc += lam[i] * row[i] * row[i];
             }
-        }
+            acc / (kf * kf)
+        });
+        f2.copy_from_slice(&accs);
     }
 
     /// Exact validation loss at the given parameters.
     pub fn val_loss(&self, params: &[Vec<f32>], lam: &[f32], wstar: &[f32]) -> f64 {
+        self.val_loss_pool(params, lam, wstar, &Pool::global())
+    }
+
+    /// [`ModelSpec::val_loss`] on an explicit pool.
+    pub fn val_loss_pool(
+        &self,
+        params: &[Vec<f32>],
+        lam: &[f32],
+        wstar: &[f32],
+        pool: &Pool,
+    ) -> f64 {
         match self {
             ModelSpec::LinReg { .. } => population_loss(&params[0], wstar, lam),
             ModelSpec::Linear2 { d, k } => {
-                let v = effective_w(*d, *k, &params[0], &params[1]);
+                let v = effective_w_pool(*d, *k, &params[0], &params[1], pool);
                 population_loss(&v, wstar, lam)
             }
         }
     }
 }
 
-/// `v = (1/k) W2 W1` — the effective linear map of the two-layer model.
-fn effective_w(d: usize, k: usize, w1: &[f32], w2: &[f32]) -> Vec<f32> {
+/// `v = (1/k) W2 W1` — the effective linear map of the two-layer
+/// model, split column-parallel: each worker owns a contiguous `v`
+/// range and folds the k rows itself, so any chunking yields the same
+/// bits.
+fn effective_w_pool(d: usize, k: usize, w1: &[f32], w2: &[f32], pool: &Pool) -> Vec<f32> {
     let mut v = vec![0.0f32; d];
-    for j in 0..k {
-        let wj = w2[j];
-        let row = &w1[j * d..(j + 1) * d];
-        for i in 0..d {
-            v[i] += wj * row[i];
-        }
-    }
     let kf = k as f32;
-    for vi in v.iter_mut() {
-        *vi /= kf;
-    }
+    pool.for_chunks_mut(&mut v, &chunk_ranges(d, PAR_CHUNK), k * d, |_, r, out| {
+        for j in 0..k {
+            let wj = w2[j];
+            let row = &w1[j * d + r.start..j * d + r.end];
+            for (o, x) in out.iter_mut().zip(row) {
+                *o += wj * x;
+            }
+        }
+        for o in out.iter_mut() {
+            *o /= kf;
+        }
+    });
     v
 }
 
 /// Minibatch loss + gradient for linreg at forward weights `wq`:
 /// `x ~ N(0, diag(lam))`, `y = w*.x`, `L = 0.5 mean((x.wq - y)^2)`,
-/// `dL/dwq = (1/B) X^T r`. Streams one row at a time — no `[B, d]`
-/// batch materialization on the hot path.
+/// `dL/dwq = (1/B) X^T r`. Row `b` samples from the counter stream
+/// `Rng::stream(data_seed, &[b])`; rows are processed in fixed
+/// [`ROW_CHUNK`] groups whose partial gradients fold in chunk order —
+/// parallel across the pool, bit-identical at any thread count.
 fn linreg_loss_grad(
     d: usize,
     batch: usize,
     wq: &[f32],
-    lam: &[f32],
+    sqrt_lam: &[f32],
     wstar: &[f32],
-    data_rng: &mut Rng,
+    data_seed: u64,
+    pool: &Pool,
 ) -> (f64, Vec<Vec<f32>>) {
-    let sqrt_lam: Vec<f32> = lam.iter().map(|l| l.sqrt()).collect();
+    let ranges = chunk_ranges(batch, ROW_CHUNK);
+    let part = |r: Range<usize>| -> (f64, Vec<f32>) {
+        let mut grad = vec![0.0f32; d];
+        let mut xrow = vec![0.0f32; d];
+        let mut loss_acc = 0.0f64;
+        for row in r {
+            let mut rng = Rng::stream(data_seed, &[row as u64]);
+            for (x, sl) in xrow.iter_mut().zip(sqrt_lam) {
+                *x = rng.normal_f32() * sl;
+            }
+            let mut y = 0.0f32;
+            let mut pred = 0.0f32;
+            for i in 0..d {
+                y += xrow[i] * wstar[i];
+                pred += xrow[i] * wq[i];
+            }
+            let res = pred - y;
+            loss_acc += (res as f64) * (res as f64);
+            for i in 0..d {
+                grad[i] += res * xrow[i];
+            }
+        }
+        (loss_acc, grad)
+    };
+    let parts: Vec<(f64, Vec<f32>)> = if batch * d < PAR_MIN || pool.threads() == 1 {
+        ranges.into_iter().map(part).collect()
+    } else {
+        pool.run(ranges, |_, r| part(r))
+    };
     let mut grad = vec![0.0f32; d];
-    let mut xrow = vec![0.0f32; d];
     let mut loss_acc = 0.0f64;
-    for _ in 0..batch {
-        for (x, sl) in xrow.iter_mut().zip(&sqrt_lam) {
-            *x = data_rng.normal_f32() * sl;
-        }
-        let mut y = 0.0f32;
-        let mut pred = 0.0f32;
-        for i in 0..d {
-            y += xrow[i] * wstar[i];
-            pred += xrow[i] * wq[i];
-        }
-        let r = pred - y;
-        loss_acc += (r as f64) * (r as f64);
-        for i in 0..d {
-            grad[i] += r * xrow[i];
+    for (pl, pg) in &parts {
+        loss_acc += pl;
+        for (g, p) in grad.iter_mut().zip(pg) {
+            *g += p;
         }
     }
     let bf = batch as f32;
@@ -278,7 +421,9 @@ fn linreg_loss_grad(
 
 /// Exact full-batch loss + gradients for linear2 at forward weights
 /// `(w1q, w2q)`: `L = 0.5 (v - w*)^T diag(lam) (v - w*)` with
-/// `v = (1/k) W2 W1`; gradients by the chain rule through `v`.
+/// `v = (1/k) W2 W1`; gradients by the chain rule through `v`. The
+/// `v`/`g` passes are column-parallel (per-element independent), the
+/// weight-gradient pass row-parallel; the loss folds per fixed chunk.
 fn linear2_loss_grad(
     d: usize,
     k: usize,
@@ -286,35 +431,73 @@ fn linear2_loss_grad(
     w2q: &[f32],
     lam: &[f32],
     wstar: &[f32],
+    pool: &Pool,
 ) -> (f64, Vec<Vec<f32>>) {
-    let v = effective_w(d, k, w1q, w2q);
+    let v = effective_w_pool(d, k, w1q, w2q, pool);
     let kf = k as f32;
-    let mut loss = 0.0f64;
-    let mut g = vec![0.0f32; d]; // dL/dv
-    for i in 0..d {
-        let dv = v[i] - wstar[i];
-        loss += 0.5 * (lam[i] as f64) * (dv as f64) * (dv as f64);
-        g[i] = lam[i] * dv;
-    }
+
+    // dL/dv (element-wise) + per-chunk loss partials folded in order
+    let mut g = vec![0.0f32; d];
+    let col_ranges = chunk_ranges(d, PAR_CHUNK);
+    // this pass touches only d elements; gate the dispatch on that,
+    // not on the k*d-sized weight passes below
+    let loss_parts = pool.for_chunks_mut(&mut g, &col_ranges, d, |_, r, gout| {
+        let mut loss = 0.0f64;
+        for i in r.clone() {
+            let dv = v[i] - wstar[i];
+            loss += 0.5 * (lam[i] as f64) * (dv as f64) * (dv as f64);
+            gout[i - r.start] = lam[i] * dv;
+        }
+        loss
+    });
+    let loss: f64 = loss_parts.iter().sum();
+
+    // weight gradients, row-parallel over the k output rows
     let mut gw1 = vec![0.0f32; k * d];
-    let mut gw2 = vec![0.0f32; k];
-    for j in 0..k {
+    let row_ranges: Vec<Range<usize>> = (0..k).map(|j| j * d..(j + 1) * d).collect();
+    let gw2 = pool.for_chunks_mut(&mut gw1, &row_ranges, k * d, |j, _, grow| {
         let wj = w2q[j] / kf;
         let row = &w1q[j * d..(j + 1) * d];
-        let grow = &mut gw1[j * d..(j + 1) * d];
         let mut acc = 0.0f32;
         for i in 0..d {
             grow[i] = wj * g[i];
             acc += g[i] * row[i];
         }
-        gw2[j] = acc / kf;
-    }
+        acc / kf
+    });
     (loss, vec![gw1, gw2])
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    fn serial_streams(data: u64, round: u64) -> StepStreams {
+        StepStreams { data, round }
+    }
+
+    fn lg(
+        d: usize,
+        batch: usize,
+        wq: &[f32],
+        lam: &[f32],
+        wstar: &[f32],
+        seed: u64,
+    ) -> (f64, Vec<Vec<f32>>) {
+        let sqrt_lam: Vec<f32> = lam.iter().map(|l| l.sqrt()).collect();
+        linreg_loss_grad(d, batch, wq, &sqrt_lam, wstar, seed, &Pool::serial())
+    }
+
+    fn l2(
+        d: usize,
+        k: usize,
+        w1: &[f32],
+        w2: &[f32],
+        lam: &[f32],
+        wstar: &[f32],
+    ) -> (f64, Vec<Vec<f32>>) {
+        linear2_loss_grad(d, k, w1, w2, lam, wstar, &Pool::serial())
+    }
 
     /// Finite-difference check of linear2 gradients (exact loss, so FD
     /// converges cleanly).
@@ -330,15 +513,15 @@ mod tests {
         let mut wstar = vec![0.0f32; d];
         rng.fill_normal(&mut wstar);
 
-        let (_, grads) = linear2_loss_grad(d, k, &w1, &w2, &lam, &wstar);
+        let (_, grads) = l2(d, k, &w1, &w2, &lam, &wstar);
         let eps = 1e-3f32;
         for idx in 0..k * d {
             let mut hi = w1.clone();
             hi[idx] += eps;
             let mut lo = w1.clone();
             lo[idx] -= eps;
-            let (lh, _) = linear2_loss_grad(d, k, &hi, &w2, &lam, &wstar);
-            let (ll, _) = linear2_loss_grad(d, k, &lo, &w2, &lam, &wstar);
+            let (lh, _) = l2(d, k, &hi, &w2, &lam, &wstar);
+            let (ll, _) = l2(d, k, &lo, &w2, &lam, &wstar);
             let fd = ((lh - ll) / (2.0 * eps as f64)) as f32;
             assert!((fd - grads[0][idx]).abs() < 1e-3, "w1[{idx}]: fd={fd} an={}", grads[0][idx]);
         }
@@ -347,8 +530,8 @@ mod tests {
             hi[j] += eps;
             let mut lo = w2.clone();
             lo[j] -= eps;
-            let (lh, _) = linear2_loss_grad(d, k, &w1, &hi, &lam, &wstar);
-            let (ll, _) = linear2_loss_grad(d, k, &w1, &lo, &lam, &wstar);
+            let (lh, _) = l2(d, k, &w1, &hi, &lam, &wstar);
+            let (ll, _) = l2(d, k, &w1, &lo, &lam, &wstar);
             let fd = ((lh - ll) / (2.0 * eps as f64)) as f32;
             assert!((fd - grads[1][j]).abs() < 1e-3, "w2[{j}]: fd={fd} an={}", grads[1][j]);
         }
@@ -365,8 +548,7 @@ mod tests {
         rng.fill_normal(&mut wstar);
         let mut w = vec![0.0f32; d];
         rng.fill_normal(&mut w);
-        let mut data_rng = Rng::new(11);
-        let (_, grads) = linreg_loss_grad(d, 20000, &w, &lam, &wstar, &mut data_rng);
+        let (_, grads) = lg(d, 20000, &w, &lam, &wstar, 11);
         for i in 0..d {
             let pop = lam[i] * (w[i] - wstar[i]);
             // B = 20000 puts the estimator's std well under this band
@@ -378,6 +560,51 @@ mod tests {
         }
     }
 
+    /// Row-parallel gradients must match the serial fold bit-for-bit
+    /// (same fixed chunking, same reduction order).
+    #[test]
+    fn linreg_grad_is_thread_count_invariant() {
+        let d = 3000; // batch*d over PAR_MIN -> parallel path engages
+        let batch = 16;
+        let mut rng = Rng::new(5);
+        let mut w = vec![0.0f32; d];
+        rng.fill_normal(&mut w);
+        let mut wstar = vec![0.0f32; d];
+        rng.fill_normal(&mut wstar);
+        let lam = vec![0.5f32; d];
+        let sqrt_lam: Vec<f32> = lam.iter().map(|l| l.sqrt()).collect();
+        let run = |threads: usize| {
+            linreg_loss_grad(d, batch, &w, &sqrt_lam, &wstar, 42, &Pool::new(threads))
+        };
+        let (l1, g1) = run(1);
+        let (l3, g3) = run(3);
+        let (l4, g4) = run(4);
+        assert_eq!(l1.to_bits(), l3.to_bits());
+        assert_eq!(l1.to_bits(), l4.to_bits());
+        assert_eq!(g1, g3);
+        assert_eq!(g1, g4);
+    }
+
+    #[test]
+    fn linear2_grads_are_thread_count_invariant() {
+        let (d, k) = (9000, 4);
+        let mut rng = Rng::new(6);
+        let mut w1 = vec![0.0f32; k * d];
+        rng.fill_normal(&mut w1);
+        let mut w2 = vec![0.0f32; k];
+        rng.fill_normal(&mut w2);
+        let mut wstar = vec![0.0f32; d];
+        rng.fill_normal(&mut wstar);
+        let lam: Vec<f32> = (0..d).map(|i| 1.0 / (1 + i % 9) as f32).collect();
+        let run = |threads: usize| {
+            linear2_loss_grad(d, k, &w1, &w2, &lam, &wstar, &Pool::new(threads))
+        };
+        let (l1, g1) = run(1);
+        let (l4, g4) = run(4);
+        assert_eq!(l1.to_bits(), l4.to_bits());
+        assert_eq!(g1, g4);
+    }
+
     #[test]
     fn effective_w_of_gt_construction_is_wstar() {
         // Lemma 4's GT: rows(W1) = w*, W2 = 1 -> v = w*
@@ -385,7 +612,7 @@ mod tests {
         let wstar = vec![0.5f32, -1.0, 2.0, 0.0, -0.25];
         let w1: Vec<f32> = (0..k).flat_map(|_| wstar.iter().copied()).collect();
         let w2 = vec![1.0f32; k];
-        assert_eq!(effective_w(d, k, &w1, &w2), wstar);
+        assert_eq!(effective_w_pool(d, k, &w1, &w2, &Pool::serial()), wstar);
     }
 
     #[test]
@@ -396,17 +623,58 @@ mod tests {
         let lam = vec![1.0f32, 0.5, 0.25, 0.125];
         let wstar = vec![1.0f32, -1.0, 0.5, -0.5];
         let fmt = QuantFormat::int4();
-        let mut dr = Rng::new(1);
-        let mut rr = Rng::new(2);
-        let out_ptq =
-            m.step(&params, &lam, &wstar, Method::Ptq, None, 0.0, &mut dr, &mut rr);
-        let mut dr = Rng::new(1);
-        let mut rr = Rng::new(2);
-        let out_lotion =
-            m.step(&params, &lam, &wstar, Method::Lotion, Some(&fmt), 1.0, &mut dr, &mut rr);
+        let pool = Pool::serial();
+        let mut scratch = StepScratch::new(&m, &lam);
+        let out_ptq = m.step(
+            &params,
+            &lam,
+            &wstar,
+            Method::Ptq,
+            None,
+            0.0,
+            serial_streams(1, 2),
+            &mut scratch,
+            &pool,
+        );
+        let out_lotion = m.step(
+            &params,
+            &lam,
+            &wstar,
+            Method::Lotion,
+            Some(&fmt),
+            1.0,
+            serial_streams(1, 2),
+            &mut scratch,
+            &pool,
+        );
         assert!((out_ptq.base - out_lotion.base).abs() < 1e-9);
         assert!(out_lotion.total >= out_lotion.base); // penalty is >= 0
         assert_eq!(out_lotion.grads.len(), 2);
+    }
+
+    /// The linreg LOTION penalty borrows `lam` as the Fisher with no
+    /// copy; cross-check against the explicit closed form.
+    #[test]
+    fn linreg_lotion_penalty_uses_lam_as_fisher() {
+        let m = ModelSpec::LinReg { d: 6, batch: 4 };
+        let w = vec![vec![0.31f32, -0.77, 0.05, 0.4, -0.2, 0.9]];
+        let lam = vec![1.0f32, 0.5, 0.25, 0.125, 1.5, 0.75];
+        let wstar = vec![0.0f32; 6];
+        let fmt = QuantFormat::int4();
+        let mut scratch = StepScratch::new(&m, &lam);
+        let out = m.step(
+            &w,
+            &lam,
+            &wstar,
+            Method::Lotion,
+            Some(&fmt),
+            2.0,
+            serial_streams(3, 4),
+            &mut scratch,
+            &Pool::serial(),
+        );
+        let (pen, _) = crate::quant::lotion_penalty_and_grad(&w[0], &lam, &fmt);
+        assert!((out.total - out.base - 2.0 * pen).abs() < 1e-9);
     }
 
     #[test]

@@ -2,10 +2,12 @@
 //! and a mini property-testing harness (proptest is unavailable offline).
 
 pub mod logging;
+pub mod pool;
 pub mod prop;
 pub mod rng;
 pub mod tempdir;
 pub mod stats;
 
+pub use pool::Pool;
 pub use rng::Rng;
 pub use stats::Summary;

@@ -1,0 +1,304 @@
+//! Scoped worker pool for the native backend's hot loops (std::thread
+//! only — the crate's zero-extra-deps policy keeps `anyhow` the sole
+//! external dependency).
+//!
+//! Determinism contract (DESIGN.md §3): callers partition work with
+//! [`chunk_ranges`], whose boundaries are a pure function of the
+//! problem size — **never** of the thread count — and fold any
+//! reductions in chunk-index order. The pool only decides *which
+//! worker* runs each chunk, so results are bit-identical at
+//! `--threads 1` and `--threads N`. Worker panics propagate to the
+//! caller via `std::thread::scope`'s join.
+
+use std::ops::Range;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Fixed task granularity (elements) for element-wise kernels. A pure
+/// constant so chunk boundaries — and therefore reduction order and
+/// counter-RNG stream keys — do not depend on the machine.
+pub const PAR_CHUNK: usize = 16 * 1024;
+
+/// Below this much total work a kernel stays on the calling thread
+/// (spawn + scheduling overhead would dominate).
+pub const PAR_MIN: usize = 32 * 1024;
+
+/// Deterministic partition of `0..n` into contiguous ranges of at most
+/// `chunk` elements (the last may be shorter). Pure function of
+/// `(n, chunk)`.
+pub fn chunk_ranges(n: usize, chunk: usize) -> Vec<Range<usize>> {
+    let c = chunk.max(1);
+    (0..n.div_ceil(c)).map(|i| i * c..((i + 1) * c).min(n)).collect()
+}
+
+/// A worker pool of a fixed logical width. Threads are scoped per
+/// call (`std::thread::scope`), so closures may borrow from the
+/// caller's stack and panics resurface at the call site; the `Pool`
+/// value itself is the reusable part (width resolution + serial
+/// fallback policy).
+#[derive(Clone, Copy, Debug)]
+pub struct Pool {
+    threads: usize,
+}
+
+impl Pool {
+    /// `threads == 0` means auto: `LOTION_THREADS` if set, else all
+    /// available cores. Explicit values are clamped to >= 1.
+    pub fn new(threads: usize) -> Pool {
+        Pool { threads: resolve_threads(threads) }
+    }
+
+    /// A single-threaded pool: every kernel takes its serial path.
+    pub fn serial() -> Pool {
+        Pool { threads: 1 }
+    }
+
+    /// The process-wide default pool: `LOTION_THREADS` / core count,
+    /// or whatever [`set_global_threads`] last installed. Backs the
+    /// seed-API quant kernels (`cast_rtn(w, fmt)` etc.), so
+    /// coordinator-side eval casts honor `--threads` too.
+    pub fn global() -> Pool {
+        let t = GLOBAL_THREADS.load(Ordering::Relaxed);
+        if t > 0 {
+            return Pool { threads: t };
+        }
+        let p = Pool::new(0);
+        GLOBAL_THREADS.store(p.threads, Ordering::Relaxed);
+        p
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `f(index, task)` over owned tasks on up to `threads`
+    /// workers; results come back in task order. Task partitioning is
+    /// the caller's job (see the module determinism contract).
+    pub fn run<T, R, F>(&self, tasks: Vec<T>, f: F) -> Vec<R>
+    where
+        T: Send,
+        R: Send,
+        F: Fn(usize, T) -> R + Sync,
+    {
+        let n = tasks.len();
+        if self.threads == 1 || n <= 1 {
+            return tasks.into_iter().enumerate().map(|(i, t)| f(i, t)).collect();
+        }
+        let slots: Vec<Mutex<Option<T>>> =
+            tasks.into_iter().map(|t| Mutex::new(Some(t))).collect();
+        let out: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+        let next = AtomicUsize::new(0);
+        let workers = self.threads.min(n);
+        std::thread::scope(|s| {
+            for _ in 0..workers {
+                s.spawn(|| loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let task = slots[i].lock().unwrap().take().expect("task taken twice");
+                    let r = f(i, task);
+                    *out[i].lock().unwrap() = Some(r);
+                });
+            }
+        });
+        out.into_iter()
+            .map(|m| m.into_inner().unwrap().expect("worker produced no result"))
+            .collect()
+    }
+
+    /// The standard kernel dispatch: run `f(index, range, chunk)` over
+    /// the pre-split chunks of `data`, **serially in range order** when
+    /// `total_work < PAR_MIN` or the pool is serial, on worker threads
+    /// otherwise. Results come back in range order either way, so a
+    /// kernel written against this helper gets the determinism contract
+    /// (fixed ranges + in-order folds) without hand-rolling the guard.
+    pub fn for_chunks_mut<T, R, F>(
+        &self,
+        data: &mut [T],
+        ranges: &[Range<usize>],
+        total_work: usize,
+        f: F,
+    ) -> Vec<R>
+    where
+        T: Send,
+        R: Send,
+        F: Fn(usize, Range<usize>, &mut [T]) -> R + Sync,
+    {
+        if total_work < PAR_MIN || self.threads == 1 {
+            ranges
+                .iter()
+                .enumerate()
+                .map(|(i, r)| f(i, r.clone(), &mut data[r.clone()]))
+                .collect()
+        } else {
+            self.run_on_chunks_mut(data, ranges, f)
+        }
+    }
+
+    /// Split `data` at the given ascending, contiguous, covering range
+    /// boundaries and run `f(index, range, chunk)` on each disjoint
+    /// mutable chunk. The `par_chunks`-style entry point used by every
+    /// in-place kernel.
+    pub fn run_on_chunks_mut<T, R, F>(
+        &self,
+        data: &mut [T],
+        ranges: &[Range<usize>],
+        f: F,
+    ) -> Vec<R>
+    where
+        T: Send,
+        R: Send,
+        F: Fn(usize, Range<usize>, &mut [T]) -> R + Sync,
+    {
+        let mut parts: Vec<(Range<usize>, &mut [T])> = Vec::with_capacity(ranges.len());
+        let mut rest: &mut [T] = data;
+        let mut offset = 0usize;
+        for r in ranges {
+            assert!(r.start == offset, "ranges must be contiguous from 0");
+            let (head, tail) = rest.split_at_mut(r.end - offset);
+            parts.push((r.clone(), head));
+            rest = tail;
+            offset = r.end;
+        }
+        self.run(parts, |i, (r, chunk)| f(i, r, chunk))
+    }
+}
+
+static GLOBAL_THREADS: AtomicUsize = AtomicUsize::new(0);
+
+/// Install the process-wide default width used by [`Pool::global`]
+/// (`0` resolves from `LOTION_THREADS` / cores immediately). The CLI
+/// calls this with the `--threads` value so the quant kernels' seed
+/// APIs — including the evaluator's RTN/RR eval casts, which run
+/// coordinator-side rather than through an engine — respect the same
+/// knob.
+pub fn set_global_threads(threads: usize) {
+    GLOBAL_THREADS.store(resolve_threads(threads), Ordering::Relaxed);
+}
+
+fn resolve_threads(requested: usize) -> usize {
+    if requested > 0 {
+        return requested;
+    }
+    if let Some(t) = env_threads() {
+        return t.max(1);
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// The `LOTION_THREADS` environment override (0/unset/garbage = auto).
+pub fn env_threads() -> Option<usize> {
+    std::env::var("LOTION_THREADS")
+        .ok()
+        .and_then(|v| v.trim().parse::<usize>().ok())
+        .filter(|&t| t > 0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunk_ranges_cover_with_uneven_tail() {
+        assert_eq!(chunk_ranges(10, 4), vec![0..4, 4..8, 8..10]);
+        assert_eq!(chunk_ranges(8, 4), vec![0..4, 4..8]);
+        assert_eq!(chunk_ranges(3, 4), vec![0..3]);
+        assert_eq!(chunk_ranges(0, 4), Vec::<Range<usize>>::new());
+        // chunk=0 is clamped to 1 rather than dividing by zero
+        assert_eq!(chunk_ranges(2, 0), vec![0..1, 1..2]);
+    }
+
+    #[test]
+    fn run_returns_results_in_task_order() {
+        let pool = Pool::new(4);
+        let tasks: Vec<usize> = (0..37).collect();
+        let out = pool.run(tasks, |i, t| {
+            assert_eq!(i, t);
+            t * 3
+        });
+        assert_eq!(out, (0..37).map(|t| t * 3).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn serial_pool_matches_parallel_pool() {
+        let work = |_, t: usize| (t as f64).sqrt();
+        let a = Pool::serial().run((0..100).collect(), work);
+        let b = Pool::new(3).run((0..100).collect(), work);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn more_threads_than_tasks_is_fine() {
+        let pool = Pool::new(16);
+        let out = pool.run(vec![1, 2], |_, t| t + 1);
+        assert_eq!(out, vec![2, 3]);
+    }
+
+    #[test]
+    fn run_on_chunks_mut_uneven_split() {
+        let pool = Pool::new(3);
+        let mut data: Vec<u32> = (0..23).collect();
+        let ranges = chunk_ranges(data.len(), 5);
+        let sums = pool.run_on_chunks_mut(&mut data, &ranges, |i, r, chunk| {
+            assert_eq!(chunk.len(), r.len());
+            let mut s = 0u32;
+            for v in chunk.iter_mut() {
+                s += *v;
+                *v += 100;
+            }
+            (i, s)
+        });
+        // every element mutated exactly once
+        assert_eq!(data, (100..123).collect::<Vec<u32>>());
+        // partial results in chunk order
+        assert_eq!(sums.iter().map(|(i, _)| *i).collect::<Vec<_>>(), vec![0, 1, 2, 3, 4]);
+        let total: u32 = sums.iter().map(|(_, s)| *s).sum();
+        assert_eq!(total, (0..23).sum::<u32>());
+    }
+
+    #[test]
+    fn for_chunks_mut_serial_and_parallel_agree() {
+        // the dispatch helper must produce identical data and results
+        // on its serial path (small work / 1 thread) and pooled path
+        let kernel = |i: usize, r: Range<usize>, chunk: &mut [f64]| -> f64 {
+            let mut acc = 0.0;
+            for (off, v) in chunk.iter_mut().enumerate() {
+                *v = (i * 1000 + r.start + off) as f64;
+                acc += *v;
+            }
+            acc
+        };
+        let n = 41;
+        let ranges = chunk_ranges(n, 7);
+        let mut a = vec![0.0f64; n];
+        let ra = Pool::serial().for_chunks_mut(&mut a, &ranges, 0, kernel);
+        let mut b = vec![0.0f64; n];
+        // total_work above PAR_MIN forces the pooled branch
+        let rb = Pool::new(3).for_chunks_mut(&mut b, &ranges, PAR_MIN, kernel);
+        assert_eq!(a, b);
+        assert_eq!(ra, rb);
+        assert_eq!(ra.len(), ranges.len());
+    }
+
+    #[test]
+    fn worker_panic_propagates_to_caller() {
+        let pool = Pool::new(2);
+        let res = std::panic::catch_unwind(|| {
+            pool.run((0..8).collect::<Vec<usize>>(), |_, t| {
+                if t == 5 {
+                    panic!("boom in worker");
+                }
+                t
+            })
+        });
+        assert!(res.is_err(), "worker panic must propagate");
+    }
+
+    #[test]
+    fn zero_resolves_to_at_least_one() {
+        assert!(Pool::new(0).threads() >= 1);
+        assert_eq!(Pool::serial().threads(), 1);
+        assert_eq!(Pool::new(7).threads(), 7);
+    }
+}

@@ -7,8 +7,13 @@ cd "$(dirname "$0")/.."
 echo "== cargo build --release =="
 cargo build --release
 
-echo "== cargo test -q =="
+echo "== cargo test -q (default threads) =="
 cargo test -q
+
+echo "== cargo test -q (LOTION_THREADS=1) =="
+# the threaded native backend must be bit-identical serial vs parallel;
+# running the whole suite in both modes makes any divergence fail the gate
+LOTION_THREADS=1 cargo test -q
 
 echo "== cargo fmt --check =="
 if cargo fmt --version >/dev/null 2>&1; then
