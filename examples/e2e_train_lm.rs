@@ -4,9 +4,10 @@
 //! scanned JAX train program → Pallas quantization kernels) on a real
 //! workload.
 //!
-//! Requires the e2e artifact set:
+//! Fastest with the e2e artifact set + a `--features pjrt` build:
 //!     cd python && python -m compile.aot --out ../artifacts --set e2e
-//! then:
+//! but also runs fully offline on the native transformer interpreter
+//! (no artifacts, pure rust — much slower at this scale). Either way:
 //!     cargo run --release --example e2e_train_lm -- [steps] [model]
 //!
 //! On this 1-core CPU testbed a step of the 100M config takes tens of
@@ -27,9 +28,10 @@ fn main() -> Result<()> {
     let steps: usize = args.get(1).map(|s| s.parse()).transpose()?.unwrap_or(12);
     let model = args.get(2).cloned().unwrap_or_else(|| "lm-100m".to_string());
 
-    // LM presets exist only as AOT artifacts: this needs the e2e set +
-    // a `--features pjrt` build (the native backend covers the
-    // synthetic testbeds only; the find_train below says so if not)
+    // auto backend: PJRT when this build has the feature + the e2e
+    // artifact set, else the native transformer interpreter (which
+    // registers every lm-* preset, so this runs fully offline too —
+    // expect tens of seconds per lm-100m step on the pure-rust path)
     let engine = auto_executor(Path::new("artifacts"))?;
     let engine: &dyn Executor = &*engine;
     let mut cfg = RunConfig::default();

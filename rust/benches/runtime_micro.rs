@@ -9,9 +9,10 @@
 use lotion::benchlib::Bench;
 use lotion::config::{RunConfig, Schedule};
 use lotion::coordinator::{DataSource, MetricsLogger, Trainer};
+use lotion::data::{ByteTokenizer, TokenBatcher, ZipfMarkovCorpus};
 use lotion::experiments::common::synth_statics;
 use lotion::runtime::native::{ModelSpec, NativeEngine, NativeModel, OptKind};
-use lotion::runtime::Executor;
+use lotion::runtime::{Executor, Role};
 use std::path::Path;
 
 /// One native train-chunk throughput measurement.
@@ -34,6 +35,35 @@ fn native_train_bench(b: &mut Bench, engine: &dyn Executor, model: &str, tag: &s
     });
 }
 
+/// One native LM train-chunk throughput measurement (steps/sec).
+fn lm_train_bench(b: &mut Bench, engine: &dyn Executor, model: &str, tag: &str) {
+    let mut cfg = RunConfig::default();
+    cfg.model = model.into();
+    cfg.method = "lotion".into();
+    cfg.format = "int4".into();
+    cfg.steps = 1_000_000; // never reached; we call chunk() directly
+    cfg.lr = 1e-3;
+    cfg.lambda = 100.0;
+    cfg.schedule = Schedule::Constant;
+    let eval = engine.manifest().find_eval(model).expect("lm eval entry");
+    let data = eval
+        .inputs
+        .iter()
+        .find(|s| s.role == Role::Data)
+        .expect("lm data spec");
+    let (batch, t1) = (data.shape[1], data.shape[2]);
+    let corpus = ZipfMarkovCorpus::generate(300_000, 512, 4, 1);
+    let toks = ByteTokenizer::new().encode(&corpus.bytes);
+    let batcher = TokenBatcher::new(toks, batch, t1 - 1, 0.1);
+    let mut trainer =
+        Trainer::new(engine, cfg, vec![], DataSource::Tokens(batcher)).expect("lm trainer");
+    let k = trainer.steps_per_call() as f64;
+    let mut metrics = MetricsLogger::in_memory();
+    b.run_with_items(&format!("native_train_step/{tag}"), Some(k), &mut || {
+        trainer.chunk(&mut metrics).unwrap();
+    });
+}
+
 fn main() {
     lotion::util::logging::init();
     let mut b = Bench::new(1, 5);
@@ -41,26 +71,10 @@ fn main() {
     // Native backend: steps/sec at ~1k and ~100k parameters for both
     // synthetic testbeds (throughput denominator = optimizer steps).
     let engine = NativeEngine::with_models(&[
-        NativeModel {
-            spec: ModelSpec::LinReg { d: 1_000, batch: 32 },
-            opt: OptKind::Sgd,
-            steps_per_call: 8,
-        },
-        NativeModel {
-            spec: ModelSpec::LinReg { d: 100_000, batch: 32 },
-            opt: OptKind::Sgd,
-            steps_per_call: 8,
-        },
-        NativeModel {
-            spec: ModelSpec::Linear2 { d: 500, k: 2 },
-            opt: OptKind::Sgd,
-            steps_per_call: 8,
-        },
-        NativeModel {
-            spec: ModelSpec::Linear2 { d: 50_000, k: 2 },
-            opt: OptKind::Sgd,
-            steps_per_call: 8,
-        },
+        NativeModel::from_spec(ModelSpec::LinReg { d: 1_000, batch: 32 }, OptKind::Sgd, 8),
+        NativeModel::from_spec(ModelSpec::LinReg { d: 100_000, batch: 32 }, OptKind::Sgd, 8),
+        NativeModel::from_spec(ModelSpec::Linear2 { d: 500, k: 2 }, OptKind::Sgd, 8),
+        NativeModel::from_spec(ModelSpec::Linear2 { d: 50_000, k: 2 }, OptKind::Sgd, 8),
     ]);
     native_train_bench(&mut b, &engine, "linreg_d1000", "linreg/1k_params", 1_000);
     native_train_bench(&mut b, &engine, "linreg_d100000", "linreg/100k_params", 100_000);
@@ -73,16 +87,8 @@ fn main() {
     // across rows — only wall clock moves.
     for (tag, threads) in [("t1", 1usize), ("t2", 2), ("tall", 0)] {
         let engine = NativeEngine::with_models(&[
-            NativeModel {
-                spec: ModelSpec::LinReg { d: 1_000, batch: 32 },
-                opt: OptKind::Sgd,
-                steps_per_call: 8,
-            },
-            NativeModel {
-                spec: ModelSpec::LinReg { d: 100_000, batch: 32 },
-                opt: OptKind::Sgd,
-                steps_per_call: 8,
-            },
+            NativeModel::from_spec(ModelSpec::LinReg { d: 1_000, batch: 32 }, OptKind::Sgd, 8),
+            NativeModel::from_spec(ModelSpec::LinReg { d: 100_000, batch: 32 }, OptKind::Sgd, 8),
         ])
         .with_threads(threads);
         native_train_bench(
@@ -99,6 +105,15 @@ fn main() {
             &format!("linreg/100k_params/{tag}"),
             100_000,
         );
+    }
+
+    // Transformer-interpreter train-step throughput (ISSUE 3): the
+    // default registry's lm-tiny / lm-150m-sim presets on the native
+    // backend, so the per-PR BENCH json tracks the LM hot path.
+    {
+        let engine = NativeEngine::new();
+        lm_train_bench(&mut b, &engine, "lm-tiny", "lm/tiny");
+        lm_train_bench(&mut b, &engine, "lm-150m-sim", "lm/150m_sim");
     }
 
     #[cfg(feature = "pjrt")]

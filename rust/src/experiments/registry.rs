@@ -32,15 +32,47 @@ pub fn canonical(id: &str) -> &str {
     }
 }
 
+/// The backend models an experiment needs (`fig6` is closed-form and
+/// needs none) — the availability check behind the `exp all` summary.
+fn required_models(id: &str) -> Vec<String> {
+    match id {
+        "fig2" => vec!["linreg_d12000".to_string()],
+        "fig3" => fig3::KS.iter().map(|k| format!("linear2_d12000_k{k}")).collect(),
+        "fig9" | "fig10" | "fig12" => vec!["lm-150m-sim".to_string()],
+        "fig11" => vec!["lm-300m-sim".to_string()],
+        _ => Vec::new(),
+    }
+}
+
 pub fn run(engine: &dyn Executor, id: &str, results_dir: &Path) -> Result<()> {
     let id = canonical(id);
     if id == "all" {
-        // a failing experiment (e.g. LM figures on a backend without LM
-        // programs) is a data point, not a batch-killer
+        // a failing experiment is a data point, not a batch-killer —
+        // but every skip/failure must be explicit in the final summary
+        let mut summary: Vec<(&str, String)> = Vec::new();
         for e in ALL {
-            if let Err(err) = run(engine, e, results_dir) {
-                crate::warn_!("experiment {e} failed: {err:#}");
-            }
+            let missing: Vec<String> = required_models(e)
+                .into_iter()
+                .filter(|m| engine.manifest().find_init(m).is_err())
+                .collect();
+            let status = if !missing.is_empty() {
+                let s = format!("skipped — backend has no programs for {}", missing.join(", "));
+                crate::warn_!("experiment {e} {s}");
+                s
+            } else {
+                match run(engine, e, results_dir) {
+                    Ok(()) => "ran".to_string(),
+                    Err(err) => {
+                        crate::warn_!("experiment {e} failed: {err:#}");
+                        format!("FAILED — {err:#}")
+                    }
+                }
+            };
+            summary.push((e, status));
+        }
+        println!("\n== exp all summary (backend registry: {:?}) ==", engine.manifest().dir);
+        for (e, s) in &summary {
+            println!("  {e:<6} {s}");
         }
         return Ok(());
     }
@@ -69,5 +101,20 @@ mod tests {
         assert_eq!(canonical("table1"), "fig9");
         assert_eq!(canonical("fig5"), "fig12");
         assert_eq!(canonical("fig2"), "fig2");
+    }
+
+    #[test]
+    fn required_models_cover_every_backend_experiment() {
+        assert!(required_models("fig6").is_empty()); // closed form
+        assert_eq!(required_models("fig3").len(), fig3::KS.len());
+        // every requirement resolves on the default native registry —
+        // i.e. `exp all --backend native` skips nothing now that the
+        // LM interpreter has landed
+        let eng = crate::runtime::NativeEngine::new();
+        for e in ALL {
+            for m in required_models(e) {
+                assert!(eng.manifest().find_init(&m).is_ok(), "{e} needs {m}");
+            }
+        }
     }
 }

@@ -9,8 +9,9 @@
 //!
 //! Execution is backend-pluggable behind the `runtime::Executor` trait
 //! (DESIGN.md §3): the default **native** backend runs the synthetic
-//! train/eval programs in pure rust — exact RR/RTN casts and the Eq. 3
-//! penalty included — with no artifacts, python, or XLA anywhere;
+//! testbeds *and* the transformer LM presets in pure rust — exact
+//! RR/RTN casts and the Eq. 3 penalty included — with no artifacts,
+//! python, or XLA anywhere;
 //! `--features pjrt` adds the PJRT backend that loads AOT-lowered HLO
 //! artifacts from the JAX/Pallas build layers and executes them with no
 //! python on the request path.

@@ -9,8 +9,9 @@
 //! ```
 //!
 //! Every subcommand runs against a backend picked by `--backend`:
-//! `native` (pure-rust, no artifacts needed — the default when no
-//! artifact directory is present), `pjrt` (the AOT/XLA path, needs
+//! `native` (pure-rust, no artifacts needed — covers the synthetic
+//! testbeds *and* the `lm-*` transformer presets, so every experiment
+//! including fig9–fig12 runs offline), `pjrt` (the AOT/XLA path, needs
 //! `--features pjrt` and `make artifacts`), or `auto` (the default).
 
 use anyhow::{bail, Context, Result};

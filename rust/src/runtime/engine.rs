@@ -6,7 +6,13 @@
 //! specs and returns the decomposed output tuple (the PJRT build on
 //! this image returns one tuple buffer; `decompose_tuple` splits it on
 //! the host — see DESIGN.md §2). The [`Executor`] impl converts the
-//! coordinator's backend-neutral [`Value`]s at the call boundary.
+//! coordinator's backend-neutral [`Value`]s at the call boundary,
+//! through a literal cache keyed on `Rc` pointer identity: a train
+//! chunk's outputs are cached as (host value, literal) pairs, so when
+//! the trainer hands the same `Rc`s back as the next chunk's inputs
+//! (params/opt state round-tripping through `TrainState`, statics
+//! reused every call) no re-encoding happens — restoring the zero-copy
+//! state round-trip the pre-Executor engine had (ROADMAP item).
 
 use super::executor::{check_args, value, Executor, Value};
 use super::literals;
@@ -15,13 +21,26 @@ use crate::info;
 use anyhow::{anyhow, bail, Context, Result};
 use std::cell::RefCell;
 use std::collections::HashMap;
-use std::rc::Rc;
+use std::rc::{Rc, Weak};
 use std::time::Instant;
+
+/// A cached `Value ⇄ Literal` pair. The weak handle guards against
+/// pointer reuse: a hit counts only if the cached host tensor is still
+/// alive *and* is the very `Rc` being passed (`Rc::ptr_eq`), so a
+/// freed-and-reallocated address can never alias a stale literal.
+struct CachedLiteral {
+    host: Weak<crate::tensor::HostTensor>,
+    lit: literals::Literal,
+}
 
 pub struct Engine {
     client: xla::PjRtClient,
     pub manifest: Manifest,
     cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    /// `Rc` pointer identity → encoded literal (state round-trip cache)
+    lit_cache: RefCell<HashMap<usize, CachedLiteral>>,
+    /// cache-effectiveness counters: (hits, misses)
+    lit_stats: RefCell<(u64, u64)>,
     /// cumulative timing: (artifact, compile_s, calls, exec_s)
     timings: RefCell<HashMap<String, (f64, u64, f64)>>,
 }
@@ -40,8 +59,15 @@ impl Engine {
             client,
             manifest,
             cache: RefCell::new(HashMap::new()),
+            lit_cache: RefCell::new(HashMap::new()),
+            lit_stats: RefCell::new((0, 0)),
             timings: RefCell::new(HashMap::new()),
         })
+    }
+
+    /// (hits, misses) of the Value⇄Literal state cache.
+    pub fn literal_cache_stats(&self) -> (u64, u64) {
+        *self.lit_stats.borrow()
     }
 
     /// Compile (or fetch from cache) the executable for an artifact.
@@ -119,15 +145,51 @@ impl Executor for Engine {
 
     fn call(&self, entry: &ArtifactEntry, args: &[Value]) -> Result<Vec<Value>> {
         check_args(entry, args)?;
-        let lits: Vec<literals::Literal> = args
-            .iter()
-            .map(|v| literals::to_literal(v))
-            .collect::<Result<_>>()?;
+        // encode inputs, pulling cached literals by Rc identity (cache
+        // entries are moved out for the call and reinstated after, so
+        // the same literal is never aliased)
+        let mut lits: Vec<literals::Literal> = Vec::with_capacity(args.len());
+        for v in args {
+            let key = Rc::as_ptr(v) as usize;
+            let hit = self
+                .lit_cache
+                .borrow_mut()
+                .remove(&key)
+                .filter(|c| c.host.upgrade().map_or(false, |rc| Rc::ptr_eq(&rc, v)));
+            match hit {
+                Some(c) => {
+                    self.lit_stats.borrow_mut().0 += 1;
+                    lits.push(c.lit);
+                }
+                None => {
+                    self.lit_stats.borrow_mut().1 += 1;
+                    lits.push(literals::to_literal(v)?);
+                }
+            }
+        }
         let parts = self.call_literals(entry, &lits)?;
-        parts
-            .iter()
-            .map(|l| Ok(value(literals::to_host(l)?)))
-            .collect()
+        // reinstate input literals (statics / val batches recur across
+        // calls) and cache each output literal against the host value
+        // it decodes to — the next chunk's param/opt inputs are exactly
+        // those Rc's, so the round-trip re-encoding disappears.
+        {
+            let mut cache = self.lit_cache.borrow_mut();
+            for (v, lit) in args.iter().zip(lits) {
+                let cached = CachedLiteral { host: Rc::downgrade(v), lit };
+                cache.insert(Rc::as_ptr(v) as usize, cached);
+            }
+        }
+        let mut out = Vec::with_capacity(parts.len());
+        for lit in parts {
+            let host = value(literals::to_host(&lit)?);
+            let cached = CachedLiteral { host: Rc::downgrade(&host), lit };
+            self.lit_cache.borrow_mut().insert(Rc::as_ptr(&host) as usize, cached);
+            out.push(host);
+        }
+        // drop entries whose host tensors are gone (bounds the cache to
+        // live state: params, opt moments, statics, data chunks)
+        self.lit_cache.borrow_mut().retain(|_, c| c.host.strong_count() > 0);
+        Ok(out)
     }
 
     /// Per-artifact (compile_s, calls, total_exec_s) — the L3 profile

@@ -147,23 +147,51 @@ impl Manifest {
             .ok_or_else(|| anyhow!("artifact {name:?} not in manifest"))
     }
 
+    /// The sorted, deduped model names with a train program — the
+    /// suggestion list for "unknown model" errors.
+    pub fn known_models(&self) -> Vec<String> {
+        let mut v: Vec<String> = self
+            .artifacts
+            .values()
+            .filter(|e| e.kind == "train" && !e.model_name.is_empty())
+            .map(|e| e.model_name.clone())
+            .collect();
+        v.sort();
+        v.dedup();
+        v
+    }
+
     /// Find the train program for (model, method, format) — the manifest
-    /// key carries a `_k<steps>` suffix chosen at AOT time.
+    /// key carries a `_k<steps>` suffix chosen at AOT time. A miss
+    /// reports the registry's known models so a config typo is
+    /// self-explaining.
     pub fn find_train(&self, model: &str, method: &str, format: &str) -> Result<&ArtifactEntry> {
         let fmt = if method == "ptq" { "none" } else { format };
         let prefix = format!("train_{model}_{method}_{fmt}_k");
-        self.artifacts
-            .values()
-            .find(|e| e.name.starts_with(&prefix))
-            .ok_or_else(|| anyhow!("no train artifact matching {prefix}*"))
+        self.artifacts.values().find(|e| e.name.starts_with(&prefix)).ok_or_else(|| {
+            anyhow!(
+                "no train artifact matching {prefix}* (known models: {})",
+                self.known_models().join(", ")
+            )
+        })
     }
 
     pub fn find_eval(&self, model: &str) -> Result<&ArtifactEntry> {
-        self.get(&format!("eval_{model}"))
+        self.get(&format!("eval_{model}")).map_err(|_| {
+            anyhow!(
+                "no eval artifact for model {model:?} (known models: {})",
+                self.known_models().join(", ")
+            )
+        })
     }
 
     pub fn find_init(&self, model: &str) -> Result<&ArtifactEntry> {
-        self.get(&format!("init_{model}"))
+        self.get(&format!("init_{model}")).map_err(|_| {
+            anyhow!(
+                "no init artifact for model {model:?} (known models: {})",
+                self.known_models().join(", ")
+            )
+        })
     }
 
     /// All (method, format) pairs with a train artifact for this model.
@@ -216,6 +244,19 @@ mod tests {
         assert!(m.find_eval("m").is_ok());
         assert!(m.find_train("m", "qat", "int4").is_err());
         assert_eq!(m.methods_for("m"), vec![("lotion".to_string(), "int4".to_string())]);
+    }
+
+    #[test]
+    fn unknown_model_errors_list_known_models() {
+        let (_d, m) = sample_manifest();
+        assert_eq!(m.known_models(), vec!["m".to_string()]);
+        for err in [
+            format!("{:#}", m.find_train("nope", "lotion", "int4").unwrap_err()),
+            format!("{:#}", m.find_eval("nope").unwrap_err()),
+            format!("{:#}", m.find_init("nope").unwrap_err()),
+        ] {
+            assert!(err.contains("known models: m"), "{err}");
+        }
     }
 
     #[test]

@@ -1,72 +1,90 @@
-//! Native pure-rust CPU backend: executes the synthetic train/eval/init
-//! programs directly over [`HostTensor`]s — no PJRT client, no AOT
-//! artifacts, no python anywhere (DESIGN.md §3).
+//! Native pure-rust CPU backend: executes train/eval/init programs
+//! directly over [`HostTensor`]s — no PJRT client, no AOT artifacts,
+//! no python anywhere (DESIGN.md §3).
 //!
 //! The backend exposes the *same* manifest-driven program registry as
 //! the PJRT engine: entry names, positional I/O specs and metadata all
 //! follow the AOT calling convention (DESIGN.md §2), so `Trainer`,
 //! `Evaluator`, sweeps and the experiment regenerators run unchanged on
-//! either backend. What differs is purely how `call` executes: here a
-//! scanned K-step train program is an interpreted loop of
-//! forward/backward/optimizer steps built on the `quant` substrate's
-//! exact RTN/RR casts and the Eq. 3 penalty.
+//! either backend.
 //!
-//! Hot loops (minibatch sampling, linear2 row math, quant block
-//! kernels) run on a scoped worker pool (`util::pool`); RNG use is
+//! Since the program-layer refactor the backend is two pieces:
+//!
+//! * a **model-agnostic driver** (this module): it interprets a
+//!   scanned K-step train program as a loop of {build forward weights
+//!   (the QAT/RTN or RAT/RR STE cast over the quantized subset), call
+//!   the program's `loss_grad`, add the Eq. 3 LOTION σ²-penalty per
+//!   quantized tensor (exact Gauss-Newton diagonal when the program
+//!   has one, Adam's bias-corrected second moment otherwise), step
+//!   SGD/Adam} — the method transformation never touches model math;
+//! * pluggable [`NativeProgram`]s: the synthetic testbeds
+//!   ([`testbeds`]) and the decoder-only transformer LM
+//!   ([`transformer`], unlocking fig9–fig12 offline).
+//!
+//! Hot loops run on a scoped worker pool (`util::pool`); RNG use is
 //! counter-split (`Rng::stream`), so for a fixed seed the trained
 //! bitstream is identical at every `--threads` setting.
-//!
-//! * [`model`] — linreg / linear2 math (loss, grads, methods, fisher).
-//! * [`optim`] — SGD / Adam steppers + manifest-shaped state packing.
 
-pub mod model;
 pub mod optim;
+pub mod program;
+pub mod testbeds;
+pub mod transformer;
 
-pub use self::model::{Method, ModelSpec, StepScratch, StepStreams};
 pub use self::optim::OptKind;
+pub use self::program::{EvalCtx, Method, NativeProgram, StepCtx, StepStreams};
+pub use self::testbeds::ModelSpec;
+pub use self::transformer::{LmConfig, LmProgram};
 
+use self::optim::OptState;
 use super::executor::{check_args, value, Executor, Value};
 use super::manifest::{ArtifactEntry, Manifest, Role, TensorSpec};
-use crate::quant::QuantFormat;
+use crate::quant::{cast_rr_seeded, cast_rtn_pool, lotion_penalty_and_grad_pool, QuantFormat};
 use crate::tensor::{DType, HostTensor};
 use crate::util::pool::Pool;
 use crate::util::rng::Rng;
 use anyhow::{anyhow, bail, Result};
-use self::optim::OptState;
 use std::cell::RefCell;
 use std::collections::{BTreeMap, HashMap};
 use std::path::PathBuf;
+use std::rc::Rc;
 use std::time::Instant;
 
-/// A model registered with the native backend: which testbed, which
+/// A model registered with the native backend: which program, which
 /// optimizer, and the chunk length K of its scanned train programs.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone)]
 pub struct NativeModel {
-    pub spec: ModelSpec,
+    pub program: Rc<dyn NativeProgram>,
     pub opt: OptKind,
     pub steps_per_call: usize,
 }
 
-/// One executable native program (the registry value behind an entry).
-enum Program {
-    Train {
-        spec: ModelSpec,
-        opt: OptKind,
-        method: Method,
-        fmt: Option<QuantFormat>,
-        k: usize,
-    },
-    Eval {
-        spec: ModelSpec,
-    },
-    Init {
-        spec: ModelSpec,
-    },
+impl NativeModel {
+    /// Register a synthetic testbed.
+    pub fn from_spec(spec: ModelSpec, opt: OptKind, steps_per_call: usize) -> NativeModel {
+        NativeModel { program: Rc::new(spec), opt, steps_per_call }
+    }
+
+    /// Register an LM preset by name (AOT-matching batch geometry and
+    /// K); the error lists the known presets.
+    pub fn lm(preset: &str, opt: OptKind) -> Result<NativeModel> {
+        Ok(NativeModel {
+            program: Rc::new(LmProgram::preset(preset)?),
+            opt,
+            steps_per_call: LmProgram::preset_k(preset)?,
+        })
+    }
 }
 
-/// The native executor: manifest-compatible registry + interpreter.
-/// Hot kernels run on `pool` (tentpole: scoped worker threads; results
-/// are bit-identical at any thread count, see `util::pool`).
+/// One executable native program (the registry value behind an entry).
+enum Program {
+    Train { model: NativeModel, method: Method, fmt: Option<QuantFormat> },
+    Eval { model: NativeModel },
+    Init { model: NativeModel },
+}
+
+/// The native executor: manifest-compatible registry + the
+/// model-agnostic method/optimizer driver. Hot kernels run on `pool`
+/// (results are bit-identical at any thread count, see `util::pool`).
 pub struct NativeEngine {
     manifest: Manifest,
     programs: HashMap<String, Program>,
@@ -83,31 +101,28 @@ impl Default for NativeEngine {
 
 impl NativeEngine {
     /// The default registry: the smoke-scale linreg (d=256) used by
-    /// tests/examples plus the paper-scale synthetic problems behind
-    /// `exp fig2`/`exp fig3` (mirrors the AOT `smoke` + `synth` sets).
+    /// tests/examples, the paper-scale synthetic problems behind
+    /// `exp fig2`/`exp fig3`, and the LM presets behind
+    /// `exp fig9..fig12` (mirrors the AOT `smoke` + `synth` + `lm`
+    /// sets — plus `lm-100m` from the `e2e` set).
     pub fn new() -> NativeEngine {
         Self::with_models(&Self::default_models())
     }
 
     pub fn default_models() -> Vec<NativeModel> {
         let mut models = vec![
-            NativeModel {
-                spec: ModelSpec::LinReg { d: 256, batch: 64 },
-                opt: OptKind::Sgd,
-                steps_per_call: 8,
-            },
-            NativeModel {
-                spec: ModelSpec::LinReg { d: 12000, batch: 128 },
-                opt: OptKind::Sgd,
-                steps_per_call: 16,
-            },
+            NativeModel::from_spec(ModelSpec::LinReg { d: 256, batch: 64 }, OptKind::Sgd, 8),
+            NativeModel::from_spec(ModelSpec::LinReg { d: 12000, batch: 128 }, OptKind::Sgd, 16),
         ];
         for k in [1, 2, 4, 8, 16, 32] {
-            models.push(NativeModel {
-                spec: ModelSpec::Linear2 { d: 12000, k },
-                opt: OptKind::Sgd,
-                steps_per_call: 16,
-            });
+            models.push(NativeModel::from_spec(
+                ModelSpec::Linear2 { d: 12000, k },
+                OptKind::Sgd,
+                16,
+            ));
+        }
+        for preset in transformer::preset_names() {
+            models.push(NativeModel::lm(preset, OptKind::Adam).expect("builtin preset"));
         }
         models
     }
@@ -133,20 +148,11 @@ impl NativeEngine {
                 };
                 for fmt in fmts {
                     let entry = train_entry(m, method, fmt.as_ref());
-                    add(
-                        entry,
-                        Program::Train {
-                            spec: m.spec,
-                            opt: m.opt,
-                            method,
-                            fmt,
-                            k: m.steps_per_call.max(1),
-                        },
-                    );
+                    add(entry, Program::Train { model: m.clone(), method, fmt });
                 }
             }
-            add(eval_entry(&m.spec), Program::Eval { spec: m.spec });
-            add(init_entry(&m.spec), Program::Init { spec: m.spec });
+            add(eval_entry(m), Program::Eval { model: m.clone() });
+            add(init_entry(m), Program::Init { model: m.clone() });
         }
         NativeEngine {
             manifest: Manifest { dir: PathBuf::from("<native>"), artifacts },
@@ -173,18 +179,19 @@ impl NativeEngine {
     fn run_train(
         &self,
         entry: &ArtifactEntry,
-        spec: ModelSpec,
-        opt_kind: OptKind,
+        model: &NativeModel,
         method: Method,
         fmt: Option<&QuantFormat>,
-        k: usize,
         args: &[Value],
     ) -> Result<Vec<Value>> {
+        let program = &*model.program;
+        let k = model.steps_per_call.max(1);
         let get = input_lookup(entry, args);
-        let lam = get("lam")?.as_f32();
-        let wstar = get("wstar")?.as_f32();
         let lrs = get("lrs")?.as_f32();
         let lam_reg = get("lam_reg")?.scalar_to_f32();
+        if lrs.len() != k {
+            bail!("{}: lrs has {} entries, expected K={k}", entry.name, lrs.len());
+        }
         let param_names: Vec<String> = entry
             .input_specs(Role::Param)
             .iter()
@@ -199,18 +206,45 @@ impl NativeEngine {
             .iter()
             .map(|s| Ok((s.name.clone(), get(&s.name)?.as_f32())))
             .collect::<Result<Vec<_>>>()?;
-        let mut opt = OptState::unpack(opt_kind, &param_names, &opt_named)?;
-        if lrs.len() != k {
-            bail!("{}: lrs has {} entries, expected K={k}", entry.name, lrs.len());
-        }
+        let mut opt = OptState::unpack(model.opt, &param_names, &opt_named)?;
+        let statics: Vec<(String, Vec<f32>)> = entry
+            .input_specs(Role::Static)
+            .iter()
+            .map(|s| Ok((s.name.clone(), get(&s.name)?.as_f32())))
+            .collect::<Result<Vec<_>>>()?;
+        let data: Option<Vec<i32>> = match entry.inputs.iter().find(|s| s.role == Role::Data) {
+            Some(s) => Some(get(&s.name)?.as_i32()),
+            None => None,
+        };
+        let step_len = data.as_ref().map(|d| d.len() / k).unwrap_or(0);
 
-        // Counter-split streams (tentpole): each step derives stateless
-        // data/rounding stream roots from (chunk key, step index), and
-        // the kernels key per-row / per-chunk sub-streams off those —
-        // no serial RNG dependency anywhere, so the interpreted loop
-        // parallelizes and stays bit-identical at any thread count.
+        // indices of the quantized parameter subset, in param order
+        let quantized = program.quantized();
+        let quant_idx: Vec<usize> = param_names
+            .iter()
+            .enumerate()
+            .filter(|(_, n)| quantized.iter().any(|q| q.as_str() == n.as_str()))
+            .map(|(i, _)| i)
+            .collect();
+
+        // Counter-split streams (DESIGN.md §3): each step derives
+        // stateless data/rounding stream roots from (chunk key, step
+        // index) — no serial RNG dependency anywhere, so the
+        // interpreted loop parallelizes and stays bit-identical at any
+        // thread count.
         let chunk_seed = key_seed(get("key")?);
-        let mut scratch = StepScratch::new(&spec, &lam);
+        let mut scratch = program.make_scratch();
+        // Forward-weight buffers exist only for the casting methods:
+        // PTQ/LOTION train on the FP32 master weights directly, so the
+        // LM hot path pays no per-step full-model copy.
+        let casts = fmt.is_some() && matches!(method, Method::Qat | Method::Rat);
+        let mut wq: Vec<Vec<f32>> = if casts { params.clone() } else { Vec::new() };
+        let mut grads: Vec<Vec<f32>> = params.iter().map(|p| vec![0.0; p.len()]).collect();
+        let mut fisher: Vec<Vec<f32>> = if method == Method::Lotion && fmt.is_some() {
+            quant_idx.iter().map(|&i| vec![0.0; params[i].len()]).collect()
+        } else {
+            Vec::new()
+        };
         let mut bases = Vec::with_capacity(k);
         let mut totals = Vec::with_capacity(k);
         for i in 0..k {
@@ -218,20 +252,62 @@ impl NativeEngine {
                 data: Rng::stream_seed(chunk_seed, &[i as u64, 1]),
                 round: Rng::stream_seed(chunk_seed, &[i as u64, 2]),
             };
-            let out = spec.step(
-                &params,
-                &lam,
-                &wstar,
-                method,
-                fmt,
-                lam_reg,
+            let ctx = StepCtx {
+                statics: &statics,
+                data: data.as_deref().map(|d| &d[i * step_len..(i + 1) * step_len]),
                 streams,
-                &mut scratch,
-                &self.pool,
-            );
-            opt.update(&mut params, &out.grads, lrs[i])?;
-            bases.push(out.base as f32);
-            totals.push(out.total as f32);
+                pool: &self.pool,
+            };
+            // forward weights: the method's STE cast over the
+            // quantized subset (per-tensor counter streams for RR,
+            // mirroring the per-tensor key splits in methods.py);
+            // PTQ/LOTION forward the master weights themselves
+            let fwd: &[Vec<f32>] = if casts {
+                let fmt = fmt.expect("cast methods carry a format");
+                for (pi, w) in wq.iter_mut().enumerate() {
+                    w.copy_from_slice(&params[pi]);
+                }
+                match method {
+                    Method::Qat => {
+                        for &pi in &quant_idx {
+                            cast_rtn_pool(&mut wq[pi], fmt, &self.pool);
+                        }
+                    }
+                    Method::Rat => {
+                        for (qi, &pi) in quant_idx.iter().enumerate() {
+                            let seed = Rng::stream_seed(streams.round, &[qi as u64]);
+                            cast_rr_seeded(&mut wq[pi], fmt, seed, &self.pool);
+                        }
+                    }
+                    Method::Ptq | Method::Lotion => unreachable!("non-casting method"),
+                }
+                &wq
+            } else {
+                &params
+            };
+            let base = program.loss_grad(fwd, &ctx, scratch.as_mut(), &mut grads)?;
+            let mut total = base;
+            if method == Method::Lotion {
+                if let Some(fmt) = fmt {
+                    // Fisher is stop-grad, evaluated at the master
+                    // weights: the program's exact Gauss-Newton
+                    // diagonal when it has one, Adam's moments else.
+                    if !program.fisher_exact_into(&params, &ctx, &mut fisher)? {
+                        opt.fisher_into(&quant_idx, &mut fisher)?;
+                    }
+                    for (qi, &pi) in quant_idx.iter().enumerate() {
+                        let (pen, pg) =
+                            lotion_penalty_and_grad_pool(&params[pi], &fisher[qi], fmt, &self.pool);
+                        total += lam_reg as f64 * pen;
+                        for (g, p) in grads[pi].iter_mut().zip(&pg) {
+                            *g += lam_reg * p;
+                        }
+                    }
+                }
+            }
+            opt.update(&mut params, &grads, lrs[i])?;
+            bases.push(base as f32);
+            totals.push(total as f32);
         }
 
         let mut out = Vec::with_capacity(entry.outputs.len());
@@ -254,30 +330,38 @@ impl NativeEngine {
     fn run_eval(
         &self,
         entry: &ArtifactEntry,
-        spec: ModelSpec,
+        model: &NativeModel,
         args: &[Value],
     ) -> Result<Vec<Value>> {
         let get = input_lookup(entry, args);
-        let lam = get("lam")?.as_f32();
-        let wstar = get("wstar")?.as_f32();
         let params: Vec<Vec<f32>> = entry
             .input_specs(Role::Param)
             .iter()
             .map(|s| Ok(get(&s.name)?.as_f32()))
             .collect::<Result<Vec<_>>>()?;
-        let loss = spec.val_loss_pool(&params, &lam, &wstar, &self.pool) as f32;
+        let statics: Vec<(String, Vec<f32>)> = entry
+            .input_specs(Role::Static)
+            .iter()
+            .map(|s| Ok((s.name.clone(), get(&s.name)?.as_f32())))
+            .collect::<Result<Vec<_>>>()?;
+        let data: Option<Vec<i32>> = match entry.inputs.iter().find(|s| s.role == Role::Data) {
+            Some(s) => Some(get(&s.name)?.as_i32()),
+            None => None,
+        };
+        let ctx = EvalCtx { statics: &statics, data: data.as_deref(), pool: &self.pool };
+        let loss = model.program.val_loss(&params, &ctx)? as f32;
         Ok(vec![value(HostTensor::scalar_f32(loss))])
     }
 
     fn run_init(
         &self,
         entry: &ArtifactEntry,
-        spec: ModelSpec,
+        model: &NativeModel,
         args: &[Value],
     ) -> Result<Vec<Value>> {
         let get = input_lookup(entry, args);
         let mut rng = Rng::new(key_seed(get("key")?));
-        let params = spec.init(&mut rng);
+        let params = model.program.init(&mut rng);
         if params.len() != entry.outputs.len() {
             bail!("init produced {} tensors, manifest expects {}", params.len(), entry.outputs.len());
         }
@@ -303,11 +387,11 @@ impl Executor for NativeEngine {
             .ok_or_else(|| anyhow!("{:?} is not a native program", entry.name))?;
         let t0 = Instant::now();
         let out = match prog {
-            Program::Train { spec, opt, method, fmt, k } => {
-                self.run_train(entry, *spec, *opt, *method, fmt.as_ref(), *k, args)
+            Program::Train { model, method, fmt } => {
+                self.run_train(entry, model, *method, fmt.as_ref(), args)
             }
-            Program::Eval { spec } => self.run_eval(entry, *spec, args),
-            Program::Init { spec } => self.run_init(entry, *spec, args),
+            Program::Eval { model } => self.run_eval(entry, model, args),
+            Program::Init { model } => self.run_init(entry, model, args),
         }?;
         let mut t = self.timings.borrow_mut();
         let slot = t.entry(entry.name.clone()).or_insert((0, 0.0));
@@ -352,13 +436,16 @@ fn scalar_spec(name: &str, role: Role) -> TensorSpec {
 }
 
 fn train_entry(m: &NativeModel, method: Method, fmt: Option<&QuantFormat>) -> ArtifactEntry {
-    let spec = &m.spec;
+    let program = &*m.program;
     let k = m.steps_per_call.max(1);
-    let params = spec.param_specs();
+    let params = program.param_specs();
     let opt = m.opt.state_specs(&params);
     let mut inputs = params.clone();
     inputs.extend(opt.iter().cloned());
-    inputs.extend(spec.static_specs());
+    inputs.extend(program.static_specs());
+    if let Some(data) = program.train_data_spec(k) {
+        inputs.push(data);
+    }
     inputs.push(TensorSpec {
         name: "key".to_string(),
         shape: vec![2],
@@ -383,45 +470,51 @@ fn train_entry(m: &NativeModel, method: Method, fmt: Option<&QuantFormat>) -> Ar
         });
     }
     let fmt_name = fmt.map(|f| f.name.clone()).unwrap_or_else(|| "none".to_string());
-    let name = format!("train_{}_{}_{}_k{}", spec.name(), method.name(), fmt_name, k);
+    let name = format!("train_{}_{}_{}_k{}", program.name(), method.name(), fmt_name, k);
     ArtifactEntry {
         file: PathBuf::from(format!("native:{name}")),
         name,
         inputs,
         outputs,
         kind: "train".to_string(),
-        model_name: spec.name(),
+        model_name: program.name(),
         method: method.name().to_string(),
         format: fmt_name,
         steps_per_call: k,
         eval_batches: 0,
         optimizer: m.opt.name().to_string(),
-        quantized: spec.quantized(),
+        quantized: program.quantized(),
     }
 }
 
-fn eval_entry(spec: &ModelSpec) -> ArtifactEntry {
-    let mut inputs = spec.param_specs();
-    inputs.extend(spec.static_specs());
-    let name = format!("eval_{}", spec.name());
+fn eval_entry(m: &NativeModel) -> ArtifactEntry {
+    let program = &*m.program;
+    let mut inputs = program.param_specs();
+    inputs.extend(program.static_specs());
+    let eval_batches = program.eval_batches().max(1);
+    if let Some(data) = program.train_data_spec(eval_batches) {
+        inputs.push(data);
+    }
+    let name = format!("eval_{}", program.name());
     ArtifactEntry {
         file: PathBuf::from(format!("native:{name}")),
         name,
         inputs,
         outputs: vec![scalar_spec("val_loss", Role::Metric)],
         kind: "eval".to_string(),
-        model_name: spec.name(),
+        model_name: program.name(),
         method: String::new(),
         format: String::new(),
         steps_per_call: 0,
-        eval_batches: 1,
+        eval_batches,
         optimizer: String::new(),
-        quantized: spec.quantized(),
+        quantized: program.quantized(),
     }
 }
 
-fn init_entry(spec: &ModelSpec) -> ArtifactEntry {
-    let name = format!("init_{}", spec.name());
+fn init_entry(m: &NativeModel) -> ArtifactEntry {
+    let program = &*m.program;
+    let name = format!("init_{}", program.name());
     ArtifactEntry {
         file: PathBuf::from(format!("native:{name}")),
         name,
@@ -431,15 +524,15 @@ fn init_entry(spec: &ModelSpec) -> ArtifactEntry {
             dtype: DType::U32,
             role: Role::Key,
         }],
-        outputs: spec.param_specs(),
+        outputs: program.param_specs(),
         kind: "init".to_string(),
-        model_name: spec.name(),
+        model_name: program.name(),
         method: String::new(),
         format: String::new(),
         steps_per_call: 0,
         eval_batches: 0,
         optimizer: String::new(),
-        quantized: spec.quantized(),
+        quantized: program.quantized(),
     }
 }
 
@@ -476,16 +569,47 @@ mod tests {
         assert!(m.find_train("linreg_d256", "ptq", "int4").is_ok());
         let methods = m.methods_for("linreg_d256");
         assert!(methods.iter().any(|(me, f)| me == "lotion" && f == "fp4"));
-        assert!(m.find_train("lm-tiny", "lotion", "int4").is_err());
+    }
+
+    #[test]
+    fn lm_presets_are_registered() {
+        let eng = NativeEngine::new();
+        let m = eng.manifest();
+        for model in ["lm-tiny", "lm-150m-sim", "lm-300m-sim"] {
+            let t = m.find_train(model, "lotion", "int4").unwrap();
+            assert_eq!(t.optimizer, "adam", "{model}");
+            // the data-role token input sits between statics and key
+            let data = t.inputs.iter().find(|s| s.role == Role::Data).expect(model);
+            assert_eq!(data.shape[0], t.steps_per_call);
+            assert!(t.quantized.contains(&"lm_head".to_string()));
+            assert!(!t.quantized.contains(&"embed".to_string()));
+            assert!(m.find_eval(model).is_ok());
+            assert!(m.find_init(model).is_ok());
+        }
+        // AOT-matching chunk lengths and batch geometry
+        assert_eq!(m.find_train("lm-tiny", "rat", "int4").unwrap().steps_per_call, 4);
+        assert_eq!(m.find_eval("lm-150m-sim").unwrap().eval_batches, 8);
+        let ed = m.find_eval("lm-150m-sim").unwrap();
+        let dspec = ed.inputs.iter().find(|s| s.role == Role::Data).unwrap();
+        assert_eq!(dspec.shape, vec![8, 4, 129]);
+    }
+
+    #[test]
+    fn unknown_model_error_lists_presets() {
+        let err = NativeModel::lm("lm-9000", OptKind::Adam).unwrap_err().to_string();
+        assert!(err.contains("lm-tiny"), "{err}");
+        let eng = NativeEngine::new();
+        let err = eng.manifest().find_train("lm-9000", "lotion", "int4").unwrap_err();
+        assert!(format!("{err:#}").contains("known models"), "{err:#}");
     }
 
     #[test]
     fn init_train_eval_roundtrip() {
-        let eng = NativeEngine::with_models(&[NativeModel {
-            spec: ModelSpec::LinReg { d: 16, batch: 8 },
-            opt: OptKind::Sgd,
-            steps_per_call: 4,
-        }]);
+        let eng = NativeEngine::with_models(&[NativeModel::from_spec(
+            ModelSpec::LinReg { d: 16, batch: 8 },
+            OptKind::Sgd,
+            4,
+        )]);
         let m = eng.manifest();
         let init = m.find_init("linreg_d16").unwrap();
         let params = eng.call(init, &zero_args(init)).unwrap();
@@ -545,5 +669,51 @@ mod tests {
         let mut fake = train.clone();
         fake.name = "no_such_program".to_string();
         assert!(eng.call(&fake, &zero_args(train)).is_err());
+    }
+
+    /// LOTION on a data-fed Adam LM: one train call runs end-to-end
+    /// through the driver (cast → loss_grad → penalty via Adam Fisher
+    /// → Adam step) and advances the step counter.
+    #[test]
+    fn lm_train_call_runs_through_driver() {
+        let prog = LmProgram::new(
+            "lm-driver-test",
+            LmConfig { vocab: 32, d_model: 16, n_layers: 1, n_heads: 2, seq_len: 8 },
+            2,
+            1,
+        )
+        .unwrap();
+        let eng = NativeEngine::with_models(&[NativeModel {
+            program: Rc::new(prog),
+            opt: OptKind::Adam,
+            steps_per_call: 3,
+        }]);
+        let m = eng.manifest();
+        let init = m.find_init("lm-driver-test").unwrap();
+        let params = eng.call(init, &zero_args(init)).unwrap();
+        let train = m.find_train("lm-driver-test", "lotion", "int4").unwrap().clone();
+        let mut args = zero_args(&train);
+        // adopt the real init params and a non-degenerate token batch
+        for (spec, p) in train.input_specs(Role::Param).iter().zip(&params) {
+            args[train.input_index(&spec.name).unwrap()] = p.clone();
+        }
+        let dspec = train.inputs.iter().find(|s| s.role == Role::Data).unwrap().clone();
+        let mut rng = Rng::new(3);
+        let toks: Vec<i32> = (0..dspec.elements()).map(|_| rng.below(32) as i32).collect();
+        args[train.input_index("tokens").unwrap()] =
+            value(HostTensor::from_i32(&dspec.shape, toks));
+        args[train.input_index("lam_reg").unwrap()] = value(HostTensor::scalar_f32(10.0));
+        let out = eng.call(&train, &args).unwrap();
+        let bases = out[train.outputs.len() - 2].as_f32();
+        let totals = out[train.outputs.len() - 1].as_f32();
+        assert_eq!(bases.len(), 3);
+        assert!(bases.iter().all(|b| b.is_finite()));
+        // the sigma^2 penalty is >= 0, so total >= base at every step
+        for (b, t) in bases.iter().zip(&totals) {
+            assert!(t >= b, "total {t} < base {b}");
+        }
+        // step counter advanced through the K=3 interpreted steps
+        let t_idx = train.output_index("t").unwrap();
+        assert_eq!(out[t_idx].scalar_to_f32(), 3.0);
     }
 }

@@ -121,6 +121,30 @@ impl OptState {
         Ok(())
     }
 
+    /// Empirical-Fisher diagonal per selected parameter: Adam's
+    /// bias-corrected second moment, `v / (1 - b2^max(t,1))` — exactly
+    /// `python/compile/optim.py`'s `Optimizer.fisher` ("we use the
+    /// empirical Fisher approximation as we would with Adam", §4.3).
+    /// `out[i]` receives the diagonal for parameter `param_idx[i]`.
+    /// SGD tracks no curvature, so LOTION on an SGD model needs an
+    /// exact Gauss-Newton diagonal instead (the driver enforces this).
+    pub fn fisher_into(&self, param_idx: &[usize], out: &mut [Vec<f32>]) -> Result<()> {
+        if self.kind != OptKind::Adam {
+            bail!(
+                "method 'lotion' needs an exact Gauss-Newton diagonal or the adam \
+                 optimizer's second moment as the Fisher (optimizer is {:?})",
+                self.kind.name()
+            );
+        }
+        let bc2 = 1.0 - B2.powf(self.t.max(1.0));
+        for (o, &pi) in out.iter_mut().zip(param_idx) {
+            for (ov, &vv) in o.iter_mut().zip(&self.v[pi]) {
+                *ov = vv / bc2;
+            }
+        }
+        Ok(())
+    }
+
     /// Emit the state tensor for a named opt spec (inverse of `unpack`).
     pub fn pack(&self, name: &str, param_names: &[String]) -> Result<Vec<f32>> {
         if name == "t" {
@@ -196,6 +220,24 @@ mod tests {
         st.update(&mut p, &[vec![3.0, -0.01]], 0.1).unwrap();
         assert!((p[0][0] + 0.1).abs() < 1e-4, "{}", p[0][0]);
         assert!((p[0][1] - 0.1).abs() < 1e-4, "{}", p[0][1]);
+    }
+
+    #[test]
+    fn adam_fisher_is_bias_corrected_v() {
+        let st = OptState {
+            kind: OptKind::Adam,
+            t: 2.0,
+            m: vec![vec![0.0; 2]],
+            v: vec![vec![0.5, 1.0]],
+        };
+        let mut out = vec![vec![0.0f32; 2]];
+        st.fisher_into(&[0], &mut out).unwrap();
+        let bc2 = 1.0 - B2.powf(2.0);
+        assert!((out[0][0] - 0.5 / bc2).abs() < 1e-6);
+        assert!((out[0][1] - 1.0 / bc2).abs() < 1e-6);
+
+        let sgd = OptState { kind: OptKind::Sgd, t: 0.0, m: vec![], v: vec![] };
+        assert!(sgd.fisher_into(&[0], &mut out).is_err());
     }
 
     #[test]

@@ -1,0 +1,180 @@
+//! The native backend's program abstraction (DESIGN.md §3): a
+//! [`NativeProgram`] supplies *model math only* — parameter layout,
+//! init, base loss + gradients at given forward weights, optional
+//! exact Gauss-Newton diagonals, and validation loss — while the
+//! *method* transformation (the STE casts for QAT/RAT, the Eq. 3
+//! LOTION penalty) and the SGD/Adam loop live in the shared driver
+//! (`native::mod`). That split is the structural point of LOTION: the
+//! smoothing is a model-agnostic transformation of the loss under
+//! randomized-rounding noise, so the code keeps it out of the models.
+//!
+//! Implementations: the synthetic testbeds ([`super::testbeds`]) and
+//! the decoder-only transformer LM ([`super::transformer`]). Future
+//! workloads (serving, sharded CPU) plug in behind the same trait.
+
+use crate::runtime::manifest::TensorSpec;
+use crate::util::pool::Pool;
+use crate::util::rng::Rng;
+use anyhow::{anyhow, bail, Result};
+use std::any::Any;
+
+/// Training-method transformation of the base loss (methods.py).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Method {
+    Ptq,
+    Qat,
+    Rat,
+    Lotion,
+}
+
+impl Method {
+    pub fn parse(s: &str) -> Result<Method> {
+        Ok(match s {
+            "ptq" => Method::Ptq,
+            "qat" => Method::Qat,
+            "rat" => Method::Rat,
+            "lotion" => Method::Lotion,
+            other => bail!("unknown method {other:?}"),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Method::Ptq => "ptq",
+            Method::Qat => "qat",
+            Method::Rat => "rat",
+            Method::Lotion => "lotion",
+        }
+    }
+}
+
+/// Per-step RNG stream roots (counter-split, DESIGN.md §3): consumers
+/// derive their own `Rng::stream` keyed by row / chunk counters, so
+/// sampling parallelizes with no serial RNG dependency.
+#[derive(Clone, Copy, Debug)]
+pub struct StepStreams {
+    /// root for the step's data sampling (in-graph programs only)
+    pub data: u64,
+    /// root for the step's randomized-rounding noise
+    pub round: u64,
+}
+
+/// Borrowed per-step inputs handed to [`NativeProgram::loss_grad`].
+pub struct StepCtx<'a> {
+    /// static-role inputs by name (`lam`, `wstar` for the testbeds;
+    /// empty for the LM)
+    pub statics: &'a [(String, Vec<f32>)],
+    /// this step's data-role batch (`[B, T+1]` tokens, row-major) when
+    /// the program consumes data; `None` for in-graph sampling
+    pub data: Option<&'a [i32]>,
+    pub streams: StepStreams,
+    pub pool: &'a Pool,
+}
+
+/// Borrowed inputs for [`NativeProgram::val_loss`].
+pub struct EvalCtx<'a> {
+    pub statics: &'a [(String, Vec<f32>)],
+    /// the full eval chunk (`[KE, B, T+1]` tokens) when the program
+    /// consumes data
+    pub data: Option<&'a [i32]>,
+    pub pool: &'a Pool,
+}
+
+/// Look up a static-role input by name.
+pub fn static_slice<'a>(statics: &'a [(String, Vec<f32>)], name: &str) -> Result<&'a [f32]> {
+    statics
+        .iter()
+        .find(|(n, _)| n == name)
+        .map(|(_, v)| v.as_slice())
+        .ok_or_else(|| anyhow!("program needs static input {name:?}"))
+}
+
+/// A workload the native backend can interpret. A program defines its
+/// tensors and its math; the driver owns everything method- and
+/// optimizer-shaped. All randomness must come off the counter streams
+/// in the ctx (never ambient state) so training stays bit-identical at
+/// any `--threads` setting.
+pub trait NativeProgram {
+    /// Manifest model name (e.g. `linreg_d256`, `lm-150m-sim`).
+    fn name(&self) -> String;
+
+    /// Trainable parameters in canonical (sorted-name) order.
+    fn param_specs(&self) -> Vec<TensorSpec>;
+
+    /// Non-trained coordinator-owned inputs, sorted by name.
+    fn static_specs(&self) -> Vec<TensorSpec> {
+        Vec::new()
+    }
+
+    /// The data-role input consumed by one K-step train chunk, or
+    /// `None` when the program samples in-graph.
+    fn train_data_spec(&self, _k: usize) -> Option<TensorSpec> {
+        None
+    }
+
+    /// Batches per eval call (shapes the eval entry's data spec).
+    fn eval_batches(&self) -> usize {
+        1
+    }
+
+    /// Names of the quantized parameter subset.
+    fn quantized(&self) -> Vec<String>;
+
+    /// Fresh parameters in spec order.
+    fn init(&self, rng: &mut Rng) -> Vec<Vec<f32>>;
+
+    /// Reusable per-call buffers; the program downcasts its own type.
+    fn make_scratch(&self) -> Box<dyn Any>;
+
+    /// Base loss + gradients at the given *forward* weights `wq` (the
+    /// driver has already applied any QAT/RAT cast, so the gradients
+    /// computed here are straight-through by construction). Gradients
+    /// are written into `grads` (pre-sized per parameter, overwritten).
+    fn loss_grad(
+        &self,
+        wq: &[Vec<f32>],
+        ctx: &StepCtx<'_>,
+        scratch: &mut dyn Any,
+        grads: &mut [Vec<f32>],
+    ) -> Result<f64>;
+
+    /// Exact Gauss-Newton diagonal for the σ² penalty, evaluated at the
+    /// master weights (stop-grad). `out[i]` corresponds to the i-th
+    /// *quantized* parameter in spec order. Returns `Ok(false)` when the
+    /// model has no closed form — the driver then falls back to the
+    /// optimizer's empirical Fisher (Adam's second moment, §4.3).
+    fn fisher_exact_into(
+        &self,
+        _params: &[Vec<f32>],
+        _ctx: &StepCtx<'_>,
+        _out: &mut [Vec<f32>],
+    ) -> Result<bool> {
+        Ok(false)
+    }
+
+    /// Exact (or mean-over-batches) validation loss at the parameters.
+    fn val_loss(&self, params: &[Vec<f32>], ctx: &EvalCtx<'_>) -> Result<f64>;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn method_parse_roundtrip() {
+        for m in [Method::Ptq, Method::Qat, Method::Rat, Method::Lotion] {
+            assert_eq!(Method::parse(m.name()).unwrap(), m);
+        }
+        assert!(Method::parse("sgd").is_err());
+    }
+
+    #[test]
+    fn static_slice_finds_by_name() {
+        let statics = vec![
+            ("lam".to_string(), vec![1.0f32, 2.0]),
+            ("wstar".to_string(), vec![3.0f32]),
+        ];
+        assert_eq!(static_slice(&statics, "wstar").unwrap(), &[3.0]);
+        assert!(static_slice(&statics, "missing").is_err());
+    }
+}

@@ -1,9 +1,9 @@
-//! Native model math: the synthetic testbeds (§4.1 linreg, §4.2
-//! linear2) implemented directly over flat `f32` buffers — forward,
-//! backward, method transformations (PTQ/QAT/RAT/LOTION) and exact
-//! validation losses. Semantics mirror `python/compile/models/*` and
-//! `methods.py`; rounding and the Eq. 3 penalty reuse the `quant`
-//! substrate bit-for-bit (DESIGN.md §3).
+//! The synthetic testbeds (§4.1 linreg, §4.2 linear2) as
+//! [`NativeProgram`]s: forward, backward and exact validation losses
+//! over flat `f32` buffers, mirroring `python/compile/models/*`. Both
+//! models have *exact* Gauss-Newton diagonals, so LOTION's Eq. 3
+//! penalty is parameter-free here (the driver applies it; this module
+//! only supplies the curvature).
 //!
 //! Hot loops are row-parallel on a [`Pool`]: minibatch rows sample
 //! from per-row counter streams (`Rng::stream(data_seed, &[row])`),
@@ -13,48 +13,20 @@
 //! bit-identical at `--threads 1` and `--threads N`.
 
 use crate::data::synth::population_loss;
-use crate::quant::{cast_rr_seeded, cast_rtn_pool, lotion_penalty_and_grad_pool, QuantFormat};
 use crate::runtime::manifest::{Role, TensorSpec};
 use crate::tensor::DType;
 use crate::util::pool::{chunk_ranges, Pool, PAR_CHUNK, PAR_MIN};
 use crate::util::rng::Rng;
-use anyhow::{bail, Result};
+use anyhow::Result;
+use std::any::Any;
 use std::ops::Range;
+
+use super::program::{static_slice, EvalCtx, NativeProgram, StepCtx};
 
 /// Minibatch rows per parallel task — a fixed constant (never derived
 /// from the thread count) so the gradient reduction order, and with it
 /// the trained bitstream, is invariant to `--threads`.
 const ROW_CHUNK: usize = 4;
-
-/// Training-method transformation of the base loss (methods.py).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum Method {
-    Ptq,
-    Qat,
-    Rat,
-    Lotion,
-}
-
-impl Method {
-    pub fn parse(s: &str) -> Result<Method> {
-        Ok(match s {
-            "ptq" => Method::Ptq,
-            "qat" => Method::Qat,
-            "rat" => Method::Rat,
-            "lotion" => Method::Lotion,
-            other => bail!("unknown method {other:?}"),
-        })
-    }
-
-    pub fn name(self) -> &'static str {
-        match self {
-            Method::Ptq => "ptq",
-            Method::Qat => "qat",
-            Method::Rat => "rat",
-            Method::Lotion => "lotion",
-        }
-    }
-}
 
 /// A native testbed model: defines parameter layout, data distribution,
 /// loss/gradients, and the exact Gauss-Newton diagonal LOTION uses.
@@ -66,99 +38,33 @@ pub enum ModelSpec {
     Linear2 { d: usize, k: usize },
 }
 
-/// One train step's result: losses plus gradients per parameter.
-pub struct StepOut {
-    pub base: f64,
-    pub total: f64,
-    pub grads: Vec<Vec<f32>>,
-}
-
-/// Per-step RNG stream roots (counter-split, DESIGN.md §3): consumers
-/// derive their own `Rng::stream` keyed by row / chunk counters, so
-/// sampling parallelizes with no serial RNG dependency.
-#[derive(Clone, Copy, Debug)]
-pub struct StepStreams {
-    /// root for the step's minibatch sampling
-    pub data: u64,
-    /// root for the step's randomized-rounding noise
-    pub round: u64,
-}
-
-/// Reusable per-chunk buffers: built once per train call, reused
-/// across the K interpreted steps so the hot path allocates nothing
-/// per step (`sqrt_lam` hoist + forward-weight and Fisher scratch).
-pub struct StepScratch {
-    /// element-wise `sqrt(lam)` for linreg sampling (empty for linear2)
-    pub sqrt_lam: Vec<f32>,
-    /// forward-weight buffers, one per parameter (replaces the
-    /// per-step `w.to_vec()` in the old `method_weights`)
-    pub wq: Vec<Vec<f32>>,
-    /// linear2 Gauss-Newton diagonal buffers (empty for linreg, whose
-    /// Fisher *is* `lam` and is borrowed directly)
-    pub fisher: Vec<Vec<f32>>,
-}
-
-impl StepScratch {
-    pub fn new(spec: &ModelSpec, lam: &[f32]) -> StepScratch {
-        let sqrt_lam = match spec {
-            ModelSpec::LinReg { .. } => lam.iter().map(|l| l.sqrt()).collect(),
-            ModelSpec::Linear2 { .. } => Vec::new(),
-        };
-        let wq = spec
-            .param_specs()
-            .iter()
-            .map(|s| Vec::with_capacity(s.elements()))
-            .collect();
-        let fisher = match spec {
-            ModelSpec::LinReg { .. } => Vec::new(),
-            ModelSpec::Linear2 { d, k } => vec![vec![0.0f32; k * d], vec![0.0f32; *k]],
-        };
-        StepScratch { sqrt_lam, wq, fisher }
-    }
+/// Per-call buffers (`sqrt_lam` hoist — filled lazily from the first
+/// step's statics, so the hot loop never re-derives it).
+struct TestbedScratch {
+    sqrt_lam: Vec<f32>,
 }
 
 fn spec(name: &str, shape: &[usize], role: Role) -> TensorSpec {
     TensorSpec { name: name.to_string(), shape: shape.to_vec(), dtype: DType::F32, role }
 }
 
-/// Forward weights for a method, written into a reusable buffer: QAT
-/// sees the RTN cast, RAT the RR cast (both straight-through on the
-/// backward pass), PTQ/LOTION train on the FP32 master weights.
-fn method_weights_into(
-    w: &[f32],
-    method: Method,
-    fmt: Option<&QuantFormat>,
-    round_seed: u64,
-    pool: &Pool,
-    out: &mut Vec<f32>,
-) {
-    out.clear();
-    out.extend_from_slice(w);
-    if let Some(fmt) = fmt {
-        match method {
-            Method::Qat => cast_rtn_pool(out, fmt, pool),
-            Method::Rat => cast_rr_seeded(out, fmt, round_seed, pool),
-            Method::Ptq | Method::Lotion => {}
+impl ModelSpec {
+    pub fn dim(&self) -> usize {
+        match self {
+            ModelSpec::LinReg { d, .. } | ModelSpec::Linear2 { d, .. } => *d,
         }
     }
 }
 
-impl ModelSpec {
-    pub fn name(&self) -> String {
+impl NativeProgram for ModelSpec {
+    fn name(&self) -> String {
         match self {
             ModelSpec::LinReg { d, .. } => format!("linreg_d{d}"),
             ModelSpec::Linear2 { d, k } => format!("linear2_d{d}_k{k}"),
         }
     }
 
-    pub fn dim(&self) -> usize {
-        match self {
-            ModelSpec::LinReg { d, .. } | ModelSpec::Linear2 { d, .. } => *d,
-        }
-    }
-
-    /// Parameter specs in canonical (sorted-name) order.
-    pub fn param_specs(&self) -> Vec<TensorSpec> {
+    fn param_specs(&self) -> Vec<TensorSpec> {
         match self {
             ModelSpec::LinReg { d, .. } => vec![spec("w", &[*d], Role::Param)],
             ModelSpec::Linear2 { d, k } => vec![
@@ -168,14 +74,12 @@ impl ModelSpec {
         }
     }
 
-    /// Non-trained inputs owned by the coordinator, sorted by name.
-    pub fn static_specs(&self) -> Vec<TensorSpec> {
+    fn static_specs(&self) -> Vec<TensorSpec> {
         let d = self.dim();
         vec![spec("lam", &[d], Role::Static), spec("wstar", &[d], Role::Static)]
     }
 
-    /// Names of the quantized parameter subset.
-    pub fn quantized(&self) -> Vec<String> {
+    fn quantized(&self) -> Vec<String> {
         match self {
             ModelSpec::LinReg { .. } => vec!["w".to_string()],
             ModelSpec::Linear2 { .. } => vec!["w1".to_string(), "w2".to_string()],
@@ -183,7 +87,7 @@ impl ModelSpec {
     }
 
     /// Fresh parameters in spec order (models/linreg.py, linear2.py).
-    pub fn init(&self, rng: &mut Rng) -> Vec<Vec<f32>> {
+    fn init(&self, rng: &mut Rng) -> Vec<Vec<f32>> {
         match self {
             ModelSpec::LinReg { d, .. } => vec![vec![0.0; *d]],
             ModelSpec::Linear2 { d, k } => {
@@ -202,139 +106,100 @@ impl ModelSpec {
         }
     }
 
-    /// One training step: method-transformed loss + gradients at the
-    /// current parameters (STE backward through the QAT/RAT casts).
-    #[allow(clippy::too_many_arguments)]
-    pub fn step(
-        &self,
-        params: &[Vec<f32>],
-        lam: &[f32],
-        wstar: &[f32],
-        method: Method,
-        fmt: Option<&QuantFormat>,
-        lam_reg: f32,
-        streams: StepStreams,
-        scratch: &mut StepScratch,
-        pool: &Pool,
-    ) -> StepOut {
-        let (base, mut grads) = match self {
-            ModelSpec::LinReg { d, batch } => {
-                method_weights_into(
-                    &params[0],
-                    method,
-                    fmt,
-                    streams.round,
-                    pool,
-                    &mut scratch.wq[0],
-                );
-                linreg_loss_grad(
-                    *d,
-                    *batch,
-                    &scratch.wq[0],
-                    &scratch.sqrt_lam,
-                    wstar,
-                    streams.data,
-                    pool,
-                )
-            }
-            ModelSpec::Linear2 { d, k } => {
-                method_weights_into(
-                    &params[0],
-                    method,
-                    fmt,
-                    Rng::stream_seed(streams.round, &[0]),
-                    pool,
-                    &mut scratch.wq[0],
-                );
-                method_weights_into(
-                    &params[1],
-                    method,
-                    fmt,
-                    Rng::stream_seed(streams.round, &[1]),
-                    pool,
-                    &mut scratch.wq[1],
-                );
-                linear2_loss_grad(*d, *k, &scratch.wq[0], &scratch.wq[1], lam, wstar, pool)
-            }
-        };
-        let mut total = base;
-        if method == Method::Lotion {
-            if let Some(fmt) = fmt {
-                // Gauss-Newton diagonal per parameter: `lam` itself for
-                // linreg (borrowed, no copy), the exact closed form into
-                // scratch for linear2.
-                if let ModelSpec::Linear2 { .. } = self {
-                    self.fisher_exact_into(params, lam, &mut scratch.fisher, pool);
-                }
-                for (i, grad) in grads.iter_mut().enumerate() {
-                    let fisher: &[f32] = match self {
-                        ModelSpec::LinReg { .. } => lam,
-                        ModelSpec::Linear2 { .. } => scratch.fisher[i].as_slice(),
-                    };
-                    let (pen, pg) = lotion_penalty_and_grad_pool(&params[i], fisher, fmt, pool);
-                    total += lam_reg as f64 * pen;
-                    for (g, p) in grad.iter_mut().zip(&pg) {
-                        *g += lam_reg * p;
-                    }
-                }
-            }
-        }
-        StepOut { base, total, grads }
+    fn make_scratch(&self) -> Box<dyn Any> {
+        Box::new(TestbedScratch { sqrt_lam: Vec::new() })
     }
 
-    /// Exact Gauss-Newton diagonal for linear2 (the synthetic models'
-    /// `fisher_exact`; stop-grad, evaluated at the master weights),
-    /// written row-parallel into the scratch buffers.
+    fn loss_grad(
+        &self,
+        wq: &[Vec<f32>],
+        ctx: &StepCtx<'_>,
+        scratch: &mut dyn Any,
+        grads: &mut [Vec<f32>],
+    ) -> Result<f64> {
+        let lam = static_slice(ctx.statics, "lam")?;
+        let wstar = static_slice(ctx.statics, "wstar")?;
+        match self {
+            ModelSpec::LinReg { d, batch } => {
+                let s = scratch.downcast_mut::<TestbedScratch>().expect("testbed scratch");
+                if s.sqrt_lam.len() != lam.len() {
+                    s.sqrt_lam = lam.iter().map(|l| l.sqrt()).collect();
+                }
+                Ok(linreg_loss_grad(
+                    *d,
+                    *batch,
+                    &wq[0],
+                    &s.sqrt_lam,
+                    wstar,
+                    ctx.streams.data,
+                    ctx.pool,
+                    &mut grads[0],
+                ))
+            }
+            ModelSpec::Linear2 { d, k } => {
+                let (g1, g2) = grads.split_at_mut(1);
+                Ok(linear2_loss_grad(
+                    *d,
+                    *k,
+                    &wq[0],
+                    &wq[1],
+                    lam,
+                    wstar,
+                    ctx.pool,
+                    &mut g1[0],
+                    &mut g2[0],
+                ))
+            }
+        }
+    }
+
+    /// Exact Gauss-Newton diagonal: `lam` itself for linreg, the
+    /// closed form for linear2 (the synthetic models' `fisher_exact`;
+    /// stop-grad, evaluated at the master weights).
     fn fisher_exact_into(
         &self,
         params: &[Vec<f32>],
-        lam: &[f32],
-        fisher: &mut [Vec<f32>],
-        pool: &Pool,
-    ) {
-        let ModelSpec::Linear2 { d, k } = self else {
-            return;
-        };
-        let (d, k) = (*d, *k);
-        let (w1, w2) = (&params[0], &params[1]);
-        let kf = k as f32;
-        let (f1, rest) = fisher.split_at_mut(1);
-        let f1 = &mut f1[0][..];
-        let f2 = &mut rest[0][..];
-        let row_ranges: Vec<Range<usize>> = (0..k).map(|j| j * d..(j + 1) * d).collect();
-        let accs = pool.for_chunks_mut(f1, &row_ranges, k * d, |j, _, frow| {
-            let wj = w2[j] / kf;
-            let row = &w1[j * d..(j + 1) * d];
-            let mut acc = 0.0f32;
-            for i in 0..d {
-                frow[i] = wj * wj * lam[i];
-                acc += lam[i] * row[i] * row[i];
+        ctx: &StepCtx<'_>,
+        out: &mut [Vec<f32>],
+    ) -> Result<bool> {
+        let lam = static_slice(ctx.statics, "lam")?;
+        match self {
+            ModelSpec::LinReg { .. } => out[0].copy_from_slice(lam),
+            ModelSpec::Linear2 { d, k } => {
+                let (d, k) = (*d, *k);
+                let (w1, w2) = (&params[0], &params[1]);
+                let kf = k as f32;
+                let (f1, rest) = out.split_at_mut(1);
+                let f1 = &mut f1[0][..];
+                let f2 = &mut rest[0][..];
+                let row_ranges: Vec<Range<usize>> = (0..k).map(|j| j * d..(j + 1) * d).collect();
+                let accs = ctx.pool.for_chunks_mut(f1, &row_ranges, k * d, |j, _, frow| {
+                    let wj = w2[j] / kf;
+                    let row = &w1[j * d..(j + 1) * d];
+                    let mut acc = 0.0f32;
+                    for i in 0..d {
+                        frow[i] = wj * wj * lam[i];
+                        acc += lam[i] * row[i] * row[i];
+                    }
+                    acc / (kf * kf)
+                });
+                f2.copy_from_slice(&accs);
             }
-            acc / (kf * kf)
-        });
-        f2.copy_from_slice(&accs);
+        }
+        Ok(true)
     }
 
     /// Exact validation loss at the given parameters.
-    pub fn val_loss(&self, params: &[Vec<f32>], lam: &[f32], wstar: &[f32]) -> f64 {
-        self.val_loss_pool(params, lam, wstar, &Pool::global())
-    }
-
-    /// [`ModelSpec::val_loss`] on an explicit pool.
-    pub fn val_loss_pool(
-        &self,
-        params: &[Vec<f32>],
-        lam: &[f32],
-        wstar: &[f32],
-        pool: &Pool,
-    ) -> f64 {
-        match self {
+    fn val_loss(&self, params: &[Vec<f32>], ctx: &EvalCtx<'_>) -> Result<f64> {
+        let lam = static_slice(ctx.statics, "lam")?;
+        let wstar = static_slice(ctx.statics, "wstar")?;
+        Ok(match self {
             ModelSpec::LinReg { .. } => population_loss(&params[0], wstar, lam),
             ModelSpec::Linear2 { d, k } => {
-                let v = effective_w_pool(*d, *k, &params[0], &params[1], pool);
+                let v = effective_w_pool(*d, *k, &params[0], &params[1], ctx.pool);
                 population_loss(&v, wstar, lam)
             }
-        }
+        })
     }
 }
 
@@ -342,7 +207,13 @@ impl ModelSpec {
 /// model, split column-parallel: each worker owns a contiguous `v`
 /// range and folds the k rows itself, so any chunking yields the same
 /// bits.
-fn effective_w_pool(d: usize, k: usize, w1: &[f32], w2: &[f32], pool: &Pool) -> Vec<f32> {
+pub(crate) fn effective_w_pool(
+    d: usize,
+    k: usize,
+    w1: &[f32],
+    w2: &[f32],
+    pool: &Pool,
+) -> Vec<f32> {
     let mut v = vec![0.0f32; d];
     let kf = k as f32;
     pool.for_chunks_mut(&mut v, &chunk_ranges(d, PAR_CHUNK), k * d, |_, r, out| {
@@ -366,6 +237,7 @@ fn effective_w_pool(d: usize, k: usize, w1: &[f32], w2: &[f32], pool: &Pool) -> 
 /// `Rng::stream(data_seed, &[b])`; rows are processed in fixed
 /// [`ROW_CHUNK`] groups whose partial gradients fold in chunk order —
 /// parallel across the pool, bit-identical at any thread count.
+#[allow(clippy::too_many_arguments)]
 fn linreg_loss_grad(
     d: usize,
     batch: usize,
@@ -374,10 +246,11 @@ fn linreg_loss_grad(
     wstar: &[f32],
     data_seed: u64,
     pool: &Pool,
-) -> (f64, Vec<Vec<f32>>) {
+    grad: &mut [f32],
+) -> f64 {
     let ranges = chunk_ranges(batch, ROW_CHUNK);
     let part = |r: Range<usize>| -> (f64, Vec<f32>) {
-        let mut grad = vec![0.0f32; d];
+        let mut g = vec![0.0f32; d];
         let mut xrow = vec![0.0f32; d];
         let mut loss_acc = 0.0f64;
         for row in r {
@@ -394,17 +267,17 @@ fn linreg_loss_grad(
             let res = pred - y;
             loss_acc += (res as f64) * (res as f64);
             for i in 0..d {
-                grad[i] += res * xrow[i];
+                g[i] += res * xrow[i];
             }
         }
-        (loss_acc, grad)
+        (loss_acc, g)
     };
     let parts: Vec<(f64, Vec<f32>)> = if batch * d < PAR_MIN || pool.threads() == 1 {
         ranges.into_iter().map(part).collect()
     } else {
         pool.run(ranges, |_, r| part(r))
     };
-    let mut grad = vec![0.0f32; d];
+    grad.fill(0.0);
     let mut loss_acc = 0.0f64;
     for (pl, pg) in &parts {
         loss_acc += pl;
@@ -416,7 +289,7 @@ fn linreg_loss_grad(
     for g in grad.iter_mut() {
         *g /= bf;
     }
-    (0.5 * loss_acc / batch as f64, vec![grad])
+    0.5 * loss_acc / batch as f64
 }
 
 /// Exact full-batch loss + gradients for linear2 at forward weights
@@ -424,6 +297,7 @@ fn linreg_loss_grad(
 /// `v = (1/k) W2 W1`; gradients by the chain rule through `v`. The
 /// `v`/`g` passes are column-parallel (per-element independent), the
 /// weight-gradient pass row-parallel; the loss folds per fixed chunk.
+#[allow(clippy::too_many_arguments)]
 fn linear2_loss_grad(
     d: usize,
     k: usize,
@@ -432,7 +306,9 @@ fn linear2_loss_grad(
     lam: &[f32],
     wstar: &[f32],
     pool: &Pool,
-) -> (f64, Vec<Vec<f32>>) {
+    gw1: &mut [f32],
+    gw2: &mut [f32],
+) -> f64 {
     let v = effective_w_pool(d, k, w1q, w2q, pool);
     let kf = k as f32;
 
@@ -453,9 +329,8 @@ fn linear2_loss_grad(
     let loss: f64 = loss_parts.iter().sum();
 
     // weight gradients, row-parallel over the k output rows
-    let mut gw1 = vec![0.0f32; k * d];
     let row_ranges: Vec<Range<usize>> = (0..k).map(|j| j * d..(j + 1) * d).collect();
-    let gw2 = pool.for_chunks_mut(&mut gw1, &row_ranges, k * d, |j, _, grow| {
+    let g2 = pool.for_chunks_mut(gw1, &row_ranges, k * d, |j, _, grow| {
         let wj = w2q[j] / kf;
         let row = &w1q[j * d..(j + 1) * d];
         let mut acc = 0.0f32;
@@ -465,16 +340,15 @@ fn linear2_loss_grad(
         }
         acc / kf
     });
-    (loss, vec![gw1, gw2])
+    gw2.copy_from_slice(&g2);
+    loss
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-
-    fn serial_streams(data: u64, round: u64) -> StepStreams {
-        StepStreams { data, round }
-    }
+    use crate::quant::QuantFormat;
+    use crate::runtime::native::program::StepStreams;
 
     fn lg(
         d: usize,
@@ -483,9 +357,12 @@ mod tests {
         lam: &[f32],
         wstar: &[f32],
         seed: u64,
-    ) -> (f64, Vec<Vec<f32>>) {
+    ) -> (f64, Vec<f32>) {
         let sqrt_lam: Vec<f32> = lam.iter().map(|l| l.sqrt()).collect();
-        linreg_loss_grad(d, batch, wq, &sqrt_lam, wstar, seed, &Pool::serial())
+        let mut grad = vec![0.0f32; d];
+        let loss =
+            linreg_loss_grad(d, batch, wq, &sqrt_lam, wstar, seed, &Pool::serial(), &mut grad);
+        (loss, grad)
     }
 
     fn l2(
@@ -496,7 +373,10 @@ mod tests {
         lam: &[f32],
         wstar: &[f32],
     ) -> (f64, Vec<Vec<f32>>) {
-        linear2_loss_grad(d, k, w1, w2, lam, wstar, &Pool::serial())
+        let mut gw1 = vec![0.0f32; k * d];
+        let mut gw2 = vec![0.0f32; k];
+        let loss = linear2_loss_grad(d, k, w1, w2, lam, wstar, &Pool::serial(), &mut gw1, &mut gw2);
+        (loss, vec![gw1, gw2])
     }
 
     /// Finite-difference check of linear2 gradients (exact loss, so FD
@@ -548,14 +428,14 @@ mod tests {
         rng.fill_normal(&mut wstar);
         let mut w = vec![0.0f32; d];
         rng.fill_normal(&mut w);
-        let (_, grads) = lg(d, 20000, &w, &lam, &wstar, 11);
+        let (_, grad) = lg(d, 20000, &w, &lam, &wstar, 11);
         for i in 0..d {
             let pop = lam[i] * (w[i] - wstar[i]);
             // B = 20000 puts the estimator's std well under this band
             assert!(
-                (grads[0][i] - pop).abs() < 0.15 * pop.abs() + 0.08,
+                (grad[i] - pop).abs() < 0.15 * pop.abs() + 0.08,
                 "i={i} grad={} pop={pop}",
-                grads[0][i]
+                grad[i]
             );
         }
     }
@@ -574,7 +454,18 @@ mod tests {
         let lam = vec![0.5f32; d];
         let sqrt_lam: Vec<f32> = lam.iter().map(|l| l.sqrt()).collect();
         let run = |threads: usize| {
-            linreg_loss_grad(d, batch, &w, &sqrt_lam, &wstar, 42, &Pool::new(threads))
+            let mut grad = vec![0.0f32; d];
+            let loss = linreg_loss_grad(
+                d,
+                batch,
+                &w,
+                &sqrt_lam,
+                &wstar,
+                42,
+                &Pool::new(threads),
+                &mut grad,
+            );
+            (loss, grad)
         };
         let (l1, g1) = run(1);
         let (l3, g3) = run(3);
@@ -597,12 +488,26 @@ mod tests {
         rng.fill_normal(&mut wstar);
         let lam: Vec<f32> = (0..d).map(|i| 1.0 / (1 + i % 9) as f32).collect();
         let run = |threads: usize| {
-            linear2_loss_grad(d, k, &w1, &w2, &lam, &wstar, &Pool::new(threads))
+            let mut gw1 = vec![0.0f32; k * d];
+            let mut gw2 = vec![0.0f32; k];
+            let loss = linear2_loss_grad(
+                d,
+                k,
+                &w1,
+                &w2,
+                &lam,
+                &wstar,
+                &Pool::new(threads),
+                &mut gw1,
+                &mut gw2,
+            );
+            (loss, gw1, gw2)
         };
-        let (l1, g1) = run(1);
-        let (l4, g4) = run(4);
+        let (l1, a1, b1) = run(1);
+        let (l4, a4, b4) = run(4);
         assert_eq!(l1.to_bits(), l4.to_bits());
-        assert_eq!(g1, g4);
+        assert_eq!(a1, a4);
+        assert_eq!(b1, b4);
     }
 
     #[test]
@@ -615,66 +520,40 @@ mod tests {
         assert_eq!(effective_w_pool(d, k, &w1, &w2, &Pool::serial()), wstar);
     }
 
+    /// The linreg Fisher is `lam` itself; the linear2 one matches the
+    /// closed form used by the python `fisher_exact`.
     #[test]
-    fn lotion_step_adds_penalty_to_total_only() {
-        let m = ModelSpec::Linear2 { d: 4, k: 2 };
-        let mut rng = Rng::new(5);
-        let params = m.init(&mut rng);
-        let lam = vec![1.0f32, 0.5, 0.25, 0.125];
-        let wstar = vec![1.0f32, -1.0, 0.5, -0.5];
-        let fmt = QuantFormat::int4();
+    fn fisher_exact_matches_closed_forms() {
         let pool = Pool::serial();
-        let mut scratch = StepScratch::new(&m, &lam);
-        let out_ptq = m.step(
-            &params,
-            &lam,
-            &wstar,
-            Method::Ptq,
-            None,
-            0.0,
-            serial_streams(1, 2),
-            &mut scratch,
-            &pool,
-        );
-        let out_lotion = m.step(
-            &params,
-            &lam,
-            &wstar,
-            Method::Lotion,
-            Some(&fmt),
-            1.0,
-            serial_streams(1, 2),
-            &mut scratch,
-            &pool,
-        );
-        assert!((out_ptq.base - out_lotion.base).abs() < 1e-9);
-        assert!(out_lotion.total >= out_lotion.base); // penalty is >= 0
-        assert_eq!(out_lotion.grads.len(), 2);
-    }
+        let statics = vec![
+            ("lam".to_string(), vec![1.0f32, 0.5, 0.25]),
+            ("wstar".to_string(), vec![0.0f32; 3]),
+        ];
+        let ctx = StepCtx {
+            statics: &statics,
+            data: None,
+            streams: StepStreams { data: 1, round: 2 },
+            pool: &pool,
+        };
+        let m = ModelSpec::LinReg { d: 3, batch: 2 };
+        let mut out = vec![vec![0.0f32; 3]];
+        assert!(m.fisher_exact_into(&[vec![0.0; 3]], &ctx, &mut out).unwrap());
+        assert_eq!(out[0], vec![1.0, 0.5, 0.25]);
 
-    /// The linreg LOTION penalty borrows `lam` as the Fisher with no
-    /// copy; cross-check against the explicit closed form.
-    #[test]
-    fn linreg_lotion_penalty_uses_lam_as_fisher() {
-        let m = ModelSpec::LinReg { d: 6, batch: 4 };
-        let w = vec![vec![0.31f32, -0.77, 0.05, 0.4, -0.2, 0.9]];
-        let lam = vec![1.0f32, 0.5, 0.25, 0.125, 1.5, 0.75];
-        let wstar = vec![0.0f32; 6];
-        let fmt = QuantFormat::int4();
-        let mut scratch = StepScratch::new(&m, &lam);
-        let out = m.step(
-            &w,
-            &lam,
-            &wstar,
-            Method::Lotion,
-            Some(&fmt),
-            2.0,
-            serial_streams(3, 4),
-            &mut scratch,
-            &Pool::serial(),
-        );
-        let (pen, _) = crate::quant::lotion_penalty_and_grad(&w[0], &lam, &fmt);
-        assert!((out.total - out.base - 2.0 * pen).abs() < 1e-9);
+        let m2 = ModelSpec::Linear2 { d: 3, k: 2 };
+        let w1 = vec![1.0f32, 2.0, 3.0, -1.0, 0.5, 0.0];
+        let w2 = vec![2.0f32, -4.0];
+        let mut out = vec![vec![0.0f32; 6], vec![0.0f32; 2]];
+        assert!(m2.fisher_exact_into(&[w1.clone(), w2.clone()], &ctx, &mut out).unwrap());
+        let lam = [1.0f32, 0.5, 0.25];
+        for j in 0..2 {
+            let wj = w2[j] / 2.0;
+            for i in 0..3 {
+                assert_eq!(out[0][j * 3 + i], wj * wj * lam[i]);
+            }
+            let acc: f32 = (0..3).map(|i| lam[i] * w1[j * 3 + i] * w1[j * 3 + i]).sum();
+            assert!((out[1][j] - acc / 4.0).abs() < 1e-6);
+        }
     }
 
     #[test]
@@ -684,6 +563,23 @@ mod tests {
         let lam = vec![1.0f32, 0.5, 0.25];
         let w1: Vec<f32> = (0..2).flat_map(|_| wstar.iter().copied()).collect();
         let w2 = vec![1.0f32; 2];
-        assert_eq!(m.val_loss(&[w1, w2], &lam, &wstar), 0.0);
+        let statics = vec![("lam".to_string(), lam), ("wstar".to_string(), wstar)];
+        let pool = Pool::serial();
+        let ctx = EvalCtx { statics: &statics, data: None, pool: &pool };
+        assert_eq!(m.val_loss(&[w1, w2], &ctx).unwrap(), 0.0);
+    }
+
+    /// LOTION-relevant sanity: quantized subsets and spec shapes agree
+    /// with the manifest contract.
+    #[test]
+    fn specs_and_quantized_sets() {
+        let m = ModelSpec::Linear2 { d: 4, k: 2 };
+        let names: Vec<String> = m.param_specs().iter().map(|s| s.name.clone()).collect();
+        assert_eq!(names, vec!["w1", "w2"]);
+        assert_eq!(m.quantized(), vec!["w1", "w2"]);
+        assert_eq!(m.param_specs()[0].shape, vec![2, 4]);
+        let _ = QuantFormat::int4(); // the driver owns casting now
+        assert!(m.train_data_spec(4).is_none());
+        assert_eq!(m.eval_batches(), 1);
     }
 }

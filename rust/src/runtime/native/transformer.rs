@@ -1,0 +1,1338 @@
+//! Decoder-only transformer LM interpreter — the [`NativeProgram`]
+//! behind the `lm-*` presets, unlocking Figs. 1/4/5/9–12 + Tables 1/2
+//! offline (DESIGN.md §3/§6). Semantics mirror
+//! `python/compile/models/transformer.py`: pre-norm decoder with
+//! RMSNorm, rotary position embeddings, causal attention, SwiGLU MLP
+//! and an untied (quantized) `lm_head`; next-token mean cross-entropy.
+//! Forward + manual backward run over flat `f32` buffers.
+//!
+//! Parity with the python oracle is tolerance-based (`f32` summation
+//! orders differ), checked by `tests/golden_lm.rs` against goldens
+//! from `scripts/gen_golden_lm.py`.
+//!
+//! Every kernel is row/head-parallel on a [`Pool`] with the
+//! determinism contract of DESIGN.md §3: work is partitioned by fixed
+//! constants, each output element is produced by exactly one worker
+//! with a fixed inner summation order, and loss partials fold in
+//! chunk-index order — so training is bit-identical at any
+//! `--threads` setting. The interpreter itself is RNG-free (data
+//! arrives as a `data`-role token batch; rounding noise is the
+//! driver's job).
+
+use crate::runtime::manifest::{Role, TensorSpec};
+use crate::tensor::DType;
+use crate::util::pool::{chunk_ranges, Pool, PAR_CHUNK, PAR_MIN};
+use crate::util::rng::Rng;
+use anyhow::{bail, Result};
+use std::any::Any;
+use std::ops::Range;
+
+use super::program::{EvalCtx, NativeProgram, StepCtx};
+
+/// Rows per parallel task in the row-parallel kernels — a fixed
+/// constant (never derived from the thread count), per the DESIGN.md
+/// §3 determinism contract.
+const ROWS_PER_TASK: usize = 8;
+
+/// Architecture of one decoder-only LM (transformer.py `LMConfig`).
+#[derive(Clone, Copy, Debug)]
+pub struct LmConfig {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub seq_len: usize,
+}
+
+/// The size presets mirrored from the python side (DESIGN.md §6), with
+/// the AOT batch geometry: (config, train batch, eval batches, K).
+const PRESETS: [(&str, LmConfig, usize, usize, usize); 4] = [
+    (
+        "lm-tiny",
+        LmConfig { vocab: 256, d_model: 64, n_layers: 2, n_heads: 2, seq_len: 64 },
+        8,
+        4,
+        4,
+    ),
+    (
+        "lm-150m-sim",
+        LmConfig { vocab: 256, d_model: 192, n_layers: 4, n_heads: 4, seq_len: 128 },
+        4,
+        8,
+        8,
+    ),
+    (
+        "lm-300m-sim",
+        LmConfig { vocab: 256, d_model: 256, n_layers: 6, n_heads: 8, seq_len: 128 },
+        4,
+        8,
+        8,
+    ),
+    (
+        "lm-100m",
+        LmConfig { vocab: 256, d_model: 768, n_layers: 14, n_heads: 12, seq_len: 256 },
+        4,
+        2,
+        4,
+    ),
+];
+
+impl LmConfig {
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    /// SwiGLU hidden width: `ceil((8/3) * d_model / 64) * 64`, computed
+    /// exactly as the python `LMConfig.ffn_dim` float expression.
+    pub fn ffn_dim(&self) -> usize {
+        let raw = (8.0f64 / 3.0) * self.d_model as f64;
+        ((raw / 64.0).ceil() as usize) * 64
+    }
+
+    pub fn param_count(&self) -> usize {
+        let (d, f, v) = (self.d_model, self.ffn_dim(), self.vocab);
+        let per_layer = 4 * d * d + 3 * d * f + 2 * d;
+        v * d + self.n_layers * per_layer + d + d * v
+    }
+}
+
+/// The names of the built-in presets, for error messages.
+pub fn preset_names() -> Vec<&'static str> {
+    PRESETS.iter().map(|(n, ..)| *n).collect()
+}
+
+/// A registered LM workload: preset (or custom) config + batch
+/// geometry. The program's K-step chunking is owned by the engine
+/// registry ([`super::NativeModel::steps_per_call`]).
+#[derive(Clone, Debug)]
+pub struct LmProgram {
+    pub cfg: LmConfig,
+    name: String,
+    pub batch: usize,
+    eval_batches: usize,
+}
+
+// Canonical (sorted-name) parameter order: embed, layer{l:02}.* (9 per
+// layer, alphabetical), lm_head, norm_final. Index helpers below.
+const PER_LAYER: usize = 9;
+const L_ATTN_WK: usize = 0;
+const L_ATTN_WO: usize = 1;
+const L_ATTN_WQ: usize = 2;
+const L_ATTN_WV: usize = 3;
+const L_MLP_WDOWN: usize = 4;
+const L_MLP_WGATE: usize = 5;
+const L_MLP_WUP: usize = 6;
+const L_NORM_ATTN: usize = 7;
+const L_NORM_MLP: usize = 8;
+const P_EMBED: usize = 0;
+
+fn p_layer(l: usize, off: usize) -> usize {
+    1 + l * PER_LAYER + off
+}
+
+impl LmProgram {
+    /// Build a custom LM program; validates the head geometry.
+    pub fn new(name: &str, cfg: LmConfig, batch: usize, eval_batches: usize) -> Result<LmProgram> {
+        if cfg.n_heads == 0 || cfg.d_model % cfg.n_heads != 0 {
+            bail!("{name}: d_model {} not divisible by n_heads {}", cfg.d_model, cfg.n_heads);
+        }
+        if cfg.head_dim() % 2 != 0 {
+            bail!("{name}: head_dim {} must be even for RoPE", cfg.head_dim());
+        }
+        if cfg.vocab == 0 || cfg.d_model == 0 || cfg.seq_len == 0 || batch == 0 {
+            bail!("{name}: vocab/d_model/seq_len/batch must be positive");
+        }
+        Ok(LmProgram {
+            cfg,
+            name: name.to_string(),
+            batch,
+            eval_batches: eval_batches.max(1),
+        })
+    }
+
+    /// Look up a built-in preset by name; the error lists the known
+    /// presets so a config typo is self-explaining.
+    pub fn preset(name: &str) -> Result<LmProgram> {
+        for (n, cfg, batch, eval_batches, _) in PRESETS {
+            if n == name {
+                return LmProgram::new(n, cfg, batch, eval_batches);
+            }
+        }
+        bail!("unknown LM preset {name:?} (known presets: {})", preset_names().join(", "))
+    }
+
+    /// The AOT-matching steps-per-call for a preset; fails (listing
+    /// the known presets) on a typo, like [`LmProgram::preset`].
+    pub fn preset_k(name: &str) -> Result<usize> {
+        PRESETS
+            .iter()
+            .find(|(n, ..)| *n == name)
+            .map(|(.., k)| *k)
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "unknown LM preset {name:?} (known presets: {})",
+                    preset_names().join(", ")
+                )
+            })
+    }
+
+    fn p_lm_head(&self) -> usize {
+        1 + self.cfg.n_layers * PER_LAYER
+    }
+
+    fn p_norm_final(&self) -> usize {
+        2 + self.cfg.n_layers * PER_LAYER
+    }
+
+    /// Forward pass at the given forward weights; fills the scratch's
+    /// activations and `logits`. `tokens` is one `[B, T+1]` batch.
+    fn forward(
+        &self,
+        ws: &[Vec<f32>],
+        tokens: &[i32],
+        s: &mut LmScratch,
+        pool: &Pool,
+    ) -> Result<()> {
+        let cfg = &self.cfg;
+        let (b, t) = (self.batch, cfg.seq_len);
+        let (d, f, v) = (cfg.d_model, cfg.ffn_dim(), cfg.vocab);
+        let (nh, hd) = (cfg.n_heads, cfg.head_dim());
+        let m = b * t;
+        if tokens.len() != b * (t + 1) {
+            bail!("{}: got {} tokens, expected {}x{}", self.name, tokens.len(), b, t + 1);
+        }
+        for bi in 0..b {
+            for ti in 0..t {
+                let tok = tokens[bi * (t + 1) + ti];
+                let tgt = tokens[bi * (t + 1) + ti + 1];
+                if tok < 0 || tok as usize >= v || tgt < 0 || tgt as usize >= v {
+                    bail!("{}: token out of range for vocab {v}", self.name);
+                }
+                s.tok[bi * t + ti] = tok as usize;
+                s.tgt[bi * t + ti] = tgt as usize;
+            }
+        }
+
+        // token embedding gather (serial memcpy per row)
+        let embed = &ws[P_EMBED];
+        for (row, &tk) in s.tok.iter().enumerate() {
+            s.hs[0][row * d..(row + 1) * d].copy_from_slice(&embed[tk * d..(tk + 1) * d]);
+        }
+
+        let (cos, sin) = (&s.cos, &s.sin);
+        for l in 0..cfg.n_layers {
+            let (head, tail) = s.hs.split_at_mut(l + 1);
+            let hin: &[f32] = &head[l];
+            let hout: &mut [f32] = &mut tail[0];
+            let lay = &mut s.layers[l];
+            let base = p_layer(l, 0);
+
+            rms_r(hin, &mut lay.r1, d, pool);
+            rmsnorm_apply(hin, &ws[base + L_NORM_ATTN], &lay.r1, &mut lay.xn1, d, pool);
+            matmul(&lay.xn1, &ws[base + L_ATTN_WQ], &mut lay.q, m, d, d, pool);
+            matmul(&lay.xn1, &ws[base + L_ATTN_WK], &mut lay.k, m, d, d, pool);
+            matmul(&lay.xn1, &ws[base + L_ATTN_WV], &mut lay.v, m, d, d, pool);
+            rope_apply(&mut lay.q, cos, sin, b, t, nh, hd, 1.0, pool);
+            rope_apply(&mut lay.k, cos, sin, b, t, nh, hd, 1.0, pool);
+            attn_probs(&lay.q, &lay.k, &mut lay.p, b, nh, t, hd, pool);
+            attn_mix(&lay.p, &lay.v, &mut lay.o, b, nh, t, hd, pool);
+            matmul(&lay.o, &ws[base + L_ATTN_WO], &mut s.tmp, m, d, d, pool);
+            add_rows(hin, &s.tmp, &mut lay.h_attn, pool);
+
+            rms_r(&lay.h_attn, &mut lay.r2, d, pool);
+            rmsnorm_apply(&lay.h_attn, &ws[base + L_NORM_MLP], &lay.r2, &mut lay.xn2, d, pool);
+            matmul(&lay.xn2, &ws[base + L_MLP_WGATE], &mut lay.gpre, m, d, f, pool);
+            matmul(&lay.xn2, &ws[base + L_MLP_WUP], &mut lay.u, m, d, f, pool);
+            swiglu_fwd(&lay.gpre, &lay.u, &mut lay.gu, pool);
+            matmul(&lay.gu, &ws[base + L_MLP_WDOWN], &mut s.tmp, m, f, d, pool);
+            add_rows(&lay.h_attn, &s.tmp, hout, pool);
+        }
+
+        let h_last = &s.hs[cfg.n_layers];
+        rms_r(h_last, &mut s.rf, d, pool);
+        rmsnorm_apply(h_last, &ws[self.p_norm_final()], &s.rf, &mut s.xnf, d, pool);
+        matmul(&s.xnf, &ws[self.p_lm_head()], &mut s.logits, m, d, v, pool);
+        Ok(())
+    }
+
+    /// Backward pass from `s.dlogits` into `grads` (all overwritten).
+    fn backward(&self, ws: &[Vec<f32>], s: &mut LmScratch, pool: &Pool, grads: &mut [Vec<f32>]) {
+        let cfg = &self.cfg;
+        let (b, t) = (self.batch, cfg.seq_len);
+        let (d, f, v) = (cfg.d_model, cfg.ffn_dim(), cfg.vocab);
+        let (nh, hd) = (cfg.n_heads, cfg.head_dim());
+        let m = b * t;
+        let (cos, sin) = (&s.cos, &s.sin);
+
+        // lm_head + final norm
+        s.dxn.fill(0.0);
+        matmul_dx(&s.dlogits, &ws[self.p_lm_head()], &mut s.dxn, m, d, v, pool);
+        matmul_dw(&s.xnf, &s.dlogits, &mut grads[self.p_lm_head()], m, d, v, pool);
+        let h_last = &s.hs[cfg.n_layers];
+        rmsnorm_bwd_dg(h_last, &s.rf, &s.dxn, &mut grads[self.p_norm_final()], d, pool);
+        s.dh.fill(0.0);
+        rmsnorm_bwd_dx(h_last, &ws[self.p_norm_final()], &s.rf, &s.dxn, &mut s.dh, d, pool);
+
+        for l in (0..cfg.n_layers).rev() {
+            let lay = &mut s.layers[l];
+            let base = p_layer(l, 0);
+            let hin: &[f32] = &s.hs[l];
+
+            // MLP block: h_out = h_attn + swiglu(xn2) @ wdown
+            s.dgu.fill(0.0);
+            matmul_dx(&s.dh, &ws[base + L_MLP_WDOWN], &mut s.dgu, m, f, d, pool);
+            matmul_dw(&lay.gu, &s.dh, &mut grads[base + L_MLP_WDOWN], m, f, d, pool);
+            swiglu_bwd(&lay.gpre, &lay.u, &s.dgu, &mut s.dgpre, &mut s.du, pool);
+            s.dxn.fill(0.0);
+            matmul_dx(&s.dgpre, &ws[base + L_MLP_WGATE], &mut s.dxn, m, d, f, pool);
+            matmul_dx(&s.du, &ws[base + L_MLP_WUP], &mut s.dxn, m, d, f, pool);
+            matmul_dw(&lay.xn2, &s.dgpre, &mut grads[base + L_MLP_WGATE], m, d, f, pool);
+            matmul_dw(&lay.xn2, &s.du, &mut grads[base + L_MLP_WUP], m, d, f, pool);
+            rmsnorm_bwd_dg(&lay.h_attn, &lay.r2, &s.dxn, &mut grads[base + L_NORM_MLP], d, pool);
+            // dh += norm path; the residual term is dh itself
+            rmsnorm_bwd_dx(
+                &lay.h_attn,
+                &ws[base + L_NORM_MLP],
+                &lay.r2,
+                &s.dxn,
+                &mut s.dh,
+                d,
+                pool,
+            );
+
+            // attention block: h_attn = h_in + attn(xn1) @ wo
+            s.dof.fill(0.0);
+            matmul_dx(&s.dh, &ws[base + L_ATTN_WO], &mut s.dof, m, d, d, pool);
+            matmul_dw(&lay.o, &s.dh, &mut grads[base + L_ATTN_WO], m, d, d, pool);
+            attn_bwd_dv(&lay.p, &s.dof, &mut s.dv, b, nh, t, hd, pool);
+            attn_bwd_ds(&lay.p, &s.dof, &lay.v, &mut s.ds, b, nh, t, hd, pool);
+            attn_bwd_dq(&s.ds, &lay.k, &mut s.dq, b, nh, t, hd, pool);
+            attn_bwd_dk(&s.ds, &lay.q, &mut s.dk, b, nh, t, hd, pool);
+            rope_apply(&mut s.dq, cos, sin, b, t, nh, hd, -1.0, pool);
+            rope_apply(&mut s.dk, cos, sin, b, t, nh, hd, -1.0, pool);
+            s.dxn.fill(0.0);
+            matmul_dx(&s.dq, &ws[base + L_ATTN_WQ], &mut s.dxn, m, d, d, pool);
+            matmul_dx(&s.dk, &ws[base + L_ATTN_WK], &mut s.dxn, m, d, d, pool);
+            matmul_dx(&s.dv, &ws[base + L_ATTN_WV], &mut s.dxn, m, d, d, pool);
+            matmul_dw(&lay.xn1, &s.dq, &mut grads[base + L_ATTN_WQ], m, d, d, pool);
+            matmul_dw(&lay.xn1, &s.dk, &mut grads[base + L_ATTN_WK], m, d, d, pool);
+            matmul_dw(&lay.xn1, &s.dv, &mut grads[base + L_ATTN_WV], m, d, d, pool);
+            rmsnorm_bwd_dg(hin, &lay.r1, &s.dxn, &mut grads[base + L_NORM_ATTN], d, pool);
+            rmsnorm_bwd_dx(hin, &ws[base + L_NORM_ATTN], &lay.r1, &s.dxn, &mut s.dh, d, pool);
+        }
+
+        // embedding scatter-add (serial: deterministic by construction)
+        let ge = &mut grads[P_EMBED];
+        ge.fill(0.0);
+        for (row, &tk) in s.tok.iter().enumerate() {
+            let dst = &mut ge[tk * d..(tk + 1) * d];
+            let src = &s.dh[row * d..(row + 1) * d];
+            for (o, &x) in dst.iter_mut().zip(src) {
+                *o += x;
+            }
+        }
+    }
+
+    /// Mean next-token cross-entropy of one `[B, T+1]` batch (forward
+    /// only) — shared by eval and the parity tests.
+    fn batch_loss(
+        &self,
+        ws: &[Vec<f32>],
+        tokens: &[i32],
+        s: &mut LmScratch,
+        pool: &Pool,
+    ) -> Result<f64> {
+        self.forward(ws, tokens, s, pool)?;
+        Ok(xent_loss(&s.logits, &s.tgt, self.cfg.vocab, pool))
+    }
+
+    /// Logits `[B*T, vocab]` for one `[B, T+1]` batch (the inputs are
+    /// `tokens[:, :-1]`, as in the python `forward`) — the parity-test
+    /// surface for `tests/golden_lm.rs`.
+    pub fn forward_logits(
+        &self,
+        ws: &[Vec<f32>],
+        tokens: &[i32],
+        pool: &Pool,
+    ) -> Result<Vec<f32>> {
+        let mut s = LmScratch::alloc(&self.cfg, self.batch);
+        self.forward(ws, tokens, &mut s, pool)?;
+        Ok(s.logits)
+    }
+}
+
+impl NativeProgram for LmProgram {
+    fn name(&self) -> String {
+        self.name.clone()
+    }
+
+    fn param_specs(&self) -> Vec<TensorSpec> {
+        let cfg = &self.cfg;
+        let (v, d, f) = (cfg.vocab, cfg.d_model, cfg.ffn_dim());
+        let spec = |name: String, shape: &[usize]| TensorSpec {
+            name,
+            shape: shape.to_vec(),
+            dtype: DType::F32,
+            role: Role::Param,
+        };
+        let mut out = vec![spec("embed".to_string(), &[v, d])];
+        for l in 0..cfg.n_layers {
+            let pre = format!("layer{l:02}.");
+            out.push(spec(format!("{pre}attn_wk"), &[d, d]));
+            out.push(spec(format!("{pre}attn_wo"), &[d, d]));
+            out.push(spec(format!("{pre}attn_wq"), &[d, d]));
+            out.push(spec(format!("{pre}attn_wv"), &[d, d]));
+            out.push(spec(format!("{pre}mlp_wdown"), &[f, d]));
+            out.push(spec(format!("{pre}mlp_wgate"), &[d, f]));
+            out.push(spec(format!("{pre}mlp_wup"), &[d, f]));
+            out.push(spec(format!("{pre}norm_attn"), &[d]));
+            out.push(spec(format!("{pre}norm_mlp"), &[d]));
+        }
+        out.push(spec("lm_head".to_string(), &[d, v]));
+        out.push(spec("norm_final".to_string(), &[d]));
+        out
+    }
+
+    fn train_data_spec(&self, k: usize) -> Option<TensorSpec> {
+        Some(TensorSpec {
+            name: "tokens".to_string(),
+            shape: vec![k, self.batch, self.cfg.seq_len + 1],
+            dtype: DType::I32,
+            role: Role::Data,
+        })
+    }
+
+    fn eval_batches(&self) -> usize {
+        self.eval_batches
+    }
+
+    /// The 2-D matmul weights (transformer.py `quantized_keys`):
+    /// embeddings and norms stay high precision; `lm_head` is
+    /// quantized (weight-only scheme).
+    fn quantized(&self) -> Vec<String> {
+        const MATMUL_WEIGHTS: [&str; 7] =
+            ["attn_wk", "attn_wo", "attn_wq", "attn_wv", "mlp_wdown", "mlp_wgate", "mlp_wup"];
+        let mut out = Vec::new();
+        for l in 0..self.cfg.n_layers {
+            let pre = format!("layer{l:02}.");
+            for n in MATMUL_WEIGHTS {
+                out.push(format!("{pre}{n}"));
+            }
+        }
+        out.push("lm_head".to_string());
+        out
+    }
+
+    /// OLMo-style init (transformer.py): normal(0, 0.02) weights with
+    /// `0.02/sqrt(2L)` residual out-projections, unit norm gains. The
+    /// native PRNG is deterministic per seed but (as everywhere in this
+    /// backend) not bit-equal to JAX's threefry init.
+    fn init(&self, rng: &mut Rng) -> Vec<Vec<f32>> {
+        let sd = 0.02f32;
+        let res_sd = sd / (2.0 * self.cfg.n_layers as f32).sqrt();
+        self.param_specs()
+            .iter()
+            .enumerate()
+            .map(|(i, spec)| {
+                let n = spec.elements();
+                let name = spec.name.as_str();
+                if name.ends_with("norm_attn") || name.ends_with("norm_mlp") || name == "norm_final"
+                {
+                    return vec![1.0f32; n];
+                }
+                let scale = if name.ends_with("attn_wo") || name.ends_with("mlp_wdown") {
+                    res_sd
+                } else {
+                    sd
+                };
+                let mut w = vec![0.0f32; n];
+                let mut r = rng.fork(i as u64 + 1);
+                r.fill_normal(&mut w);
+                for v in w.iter_mut() {
+                    *v *= scale;
+                }
+                w
+            })
+            .collect()
+    }
+
+    fn make_scratch(&self) -> Box<dyn Any> {
+        Box::new(LmScratch::alloc(&self.cfg, self.batch))
+    }
+
+    fn loss_grad(
+        &self,
+        wq: &[Vec<f32>],
+        ctx: &StepCtx<'_>,
+        scratch: &mut dyn Any,
+        grads: &mut [Vec<f32>],
+    ) -> Result<f64> {
+        let s = scratch.downcast_mut::<LmScratch>().expect("lm scratch");
+        let tokens = ctx
+            .data
+            .ok_or_else(|| anyhow::anyhow!("{}: train step got no token batch", self.name))?;
+        self.forward(wq, tokens, s, ctx.pool)?;
+        let loss = xent_loss_grad(&s.logits, &s.tgt, &mut s.dlogits, self.cfg.vocab, ctx.pool);
+        self.backward(wq, s, ctx.pool, grads);
+        Ok(loss)
+    }
+
+    fn val_loss(&self, params: &[Vec<f32>], ctx: &EvalCtx<'_>) -> Result<f64> {
+        let data = ctx
+            .data
+            .ok_or_else(|| anyhow::anyhow!("{}: eval got no token batches", self.name))?;
+        let blen = self.batch * (self.cfg.seq_len + 1);
+        if data.is_empty() || data.len() % blen != 0 {
+            bail!("{}: eval data has {} tokens, not a multiple of {blen}", self.name, data.len());
+        }
+        let mut s = LmScratch::alloc(&self.cfg, self.batch);
+        let ke = data.len() / blen;
+        let mut total = 0.0f64;
+        for i in 0..ke {
+            total += self.batch_loss(params, &data[i * blen..(i + 1) * blen], &mut s, ctx.pool)?;
+        }
+        Ok(total / ke as f64)
+    }
+}
+
+/// Per-layer saved activations for the backward pass.
+struct LayerScratch {
+    xn1: Vec<f32>,
+    r1: Vec<f32>,
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    /// softmax probabilities, `[B, H, T, T]` (zero above the diagonal)
+    p: Vec<f32>,
+    /// attention mix `P·V` before the out-projection, `[M, D]`
+    o: Vec<f32>,
+    h_attn: Vec<f32>,
+    xn2: Vec<f32>,
+    r2: Vec<f32>,
+    gpre: Vec<f32>,
+    u: Vec<f32>,
+    gu: Vec<f32>,
+}
+
+/// All forward activations + backward temporaries for one train call,
+/// allocated once and reused across the K interpreted steps.
+struct LmScratch {
+    tok: Vec<usize>,
+    tgt: Vec<usize>,
+    /// RoPE tables `[T, head_dim/2]`
+    cos: Vec<f32>,
+    sin: Vec<f32>,
+    /// residual stream at each layer boundary, `n_layers + 1` buffers
+    hs: Vec<Vec<f32>>,
+    layers: Vec<LayerScratch>,
+    xnf: Vec<f32>,
+    rf: Vec<f32>,
+    logits: Vec<f32>,
+    dlogits: Vec<f32>,
+    tmp: Vec<f32>,
+    dh: Vec<f32>,
+    dxn: Vec<f32>,
+    dof: Vec<f32>,
+    dq: Vec<f32>,
+    dk: Vec<f32>,
+    dv: Vec<f32>,
+    ds: Vec<f32>,
+    dgu: Vec<f32>,
+    dgpre: Vec<f32>,
+    du: Vec<f32>,
+}
+
+impl LmScratch {
+    fn alloc(cfg: &LmConfig, batch: usize) -> LmScratch {
+        let (t, d, f, v) = (cfg.seq_len, cfg.d_model, cfg.ffn_dim(), cfg.vocab);
+        let (nh, hd) = (cfg.n_heads, cfg.head_dim());
+        let half = hd / 2;
+        let m = batch * t;
+        let md = m * d;
+        let (mut cos, mut sin) = (vec![0.0f32; t * half], vec![0.0f32; t * half]);
+        for ti in 0..t {
+            for j in 0..half {
+                let freq = (10000.0f64).powf(-(j as f64) / half as f64);
+                let ang = ti as f64 * freq;
+                cos[ti * half + j] = ang.cos() as f32;
+                sin[ti * half + j] = ang.sin() as f32;
+            }
+        }
+        let layers = (0..cfg.n_layers)
+            .map(|_| LayerScratch {
+                xn1: vec![0.0; md],
+                r1: vec![0.0; m],
+                q: vec![0.0; md],
+                k: vec![0.0; md],
+                v: vec![0.0; md],
+                p: vec![0.0; batch * nh * t * t],
+                o: vec![0.0; md],
+                h_attn: vec![0.0; md],
+                xn2: vec![0.0; md],
+                r2: vec![0.0; m],
+                gpre: vec![0.0; m * f],
+                u: vec![0.0; m * f],
+                gu: vec![0.0; m * f],
+            })
+            .collect();
+        LmScratch {
+            tok: vec![0; m],
+            tgt: vec![0; m],
+            cos,
+            sin,
+            hs: (0..cfg.n_layers + 1).map(|_| vec![0.0; md]).collect(),
+            layers,
+            xnf: vec![0.0; md],
+            rf: vec![0.0; m],
+            logits: vec![0.0; m * v],
+            dlogits: vec![0.0; m * v],
+            tmp: vec![0.0; md],
+            dh: vec![0.0; md],
+            dxn: vec![0.0; md],
+            dof: vec![0.0; md],
+            dq: vec![0.0; md],
+            dk: vec![0.0; md],
+            dv: vec![0.0; md],
+            ds: vec![0.0; batch * nh * t * t],
+            dgu: vec![0.0; m * f],
+            dgpre: vec![0.0; m * f],
+            du: vec![0.0; m * f],
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// kernels — all deterministic under the DESIGN.md §3 contract
+// ---------------------------------------------------------------------------
+
+/// Element ranges covering `rows` rows of `width`, a fixed number of
+/// rows per task.
+fn row_ranges(rows: usize, width: usize) -> Vec<Range<usize>> {
+    chunk_ranges(rows, ROWS_PER_TASK)
+        .into_iter()
+        .map(|r| r.start * width..r.end * width)
+        .collect()
+}
+
+/// One contiguous `[T, T]` block per (batch, head) pair.
+fn head_ranges(bh: usize, tt: usize) -> Vec<Range<usize>> {
+    (0..bh).map(|i| i * tt..(i + 1) * tt).collect()
+}
+
+/// `y[M,N] = x[M,D] @ w[D,N]`, row-parallel (each output row is one
+/// worker's fixed serial fold).
+fn matmul(x: &[f32], w: &[f32], y: &mut [f32], m: usize, d: usize, n: usize, pool: &Pool) {
+    pool.for_chunks_mut(y, &row_ranges(m, n), m * d * n, |_, r, out| {
+        let row0 = r.start / n;
+        for (i, yrow) in out.chunks_mut(n).enumerate() {
+            let xrow = &x[(row0 + i) * d..(row0 + i + 1) * d];
+            yrow.fill(0.0);
+            for (di, &xv) in xrow.iter().enumerate() {
+                let wrow = &w[di * n..(di + 1) * n];
+                for (yv, &wv) in yrow.iter_mut().zip(wrow) {
+                    *yv += xv * wv;
+                }
+            }
+        }
+    });
+}
+
+/// `dx[M,D] += dy[M,N] @ w[D,N]^T`, row-parallel. Accumulates — the
+/// caller zeroes `dx` before the first contribution.
+fn matmul_dx(dy: &[f32], w: &[f32], dx: &mut [f32], m: usize, d: usize, n: usize, pool: &Pool) {
+    pool.for_chunks_mut(dx, &row_ranges(m, d), m * d * n, |_, r, out| {
+        let row0 = r.start / d;
+        for (i, dxrow) in out.chunks_mut(d).enumerate() {
+            let dyrow = &dy[(row0 + i) * n..(row0 + i + 1) * n];
+            for (di, dxv) in dxrow.iter_mut().enumerate() {
+                let wrow = &w[di * n..(di + 1) * n];
+                let mut acc = 0.0f32;
+                for (dyv, wv) in dyrow.iter().zip(wrow) {
+                    acc += dyv * wv;
+                }
+                *dxv += acc;
+            }
+        }
+    });
+}
+
+/// `dw[D,N] = x[M,D]^T @ dy[M,N]`, parallel over rows of `dw`: each
+/// worker owns a row range and folds the M data rows itself in fixed
+/// order, so the result is bit-identical at any thread count.
+fn matmul_dw(x: &[f32], dy: &[f32], dw: &mut [f32], m: usize, d: usize, n: usize, pool: &Pool) {
+    pool.for_chunks_mut(dw, &row_ranges(d, n), m * d * n, |_, r, out| {
+        let drow0 = r.start / n;
+        let drows = out.len() / n;
+        out.fill(0.0);
+        for mi in 0..m {
+            let dyrow = &dy[mi * n..(mi + 1) * n];
+            let xrow = &x[mi * d + drow0..mi * d + drow0 + drows];
+            for (di, dwrow) in out.chunks_mut(n).enumerate() {
+                let xv = xrow[di];
+                for (dwv, &dyv) in dwrow.iter_mut().zip(dyrow) {
+                    *dwv += xv * dyv;
+                }
+            }
+        }
+    });
+}
+
+/// Per-row inverse RMS: `r[mi] = 1/sqrt(mean(x[mi]^2) + 1e-6)`.
+fn rms_r(x: &[f32], r_out: &mut [f32], d: usize, pool: &Pool) {
+    let m = r_out.len();
+    pool.for_chunks_mut(r_out, &chunk_ranges(m, ROWS_PER_TASK), m * d, |_, r, out| {
+        for (i, rv) in out.iter_mut().enumerate() {
+            let row = &x[(r.start + i) * d..(r.start + i + 1) * d];
+            let mut ss = 0.0f32;
+            for &v in row {
+                ss += v * v;
+            }
+            *rv = 1.0 / (ss / d as f32 + 1e-6).sqrt();
+        }
+    });
+}
+
+/// `y[mi, j] = x[mi, j] * g[j] * r[mi]`.
+fn rmsnorm_apply(x: &[f32], g: &[f32], r: &[f32], y: &mut [f32], d: usize, pool: &Pool) {
+    let m = r.len();
+    pool.for_chunks_mut(y, &row_ranges(m, d), m * d, |_, rr, out| {
+        let row0 = rr.start / d;
+        for (i, yrow) in out.chunks_mut(d).enumerate() {
+            let mi = row0 + i;
+            let rv = r[mi];
+            let xrow = &x[mi * d..(mi + 1) * d];
+            for j in 0..d {
+                yrow[j] = xrow[j] * g[j] * rv;
+            }
+        }
+    });
+}
+
+/// RMSNorm input gradient, accumulated into `dx`:
+/// `dx_j += r g_j dy_j - r^3 x_j <dy, g ∘ x> / d`.
+fn rmsnorm_bwd_dx(
+    x: &[f32],
+    g: &[f32],
+    r: &[f32],
+    dy: &[f32],
+    dx: &mut [f32],
+    d: usize,
+    pool: &Pool,
+) {
+    let m = r.len();
+    pool.for_chunks_mut(dx, &row_ranges(m, d), m * d, |_, rr, out| {
+        let row0 = rr.start / d;
+        for (i, dxrow) in out.chunks_mut(d).enumerate() {
+            let mi = row0 + i;
+            let rv = r[mi];
+            let xrow = &x[mi * d..(mi + 1) * d];
+            let dyrow = &dy[mi * d..(mi + 1) * d];
+            let mut dot = 0.0f32;
+            for j in 0..d {
+                dot += dyrow[j] * g[j] * xrow[j];
+            }
+            let c = rv * rv * rv * dot / d as f32;
+            for j in 0..d {
+                dxrow[j] += rv * g[j] * dyrow[j] - c * xrow[j];
+            }
+        }
+    });
+}
+
+/// RMSNorm gain gradient (overwrites): `dg_j = sum_m dy[m,j] x[m,j] r[m]`
+/// — column-parallel, each column folds the rows serially.
+fn rmsnorm_bwd_dg(x: &[f32], r: &[f32], dy: &[f32], dg: &mut [f32], d: usize, pool: &Pool) {
+    let m = r.len();
+    pool.for_chunks_mut(dg, &chunk_ranges(d, 64), m * d, |_, rr, out| {
+        for (jo, o) in out.iter_mut().enumerate() {
+            let j = rr.start + jo;
+            let mut acc = 0.0f32;
+            for mi in 0..m {
+                acc += dy[mi * d + j] * x[mi * d + j] * r[mi];
+            }
+            *o = acc;
+        }
+    });
+}
+
+/// Rotary embeddings in place over `[B, T, H*Hd]` rows. `sign = 1.0`
+/// rotates forward; `sign = -1.0` applies the transpose (backward).
+#[allow(clippy::too_many_arguments)]
+fn rope_apply(
+    x: &mut [f32],
+    cos: &[f32],
+    sin: &[f32],
+    b: usize,
+    t: usize,
+    nh: usize,
+    hd: usize,
+    sign: f32,
+    pool: &Pool,
+) {
+    let half = hd / 2;
+    let width = nh * hd;
+    pool.for_chunks_mut(x, &row_ranges(b * t, width), b * t * width, |_, rr, out| {
+        let row0 = rr.start / width;
+        for (i, row) in out.chunks_mut(width).enumerate() {
+            let ti = (row0 + i) % t;
+            let c = &cos[ti * half..(ti + 1) * half];
+            let sn = &sin[ti * half..(ti + 1) * half];
+            for head in 0..nh {
+                let hrow = &mut row[head * hd..(head + 1) * hd];
+                for j in 0..half {
+                    let (x1, x2) = (hrow[j], hrow[half + j]);
+                    let sj = sign * sn[j];
+                    hrow[j] = x1 * c[j] - x2 * sj;
+                    hrow[half + j] = x1 * sj + x2 * c[j];
+                }
+            }
+        }
+    });
+}
+
+/// Causal softmax probabilities `p[B,H,T,T]` from rotated q/k —
+/// parallel per (batch, head) block.
+#[allow(clippy::too_many_arguments)]
+fn attn_probs(
+    q: &[f32],
+    k: &[f32],
+    p: &mut [f32],
+    b: usize,
+    nh: usize,
+    t: usize,
+    hd: usize,
+    pool: &Pool,
+) {
+    let d = nh * hd;
+    let scale = 1.0 / (hd as f32).sqrt();
+    pool.for_chunks_mut(p, &head_ranges(b * nh, t * t), b * nh * t * t * hd, |bh, _, blk| {
+        let (bi, hi) = (bh / nh, bh % nh);
+        for ti in 0..t {
+            let qrow = &q[(bi * t + ti) * d + hi * hd..(bi * t + ti) * d + hi * hd + hd];
+            let prow = &mut blk[ti * t..(ti + 1) * t];
+            let mut mx = f32::NEG_INFINITY;
+            for si in 0..=ti {
+                let krow = &k[(bi * t + si) * d + hi * hd..(bi * t + si) * d + hi * hd + hd];
+                let mut acc = 0.0f32;
+                for j in 0..hd {
+                    acc += qrow[j] * krow[j];
+                }
+                let sc = acc * scale;
+                prow[si] = sc;
+                if sc > mx {
+                    mx = sc;
+                }
+            }
+            let mut z = 0.0f32;
+            for si in 0..=ti {
+                let e = (prow[si] - mx).exp();
+                prow[si] = e;
+                z += e;
+            }
+            let inv = 1.0 / z;
+            for si in 0..=ti {
+                prow[si] *= inv;
+            }
+            for si in ti + 1..t {
+                prow[si] = 0.0;
+            }
+        }
+    });
+}
+
+/// `o[B,T,D] = P · V`, row-parallel over output rows.
+#[allow(clippy::too_many_arguments)]
+fn attn_mix(
+    p: &[f32],
+    v: &[f32],
+    o: &mut [f32],
+    b: usize,
+    nh: usize,
+    t: usize,
+    hd: usize,
+    pool: &Pool,
+) {
+    let d = nh * hd;
+    pool.for_chunks_mut(o, &row_ranges(b * t, d), b * nh * t * t * hd, |_, rr, out| {
+        let row0 = rr.start / d;
+        for (i, orow) in out.chunks_mut(d).enumerate() {
+            let (bi, ti) = ((row0 + i) / t, (row0 + i) % t);
+            orow.fill(0.0);
+            for hi in 0..nh {
+                let osub = &mut orow[hi * hd..(hi + 1) * hd];
+                for si in 0..=ti {
+                    let w = p[((bi * nh + hi) * t + ti) * t + si];
+                    let vrow = &v[(bi * t + si) * d + hi * hd..(bi * t + si) * d + hi * hd + hd];
+                    for (ov, &vv) in osub.iter_mut().zip(vrow) {
+                        *ov += w * vv;
+                    }
+                }
+            }
+        }
+    });
+}
+
+/// `dv[b,s,h] = sum_{t>=s} p[b,h,t,s] * do[b,t,h]` (overwrites).
+#[allow(clippy::too_many_arguments)]
+fn attn_bwd_dv(
+    p: &[f32],
+    dout: &[f32],
+    dv: &mut [f32],
+    b: usize,
+    nh: usize,
+    t: usize,
+    hd: usize,
+    pool: &Pool,
+) {
+    let d = nh * hd;
+    pool.for_chunks_mut(dv, &row_ranges(b * t, d), b * nh * t * t * hd, |_, rr, out| {
+        let row0 = rr.start / d;
+        for (i, dvrow) in out.chunks_mut(d).enumerate() {
+            let (bi, si) = ((row0 + i) / t, (row0 + i) % t);
+            dvrow.fill(0.0);
+            for hi in 0..nh {
+                let dsub = &mut dvrow[hi * hd..(hi + 1) * hd];
+                for ti in si..t {
+                    let w = p[((bi * nh + hi) * t + ti) * t + si];
+                    let dorow =
+                        &dout[(bi * t + ti) * d + hi * hd..(bi * t + ti) * d + hi * hd + hd];
+                    for (o, &x) in dsub.iter_mut().zip(dorow) {
+                        *o += w * x;
+                    }
+                }
+            }
+        }
+    });
+}
+
+/// Softmax backward into score-gradients `ds[B,H,T,T]` (overwrites):
+/// `dp = do · v^T`, then `ds = p ∘ (dp - rowsum(dp ∘ p))`.
+#[allow(clippy::too_many_arguments)]
+fn attn_bwd_ds(
+    p: &[f32],
+    dout: &[f32],
+    v: &[f32],
+    ds: &mut [f32],
+    b: usize,
+    nh: usize,
+    t: usize,
+    hd: usize,
+    pool: &Pool,
+) {
+    let d = nh * hd;
+    pool.for_chunks_mut(ds, &head_ranges(b * nh, t * t), b * nh * t * t * hd, |bh, _, blk| {
+        let (bi, hi) = (bh / nh, bh % nh);
+        let pblk = &p[bh * t * t..(bh + 1) * t * t];
+        for ti in 0..t {
+            let dorow = &dout[(bi * t + ti) * d + hi * hd..(bi * t + ti) * d + hi * hd + hd];
+            let dsrow = &mut blk[ti * t..(ti + 1) * t];
+            let prow = &pblk[ti * t..(ti + 1) * t];
+            for si in 0..=ti {
+                let vrow = &v[(bi * t + si) * d + hi * hd..(bi * t + si) * d + hi * hd + hd];
+                let mut acc = 0.0f32;
+                for j in 0..hd {
+                    acc += dorow[j] * vrow[j];
+                }
+                dsrow[si] = acc;
+            }
+            let mut rd = 0.0f32;
+            for si in 0..=ti {
+                rd += dsrow[si] * prow[si];
+            }
+            for si in 0..=ti {
+                dsrow[si] = prow[si] * (dsrow[si] - rd);
+            }
+            for si in ti + 1..t {
+                dsrow[si] = 0.0;
+            }
+        }
+    });
+}
+
+/// `dq[b,t,h] = scale * sum_{s<=t} ds[b,h,t,s] * k[b,s,h]` (overwrites).
+#[allow(clippy::too_many_arguments)]
+fn attn_bwd_dq(
+    ds: &[f32],
+    k: &[f32],
+    dq: &mut [f32],
+    b: usize,
+    nh: usize,
+    t: usize,
+    hd: usize,
+    pool: &Pool,
+) {
+    let d = nh * hd;
+    let scale = 1.0 / (hd as f32).sqrt();
+    pool.for_chunks_mut(dq, &row_ranges(b * t, d), b * nh * t * t * hd, |_, rr, out| {
+        let row0 = rr.start / d;
+        for (i, dqrow) in out.chunks_mut(d).enumerate() {
+            let (bi, ti) = ((row0 + i) / t, (row0 + i) % t);
+            dqrow.fill(0.0);
+            for hi in 0..nh {
+                let dsub = &mut dqrow[hi * hd..(hi + 1) * hd];
+                for si in 0..=ti {
+                    let w = ds[((bi * nh + hi) * t + ti) * t + si] * scale;
+                    let krow = &k[(bi * t + si) * d + hi * hd..(bi * t + si) * d + hi * hd + hd];
+                    for (o, &x) in dsub.iter_mut().zip(krow) {
+                        *o += w * x;
+                    }
+                }
+            }
+        }
+    });
+}
+
+/// `dk[b,s,h] = scale * sum_{t>=s} ds[b,h,t,s] * q[b,t,h]` (overwrites).
+#[allow(clippy::too_many_arguments)]
+fn attn_bwd_dk(
+    ds: &[f32],
+    q: &[f32],
+    dk: &mut [f32],
+    b: usize,
+    nh: usize,
+    t: usize,
+    hd: usize,
+    pool: &Pool,
+) {
+    let d = nh * hd;
+    let scale = 1.0 / (hd as f32).sqrt();
+    pool.for_chunks_mut(dk, &row_ranges(b * t, d), b * nh * t * t * hd, |_, rr, out| {
+        let row0 = rr.start / d;
+        for (i, dkrow) in out.chunks_mut(d).enumerate() {
+            let (bi, si) = ((row0 + i) / t, (row0 + i) % t);
+            dkrow.fill(0.0);
+            for hi in 0..nh {
+                let dsub = &mut dkrow[hi * hd..(hi + 1) * hd];
+                for ti in si..t {
+                    let w = ds[((bi * nh + hi) * t + ti) * t + si] * scale;
+                    let qrow = &q[(bi * t + ti) * d + hi * hd..(bi * t + ti) * d + hi * hd + hd];
+                    for (o, &x) in dsub.iter_mut().zip(qrow) {
+                        *o += w * x;
+                    }
+                }
+            }
+        }
+    });
+}
+
+/// `gu = silu(gpre) ∘ u`, elementwise.
+fn swiglu_fwd(gpre: &[f32], u: &[f32], gu: &mut [f32], pool: &Pool) {
+    let n = gu.len();
+    pool.for_chunks_mut(gu, &chunk_ranges(n, PAR_CHUNK), n, |_, r, out| {
+        for (i, o) in out.iter_mut().enumerate() {
+            let g = gpre[r.start + i];
+            let s = 1.0 / (1.0 + (-g).exp());
+            *o = g * s * u[r.start + i];
+        }
+    });
+}
+
+/// Backward through `gu = silu(gpre) ∘ u` (overwrites both outputs).
+fn swiglu_bwd(
+    gpre: &[f32],
+    u: &[f32],
+    dgu: &[f32],
+    dgpre: &mut [f32],
+    du: &mut [f32],
+    pool: &Pool,
+) {
+    let n = dgu.len();
+    pool.for_chunks_mut(dgpre, &chunk_ranges(n, PAR_CHUNK), n, |_, r, out| {
+        for (i, o) in out.iter_mut().enumerate() {
+            let g = gpre[r.start + i];
+            let s = 1.0 / (1.0 + (-g).exp());
+            // d(silu)/dg = s * (1 + g * (1 - s))
+            *o = dgu[r.start + i] * u[r.start + i] * s * (1.0 + g * (1.0 - s));
+        }
+    });
+    pool.for_chunks_mut(du, &chunk_ranges(n, PAR_CHUNK), n, |_, r, out| {
+        for (i, o) in out.iter_mut().enumerate() {
+            let g = gpre[r.start + i];
+            let s = 1.0 / (1.0 + (-g).exp());
+            *o = dgu[r.start + i] * g * s;
+        }
+    });
+}
+
+/// `out = a + b`, elementwise.
+fn add_rows(a: &[f32], b: &[f32], out: &mut [f32], pool: &Pool) {
+    let n = out.len();
+    pool.for_chunks_mut(out, &chunk_ranges(n, PAR_CHUNK), n, |_, r, chunk| {
+        for (i, o) in chunk.iter_mut().enumerate() {
+            *o = a[r.start + i] + b[r.start + i];
+        }
+    });
+}
+
+/// Mean next-token cross-entropy + logit gradients (overwrites
+/// `dlogits` with `(softmax - onehot)/M`). Loss partials fold in
+/// chunk-index order.
+fn xent_loss_grad(
+    logits: &[f32],
+    tgt: &[usize],
+    dlogits: &mut [f32],
+    v: usize,
+    pool: &Pool,
+) -> f64 {
+    let m = tgt.len();
+    let inv_m = 1.0 / m as f32;
+    let parts = pool.for_chunks_mut(dlogits, &row_ranges(m, v), m * v, |_, rr, out| {
+        let row0 = rr.start / v;
+        let mut lsum = 0.0f64;
+        for (i, drow) in out.chunks_mut(v).enumerate() {
+            let mi = row0 + i;
+            let lrow = &logits[mi * v..(mi + 1) * v];
+            let mut mx = f32::NEG_INFINITY;
+            for &x in lrow {
+                if x > mx {
+                    mx = x;
+                }
+            }
+            let mut z = 0.0f32;
+            for j in 0..v {
+                let e = (lrow[j] - mx).exp();
+                drow[j] = e;
+                z += e;
+            }
+            let logz = mx + z.ln();
+            lsum += (logz - lrow[tgt[mi]]) as f64;
+            let sc = inv_m / z;
+            for j in 0..v {
+                drow[j] *= sc;
+            }
+            drow[tgt[mi]] -= inv_m;
+        }
+        lsum
+    });
+    parts.iter().sum::<f64>() / m as f64
+}
+
+/// Forward-only mean cross-entropy (eval path): per-chunk partial sums
+/// fold in chunk order, parallel above [`PAR_MIN`] work.
+fn xent_loss(logits: &[f32], tgt: &[usize], v: usize, pool: &Pool) -> f64 {
+    let m = tgt.len();
+    let part = |r: Range<usize>| -> f64 {
+        let mut lsum = 0.0f64;
+        for mi in r {
+            let lrow = &logits[mi * v..(mi + 1) * v];
+            let mut mx = f32::NEG_INFINITY;
+            for &x in lrow {
+                if x > mx {
+                    mx = x;
+                }
+            }
+            let mut z = 0.0f32;
+            for &x in lrow {
+                z += (x - mx).exp();
+            }
+            lsum += (mx + z.ln() - lrow[tgt[mi]]) as f64;
+        }
+        lsum
+    };
+    let ranges = chunk_ranges(m, ROWS_PER_TASK);
+    let parts: Vec<f64> = if m * v < PAR_MIN || pool.threads() == 1 {
+        ranges.into_iter().map(part).collect()
+    } else {
+        pool.run(ranges, |_, r| part(r))
+    };
+    parts.iter().sum::<f64>() / m as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::native::program::StepStreams;
+
+    fn micro() -> LmProgram {
+        LmProgram::new(
+            "lm-fd",
+            LmConfig { vocab: 11, d_model: 8, n_layers: 1, n_heads: 2, seq_len: 4 },
+            2,
+            1,
+        )
+        .unwrap()
+    }
+
+    fn hash_params(prog: &LmProgram, seed: u64) -> Vec<Vec<f32>> {
+        // arbitrary but deterministic non-degenerate weights
+        let mut rng = Rng::new(seed);
+        prog.init(&mut rng)
+            .into_iter()
+            .map(|mut wv| {
+                for (i, x) in wv.iter_mut().enumerate() {
+                    // perturb norms too so their gradients are exercised
+                    *x += 0.01 * ((i % 13) as f32 - 6.0) / 6.0;
+                }
+                wv
+            })
+            .collect()
+    }
+
+    fn tokens_for(prog: &LmProgram, seed: u64) -> Vec<i32> {
+        let mut rng = Rng::new(seed);
+        (0..prog.batch * (prog.cfg.seq_len + 1))
+            .map(|_| rng.below(prog.cfg.vocab as u64) as i32)
+            .collect()
+    }
+
+    fn loss_at(prog: &LmProgram, params: &[Vec<f32>], tokens: &[i32]) -> f64 {
+        let mut s = LmScratch::alloc(&prog.cfg, prog.batch);
+        prog.batch_loss(params, tokens, &mut s, &Pool::serial()).unwrap()
+    }
+
+    /// The manual backward must match central finite differences of the
+    /// forward loss on every parameter tensor.
+    #[test]
+    fn grads_match_finite_differences() {
+        let prog = micro();
+        let params = hash_params(&prog, 5);
+        let tokens = tokens_for(&prog, 7);
+        let pool = Pool::serial();
+        let statics: Vec<(String, Vec<f32>)> = vec![];
+        let ctx = StepCtx {
+            statics: &statics,
+            data: Some(&tokens),
+            streams: StepStreams { data: 0, round: 0 },
+            pool: &pool,
+        };
+        let mut scratch = prog.make_scratch();
+        let mut grads: Vec<Vec<f32>> = params.iter().map(|p| vec![0.0; p.len()]).collect();
+        let base = prog.loss_grad(&params, &ctx, scratch.as_mut(), &mut grads).unwrap();
+        assert!(base.is_finite() && base > 0.0);
+
+        let eps = 1e-3f32;
+        for (pi, p) in params.iter().enumerate() {
+            let stride = (p.len() / 13).max(1);
+            for idx in (0..p.len()).step_by(stride) {
+                let mut hi = params.clone();
+                hi[pi][idx] += eps;
+                let mut lo = params.clone();
+                lo[pi][idx] -= eps;
+                let fd = (loss_at(&prog, &hi, &tokens) - loss_at(&prog, &lo, &tokens))
+                    / (2.0 * eps as f64);
+                let an = grads[pi][idx] as f64;
+                assert!(
+                    (fd - an).abs() < 5e-3 + 0.05 * an.abs(),
+                    "param {pi} idx {idx}: fd={fd} an={an}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn attn_probs_rows_are_causal_distributions() {
+        let (b, nh, t, hd) = (1, 2, 4, 4);
+        let d = nh * hd;
+        let mut rng = Rng::new(3);
+        let mut q = vec![0.0f32; b * t * d];
+        let mut k = vec![0.0f32; b * t * d];
+        rng.fill_normal(&mut q);
+        rng.fill_normal(&mut k);
+        let mut p = vec![0.0f32; b * nh * t * t];
+        attn_probs(&q, &k, &mut p, b, nh, t, hd, &Pool::serial());
+        for bh in 0..b * nh {
+            for ti in 0..t {
+                let row = &p[(bh * t + ti) * t..(bh * t + ti + 1) * t];
+                let sum: f32 = row.iter().sum();
+                assert!((sum - 1.0).abs() < 1e-5, "row sums to {sum}");
+                for si in ti + 1..t {
+                    assert_eq!(row[si], 0.0, "future position leaked");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rope_backward_inverts_forward() {
+        let (b, t, nh, hd) = (1, 3, 2, 4);
+        let mut rng = Rng::new(9);
+        let mut x = vec![0.0f32; b * t * nh * hd];
+        rng.fill_normal(&mut x);
+        let orig = x.clone();
+        let prog = LmProgram::new(
+            "rope-test",
+            LmConfig { vocab: 4, d_model: nh * hd, n_layers: 1, n_heads: nh, seq_len: t },
+            1,
+            1,
+        )
+        .unwrap();
+        let s = LmScratch::alloc(&prog.cfg, 1);
+        let pool = Pool::serial();
+        rope_apply(&mut x, &s.cos, &s.sin, b, t, nh, hd, 1.0, &pool);
+        assert_ne!(x, orig);
+        rope_apply(&mut x, &s.cos, &s.sin, b, t, nh, hd, -1.0, &pool);
+        for (a, o) in x.iter().zip(&orig) {
+            assert!((a - o).abs() < 1e-5, "{a} vs {o}");
+        }
+    }
+
+    #[test]
+    fn ffn_dim_matches_python_rounding() {
+        let mk = |d| LmConfig { vocab: 256, d_model: d, n_layers: 1, n_heads: 2, seq_len: 8 };
+        assert_eq!(mk(64).ffn_dim(), 192);
+        assert_eq!(mk(192).ffn_dim(), 512);
+        assert_eq!(mk(256).ffn_dim(), 704);
+        assert_eq!(mk(768).ffn_dim(), 2048);
+        assert_eq!(mk(32).ffn_dim(), 128);
+    }
+
+    #[test]
+    fn preset_lookup_and_param_order() {
+        let p = LmProgram::preset("lm-tiny").unwrap();
+        assert_eq!(p.name(), "lm-tiny");
+        assert_eq!(p.batch, 8);
+        assert_eq!(p.eval_batches(), 4);
+        assert_eq!(LmProgram::preset_k("lm-tiny").unwrap(), 4);
+        assert!(LmProgram::preset_k("lm-tiny2").is_err());
+        let specs = p.param_specs();
+        // canonical sorted order end-to-end
+        let names: Vec<&str> = specs.iter().map(|s| s.name.as_str()).collect();
+        let mut sorted = names.clone();
+        sorted.sort();
+        assert_eq!(names, sorted);
+        assert_eq!(names.first(), Some(&"embed"));
+        assert_eq!(names.last(), Some(&"norm_final"));
+        // the closed-form param_count matches the actual spec layout
+        let total: usize = specs.iter().map(|s| s.elements()).sum();
+        assert_eq!(total, p.cfg.param_count());
+        // quantized set: 7 matmul weights per layer + lm_head
+        assert_eq!(p.quantized().len(), 7 * 2 + 1);
+        assert!(!p.quantized().iter().any(|n| n.contains("norm") || n == "embed"));
+
+        let err = LmProgram::preset("lm-never").unwrap_err().to_string();
+        assert!(err.contains("lm-tiny") && err.contains("lm-300m-sim"), "{err}");
+    }
+
+    #[test]
+    fn loss_is_near_uniform_at_tiny_weights() {
+        // with ~zero weights the logits are ~uniform: loss ~= ln(vocab)
+        let prog = micro();
+        let mut rng = Rng::new(1);
+        let params = prog.init(&mut rng);
+        let tokens = tokens_for(&prog, 2);
+        let loss = loss_at(&prog, &params, &tokens);
+        let uniform = (prog.cfg.vocab as f64).ln();
+        assert!((loss - uniform).abs() < 0.2, "loss={loss} uniform={uniform}");
+    }
+
+    #[test]
+    fn val_loss_averages_batches() {
+        let prog = micro();
+        let mut rng = Rng::new(4);
+        let params = prog.init(&mut rng);
+        let blen = prog.batch * (prog.cfg.seq_len + 1);
+        let t1 = tokens_for(&prog, 11);
+        let t2 = tokens_for(&prog, 12);
+        let mut both = t1.clone();
+        both.extend_from_slice(&t2);
+        assert_eq!(both.len(), 2 * blen);
+        let pool = Pool::serial();
+        let ctx1 = EvalCtx { statics: &[], data: Some(&t1), pool: &pool };
+        let ctx2 = EvalCtx { statics: &[], data: Some(&t2), pool: &pool };
+        let ctxb = EvalCtx { statics: &[], data: Some(&both), pool: &pool };
+        let l1 = prog.val_loss(&params, &ctx1).unwrap();
+        let l2 = prog.val_loss(&params, &ctx2).unwrap();
+        let lb = prog.val_loss(&params, &ctxb).unwrap();
+        assert!((lb - 0.5 * (l1 + l2)).abs() < 1e-9);
+    }
+}

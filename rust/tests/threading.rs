@@ -11,9 +11,11 @@
 
 use lotion::config::{RunConfig, Schedule};
 use lotion::coordinator::{DataSource, Evaluator, MetricsLogger, Trainer};
+use lotion::data::{ByteTokenizer, TokenBatcher, ZipfMarkovCorpus};
 use lotion::experiments::common::synth_statics;
 use lotion::quant::{QuantFormat, Rounding};
-use lotion::runtime::native::{ModelSpec, NativeEngine, NativeModel, OptKind};
+use lotion::runtime::native::{LmConfig, LmProgram, ModelSpec, NativeEngine, NativeModel, OptKind};
+use std::rc::Rc;
 
 /// A tensor's exact bit pattern (f32 `==` would paper over NaN/-0.0).
 fn bits(t: &lotion::tensor::HostTensor) -> Vec<u32> {
@@ -24,11 +26,11 @@ fn bits(t: &lotion::tensor::HostTensor) -> Vec<u32> {
 /// parameter bits, the train-loss trace, and a quantized RR eval.
 fn run_linreg(method: &str, threads: usize) -> (Vec<Vec<u32>>, Vec<(usize, f64)>, f64) {
     let d = 40_000;
-    let engine = NativeEngine::with_models(&[NativeModel {
-        spec: ModelSpec::LinReg { d, batch: 16 },
-        opt: OptKind::Sgd,
-        steps_per_call: 4,
-    }])
+    let engine = NativeEngine::with_models(&[NativeModel::from_spec(
+        ModelSpec::LinReg { d, batch: 16 },
+        OptKind::Sgd,
+        4,
+    )])
     .with_threads(threads);
     if threads > 0 {
         assert_eq!(engine.threads(), threads);
@@ -77,11 +79,11 @@ fn linreg_training_is_bit_identical_across_thread_counts() {
 fn linear2_training_is_bit_identical_across_thread_counts() {
     let run = |threads: usize| {
         let (d, k) = (12_000, 4);
-        let engine = NativeEngine::with_models(&[NativeModel {
-            spec: ModelSpec::Linear2 { d, k },
-            opt: OptKind::Sgd,
-            steps_per_call: 4,
-        }])
+        let engine = NativeEngine::with_models(&[NativeModel::from_spec(
+            ModelSpec::Linear2 { d, k },
+            OptKind::Sgd,
+            4,
+        )])
         .with_threads(threads);
         let mut cfg = RunConfig::default();
         cfg.model = format!("linear2_d{d}_k{k}");
@@ -115,6 +117,62 @@ fn linear2_training_is_bit_identical_across_thread_counts() {
         assert_eq!(va.to_bits(), vb.to_bits(), "loss differs at step {sa}");
     }
     assert_eq!(ea.to_bits(), eb.to_bits(), "fp32 eval differs");
+}
+
+/// The transformer LM path (ISSUE 3): training on the interpreter is
+/// bit-identical across thread counts — matmul rows, attention heads,
+/// norm reductions and loss folds all follow the fixed-chunk contract.
+/// A micro config keeps debug-mode runtime low while `m*d*n` work
+/// stays above `PAR_MIN`, so the parallel paths engage.
+#[test]
+fn lm_training_is_bit_identical_across_thread_counts() {
+    let run = |threads: usize| {
+        let program = LmProgram::new(
+            "lm-thread-test",
+            LmConfig { vocab: 256, d_model: 32, n_layers: 2, n_heads: 2, seq_len: 32 },
+            4,
+            2,
+        )
+        .unwrap();
+        let engine = NativeEngine::with_models(&[NativeModel {
+            program: Rc::new(program),
+            opt: OptKind::Adam,
+            steps_per_call: 4,
+        }])
+        .with_threads(threads);
+        let mut cfg = RunConfig::default();
+        cfg.model = "lm-thread-test".into();
+        cfg.method = "lotion".into();
+        cfg.format = "int4".into();
+        cfg.steps = 8;
+        cfg.lr = 3e-3;
+        cfg.lambda = 30.0;
+        cfg.eval_every = 8;
+        cfg.schedule = Schedule::Constant;
+        cfg.seed = 5;
+        let corpus = ZipfMarkovCorpus::generate(30_000, 256, 4, 9);
+        let toks = ByteTokenizer::new().encode(&corpus.bytes);
+        let batcher = TokenBatcher::new(toks, 4, 32, 0.1);
+        let mut trainer = Trainer::new(&engine, cfg, vec![], DataSource::Tokens(batcher)).unwrap();
+        let mut metrics = MetricsLogger::in_memory();
+        for _ in 0..2 {
+            trainer.chunk(&mut metrics).unwrap();
+        }
+        let embed = bits(&trainer.state.fetch("embed").unwrap());
+        let wq = bits(&trainer.state.fetch("layer00.attn_wq").unwrap());
+        let mut eval = Evaluator::new(&engine, &trainer.cfg.model, 7).unwrap();
+        let rr = eval.eval_cast(&trainer, Some(&QuantFormat::int4()), Rounding::Rr).unwrap();
+        (embed, wq, metrics.train_losses.clone(), rr)
+    };
+    let (e1, w1, l1, r1) = run(1);
+    let (e4, w4, l4, r4) = run(4);
+    assert_eq!(e1, e4, "embed differs between thread counts");
+    assert_eq!(w1, w4, "attn_wq differs between thread counts");
+    for ((s1, v1), (s4, v4)) in l1.iter().zip(&l4) {
+        assert_eq!(s1, s4);
+        assert_eq!(v1.to_bits(), v4.to_bits(), "LM loss differs at step {s1}");
+    }
+    assert_eq!(r1.to_bits(), r4.to_bits(), "LM RR eval differs");
 }
 
 /// `LOTION_THREADS`-style auto resolution still trains correctly (the

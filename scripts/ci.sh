@@ -15,6 +15,20 @@ echo "== cargo test -q (LOTION_THREADS=1) =="
 # running the whole suite in both modes makes any divergence fail the gate
 LOTION_THREADS=1 cargo test -q
 
+echo "== lm-tiny native smoke train (default threads) =="
+# the transformer interpreter end-to-end at the CLI surface: a short
+# LOTION train on lm-tiny, offline, native backend only
+./target/release/lotion-rs train --backend native \
+    --set model=lm-tiny --set method=lotion --set quant.format=int4 \
+    --set train.steps=8 --set eval.every=8 --set train.lambda=100 \
+    --set train.lr=0.003 --out /tmp/lotion_ci_lm
+
+echo "== lm-tiny native smoke train (LOTION_THREADS=1) =="
+LOTION_THREADS=1 ./target/release/lotion-rs train --backend native \
+    --set model=lm-tiny --set method=lotion --set quant.format=int4 \
+    --set train.steps=8 --set eval.every=8 --set train.lambda=100 \
+    --set train.lr=0.003 --out /tmp/lotion_ci_lm_t1
+
 echo "== cargo fmt --check =="
 if cargo fmt --version >/dev/null 2>&1; then
     cargo fmt --check

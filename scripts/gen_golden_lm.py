@@ -1,0 +1,222 @@
+#!/usr/bin/env python3
+"""Generate rust/tests/golden_lm.json from the python transformer oracle.
+
+The rust native backend's LM interpreter (`runtime/native/transformer.rs`)
+promises semantic parity with `python/compile/models/transformer.py`
+(forward logits + mean next-token cross-entropy). Parity is
+tolerance-based — f32 summation orders differ between XLA and the rust
+serial folds — so this script:
+
+1. builds deterministic params/tokens from an integer-hash formula the
+   rust test reproduces exactly (no 1.5 MB of weights in the golden
+   file, and no dependence on cross-language PRNG parity);
+2. evaluates the *jax* oracle to produce golden losses + sampled logit
+   fingerprints;
+3. runs a pure-numpy transliteration of the rust interpreter against
+   the oracle, so a drift in either side is caught at generation time
+   and the committed tolerances have measured headroom.
+
+Usage:  python3 scripts/gen_golden_lm.py
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "python"))
+
+from compile.models import transformer  # noqa: E402
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "rust", "tests", "golden_lm.json")
+
+M64 = (1 << 64) - 1
+KNUTH = 0x9E3779B97F4A7C15
+
+
+def mix64(z: int) -> int:
+    """SplitMix64 finalizer — must match util::rng::mix64 bit-for-bit."""
+    z &= M64
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & M64
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & M64
+    return (z ^ (z >> 31)) & M64
+
+
+def unit(h: int) -> float:
+    """Map a 64-bit hash to [-1, 1) exactly as the rust test does."""
+    return (h >> 11) / float(1 << 52) - 1.0
+
+
+def golden_params(cfg: transformer.LMConfig) -> dict:
+    """Deterministic non-degenerate weights from the hash formula."""
+    shapes = {
+        k: v.shape
+        for k, v in transformer.init(
+            __import__("jax").random.PRNGKey(0), cfg
+        ).items()
+    }
+    params = {}
+    for pi, name in enumerate(sorted(shapes)):
+        n = int(np.prod(shapes[name]))
+        base = ((pi + 1) * KNUTH) & M64
+        vals = np.array([unit(mix64(base + j)) for j in range(n)], dtype=np.float64)
+        if name.startswith("layer") and "norm" in name or name == "norm_final":
+            flat = (1.0 + 0.1 * vals).astype(np.float32)
+        else:
+            flat = (0.05 * vals).astype(np.float32)
+        params[name] = flat.reshape(shapes[name])
+    return params
+
+
+def golden_tokens(tag: int, batch: int, t1: int, vocab: int) -> np.ndarray:
+    base = ((tag + 1) * 0xC0FFEE12345678) & M64
+    toks = [mix64(base + j) % vocab for j in range(batch * t1)]
+    return np.array(toks, dtype=np.int32).reshape(batch, t1)
+
+
+def fingerprint_positions(tag: int, rows: int, vocab: int, n: int = 48):
+    out = []
+    for idx in range(n):
+        h = mix64(((tag + 7) * 31 + idx) & M64)
+        out.append((h % rows, (h >> 32) % vocab))
+    return out
+
+
+# --- numpy transliteration of rust/src/runtime/native/transformer.rs ---
+
+
+def rust_forward(params: dict, tokens: np.ndarray, cfg: transformer.LMConfig):
+    """Forward pass mirroring the rust kernels (f32 throughout; numpy's
+    vectorized sums replace the rust serial folds, which is exactly the
+    class of difference the committed tolerances must absorb)."""
+    b, t = tokens.shape
+    d, nh, hd = cfg.d_model, cfg.n_heads, cfg.head_dim
+    half = hd // 2
+    f32 = np.float32
+    h = params["embed"][tokens].astype(f32)  # [B,T,D]
+
+    # rope tables as rust computes them: f64 trig, cast to f32
+    j = np.arange(half, dtype=np.float64)
+    freqs = 10000.0 ** (-j / half)
+    ang = np.arange(t, dtype=np.float64)[:, None] * freqs[None, :]
+    cos = np.cos(ang).astype(f32)[None, :, None, :]
+    sin = np.sin(ang).astype(f32)[None, :, None, :]
+
+    def rms(x, g):
+        r = 1.0 / np.sqrt(np.mean(x * x, axis=-1, keepdims=True) + f32(1e-6))
+        return (x * g * r).astype(f32)
+
+    def rope(x):
+        x = x.reshape(b, t, nh, hd)
+        x1, x2 = x[..., :half], x[..., half:]
+        o = np.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+        return o.astype(f32).reshape(b, t, d)
+
+    for l in range(cfg.n_layers):
+        pre = f"layer{l:02d}."
+        xn = rms(h, params[pre + "norm_attn"])
+        q = rope(xn @ params[pre + "attn_wq"])
+        k = rope(xn @ params[pre + "attn_wk"])
+        v = (xn @ params[pre + "attn_wv"]).reshape(b, t, nh, hd)
+        qh = q.reshape(b, t, nh, hd)
+        kh = k.reshape(b, t, nh, hd)
+        att = np.einsum("bthd,bshd->bhts", qh, kh).astype(f32) * f32(
+            1.0 / np.sqrt(np.float32(hd))
+        )
+        mask = np.tril(np.ones((t, t), dtype=bool))
+        att = np.where(mask[None, None], att, f32(-np.inf))
+        att = att - att.max(axis=-1, keepdims=True)
+        p = np.exp(att, dtype=f32)
+        p = np.where(mask[None, None], p, f32(0.0))
+        p = (p / p.sum(axis=-1, keepdims=True)).astype(f32)
+        o = np.einsum("bhts,bshd->bthd", p, v).astype(f32).reshape(b, t, d)
+        h = h + o @ params[pre + "attn_wo"]
+        xn = rms(h, params[pre + "norm_mlp"])
+        g = (xn @ params[pre + "mlp_wgate"]).astype(f32)
+        sil = g / (1.0 + np.exp(-g, dtype=f32))
+        u = (xn @ params[pre + "mlp_wup"]).astype(f32)
+        h = h + (sil * u) @ params[pre + "mlp_wdown"]
+        h = h.astype(f32)
+    h = rms(h, params["norm_final"])
+    return (h @ params["lm_head"]).astype(f32)
+
+
+def rust_loss(params, batch, cfg):
+    tokens, targets = batch[:, :-1], batch[:, 1:]
+    logits = rust_forward(params, tokens, cfg)
+    mx = logits.max(axis=-1, keepdims=True)
+    z = np.exp(logits - mx, dtype=np.float32).sum(axis=-1)
+    logz = mx[..., 0] + np.log(z)
+    gold = np.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return float(np.mean((logz - gold).astype(np.float64)))
+
+
+def main():
+    import jax.numpy as jnp
+
+    cases = []
+    specs = [
+        ("lm-tiny", transformer.PRESETS["lm-tiny"], 8, 0),
+        ("lm-tiny", transformer.PRESETS["lm-tiny"], 8, 1),
+        (
+            "lm-micro-golden",
+            transformer.LMConfig(
+                "lm-micro-golden", vocab=64, d_model=32, n_layers=2, n_heads=2, seq_len=16
+            ),
+            2,
+            2,
+        ),
+    ]
+    worst_loss, worst_logit = 0.0, 0.0
+    for name, cfg, batch, tag in specs:
+        params = golden_params(cfg)
+        batch_toks = golden_tokens(tag, batch, cfg.seq_len + 1, cfg.vocab)
+        jparams = {k: jnp.asarray(v) for k, v in params.items()}
+        jloss = float(transformer.loss(jparams, jnp.asarray(batch_toks), cfg))
+        jlogits = np.asarray(
+            transformer.forward(jparams, jnp.asarray(batch_toks[:, :-1]), cfg)
+        ).reshape(-1, cfg.vocab)
+
+        # generation-time cross-check: the rust-algorithm transliteration
+        nloss = rust_loss(params, batch_toks, cfg)
+        nlogits = rust_forward(params, batch_toks[:, :-1], cfg).reshape(-1, cfg.vocab)
+        dl = abs(nloss - jloss)
+        dg = float(np.max(np.abs(nlogits - jlogits)))
+        worst_loss, worst_logit = max(worst_loss, dl), max(worst_logit, dg)
+        print(f"{name}/tag{tag}: jax loss {jloss:.6f}  translit dloss={dl:.2e} dlogit={dg:.2e}")
+        assert dl < 2e-4, f"loss drift {dl}"
+        assert dg < 2e-3, f"logit drift {dg}"
+
+        rows = batch * cfg.seq_len
+        fps = [
+            [int(r), int(c), float(jlogits[r, c])]
+            for r, c in fingerprint_positions(tag, rows, cfg.vocab)
+        ]
+        cases.append(
+            {
+                "name": name,
+                "tag": tag,
+                "config": {
+                    "vocab": cfg.vocab,
+                    "d_model": cfg.d_model,
+                    "n_layers": cfg.n_layers,
+                    "n_heads": cfg.n_heads,
+                    "seq_len": cfg.seq_len,
+                },
+                "batch": batch,
+                "loss": jloss,
+                "fingerprints": fps,
+            }
+        )
+
+    with open(OUT, "w") as f:
+        json.dump({"cases": cases}, f, indent=1)
+    print(f"wrote {OUT} ({len(cases)} cases); worst translit diffs: "
+          f"loss {worst_loss:.2e}, logit {worst_logit:.2e}")
+
+
+if __name__ == "__main__":
+    main()
