@@ -116,6 +116,31 @@ fn main() {
         lm_train_bench(&mut b, &engine, "lm-150m-sim", "lm/150m_sim");
     }
 
+    // Pool-dispatch overhead (ISSUE 4): an element-wise kernel on a
+    // tensor just above PAR_MIN, where per-call thread spawning used
+    // to dominate. With the persistent pool the `tall` row tracks pure
+    // wake/join cost against the `t1` serial baseline.
+    {
+        use lotion::util::pool::{chunk_ranges, Pool, PAR_CHUNK, PAR_MIN};
+        let n = PAR_MIN + PAR_CHUNK; // just over the serial cutoff
+        let ranges = chunk_ranges(n, PAR_CHUNK);
+        for (tag, threads) in [("t1", 1usize), ("tall", 0)] {
+            let pool = Pool::new(threads);
+            let mut data = vec![1.0f32; n];
+            b.run_with_items(
+                &format!("pool_dispatch/just_over_par_min/{tag}"),
+                Some(n as f64),
+                &mut || {
+                    pool.for_chunks_mut(&mut data, &ranges, n, |_, r, chunk| {
+                        for (i, v) in chunk.iter_mut().enumerate() {
+                            *v = (*v + (r.start + i) as f32).sqrt();
+                        }
+                    });
+                },
+            );
+        }
+    }
+
     #[cfg(feature = "pjrt")]
     pjrt_benches(&mut b);
 

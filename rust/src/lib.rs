@@ -18,7 +18,7 @@
 //!
 //! Module map (see DESIGN.md §5):
 //!
-//! * [`util`] — PRNG (+ counter-split streams), scoped worker pool,
+//! * [`util`] — PRNG (+ counter-split streams), persistent worker pool,
 //!   statistics, logging, mini property-testing.
 //! * [`formats`] — JSON/CSV substrates (no serde available offline).
 //! * [`tensor`] — host tensors (shape/dtype/bytes) shared by all layers.

@@ -19,10 +19,10 @@ use std::ops::Range;
 
 thread_local! {
     /// RR noise buffer, at most one chunk (`PAR_CHUNK` f32s) long —
-    /// replaces the old full-tensor-length noise `Vec` per call. On
-    /// the serial path it is reused across calls; pooled workers are
-    /// scoped threads, so they each allocate one chunk per cast (a
-    /// persistent-worker pool would remove that too; see ROADMAP).
+    /// replaces the old full-tensor-length noise `Vec` per call. Pool
+    /// workers are persistent (`util::pool`), so both the serial path
+    /// and every worker allocate this once per thread and reuse it
+    /// across all subsequent casts.
     static NOISE: RefCell<Vec<f32>> = RefCell::new(Vec::new());
 }
 

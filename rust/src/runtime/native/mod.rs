@@ -21,9 +21,12 @@
 //!   ([`testbeds`]) and the decoder-only transformer LM
 //!   ([`transformer`], unlocking fig9–fig12 offline).
 //!
-//! Hot loops run on a scoped worker pool (`util::pool`); RNG use is
-//! counter-split (`Rng::stream`), so for a fixed seed the trained
-//! bitstream is identical at every `--threads` setting.
+//! Hot loops run on a persistent worker pool (`util::pool`, long-lived
+//! parked threads — no per-kernel spawn); RNG use is counter-split
+//! (`Rng::stream`), so for a fixed seed the trained bitstream is
+//! identical at every `--threads` setting. Per-model driver scratch
+//! (activations, gradients, cast/Fisher buffers) is cached on the
+//! engine across train calls.
 
 pub mod optim;
 pub mod program;
@@ -43,6 +46,7 @@ use crate::tensor::{DType, HostTensor};
 use crate::util::pool::Pool;
 use crate::util::rng::Rng;
 use anyhow::{anyhow, bail, Result};
+use std::any::Any;
 use std::cell::RefCell;
 use std::collections::{BTreeMap, HashMap};
 use std::path::PathBuf;
@@ -82,6 +86,19 @@ enum Program {
     Init { model: NativeModel },
 }
 
+/// Reusable per-model driver buffers: the program's own scratch (the
+/// LM's activation/backward tensors), the gradient buffers, the
+/// forward-weight copies for the casting methods and the LOTION Fisher
+/// diagonals. Cached on the engine across train calls so the hot path
+/// pays no per-chunk allocation; sizes are stable per model, so the
+/// resize checks below are no-ops after the first chunk.
+struct DriverScratch {
+    program: Box<dyn Any>,
+    wq: Vec<Vec<f32>>,
+    grads: Vec<Vec<f32>>,
+    fisher: Vec<Vec<f32>>,
+}
+
 /// The native executor: manifest-compatible registry + the
 /// model-agnostic method/optimizer driver. Hot kernels run on `pool`
 /// (results are bit-identical at any thread count, see `util::pool`).
@@ -91,6 +108,8 @@ pub struct NativeEngine {
     pool: Pool,
     /// cumulative (calls, exec_s) per program
     timings: RefCell<HashMap<String, (u64, f64)>>,
+    /// per-model reusable train-call buffers (keyed by program name)
+    scratch: RefCell<HashMap<String, DriverScratch>>,
 }
 
 impl Default for NativeEngine {
@@ -159,6 +178,7 @@ impl NativeEngine {
             programs,
             pool: Pool::new(0),
             timings: RefCell::new(HashMap::new()),
+            scratch: RefCell::new(HashMap::new()),
         }
     }
 
@@ -174,6 +194,26 @@ impl NativeEngine {
     /// The resolved worker-thread count.
     pub fn threads(&self) -> usize {
         self.pool.threads()
+    }
+
+    /// Take the model's cached reusable driver buffers, or build a
+    /// fresh set. Callers hand them back via [`NativeEngine::put_scratch`]
+    /// when the call succeeds; an early error simply drops them and
+    /// they rebuild on demand.
+    fn take_scratch(&self, model_name: &str, program: &dyn NativeProgram) -> DriverScratch {
+        match self.scratch.borrow_mut().remove(model_name) {
+            Some(ds) => ds,
+            None => DriverScratch {
+                program: program.make_scratch(),
+                wq: Vec::new(),
+                grads: Vec::new(),
+                fisher: Vec::new(),
+            },
+        }
+    }
+
+    fn put_scratch(&self, model_name: &str, ds: DriverScratch) {
+        self.scratch.borrow_mut().insert(model_name.to_string(), ds);
     }
 
     fn run_train(
@@ -233,18 +273,35 @@ impl NativeEngine {
         // interpreted loop parallelizes and stays bit-identical at any
         // thread count.
         let chunk_seed = key_seed(get("key")?);
-        let mut scratch = program.make_scratch();
         // Forward-weight buffers exist only for the casting methods:
         // PTQ/LOTION train on the FP32 master weights directly, so the
         // LM hot path pays no per-step full-model copy.
         let casts = fmt.is_some() && matches!(method, Method::Qat | Method::Rat);
-        let mut wq: Vec<Vec<f32>> = if casts { params.clone() } else { Vec::new() };
-        let mut grads: Vec<Vec<f32>> = params.iter().map(|p| vec![0.0; p.len()]).collect();
-        let mut fisher: Vec<Vec<f32>> = if method == Method::Lotion && fmt.is_some() {
-            quant_idx.iter().map(|&i| vec![0.0; params[i].len()]).collect()
-        } else {
-            Vec::new()
-        };
+        let needs_fisher = method == Method::Lotion && fmt.is_some();
+        // Take the model's cached driver scratch (or build it fresh);
+        // it goes back into the cache after the chunk, so activations,
+        // gradients, cast copies and Fisher buffers are allocated once
+        // per run instead of once per K-step call.
+        let mut ds = self.take_scratch(&entry.model_name, program);
+        if ds.grads.len() != params.len() {
+            ds.grads = params.iter().map(|p| vec![0.0; p.len()]).collect();
+        }
+        if casts && ds.wq.len() != params.len() {
+            ds.wq = params.clone();
+        } else if !casts {
+            // drop a stale full-model cast copy if a previous method on
+            // this model (e.g. a qat sweep leg) left one cached
+            ds.wq = Vec::new();
+        }
+        if needs_fisher && ds.fisher.len() != quant_idx.len() {
+            ds.fisher = quant_idx.iter().map(|&i| vec![0.0; params[i].len()]).collect();
+        } else if !needs_fisher {
+            ds.fisher = Vec::new();
+        }
+        let scratch = &mut ds.program;
+        let wq = &mut ds.wq;
+        let grads = &mut ds.grads;
+        let fisher = &mut ds.fisher;
         let mut bases = Vec::with_capacity(k);
         let mut totals = Vec::with_capacity(k);
         for i in 0..k {
@@ -309,6 +366,9 @@ impl NativeEngine {
             bases.push(base as f32);
             totals.push(total as f32);
         }
+        // return the reusable buffers to the cache for the next chunk
+        // (an early `?` drops them instead — they rebuild on demand)
+        self.put_scratch(&entry.model_name, ds);
 
         let mut out = Vec::with_capacity(entry.outputs.len());
         let mut params_iter = params.into_iter();
@@ -349,7 +409,11 @@ impl NativeEngine {
             None => None,
         };
         let ctx = EvalCtx { statics: &statics, data: data.as_deref(), pool: &self.pool };
-        let loss = model.program.val_loss(&params, &ctx)? as f32;
+        // evals share the model's cached scratch with train calls, so
+        // periodic evaluation allocates no per-call activation buffers
+        let mut ds = self.take_scratch(&entry.model_name, &*model.program);
+        let loss = model.program.val_loss(&params, &ctx, ds.program.as_mut())? as f32;
+        self.put_scratch(&entry.model_name, ds);
         Ok(vec![value(HostTensor::scalar_f32(loss))])
     }
 
@@ -659,6 +723,33 @@ mod tests {
         assert_ne!(a[0].as_ref(), c[0].as_ref());
         assert_eq!(eng.timing_report().len(), 1);
         assert_eq!(eng.timing_report()[0].2, 3);
+    }
+
+    /// The driver's cross-call scratch cache must not leak statics
+    /// between runs on one engine: training with statics A, then B,
+    /// then A again gives bit-identical outputs for both A calls (a
+    /// stale `sqrt_lam` hoist keyed on length alone would not).
+    #[test]
+    fn scratch_cache_does_not_leak_statics_across_runs() {
+        let eng = NativeEngine::new();
+        let train = eng.manifest().find_train("linreg_d256", "lotion", "int4").unwrap();
+        let d = 256;
+        let mut args = zero_args(train);
+        args[train.input_index("wstar").unwrap()] =
+            value(HostTensor::from_f32(&[d], (0..d).map(|i| (i as f32).cos()).collect()));
+        args[train.input_index("lam").unwrap()] =
+            value(HostTensor::from_f32(&[d], vec![0.5; d]));
+        let a1 = eng.call(train, &args).unwrap();
+        let mut args_b = args.clone();
+        args_b[train.input_index("lam").unwrap()] =
+            value(HostTensor::from_f32(&[d], vec![2.0; d]));
+        let b = eng.call(train, &args_b).unwrap();
+        let a2 = eng.call(train, &args).unwrap();
+        for (x, y) in a1.iter().zip(&a2) {
+            assert_eq!(x.as_ref(), y.as_ref(), "statics leaked through the scratch cache");
+        }
+        // different lam really does move the trained weights
+        assert_ne!(a1[0].as_ref(), b[0].as_ref());
     }
 
     #[test]

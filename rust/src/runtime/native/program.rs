@@ -123,7 +123,11 @@ pub trait NativeProgram {
     /// Fresh parameters in spec order.
     fn init(&self, rng: &mut Rng) -> Vec<Vec<f32>>;
 
-    /// Reusable per-call buffers; the program downcasts its own type.
+    /// Reusable buffers; the program downcasts its own type. The
+    /// driver caches this across train calls *and runs* on one engine,
+    /// so the scratch must not assume fresh zeroing per call, and any
+    /// value derived from call inputs (statics, data) must be
+    /// re-validated against the current inputs before reuse.
     fn make_scratch(&self) -> Box<dyn Any>;
 
     /// Base loss + gradients at the given *forward* weights `wq` (the
@@ -153,7 +157,16 @@ pub trait NativeProgram {
     }
 
     /// Exact (or mean-over-batches) validation loss at the parameters.
-    fn val_loss(&self, params: &[Vec<f32>], ctx: &EvalCtx<'_>) -> Result<f64>;
+    /// `scratch` is the same engine-cached buffer train calls use (from
+    /// [`NativeProgram::make_scratch`]), so periodic evals pay no
+    /// per-call activation allocation either; programs without eval
+    /// buffers just ignore it.
+    fn val_loss(
+        &self,
+        params: &[Vec<f32>],
+        ctx: &EvalCtx<'_>,
+        scratch: &mut dyn Any,
+    ) -> Result<f64>;
 }
 
 #[cfg(test)]

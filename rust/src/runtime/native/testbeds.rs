@@ -17,6 +17,7 @@ use crate::runtime::manifest::{Role, TensorSpec};
 use crate::tensor::DType;
 use crate::util::pool::{chunk_ranges, Pool, PAR_CHUNK, PAR_MIN};
 use crate::util::rng::Rng;
+use crate::util::simd::{dot_lanes, weighted_sq_lanes};
 use anyhow::Result;
 use std::any::Any;
 use std::ops::Range;
@@ -38,9 +39,14 @@ pub enum ModelSpec {
     Linear2 { d: usize, k: usize },
 }
 
-/// Per-call buffers (`sqrt_lam` hoist — filled lazily from the first
-/// step's statics, so the hot loop never re-derives it).
+/// Reusable buffers (`sqrt_lam` hoist — derived lazily from the step
+/// statics, so the hot loop never re-takes the square roots). The
+/// driver now caches scratch across train calls *and runs*, so the
+/// source `lam` is kept alongside and the hoist re-derives whenever
+/// the statics actually change (same-length different-values statics
+/// must not reuse a stale hoist).
 struct TestbedScratch {
+    lam: Vec<f32>,
     sqrt_lam: Vec<f32>,
 }
 
@@ -107,7 +113,7 @@ impl NativeProgram for ModelSpec {
     }
 
     fn make_scratch(&self) -> Box<dyn Any> {
-        Box::new(TestbedScratch { sqrt_lam: Vec::new() })
+        Box::new(TestbedScratch { lam: Vec::new(), sqrt_lam: Vec::new() })
     }
 
     fn loss_grad(
@@ -122,7 +128,8 @@ impl NativeProgram for ModelSpec {
         match self {
             ModelSpec::LinReg { d, batch } => {
                 let s = scratch.downcast_mut::<TestbedScratch>().expect("testbed scratch");
-                if s.sqrt_lam.len() != lam.len() {
+                if s.lam.as_slice() != lam {
+                    s.lam = lam.to_vec();
                     s.sqrt_lam = lam.iter().map(|l| l.sqrt()).collect();
                 }
                 Ok(linreg_loss_grad(
@@ -176,12 +183,10 @@ impl NativeProgram for ModelSpec {
                 let accs = ctx.pool.for_chunks_mut(f1, &row_ranges, k * d, |j, _, frow| {
                     let wj = w2[j] / kf;
                     let row = &w1[j * d..(j + 1) * d];
-                    let mut acc = 0.0f32;
-                    for i in 0..d {
-                        frow[i] = wj * wj * lam[i];
-                        acc += lam[i] * row[i] * row[i];
+                    for (f, &l) in frow.iter_mut().zip(lam) {
+                        *f = wj * wj * l;
                     }
-                    acc / (kf * kf)
+                    weighted_sq_lanes(lam, row) / (kf * kf)
                 });
                 f2.copy_from_slice(&accs);
             }
@@ -189,8 +194,14 @@ impl NativeProgram for ModelSpec {
         Ok(true)
     }
 
-    /// Exact validation loss at the given parameters.
-    fn val_loss(&self, params: &[Vec<f32>], ctx: &EvalCtx<'_>) -> Result<f64> {
+    /// Exact validation loss at the given parameters (closed forms —
+    /// no eval buffers, so the driver scratch is unused).
+    fn val_loss(
+        &self,
+        params: &[Vec<f32>],
+        ctx: &EvalCtx<'_>,
+        _scratch: &mut dyn Any,
+    ) -> Result<f64> {
         let lam = static_slice(ctx.statics, "lam")?;
         let wstar = static_slice(ctx.statics, "wstar")?;
         Ok(match self {
@@ -258,12 +269,9 @@ fn linreg_loss_grad(
             for (x, sl) in xrow.iter_mut().zip(sqrt_lam) {
                 *x = rng.normal_f32() * sl;
             }
-            let mut y = 0.0f32;
-            let mut pred = 0.0f32;
-            for i in 0..d {
-                y += xrow[i] * wstar[i];
-                pred += xrow[i] * wq[i];
-            }
+            // lane-unrolled GEMV dots (fixed order, SIMD-friendly)
+            let y = dot_lanes(&xrow, wstar);
+            let pred = dot_lanes(&xrow, wq);
             let res = pred - y;
             loss_acc += (res as f64) * (res as f64);
             for i in 0..d {
@@ -333,12 +341,10 @@ fn linear2_loss_grad(
     let g2 = pool.for_chunks_mut(gw1, &row_ranges, k * d, |j, _, grow| {
         let wj = w2q[j] / kf;
         let row = &w1q[j * d..(j + 1) * d];
-        let mut acc = 0.0f32;
-        for i in 0..d {
-            grow[i] = wj * g[i];
-            acc += g[i] * row[i];
+        for (o, &gv) in grow.iter_mut().zip(&g[..]) {
+            *o = wj * gv;
         }
-        acc / kf
+        dot_lanes(&g, row) / kf
     });
     gw2.copy_from_slice(&g2);
     loss
@@ -566,7 +572,7 @@ mod tests {
         let statics = vec![("lam".to_string(), lam), ("wstar".to_string(), wstar)];
         let pool = Pool::serial();
         let ctx = EvalCtx { statics: &statics, data: None, pool: &pool };
-        assert_eq!(m.val_loss(&[w1, w2], &ctx).unwrap(), 0.0);
+        assert_eq!(m.val_loss(&[w1, w2], &ctx, m.make_scratch().as_mut()).unwrap(), 0.0);
     }
 
     /// LOTION-relevant sanity: quantized subsets and spec shapes agree

@@ -23,8 +23,10 @@ use crate::runtime::manifest::{Role, TensorSpec};
 use crate::tensor::DType;
 use crate::util::pool::{chunk_ranges, Pool, PAR_CHUNK, PAR_MIN};
 use crate::util::rng::Rng;
+use crate::util::simd::dot_lanes;
 use anyhow::{bail, Result};
 use std::any::Any;
+use std::cell::RefCell;
 use std::ops::Range;
 
 use super::program::{EvalCtx, NativeProgram, StepCtx};
@@ -477,7 +479,13 @@ impl NativeProgram for LmProgram {
         Ok(loss)
     }
 
-    fn val_loss(&self, params: &[Vec<f32>], ctx: &EvalCtx<'_>) -> Result<f64> {
+    fn val_loss(
+        &self,
+        params: &[Vec<f32>],
+        ctx: &EvalCtx<'_>,
+        scratch: &mut dyn Any,
+    ) -> Result<f64> {
+        let s = scratch.downcast_mut::<LmScratch>().expect("lm scratch");
         let data = ctx
             .data
             .ok_or_else(|| anyhow::anyhow!("{}: eval got no token batches", self.name))?;
@@ -485,11 +493,10 @@ impl NativeProgram for LmProgram {
         if data.is_empty() || data.len() % blen != 0 {
             bail!("{}: eval data has {} tokens, not a multiple of {blen}", self.name, data.len());
         }
-        let mut s = LmScratch::alloc(&self.cfg, self.batch);
         let ke = data.len() / blen;
         let mut total = 0.0f64;
         for i in 0..ke {
-            total += self.batch_loss(params, &data[i * blen..(i + 1) * blen], &mut s, ctx.pool)?;
+            total += self.batch_loss(params, &data[i * blen..(i + 1) * blen], s, ctx.pool)?;
         }
         Ok(total / ke as f64)
     }
@@ -619,61 +626,163 @@ fn head_ranges(bh: usize, tt: usize) -> Vec<Range<usize>> {
     (0..bh).map(|i| i * tt..(i + 1) * tt).collect()
 }
 
-/// `y[M,N] = x[M,D] @ w[D,N]`, row-parallel (each output row is one
-/// worker's fixed serial fold).
+/// Register-tile geometry for the blocked matmul kernels: each output
+/// tile of [`TILE_M`] rows x [`TILE_N`] columns accumulates in local
+/// unrolled `f32` registers across the full depth loop (the
+/// autovectorizer turns the `TILE_N`-wide inner loops into SIMD)
+/// instead of streaming the output row through cache once per depth
+/// step. Fixed constants — never derived from the thread count — so
+/// tile boundaries, and with them every summation order, are pure
+/// functions of the problem shape (DESIGN.md §3).
+const TILE_M: usize = 4;
+const TILE_N: usize = 16;
+
+/// `y[M,N] = x[M,D] @ w[D,N]`, row-parallel in fixed [`ROWS_PER_TASK`]
+/// chunks, register-blocked within each chunk. Per output element the
+/// depth summation order is ascending — the same fixed order as the
+/// pre-blocked scalar kernel, so forward logits are bit-identical to
+/// it (and to any thread count).
 fn matmul(x: &[f32], w: &[f32], y: &mut [f32], m: usize, d: usize, n: usize, pool: &Pool) {
+    if m == 0 || n == 0 {
+        return;
+    }
     pool.for_chunks_mut(y, &row_ranges(m, n), m * d * n, |_, r, out| {
         let row0 = r.start / n;
-        for (i, yrow) in out.chunks_mut(n).enumerate() {
-            let xrow = &x[(row0 + i) * d..(row0 + i + 1) * d];
-            yrow.fill(0.0);
-            for (di, &xv) in xrow.iter().enumerate() {
-                let wrow = &w[di * n..(di + 1) * n];
-                for (yv, &wv) in yrow.iter_mut().zip(wrow) {
-                    *yv += xv * wv;
+        let rows = out.len() / n;
+        let mut i0 = 0;
+        while i0 < rows {
+            let mr = TILE_M.min(rows - i0);
+            let mut j0 = 0;
+            while j0 < n {
+                let nb = TILE_N.min(n - j0);
+                let mut acc = [[0.0f32; TILE_N]; TILE_M];
+                if mr == TILE_M && nb == TILE_N {
+                    // full tile: fixed-size loops the compiler unrolls
+                    for di in 0..d {
+                        let wrow: &[f32; TILE_N] =
+                            w[di * n + j0..di * n + j0 + TILE_N].try_into().unwrap();
+                        for ii in 0..TILE_M {
+                            let xv = x[(row0 + i0 + ii) * d + di];
+                            for (a, &wv) in acc[ii].iter_mut().zip(wrow) {
+                                *a += xv * wv;
+                            }
+                        }
+                    }
+                } else {
+                    // edge tile: same loop with clipped bounds
+                    for di in 0..d {
+                        let wrow = &w[di * n + j0..di * n + j0 + nb];
+                        for ii in 0..mr {
+                            let xv = x[(row0 + i0 + ii) * d + di];
+                            for (a, &wv) in acc[ii][..nb].iter_mut().zip(wrow) {
+                                *a += xv * wv;
+                            }
+                        }
+                    }
                 }
+                for ii in 0..mr {
+                    out[(i0 + ii) * n + j0..(i0 + ii) * n + j0 + nb]
+                        .copy_from_slice(&acc[ii][..nb]);
+                }
+                j0 += nb;
+            }
+            i0 += mr;
+        }
+    });
+}
+
+/// `dx[M,D] += dy[M,N] @ w[D,N]^T`, row-parallel. Each (row, di)
+/// element is a lane-unrolled dot of two contiguous rows
+/// ([`dot_lanes`]); `w` rows walk the outer loop so one `w` row is
+/// reused across every row of the chunk. Accumulates — the caller
+/// zeroes `dx` before the first contribution.
+fn matmul_dx(dy: &[f32], w: &[f32], dx: &mut [f32], m: usize, d: usize, n: usize, pool: &Pool) {
+    if m == 0 || d == 0 {
+        return;
+    }
+    pool.for_chunks_mut(dx, &row_ranges(m, d), m * d * n, |_, r, out| {
+        let row0 = r.start / d;
+        let rows = out.len() / d;
+        for di in 0..d {
+            let wrow = &w[di * n..(di + 1) * n];
+            for i in 0..rows {
+                let dyrow = &dy[(row0 + i) * n..(row0 + i + 1) * n];
+                out[i * d + di] += dot_lanes(dyrow, wrow);
             }
         }
     });
 }
 
-/// `dx[M,D] += dy[M,N] @ w[D,N]^T`, row-parallel. Accumulates — the
-/// caller zeroes `dx` before the first contribution.
-fn matmul_dx(dy: &[f32], w: &[f32], dx: &mut [f32], m: usize, d: usize, n: usize, pool: &Pool) {
-    pool.for_chunks_mut(dx, &row_ranges(m, d), m * d * n, |_, r, out| {
-        let row0 = r.start / d;
-        for (i, dxrow) in out.chunks_mut(d).enumerate() {
-            let dyrow = &dy[(row0 + i) * n..(row0 + i + 1) * n];
-            for (di, dxv) in dxrow.iter_mut().enumerate() {
-                let wrow = &w[di * n..(di + 1) * n];
-                let mut acc = 0.0f32;
-                for (dyv, wv) in dyrow.iter().zip(wrow) {
-                    acc += dyv * wv;
-                }
-                *dxv += acc;
-            }
-        }
-    });
+thread_local! {
+    /// Per-worker packed `x^T` stripe for [`matmul_dw`]
+    /// (`rows-per-chunk * M` floats). Pool workers are persistent
+    /// (`util::pool`), so each thread allocates this once and reuses
+    /// it across every train step of the run.
+    static XPACK: RefCell<Vec<f32>> = RefCell::new(Vec::new());
 }
 
 /// `dw[D,N] = x[M,D]^T @ dy[M,N]`, parallel over rows of `dw`: each
 /// worker owns a row range and folds the M data rows itself in fixed
-/// order, so the result is bit-identical at any thread count.
+/// ascending order, so the result is bit-identical at any thread
+/// count (and to the pre-blocked kernel — the per-element order is
+/// unchanged). The worker packs its `x^T` stripe into a thread-local
+/// buffer once, then accumulates register tiles with contiguous loads
+/// from both operands.
 fn matmul_dw(x: &[f32], dy: &[f32], dw: &mut [f32], m: usize, d: usize, n: usize, pool: &Pool) {
+    if d == 0 || n == 0 {
+        return;
+    }
     pool.for_chunks_mut(dw, &row_ranges(d, n), m * d * n, |_, r, out| {
         let drow0 = r.start / n;
         let drows = out.len() / n;
-        out.fill(0.0);
-        for mi in 0..m {
-            let dyrow = &dy[mi * n..(mi + 1) * n];
-            let xrow = &x[mi * d + drow0..mi * d + drow0 + drows];
-            for (di, dwrow) in out.chunks_mut(n).enumerate() {
-                let xv = xrow[di];
-                for (dwv, &dyv) in dwrow.iter_mut().zip(dyrow) {
-                    *dwv += xv * dyv;
+        XPACK.with(|buf| {
+            let mut xt = buf.borrow_mut();
+            xt.resize(drows * m, 0.0);
+            let xt = &mut xt[..drows * m];
+            for mi in 0..m {
+                let xrow = &x[mi * d + drow0..mi * d + drow0 + drows];
+                for (ii, &xv) in xrow.iter().enumerate() {
+                    xt[ii * m + mi] = xv;
                 }
             }
-        }
+            let mut i0 = 0;
+            while i0 < drows {
+                let mr = TILE_M.min(drows - i0);
+                let mut j0 = 0;
+                while j0 < n {
+                    let nb = TILE_N.min(n - j0);
+                    let mut acc = [[0.0f32; TILE_N]; TILE_M];
+                    if mr == TILE_M && nb == TILE_N {
+                        for mi in 0..m {
+                            let dyt: &[f32; TILE_N] =
+                                dy[mi * n + j0..mi * n + j0 + TILE_N].try_into().unwrap();
+                            for ii in 0..TILE_M {
+                                let xv = xt[(i0 + ii) * m + mi];
+                                for (a, &dv) in acc[ii].iter_mut().zip(dyt) {
+                                    *a += xv * dv;
+                                }
+                            }
+                        }
+                    } else {
+                        for mi in 0..m {
+                            let dyt = &dy[mi * n + j0..mi * n + j0 + nb];
+                            for ii in 0..mr {
+                                let xv = xt[(i0 + ii) * m + mi];
+                                for (a, &dv) in acc[ii][..nb].iter_mut().zip(dyt) {
+                                    *a += xv * dv;
+                                }
+                            }
+                        }
+                    }
+                    for ii in 0..mr {
+                        out[(i0 + ii) * n + j0..(i0 + ii) * n + j0 + nb]
+                            .copy_from_slice(&acc[ii][..nb]);
+                    }
+                    j0 += nb;
+                }
+                i0 += mr;
+            }
+        });
     });
 }
 
@@ -813,11 +922,7 @@ fn attn_probs(
             let mut mx = f32::NEG_INFINITY;
             for si in 0..=ti {
                 let krow = &k[(bi * t + si) * d + hi * hd..(bi * t + si) * d + hi * hd + hd];
-                let mut acc = 0.0f32;
-                for j in 0..hd {
-                    acc += qrow[j] * krow[j];
-                }
-                let sc = acc * scale;
+                let sc = dot_lanes(qrow, krow) * scale;
                 prow[si] = sc;
                 if sc > mx {
                     mx = sc;
@@ -929,11 +1034,7 @@ fn attn_bwd_ds(
             let prow = &pblk[ti * t..(ti + 1) * t];
             for si in 0..=ti {
                 let vrow = &v[(bi * t + si) * d + hi * hd..(bi * t + si) * d + hi * hd + hd];
-                let mut acc = 0.0f32;
-                for j in 0..hd {
-                    acc += dorow[j] * vrow[j];
-                }
-                dsrow[si] = acc;
+                dsrow[si] = dot_lanes(dorow, vrow);
             }
             let mut rd = 0.0f32;
             for si in 0..=ti {
@@ -1075,6 +1176,10 @@ fn xent_loss_grad(
     pool: &Pool,
 ) -> f64 {
     let m = tgt.len();
+    if m == 0 {
+        // no rows: zero loss, nothing to fill (0/0 would be NaN below)
+        return 0.0;
+    }
     let inv_m = 1.0 / m as f32;
     let parts = pool.for_chunks_mut(dlogits, &row_ranges(m, v), m * v, |_, rr, out| {
         let row0 = rr.start / v;
@@ -1111,6 +1216,9 @@ fn xent_loss_grad(
 /// fold in chunk order, parallel above [`PAR_MIN`] work.
 fn xent_loss(logits: &[f32], tgt: &[usize], v: usize, pool: &Pool) -> f64 {
     let m = tgt.len();
+    if m == 0 {
+        return 0.0;
+    }
     let part = |r: Range<usize>| -> f64 {
         let mut lsum = 0.0f64;
         for mi in r {
@@ -1330,9 +1438,168 @@ mod tests {
         let ctx1 = EvalCtx { statics: &[], data: Some(&t1), pool: &pool };
         let ctx2 = EvalCtx { statics: &[], data: Some(&t2), pool: &pool };
         let ctxb = EvalCtx { statics: &[], data: Some(&both), pool: &pool };
-        let l1 = prog.val_loss(&params, &ctx1).unwrap();
-        let l2 = prog.val_loss(&params, &ctx2).unwrap();
-        let lb = prog.val_loss(&params, &ctxb).unwrap();
+        let mut scratch = prog.make_scratch();
+        let l1 = prog.val_loss(&params, &ctx1, scratch.as_mut()).unwrap();
+        let l2 = prog.val_loss(&params, &ctx2, scratch.as_mut()).unwrap();
+        let lb = prog.val_loss(&params, &ctxb, scratch.as_mut()).unwrap();
         assert!((lb - 0.5 * (l1 + l2)).abs() < 1e-9);
+    }
+
+    // -- blocked-kernel reference checks ------------------------------------
+
+    fn naive_matmul(x: &[f32], w: &[f32], m: usize, d: usize, n: usize) -> Vec<f32> {
+        let mut y = vec![0.0f32; m * n];
+        for i in 0..m {
+            for di in 0..d {
+                let xv = x[i * d + di];
+                for j in 0..n {
+                    y[i * n + j] += xv * w[di * n + j];
+                }
+            }
+        }
+        y
+    }
+
+    fn naive_dx(dy: &[f32], w: &[f32], m: usize, d: usize, n: usize) -> Vec<f32> {
+        let mut dx = vec![0.0f32; m * d];
+        for i in 0..m {
+            for di in 0..d {
+                let mut acc = 0.0f64;
+                for j in 0..n {
+                    acc += (dy[i * n + j] as f64) * (w[di * n + j] as f64);
+                }
+                dx[i * d + di] = acc as f32;
+            }
+        }
+        dx
+    }
+
+    fn naive_dw(x: &[f32], dy: &[f32], m: usize, d: usize, n: usize) -> Vec<f32> {
+        let mut dw = vec![0.0f32; d * n];
+        for mi in 0..m {
+            for di in 0..d {
+                let xv = x[mi * d + di];
+                for j in 0..n {
+                    dw[di * n + j] += xv * dy[mi * n + j];
+                }
+            }
+        }
+        dw
+    }
+
+    fn filled(len: usize, seed: u64) -> Vec<f32> {
+        let mut v = vec![0.0f32; len];
+        Rng::new(seed).fill_normal(&mut v);
+        v
+    }
+
+    /// The register-blocked kernels must match a naive triple loop on
+    /// shapes that exercise full tiles, edge tiles in both dimensions,
+    /// and sub-tile problems — at multiple thread counts.
+    #[test]
+    fn blocked_matmuls_match_naive_reference() {
+        let shapes: [(usize, usize, usize); 8] = [
+            (1, 1, 1),
+            (3, 5, 7),
+            (4, 8, 16), // exact register tiles
+            (8, 16, 32),
+            (9, 17, 33), // edge tiles both dims
+            (5, 3, 16), // full col tile, partial row tile
+            (16, 1, 15), // depth-1, partial col tile
+            (2, 40, 70),
+        ];
+        for pool in [Pool::serial(), Pool::new(3)] {
+            for (m, d, n) in shapes {
+                let x = filled(m * d, 1);
+                let w = filled(d * n, 2);
+                let dy = filled(m * n, 3);
+
+                let mut y = vec![0.0f32; m * n];
+                matmul(&x, &w, &mut y, m, d, n, &pool);
+                // identical per-element fold order: exact match
+                assert_eq!(y, naive_matmul(&x, &w, m, d, n), "matmul {m}x{d}x{n}");
+
+                let mut dx = filled(m * d, 4); // accumulates on top
+                let base = dx.clone();
+                matmul_dx(&dy, &w, &mut dx, m, d, n, &pool);
+                let want = naive_dx(&dy, &w, m, d, n);
+                for i in 0..m * d {
+                    let got = dx[i] - base[i];
+                    assert!(
+                        (got - want[i]).abs() < 1e-4 * (1.0 + want[i].abs()),
+                        "dx {m}x{d}x{n} [{i}]: {got} vs {}",
+                        want[i]
+                    );
+                }
+
+                let mut dw = filled(d * n, 5); // overwritten
+                matmul_dw(&x, &dy, &mut dw, m, d, n, &pool);
+                assert_eq!(dw, naive_dw(&x, &dy, m, d, n), "dw {m}x{d}x{n}");
+            }
+        }
+    }
+
+    /// Degenerate shapes (ISSUE 4): zero rows/cols/depth must neither
+    /// panic (`chunks_mut(0)`) nor divide by zero, and `m == 0` loss
+    /// folds return 0 instead of NaN.
+    #[test]
+    fn degenerate_shapes_are_safe() {
+        let pool = Pool::new(2);
+        for (m, d, n) in [(0, 4, 4), (4, 0, 4), (4, 4, 0), (0, 0, 0)] {
+            let x = filled(m * d, 1);
+            let w = filled(d * n, 2);
+            let dy = filled(m * n, 3);
+            let mut y = vec![7.0f32; m * n];
+            matmul(&x, &w, &mut y, m, d, n, &pool);
+            if d == 0 {
+                // no depth: a matmul over an empty sum is all zeros
+                assert!(y.iter().all(|&v| v == 0.0));
+            }
+            let mut dx = vec![0.0f32; m * d];
+            matmul_dx(&dy, &w, &mut dx, m, d, n, &pool);
+            if n == 0 {
+                assert!(dx.iter().all(|&v| v == 0.0));
+            }
+            let mut dw = vec![7.0f32; d * n];
+            matmul_dw(&x, &dy, &mut dw, m, d, n, &pool);
+            if m == 0 {
+                // zero data rows must still overwrite dw with zeros
+                assert!(dw.iter().all(|&v| v == 0.0));
+            }
+        }
+        // empty-row loss folds: 0, not 0/0 = NaN
+        let mut dlogits = vec![0.0f32; 0];
+        assert_eq!(xent_loss_grad(&[], &[], &mut dlogits, 11, &pool), 0.0);
+        assert_eq!(xent_loss(&[], &[], 11, &pool), 0.0);
+        // and the underlying partition helper yields no ranges at n=0
+        assert!(chunk_ranges(0, ROWS_PER_TASK).is_empty());
+        assert!(row_ranges(0, 5).is_empty());
+    }
+
+    /// Thread-count invariance of the blocked kernels at a size that
+    /// engages the parallel dispatch (`m*d*n` above `PAR_MIN`).
+    #[test]
+    fn blocked_matmuls_are_thread_count_invariant() {
+        let (m, d, n) = (64, 48, 33); // 101k work, odd col edge
+        let x = filled(m * d, 11);
+        let w = filled(d * n, 12);
+        let dy = filled(m * n, 13);
+        let run = |threads: usize| {
+            let pool = Pool::new(threads);
+            let mut y = vec![0.0f32; m * n];
+            matmul(&x, &w, &mut y, m, d, n, &pool);
+            let mut dx = vec![0.0f32; m * d];
+            matmul_dx(&dy, &w, &mut dx, m, d, n, &pool);
+            let mut dw = vec![0.0f32; d * n];
+            matmul_dw(&x, &dy, &mut dw, m, d, n, &pool);
+            (y, dx, dw)
+        };
+        let (y1, dx1, dw1) = run(1);
+        for threads in [2, 3, 5] {
+            let (y, dx, dw) = run(threads);
+            assert_eq!(y1, y, "matmul differs at {threads} threads");
+            assert_eq!(dx1, dx, "matmul_dx differs at {threads} threads");
+            assert_eq!(dw1, dw, "matmul_dw differs at {threads} threads");
+        }
     }
 }

@@ -5,6 +5,7 @@ pub mod logging;
 pub mod pool;
 pub mod prop;
 pub mod rng;
+pub mod simd;
 pub mod tempdir;
 pub mod stats;
 

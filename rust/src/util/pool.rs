@@ -1,18 +1,33 @@
-//! Scoped worker pool for the native backend's hot loops (std::thread
-//! only — the crate's zero-extra-deps policy keeps `anyhow` the sole
-//! external dependency).
+//! Persistent worker pool for the native backend's hot loops
+//! (std::thread only — the crate's zero-extra-deps policy keeps
+//! `anyhow` the sole external dependency).
+//!
+//! Workers are **long-lived**: `Pool::new(n)` owns `n - 1` parked
+//! threads (spawned lazily on the first parallel dispatch) that wait on
+//! a condvar for the next job instead of being re-spawned per kernel
+//! call. That removes the per-call `std::thread::scope` spawn/join tax
+//! that dominated tensors just above [`PAR_MIN`], and it makes
+//! `thread_local!` buffers genuinely reusable scratch: a worker keeps
+//! its RR-noise and matmul packing buffers across every kernel call of
+//! a training run. The submitting thread participates in each job, so a
+//! width-`n` pool runs chunks on `n` threads total.
 //!
 //! Determinism contract (DESIGN.md §3): callers partition work with
 //! [`chunk_ranges`], whose boundaries are a pure function of the
 //! problem size — **never** of the thread count — and fold any
 //! reductions in chunk-index order. The pool only decides *which
-//! worker* runs each chunk, so results are bit-identical at
-//! `--threads 1` and `--threads N`. Worker panics propagate to the
-//! caller via `std::thread::scope`'s join.
+//! thread* runs each chunk, so results are bit-identical at
+//! `--threads 1` and `--threads N`. A panic inside a chunk is caught on
+//! the worker, the first payload is re-thrown at the call site, and the
+//! workers stay parked and reusable — the pool survives the panic.
 
+use std::any::Any;
+use std::cell::{Cell, UnsafeCell};
 use std::ops::Range;
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
 
 /// Fixed task granularity (elements) for element-wise kernels. A pure
 /// constant so chunk boundaries — and therefore reduction order and
@@ -20,7 +35,8 @@ use std::sync::Mutex;
 pub const PAR_CHUNK: usize = 16 * 1024;
 
 /// Below this much total work a kernel stays on the calling thread
-/// (spawn + scheduling overhead would dominate).
+/// (even with persistent workers, waking and joining them costs more
+/// than small kernels do).
 pub const PAR_MIN: usize = 32 * 1024;
 
 /// Deterministic partition of `0..n` into contiguous ranges of at most
@@ -31,40 +47,309 @@ pub fn chunk_ranges(n: usize, chunk: usize) -> Vec<Range<usize>> {
     (0..n.div_ceil(c)).map(|i| i * c..((i + 1) * c).min(n)).collect()
 }
 
-/// A worker pool of a fixed logical width. Threads are scoped per
-/// call (`std::thread::scope`), so closures may borrow from the
-/// caller's stack and panics resurface at the call site; the `Pool`
-/// value itself is the reusable part (width resolution + serial
-/// fallback policy).
-#[derive(Clone, Copy, Debug)]
+// ---------------------------------------------------------------------------
+// job board: one in-flight job, claimed task-by-task via an atomic
+// ---------------------------------------------------------------------------
+
+/// One submitted job: the borrowed `run one task` closure plus the
+/// claim counter and panic slot. Lives on the submitter's stack for the
+/// duration of [`WorkerSet::run_job`]; workers reach it through a
+/// lifetime-erased pointer on the job board, but only between
+/// registering in `active` (under the state lock) and deregistering,
+/// and the submitter does not return — and so does not drop the job —
+/// until `active` is back to zero.
+struct JobState<'a> {
+    /// next unclaimed task index (claims are unique via `fetch_add`)
+    next: AtomicUsize,
+    n: usize,
+    run_one: &'a (dyn Fn(usize) + Sync),
+    /// first caught panic payload, re-thrown by the submitter
+    panic: Mutex<Option<Box<dyn Any + Send + 'static>>>,
+    /// set after a panic so runners stop claiming further tasks
+    stop: AtomicBool,
+}
+
+thread_local! {
+    /// Identity (the `Shared` address) of the pool whose tasks this
+    /// thread is currently running, `0` when none — so a same-pool
+    /// nested dispatch panics with a diagnosis instead of deadlocking
+    /// on `submit_lock` (see [`WorkerSet::run_job`]). Cross-pool
+    /// nesting merely blocks and is allowed.
+    static RUNNING_POOL: Cell<usize> = Cell::new(0);
+}
+
+/// Run a job's claim loop with [`RUNNING_POOL`] set to `pool_id`,
+/// restoring the previous value afterwards (cross-pool nesting stacks).
+fn run_tasks_tagged(job: &JobState<'_>, pool_id: usize) {
+    let prev = RUNNING_POOL.with(|id| id.replace(pool_id));
+    job.run_tasks();
+    RUNNING_POOL.with(|id| id.set(prev));
+}
+
+impl<'a> JobState<'a> {
+    /// Claim-and-run loop shared by workers and the submitter. Every
+    /// claimed task either completes or records its panic payload, so
+    /// a runner that returns has fully settled each claim it made.
+    fn run_tasks(&self) {
+        let f = self.run_one;
+        while !self.stop.load(Ordering::Relaxed) {
+            let i = self.next.fetch_add(1, Ordering::Relaxed);
+            if i >= self.n {
+                break;
+            }
+            if let Err(payload) = catch_unwind(AssertUnwindSafe(|| f(i))) {
+                self.stop.store(true, Ordering::Relaxed);
+                let mut slot = self.panic.lock().unwrap();
+                if slot.is_none() {
+                    *slot = Some(payload);
+                }
+            }
+        }
+    }
+}
+
+/// The condvar-protected job board workers park on.
+struct PoolState {
+    /// current job (lifetime erased by a thin-pointer cast), null when
+    /// idle; workers may only read it (and register in `active`) while
+    /// holding the state lock
+    job: *const JobState<'static>,
+    /// bumped per job so a worker runs each job at most once
+    epoch: u64,
+    /// runners currently inside `run_tasks` for the published job
+    active: usize,
+    shutdown: bool,
+}
+
+// SAFETY: the raw job pointer is only dereferenced by runners that
+// registered in `active` under the lock; the submitter keeps the
+// pointee alive until `active == 0` (see `run_job`).
+unsafe impl Send for PoolState {}
+
+struct Shared {
+    state: Mutex<PoolState>,
+    /// workers park here waiting for a new epoch
+    work_cv: Condvar,
+    /// the submitter parks here waiting for `active == 0`
+    done_cv: Condvar,
+}
+
+/// The persistent threads behind one [`Pool`]. Workers hold
+/// `Arc<Shared>` only (not `Arc<WorkerSet>`), so dropping the last
+/// `Pool` clone drops the `WorkerSet`, which signals shutdown and joins
+/// the threads — no reference cycle keeps them alive.
+struct WorkerSet {
+    shared: Arc<Shared>,
+    width: usize,
+    /// spawned lazily on the first parallel dispatch
+    handles: Mutex<Vec<JoinHandle<()>>>,
+    /// serializes submitters: one job in flight at a time, so pool
+    /// clones are safe to use from independent threads
+    submit_lock: Mutex<()>,
+}
+
+impl WorkerSet {
+    fn new(width: usize) -> WorkerSet {
+        WorkerSet {
+            shared: Arc::new(Shared {
+                state: Mutex::new(PoolState {
+                    job: std::ptr::null(),
+                    epoch: 0,
+                    active: 0,
+                    shutdown: false,
+                }),
+                work_cv: Condvar::new(),
+                done_cv: Condvar::new(),
+            }),
+            width,
+            handles: Mutex::new(Vec::new()),
+            submit_lock: Mutex::new(()),
+        }
+    }
+
+    /// Spawn the `width - 1` worker threads if they are not up yet.
+    fn ensure_spawned(&self) {
+        let mut handles = self.handles.lock().unwrap();
+        if !handles.is_empty() {
+            return;
+        }
+        for i in 1..self.width {
+            let shared = Arc::clone(&self.shared);
+            let h = std::thread::Builder::new()
+                .name(format!("lotion-pool-{i}"))
+                .spawn(move || worker_loop(shared))
+                .expect("spawn pool worker");
+            handles.push(h);
+        }
+    }
+
+    /// Publish a job of `n` tasks, run tasks on the calling thread too,
+    /// wait until every registered runner has finished, then re-throw
+    /// the first worker panic (the pool itself stays usable).
+    fn run_job(&self, n: usize, run_one: &(dyn Fn(usize) + Sync)) {
+        // fail loudly instead of deadlocking: a same-pool nested
+        // dispatch would block on `submit_lock` held by the very job
+        // that is running this task
+        let pool_id = Arc::as_ptr(&self.shared) as usize;
+        assert!(
+            RUNNING_POOL.with(|id| id.get()) != pool_id,
+            "pool jobs cannot nest: dispatching on the pool that is running this task would \
+             deadlock"
+        );
+        let submit = self.submit_lock.lock().unwrap();
+        self.ensure_spawned();
+        let job = JobState {
+            next: AtomicUsize::new(0),
+            n,
+            run_one,
+            panic: Mutex::new(None),
+            stop: AtomicBool::new(false),
+        };
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            debug_assert!(st.job.is_null(), "job board not idle under submit_lock");
+            // thin-pointer cast erases the closure borrow's lifetime;
+            // sound because this function joins before returning
+            st.job = (&job as *const JobState<'_>).cast::<JobState<'static>>();
+            st.epoch = st.epoch.wrapping_add(1);
+            // wake only as many workers as there are tasks beyond the
+            // submitter's own share — a small job on a wide pool must
+            // not pay a width-proportional wake/relock storm
+            let wake = (self.width - 1).min(n.saturating_sub(1));
+            for _ in 0..wake {
+                self.shared.work_cv.notify_one();
+            }
+        }
+        run_tasks_tagged(&job, pool_id);
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            while st.active > 0 {
+                st = self.shared.done_cv.wait(st).unwrap();
+            }
+            // still holding the lock: no worker can register on the
+            // retiring job between the `active == 0` check and this
+            st.job = std::ptr::null();
+        }
+        // release the submitter slot *before* re-throwing: unwinding
+        // past a held MutexGuard would poison `submit_lock` and turn
+        // one caught task panic into a permanently broken pool
+        drop(submit);
+        if let Some(payload) = job.panic.into_inner().unwrap() {
+            resume_unwind(payload);
+        }
+    }
+}
+
+impl Drop for WorkerSet {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+            self.shared.work_cv.notify_all();
+        }
+        for h in self.handles.lock().unwrap().drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    let pool_id = Arc::as_ptr(&shared) as usize;
+    let mut last_epoch = 0u64;
+    loop {
+        let job_ptr: *const JobState<'static>;
+        {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if !st.job.is_null() && st.epoch != last_epoch {
+                    last_epoch = st.epoch;
+                    st.active += 1;
+                    job_ptr = st.job;
+                    break;
+                }
+                st = shared.work_cv.wait(st).unwrap();
+            }
+        }
+        // SAFETY: registered in `active` under the lock above, so the
+        // submitter keeps the job alive until we deregister below.
+        run_tasks_tagged(unsafe { &*job_ptr }, pool_id);
+        let mut st = shared.state.lock().unwrap();
+        st.active -= 1;
+        if st.active == 0 {
+            shared.done_cv.notify_all();
+        }
+    }
+}
+
+/// A task-input or result slot: each index is claimed exactly once
+/// (unique `fetch_add` claims), so every cell has a single accessor —
+/// the claimant — until the submitter reads results after the join.
+struct Slot<T>(UnsafeCell<Option<T>>);
+// SAFETY: single accessor per slot (see above); T crosses threads.
+unsafe impl<T: Send> Sync for Slot<T> {}
+
+// ---------------------------------------------------------------------------
+// the public handle
+// ---------------------------------------------------------------------------
+
+/// A worker pool of a fixed logical width. The handle is cheap to
+/// clone (it shares the persistent workers); kernels borrow it as
+/// `&Pool`. Width 1 (and [`Pool::serial`]) owns no threads at all —
+/// every kernel takes its serial path on the calling thread.
+#[derive(Clone)]
 pub struct Pool {
     threads: usize,
+    workers: Option<Arc<WorkerSet>>,
+}
+
+impl std::fmt::Debug for Pool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Pool").field("threads", &self.threads).finish()
+    }
 }
 
 impl Pool {
     /// `threads == 0` means auto: `LOTION_THREADS` if set, else all
-    /// available cores. Explicit values are clamped to >= 1.
+    /// available cores. Explicit values are clamped to >= 1. Worker
+    /// threads spawn lazily on the first parallel dispatch and persist
+    /// until the last clone of this pool is dropped.
     pub fn new(threads: usize) -> Pool {
-        Pool { threads: resolve_threads(threads) }
+        let threads = resolve_threads(threads);
+        let workers = (threads > 1).then(|| Arc::new(WorkerSet::new(threads)));
+        Pool { threads, workers }
     }
 
-    /// A single-threaded pool: every kernel takes its serial path.
+    /// A single-threaded pool: every kernel takes its serial path on
+    /// the calling thread; no worker threads exist.
     pub fn serial() -> Pool {
-        Pool { threads: 1 }
+        Pool { threads: 1, workers: None }
     }
 
-    /// The process-wide default pool: `LOTION_THREADS` / core count,
-    /// or whatever [`set_global_threads`] last installed. Backs the
-    /// seed-API quant kernels (`cast_rtn(w, fmt)` etc.), so
-    /// coordinator-side eval casts honor `--threads` too.
+    /// The process-wide default pool, shared (and kept alive) across
+    /// calls so its workers persist. Width: the last explicit
+    /// [`set_global_threads`] value if one was set, else auto
+    /// (`LOTION_THREADS` / core count — cached in its own slot, never
+    /// in the explicit one, so an explicit setting always wins no
+    /// matter when the first kernel ran). Backs the seed-API quant
+    /// kernels (`cast_rtn(w, fmt)` etc.), so coordinator-side eval
+    /// casts honor `--threads` too.
     pub fn global() -> Pool {
-        let t = GLOBAL_THREADS.load(Ordering::Relaxed);
-        if t > 0 {
-            return Pool { threads: t };
+        let explicit = EXPLICIT_THREADS.load(Ordering::Relaxed);
+        let width = if explicit > 0 { explicit } else { auto_threads() };
+        let mut slot = GLOBAL_POOL.lock().unwrap();
+        match &*slot {
+            Some(p) if p.threads == width => p.clone(),
+            _ => {
+                // width changed (or first use): build a fresh pool; the
+                // old one's workers shut down when its last clone drops
+                let p = Pool::new(width);
+                *slot = Some(p.clone());
+                p
+            }
         }
-        let p = Pool::new(0);
-        GLOBAL_THREADS.store(p.threads, Ordering::Relaxed);
-        p
     }
 
     pub fn threads(&self) -> usize {
@@ -72,8 +357,12 @@ impl Pool {
     }
 
     /// Run `f(index, task)` over owned tasks on up to `threads`
-    /// workers; results come back in task order. Task partitioning is
-    /// the caller's job (see the module determinism contract).
+    /// runners (the persistent workers plus the calling thread);
+    /// results come back in task order. Task partitioning is the
+    /// caller's job (see the module determinism contract). Jobs must
+    /// not nest: a task must never dispatch on the pool that is
+    /// running it (kernels are leaves; sequential pool calls from the
+    /// same caller are fine).
     pub fn run<T, R, F>(&self, tasks: Vec<T>, f: F) -> Vec<R>
     where
         T: Send,
@@ -81,29 +370,24 @@ impl Pool {
         F: Fn(usize, T) -> R + Sync,
     {
         let n = tasks.len();
-        if self.threads == 1 || n <= 1 {
-            return tasks.into_iter().enumerate().map(|(i, t)| f(i, t)).collect();
-        }
-        let slots: Vec<Mutex<Option<T>>> =
-            tasks.into_iter().map(|t| Mutex::new(Some(t))).collect();
-        let out: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
-        let next = AtomicUsize::new(0);
-        let workers = self.threads.min(n);
-        std::thread::scope(|s| {
-            for _ in 0..workers {
-                s.spawn(|| loop {
-                    let i = next.fetch_add(1, Ordering::Relaxed);
-                    if i >= n {
-                        break;
-                    }
-                    let task = slots[i].lock().unwrap().take().expect("task taken twice");
-                    let r = f(i, task);
-                    *out[i].lock().unwrap() = Some(r);
-                });
-            }
-        });
+        let workers = match &self.workers {
+            Some(w) if n > 1 => w,
+            _ => return tasks.into_iter().enumerate().map(|(i, t)| f(i, t)).collect(),
+        };
+        let slots: Vec<Slot<T>> =
+            tasks.into_iter().map(|t| Slot(UnsafeCell::new(Some(t)))).collect();
+        let out: Vec<Slot<R>> = (0..n).map(|_| Slot(UnsafeCell::new(None))).collect();
+        let run_one = |i: usize| {
+            // SAFETY: index `i` is claimed exactly once, so this
+            // closure is the only accessor of slot/out `i`; the
+            // submitter reads `out` only after the join.
+            let task = unsafe { (*slots[i].0.get()).take().expect("task taken twice") };
+            let r = f(i, task);
+            unsafe { *out[i].0.get() = Some(r) };
+        };
+        workers.run_job(n, &run_one);
         out.into_iter()
-            .map(|m| m.into_inner().unwrap().expect("worker produced no result"))
+            .map(|s| s.0.into_inner().expect("worker produced no result"))
             .collect()
     }
 
@@ -165,16 +449,45 @@ impl Pool {
     }
 }
 
-static GLOBAL_THREADS: AtomicUsize = AtomicUsize::new(0);
+/// The explicit process-wide width (`--threads`/config); `0` = never
+/// set, resolve auto per call. Kept separate from any lazily-resolved
+/// auto value on purpose: [`Pool::global`] used to latch the resolved
+/// core count into the same slot on first use, which made a
+/// `set_global_threads` that ran *after* an early kernel
+/// indistinguishable from the stale auto value. Explicit now always
+/// wins, whenever it is installed.
+static EXPLICIT_THREADS: AtomicUsize = AtomicUsize::new(0);
 
-/// Install the process-wide default width used by [`Pool::global`]
-/// (`0` resolves from `LOTION_THREADS` / cores immediately). The CLI
-/// calls this with the `--threads` value so the quant kernels' seed
-/// APIs — including the evaluator's RTN/RR eval casts, which run
-/// coordinator-side rather than through an engine — respect the same
-/// knob.
+/// The shared global pool instance, rebuilt when the resolved width
+/// changes (the retired pool's workers exit once its clones drop).
+static GLOBAL_POOL: Mutex<Option<Pool>> = Mutex::new(None);
+
+/// Cached auto width (`LOTION_THREADS` / cores), `0` = not resolved
+/// yet. The probe is process-constant, so one resolution is enough —
+/// and because it lives apart from [`EXPLICIT_THREADS`], caching it
+/// cannot shadow an explicit setting (the bug this PR fixes); it only
+/// spares the seed-API quant kernels an env-var read per call.
+static AUTO_THREADS: AtomicUsize = AtomicUsize::new(0);
+
+fn auto_threads() -> usize {
+    let cached = AUTO_THREADS.load(Ordering::Relaxed);
+    if cached > 0 {
+        return cached;
+    }
+    let resolved = resolve_threads(0);
+    AUTO_THREADS.store(resolved, Ordering::Relaxed);
+    resolved
+}
+
+/// Install the process-wide width used by [`Pool::global`]: `0` means
+/// auto (`LOTION_THREADS` / cores, re-resolved on use), any other value
+/// is explicit and overrides auto from then on — regardless of whether
+/// a kernel already used the global pool. The CLI calls this with the
+/// `--threads` value so the quant kernels' seed APIs — including the
+/// evaluator's RTN/RR eval casts, which run coordinator-side rather
+/// than through an engine — respect the same knob.
 pub fn set_global_threads(threads: usize) {
-    GLOBAL_THREADS.store(resolve_threads(threads), Ordering::Relaxed);
+    EXPLICIT_THREADS.store(threads, Ordering::Relaxed);
 }
 
 fn resolve_threads(requested: usize) -> usize {
@@ -198,6 +511,8 @@ pub fn env_threads() -> Option<usize> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::collections::HashSet;
+    use std::thread::ThreadId;
 
     #[test]
     fn chunk_ranges_cover_with_uneven_tail() {
@@ -233,6 +548,19 @@ mod tests {
         let pool = Pool::new(16);
         let out = pool.run(vec![1, 2], |_, t| t + 1);
         assert_eq!(out, vec![2, 3]);
+    }
+
+    #[test]
+    fn empty_and_single_task_jobs_stay_on_the_caller() {
+        let pool = Pool::new(4);
+        let me = std::thread::current().id();
+        let none: Vec<usize> = pool.run(Vec::<usize>::new(), |_, t| t);
+        assert!(none.is_empty());
+        let one = pool.run(vec![9], |_, t| {
+            assert_eq!(std::thread::current().id(), me);
+            t + 1
+        });
+        assert_eq!(one, vec![10]);
     }
 
     #[test]
@@ -284,16 +612,118 @@ mod tests {
     #[test]
     fn worker_panic_propagates_to_caller() {
         let pool = Pool::new(2);
-        let res = std::panic::catch_unwind(|| {
+        let res = catch_unwind(AssertUnwindSafe(|| {
             pool.run((0..8).collect::<Vec<usize>>(), |_, t| {
                 if t == 5 {
                     panic!("boom in worker");
                 }
                 t
             })
-        });
+        }));
         assert!(res.is_err(), "worker panic must propagate");
     }
+
+    /// ISSUE 4 lifecycle: after a propagated panic the same pool (same
+    /// persistent workers) keeps executing jobs correctly.
+    #[test]
+    fn pool_survives_a_worker_panic() {
+        let pool = Pool::new(3);
+        for round in 0..3 {
+            let res = catch_unwind(AssertUnwindSafe(|| {
+                pool.run((0..64).collect::<Vec<usize>>(), |_, t| {
+                    if t == 40 {
+                        panic!("boom {round}");
+                    }
+                    t
+                })
+            }));
+            assert!(res.is_err(), "round {round}: panic must propagate");
+            let ok = pool.run((0..64).collect::<Vec<usize>>(), |_, t| t * 2);
+            assert_eq!(ok, (0..64).map(|t| t * 2).collect::<Vec<_>>());
+        }
+    }
+
+    /// ISSUE 4 lifecycle: the worker threads persist across many kernel
+    /// calls — the set of thread ids that ran tasks stays bounded by
+    /// the pool width instead of growing per call (the scoped pool
+    /// spawned fresh threads every call).
+    #[test]
+    fn workers_persist_across_many_calls() {
+        let pool = Pool::new(4);
+        let ids = Mutex::new(HashSet::<ThreadId>::new());
+        for _ in 0..50 {
+            // enough tasks that workers reliably participate
+            pool.run((0..256).collect::<Vec<usize>>(), |_, t| {
+                ids.lock().unwrap().insert(std::thread::current().id());
+                std::hint::black_box(t * t)
+            });
+        }
+        let distinct = ids.lock().unwrap().len();
+        // caller + at most (width - 1) persistent workers; with scoped
+        // per-call threads this would be up to 50 * 4 distinct ids
+        assert!(distinct <= 4, "saw {distinct} distinct runner threads for a width-4 pool");
+    }
+
+    /// ISSUE 4 lifecycle: width-1 pools bypass the workers entirely —
+    /// every task runs on the calling thread and no worker threads are
+    /// ever spawned (`LOTION_THREADS=1` resolves to this same path).
+    #[test]
+    fn serial_and_width_one_pools_run_on_the_caller() {
+        let me = std::thread::current().id();
+        for pool in [Pool::serial(), Pool::new(1)] {
+            assert!(pool.workers.is_none(), "width-1 pool must own no threads");
+            pool.run((0..64).collect::<Vec<usize>>(), |_, t| {
+                assert_eq!(std::thread::current().id(), me, "task left the caller");
+                t
+            });
+            let mut data = vec![0u8; 64];
+            pool.for_chunks_mut(&mut data, &chunk_ranges(64, 8), PAR_MIN, |_, _, c| {
+                assert_eq!(std::thread::current().id(), me);
+                c.fill(1);
+            });
+            assert!(data.iter().all(|&b| b == 1));
+        }
+    }
+
+    /// Regression (ISSUE 4 bugfix): an explicit `set_global_threads`
+    /// must win even when `Pool::global()` already resolved — and
+    /// previously latched — the auto width, and clearing it (0) must
+    /// return to auto resolution.
+    #[test]
+    fn explicit_global_threads_beat_latched_auto() {
+        // serialize against anything else touching the global knob
+        let _guard = GLOBAL_TEST_LOCK.lock().unwrap();
+        set_global_threads(0);
+        let auto_width = Pool::global().threads(); // resolves + caches auto
+        assert!(auto_width >= 1);
+        let explicit = auto_width + 3; // distinct from the cached value
+        set_global_threads(explicit);
+        assert_eq!(
+            Pool::global().threads(),
+            explicit,
+            "explicit --threads was ignored in favor of the latched auto width"
+        );
+        // the rebuilt pool must actually execute at the new width
+        let out = Pool::global().run((0..16).collect::<Vec<usize>>(), |_, t| t + 1);
+        assert_eq!(out, (1..17).collect::<Vec<_>>());
+        set_global_threads(0);
+        assert_eq!(Pool::global().threads(), auto_width, "0 must restore auto resolution");
+    }
+
+    /// Repeated `Pool::global()` calls at a stable width share one
+    /// worker set (the pool is cached, not rebuilt per call).
+    #[test]
+    fn global_pool_is_shared_at_stable_width() {
+        let _guard = GLOBAL_TEST_LOCK.lock().unwrap();
+        set_global_threads(2);
+        let a = Pool::global();
+        let b = Pool::global();
+        let (wa, wb) = (a.workers.as_ref().unwrap(), b.workers.as_ref().unwrap());
+        assert!(Arc::ptr_eq(wa, wb), "same width must reuse the cached worker set");
+        set_global_threads(0);
+    }
+
+    static GLOBAL_TEST_LOCK: Mutex<()> = Mutex::new(());
 
     #[test]
     fn zero_resolves_to_at_least_one() {

@@ -1,0 +1,124 @@
+//! Lane-unrolled reduction helpers for the hot kernels (no intrinsics,
+//! no deps — plain loops shaped so the autovectorizer keeps the
+//! accumulators in SIMD registers).
+//!
+//! Determinism (DESIGN.md §3): [`LANES`] is a fixed constant, so the
+//! summation order of every helper — lane-strided partials folded in
+//! lane order, scalar tail appended last — is a pure function of the
+//! input length. Nothing here depends on the thread count; results are
+//! bit-identical wherever the call runs.
+
+/// Independent accumulator lanes in the reduction helpers. Wide enough
+/// to fill one AVX register (or two SSE registers) of `f32`s and to
+/// break the serial FP dependency chain; never derived from the
+/// machine, so the reduction order is portable.
+pub const LANES: usize = 8;
+
+/// `sum_i a[i] * b[i]` with [`LANES`] independent accumulators: lane
+/// `l` sums elements `l, l + LANES, ...`; lanes fold in ascending lane
+/// order and the `len % LANES` tail is added last.
+#[inline]
+pub fn dot_lanes(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f32; LANES];
+    let mut ach = a.chunks_exact(LANES);
+    let mut bch = b.chunks_exact(LANES);
+    for (av, bv) in (&mut ach).zip(&mut bch) {
+        let av: &[f32; LANES] = av.try_into().unwrap();
+        let bv: &[f32; LANES] = bv.try_into().unwrap();
+        for l in 0..LANES {
+            acc[l] += av[l] * bv[l];
+        }
+    }
+    let mut s = 0.0f32;
+    for l in 0..LANES {
+        s += acc[l];
+    }
+    for (av, bv) in ach.remainder().iter().zip(bch.remainder()) {
+        s += av * bv;
+    }
+    s
+}
+
+/// `sum_i w[i] * x[i] * x[i]` (a diagonally-weighted squared norm —
+/// the linear2 exact-Fisher reduction), with the same fixed lane
+/// order as [`dot_lanes`].
+#[inline]
+pub fn weighted_sq_lanes(w: &[f32], x: &[f32]) -> f32 {
+    debug_assert_eq!(w.len(), x.len());
+    let mut acc = [0.0f32; LANES];
+    let mut wch = w.chunks_exact(LANES);
+    let mut xch = x.chunks_exact(LANES);
+    for (wv, xv) in (&mut wch).zip(&mut xch) {
+        let wv: &[f32; LANES] = wv.try_into().unwrap();
+        let xv: &[f32; LANES] = xv.try_into().unwrap();
+        for l in 0..LANES {
+            acc[l] += wv[l] * xv[l] * xv[l];
+        }
+    }
+    let mut s = 0.0f32;
+    for l in 0..LANES {
+        s += acc[l];
+    }
+    for (wv, xv) in wch.remainder().iter().zip(xch.remainder()) {
+        s += wv * xv * xv;
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn serial_dot(a: &[f32], b: &[f32]) -> f64 {
+        a.iter().zip(b).map(|(x, y)| (*x as f64) * (*y as f64)).sum()
+    }
+
+    #[test]
+    fn dot_matches_serial_within_f32_tolerance() {
+        let mut rng = Rng::new(3);
+        for n in [0usize, 1, 7, 8, 9, 63, 64, 65, 1000] {
+            let mut a = vec![0.0f32; n];
+            let mut b = vec![0.0f32; n];
+            rng.fill_normal(&mut a);
+            rng.fill_normal(&mut b);
+            let got = dot_lanes(&a, &b) as f64;
+            let want = serial_dot(&a, &b);
+            assert!(
+                (got - want).abs() < 1e-4 * (1.0 + want.abs()),
+                "n={n}: got {got} want {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn dot_is_deterministic_and_exact_on_integers() {
+        // integer-valued f32s sum exactly, so any two orders agree
+        let a: Vec<f32> = (0..37).map(|i| (i % 5) as f32).collect();
+        let b: Vec<f32> = (0..37).map(|i| (i % 3) as f32).collect();
+        assert_eq!(dot_lanes(&a, &b) as f64, serial_dot(&a, &b));
+        assert_eq!(dot_lanes(&a, &b).to_bits(), dot_lanes(&a, &b).to_bits());
+    }
+
+    #[test]
+    fn weighted_sq_matches_serial() {
+        let mut rng = Rng::new(9);
+        for n in [0usize, 5, 8, 100, 257] {
+            let mut w = vec![0.0f32; n];
+            let mut x = vec![0.0f32; n];
+            rng.fill_normal(&mut w);
+            rng.fill_normal(&mut x);
+            let got = weighted_sq_lanes(&w, &x) as f64;
+            let want: f64 = w
+                .iter()
+                .zip(&x)
+                .map(|(wv, xv)| (*wv as f64) * (*xv as f64) * (*xv as f64))
+                .sum();
+            assert!(
+                (got - want).abs() < 1e-3 * (1.0 + want.abs()),
+                "n={n}: got {got} want {want}"
+            );
+        }
+    }
+}

@@ -175,6 +175,50 @@ fn lm_training_is_bit_identical_across_thread_counts() {
     assert_eq!(r1.to_bits(), r4.to_bits(), "LM RR eval differs");
 }
 
+/// ISSUE 4 (persistent pool + driver scratch cache): one engine reused
+/// across two independent runs must match a fresh engine bit-for-bit.
+/// The long-lived pool workers and the cached per-model scratch
+/// (activations, gradients, `sqrt_lam` hoist) may carry *capacity*
+/// between runs, but never values.
+#[test]
+fn engine_reuse_across_runs_is_stateless() {
+    let run = |engine: &NativeEngine| {
+        let mut cfg = RunConfig::default();
+        cfg.model = "linreg_d2000".into();
+        cfg.method = "lotion".into();
+        cfg.format = "int4".into();
+        cfg.steps = 8;
+        cfg.lr = 0.05;
+        cfg.lambda = 1.0;
+        cfg.eval_every = 8;
+        cfg.schedule = Schedule::Constant;
+        cfg.seed = 3;
+        let (statics, _, _) = synth_statics(2000, 17);
+        let mut trainer = Trainer::new(engine, cfg, statics, DataSource::InGraph).unwrap();
+        let mut metrics = MetricsLogger::in_memory();
+        for _ in 0..2 {
+            trainer.chunk(&mut metrics).unwrap();
+        }
+        (bits(&trainer.state.fetch("w").unwrap()), metrics.train_losses.clone())
+    };
+    let mk = || {
+        NativeEngine::with_models(&[NativeModel::from_spec(
+            ModelSpec::LinReg { d: 2000, batch: 16 },
+            OptKind::Sgd,
+            4,
+        )])
+        .with_threads(2)
+    };
+    let shared = mk();
+    let (w1, l1) = run(&shared);
+    let (w2, l2) = run(&shared); // same engine: cached scratch + live workers
+    let (wf, lf) = run(&mk());
+    assert_eq!(w1, w2, "second run on a reused engine diverged");
+    assert_eq!(w1, wf, "reused engine diverged from a fresh engine");
+    assert_eq!(l1, l2);
+    assert_eq!(l1, lf);
+}
+
 /// `LOTION_THREADS`-style auto resolution still trains correctly (the
 /// CI gate runs the whole suite once at `LOTION_THREADS=1` and once at
 /// default; this test exercises the auto path explicitly).

@@ -15,6 +15,12 @@ echo "== cargo test -q (LOTION_THREADS=1) =="
 # running the whole suite in both modes makes any divergence fail the gate
 LOTION_THREADS=1 cargo test -q
 
+echo "== threading suite (oversubscribed LOTION_THREADS=16) =="
+# more workers than cores shakes out persistent-pool races (lost
+# wakeups, stale-epoch claims) that hide at the natural width; the
+# threading suite re-checks bit-identity under that pressure
+LOTION_THREADS=16 cargo test -q --test threading
+
 echo "== lm-tiny native smoke train (default threads) =="
 # the transformer interpreter end-to-end at the CLI surface: a short
 # LOTION train on lm-tiny, offline, native backend only
@@ -34,6 +40,15 @@ if cargo fmt --version >/dev/null 2>&1; then
     cargo fmt --check
 else
     echo "rustfmt not installed on this toolchain; skipping format check"
+fi
+
+echo "== bench trajectory (scripts/bench.sh) =="
+# BENCH_runtime_micro.json at the repo root per PR (ROADMAP); skip with
+# LOTION_CI_BENCH=0 when iterating locally
+if [[ "${LOTION_CI_BENCH:-1}" == "1" ]]; then
+    ./scripts/bench.sh
+else
+    echo "LOTION_CI_BENCH=0; skipping bench trajectory"
 fi
 
 echo "ci.sh: all green"
