@@ -72,7 +72,7 @@ fn main() -> Result<()> {
     let mut trainer = Trainer::new(engine, cfg.clone(), vec![], DataSource::Tokens(batcher))?;
     println!("init + state setup: {:.1}s", t0.elapsed().as_secs_f64());
 
-    let mut eval = Evaluator::new(engine, &cfg.model, cfg.seed)?;
+    let mut eval = Evaluator::new(cfg.seed);
     let mut metrics = MetricsLogger::to_file(Path::new("results/e2e/metrics.jsonl"))?;
     let t0 = std::time::Instant::now();
     while trainer.step < cfg.steps {

@@ -39,7 +39,7 @@ fn main() -> Result<()> {
 
         let (statics, _, _) = synth_statics(D, 42);
         let mut trainer = Trainer::new(engine, cfg.clone(), statics, DataSource::InGraph)?;
-        let mut eval = Evaluator::new(engine, &cfg.model, 0)?;
+        let mut eval = Evaluator::new(0);
         let mut metrics = MetricsLogger::in_memory();
         trainer.run(&mut eval, &mut metrics)?;
         println!(

@@ -42,7 +42,7 @@ fn main() -> Result<()> {
     // 4. train; quantized eval (RTN + RR casts in rust) happens
     //    automatically at every eval point
     let mut trainer = Trainer::new(engine, cfg.clone(), statics, DataSource::InGraph)?;
-    let mut eval = Evaluator::new(engine, &cfg.model, cfg.seed)?;
+    let mut eval = Evaluator::new(cfg.seed);
     let mut metrics = MetricsLogger::in_memory();
     trainer.run(&mut eval, &mut metrics)?;
 

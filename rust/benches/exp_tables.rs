@@ -80,7 +80,7 @@ fn workload(
         trainer.chunk(&mut metrics).unwrap();
     });
     // quantized eval latency (cast in rust + eval program)
-    let mut eval = Evaluator::new(engine, model, 0).unwrap();
+    let mut eval = Evaluator::new(0);
     let fmt = QuantFormat::parse(if format == "none" { "int4" } else { format }, 0).unwrap();
     bench.run(&format!("{tag}/quantized_eval"), || {
         std::hint::black_box(eval.eval_cast(&trainer, Some(&fmt), Rounding::Rtn).unwrap());

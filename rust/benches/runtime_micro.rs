@@ -141,6 +141,48 @@ fn main() {
         }
     }
 
+    // Sweep-shard scaling (ISSUE 5): an 8-point LR grid over a small
+    // linreg, serial vs 4 sweep workers on factory-spawned engines.
+    // Per-engine kernel pools are pinned to 1 thread so the t4/t1
+    // ratio isolates sweep-level sharding; outputs are bit-identical
+    // across rows — only wall clock moves.
+    {
+        use lotion::coordinator::sweep::lr_sweep;
+        use lotion::runtime::native::NativeFactory;
+
+        let spec = ModelSpec::LinReg { d: 4_000, batch: 32 };
+        let factory = NativeFactory::new(vec![NativeModel::from_spec(spec, OptKind::Sgd, 8)], 1);
+        let mut cfg = RunConfig::default();
+        cfg.name = "bench_sweep".into();
+        cfg.model = "linreg_d4000".into();
+        cfg.method = "lotion".into();
+        cfg.format = "int4".into();
+        cfg.eval_formats = vec!["int4".into()];
+        cfg.steps = 32;
+        cfg.lambda = 1.0;
+        cfg.eval_every = 32;
+        cfg.schedule = Schedule::Constant;
+        let lrs: Vec<f64> = (1..=8).map(|i| 0.02 + 0.03 * i as f64).collect();
+        for (tag, workers) in [("t1", 1usize), ("t4", 4)] {
+            b.run_with_items(&format!("sweep/linreg_grid8/{tag}"), Some(8.0), &mut || {
+                let res = lr_sweep(
+                    &factory,
+                    workers,
+                    &cfg,
+                    &lrs,
+                    "int4",
+                    "rtn",
+                    &|_: &dyn Executor, _: &RunConfig| {
+                        let (statics, _, _) = synth_statics(4_000, 42);
+                        Ok((statics, DataSource::InGraph))
+                    },
+                )
+                .expect("bench sweep");
+                assert!(res.iter().all(|r| !r.diverged));
+            });
+        }
+    }
+
     #[cfg(feature = "pjrt")]
     pjrt_benches(&mut b);
 

@@ -94,6 +94,16 @@ impl Args {
             bail!("unknown backend {b:?} (expected auto|native|pjrt)")
         }
     }
+
+    /// The `--sweep-workers N` knob shared by the sweep-shaped
+    /// subcommands (`sweep`, `exp`). Returns the *requested* width —
+    /// flag first, then `cfg_default` (the `[sweep] workers` config
+    /// value); `0` is "unresolved" and falls through to
+    /// `LOTION_SWEEP_WORKERS` / serial inside
+    /// `coordinator::sweep::resolve_sweep_workers`.
+    pub fn sweep_workers(&self, cfg_default: usize) -> Result<usize> {
+        self.usize_or("sweep-workers", cfg_default)
+    }
 }
 
 #[cfg(test)]
@@ -136,5 +146,13 @@ mod tests {
         assert_eq!(parse("train --backend native").backend().unwrap(), "native");
         assert_eq!(parse("train --backend pjrt").backend().unwrap(), "pjrt");
         assert!(parse("train --backend tpu").backend().is_err());
+    }
+
+    #[test]
+    fn sweep_workers_flag_beats_config_default() {
+        assert_eq!(parse("sweep --sweep-workers 4").sweep_workers(2).unwrap(), 4);
+        assert_eq!(parse("sweep").sweep_workers(2).unwrap(), 2);
+        assert_eq!(parse("sweep").sweep_workers(0).unwrap(), 0);
+        assert!(parse("sweep --sweep-workers four").sweep_workers(0).is_err());
     }
 }

@@ -45,6 +45,11 @@ pub struct RunConfig {
     /// var, else all cores). Output is bit-identical at any value —
     /// a pure throughput knob (DESIGN.md §3).
     pub threads: usize,
+    /// sweep-level worker threads (grid points in flight, each on its
+    /// own factory-spawned engine): 0 = auto (`LOTION_SWEEP_WORKERS`
+    /// env var, else 1 — serial). Sweep output is bit-identical at any
+    /// value — a pure throughput knob (DESIGN.md §3).
+    pub sweep_workers: usize,
 }
 
 impl Default for RunConfig {
@@ -69,6 +74,7 @@ impl Default for RunConfig {
             results_dir: "results".into(),
             checkpoint_every: 0,
             threads: 0,
+            sweep_workers: 0,
         }
     }
 }
@@ -115,6 +121,7 @@ impl RunConfig {
             results_dir: doc.str_or("paths.results", &d.results_dir),
             checkpoint_every: doc.usize_or("train.checkpoint_every", 0),
             threads: doc.usize_or("train.threads", 0),
+            sweep_workers: doc.usize_or("sweep.workers", 0),
         };
         cfg.validate()?;
         Ok(cfg)
@@ -180,6 +187,14 @@ mod tests {
     fn threads_from_doc() {
         let doc = TomlDoc::parse("[train]\nthreads = 3").unwrap();
         assert_eq!(RunConfig::from_doc(&doc).unwrap().threads, 3);
+    }
+
+    #[test]
+    fn sweep_workers_from_doc() {
+        let doc = TomlDoc::parse("[sweep]\nworkers = 4").unwrap();
+        assert_eq!(RunConfig::from_doc(&doc).unwrap().sweep_workers, 4);
+        // default: 0 (auto — LOTION_SWEEP_WORKERS, else serial)
+        assert_eq!(RunConfig::default().sweep_workers, 0);
     }
 
     #[test]

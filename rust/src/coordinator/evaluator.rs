@@ -2,11 +2,12 @@
 //! snapshot the FP32 weights, cast the quantized subset with RTN or
 //! randomized rounding *in rust* (the `quant` substrate), and run the
 //! FP32 eval program on the cast weights. Backend-agnostic: the cast
-//! happens on host tensors before they enter `Executor::call`.
+//! is a parameter map handed to
+//! [`Session::eval_loss`](crate::runtime::Session::eval_loss), applied
+//! on host tensors before they enter `Executor::call`.
 
 use crate::quant::{cast, QuantFormat, Rounding};
-use crate::runtime::executor::{value, Executor, Value};
-use crate::runtime::manifest::{ArtifactEntry, Role};
+use crate::runtime::executor::{value, Value};
 use crate::util::rng::Rng;
 use anyhow::{anyhow, Result};
 
@@ -14,7 +15,6 @@ use super::metrics::MetricsLogger;
 use super::trainer::{DataSource, Trainer};
 
 pub struct Evaluator {
-    pub entry: ArtifactEntry,
     /// eval RNG for RR casts and val batches — independent of training
     pub rng: Rng,
     /// fixed val chunk per evaluator (same data at every eval point, so
@@ -23,9 +23,12 @@ pub struct Evaluator {
 }
 
 impl Evaluator {
-    pub fn new(engine: &dyn Executor, model: &str, seed: u64) -> Result<Evaluator> {
-        let entry = engine.manifest().find_eval(model)?.clone();
-        Ok(Evaluator { entry, rng: Rng::new(seed ^ 0xE7A1_5EED), val_tokens: None })
+    /// An evaluator for one run. The eval program itself lives in the
+    /// run's [`Session`](crate::runtime::Session); the evaluator owns
+    /// only what is measurement-shaped: the eval RNG and the pinned
+    /// validation chunk.
+    pub fn new(seed: u64) -> Evaluator {
+        Evaluator { rng: Rng::new(seed ^ 0xE7A1_5EED), val_tokens: None }
     }
 
     /// Evaluate the current weights with a given cast. `format == None`
@@ -36,50 +39,35 @@ impl Evaluator {
         format: Option<&QuantFormat>,
         rounding: Rounding,
     ) -> Result<f64> {
-        let engine = trainer.engine;
-        let specs = self.entry.inputs.clone();
-        // snapshot params (values are Rc-shared host buffers)
-        let mut args: Vec<Value> = Vec::with_capacity(specs.len());
-        for spec in &specs {
-            let arg = match spec.role {
-                Role::Param => {
-                    let v = trainer.state.value(&spec.name)?;
-                    if let Some(fmt) = format {
-                        if trainer.quantized_keys().iter().any(|k| k == &spec.name) {
-                            let mut host = v.as_ref().clone();
-                            let mut rng = self.rng.fork(1);
-                            host.map_f32_inplace(|w| cast(w, fmt, rounding, &mut rng));
-                            value(host)
-                        } else {
-                            v.clone()
-                        }
-                    } else {
-                        v.clone()
-                    }
-                }
-                Role::Static => trainer
-                    .statics
-                    .iter()
-                    .find(|(n, _)| n == &spec.name)
-                    .map(|(_, v)| v.clone())
-                    .ok_or_else(|| anyhow!("missing static {:?}", spec.name))?,
-                Role::Data => self.val_chunk(trainer)?,
-                other => return Err(anyhow!("unexpected eval input role {other:?}")),
+        let data = if trainer.session.eval_wants_data() {
+            Some(self.val_chunk(trainer)?)
+        } else {
+            None
+        };
+        let quantized = trainer.quantized_keys();
+        let rng = &mut self.rng;
+        trainer.session.eval_loss(data, &mut |spec, v| {
+            let fmt = match format {
+                Some(f) if quantized.iter().any(|k| k == &spec.name) => f,
+                _ => return Ok(v.clone()),
             };
-            args.push(arg);
-        }
-        let out = engine.call_to_host(&self.entry, &args, &["val_loss"])?;
-        Ok(out[0].scalar_to_f32() as f64)
+            let mut host = v.as_ref().clone();
+            let mut rng = rng.fork(1);
+            host.map_f32_inplace(|w| cast(w, fmt, rounding, &mut rng));
+            Ok(value(host))
+        })
     }
 
     fn val_chunk(&mut self, trainer: &Trainer) -> Result<Value> {
         if let Some(v) = &self.val_tokens {
             return Ok(v.clone());
         }
-        let ke = self.entry.eval_batches.max(1);
+        let ke = trainer.session.eval_entry().eval_batches.max(1);
         let v = match &trainer.data {
             DataSource::Tokens(b) => value(b.val_chunk(ke, &mut self.rng)),
-            DataSource::InGraph => return Err(anyhow!("eval program wants data for a synthetic task")),
+            DataSource::InGraph => {
+                return Err(anyhow!("eval program wants data for a synthetic task"))
+            }
         };
         self.val_tokens = Some(v.clone());
         Ok(v)

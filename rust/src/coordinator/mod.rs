@@ -4,7 +4,8 @@
 //! * [`evaluator`] — quantized evaluation (RTN/RR casts in rust,
 //!   FP32 eval executable).
 //! * [`metrics`] — JSONL/CSV run logs.
-//! * [`sweep`] — learning-rate sweeps (best-per-method, as the paper
+//! * [`sweep`] — sharded grid sweeps over factory-spawned engines
+//!   (best-per-method over the App. A.5 LR grids, as the paper
 //!   reports).
 
 pub mod evaluator;
@@ -14,4 +15,5 @@ pub mod trainer;
 
 pub use evaluator::Evaluator;
 pub use metrics::MetricsLogger;
+pub use sweep::{SweepPoint, SweepResult, SweepRunner};
 pub use trainer::{DataSource, Trainer};

@@ -1,72 +1,278 @@
-//! Learning-rate sweeps. The paper reports the best run per method
-//! (App. A.5 grids); this module runs a grid of RunConfigs and selects
-//! by final quantized validation loss.
+//! Grid sweeps. The paper reports every LM/testbed result as the best
+//! run over an App. A.5 learning-rate grid, so *sweep* throughput —
+//! not single-run throughput — gates reproduction wall clock. The
+//! [`SweepRunner`] makes the grid a first-class sharded workload: grid
+//! points fan out across worker threads on `util::pool`, each worker
+//! owns an engine spawned from an
+//! [`ExecutorFactory`](crate::runtime::ExecutorFactory), and results
+//! fold back in fixed grid order.
+//!
+//! Determinism contract (two-level, DESIGN.md §3): each grid point is
+//! an independent run — its own session on its own (or the caller's)
+//! engine, its own config-seeded RNG, inputs rebuilt per point — so the
+//! sharded sweep is **bit-identical** to the serial one at any
+//! `--sweep-workers` setting, on top of the kernel-level guarantee that
+//! each run is bit-identical at any `--threads` setting. The worker
+//! pool only decides *which thread* runs a grid point, never what the
+//! point computes; scores/metrics are folded in grid order.
 
 use crate::config::RunConfig;
-use crate::runtime::Executor;
+use crate::runtime::{Executor, ExecutorFactory};
+use crate::tensor::HostTensor;
+use crate::util::pool::Pool;
+use crate::util::rng::Rng;
 use anyhow::Result;
+use std::cell::RefCell;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use super::evaluator::Evaluator;
 use super::metrics::MetricsLogger;
 use super::trainer::{DataSource, Trainer};
-use crate::tensor::HostTensor;
+
+/// Per-point input builder: rebuilds (statics, data source) on the
+/// worker's engine so every grid point sees an identical, freshly
+/// constructed data stream regardless of which thread runs it. `Sync`
+/// because workers call it concurrently.
+pub type SweepInputs =
+    dyn Fn(&dyn Executor, &RunConfig) -> Result<(Vec<(String, HostTensor)>, DataSource)> + Sync;
+
+/// One grid point: a full run config plus its display label and an
+/// optional JSONL metrics sink.
+pub struct SweepPoint {
+    pub label: String,
+    pub cfg: RunConfig,
+    pub metrics_path: Option<PathBuf>,
+}
+
+impl SweepPoint {
+    pub fn new(label: impl Into<String>, cfg: RunConfig) -> SweepPoint {
+        SweepPoint { label: label.into(), cfg, metrics_path: None }
+    }
+
+    pub fn with_metrics_path(mut self, path: PathBuf) -> SweepPoint {
+        self.metrics_path = Some(path);
+        self
+    }
+}
 
 /// Outcome of one run inside a sweep.
 pub struct SweepResult {
+    pub label: String,
     pub lr: f64,
     pub metrics: MetricsLogger,
-    /// final quantized val loss in the run's primary (format, rounding)
+    /// final quantized val loss in the sweep's scoring (format, rounding);
+    /// +inf for diverged runs (NaN is mapped to +inf at this source, so
+    /// downstream ordering never sees it)
     pub score: f64,
     pub diverged: bool,
 }
 
-/// Run `base` at each LR; score by final quantized val loss under
-/// (`score_format`, `score_rounding`). Diverged runs score +inf.
-/// `inputs` rebuilds (statics, data source) per run so every LR sees
-/// identical data streams.
-pub fn lr_sweep(
+/// The `LOTION_SWEEP_WORKERS` environment override (0/unset/garbage =
+/// unset).
+pub fn env_sweep_workers() -> Option<usize> {
+    std::env::var("LOTION_SWEEP_WORKERS")
+        .ok()
+        .and_then(|v| v.trim().parse::<usize>().ok())
+        .filter(|&t| t > 0)
+}
+
+/// Resolve a requested sweep-worker count: explicit values win, `0`
+/// means `LOTION_SWEEP_WORKERS` if set, else 1 (serial). The default is
+/// deliberately serial — each engine owns its own kernel pool, so sweep
+/// sharding multiplies thread demand and is opt-in.
+pub fn resolve_sweep_workers(requested: usize) -> usize {
+    if requested > 0 {
+        return requested;
+    }
+    env_sweep_workers().unwrap_or(1)
+}
+
+/// Monotone id per sweep invocation: tags the per-thread cached engine
+/// so a later sweep (possibly over a different factory) never reuses a
+/// stale one.
+static SWEEP_EPOCH: AtomicU64 = AtomicU64::new(1);
+
+thread_local! {
+    /// The engine owned by this worker thread for the current sweep
+    /// (spawned lazily on its first grid point, reused for the rest).
+    /// `Box<dyn Executor>` is deliberately thread-confined — it never
+    /// leaves this slot.
+    static WORKER_ENGINE: RefCell<Option<(u64, Box<dyn Executor>)>> = RefCell::new(None);
+}
+
+/// Drop guard that clears the calling thread's cached sweep engine —
+/// panic-safe, so a propagated grid-point panic cannot strand an
+/// engine (registry + scratch) in the submitter's thread_local.
+struct ReleaseCallerEngine;
+
+impl Drop for ReleaseCallerEngine {
+    fn drop(&mut self) {
+        WORKER_ENGINE.with(|slot| slot.borrow_mut().take());
+    }
+}
+
+/// A sharded grid runner over factory-spawned engines (module docs).
+pub struct SweepRunner<'f> {
+    factory: &'f dyn ExecutorFactory,
+    workers: usize,
+    /// engine for the serial path: reuse the caller's (warm scratch,
+    /// populated timing report) instead of spawning a throwaway one
+    serial_engine: Option<&'f dyn Executor>,
+}
+
+impl<'f> SweepRunner<'f> {
+    /// `workers == 0` resolves via [`resolve_sweep_workers`].
+    pub fn new(factory: &'f dyn ExecutorFactory, workers: usize) -> SweepRunner<'f> {
+        SweepRunner { factory, workers: resolve_sweep_workers(workers), serial_engine: None }
+    }
+
+    /// Run the serial (`workers <= 1`) path on this engine instead of a
+    /// factory-spawned one: keeps its per-model scratch warm across
+    /// grids and its timing report populated (the `exp` profile dump).
+    /// Sharded runs still spawn per-worker engines — results are
+    /// bit-identical either way (DESIGN.md §3).
+    pub fn with_serial_engine(mut self, engine: &'f dyn Executor) -> SweepRunner<'f> {
+        self.serial_engine = Some(engine);
+        self
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Run every grid point and fold the results in grid order. Scores
+    /// are the final eval under (`score_format`, `score_rounding`);
+    /// diverged runs (and NaN scores) fold as +inf rather than failing
+    /// the sweep — a diverged grid point is a data point.
+    pub fn run(
+        &self,
+        points: Vec<SweepPoint>,
+        score_format: &str,
+        score_rounding: &str,
+        inputs: &SweepInputs,
+    ) -> Result<Vec<SweepResult>> {
+        let n = points.len();
+        if self.workers <= 1 || n <= 1 {
+            let spawned;
+            let engine: &dyn Executor = match self.serial_engine {
+                Some(e) => e,
+                None => {
+                    spawned = self.factory.spawn()?;
+                    &*spawned
+                }
+            };
+            return points
+                .iter()
+                .map(|p| Ok(run_point(engine, p, score_format, score_rounding, inputs)))
+                .collect();
+        }
+        let epoch = SWEEP_EPOCH.fetch_add(1, Ordering::Relaxed);
+        let pool = Pool::new(self.workers.min(n));
+        let factory = self.factory;
+        // the calling thread participates in the job; make sure its
+        // cached engine is released even if a grid point panics (pool
+        // workers drop theirs with the pool)
+        let _release = ReleaseCallerEngine;
+        let results: Vec<Result<SweepResult>> = pool.run(points, |_, p| {
+            WORKER_ENGINE.with(|slot| {
+                let mut slot = slot.borrow_mut();
+                let stale = !matches!(&*slot, Some((e, _)) if *e == epoch);
+                if stale {
+                    *slot = Some((epoch, factory.spawn()?));
+                }
+                let engine = &slot.as_ref().expect("engine just installed").1;
+                Ok(run_point(&**engine, &p, score_format, score_rounding, inputs))
+            })
+        });
+        // task order == grid order; a spawn failure fails the sweep
+        results.into_iter().collect()
+    }
+}
+
+/// Execute one grid point on the given engine. Everything here is a
+/// pure function of (engine manifest+programs, point, inputs) — the
+/// property the sharded/serial bit-identity rests on.
+fn run_point(
     engine: &dyn Executor,
+    p: &SweepPoint,
+    score_format: &str,
+    score_rounding: &str,
+    inputs: &SweepInputs,
+) -> SweepResult {
+    let mut metrics = match &p.metrics_path {
+        Some(path) => MetricsLogger::to_file(path).unwrap_or_else(|e| {
+            crate::warn_!("sweep {}: metrics sink {path:?}: {e}; logging in memory", p.label);
+            MetricsLogger::in_memory()
+        }),
+        None => MetricsLogger::in_memory(),
+    };
+    let outcome = (|| -> Result<()> {
+        let (statics, data) = inputs(engine, &p.cfg)?;
+        let mut trainer = Trainer::new(engine, p.cfg.clone(), statics, data)?;
+        let mut eval = Evaluator::new(p.cfg.seed);
+        trainer.run(&mut eval, &mut metrics)
+    })();
+    let diverged = outcome.is_err();
+    if let Err(e) = &outcome {
+        crate::warn_!("sweep {}: {e}", p.label);
+    }
+    let score = if diverged {
+        f64::INFINITY
+    } else {
+        metrics
+            .final_eval(score_format, score_rounding)
+            .filter(|v| !v.is_nan()) // NaN -> +inf at the source
+            .unwrap_or(f64::INFINITY)
+    };
+    crate::info!("sweep {} lr={:.2e} -> score {score:.5}", p.label, p.cfg.lr);
+    SweepResult { label: p.label.clone(), lr: p.cfg.lr, metrics, score, diverged }
+}
+
+/// Run `base` at each LR (sharded across `workers` engines spawned
+/// from `factory`); score by final quantized val loss under
+/// (`score_format`, `score_rounding`). Each grid point trains under its
+/// own counter-derived seed (`Rng::stream_seed(base.seed, [i])`), so
+/// points are independent of one another and of execution order —
+/// `--sweep-workers N` is bit-identical to serial for every N.
+pub fn lr_sweep(
+    factory: &dyn ExecutorFactory,
+    workers: usize,
     base: &RunConfig,
     lrs: &[f64],
     score_format: &str,
     score_rounding: &str,
-    inputs: &dyn Fn() -> Result<(Vec<(String, HostTensor)>, DataSource)>,
+    inputs: &SweepInputs,
 ) -> Result<Vec<SweepResult>> {
-    let mut results = Vec::new();
-    for &lr in lrs {
-        let mut cfg = base.clone();
-        cfg.lr = lr;
-        cfg.name = format!("{}_lr{lr:.0e}", base.name);
-        let (statics, data) = inputs()?;
-        let mut metrics = MetricsLogger::in_memory();
-        let outcome = (|| -> Result<()> {
-            let mut trainer = Trainer::new(engine, cfg.clone(), statics, data)?;
-            let mut eval = Evaluator::new(engine, &cfg.model, cfg.seed)?;
-            trainer.run(&mut eval, &mut metrics)
-        })();
-        let diverged = outcome.is_err();
-        if let Err(e) = &outcome {
-            crate::warn_!("sweep lr={lr:.1e}: {e}");
-        }
-        let score = if diverged {
-            f64::INFINITY
-        } else {
-            metrics
-                .final_eval(score_format, score_rounding)
-                .unwrap_or(f64::INFINITY)
-        };
-        crate::info!("sweep {} lr={lr:.2e} -> score {score:.5}", base.name);
-        results.push(SweepResult { lr, metrics, score, diverged });
-    }
-    Ok(results)
+    let points = lrs
+        .iter()
+        .enumerate()
+        .map(|(i, &lr)| {
+            let mut cfg = base.clone();
+            cfg.lr = lr;
+            cfg.name = format!("{}_lr{lr:.0e}", base.name);
+            cfg.seed = Rng::stream_seed(base.seed, &[i as u64]);
+            SweepPoint::new(cfg.name.clone(), cfg)
+        })
+        .collect();
+    SweepRunner::new(factory, workers).run(points, score_format, score_rounding, inputs)
 }
 
-/// Index of the best (lowest-score) run.
+/// Index of the best (lowest-score) run. Total order: NaN sorts as
+/// +inf, so a backend that ever reports NaN instead of the diverged
+/// sentinel cannot panic the selection.
 pub fn best(results: &[SweepResult]) -> Option<usize> {
+    fn key(s: f64) -> f64 {
+        if s.is_nan() {
+            f64::INFINITY
+        } else {
+            s
+        }
+    }
     results
         .iter()
         .enumerate()
-        .min_by(|a, b| a.1.score.partial_cmp(&b.1.score).unwrap())
+        .min_by(|a, b| key(a.1.score).total_cmp(&key(b.1.score)))
         .map(|(i, _)| i)
 }
 
@@ -74,16 +280,39 @@ pub fn best(results: &[SweepResult]) -> Option<usize> {
 mod tests {
     use super::*;
 
-    #[test]
-    fn best_picks_minimum_and_skips_nan_free() {
-        let mk = |score| SweepResult {
+    fn mk(score: f64) -> SweepResult {
+        SweepResult {
+            label: "t".into(),
             lr: 0.1,
             metrics: MetricsLogger::in_memory(),
             score,
             diverged: false,
-        };
+        }
+    }
+
+    #[test]
+    fn best_picks_minimum_and_skips_inf() {
         let rs = vec![mk(2.0), mk(0.5), mk(f64::INFINITY)];
         assert_eq!(best(&rs), Some(1));
         assert_eq!(best(&[]), None);
+    }
+
+    /// Satellite (ISSUE 5): NaN scores must neither panic nor win.
+    #[test]
+    fn best_treats_nan_as_worst() {
+        let rs = vec![mk(f64::NAN), mk(3.0), mk(f64::NAN), mk(1.5)];
+        assert_eq!(best(&rs), Some(3));
+        // all-NaN still returns *an* index rather than panicking
+        assert!(best(&[mk(f64::NAN), mk(f64::NAN)]).is_some());
+    }
+
+    #[test]
+    fn worker_resolution_explicit_beats_env() {
+        assert_eq!(resolve_sweep_workers(3), 3);
+        // 0 falls back to env-or-1; with the var unset in tests this is 1
+        // unless the CI lane exports LOTION_SWEEP_WORKERS
+        let resolved = resolve_sweep_workers(0);
+        assert!(resolved >= 1);
+        assert_eq!(resolved, env_sweep_workers().unwrap_or(1));
     }
 }

@@ -1,16 +1,18 @@
 //! The chunked training loop: one backend call runs `steps_per_call`
 //! optimizer steps (a `lax.scan` inside the PJRT artifact, an
-//! interpreted loop in the native backend); state round-trips as
-//! backend-neutral values between chunks (DESIGN.md §2).
+//! interpreted loop in the native backend). The backend round-trip —
+//! argument packing by role, metric splitting, state adoption — lives
+//! in the run's [`Session`]; this loop owns what is *schedule-shaped*:
+//! per-step LRs, the data stream, the run RNG and the step counter.
 
 use crate::config::RunConfig;
 use crate::data::TokenBatcher;
-use crate::runtime::executor::{value, Executor, Value};
-use crate::runtime::manifest::{ArtifactEntry, Role};
-use crate::runtime::{state, TrainState};
+use crate::runtime::executor::{value, Executor};
+use crate::runtime::session::{ChunkInputs, Session};
+use crate::runtime::TrainState;
 use crate::tensor::HostTensor;
 use crate::util::rng::Rng;
-use anyhow::{anyhow, bail, Result};
+use anyhow::{bail, Result};
 use std::time::Instant;
 
 use super::evaluator::Evaluator;
@@ -25,103 +27,81 @@ pub enum DataSource {
 }
 
 pub struct Trainer<'e> {
-    pub engine: &'e dyn Executor,
+    /// the run's typed engine handle (entries + state + statics)
+    pub session: Session<'e>,
     pub cfg: RunConfig,
-    pub train: ArtifactEntry,
-    pub state: TrainState,
-    /// named non-trained inputs (lam, wstar) — empty for the LM
-    pub statics: Vec<(String, Value)>,
     pub data: DataSource,
     pub rng: Rng,
     pub step: usize,
 }
 
 impl<'e> Trainer<'e> {
-    /// Build a trainer: resolve programs, init params via the init
-    /// program, zero the optimizer state, set up statics.
+    /// Build a trainer: open a [`Session`] (resolve programs, init
+    /// params via the init program, zero the optimizer state, validate
+    /// statics) and seed the run RNG.
     pub fn new(
         engine: &'e dyn Executor,
         cfg: RunConfig,
         statics: Vec<(String, HostTensor)>,
         data: DataSource,
     ) -> Result<Trainer<'e>> {
-        let train = engine
-            .manifest()
-            .find_train(&cfg.model, &cfg.method, &cfg.format)?
-            .clone();
-        let init = engine.manifest().find_init(&cfg.model)?.clone();
         let mut rng = Rng::new(cfg.seed);
-        let state = state::init_train_state(engine, &train, &init, rng.jax_key())?;
-        let statics: Vec<(String, Value)> =
-            statics.into_iter().map(|(n, t)| (n, value(t))).collect();
-        // validate statics against the manifest up front
-        for s in train.input_specs(Role::Static) {
-            if !statics.iter().any(|(n, _)| n == &s.name) {
-                bail!("missing static input {:?} for {}", s.name, train.name);
-            }
-        }
-        Ok(Trainer { engine, cfg, train, state, statics, data, rng, step: 0 })
+        let init_key = rng.jax_key();
+        let session = Session::open(engine, &cfg, statics, init_key)?;
+        Ok(Trainer { session, cfg, data, rng, step: 0 })
+    }
+
+    pub fn engine(&self) -> &'e dyn Executor {
+        self.session.engine()
+    }
+
+    /// The run's named train state (params + optimizer tensors).
+    pub fn state(&self) -> &TrainState {
+        &self.session.state
     }
 
     pub fn steps_per_call(&self) -> usize {
-        self.train.steps_per_call.max(1)
+        self.session.steps_per_call()
     }
 
-    /// Assemble the positional argument list for one chunk call.
-    fn build_args(&mut self) -> Result<Vec<Value>> {
-        let k = self.steps_per_call();
-        let mut args = Vec::with_capacity(self.train.inputs.len());
-        let mut state_iter = self.state.values().iter();
-        let lrs: Vec<f32> = (0..k).map(|i| self.cfg.lr_at(self.step + i) as f32).collect();
-        for spec in self.train.inputs.clone() {
-            let arg = match spec.role {
-                Role::Param | Role::Opt => state_iter
-                    .next()
-                    .ok_or_else(|| anyhow!("state exhausted at {:?}", spec.name))?
-                    .clone(),
-                Role::Static => self
-                    .statics
-                    .iter()
-                    .find(|(n, _)| n == &spec.name)
-                    .map(|(_, v)| v.clone())
-                    .ok_or_else(|| anyhow!("missing static {:?}", spec.name))?,
-                Role::Data => match &mut self.data {
-                    DataSource::Tokens(b) => value(b.train_chunk(k, &mut self.rng)),
-                    DataSource::InGraph => bail!("{} wants data input", self.train.name),
-                },
-                Role::Key => {
-                    let key = self.rng.jax_key();
-                    value(HostTensor::from_u32(&[2], key.to_vec()))
-                }
-                Role::Scalar => match spec.name.as_str() {
-                    "lrs" => value(HostTensor::from_f32(&[k], lrs.clone())),
-                    "lam_reg" => value(HostTensor::scalar_f32(self.cfg.lambda as f32)),
-                    other => bail!("unknown scalar input {other:?}"),
-                },
-                Role::Metric => bail!("metric role on an input"),
-            };
-            args.push(arg);
-        }
-        Ok(args)
+    /// The quantized-subset tensor names (from the manifest).
+    pub fn quantized_keys(&self) -> &[String] {
+        self.session.quantized_keys()
     }
 
     /// Run one chunk (K steps). Returns (mean base loss, mean total loss).
     pub fn chunk(&mut self, metrics: &mut MetricsLogger) -> Result<(f64, f64)> {
         let t0 = Instant::now();
-        let args = self.build_args()?;
-        let mut out = self.engine.call(&self.train, &args)?;
-        let n_metrics = 2; // base_losses, total_losses
-        let metrics_start = out.len() - n_metrics;
-        let totals = out[metrics_start + 1].as_f32();
-        let bases = out[metrics_start].as_f32();
-        out.truncate(metrics_start);
-        self.state.adopt(&mut out)?;
         let k = self.steps_per_call();
+        let lrs: Vec<f32> = (0..k).map(|i| self.cfg.lr_at(self.step + i) as f32).collect();
+        // RNG draw order is fixed (data chunk, then chunk key) so runs
+        // stay bit-identical with the pre-Session trainer
+        let data = if self.session.train_wants_data() {
+            match &mut self.data {
+                DataSource::Tokens(b) => Some(value(b.train_chunk(k, &mut self.rng))),
+                DataSource::InGraph => {
+                    bail!("{} wants a data input", self.session.train_entry().name)
+                }
+            }
+        } else {
+            None
+        };
+        let key = self.rng.jax_key();
+        let out = self.session.train_chunk(ChunkInputs {
+            lrs,
+            lam_reg: self.cfg.lambda as f32,
+            key,
+            data,
+        })?;
         self.step += k;
-        let base = bases.iter().map(|&v| v as f64).sum::<f64>() / bases.len() as f64;
-        let total = totals.iter().map(|&v| v as f64).sum::<f64>() / totals.len() as f64;
+        let base = out.bases.iter().map(|&v| v as f64).sum::<f64>() / out.bases.len() as f64;
+        let total = out.totals.iter().map(|&v| v as f64).sum::<f64>() / out.totals.len() as f64;
         if !base.is_finite() {
-            bail!("{}: loss diverged (nan/inf) at step {}", self.train.name, self.step);
+            bail!(
+                "{}: loss diverged (nan/inf) at step {}",
+                self.session.train_entry().name,
+                self.step
+            );
         }
         metrics.log_train(self.step, base, total, self.cfg.lr_at(self.step), t0.elapsed().as_secs_f64());
         Ok((base, total))
@@ -139,10 +119,5 @@ impl<'e> Trainer<'e> {
         }
         eval.eval_all(self, metrics)?;
         Ok(())
-    }
-
-    /// The quantized-subset tensor names (from the manifest).
-    pub fn quantized_keys(&self) -> &[String] {
-        &self.train.quantized
     }
 }

@@ -36,14 +36,14 @@ pub fn run(engine: &dyn Executor, out_dir: &Path) -> Result<()> {
     cfg.schedule = Schedule::Cosine { warmup: 0, final_frac: 0.05 };
     let (statics, _, _) = synth_statics(D, 42);
     let mut trainer = Trainer::new(engine, cfg.clone(), statics, DataSource::InGraph)?;
-    let mut eval = Evaluator::new(engine, &cfg.model, 0)?;
+    let mut eval = Evaluator::new(0);
     let mut metrics = MetricsLogger::in_memory();
     trainer.run(&mut eval, &mut metrics)?;
     let fp32 = metrics.final_eval("fp32", "none").unwrap_or(f64::NAN);
     crate::info!("ablation base fp32 val loss: {fp32:.5}");
 
     // cast the same weights at every (format, block, rounding)
-    let w = trainer.state.fetch("w")?.as_f32();
+    let w = trainer.state().fetch("w")?.as_f32();
     let mut csv = CsvWriter::create(
         &out_dir.join("ablation_blocks.csv"),
         &["format", "block_size", "rounding", "val_loss", "fp32_val_loss"],
@@ -56,6 +56,7 @@ pub fn run(engine: &dyn Executor, out_dir: &Path) -> Result<()> {
                 let mut wq = w.clone();
                 cast(&mut wq, &fmt, r, &mut rng);
                 trainer
+                    .session
                     .state
                     .replace("w", &crate::tensor::HostTensor::from_f32(&[D], wq))?;
                 let loss = eval.eval_cast(&trainer, None, Rounding::Rtn)?;
@@ -71,6 +72,7 @@ pub fn run(engine: &dyn Executor, out_dir: &Path) -> Result<()> {
         }
         // restore master weights for the next format
         trainer
+            .session
             .state
             .replace("w", &crate::tensor::HostTensor::from_f32(&[D], w.clone()))?;
     }

@@ -1,16 +1,45 @@
-//! Shared experiment machinery: run a configured method, dump loss
-//! curves as CSV, and print paper-style summary tables.
+//! Shared experiment machinery: the experiment context (engine +
+//! factory + sweep width), single-run helpers, loss-curve CSV dumps,
+//! and paper-style summary tables.
 
 use crate::config::RunConfig;
+use crate::coordinator::sweep::SweepRunner;
 use crate::coordinator::{DataSource, Evaluator, MetricsLogger, Trainer};
 use crate::data::{power_law_spectrum, sample_wstar};
 use crate::formats::csv::CsvWriter;
 use crate::info;
-use crate::runtime::Executor;
+use crate::runtime::{Executor, ExecutorFactory};
 use crate::tensor::HostTensor;
 use crate::util::rng::Rng;
 use anyhow::Result;
 use std::path::Path;
+
+/// What an experiment regenerator runs against: a borrowed engine for
+/// serial/manifest work, a factory + worker count for sharding its run
+/// grid across thread-owned engines. `sweep_workers` follows the
+/// `--sweep-workers` / `LOTION_SWEEP_WORKERS` / serial precedence
+/// (resolved inside [`SweepRunner::new`]), and sharded results are
+/// bit-identical to serial at any width.
+pub struct ExpCtx<'a> {
+    pub engine: &'a dyn Executor,
+    pub factory: &'a dyn ExecutorFactory,
+    pub sweep_workers: usize,
+}
+
+impl<'a> ExpCtx<'a> {
+    /// A serial context (tests / embedders without a sharding knob).
+    pub fn serial(engine: &'a dyn Executor, factory: &'a dyn ExecutorFactory) -> ExpCtx<'a> {
+        ExpCtx { engine, factory, sweep_workers: 1 }
+    }
+
+    /// The sharded grid runner for this context's width. The serial
+    /// path reuses the context engine (warm scratch, populated timing
+    /// report for the `exp` profile dump); sharded runs spawn
+    /// per-worker engines from the factory.
+    pub fn runner(&self) -> SweepRunner<'a> {
+        SweepRunner::new(self.factory, self.sweep_workers).with_serial_engine(self.engine)
+    }
+}
 
 /// Run one (method, format) training run and return its metrics.
 /// `label` names the CSV rows + jsonl file.
@@ -24,7 +53,7 @@ pub fn run_method(
 ) -> Result<MetricsLogger> {
     let mut metrics = MetricsLogger::to_file(&out_dir.join(format!("{label}.jsonl")))?;
     let mut trainer = Trainer::new(engine, cfg.clone(), statics, data)?;
-    let mut eval = Evaluator::new(engine, &cfg.model, cfg.seed)?;
+    let mut eval = Evaluator::new(cfg.seed);
     let t0 = std::time::Instant::now();
     trainer.run(&mut eval, &mut metrics)?;
     info!(

@@ -2,17 +2,24 @@
 //! spectrum. Compares LOTION / QAT / RAT / PTQ on quantized validation
 //! loss under RTN and RR casts, plus the paper's "quantized w*" PTQ
 //! oracle rows. Fig. 2 is the best-variant view of the Fig. 7 table.
+//!
+//! The per-method LR grid (the paper's best-over-App.-A.5 protocol)
+//! runs through the sharded `SweepRunner`: with `--sweep-workers N`
+//! the grid points train on N factory-spawned engines, bit-identical
+//! to the serial pass.
 
 use crate::config::{RunConfig, Schedule};
+use crate::coordinator::sweep::{SweepPoint, SweepResult};
 use crate::coordinator::DataSource;
 use crate::data::synth::population_loss;
 use crate::quant::{cast, QuantFormat, Rounding};
 use crate::runtime::Executor;
+use crate::tensor::HostTensor;
 use crate::util::rng::Rng;
 use anyhow::Result;
 use std::path::Path;
 
-use super::common::{run_method, scaled, synth_statics, write_curves, write_table, TableRow};
+use super::common::{scaled, synth_statics, write_curves, write_table, ExpCtx, TableRow};
 
 const D: usize = 12000;
 
@@ -31,34 +38,54 @@ fn cfg_for(method: &str, lr: f64, steps: usize) -> RunConfig {
     cfg
 }
 
-pub fn run(engine: &dyn Executor, out_dir: &Path) -> Result<()> {
+/// The figure's selection score: best final quantized loss over both
+/// roundings (the run_point score covers one rounding only).
+fn rtn_rr_score(r: &SweepResult) -> f64 {
+    ["rtn", "rr"]
+        .iter()
+        .filter_map(|ro| r.metrics.final_eval("int4", ro))
+        .fold(f64::INFINITY, f64::min)
+}
+
+pub fn run(ctx: &ExpCtx<'_>, out_dir: &Path) -> Result<()> {
     std::fs::create_dir_all(out_dir)?;
     let steps = scaled(3000);
     // Small per-method LR grid (the paper sweeps App. A.5 and reports
     // the best run per method; same protocol, smaller grid).
     let lr_grid: &[f64] = &[0.3, 0.6];
     let fmt = QuantFormat::int4();
+    let inputs = |_: &dyn Executor,
+                  _: &RunConfig|
+     -> Result<(Vec<(String, HostTensor)>, DataSource)> {
+        let (statics, _, _) = synth_statics(D, 42);
+        Ok((statics, DataSource::InGraph))
+    };
+
+    // One combined (method x lr) grid — a single sharded sweep, so at
+    // `--sweep-workers N` all 8 runs are in flight, not 2 per method.
+    const METHODS: [&str; 4] = ["lotion", "qat", "rat", "ptq"];
+    let points: Vec<SweepPoint> = METHODS
+        .iter()
+        .flat_map(|&method| lr_grid.iter().map(move |&lr| (method, lr)))
+        .map(|(method, lr)| {
+            let label = format!("{method}_lr{lr}");
+            SweepPoint::new(label.clone(), cfg_for(method, lr, steps))
+                .with_metrics_path(out_dir.join(format!("{label}.jsonl")))
+        })
+        .collect();
+    let mut results = ctx.runner().run(points, "int4", "rtn", &inputs)?;
 
     let mut rows: Vec<TableRow> = Vec::new();
-    let mut all_runs = Vec::new();
-    for method in ["lotion", "qat", "rat", "ptq"] {
-        let mut best: Option<(f64, crate::coordinator::MetricsLogger)> = None;
-        for &lr in lr_grid {
-            let (statics, _, _) = synth_statics(D, 42);
-            let cfg = cfg_for(method, lr, steps);
-            let label = format!("{method}_lr{lr}");
-            let m = run_method(engine, &cfg, statics, DataSource::InGraph, out_dir, &label)?;
-            let score = ["rtn", "rr"]
-                .iter()
-                .filter_map(|r| m.final_eval("int4", r))
-                .fold(f64::INFINITY, f64::min);
-            if best.as_ref().map_or(true, |(s, _)| score < *s) {
-                best = Some((score, m));
-            }
-        }
-        let (_, m) = best.unwrap();
+    let mut all_runs: Vec<(String, SweepResult)> = Vec::new();
+    for method in METHODS {
+        // grid order is method-major: drain this method's lr block
+        let block: Vec<SweepResult> = results.drain(..lr_grid.len()).collect();
+        let best = block
+            .into_iter()
+            .reduce(|a, b| if rtn_rr_score(&b) < rtn_rr_score(&a) { b } else { a })
+            .expect("non-empty lr grid");
         for r in ["rtn", "rr"] {
-            if let Some(v) = m.final_eval("int4", r) {
+            if let Some(v) = best.metrics.final_eval("int4", r) {
                 rows.push(TableRow {
                     method: method.to_uppercase(),
                     metric: r.to_uppercase(),
@@ -67,7 +94,7 @@ pub fn run(engine: &dyn Executor, out_dir: &Path) -> Result<()> {
                 });
             }
         }
-        all_runs.push((method.to_string(), m));
+        all_runs.push((method.to_string(), best));
     }
 
     // PTQ oracle rows: quantize the *target* w* directly (§4.1: "Our PTQ
@@ -86,7 +113,7 @@ pub fn run(engine: &dyn Executor, out_dir: &Path) -> Result<()> {
     }
 
     let refs: Vec<(String, &crate::coordinator::MetricsLogger)> =
-        all_runs.iter().map(|(l, m)| (l.clone(), m)).collect();
+        all_runs.iter().map(|(l, r)| (l.clone(), &r.metrics)).collect();
     write_curves(out_dir, &refs)?;
     write_table(out_dir, "Fig. 2 / Fig. 7 — INT4 linreg final quantized val loss", &rows)?;
     Ok(())

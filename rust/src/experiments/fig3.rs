@@ -5,16 +5,18 @@
 //! (== exact population loss for this model).
 
 use crate::config::{RunConfig, Schedule};
+use crate::coordinator::sweep::SweepPoint;
 use crate::coordinator::DataSource;
 use crate::data::synth::population_loss;
 use crate::formats::csv::CsvWriter;
 use crate::quant::{cast, QuantFormat, Rounding};
 use crate::runtime::Executor;
+use crate::tensor::HostTensor;
 use crate::util::rng::Rng;
 use anyhow::Result;
 use std::path::Path;
 
-use super::common::{run_method, scaled, synth_statics};
+use super::common::{scaled, synth_statics, ExpCtx};
 
 const D: usize = 12000;
 pub const KS: [usize; 6] = [1, 2, 4, 8, 16, 32];
@@ -56,21 +58,40 @@ fn gt_loss(k: usize, lam: &[f32], wstar: &[f32], rounding: Rounding, rng: &mut R
     population_loss(&v, wstar, lam)
 }
 
-pub fn run(engine: &dyn Executor, out_dir: &Path) -> Result<()> {
+const METHODS: [&str; 3] = ["lotion", "qat", "ptq"];
+
+pub fn run(ctx: &ExpCtx<'_>, out_dir: &Path) -> Result<()> {
     std::fs::create_dir_all(out_dir)?;
     let steps = scaled(1600);
+    // The whole (k × method) grid is one sharded sweep: 18 runs fan
+    // out over the context's workers, results fold in grid order.
+    let inputs = |_: &dyn Executor,
+                  _: &RunConfig|
+     -> Result<(Vec<(String, HostTensor)>, DataSource)> {
+        let (statics, _, _) = synth_statics(D, 42);
+        Ok((statics, DataSource::InGraph))
+    };
+    let points: Vec<SweepPoint> = KS
+        .iter()
+        .flat_map(|&k| METHODS.iter().map(move |&method| (k, method)))
+        .map(|(k, method)| {
+            let label = format!("k{k}_{method}");
+            SweepPoint::new(label.clone(), cfg_for(k, method, 0.3, steps))
+                .with_metrics_path(out_dir.join(format!("{label}.jsonl")))
+        })
+        .collect();
+    let results = ctx.runner().run(points, "int4", "rtn", &inputs)?;
+
     let mut w = CsvWriter::create(
         &out_dir.join("fig3.csv"),
         &["k", "method", "rounding", "final_loss"],
     )?;
     let mut rng = Rng::new(99);
+    let mut res_iter = results.iter();
     for &k in &KS {
         let (_, lam, wstar) = synth_statics(D, 42);
-        for method in ["lotion", "qat", "ptq"] {
-            let (statics, _, _) = synth_statics(D, 42);
-            let cfg = cfg_for(k, method, 0.3, steps);
-            let label = format!("k{k}_{method}");
-            let m = run_method(engine, &cfg, statics, DataSource::InGraph, out_dir, &label)?;
+        for method in METHODS {
+            let m = &res_iter.next().expect("one result per grid point").metrics;
             for r in ["rtn", "rr"] {
                 if let Some(v) = m.final_eval("int4", r) {
                     w.row(&[k.to_string(), method.into(), r.into(), format!("{v:.6}")])?;

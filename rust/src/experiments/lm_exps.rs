@@ -4,16 +4,22 @@
 //! One shared driver trains a set of (method, format) runs on the same
 //! Zipf–Markov corpus with identical seeds, evaluates quantized val
 //! loss (RTN + RR) on a fixed validation chunk, and emits curves + the
-//! paper-style final table.
+//! paper-style final table. The run set is a sharded sweep: with
+//! `--sweep-workers N` the (method, format) runs train concurrently on
+//! factory-spawned engines — each rebuilds the identical corpus from
+//! the same seed, so the controlled comparison (and bit-identity with
+//! the serial pass) is preserved.
 
 use crate::config::{RunConfig, Schedule};
+use crate::coordinator::sweep::SweepPoint;
 use crate::coordinator::{DataSource, MetricsLogger};
 use crate::data::{ByteTokenizer, TokenBatcher, ZipfMarkovCorpus};
 use crate::runtime::Executor;
+use crate::tensor::HostTensor;
 use anyhow::Result;
 use std::path::Path;
 
-use super::common::{run_method, scaled, write_curves, write_table, TableRow};
+use super::common::{scaled, write_curves, write_table, ExpCtx, TableRow};
 
 pub struct LmExp {
     pub id: &'static str,
@@ -99,59 +105,80 @@ fn make_batcher(model: &str, engine: &dyn Executor) -> Result<TokenBatcher> {
     Ok(TokenBatcher::new(toks, batch, t1 - 1, 0.05))
 }
 
-pub fn run_exp(engine: &dyn Executor, exp: &LmExp, out_dir: &Path) -> Result<()> {
+/// The run config for one (method, format) leg. Every leg shares the
+/// same seed (17) — the paper's controlled comparison trains each
+/// method on identical data/init streams.
+fn leg_cfg(exp: &LmExp, method: &str, format: &str, steps: usize) -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.name = format!("{}_{method}_{format}", exp.id);
+    cfg.model = exp.model.into();
+    cfg.method = method.into();
+    cfg.format = format.into();
+    cfg.eval_formats = if method == "ptq" {
+        exp.eval_formats.iter().map(|s| s.to_string()).collect()
+    } else {
+        vec![format.to_string()]
+    };
+    cfg.steps = steps;
+    cfg.lr = exp.lr;
+    cfg.lambda = exp.lambda;
+    cfg.eval_every = (steps / 12).max(8);
+    cfg.schedule = Schedule::Cosine { warmup: steps / 20, final_frac: 0.1 };
+    cfg.seed = 17;
+    cfg
+}
+
+pub fn run_exp(ctx: &ExpCtx<'_>, exp: &LmExp, out_dir: &Path) -> Result<()> {
     std::fs::create_dir_all(out_dir)?;
     let steps = scaled(exp.steps);
-    let mut labelled: Vec<(String, MetricsLogger)> = Vec::new();
-    let mut rows: Vec<TableRow> = Vec::new();
+    let points: Vec<SweepPoint> = exp
+        .runs
+        .iter()
+        .map(|&(method, format)| {
+            let label = format!("{method}_{format}");
+            SweepPoint::new(label.clone(), leg_cfg(exp, method, format, steps))
+                .with_metrics_path(out_dir.join(format!("{label}.jsonl")))
+        })
+        .collect();
+    // each worker builds the corpus/batcher on its own engine from the
+    // fixed seed — identical data stream per leg, any shard width
+    let inputs = |engine: &dyn Executor,
+                  cfg: &RunConfig|
+     -> Result<(Vec<(String, HostTensor)>, DataSource)> {
+        let batcher = make_batcher(&cfg.model, engine)?;
+        Ok((vec![], DataSource::Tokens(batcher)))
+    };
+    let results = ctx.runner().run(points, exp.eval_formats[0], "rtn", &inputs)?;
 
-    for &(method, format) in exp.runs {
-        let mut cfg = RunConfig::default();
-        cfg.name = format!("{}_{method}_{format}", exp.id);
-        cfg.model = exp.model.into();
-        cfg.method = method.into();
-        cfg.format = format.into();
-        cfg.eval_formats = if method == "ptq" {
+    let mut labelled: Vec<(String, &MetricsLogger)> = Vec::new();
+    let mut rows: Vec<TableRow> = Vec::new();
+    for (r, &(method, format)) in results.iter().zip(exp.runs) {
+        // a diverged run is a data point, not a batch-killer
+        if r.diverged {
+            crate::warn_!("[{}] failed; omitting from curves/table", r.label);
+            continue;
+        }
+        let eval_formats: Vec<String> = if method == "ptq" {
             exp.eval_formats.iter().map(|s| s.to_string()).collect()
         } else {
             vec![format.to_string()]
         };
-        cfg.steps = steps;
-        cfg.lr = exp.lr;
-        cfg.lambda = exp.lambda;
-        cfg.eval_every = (steps / 12).max(8);
-        cfg.schedule = Schedule::Cosine { warmup: steps / 20, final_frac: 0.1 };
-        cfg.seed = 17;
-
-        let batcher = make_batcher(exp.model, engine)?;
-        let label = format!("{method}_{format}");
-        // a diverged run is a data point, not a batch-killer
-        let m = match run_method(engine, &cfg, vec![], DataSource::Tokens(batcher), out_dir, &label)
-        {
-            Ok(m) => m,
-            Err(e) => {
-                crate::warn_!("[{label}] failed: {e:#}; recording partial metrics");
-                continue;
-            }
-        };
-        for fmt in &cfg.eval_formats {
-            for r in ["rtn", "rr"] {
-                if let Some(v) = m.final_eval(fmt, r) {
+        for fmt in &eval_formats {
+            for ro in ["rtn", "rr"] {
+                if let Some(v) = r.metrics.final_eval(fmt, ro) {
                     rows.push(TableRow {
                         method: method.to_uppercase(),
-                        metric: r.to_uppercase(),
+                        metric: ro.to_uppercase(),
                         format: fmt.clone(),
                         val_loss: v,
                     });
                 }
             }
         }
-        labelled.push((label, m));
+        labelled.push((r.label.clone(), &r.metrics));
     }
 
-    let refs: Vec<(String, &MetricsLogger)> =
-        labelled.iter().map(|(l, m)| (l.clone(), m)).collect();
-    write_curves(out_dir, &refs)?;
+    write_curves(out_dir, &labelled)?;
     write_table(
         out_dir,
         &format!("{} — {} final quantized val CE", exp.id, exp.model),

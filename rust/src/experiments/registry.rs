@@ -11,10 +11,10 @@
 //! | fig12 | Fig. 5 / Fig. 12 (FP4)               |
 //! | all   | everything above                     |
 
-use crate::runtime::Executor;
 use anyhow::{bail, Result};
 use std::path::Path;
 
+use super::common::ExpCtx;
 use super::{ablation, fig2, fig3, fig6, lm_exps};
 
 pub const ALL: [&str; 7] = ["fig6", "fig2", "fig3", "fig9", "fig10", "fig11", "fig12"];
@@ -44,7 +44,7 @@ fn required_models(id: &str) -> Vec<String> {
     }
 }
 
-pub fn run(engine: &dyn Executor, id: &str, results_dir: &Path) -> Result<()> {
+pub fn run(ctx: &ExpCtx<'_>, id: &str, results_dir: &Path) -> Result<()> {
     let id = canonical(id);
     if id == "all" {
         // a failing experiment is a data point, not a batch-killer —
@@ -53,14 +53,14 @@ pub fn run(engine: &dyn Executor, id: &str, results_dir: &Path) -> Result<()> {
         for e in ALL {
             let missing: Vec<String> = required_models(e)
                 .into_iter()
-                .filter(|m| engine.manifest().find_init(m).is_err())
+                .filter(|m| ctx.engine.manifest().find_init(m).is_err())
                 .collect();
             let status = if !missing.is_empty() {
                 let s = format!("skipped — backend has no programs for {}", missing.join(", "));
                 crate::warn_!("experiment {e} {s}");
                 s
             } else {
-                match run(engine, e, results_dir) {
+                match run(ctx, e, results_dir) {
                     Ok(()) => "ran".to_string(),
                     Err(err) => {
                         crate::warn_!("experiment {e} failed: {err:#}");
@@ -70,7 +70,7 @@ pub fn run(engine: &dyn Executor, id: &str, results_dir: &Path) -> Result<()> {
             };
             summary.push((e, status));
         }
-        println!("\n== exp all summary (backend registry: {:?}) ==", engine.manifest().dir);
+        println!("\n== exp all summary (backend registry: {:?}) ==", ctx.engine.manifest().dir);
         for (e, s) in &summary {
             println!("  {e:<6} {s}");
         }
@@ -79,14 +79,14 @@ pub fn run(engine: &dyn Executor, id: &str, results_dir: &Path) -> Result<()> {
     let out = results_dir.join(id);
     crate::info!("=== experiment {id} -> {out:?} ===");
     match id {
-        "fig2" => fig2::run(engine, &out),
-        "fig3" => fig3::run(engine, &out),
+        "fig2" => fig2::run(ctx, &out),
+        "fig3" => fig3::run(ctx, &out),
         "fig6" => fig6::run(None, &out),
-        "fig9" => lm_exps::run_exp(engine, &lm_exps::FIG9, &out),
-        "fig10" => lm_exps::run_exp(engine, &lm_exps::FIG10, &out),
-        "fig11" => lm_exps::run_exp(engine, &lm_exps::FIG11, &out),
-        "fig12" => lm_exps::run_exp(engine, &lm_exps::FIG12, &out),
-        "ablation" => ablation::run(engine, &out),
+        "fig9" => lm_exps::run_exp(ctx, &lm_exps::FIG9, &out),
+        "fig10" => lm_exps::run_exp(ctx, &lm_exps::FIG10, &out),
+        "fig11" => lm_exps::run_exp(ctx, &lm_exps::FIG11, &out),
+        "fig12" => lm_exps::run_exp(ctx, &lm_exps::FIG12, &out),
+        "ablation" => ablation::run(ctx.engine, &out),
         other => bail!("unknown experiment {other:?} (try: {:?} or all)", ALL),
     }
 }

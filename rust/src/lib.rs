@@ -27,10 +27,12 @@
 //! * [`config`] — TOML-subset config system + typed run configs.
 //! * [`data`] — synthetic regression streams, Zipf–Markov corpus,
 //!   byte tokenizer, batcher.
-//! * [`runtime`] — the `Executor` backend trait, manifest-driven
+//! * [`runtime`] — the `Executor` backend trait, the `ExecutorFactory`
+//!   engine spawner, typed per-run `Session` handles, manifest-driven
 //!   program registry, train-state management, the native backend and
 //!   (feature-gated) the PJRT engine.
-//! * [`coordinator`] — trainer, evaluator, LR schedules, sweeps, metrics.
+//! * [`coordinator`] — trainer, evaluator, LR schedules, sharded
+//!   sweeps, metrics.
 //! * [`checkpoint`] — binary tensor archive.
 //! * [`experiments`] — one regenerator per paper figure/table.
 //! * [`benchlib`] — micro-benchmark harness (criterion unavailable).

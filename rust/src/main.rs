@@ -19,8 +19,8 @@ use lotion::cli::Args;
 use lotion::config::{RunConfig, TomlDoc};
 use lotion::coordinator::{DataSource, Evaluator, MetricsLogger, Trainer};
 use lotion::data::{ByteTokenizer, TokenBatcher, ZipfMarkovCorpus};
-use lotion::experiments::registry;
-use lotion::runtime::{Executor, NativeEngine, Role};
+use lotion::experiments::{common::ExpCtx, registry};
+use lotion::runtime::{Executor, ExecutorFactory, NativeEngine, NativeFactory, Role};
 use lotion::{checkpoint::Checkpoint, formats::json::Json, info};
 use std::path::{Path, PathBuf};
 
@@ -44,6 +44,10 @@ common flags:
                                  else the pure-rust native backend)
   --threads N                    native-backend worker threads (default:
                                  LOTION_THREADS env var, else all cores;
+                                 output is bit-identical at any N)
+  --sweep-workers N              grid points in flight for sweep/exp,
+                                 each on its own engine (default:
+                                 LOTION_SWEEP_WORKERS env var, else 1;
                                  output is bit-identical at any N)";
 
 fn run() -> Result<()> {
@@ -78,6 +82,27 @@ fn make_executor(
             None => bail!("this build has no PJRT backend (rebuild with `--features pjrt`)"),
         },
         _ => lotion::runtime::auto_executor_threads(Path::new(artifacts_dir), threads),
+    }
+}
+
+/// The factory-side twin of [`make_executor`]: same `--backend` /
+/// `--threads` policy, but returns a `Send + Sync` spawner the sweep
+/// runner can hand to worker threads (each spawned engine is owned by
+/// one thread).
+fn make_factory(
+    args: &Args,
+    artifacts_dir: &str,
+    cfg_threads: usize,
+) -> Result<Box<dyn ExecutorFactory>> {
+    let threads = args.usize_or("threads", cfg_threads)?;
+    lotion::util::pool::set_global_threads(threads);
+    match args.backend()? {
+        "native" => Ok(Box::new(NativeFactory::with_default_models(threads))),
+        "pjrt" => match lotion::runtime::pjrt_factory(Path::new(artifacts_dir))? {
+            Some(f) => Ok(f),
+            None => bail!("this build has no PJRT backend (rebuild with `--features pjrt`)"),
+        },
+        _ => lotion::runtime::auto_factory(Path::new(artifacts_dir), threads),
     }
 }
 
@@ -135,7 +160,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     let (statics, data) = build_inputs(engine, &cfg, 7)?;
     let mut metrics = MetricsLogger::to_file(&out_dir.join("metrics.jsonl"))?;
     let mut trainer = Trainer::new(engine, cfg.clone(), statics, data)?;
-    let mut eval = Evaluator::new(engine, &cfg.model, cfg.seed)?;
+    let mut eval = Evaluator::new(cfg.seed);
 
     if cfg.checkpoint_every > 0 {
         // checkpointed loop
@@ -172,8 +197,8 @@ fn save_checkpoint(trainer: &Trainer, path: &Path) -> Result<()> {
         ("method", Json::str(trainer.cfg.method.clone())),
         ("format", Json::str(trainer.cfg.format.clone())),
     ]));
-    for name in trainer.state.names.clone() {
-        ckpt.push(&name, trainer.state.fetch(&name)?);
+    for name in trainer.state().names.clone() {
+        ckpt.push(&name, trainer.state().fetch(&name)?);
     }
     ckpt.save(path)?;
     info!("checkpoint -> {path:?}");
@@ -185,8 +210,18 @@ fn cmd_exp(args: &Args) -> Result<()> {
     let artifacts = args.str_or("artifacts", "artifacts");
     let results = PathBuf::from(args.str_or("results", "results"));
     let engine = make_executor(args, &artifacts, 0)?;
-    registry::run(&*engine, id, &results)?;
-    // dump the execution profile alongside results
+    let factory = make_factory(args, &artifacts, 0)?;
+    let ctx = ExpCtx {
+        engine: &*engine,
+        factory: &*factory,
+        sweep_workers: args.sweep_workers(0)?,
+    };
+    registry::run(&ctx, id, &results)?;
+    // dump the execution profile alongside results. Serial runs (the
+    // default) execute on this engine, so the profile is complete;
+    // with --sweep-workers > 1 the grid legs run on worker-owned
+    // engines whose timings are dropped with them, so only the
+    // serial-side programs appear here.
     let mut prof = String::from("program,compile_s,calls,exec_s\n");
     for (name, c, n, e) in engine.timing_report() {
         prof.push_str(&format!("{name},{c:.3},{n},{e:.3}\n"));
@@ -205,15 +240,16 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         .collect::<Result<_>>()?;
     let score_fmt = args.str_or("score-format", &cfg.format);
     let score_rounding = args.str_or("score-rounding", "rtn");
-    let engine = make_executor(args, &cfg.artifacts_dir, cfg.threads)?;
-    let engine: &dyn Executor = &*engine;
+    let workers = args.sweep_workers(cfg.sweep_workers)?;
+    let factory = make_factory(args, &cfg.artifacts_dir, cfg.threads)?;
     let results = lotion::coordinator::sweep::lr_sweep(
-        engine,
+        &*factory,
+        workers,
         &cfg,
         &lrs,
         &score_fmt,
         &score_rounding,
-        &|| build_inputs(engine, &cfg, 7),
+        &|engine: &dyn Executor, cfg: &RunConfig| build_inputs(engine, cfg, 7),
     )?;
     println!("{:<12} {:>14} {:>10}", "lr", "score", "diverged");
     for r in &results {

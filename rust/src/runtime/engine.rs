@@ -205,3 +205,30 @@ impl Executor for Engine {
         rows
     }
 }
+
+/// Stub [`ExecutorFactory`](super::ExecutorFactory) for the PJRT
+/// backend: each `spawn` loads the artifact directory into a fresh,
+/// thread-owned [`Engine`] (its own PJRT client, executable cache and
+/// literal cache). XLA owns its own intra-op threading, so sharding a
+/// sweep across PJRT engines oversubscribes unless the XLA thread pool
+/// is pinned — this factory exists for API completeness; the sweep
+/// default of one worker keeps PJRT serial until that is wired.
+pub struct PjrtFactory {
+    artifacts_dir: std::path::PathBuf,
+}
+
+impl PjrtFactory {
+    pub fn new(artifacts_dir: &std::path::Path) -> PjrtFactory {
+        PjrtFactory { artifacts_dir: artifacts_dir.to_path_buf() }
+    }
+}
+
+impl super::factory::ExecutorFactory for PjrtFactory {
+    fn spawn(&self) -> Result<Box<dyn Executor>> {
+        Ok(Box::new(Engine::new(&self.artifacts_dir)?))
+    }
+
+    fn describe(&self) -> String {
+        format!("pjrt ({})", self.artifacts_dir.display())
+    }
+}

@@ -38,14 +38,16 @@ pub trait Executor {
         Vec::new()
     }
 
-    /// Call and pick named outputs as host tensors (convenience for
-    /// metrics / eval values).
+    /// Call and pick named outputs (convenience for metrics / eval
+    /// values). Returns the call's own [`Value`]s — selection is an
+    /// `Rc` clone per requested output, never a tensor copy (an LM
+    /// eval output used to be deep-cloned here on every eval point).
     fn call_to_host(
         &self,
         entry: &ArtifactEntry,
         args: &[Value],
         outputs: &[&str],
-    ) -> Result<Vec<HostTensor>> {
+    ) -> Result<Vec<Value>> {
         let parts = self.call(entry, args)?;
         outputs
             .iter()
@@ -53,7 +55,10 @@ pub trait Executor {
                 let idx = entry
                     .output_index(name)
                     .ok_or_else(|| anyhow!("{}: no output {name:?}", entry.name))?;
-                Ok(parts[idx].as_ref().clone())
+                parts
+                    .get(idx)
+                    .cloned()
+                    .ok_or_else(|| anyhow!("{}: call returned no output {idx}", entry.name))
             })
             .collect()
     }
@@ -95,6 +100,68 @@ mod tests {
     use super::*;
     use crate::runtime::manifest::Role;
     use crate::tensor::DType;
+    use std::collections::BTreeMap;
+    use std::path::PathBuf;
+
+    /// A backend whose outputs are fixed shared values — lets the
+    /// no-copy test observe exactly which `Rc`s cross the trait.
+    struct FixedExecutor {
+        manifest: Manifest,
+        outs: Vec<Value>,
+    }
+
+    impl Executor for FixedExecutor {
+        fn manifest(&self) -> &Manifest {
+            &self.manifest
+        }
+
+        fn call(&self, _entry: &ArtifactEntry, _args: &[Value]) -> Result<Vec<Value>> {
+            Ok(self.outs.clone())
+        }
+    }
+
+    fn out_spec(name: &str) -> TensorSpec {
+        TensorSpec { name: name.into(), shape: vec![2], dtype: DType::F32, role: Role::Metric }
+    }
+
+    /// Regression (ISSUE 5 satellite): `call_to_host` must hand back
+    /// the call's own values — one `Rc` clone per requested output —
+    /// not deep tensor copies.
+    #[test]
+    fn call_to_host_returns_shared_values_without_copying() {
+        let entry = ArtifactEntry {
+            name: "fixed".into(),
+            file: PathBuf::from("fixed"),
+            inputs: vec![],
+            outputs: vec![out_spec("a"), out_spec("b")],
+            kind: "eval".into(),
+            model_name: "fixed".into(),
+            method: String::new(),
+            format: String::new(),
+            steps_per_call: 0,
+            eval_batches: 0,
+            optimizer: String::new(),
+            quantized: vec![],
+        };
+        let mut artifacts = BTreeMap::new();
+        artifacts.insert(entry.name.clone(), entry.clone());
+        let ex = FixedExecutor {
+            manifest: Manifest { dir: PathBuf::from("<test>"), artifacts },
+            outs: vec![
+                value(HostTensor::from_f32(&[2], vec![1.0, 2.0])),
+                value(HostTensor::from_f32(&[2], vec![3.0, 4.0])),
+            ],
+        };
+        let got = ex.call_to_host(&entry, &[], &["b", "a"]).unwrap();
+        assert_eq!(got.len(), 2);
+        assert!(
+            Rc::ptr_eq(&got[0], &ex.outs[1]) && Rc::ptr_eq(&got[1], &ex.outs[0]),
+            "call_to_host copied the output tensors instead of sharing them"
+        );
+        assert_eq!(got[0].as_f32(), vec![3.0, 4.0]);
+        // unknown output names still error
+        assert!(ex.call_to_host(&entry, &[], &["nope"]).is_err());
+    }
 
     #[test]
     fn check_value_catches_mismatches() {

@@ -1,0 +1,74 @@
+//! Engine spawning: the [`ExecutorFactory`] trait (DESIGN.md §3).
+//!
+//! An [`Executor`](super::Executor) is deliberately thread-confined —
+//! `Value = Rc<HostTensor>` shares state between chunks without copies,
+//! and the native engine caches per-model scratch in a `RefCell` — so
+//! one engine can never be handed to another thread. Multi-engine
+//! workloads (the sharded LR-sweep runner, future serving/ablation
+//! grids) instead share a **factory**: a `Send + Sync` description of
+//! the backend — for the native backend the immutable program
+//! definitions themselves, `Arc`-shared across engines — from which
+//! every worker thread spawns an engine it alone owns.
+//!
+//! The contract: two engines spawned from one factory expose identical
+//! manifests and compute bit-identical results for identical call
+//! sequences (engines are deterministic given their inputs; all
+//! randomness enters through explicit key/seed inputs). That is what
+//! lets the sweep runner fold sharded results in fixed grid order and
+//! match the serial path bit-for-bit.
+
+use super::executor::Executor;
+use anyhow::Result;
+
+/// A `Send + Sync` recipe for spawning thread-owned engines. Factories
+/// are cheap handles over shared immutable definitions; `spawn` is
+/// called once per worker thread, and the spawned engine lives and dies
+/// on that thread.
+pub trait ExecutorFactory: Send + Sync {
+    /// Spawn a fresh engine owned by the calling thread.
+    fn spawn(&self) -> Result<Box<dyn Executor>>;
+
+    /// Human-readable backend description for logs and errors.
+    fn describe(&self) -> String {
+        "executor factory".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::native::NativeFactory;
+
+    #[test]
+    fn factories_are_send_and_sync() {
+        fn assert_send_sync<T: Send + Sync>(_t: &T) {}
+        let f = NativeFactory::with_default_models(1);
+        assert_send_sync(&f);
+        let boxed: Box<dyn ExecutorFactory> = Box::new(f);
+        assert!(boxed.describe().contains("native"));
+    }
+
+    /// Engines spawned from one factory expose the same manifest and
+    /// compute identical results for identical calls — the invariant
+    /// the sharded sweep runner's determinism rests on.
+    #[test]
+    fn spawned_engines_agree() {
+        use crate::runtime::executor::value;
+        use crate::tensor::HostTensor;
+
+        let f = NativeFactory::with_default_models(1);
+        let a = f.spawn().unwrap();
+        let b = f.spawn().unwrap();
+        assert_eq!(
+            a.manifest().artifacts.keys().collect::<Vec<_>>(),
+            b.manifest().artifacts.keys().collect::<Vec<_>>()
+        );
+        let init = a.manifest().find_init("linreg_d256").unwrap().clone();
+        let key = value(HostTensor::from_u32(&[2], vec![3, 9]));
+        let pa = a.call(&init, &[key.clone()]).unwrap();
+        let pb = b.call(&init, &[key]).unwrap();
+        for (x, y) in pa.iter().zip(&pb) {
+            assert_eq!(x.as_ref(), y.as_ref(), "spawned engines disagree on init");
+        }
+    }
+}

@@ -13,21 +13,30 @@
 //!   with `--features pjrt`.
 //! * [`state`] — named train state (params + optimizer) that round-trips
 //!   through executions.
+//! * [`factory`] — [`ExecutorFactory`]: a `Send + Sync` recipe for
+//!   spawning thread-owned engines (sharded sweeps, multi-engine
+//!   workloads).
+//! * [`session`] — [`Session`]: a typed per-run handle owning the
+//!   train/eval entries, the state round-trip and the argument packing.
 
 #[cfg(feature = "pjrt")]
 pub mod engine;
 pub mod executor;
+pub mod factory;
 #[cfg(feature = "pjrt")]
 pub mod literals;
 pub mod manifest;
 pub mod native;
+pub mod session;
 pub mod state;
 
 #[cfg(feature = "pjrt")]
 pub use self::engine::Engine;
 pub use self::executor::{Executor, Value};
+pub use self::factory::ExecutorFactory;
 pub use self::manifest::{ArtifactEntry, Manifest, Role, TensorSpec};
-pub use self::native::NativeEngine;
+pub use self::native::{NativeEngine, NativeFactory};
+pub use self::session::{ChunkInputs, ChunkOutcome, Session};
 pub use self::state::TrainState;
 
 use anyhow::Result;
@@ -66,5 +75,32 @@ pub fn pjrt_executor(artifacts_dir: &Path) -> Result<Option<Box<dyn Executor>>> 
 /// the CLI's explicit `--backend pjrt`.
 #[cfg(not(feature = "pjrt"))]
 pub fn pjrt_executor(_artifacts_dir: &Path) -> Result<Option<Box<dyn Executor>>> {
+    Ok(None)
+}
+
+/// Pick an [`ExecutorFactory`] with the same policy as
+/// [`auto_executor`]: PJRT when the build has the feature *and*
+/// artifacts exist, the native factory (default model registry,
+/// per-engine `threads` knob) otherwise.
+pub fn auto_factory(artifacts_dir: &Path, threads: usize) -> Result<Box<dyn ExecutorFactory>> {
+    if artifacts_dir.join("manifest.json").exists() {
+        if let Some(f) = pjrt_factory(artifacts_dir)? {
+            return Ok(f);
+        }
+    }
+    Ok(Box::new(NativeFactory::with_default_models(threads)))
+}
+
+/// The PJRT factory, or `None` when this build lacks the `pjrt`
+/// feature — the factory-side twin of [`pjrt_executor`].
+#[cfg(feature = "pjrt")]
+pub fn pjrt_factory(artifacts_dir: &Path) -> Result<Option<Box<dyn ExecutorFactory>>> {
+    Ok(Some(Box::new(engine::PjrtFactory::new(artifacts_dir))))
+}
+
+/// The PJRT factory, or `None` when this build lacks the `pjrt`
+/// feature — the factory-side twin of [`pjrt_executor`].
+#[cfg(not(feature = "pjrt"))]
+pub fn pjrt_factory(_artifacts_dir: &Path) -> Result<Option<Box<dyn ExecutorFactory>>> {
     Ok(None)
 }

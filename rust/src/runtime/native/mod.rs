@@ -40,6 +40,7 @@ pub use self::transformer::{LmConfig, LmProgram};
 
 use self::optim::OptState;
 use super::executor::{check_args, value, Executor, Value};
+use super::factory::ExecutorFactory;
 use super::manifest::{ArtifactEntry, Manifest, Role, TensorSpec};
 use crate::quant::{cast_rr_seeded, cast_rtn_pool, lotion_penalty_and_grad_pool, QuantFormat};
 use crate::tensor::{DType, HostTensor};
@@ -50,14 +51,17 @@ use std::any::Any;
 use std::cell::RefCell;
 use std::collections::{BTreeMap, HashMap};
 use std::path::PathBuf;
-use std::rc::Rc;
+use std::sync::Arc;
 use std::time::Instant;
 
 /// A model registered with the native backend: which program, which
 /// optimizer, and the chunk length K of its scanned train programs.
+/// The program definition is `Arc`-shared and immutable, so a model
+/// list is `Send + Sync` — one list backs every engine a
+/// [`NativeFactory`] spawns.
 #[derive(Clone)]
 pub struct NativeModel {
-    pub program: Rc<dyn NativeProgram>,
+    pub program: Arc<dyn NativeProgram>,
     pub opt: OptKind,
     pub steps_per_call: usize,
 }
@@ -65,17 +69,58 @@ pub struct NativeModel {
 impl NativeModel {
     /// Register a synthetic testbed.
     pub fn from_spec(spec: ModelSpec, opt: OptKind, steps_per_call: usize) -> NativeModel {
-        NativeModel { program: Rc::new(spec), opt, steps_per_call }
+        NativeModel { program: Arc::new(spec), opt, steps_per_call }
     }
 
     /// Register an LM preset by name (AOT-matching batch geometry and
     /// K); the error lists the known presets.
     pub fn lm(preset: &str, opt: OptKind) -> Result<NativeModel> {
         Ok(NativeModel {
-            program: Rc::new(LmProgram::preset(preset)?),
+            program: Arc::new(LmProgram::preset(preset)?),
             opt,
             steps_per_call: LmProgram::preset_k(preset)?,
         })
+    }
+}
+
+/// [`ExecutorFactory`] for the native backend: a `Send + Sync` model
+/// list (the immutable program definitions, `Arc`-shared) plus the
+/// per-engine worker-thread knob. Each [`NativeFactory::spawn`] builds
+/// a `NativeEngine` owned by the calling thread; all spawned engines
+/// share the same program definitions and synthesize identical
+/// manifests, so their results are interchangeable bit-for-bit.
+pub struct NativeFactory {
+    models: Vec<NativeModel>,
+    threads: usize,
+}
+
+impl NativeFactory {
+    /// A factory over an explicit model list. `threads` is each spawned
+    /// engine's kernel-pool width (`0` = auto; sweep callers typically
+    /// pin `1` so sweep-level sharding is the only parallelism).
+    pub fn new(models: Vec<NativeModel>, threads: usize) -> NativeFactory {
+        NativeFactory { models, threads }
+    }
+
+    /// A factory over the default registry ([`NativeEngine::new`]'s
+    /// model set).
+    pub fn with_default_models(threads: usize) -> NativeFactory {
+        NativeFactory::new(NativeEngine::default_models(), threads)
+    }
+
+    /// The per-engine worker-thread knob this factory spawns with.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+}
+
+impl ExecutorFactory for NativeFactory {
+    fn spawn(&self) -> Result<Box<dyn Executor>> {
+        Ok(Box::new(NativeEngine::with_models(&self.models).with_threads(self.threads)))
+    }
+
+    fn describe(&self) -> String {
+        format!("native ({} models, threads={})", self.models.len(), self.threads)
     }
 }
 
@@ -775,7 +820,7 @@ mod tests {
         )
         .unwrap();
         let eng = NativeEngine::with_models(&[NativeModel {
-            program: Rc::new(prog),
+            program: Arc::new(prog),
             opt: OptKind::Adam,
             steps_per_call: 3,
         }]);

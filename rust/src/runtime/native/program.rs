@@ -94,7 +94,12 @@ pub fn static_slice<'a>(statics: &'a [(String, Vec<f32>)], name: &str) -> Result
 /// optimizer-shaped. All randomness must come off the counter streams
 /// in the ctx (never ambient state) so training stays bit-identical at
 /// any `--threads` setting.
-pub trait NativeProgram {
+///
+/// Programs are `Send + Sync`: they are immutable definitions (all
+/// mutable run state lives in the engine-owned scratch), shared via
+/// `Arc` by every engine a [`NativeFactory`](super::NativeFactory)
+/// spawns — one definition, N thread-owned interpreters.
+pub trait NativeProgram: Send + Sync {
     /// Manifest model name (e.g. `linreg_d256`, `lm-150m-sim`).
     fn name(&self) -> String;
 

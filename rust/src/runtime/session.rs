@@ -1,0 +1,288 @@
+//! A typed run handle over one engine: the [`Session`] owns everything
+//! a single training run round-trips through the backend — the resolved
+//! train/eval entries, the named [`TrainState`], and the static inputs
+//! — and packs/unpacks the positional argument lists the AOT calling
+//! convention requires (DESIGN.md §2).
+//!
+//! Before this layer existed, the raw `call(entry, &[Value])`
+//! choreography (role-driven argument packing, metric splitting, state
+//! adoption) was duplicated across the trainer, the evaluator and the
+//! experiments. A `Session` makes "one run on one engine" a first-class
+//! object instead of an implicit convention — which is what lets the
+//! sweep runner treat "N concurrent runs on N factory-spawned engines"
+//! as N independent sessions.
+//!
+//! A session *borrows* its engine: several sessions may share one
+//! engine within a thread (the engine caches per-model scratch across
+//! all of them), while cross-thread sharding goes through
+//! [`ExecutorFactory`](super::ExecutorFactory)-spawned engines with one
+//! session per run.
+
+use super::executor::{value, Executor, Value};
+use super::manifest::{ArtifactEntry, Role, TensorSpec};
+use super::state::{self, TrainState};
+use crate::config::RunConfig;
+use crate::tensor::HostTensor;
+use anyhow::{anyhow, bail, Result};
+
+/// Per-chunk inputs for [`Session::train_chunk`]: everything that
+/// changes call-to-call. State, statics and entries live in the
+/// session.
+pub struct ChunkInputs {
+    /// per-step learning rates for the K scanned steps
+    pub lrs: Vec<f32>,
+    /// the LOTION regularization weight (paper's lambda)
+    pub lam_reg: f32,
+    /// the chunk's PRNG key (drives in-graph sampling + RR rounding)
+    pub key: [u32; 2],
+    /// the `[K, B, T+1]` token chunk for data-fed programs, `None` for
+    /// in-graph sampling
+    pub data: Option<Value>,
+}
+
+/// Per-step losses reported by one train chunk.
+pub struct ChunkOutcome {
+    pub bases: Vec<f32>,
+    pub totals: Vec<f32>,
+}
+
+/// One training run's typed handle on an engine (see module docs).
+pub struct Session<'e> {
+    engine: &'e dyn Executor,
+    train: ArtifactEntry,
+    eval: ArtifactEntry,
+    /// named params + optimizer state, adopted back after every chunk
+    pub state: TrainState,
+    statics: Vec<(String, Value)>,
+}
+
+impl<'e> Session<'e> {
+    /// Open a session: resolve the run's train/eval/init entries from
+    /// the engine's manifest, run the init program at `init_key`, zero
+    /// the optimizer state, and validate the statics against the train
+    /// entry's specs.
+    pub fn open(
+        engine: &'e dyn Executor,
+        cfg: &RunConfig,
+        statics: Vec<(String, HostTensor)>,
+        init_key: [u32; 2],
+    ) -> Result<Session<'e>> {
+        let train = engine
+            .manifest()
+            .find_train(&cfg.model, &cfg.method, &cfg.format)?
+            .clone();
+        let eval = engine.manifest().find_eval(&cfg.model)?.clone();
+        let init = engine.manifest().find_init(&cfg.model)?.clone();
+        let state = state::init_train_state(engine, &train, &init, init_key)?;
+        let statics: Vec<(String, Value)> =
+            statics.into_iter().map(|(n, t)| (n, value(t))).collect();
+        for s in train.input_specs(Role::Static) {
+            if !statics.iter().any(|(n, _)| n == &s.name) {
+                bail!("missing static input {:?} for {}", s.name, train.name);
+            }
+        }
+        Ok(Session { engine, train, eval, state, statics })
+    }
+
+    pub fn engine(&self) -> &'e dyn Executor {
+        self.engine
+    }
+
+    pub fn train_entry(&self) -> &ArtifactEntry {
+        &self.train
+    }
+
+    pub fn eval_entry(&self) -> &ArtifactEntry {
+        &self.eval
+    }
+
+    /// K: optimizer steps per train call.
+    pub fn steps_per_call(&self) -> usize {
+        self.train.steps_per_call.max(1)
+    }
+
+    /// The quantized-subset tensor names (from the manifest).
+    pub fn quantized_keys(&self) -> &[String] {
+        &self.train.quantized
+    }
+
+    /// Whether the train program consumes a data-role input (token LMs)
+    /// rather than sampling in-graph.
+    pub fn train_wants_data(&self) -> bool {
+        self.train.inputs.iter().any(|s| s.role == Role::Data)
+    }
+
+    /// Whether the eval program consumes a data-role input.
+    pub fn eval_wants_data(&self) -> bool {
+        self.eval.inputs.iter().any(|s| s.role == Role::Data)
+    }
+
+    fn static_value(&self, name: &str) -> Result<Value> {
+        self.statics
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, v)| v.clone())
+            .ok_or_else(|| anyhow!("missing static {name:?}"))
+    }
+
+    /// Run one K-step train chunk: pack the positional argument list by
+    /// role, execute, split off the loss metrics, and adopt the
+    /// returned state for the next chunk.
+    pub fn train_chunk(&mut self, inp: ChunkInputs) -> Result<ChunkOutcome> {
+        if inp.lrs.len() != self.steps_per_call() {
+            bail!(
+                "{}: got {} lrs, expected K={}",
+                self.train.name,
+                inp.lrs.len(),
+                self.steps_per_call()
+            );
+        }
+        let mut args = Vec::with_capacity(self.train.inputs.len());
+        let mut state_iter = self.state.values().iter();
+        for spec in &self.train.inputs {
+            let arg = match spec.role {
+                Role::Param | Role::Opt => state_iter
+                    .next()
+                    .ok_or_else(|| anyhow!("state exhausted at {:?}", spec.name))?
+                    .clone(),
+                Role::Static => self.static_value(&spec.name)?,
+                Role::Data => inp
+                    .data
+                    .clone()
+                    .ok_or_else(|| anyhow!("{} wants a data input", self.train.name))?,
+                Role::Key => value(HostTensor::from_u32(&[2], inp.key.to_vec())),
+                Role::Scalar => match spec.name.as_str() {
+                    "lrs" => value(HostTensor::from_f32(&[inp.lrs.len()], inp.lrs.clone())),
+                    "lam_reg" => value(HostTensor::scalar_f32(inp.lam_reg)),
+                    other => bail!("unknown scalar input {other:?}"),
+                },
+                Role::Metric => bail!("metric role on an input"),
+            };
+            args.push(arg);
+        }
+        let mut out = self.engine.call(&self.train, &args)?;
+        let n_metrics = 2; // base_losses, total_losses
+        if out.len() < self.state.len() + n_metrics {
+            bail!("{}: {} outputs cannot cover state + metrics", self.train.name, out.len());
+        }
+        let metrics_start = out.len() - n_metrics;
+        let bases = out[metrics_start].as_f32();
+        let totals = out[metrics_start + 1].as_f32();
+        out.truncate(metrics_start);
+        self.state.adopt(&mut out)?;
+        Ok(ChunkOutcome { bases, totals })
+    }
+
+    /// Run the eval program at the current state and return `val_loss`.
+    /// `map_param` transforms each param input (identity for FP32
+    /// evals, a quantized cast over the quantized subset otherwise);
+    /// `data` supplies the validation chunk for data-fed programs.
+    pub fn eval_loss(
+        &self,
+        data: Option<Value>,
+        map_param: &mut dyn FnMut(&TensorSpec, &Value) -> Result<Value>,
+    ) -> Result<f64> {
+        let mut args = Vec::with_capacity(self.eval.inputs.len());
+        for spec in &self.eval.inputs {
+            let arg = match spec.role {
+                Role::Param => map_param(spec, self.state.value(&spec.name)?)?,
+                Role::Static => self.static_value(&spec.name)?,
+                Role::Data => data
+                    .clone()
+                    .ok_or_else(|| anyhow!("{} wants a data input", self.eval.name))?,
+                other => bail!("unexpected eval input role {other:?}"),
+            };
+            args.push(arg);
+        }
+        let out = self.engine.call_to_host(&self.eval, &args, &["val_loss"])?;
+        Ok(out[0].scalar_to_f32() as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::NativeEngine;
+
+    fn smoke_cfg() -> RunConfig {
+        // the default RunConfig targets linreg_d256/lotion/int4, which
+        // the default native registry always carries
+        RunConfig::default()
+    }
+
+    fn smoke_statics(d: usize) -> Vec<(String, HostTensor)> {
+        vec![
+            ("lam".to_string(), HostTensor::from_f32(&[d], vec![1.0; d])),
+            (
+                "wstar".to_string(),
+                HostTensor::from_f32(&[d], (0..d).map(|i| (i as f32).sin()).collect()),
+            ),
+        ]
+    }
+
+    #[test]
+    fn open_resolves_entries_and_inits_state() {
+        let engine = NativeEngine::new();
+        let s = Session::open(&engine, &smoke_cfg(), smoke_statics(256), [1, 2]).unwrap();
+        assert_eq!(s.steps_per_call(), 8);
+        assert_eq!(s.quantized_keys(), ["w".to_string()]);
+        assert!(!s.train_wants_data());
+        assert!(!s.eval_wants_data());
+        assert_eq!(s.state.fetch("w").unwrap().shape, vec![256]);
+    }
+
+    #[test]
+    fn open_rejects_missing_statics() {
+        let engine = NativeEngine::new();
+        let err = Session::open(&engine, &smoke_cfg(), vec![], [1, 2]).unwrap_err();
+        assert!(err.to_string().contains("missing static"), "{err}");
+    }
+
+    #[test]
+    fn train_chunk_adopts_state_and_reports_k_losses() {
+        let engine = NativeEngine::new();
+        let mut s = Session::open(&engine, &smoke_cfg(), smoke_statics(256), [1, 2]).unwrap();
+        let w0 = s.state.fetch("w").unwrap();
+        let k = s.steps_per_call();
+        let out = s
+            .train_chunk(ChunkInputs {
+                lrs: vec![0.05; k],
+                lam_reg: 1.0,
+                key: [7, 11],
+                data: None,
+            })
+            .unwrap();
+        assert_eq!(out.bases.len(), k);
+        assert_eq!(out.totals.len(), k);
+        assert!(out.bases.iter().all(|b| b.is_finite()));
+        assert_ne!(s.state.fetch("w").unwrap(), w0, "chunk did not move the params");
+        // bad lr arity is rejected before the engine call
+        assert!(s
+            .train_chunk(ChunkInputs {
+                lrs: vec![0.05; k + 1],
+                lam_reg: 1.0,
+                key: [7, 11],
+                data: None,
+            })
+            .is_err());
+    }
+
+    #[test]
+    fn eval_loss_applies_the_param_map() {
+        let engine = NativeEngine::new();
+        let s = Session::open(&engine, &smoke_cfg(), smoke_statics(256), [1, 2]).unwrap();
+        let plain = s.eval_loss(None, &mut |_, v| Ok(v.clone())).unwrap();
+        // zeroing w through the map must change the loss
+        let zeroed = s
+            .eval_loss(None, &mut |spec, v| {
+                Ok(if spec.name == "w" {
+                    value(HostTensor::zeros(v.dtype, &v.shape))
+                } else {
+                    v.clone()
+                })
+            })
+            .unwrap();
+        assert!(plain.is_finite() && zeroed.is_finite());
+        assert_ne!(plain, zeroed);
+    }
+}

@@ -49,7 +49,7 @@ fn linreg_lotion_trains_and_beats_init() {
     let statics = linreg_statics(256, 3);
     let mut trainer =
         Trainer::new(&engine, cfg.clone(), statics, DataSource::InGraph).expect("trainer");
-    let mut eval = Evaluator::new(&engine, &cfg.model, 0).unwrap();
+    let mut eval = Evaluator::new(0);
     let mut metrics = MetricsLogger::in_memory();
 
     let fmt = QuantFormat::int4();
@@ -75,7 +75,7 @@ fn all_four_methods_run_on_linreg() {
         let statics = linreg_statics(256, 5);
         let mut trainer =
             Trainer::new(&engine, cfg.clone(), statics, DataSource::InGraph).unwrap();
-        let mut eval = Evaluator::new(&engine, &cfg.model, 1).unwrap();
+        let mut eval = Evaluator::new(1);
         let mut metrics = MetricsLogger::in_memory();
         trainer.run(&mut eval, &mut metrics).expect(method);
         assert!(metrics.final_eval("fp32", "none").unwrap().is_finite(), "{method}");
@@ -95,7 +95,7 @@ fn trainer_is_deterministic_per_seed() {
         for _ in 0..3 {
             trainer.chunk(&mut metrics).unwrap();
         }
-        trainer.state.fetch("w").unwrap().as_f32()
+        trainer.state().fetch("w").unwrap().as_f32()
     };
     assert_eq!(run(9), run(9));
     assert_ne!(run(9), run(10));
@@ -118,7 +118,7 @@ fn lm_tiny_trains_on_corpus() {
     let batcher = TokenBatcher::new(toks, 8, 64, 0.1);
     let mut trainer =
         Trainer::new(&engine, cfg.clone(), vec![], DataSource::Tokens(batcher)).unwrap();
-    let mut eval = Evaluator::new(&engine, &cfg.model, 2).unwrap();
+    let mut eval = Evaluator::new(2);
     let mut metrics = MetricsLogger::in_memory();
     trainer.run(&mut eval, &mut metrics).unwrap();
 

@@ -10,9 +10,11 @@ use lotion::data::synth::population_loss;
 use lotion::data::{ByteTokenizer, TokenBatcher, ZipfMarkovCorpus};
 use lotion::experiments::common::synth_statics;
 use lotion::quant::{QuantFormat, Rounding};
-use lotion::runtime::native::{LmConfig, LmProgram, ModelSpec, NativeEngine, NativeModel, OptKind};
+use lotion::runtime::native::{
+    LmConfig, LmProgram, ModelSpec, NativeEngine, NativeFactory, NativeModel, OptKind,
+};
 use lotion::runtime::Executor;
-use std::rc::Rc;
+use std::sync::Arc;
 
 fn linreg_cfg(method: &str, steps: usize) -> RunConfig {
     let mut cfg = RunConfig::default();
@@ -38,7 +40,7 @@ fn linreg_lotion_50_steps_loss_decreases() {
     let cfg = linreg_cfg("lotion", 56); // 7 chunks of K=8
     let (statics, _, _) = synth_statics(256, 3);
     let mut trainer = Trainer::new(&engine, cfg.clone(), statics, DataSource::InGraph).unwrap();
-    let mut eval = Evaluator::new(&engine, &cfg.model, 0).unwrap();
+    let mut eval = Evaluator::new(0);
     let mut metrics = MetricsLogger::in_memory();
 
     let fmt = QuantFormat::int4();
@@ -65,7 +67,7 @@ fn all_four_methods_run_on_native_linreg() {
         let (statics, _, _) = synth_statics(256, 5);
         let mut trainer =
             Trainer::new(&engine, cfg.clone(), statics, DataSource::InGraph).unwrap();
-        let mut eval = Evaluator::new(&engine, &cfg.model, 1).unwrap();
+        let mut eval = Evaluator::new(1);
         let mut metrics = MetricsLogger::in_memory();
         trainer.run(&mut eval, &mut metrics).expect(method);
         assert!(metrics.final_eval("fp32", "none").unwrap().is_finite(), "{method}");
@@ -85,7 +87,7 @@ fn native_trainer_is_deterministic_per_seed() {
         for _ in 0..3 {
             trainer.chunk(&mut metrics).unwrap();
         }
-        trainer.state.fetch("w").unwrap().as_f32()
+        trainer.state().fetch("w").unwrap().as_f32()
     };
     assert_eq!(run(9), run(9));
     assert_ne!(run(9), run(10));
@@ -99,10 +101,10 @@ fn native_eval_matches_population_loss() {
     let cfg = linreg_cfg("lotion", 16);
     let (statics, lam, wstar) = synth_statics(256, 11);
     let mut trainer = Trainer::new(&engine, cfg.clone(), statics, DataSource::InGraph).unwrap();
-    let mut eval = Evaluator::new(&engine, &cfg.model, 2).unwrap();
+    let mut eval = Evaluator::new(2);
     let mut metrics = MetricsLogger::in_memory();
     trainer.run(&mut eval, &mut metrics).unwrap();
-    let w = trainer.state.fetch("w").unwrap().as_f32();
+    let w = trainer.state().fetch("w").unwrap().as_f32();
     let direct = population_loss(&w, &wstar, &lam);
     let via_eval = eval.eval_cast(&trainer, None, Rounding::Rtn).unwrap();
     assert!(
@@ -130,7 +132,7 @@ fn linear2_trains_on_native_backend() {
     cfg.schedule = Schedule::Constant;
     let (statics, _, _) = synth_statics(128, 21);
     let mut trainer = Trainer::new(&engine, cfg.clone(), statics, DataSource::InGraph).unwrap();
-    let mut eval = Evaluator::new(&engine, &cfg.model, 0).unwrap();
+    let mut eval = Evaluator::new(0);
     let mut metrics = MetricsLogger::in_memory();
     let v0 = eval.eval_cast(&trainer, None, Rounding::Rtn).unwrap();
     trainer.run(&mut eval, &mut metrics).unwrap();
@@ -163,14 +165,14 @@ fn adam_trains_linreg_on_native_backend() {
     cfg.lr = 0.05;
     let (statics, _, _) = synth_statics(64, 13);
     let mut trainer = Trainer::new(&engine, cfg.clone(), statics, DataSource::InGraph).unwrap();
-    let mut eval = Evaluator::new(&engine, &cfg.model, 0).unwrap();
+    let mut eval = Evaluator::new(0);
     let mut metrics = MetricsLogger::in_memory();
     trainer.run(&mut eval, &mut metrics).unwrap();
     let first = metrics.train_losses.first().unwrap().1;
     let last = metrics.train_losses.last().unwrap().1;
     assert!(last < first, "adam train loss {first} -> {last}");
     // the step counter advanced with the run
-    assert_eq!(trainer.state.fetch("t").unwrap().scalar_to_f32(), 48.0);
+    assert_eq!(trainer.state().fetch("t").unwrap().scalar_to_f32(), 48.0);
 }
 
 /// A micro LM engine + token pipeline for the integration tests: a
@@ -185,7 +187,7 @@ fn lm_micro_engine() -> NativeEngine {
     )
     .unwrap();
     NativeEngine::with_models(&[NativeModel {
-        program: Rc::new(program),
+        program: Arc::new(program),
         opt: OptKind::Adam,
         steps_per_call: 5,
     }])
@@ -219,7 +221,7 @@ fn lm_all_four_methods_train_loss_decreases() {
         let mut trainer =
             Trainer::new(&engine, cfg.clone(), vec![], DataSource::Tokens(lm_batcher(13)))
                 .unwrap();
-        let mut eval = Evaluator::new(&engine, &cfg.model, 1).unwrap();
+        let mut eval = Evaluator::new(1);
         let mut metrics = MetricsLogger::in_memory();
         trainer.run(&mut eval, &mut metrics).expect(method);
         assert_eq!(trainer.step, 50, "{method}");
@@ -252,7 +254,7 @@ fn lm_eval_cast_touches_only_quantized_tensors() {
     trainer.chunk(&mut metrics).unwrap();
     assert!(trainer.quantized_keys().contains(&"lm_head".to_string()));
     assert!(!trainer.quantized_keys().contains(&"embed".to_string()));
-    let mut eval = Evaluator::new(&engine, &cfg.model, 2).unwrap();
+    let mut eval = Evaluator::new(2);
     let fp32 = eval.eval_cast(&trainer, None, Rounding::Rtn).unwrap();
     let int4 = eval.eval_cast(&trainer, Some(&QuantFormat::int4()), Rounding::Rtn).unwrap();
     assert!(fp32.is_finite() && int4.is_finite());
@@ -262,15 +264,16 @@ fn lm_eval_cast_touches_only_quantized_tensors() {
 
 #[test]
 fn lr_sweep_runs_on_native_backend() {
-    let engine = NativeEngine::new();
+    let factory = NativeFactory::with_default_models(1);
     let cfg = linreg_cfg("lotion", 16);
     let results = sweep::lr_sweep(
-        &engine,
+        &factory,
+        1,
         &cfg,
         &[0.02, 0.2],
         "int4",
         "rtn",
-        &|| {
+        &|_: &dyn Executor, _: &RunConfig| {
             let (statics, _, _) = synth_statics(256, 3);
             Ok((statics, DataSource::InGraph))
         },

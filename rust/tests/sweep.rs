@@ -1,0 +1,204 @@
+//! ISSUE 5 acceptance: the sharded sweep runner is **bit-identical to
+//! the serial path at any `--sweep-workers` setting**, for both the
+//! synthetic testbeds and the transformer LM. Each grid point is an
+//! independent run (own counter-derived seed, inputs rebuilt per point
+//! on the worker's factory-spawned engine), so the worker pool only
+//! decides *which thread* runs a point — never what it computes.
+//!
+//! CI runs this suite at the default widths and oversubscribed
+//! (`LOTION_SWEEP_WORKERS=8` × `LOTION_THREADS=16` on a smaller box),
+//! which shakes out cross-engine races that hide at natural widths.
+
+use anyhow::Result;
+use lotion::config::{RunConfig, Schedule};
+use lotion::coordinator::sweep::{self, lr_sweep, SweepPoint, SweepRunner};
+use lotion::coordinator::{DataSource, SweepResult};
+use lotion::data::{ByteTokenizer, TokenBatcher, ZipfMarkovCorpus};
+use lotion::experiments::common::synth_statics;
+use lotion::runtime::native::{LmConfig, LmProgram, ModelSpec, NativeFactory, NativeModel, OptKind};
+use lotion::runtime::{Executor, ExecutorFactory};
+use lotion::tensor::HostTensor;
+use std::sync::Arc;
+
+/// Everything observable about a sweep, bit-exact: per-point label,
+/// score bits, divergence flag, train-loss trace and eval curve.
+fn fingerprint(results: &[SweepResult]) -> Vec<String> {
+    results
+        .iter()
+        .map(|r| {
+            let mut s = format!("{} {:016x} {}", r.label, r.score.to_bits(), r.diverged);
+            for &(step, l) in &r.metrics.train_losses {
+                s.push_str(&format!(" t{step}:{:016x}", l.to_bits()));
+            }
+            for p in &r.metrics.eval_points {
+                s.push_str(&format!(
+                    " e{}:{}:{}:{:016x}",
+                    p.step,
+                    p.format,
+                    p.rounding,
+                    p.val_loss.to_bits()
+                ));
+            }
+            s
+        })
+        .collect()
+}
+
+fn linreg_factory() -> NativeFactory {
+    // per-engine threads 0 = auto (LOTION_THREADS), so the CI
+    // oversubscription lane multiplies sweep workers by kernel threads
+    NativeFactory::new(
+        vec![NativeModel::from_spec(ModelSpec::LinReg { d: 256, batch: 64 }, OptKind::Sgd, 8)],
+        0,
+    )
+}
+
+fn linreg_base_cfg() -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.name = "sweep_test".into();
+    cfg.model = "linreg_d256".into();
+    cfg.method = "lotion".into();
+    cfg.format = "int4".into();
+    cfg.eval_formats = vec!["int4".into()];
+    cfg.steps = 16;
+    cfg.lambda = 1.0;
+    cfg.eval_every = 16;
+    cfg.schedule = Schedule::Constant;
+    cfg.seed = 5;
+    cfg
+}
+
+fn linreg_inputs(
+    _: &dyn Executor,
+    _: &RunConfig,
+) -> Result<(Vec<(String, HostTensor)>, DataSource)> {
+    let (statics, _, _) = synth_statics(256, 3);
+    Ok((statics, DataSource::InGraph))
+}
+
+/// ISSUE 5 acceptance criterion: an 8-LR grid over linreg returns
+/// bit-identical scores/metrics at `--sweep-workers 1` and `4` (and an
+/// uneven width, and the env-resolved width).
+#[test]
+fn sharded_linreg_sweep_is_bit_identical_to_serial() {
+    let factory = linreg_factory();
+    let cfg = linreg_base_cfg();
+    let lrs: Vec<f64> = (1..=8).map(|i| 0.02 * i as f64).collect();
+    let run = |workers: usize| {
+        lr_sweep(&factory, workers, &cfg, &lrs, "int4", "rtn", &linreg_inputs).unwrap()
+    };
+    let serial = run(1);
+    assert_eq!(serial.len(), 8);
+    assert!(serial.iter().all(|r| !r.diverged));
+    let fp = fingerprint(&serial);
+    for workers in [4usize, 3, 0] {
+        let sharded = run(workers);
+        assert_eq!(
+            fingerprint(&sharded),
+            fp,
+            "sweep output differs between --sweep-workers 1 and {workers}"
+        );
+    }
+    // best() agrees with a manual scan of the serial scores
+    let best = sweep::best(&serial).unwrap();
+    assert!(serial.iter().all(|r| serial[best].score <= r.score));
+}
+
+/// Same contract on the transformer LM path: grid points rebuild the
+/// token pipeline per point on their worker's engine, so sharding
+/// cannot skew the controlled data stream.
+#[test]
+fn sharded_lm_sweep_is_bit_identical_to_serial() {
+    let program = LmProgram::new(
+        "lm-sweep-test",
+        LmConfig { vocab: 256, d_model: 16, n_layers: 1, n_heads: 2, seq_len: 16 },
+        2,
+        1,
+    )
+    .unwrap();
+    let factory = NativeFactory::new(
+        vec![NativeModel { program: Arc::new(program), opt: OptKind::Adam, steps_per_call: 2 }],
+        0,
+    );
+    let mut cfg = RunConfig::default();
+    cfg.name = "lm_sweep_test".into();
+    cfg.model = "lm-sweep-test".into();
+    cfg.method = "lotion".into();
+    cfg.format = "int8".into();
+    cfg.eval_formats = vec!["int8".into()];
+    cfg.steps = 4;
+    cfg.lambda = 10.0;
+    cfg.eval_every = 4;
+    cfg.schedule = Schedule::Constant;
+    cfg.seed = 23;
+    let inputs = |_: &dyn Executor,
+                  _: &RunConfig|
+     -> Result<(Vec<(String, HostTensor)>, DataSource)> {
+        let corpus = ZipfMarkovCorpus::generate(20_000, 256, 4, 9);
+        let toks = ByteTokenizer::new().encode(&corpus.bytes);
+        Ok((vec![], DataSource::Tokens(TokenBatcher::new(toks, 2, 16, 0.1))))
+    };
+    let lrs = [1e-3, 3e-3, 1e-2];
+    let run = |workers: usize| {
+        lr_sweep(&factory, workers, &cfg, &lrs, "int8", "rtn", &inputs).unwrap()
+    };
+    let serial = run(1);
+    assert_eq!(serial.len(), 3);
+    assert!(serial.iter().all(|r| !r.diverged), "micro LM grid should not diverge");
+    assert_eq!(fingerprint(&run(4)), fingerprint(&serial));
+}
+
+/// The runner folds results in fixed grid order whatever thread runs
+/// each point, labels included, and writes per-point metrics sinks.
+#[test]
+fn sharded_results_fold_in_grid_order() {
+    let factory = linreg_factory();
+    let dir = lotion::util::tempdir::TempDir::new();
+    let points: Vec<SweepPoint> = (0..6)
+        .map(|i| {
+            let mut cfg = linreg_base_cfg();
+            cfg.lr = 0.02 * (i + 1) as f64;
+            SweepPoint::new(format!("p{i}"), cfg)
+                .with_metrics_path(dir.path().join(format!("p{i}.jsonl")))
+        })
+        .collect();
+    let results = SweepRunner::new(&factory, 4).run(points, "int4", "rtn", &linreg_inputs).unwrap();
+    let labels: Vec<&str> = results.iter().map(|r| r.label.as_str()).collect();
+    assert_eq!(labels, vec!["p0", "p1", "p2", "p3", "p4", "p5"]);
+    for i in 0..6 {
+        assert_eq!(results[i].lr, 0.02 * (i + 1) as f64);
+        let text = std::fs::read_to_string(dir.path().join(format!("p{i}.jsonl"))).unwrap();
+        assert!(!text.is_empty(), "point {i} wrote no metrics");
+    }
+}
+
+/// A diverged grid point (unknown model here) scores +inf and flags
+/// `diverged` without failing the sweep or the sibling points.
+#[test]
+fn diverged_point_is_a_data_point_not_a_sweep_failure() {
+    let factory = linreg_factory();
+    let good = linreg_base_cfg();
+    let mut bad = linreg_base_cfg();
+    bad.model = "linreg_d9999".into();
+    let points = vec![SweepPoint::new("good", good), SweepPoint::new("bad", bad)];
+    let results = SweepRunner::new(&factory, 2).run(points, "int4", "rtn", &linreg_inputs).unwrap();
+    assert!(!results[0].diverged && results[0].score.is_finite());
+    assert!(results[1].diverged && results[1].score.is_infinite());
+    assert_eq!(sweep::best(&results), Some(0));
+}
+
+/// Factories hand every worker its own engine; the trait object is
+/// shareable across threads by contract.
+#[test]
+fn factory_is_shareable_across_threads() {
+    let factory = linreg_factory();
+    let f: &dyn ExecutorFactory = &factory;
+    std::thread::scope(|s| {
+        for _ in 0..2 {
+            s.spawn(move || {
+                let engine = f.spawn().unwrap();
+                assert!(engine.manifest().find_init("linreg_d256").is_ok());
+            });
+        }
+    });
+}

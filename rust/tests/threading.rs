@@ -15,7 +15,7 @@ use lotion::data::{ByteTokenizer, TokenBatcher, ZipfMarkovCorpus};
 use lotion::experiments::common::synth_statics;
 use lotion::quant::{QuantFormat, Rounding};
 use lotion::runtime::native::{LmConfig, LmProgram, ModelSpec, NativeEngine, NativeModel, OptKind};
-use std::rc::Rc;
+use std::sync::Arc;
 
 /// A tensor's exact bit pattern (f32 `==` would paper over NaN/-0.0).
 fn bits(t: &lotion::tensor::HostTensor) -> Vec<u32> {
@@ -51,8 +51,8 @@ fn run_linreg(method: &str, threads: usize) -> (Vec<Vec<u32>>, Vec<(usize, f64)>
     for _ in 0..2 {
         trainer.chunk(&mut metrics).unwrap();
     }
-    let params = vec![bits(&trainer.state.fetch("w").unwrap())];
-    let mut eval = Evaluator::new(&engine, &trainer.cfg.model, 3).unwrap();
+    let params = vec![bits(&trainer.state().fetch("w").unwrap())];
+    let mut eval = Evaluator::new(3);
     let rr = eval.eval_cast(&trainer, Some(&QuantFormat::int4()), Rounding::Rr).unwrap();
     (params, metrics.train_losses.clone(), rr)
 }
@@ -101,9 +101,9 @@ fn linear2_training_is_bit_identical_across_thread_counts() {
         for _ in 0..2 {
             trainer.chunk(&mut metrics).unwrap();
         }
-        let w1 = bits(&trainer.state.fetch("w1").unwrap());
-        let w2 = bits(&trainer.state.fetch("w2").unwrap());
-        let mut eval = Evaluator::new(&engine, &trainer.cfg.model, 5).unwrap();
+        let w1 = bits(&trainer.state().fetch("w1").unwrap());
+        let w2 = bits(&trainer.state().fetch("w2").unwrap());
+        let mut eval = Evaluator::new(5);
         let fp32 = eval.eval_cast(&trainer, None, Rounding::Rtn).unwrap();
         (w1, w2, metrics.train_losses.clone(), fp32)
     };
@@ -135,7 +135,7 @@ fn lm_training_is_bit_identical_across_thread_counts() {
         )
         .unwrap();
         let engine = NativeEngine::with_models(&[NativeModel {
-            program: Rc::new(program),
+            program: Arc::new(program),
             opt: OptKind::Adam,
             steps_per_call: 4,
         }])
@@ -158,9 +158,9 @@ fn lm_training_is_bit_identical_across_thread_counts() {
         for _ in 0..2 {
             trainer.chunk(&mut metrics).unwrap();
         }
-        let embed = bits(&trainer.state.fetch("embed").unwrap());
-        let wq = bits(&trainer.state.fetch("layer00.attn_wq").unwrap());
-        let mut eval = Evaluator::new(&engine, &trainer.cfg.model, 7).unwrap();
+        let embed = bits(&trainer.state().fetch("embed").unwrap());
+        let wq = bits(&trainer.state().fetch("layer00.attn_wq").unwrap());
+        let mut eval = Evaluator::new(7);
         let rr = eval.eval_cast(&trainer, Some(&QuantFormat::int4()), Rounding::Rr).unwrap();
         (embed, wq, metrics.train_losses.clone(), rr)
     };
@@ -199,7 +199,7 @@ fn engine_reuse_across_runs_is_stateless() {
         for _ in 0..2 {
             trainer.chunk(&mut metrics).unwrap();
         }
-        (bits(&trainer.state.fetch("w").unwrap()), metrics.train_losses.clone())
+        (bits(&trainer.state().fetch("w").unwrap()), metrics.train_losses.clone())
     };
     let mk = || {
         NativeEngine::with_models(&[NativeModel::from_spec(

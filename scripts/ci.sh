@@ -21,6 +21,12 @@ echo "== threading suite (oversubscribed LOTION_THREADS=16) =="
 # threading suite re-checks bit-identity under that pressure
 LOTION_THREADS=16 cargo test -q --test threading
 
+echo "== sweep suite (oversubscribed LOTION_SWEEP_WORKERS=8 x LOTION_THREADS=16) =="
+# sweep workers multiply by per-engine kernel threads; running the
+# sweep determinism suite with both knobs past the core count checks
+# that sharded grids stay bit-identical under heavy oversubscription
+LOTION_SWEEP_WORKERS=8 LOTION_THREADS=16 cargo test -q --test sweep
+
 echo "== lm-tiny native smoke train (default threads) =="
 # the transformer interpreter end-to-end at the CLI surface: a short
 # LOTION train on lm-tiny, offline, native backend only
@@ -40,6 +46,27 @@ if cargo fmt --version >/dev/null 2>&1; then
     cargo fmt --check
 else
     echo "rustfmt not installed on this toolchain; skipping format check"
+fi
+
+echo "== cargo clippy --all-targets -- -D warnings =="
+# lint lane (skip with LOTION_CI_CLIPPY=0, or automatically when the
+# toolchain has no clippy component — mirrors the rustfmt guard).
+# Deny-by-default with explicit, documented exceptions for lints that
+# conflict with the crate's established idiom: indexed kernel loops
+# (fixed-chunk determinism contract), `RunConfig::default()` +
+# field-by-field experiment configs, and arg-rich builder-free APIs.
+if [[ "${LOTION_CI_CLIPPY:-1}" == "1" ]] && cargo clippy --version >/dev/null 2>&1; then
+    cargo clippy --all-targets -- -D warnings \
+        -A unknown_lints \
+        -A clippy::needless_range_loop \
+        -A clippy::field_reassign_with_default \
+        -A clippy::too_many_arguments \
+        -A clippy::manual_memcpy \
+        -A clippy::type_complexity \
+        -A clippy::new_without_default \
+        -A clippy::thread_local_initializer_can_be_made_const
+else
+    echo "clippy unavailable or LOTION_CI_CLIPPY=0; skipping lint lane"
 fi
 
 echo "== bench trajectory (scripts/bench.sh) =="
