@@ -70,6 +70,50 @@ fn main() {
         });
     }
 
+    // Packed-representation rows (ISSUE 6): packing master weights
+    // into block codes (the fused eval path's setup cost) and a full
+    // dense decode (the traffic the fused matmul avoids paying).
+    {
+        use lotion::quant::PackedWeights;
+        for fmt_name in ["int4", "int8", "fp4"] {
+            for block in [0usize, 64] {
+                let fmt = QuantFormat::parse(fmt_name, block).unwrap();
+                let tag = if block == 0 { "tensor" } else { "b64" };
+                b.run_with_items(&format!("pack_rtn/{fmt_name}/{tag}"), Some(n as f64), &mut || {
+                    std::hint::black_box(PackedWeights::pack_rtn(&w, &fmt));
+                });
+            }
+        }
+        let fmt = QuantFormat::parse("int4", 64).unwrap();
+        let packed = PackedWeights::pack_rtn(&w, &fmt);
+        let mut out = vec![0.0f32; n];
+        b.run_with_items("packed_decode/int4/b64", Some(n as f64), &mut || {
+            packed.decode_into(&mut out);
+            std::hint::black_box(&out);
+        });
+    }
+
+    // Dispatch-tier rows (ISSUE 6): the hot kernels pinned to each
+    // tier this CPU supports. Bit-identical output across rows — the
+    // vector paths keep the scalar fold order — only throughput moves.
+    {
+        use lotion::util::simd::{set_global_simd, supported_tiers};
+        let fmt = QuantFormat::parse("int4", 64).unwrap();
+        for tier in supported_tiers() {
+            set_global_simd(Some(tier));
+            let tag = tier.name();
+            b.run_with_items(&format!("cast_rtn/int4/b64/simd_{tag}"), Some(n as f64), &mut || {
+                let mut v = w.clone();
+                cast_rtn(&mut v, &fmt);
+                std::hint::black_box(v);
+            });
+            b.run_with_items(&format!("sigma2/int4/b64/simd_{tag}"), Some(n as f64), &mut || {
+                std::hint::black_box(sigma2(&w, &fmt));
+            });
+        }
+        set_global_simd(None);
+    }
+
     print!("{}", b.table("quant substrate micro (1M f32 elements)"));
     let out = Path::new("BENCH_quant_micro.json");
     match b.write_json(out, "quant_micro") {

@@ -116,6 +116,86 @@ fn main() {
         lm_train_bench(&mut b, &engine, "lm-150m-sim", "lm/150m_sim");
     }
 
+    // SIMD dispatch tiers (ISSUE 6): the LM train step pinned to the
+    // scalar tier vs runtime detection (AVX2/NEON where available).
+    // Output is bit-identical across rows — only wall clock moves.
+    {
+        use lotion::util::simd::{set_global_simd, SimdTier};
+        let engine = NativeEngine::new();
+        set_global_simd(Some(SimdTier::Scalar));
+        lm_train_bench(&mut b, &engine, "lm-150m-sim", "lm/150m_sim/simd_scalar");
+        set_global_simd(None);
+        lm_train_bench(&mut b, &engine, "lm-150m-sim", "lm/150m_sim/simd_auto");
+    }
+
+    // RTN-eval path (ISSUE 6): host-side cast through the plain eval
+    // entry (materializes a full f32 copy of every quantized tensor)
+    // vs the fused `eval_q` route (nibble-packed codes, block dequant
+    // inside the matmul tiles — no dense wq buffer). Same loss
+    // bit-for-bit; only time and memory traffic move.
+    {
+        use lotion::coordinator::Evaluator;
+        use lotion::quant::{cast_rtn, QuantFormat};
+        use lotion::runtime::executor::value;
+        use lotion::tensor::HostTensor;
+        use lotion::util::rng::Rng;
+
+        let engine = NativeEngine::new();
+        let mut cfg = RunConfig::default();
+        cfg.model = "lm-150m-sim".into();
+        cfg.method = "lotion".into();
+        cfg.format = "int4".into();
+        cfg.steps = 1_000_000;
+        cfg.lr = 1e-3;
+        cfg.schedule = Schedule::Constant;
+        let eval = engine.manifest().find_eval("lm-150m-sim").expect("lm eval entry");
+        let ke = eval.eval_batches.max(1);
+        let data = eval.inputs.iter().find(|s| s.role == Role::Data).expect("lm data spec");
+        let (batch, t1) = (data.shape[1], data.shape[2]);
+        let corpus = ZipfMarkovCorpus::generate(300_000, 512, 4, 1);
+        let toks = ByteTokenizer::new().encode(&corpus.bytes);
+        let batcher = TokenBatcher::new(toks, batch, t1 - 1, 0.1);
+        let trainer =
+            Trainer::new(&engine, cfg, vec![], DataSource::Tokens(batcher)).expect("lm trainer");
+        let chunk = match &trainer.data {
+            DataSource::Tokens(bt) => value(bt.val_chunk(ke, &mut Rng::new(3))),
+            DataSource::InGraph => unreachable!("lm consumes tokens"),
+        };
+        let fmt = QuantFormat::parse("int4", 0).unwrap();
+        let quantized = trainer.quantized_keys().to_vec();
+        b.run("rtn_eval/lm_150m_sim/int4/host_cast", || {
+            let loss = trainer
+                .session
+                .eval_loss(Some(chunk.clone()), &mut |spec, v| {
+                    Ok(if quantized.iter().any(|k| k == &spec.name) {
+                        let mut wq = v.as_f32();
+                        cast_rtn(&mut wq, &fmt);
+                        value(HostTensor::from_f32(&v.shape, wq))
+                    } else {
+                        v.clone()
+                    })
+                })
+                .unwrap();
+            std::hint::black_box(loss);
+        });
+        b.run("rtn_eval/lm_150m_sim/int4/fused_packed", || {
+            let loss = trainer
+                .session
+                .eval_loss_quantized("int4", Some(chunk.clone()))
+                .unwrap()
+                .expect("native eval_q entry");
+            std::hint::black_box(loss);
+        });
+        // the evaluator's public route lands on the fused path for RTN
+        let mut ev = Evaluator::new(7);
+        b.run("rtn_eval/lm_150m_sim/int4/evaluator_route", || {
+            let loss = ev
+                .eval_cast(&trainer, Some(&fmt), lotion::quant::Rounding::Rtn)
+                .unwrap();
+            std::hint::black_box(loss);
+        });
+    }
+
     // Pool-dispatch overhead (ISSUE 4): an element-wise kernel on a
     // tensor just above PAR_MIN, where per-call thread spawning used
     // to dominate. With the persistent pool the `tall` row tracks pure

@@ -95,6 +95,14 @@ impl Args {
         }
     }
 
+    /// The `--simd {auto|scalar|avx2|neon}` kernel-tier override
+    /// shared by every subcommand (mirrors [`Args::backend`]).
+    /// `None` means auto-detect; an explicit tier pins the dispatch
+    /// (clamped to scalar if the CPU lacks it).
+    pub fn simd(&self) -> Result<Option<crate::util::simd::SimdTier>> {
+        crate::util::simd::SimdTier::parse(self.flag("simd").unwrap_or("auto"))
+    }
+
     /// The `--sweep-workers N` knob shared by the sweep-shaped
     /// subcommands (`sweep`, `exp`). Returns the *requested* width —
     /// flag first, then `cfg_default` (the `[sweep] workers` config
@@ -146,6 +154,15 @@ mod tests {
         assert_eq!(parse("train --backend native").backend().unwrap(), "native");
         assert_eq!(parse("train --backend pjrt").backend().unwrap(), "pjrt");
         assert!(parse("train --backend tpu").backend().is_err());
+    }
+
+    #[test]
+    fn simd_flag_is_validated() {
+        use crate::util::simd::SimdTier;
+        assert_eq!(parse("train").simd().unwrap(), None);
+        assert_eq!(parse("train --simd scalar").simd().unwrap(), Some(SimdTier::Scalar));
+        assert_eq!(parse("train --simd avx2").simd().unwrap(), Some(SimdTier::Avx2));
+        assert!(parse("train --simd sse9").simd().is_err());
     }
 
     #[test]

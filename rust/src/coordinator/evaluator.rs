@@ -5,9 +5,17 @@
 //! is a parameter map handed to
 //! [`Session::eval_loss`](crate::runtime::Session::eval_loss), applied
 //! on host tensors before they enter `Executor::call`.
+//!
+//! Per-tensor RTN casts take a faster, bit-identical route when the
+//! backend registers a fused `eval_q` entry (the native engine does):
+//! [`Session::eval_loss_quantized`](crate::runtime::Session::eval_loss_quantized)
+//! hands the *master* weights to the engine, which packs the quantized
+//! subset into block codes and dequantizes inside its matmul tiles —
+//! no full-f32 cast copy. DESIGN.md §3 "Packed quantized eval".
 
 use crate::quant::{cast, QuantFormat, Rounding};
 use crate::runtime::executor::{value, Value};
+use crate::runtime::Role;
 use crate::util::rng::Rng;
 use anyhow::{anyhow, Result};
 
@@ -45,6 +53,27 @@ impl Evaluator {
             None
         };
         let quantized = trainer.quantized_keys();
+        // RTN casts of a backend-registered per-tensor format route
+        // through the fused `eval_q` entry: the engine packs the
+        // quantized subset into block codes and never materializes a
+        // full-f32 copy. The fork burn keeps `self.rng` bit-aligned
+        // with the host-cast path below, which forks once per
+        // quantized param in eval-entry order — later RR evals must
+        // see the same stream either way.
+        if rounding == Rounding::Rtn {
+            if let Some(fmt) = format.filter(|f| f.block_size == 0) {
+                if let Some(loss) =
+                    trainer.session.eval_loss_quantized(&fmt.name, data.clone())?
+                {
+                    for spec in trainer.session.eval_entry().input_specs(Role::Param) {
+                        if quantized.iter().any(|k| k == &spec.name) {
+                            let _ = self.rng.fork(1);
+                        }
+                    }
+                    return Ok(loss);
+                }
+            }
+        }
         let rng = &mut self.rng;
         trainer.session.eval_loss(data, &mut |spec, v| {
             let fmt = match format {

@@ -45,6 +45,10 @@ common flags:
   --threads N                    native-backend worker threads (default:
                                  LOTION_THREADS env var, else all cores;
                                  output is bit-identical at any N)
+  --simd {auto|scalar|avx2|neon} kernel dispatch tier (default:
+                                 LOTION_SIMD env var, else runtime
+                                 detection; output is bit-identical at
+                                 every tier)
   --sweep-workers N              grid points in flight for sweep/exp,
                                  each on its own engine (default:
                                  LOTION_SWEEP_WORKERS env var, else 1;
@@ -75,6 +79,7 @@ fn make_executor(
     // coordinator-side quant casts (the evaluator's RTN/RR eval casts)
     // go through Pool::global(); keep them on the same knob
     lotion::util::pool::set_global_threads(threads);
+    lotion::util::simd::set_global_simd(args.simd()?);
     match args.backend()? {
         "native" => Ok(Box::new(NativeEngine::new().with_threads(threads))),
         "pjrt" => match lotion::runtime::pjrt_executor(Path::new(artifacts_dir))? {
@@ -96,6 +101,7 @@ fn make_factory(
 ) -> Result<Box<dyn ExecutorFactory>> {
     let threads = args.usize_or("threads", cfg_threads)?;
     lotion::util::pool::set_global_threads(threads);
+    lotion::util::simd::set_global_simd(args.simd()?);
     match args.backend()? {
         "native" => Ok(Box::new(NativeFactory::with_default_models(threads))),
         "pjrt" => match lotion::runtime::pjrt_factory(Path::new(artifacts_dir))? {

@@ -1,7 +1,9 @@
 //! Block partitioning + shared-scale computation (§2.1).
 
 use super::format::QuantFormat;
+use crate::simd_kernel;
 use crate::util::pool::{chunk_ranges, Pool, PAR_CHUNK, PAR_MIN};
+use crate::util::simd::active_tier;
 
 /// Iterator over (start, end) element ranges of the shared-scale blocks
 /// of an `n`-element tensor.
@@ -26,8 +28,19 @@ pub fn block_ranges_in(
     (b0..b1).map(move |b| (b, (b * bs).max(lo), ((b + 1) * bs).min(hi)))
 }
 
-fn abs_max(w: &[f32]) -> f32 {
+/// `max` is associative and commutative, so unlike the sum kernels
+/// this reduction is order-free — the SIMD tiers agree with scalar for
+/// free, but it still routes through the dispatcher so the absmax scan
+/// (half the RTN cast's memory traffic) widens with the ISA.
+#[inline(always)]
+fn abs_max_body(w: &[f32]) -> f32 {
     w.iter().fold(0f32, |m, v| m.max(v.abs()))
+}
+
+simd_kernel!(pub(crate) fn abs_max_tier(tier, w: &[f32]) -> f32 = abs_max_body);
+
+fn abs_max(w: &[f32]) -> f32 {
+    abs_max_tier(active_tier(), w)
 }
 
 /// Per-block scales `s_B = absmax(B)/qmax`; zero-absmax blocks get 1.0
@@ -157,6 +170,21 @@ mod tests {
             let serial = block_scales_pool(&w, &fmt, &Pool::serial());
             let par = block_scales_pool(&w, &fmt, &Pool::new(4));
             assert_eq!(serial, par, "block={block}");
+        }
+    }
+
+    #[test]
+    fn abs_max_tiers_match_scalar_bitwise() {
+        use crate::util::simd::{supported_tiers, SimdTier};
+        use crate::util::Rng;
+        let mut rng = Rng::new(17);
+        for n in [0usize, 1, 7, 8, 9, 65, 1000] {
+            let mut w = vec![0f32; n];
+            rng.fill_normal(&mut w);
+            let want = abs_max_tier(SimdTier::Scalar, &w);
+            for tier in supported_tiers() {
+                assert_eq!(abs_max_tier(tier, &w).to_bits(), want.to_bits(), "{tier:?} n={n}");
+            }
         }
     }
 

@@ -97,6 +97,41 @@ impl QuantFormat {
             }
         }
     }
+
+    /// The packed code for a scaled value `z`: an index into
+    /// [`QuantFormat::code_levels`] with `code_levels()[code_of(z)] ==
+    /// rtn(z)`. Defined *through* [`QuantFormat::rtn`] rather than as a
+    /// parallel rounding path, so packing and casting can never
+    /// diverge. The only non-bitwise case is `-0.0`: the code table
+    /// holds a single zero, so decode canonicalizes it to `+0.0`
+    /// (numerically equal, and a `+0.0`-initialized accumulator never
+    /// turns `-0.0` by adding signed zeros — matmul bits are unmoved).
+    #[inline]
+    pub fn code_of(&self, z: f32) -> u8 {
+        let q = self.rtn(z);
+        if self.uniform {
+            // q is an exact integer in [-qmax, qmax]; int8's 0..=254
+            // range is the widest and still fits a byte
+            (q + self.qmax) as u8
+        } else {
+            // q is one of the 15 levels by construction (== finds it
+            // even for the signed-zero query)
+            FP4_LEVELS.iter().position(|&lev| lev == q).unwrap() as u8
+        }
+    }
+
+    /// The dequant table: level value per packed code. Uniform formats
+    /// enumerate the integer lattice `-qmax..=qmax` (code `q + qmax`);
+    /// the codebook format is the E2M1 table itself. At most 255
+    /// entries (int8), so every code fits a byte.
+    pub fn code_levels(&self) -> Vec<f32> {
+        if self.uniform {
+            let qmax = self.qmax as i32;
+            (-qmax..=qmax).map(|q| q as f32).collect()
+        } else {
+            FP4_LEVELS.to_vec()
+        }
+    }
 }
 
 #[cfg(test)]
@@ -168,6 +203,26 @@ mod tests {
         assert_eq!(f.rtn(-100.0), -6.0);
         // just inside the boundary: mid(4, 6) = 5
         assert_eq!(f.rtn(5.999), 6.0);
+    }
+
+    #[test]
+    fn code_of_indexes_the_level_table() {
+        for fmt in [QuantFormat::int4(), QuantFormat::int8(), QuantFormat::fp4()] {
+            let levels = fmt.code_levels();
+            assert!(levels.len() <= 255, "{}: codes must fit a byte", fmt.name);
+            let mut zs: Vec<f32> = (0..=400).map(|i| -10.0 + 0.05 * i as f32).collect();
+            zs.extend([-1e6, 1e6, -0.0, 0.0, 0.5, -0.5, 2.5, -2.5]);
+            for z in zs {
+                let code = fmt.code_of(z) as usize;
+                assert!(code < levels.len(), "{} z={z}: code {code} out of range", fmt.name);
+                let q = fmt.rtn(z);
+                assert_eq!(levels[code], q, "{} z={z}", fmt.name);
+                // bitwise except the canonicalized signed zero
+                if q != 0.0 {
+                    assert_eq!(levels[code].to_bits(), q.to_bits(), "{} z={z}", fmt.name);
+                }
+            }
+        }
     }
 
     #[test]

@@ -22,9 +22,11 @@
 
 pub mod blocks;
 pub mod format;
+pub mod packed;
 pub mod rounding;
 
 pub use format::{QuantFormat, FP4_LEVELS};
+pub use packed::PackedWeights;
 pub use rounding::{
     cast, cast_rr, cast_rr_seeded, cast_rtn, cast_rtn_pool, lotion_penalty,
     lotion_penalty_and_grad, lotion_penalty_and_grad_pool, lotion_penalty_grad, sigma2,

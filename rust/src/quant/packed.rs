@@ -1,0 +1,249 @@
+//! Packed block-quantized weight storage (§2.1 representation).
+//!
+//! The RTN-eval path historically materialized a full f32 copy of every
+//! quantized tensor (`cast_rtn` into a scratch `wq` buffer) before the
+//! dense matmuls consumed it. `PackedWeights` stores the same cast as
+//! per-block scales plus lattice *codes* — one byte per element for
+//! int5..int8, one nibble for formats with <= 16 levels (int2..int4,
+//! fp4) — and the fused matmul dequantizes on the fly. That drops the
+//! eval working set ~4-8x and removes the cast pass entirely.
+//!
+//! Exactness contract: `decode_at(i)` equals what `cast_rtn` would have
+//! written at `i`, bitwise, except that signed zero canonicalizes to
+//! `+0.0` (see [`QuantFormat::code_of`]; matmul results are still
+//! bitwise identical because a `+0.0`-seeded accumulator is immune to
+//! zero signs).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use super::blocks::{block_ranges, block_scales_pool};
+use super::format::QuantFormat;
+use crate::util::Pool;
+
+/// Counts full-tensor `decode_into` materializations, so tests can
+/// assert the fused eval path never falls back to a dense f32 copy.
+static DENSE_DECODES: AtomicUsize = AtomicUsize::new(0);
+
+/// Total dense decodes since process start (monotonic; tests diff it).
+pub fn dense_decode_count() -> usize {
+    DENSE_DECODES.load(Ordering::Relaxed)
+}
+
+/// A block-quantized tensor: per-block scales + per-element lattice
+/// codes, decoded through a small level table.
+#[derive(Clone, Debug)]
+pub struct PackedWeights {
+    len: usize,
+    /// elements per shared-scale block; 0 = per-tensor (single block)
+    block_size: usize,
+    scales: Vec<f32>,
+    /// codes, two-per-byte (low nibble first) when `nibble`
+    codes: Vec<u8>,
+    /// dequant table: `lut[code] = lattice level` (scaled domain)
+    lut: Vec<f32>,
+    nibble: bool,
+    fmt_name: String,
+}
+
+impl PackedWeights {
+    /// Pack `w` under RTN rounding (serial pool).
+    pub fn pack_rtn(w: &[f32], fmt: &QuantFormat) -> PackedWeights {
+        Self::pack_rtn_pool(w, fmt, &Pool::serial())
+    }
+
+    /// Pack `w` under RTN rounding: per-block absmax scales (shared
+    /// with `cast_rtn` via `block_scales_pool`), then one code per
+    /// element. The scale computation parallelizes; the code loop is a
+    /// single serial pass (eval-path packing is off the training hot
+    /// loop, and the pass is bound by the same `rtn` cost as the cast
+    /// it replaces).
+    pub fn pack_rtn_pool(w: &[f32], fmt: &QuantFormat, pool: &Pool) -> PackedWeights {
+        let scales = block_scales_pool(w, fmt, pool);
+        let lut = fmt.code_levels();
+        let nibble = lut.len() <= 16;
+        let n = w.len();
+        let mut codes = vec![0u8; if nibble { n.div_ceil(2) } else { n }];
+        for (bi, (s, e)) in block_ranges(n, fmt.block_size).enumerate() {
+            let sb = scales[bi];
+            for i in s..e {
+                let code = fmt.code_of(w[i] / sb);
+                if nibble {
+                    codes[i >> 1] |= code << ((i & 1) * 4);
+                } else {
+                    codes[i] = code;
+                }
+            }
+        }
+        PackedWeights {
+            len: n,
+            block_size: fmt.block_size,
+            scales,
+            codes,
+            lut,
+            nibble,
+            fmt_name: fmt.name.clone(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn fmt_name(&self) -> &str {
+        &self.fmt_name
+    }
+
+    pub fn block_size(&self) -> usize {
+        self.block_size
+    }
+
+    /// The dequant table (scaled-domain lattice levels).
+    pub fn lut(&self) -> &[f32] {
+        &self.lut
+    }
+
+    /// Scale of the block containing element `i`.
+    #[inline]
+    pub fn scale_of(&self, i: usize) -> f32 {
+        if self.block_size == 0 {
+            self.scales[0]
+        } else {
+            self.scales[i / self.block_size]
+        }
+    }
+
+    /// Per-block scales.
+    pub fn scales(&self) -> &[f32] {
+        &self.scales
+    }
+
+    /// Lattice code of element `i`.
+    #[inline]
+    pub fn code_at(&self, i: usize) -> u8 {
+        if self.nibble {
+            (self.codes[i >> 1] >> ((i & 1) * 4)) & 0xF
+        } else {
+            self.codes[i]
+        }
+    }
+
+    /// Dequantized value of element `i`.
+    #[inline]
+    pub fn decode_at(&self, i: usize) -> f32 {
+        self.lut[self.code_at(i) as usize] * self.scale_of(i)
+    }
+
+    /// Materialize the full f32 tensor into `dst`. This is the slow
+    /// fallback the fused matmul exists to avoid; it bumps a global
+    /// counter so tests can prove the hot path stays packed.
+    pub fn decode_into(&self, dst: &mut [f32]) {
+        assert_eq!(dst.len(), self.len);
+        DENSE_DECODES.fetch_add(1, Ordering::Relaxed);
+        for (bi, (s, e)) in block_ranges(self.len, self.block_size).enumerate() {
+            let sb = self.scales[bi];
+            for i in s..e {
+                dst[i] = self.lut[self.code_at(i) as usize] * sb;
+            }
+        }
+    }
+
+    /// Payload bytes (scales + codes + lut), for traffic accounting.
+    pub fn bytes(&self) -> usize {
+        self.scales.len() * 4 + self.codes.len() + self.lut.len() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::rounding::cast_rtn;
+    use crate::util::Rng;
+
+    fn formats() -> Vec<QuantFormat> {
+        let mut fmts = Vec::new();
+        for name in ["int4", "int8", "fp4"] {
+            for block in [0usize, 64] {
+                fmts.push(QuantFormat::parse(name, block).unwrap());
+            }
+        }
+        fmts
+    }
+
+    #[test]
+    fn decode_matches_cast_rtn() {
+        let mut rng = Rng::new(41);
+        for fmt in formats() {
+            for n in [1usize, 7, 64, 65, 1000] {
+                let mut w = vec![0f32; n];
+                rng.fill_normal(&mut w);
+                let packed = PackedWeights::pack_rtn(&w, &fmt);
+                let mut cast = w.clone();
+                cast_rtn(&mut cast, &fmt);
+                let mut dec = vec![0f32; n];
+                packed.decode_into(&mut dec);
+                for i in 0..n {
+                    assert_eq!(dec[i], cast[i], "{} block={} i={i}", fmt.name, fmt.block_size);
+                    // decode_at agrees with the bulk path bitwise
+                    assert_eq!(packed.decode_at(i).to_bits(), dec[i].to_bits());
+                    // bitwise vs the cast except canonicalized -0.0
+                    if cast[i] != 0.0 {
+                        assert_eq!(dec[i].to_bits(), cast[i].to_bits(), "{} i={i}", fmt.name);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn nibble_packing_halves_code_bytes() {
+        let mut rng = Rng::new(42);
+        let mut w = vec![0f32; 101];
+        rng.fill_normal(&mut w);
+        let p4 = PackedWeights::pack_rtn(&w, &QuantFormat::int4());
+        let p8 = PackedWeights::pack_rtn(&w, &QuantFormat::int8());
+        assert!(p4.nibble);
+        assert!(!p8.nibble);
+        assert_eq!(p4.codes.len(), 51); // ceil(101/2)
+        assert_eq!(p8.codes.len(), 101);
+        let pfp4 = PackedWeights::pack_rtn(&w, &QuantFormat::fp4());
+        assert!(pfp4.nibble); // 15 levels fit a nibble
+    }
+
+    #[test]
+    fn pool_packing_matches_serial() {
+        let mut rng = Rng::new(43);
+        let mut w = vec![0f32; 100_000];
+        rng.fill_normal(&mut w);
+        for fmt in formats() {
+            let serial = PackedWeights::pack_rtn(&w, &fmt);
+            let par = PackedWeights::pack_rtn_pool(&w, &fmt, &Pool::new(4));
+            assert_eq!(serial.scales, par.scales, "{} block={}", fmt.name, fmt.block_size);
+            assert_eq!(serial.codes, par.codes, "{} block={}", fmt.name, fmt.block_size);
+        }
+    }
+
+    #[test]
+    fn decode_counter_increments_only_on_dense_decode() {
+        let w = vec![0.5f32, -1.0, 2.0];
+        let packed = PackedWeights::pack_rtn(&w, &QuantFormat::int8());
+        let before = dense_decode_count();
+        let _ = packed.decode_at(1); // element access: not a dense decode
+        let _ = packed.code_at(2);
+        assert_eq!(dense_decode_count(), before);
+        let mut dst = vec![0f32; 3];
+        packed.decode_into(&mut dst);
+        assert_eq!(dense_decode_count(), before + 1);
+    }
+
+    #[test]
+    fn empty_tensor_packs() {
+        let packed = PackedWeights::pack_rtn(&[], &QuantFormat::int4());
+        assert!(packed.is_empty());
+        assert_eq!(packed.bytes(), packed.lut.len() * 4);
+        packed.decode_into(&mut []);
+    }
+}

@@ -12,10 +12,98 @@
 
 use super::blocks::{block_ranges_in, block_scales_pool};
 use super::format::QuantFormat;
+use crate::simd_kernel;
 use crate::util::pool::{chunk_ranges, Pool, PAR_CHUNK};
 use crate::util::rng::Rng;
+use crate::util::simd::active_tier;
 use std::cell::RefCell;
 use std::ops::Range;
+
+// ---------------------------------------------------------------------------
+// per-block lattice kernels (SIMD-dispatched)
+//
+// Every entry point below — serial seed API, explicit-pool API, any
+// thread count, any `--simd` tier — funnels through these four block
+// bodies, so the rounding loop exists exactly once per operation and
+// the tiers cannot diverge from each other or from the scalar
+// reference. The bodies are plain element loops; the `simd_kernel!`
+// wrappers recompile them per ISA tier (`util::simd`), where the
+// autovectorizer widens `rtn`/`bracket` without changing operation
+// order — results stay bit-identical across tiers.
+// ---------------------------------------------------------------------------
+
+/// One shared-scale block of the RTN cast: `v <- rtn(v / sb) * sb`.
+#[inline(always)]
+fn rtn_block_body(chunk: &mut [f32], sb: f32, fmt: &QuantFormat) {
+    for v in chunk {
+        *v = fmt.rtn(*v / sb) * sb;
+    }
+}
+
+simd_kernel!(pub(crate) fn rtn_block(tier, chunk: &mut [f32], sb: f32, fmt: &QuantFormat) = rtn_block_body);
+
+/// One shared-scale block of the RR cast: round up where the uniform
+/// noise undershoots `(z - l)/(u - l)`. `noise` is pre-filled, aligned
+/// element-for-element with `chunk`.
+#[inline(always)]
+fn rr_block_body(chunk: &mut [f32], noise: &[f32], sb: f32, fmt: &QuantFormat) {
+    for (v, nz) in chunk.iter_mut().zip(noise) {
+        let z = *v / sb;
+        let (l, u) = fmt.bracket(z);
+        let q = if u > l {
+            let p_up = (z - l) / (u - l);
+            if *nz < p_up {
+                u
+            } else {
+                l
+            }
+        } else {
+            l
+        };
+        *v = q * sb;
+    }
+}
+
+simd_kernel!(pub(crate) fn rr_block(tier, chunk: &mut [f32], noise: &[f32], sb: f32, fmt: &QuantFormat) = rr_block_body);
+
+/// One shared-scale block of the RR variance: `s_B^2 (u - z)(z - l)`.
+#[inline(always)]
+fn sigma2_block_body(w: &[f32], dst: &mut [f32], sb: f32, fmt: &QuantFormat) {
+    for (v, d) in w.iter().zip(dst) {
+        let z = *v / sb;
+        let (l, u) = fmt.bracket(z);
+        *d = sb * sb * (u - z) * (z - l);
+    }
+}
+
+simd_kernel!(pub(crate) fn sigma2_block(tier, w: &[f32], dst: &mut [f32], sb: f32, fmt: &QuantFormat) = sigma2_block_body);
+
+/// One shared-scale block of the Eq. 3 penalty + gradient; returns the
+/// block's f64 penalty partial, accumulated in ascending element order.
+#[inline(always)]
+fn penalty_block_body(
+    w: &[f32],
+    fisher: &[f32],
+    g: &mut [f32],
+    sb: f32,
+    fmt: &QuantFormat,
+) -> f64 {
+    let mut pen = 0.0f64;
+    for ((v, f), gi) in w.iter().zip(fisher).zip(g) {
+        let z = *v / sb;
+        let (l, u) = fmt.bracket(z);
+        pen += 0.5
+            * (*f as f64)
+            * (sb as f64)
+            * (sb as f64)
+            * ((u - z) as f64)
+            * ((z - l) as f64);
+        *gi = 0.5 * *f * sb * (u + l - 2.0 * z);
+    }
+    pen
+}
+
+simd_kernel!(pub(crate) fn penalty_block(tier, w: &[f32], fisher: &[f32], g: &mut [f32], sb: f32, fmt: &QuantFormat) -> f64 = penalty_block_body);
 
 thread_local! {
     /// RR noise buffer, at most one chunk (`PAR_CHUNK` f32s) long —
@@ -51,7 +139,9 @@ impl Rounding {
     }
 }
 
-/// In-place RTN cast: `w <- s_B * rtn(w / s_B)`.
+/// In-place RTN cast: `w <- s_B * rtn(w / s_B)`. Thin seed API over
+/// [`cast_rtn_pool`] — both share the single [`rtn_block`] kernel, so
+/// there is no serial/pool loop pair to drift apart.
 pub fn cast_rtn(w: &mut [f32], fmt: &QuantFormat) {
     cast_rtn_pool(w, fmt, &Pool::global())
 }
@@ -61,12 +151,10 @@ pub fn cast_rtn(w: &mut [f32], fmt: &QuantFormat) {
 pub fn cast_rtn_pool(w: &mut [f32], fmt: &QuantFormat, pool: &Pool) {
     let n = w.len();
     let scales = block_scales_pool(w, fmt, pool);
+    let tier = active_tier();
     pool.for_chunks_mut(w, &chunk_ranges(n, PAR_CHUNK), n, |_, r, chunk| {
         for (bi, s, e) in block_ranges_in(n, fmt.block_size, r.start, r.end) {
-            let sb = scales[bi];
-            for v in &mut chunk[s - r.start..e - r.start] {
-                *v = fmt.rtn(*v / sb) * sb;
-            }
+            rtn_block(tier, &mut chunk[s - r.start..e - r.start], scales[bi], fmt);
         }
     });
 }
@@ -90,6 +178,7 @@ pub fn cast_rr(w: &mut [f32], fmt: &QuantFormat, rng: &mut Rng) {
 pub fn cast_rr_seeded(w: &mut [f32], fmt: &QuantFormat, seed: u64, pool: &Pool) {
     let n = w.len();
     let scales = block_scales_pool(w, fmt, pool);
+    let tier = active_tier();
     let kernel = |ci: usize, r: Range<usize>, chunk: &mut [f32]| {
         let mut rng = Rng::stream(seed, &[ci as u64]);
         NOISE.with(|buf| {
@@ -100,18 +189,13 @@ pub fn cast_rr_seeded(w: &mut [f32], fmt: &QuantFormat, seed: u64, pool: &Pool) 
             let noise = &mut noise[..r.len()];
             rng.fill_uniform(noise);
             for (bi, s, e) in block_ranges_in(n, fmt.block_size, r.start, r.end) {
-                let sb = scales[bi];
-                for i in s..e {
-                    let z = chunk[i - r.start] / sb;
-                    let (l, u) = fmt.bracket(z);
-                    let q = if u > l {
-                        let p_up = (z - l) / (u - l);
-                        if noise[i - r.start] < p_up { u } else { l }
-                    } else {
-                        l
-                    };
-                    chunk[i - r.start] = q * sb;
-                }
+                rr_block(
+                    tier,
+                    &mut chunk[s - r.start..e - r.start],
+                    &noise[s - r.start..e - r.start],
+                    scales[bi],
+                    fmt,
+                );
             }
         });
     };
@@ -137,14 +221,10 @@ pub fn sigma2_pool(w: &[f32], fmt: &QuantFormat, pool: &Pool) -> Vec<f32> {
     let n = w.len();
     let scales = block_scales_pool(w, fmt, pool);
     let mut out = vec![0f32; n];
+    let tier = active_tier();
     pool.for_chunks_mut(&mut out, &chunk_ranges(n, PAR_CHUNK), n, |_, r, dst| {
         for (bi, s, e) in block_ranges_in(n, fmt.block_size, r.start, r.end) {
-            let sb = scales[bi];
-            for i in s..e {
-                let z = w[i] / sb;
-                let (l, u) = fmt.bracket(z);
-                dst[i - r.start] = sb * sb * (u - z) * (z - l);
-            }
+            sigma2_block(tier, &w[s..e], &mut dst[s - r.start..e - r.start], scales[bi], fmt);
         }
     });
     out
@@ -191,21 +271,18 @@ pub fn lotion_penalty_and_grad_pool(
     let n = w.len();
     let scales = block_scales_pool(w, fmt, pool);
     let mut grad = vec![0f32; n];
+    let tier = active_tier();
     let partials = pool.for_chunks_mut(&mut grad, &chunk_ranges(n, PAR_CHUNK), n, |_, r, g| {
         let mut pen = 0.0f64;
         for (bi, s, e) in block_ranges_in(n, fmt.block_size, r.start, r.end) {
-            let sb = scales[bi];
-            for i in s..e {
-                let z = w[i] / sb;
-                let (l, u) = fmt.bracket(z);
-                pen += 0.5
-                    * (fisher[i] as f64)
-                    * (sb as f64)
-                    * (sb as f64)
-                    * ((u - z) as f64)
-                    * ((z - l) as f64);
-                g[i - r.start] = 0.5 * fisher[i] * sb * (u + l - 2.0 * z);
-            }
+            pen += penalty_block(
+                tier,
+                &w[s..e],
+                &fisher[s..e],
+                &mut g[s - r.start..e - r.start],
+                scales[bi],
+                fmt,
+            );
         }
         pen
     });
@@ -427,6 +504,50 @@ mod tests {
                 assert_eq!(pg[0].1, pg[1].1, "pen grad n={n} block={block}");
                 assert_eq!(pg[0].0.to_bits(), pg[2].0.to_bits(), "pen n={n} block={block}");
                 assert_eq!(pg[0].1, pg[2].1, "pen grad n={n} block={block}");
+            }
+        }
+    }
+
+    /// The dispatch contract: every supported SIMD tier runs the four
+    /// block kernels bit-identically to the scalar reference, across
+    /// lengths hitting every remainder lane.
+    #[test]
+    fn block_kernels_are_tier_invariant() {
+        use crate::util::simd::{supported_tiers, SimdTier};
+        let mut rng = Rng::new(29);
+        for fmt in [QuantFormat::int4(), QuantFormat::int8(), QuantFormat::fp4()] {
+            for n in [1usize, 7, 8, 9, 64, 65, 1000] {
+                let mut w = vec![0f32; n];
+                rng.fill_normal(&mut w);
+                let mut noise = vec![0f32; n];
+                rng.fill_uniform(&mut noise);
+                let fisher: Vec<f32> = (0..n).map(|i| 1.0 / (1 + i % 5) as f32).collect();
+                let sb = 0.37f32;
+
+                let mut rtn0 = w.clone();
+                rtn_block(SimdTier::Scalar, &mut rtn0, sb, &fmt);
+                let mut rr0 = w.clone();
+                rr_block(SimdTier::Scalar, &mut rr0, &noise, sb, &fmt);
+                let mut s20 = vec![0f32; n];
+                sigma2_block(SimdTier::Scalar, &w, &mut s20, sb, &fmt);
+                let mut g0 = vec![0f32; n];
+                let p0 = penalty_block(SimdTier::Scalar, &w, &fisher, &mut g0, sb, &fmt);
+
+                for tier in supported_tiers() {
+                    let mut rtn = w.clone();
+                    rtn_block(tier, &mut rtn, sb, &fmt);
+                    assert_eq!(rtn, rtn0, "rtn {} {tier:?} n={n}", fmt.name);
+                    let mut rr = w.clone();
+                    rr_block(tier, &mut rr, &noise, sb, &fmt);
+                    assert_eq!(rr, rr0, "rr {} {tier:?} n={n}", fmt.name);
+                    let mut s2 = vec![0f32; n];
+                    sigma2_block(tier, &w, &mut s2, sb, &fmt);
+                    assert_eq!(s2, s20, "sigma2 {} {tier:?} n={n}", fmt.name);
+                    let mut g = vec![0f32; n];
+                    let p = penalty_block(tier, &w, &fisher, &mut g, sb, &fmt);
+                    assert_eq!(p.to_bits(), p0.to_bits(), "pen {} {tier:?} n={n}", fmt.name);
+                    assert_eq!(g, g0, "pen grad {} {tier:?} n={n}", fmt.name);
+                }
             }
         }
     }

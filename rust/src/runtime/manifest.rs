@@ -185,6 +185,14 @@ impl Manifest {
         })
     }
 
+    /// The RTN-quantized eval entry for (model, format), when the
+    /// backend registers one (`eval_q_{model}_{fmt}`, native engines
+    /// only — AOT manifests return `None` and callers fall back to
+    /// host-side casting through the plain eval entry).
+    pub fn find_eval_quant(&self, model: &str, format: &str) -> Option<&ArtifactEntry> {
+        self.artifacts.get(&format!("eval_q_{model}_{format}"))
+    }
+
     pub fn find_init(&self, model: &str) -> Result<&ArtifactEntry> {
         self.get(&format!("init_{model}")).map_err(|_| {
             anyhow!(

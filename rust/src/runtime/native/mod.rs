@@ -34,7 +34,7 @@ pub mod testbeds;
 pub mod transformer;
 
 pub use self::optim::OptKind;
-pub use self::program::{EvalCtx, Method, NativeProgram, StepCtx, StepStreams};
+pub use self::program::{EvalCtx, Method, NativeProgram, ParamView, StepCtx, StepStreams};
 pub use self::testbeds::ModelSpec;
 pub use self::transformer::{LmConfig, LmProgram};
 
@@ -42,7 +42,9 @@ use self::optim::OptState;
 use super::executor::{check_args, value, Executor, Value};
 use super::factory::ExecutorFactory;
 use super::manifest::{ArtifactEntry, Manifest, Role, TensorSpec};
-use crate::quant::{cast_rr_seeded, cast_rtn_pool, lotion_penalty_and_grad_pool, QuantFormat};
+use crate::quant::{
+    cast_rr_seeded, cast_rtn_pool, lotion_penalty_and_grad_pool, PackedWeights, QuantFormat,
+};
 use crate::tensor::{DType, HostTensor};
 use crate::util::pool::Pool;
 use crate::util::rng::Rng;
@@ -128,6 +130,11 @@ impl ExecutorFactory for NativeFactory {
 enum Program {
     Train { model: NativeModel, method: Method, fmt: Option<QuantFormat> },
     Eval { model: NativeModel },
+    /// RTN-quantized eval (`eval_q_{model}_{fmt}`): casts happen
+    /// engine-side into packed block storage and the program consumes
+    /// them through its fused dequant path — the host never builds or
+    /// ships a full-f32 quantized copy.
+    EvalQuant { model: NativeModel, fmt: QuantFormat },
     Init { model: NativeModel },
 }
 
@@ -216,6 +223,10 @@ impl NativeEngine {
                 }
             }
             add(eval_entry(m), Program::Eval { model: m.clone() });
+            for name in ["int4", "int8", "fp4"] {
+                let fmt = QuantFormat::parse(name, 0).expect("builtin format");
+                add(eval_quant_entry(m, &fmt), Program::EvalQuant { model: m.clone(), fmt });
+            }
             add(init_entry(m), Program::Init { model: m.clone() });
         }
         NativeEngine {
@@ -462,6 +473,63 @@ impl NativeEngine {
         Ok(vec![value(HostTensor::scalar_f32(loss))])
     }
 
+    /// RTN-quantized eval: the quantized parameter subset is packed
+    /// engine-side into block-quantized codes ([`PackedWeights`], ~4-8x
+    /// smaller than f32) and handed to the program's
+    /// [`NativeProgram::val_loss_packed`] — for the LM that is the
+    /// fused dequant matmul, so no full-f32 `wq` copy of any quantized
+    /// tensor exists anywhere in the eval path. Bit-identical to
+    /// casting with `cast_rtn` on the host and calling the plain eval
+    /// entry.
+    fn run_eval_quant(
+        &self,
+        entry: &ArtifactEntry,
+        model: &NativeModel,
+        fmt: &QuantFormat,
+        args: &[Value],
+    ) -> Result<Vec<Value>> {
+        let get = input_lookup(entry, args);
+        let params: Vec<Vec<f32>> = entry
+            .input_specs(Role::Param)
+            .iter()
+            .map(|s| Ok(get(&s.name)?.as_f32()))
+            .collect::<Result<Vec<_>>>()?;
+        let statics: Vec<(String, Vec<f32>)> = entry
+            .input_specs(Role::Static)
+            .iter()
+            .map(|s| Ok((s.name.clone(), get(&s.name)?.as_f32())))
+            .collect::<Result<Vec<_>>>()?;
+        let data: Option<Vec<i32>> = match entry.inputs.iter().find(|s| s.role == Role::Data) {
+            Some(s) => Some(get(&s.name)?.as_i32()),
+            None => None,
+        };
+        let quantized = model.program.quantized();
+        let packed: Vec<Option<PackedWeights>> = entry
+            .input_specs(Role::Param)
+            .iter()
+            .zip(&params)
+            .map(|(s, p)| {
+                quantized
+                    .iter()
+                    .any(|q| q == &s.name)
+                    .then(|| PackedWeights::pack_rtn_pool(p, fmt, &self.pool))
+            })
+            .collect();
+        let views: Vec<ParamView<'_>> = packed
+            .iter()
+            .zip(&params)
+            .map(|(pk, p)| match pk {
+                Some(pk) => ParamView::Packed(pk),
+                None => ParamView::Dense(p),
+            })
+            .collect();
+        let ctx = EvalCtx { statics: &statics, data: data.as_deref(), pool: &self.pool };
+        let mut ds = self.take_scratch(&entry.model_name, &*model.program);
+        let loss = model.program.val_loss_packed(&views, &ctx, ds.program.as_mut())? as f32;
+        self.put_scratch(&entry.model_name, ds);
+        Ok(vec![value(HostTensor::scalar_f32(loss))])
+    }
+
     fn run_init(
         &self,
         entry: &ArtifactEntry,
@@ -500,6 +568,7 @@ impl Executor for NativeEngine {
                 self.run_train(entry, model, *method, fmt.as_ref(), args)
             }
             Program::Eval { model } => self.run_eval(entry, model, args),
+            Program::EvalQuant { model, fmt } => self.run_eval_quant(entry, model, fmt, args),
             Program::Init { model } => self.run_init(entry, model, args),
         }?;
         let mut t = self.timings.borrow_mut();
@@ -621,6 +690,36 @@ fn eval_entry(m: &NativeModel) -> ArtifactEntry {
     }
 }
 
+/// The RTN-quantized eval entry, `eval_q_{model}_{fmt}`: identical
+/// calling convention to the plain eval entry (FP32 master params in,
+/// scalar val_loss out) — the cast-and-pack is internal to the engine,
+/// which is the whole point: callers ship master weights once and the
+/// backend owns the quantized representation.
+fn eval_quant_entry(m: &NativeModel, fmt: &QuantFormat) -> ArtifactEntry {
+    let program = &*m.program;
+    let mut inputs = program.param_specs();
+    inputs.extend(program.static_specs());
+    let eval_batches = program.eval_batches().max(1);
+    if let Some(data) = program.train_data_spec(eval_batches) {
+        inputs.push(data);
+    }
+    let name = format!("eval_q_{}_{}", program.name(), fmt.name);
+    ArtifactEntry {
+        file: PathBuf::from(format!("native:{name}")),
+        name,
+        inputs,
+        outputs: vec![scalar_spec("val_loss", Role::Metric)],
+        kind: "eval_q".to_string(),
+        model_name: program.name(),
+        method: String::new(),
+        format: fmt.name.clone(),
+        steps_per_call: 0,
+        eval_batches,
+        optimizer: String::new(),
+        quantized: program.quantized(),
+    }
+}
+
 fn init_entry(m: &NativeModel) -> ArtifactEntry {
     let program = &*m.program;
     let name = format!("init_{}", program.name());
@@ -673,6 +772,8 @@ mod tests {
         assert_eq!(t.optimizer, "sgd");
         assert!(t.input_index("lam_reg").is_some());
         assert!(m.find_eval("linreg_d256").is_ok());
+        assert!(m.find_eval_quant("linreg_d256", "int4").is_some());
+        assert!(m.find_eval_quant("linreg_d256", "bf16").is_none());
         assert!(m.find_init("linear2_d12000_k8").is_ok());
         // ptq trains unquantized: format key collapses to "none"
         assert!(m.find_train("linreg_d256", "ptq", "int4").is_ok());
@@ -693,6 +794,9 @@ mod tests {
             assert!(t.quantized.contains(&"lm_head".to_string()));
             assert!(!t.quantized.contains(&"embed".to_string()));
             assert!(m.find_eval(model).is_ok());
+            for fmt in ["int4", "int8", "fp4"] {
+                assert!(m.find_eval_quant(model, fmt).is_some(), "{model}/{fmt}");
+            }
             assert!(m.find_init(model).is_ok());
         }
         // AOT-matching chunk lengths and batch geometry
@@ -701,6 +805,47 @@ mod tests {
         let ed = m.find_eval("lm-150m-sim").unwrap();
         let dspec = ed.inputs.iter().find(|s| s.role == Role::Data).unwrap();
         assert_eq!(dspec.shape, vec![8, 4, 129]);
+    }
+
+    /// The engine-side packed eval entry must give bitwise the loss of
+    /// casting the quantized subset on the host and calling the plain
+    /// eval entry — the packed representation is an optimization, not
+    /// a semantic change.
+    #[test]
+    fn quantized_eval_entry_matches_host_cast_eval() {
+        use crate::quant::cast_rtn;
+        let eng = NativeEngine::with_models(&[NativeModel::from_spec(
+            ModelSpec::LinReg { d: 16, batch: 8 },
+            OptKind::Sgd,
+            4,
+        )]);
+        let m = eng.manifest();
+        let eval = m.find_eval("linreg_d16").unwrap();
+        let d = 16;
+        let w: Vec<f32> = (0..d).map(|i| (i as f32 * 0.37).sin()).collect();
+        let mk_args = |entry: &ArtifactEntry, w: &[f32]| {
+            let mut args = zero_args(entry);
+            args[entry.input_index("w").unwrap()] =
+                value(HostTensor::from_f32(&[d], w.to_vec()));
+            args[entry.input_index("lam").unwrap()] =
+                value(HostTensor::from_f32(&[d], vec![1.5; d]));
+            args[entry.input_index("wstar").unwrap()] =
+                value(HostTensor::from_f32(&[d], (0..d).map(|i| i as f32 / 8.0).collect()));
+            args
+        };
+        for name in ["int4", "int8", "fp4"] {
+            let eval_q = m.find_eval_quant("linreg_d16", name).expect("eval_q registered");
+            assert_eq!(eval_q.kind, "eval_q");
+            assert_eq!(eval_q.format, name);
+            let fmt = QuantFormat::parse(name, 0).unwrap();
+            let mut wq = w.clone();
+            cast_rtn(&mut wq, &fmt);
+            let host = eng.call(eval, &mk_args(eval, &wq)).unwrap()[0].scalar_to_f32();
+            let fused = eng.call(eval_q, &mk_args(eval_q, &w)).unwrap()[0].scalar_to_f32();
+            assert_eq!(fused.to_bits(), host.to_bits(), "{name}: {fused} vs {host}");
+        }
+        // AOT-style manifests without eval_q entries return None
+        assert!(m.find_eval_quant("linreg_d16", "int16").is_none());
     }
 
     #[test]

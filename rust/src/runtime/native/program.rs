@@ -12,6 +12,7 @@
 //! the decoder-only transformer LM ([`super::transformer`]). Future
 //! workloads (serving, sharded CPU) plug in behind the same trait.
 
+use crate::quant::PackedWeights;
 use crate::runtime::manifest::TensorSpec;
 use crate::util::pool::Pool;
 use crate::util::rng::Rng;
@@ -78,6 +79,14 @@ pub struct EvalCtx<'a> {
     /// consumes data
     pub data: Option<&'a [i32]>,
     pub pool: &'a Pool,
+}
+
+/// One parameter as seen by the quantized-eval entry: dense f32, or a
+/// packed block-quantized tensor ([`PackedWeights`]) that programs
+/// with fused dequant kernels consume in place.
+pub enum ParamView<'a> {
+    Dense(&'a [f32]),
+    Packed(&'a PackedWeights),
 }
 
 /// Look up a static-role input by name.
@@ -172,6 +181,33 @@ pub trait NativeProgram: Send + Sync {
         ctx: &EvalCtx<'_>,
         scratch: &mut dyn Any,
     ) -> Result<f64>;
+
+    /// Validation loss with some parameters in packed block-quantized
+    /// form (the `eval_q_*` entries). The default materializes every
+    /// packed tensor back to dense f32 and delegates to
+    /// [`NativeProgram::val_loss`] — correct for any program, but it
+    /// pays the full decode (and bumps the process-wide dense-decode
+    /// counter). Programs with fused dequant kernels (the LM) override
+    /// this to consume the packed form in place.
+    fn val_loss_packed(
+        &self,
+        params: &[ParamView<'_>],
+        ctx: &EvalCtx<'_>,
+        scratch: &mut dyn Any,
+    ) -> Result<f64> {
+        let dense: Vec<Vec<f32>> = params
+            .iter()
+            .map(|p| match p {
+                ParamView::Dense(w) => w.to_vec(),
+                ParamView::Packed(pk) => {
+                    let mut out = vec![0.0f32; pk.len()];
+                    pk.decode_into(&mut out);
+                    out
+                }
+            })
+            .collect();
+        self.val_loss(&dense, ctx, scratch)
+    }
 }
 
 #[cfg(test)]

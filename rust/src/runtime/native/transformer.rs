@@ -19,17 +19,19 @@
 //! arrives as a `data`-role token batch; rounding noise is the
 //! driver's job).
 
+use crate::quant::PackedWeights;
 use crate::runtime::manifest::{Role, TensorSpec};
+use crate::simd_kernel;
 use crate::tensor::DType;
 use crate::util::pool::{chunk_ranges, Pool, PAR_CHUNK, PAR_MIN};
 use crate::util::rng::Rng;
-use crate::util::simd::dot_lanes;
+use crate::util::simd::{active_tier, dot_lanes_tier};
 use anyhow::{bail, Result};
 use std::any::Any;
 use std::cell::RefCell;
 use std::ops::Range;
 
-use super::program::{EvalCtx, NativeProgram, StepCtx};
+use super::program::{EvalCtx, NativeProgram, ParamView, StepCtx};
 
 /// Rows per parallel task in the row-parallel kernels — a fixed
 /// constant (never derived from the thread count), per the DESIGN.md
@@ -132,6 +134,41 @@ fn p_layer(l: usize, off: usize) -> usize {
     1 + l * PER_LAYER + off
 }
 
+/// A forward-pass weight: dense f32, or packed block-quantized codes
+/// consumed in place by the fused dequant matmul. The forward pass is
+/// generic over this so the quantized-eval path never materializes a
+/// full f32 copy of a cast tensor; training always passes `Dense`.
+#[derive(Clone, Copy)]
+enum WRef<'a> {
+    Dense(&'a [f32]),
+    Packed(&'a PackedWeights),
+}
+
+impl<'a> WRef<'a> {
+    /// The dense view — only the matmul weights may be packed
+    /// (embeddings and norm gains are gathered/broadcast elementwise,
+    /// which packed storage does not support).
+    fn dense(&self) -> &'a [f32] {
+        match self {
+            WRef::Dense(w) => w,
+            WRef::Packed(p) => {
+                panic!("packed weight ({} codes) where a dense tensor is required", p.len())
+            }
+        }
+    }
+}
+
+/// `y = x @ w` for either weight representation — the single matmul
+/// entry the forward pass uses. Both arms share tile geometry and
+/// summation order, so the outputs are bit-identical (packed decode
+/// canonicalizes `-0.0`, which a `+0.0`-seeded accumulator ignores).
+fn mm(x: &[f32], w: &WRef<'_>, y: &mut [f32], m: usize, d: usize, n: usize, pool: &Pool) {
+    match w {
+        WRef::Dense(wd) => matmul(x, wd, y, m, d, n, pool),
+        WRef::Packed(p) => matmul_packed(x, p, y, m, d, n, pool),
+    }
+}
+
 impl LmProgram {
     /// Build a custom LM program; validates the head geometry.
     pub fn new(name: &str, cfg: LmConfig, batch: usize, eval_batches: usize) -> Result<LmProgram> {
@@ -188,9 +225,12 @@ impl LmProgram {
 
     /// Forward pass at the given forward weights; fills the scratch's
     /// activations and `logits`. `tokens` is one `[B, T+1]` batch.
+    /// Weights arrive as [`WRef`]s so the quantized-eval path can feed
+    /// packed matmul weights; only the 2-D matmul operands may be
+    /// packed (the gather/broadcast tensors must be `Dense`).
     fn forward(
         &self,
-        ws: &[Vec<f32>],
+        ws: &[WRef<'_>],
         tokens: &[i32],
         s: &mut LmScratch,
         pool: &Pool,
@@ -216,7 +256,7 @@ impl LmProgram {
         }
 
         // token embedding gather (serial memcpy per row)
-        let embed = &ws[P_EMBED];
+        let embed = ws[P_EMBED].dense();
         for (row, &tk) in s.tok.iter().enumerate() {
             s.hs[0][row * d..(row + 1) * d].copy_from_slice(&embed[tk * d..(tk + 1) * d]);
         }
@@ -230,30 +270,31 @@ impl LmProgram {
             let base = p_layer(l, 0);
 
             rms_r(hin, &mut lay.r1, d, pool);
-            rmsnorm_apply(hin, &ws[base + L_NORM_ATTN], &lay.r1, &mut lay.xn1, d, pool);
-            matmul(&lay.xn1, &ws[base + L_ATTN_WQ], &mut lay.q, m, d, d, pool);
-            matmul(&lay.xn1, &ws[base + L_ATTN_WK], &mut lay.k, m, d, d, pool);
-            matmul(&lay.xn1, &ws[base + L_ATTN_WV], &mut lay.v, m, d, d, pool);
+            rmsnorm_apply(hin, ws[base + L_NORM_ATTN].dense(), &lay.r1, &mut lay.xn1, d, pool);
+            mm(&lay.xn1, &ws[base + L_ATTN_WQ], &mut lay.q, m, d, d, pool);
+            mm(&lay.xn1, &ws[base + L_ATTN_WK], &mut lay.k, m, d, d, pool);
+            mm(&lay.xn1, &ws[base + L_ATTN_WV], &mut lay.v, m, d, d, pool);
             rope_apply(&mut lay.q, cos, sin, b, t, nh, hd, 1.0, pool);
             rope_apply(&mut lay.k, cos, sin, b, t, nh, hd, 1.0, pool);
             attn_probs(&lay.q, &lay.k, &mut lay.p, b, nh, t, hd, pool);
             attn_mix(&lay.p, &lay.v, &mut lay.o, b, nh, t, hd, pool);
-            matmul(&lay.o, &ws[base + L_ATTN_WO], &mut s.tmp, m, d, d, pool);
+            mm(&lay.o, &ws[base + L_ATTN_WO], &mut s.tmp, m, d, d, pool);
             add_rows(hin, &s.tmp, &mut lay.h_attn, pool);
 
             rms_r(&lay.h_attn, &mut lay.r2, d, pool);
-            rmsnorm_apply(&lay.h_attn, &ws[base + L_NORM_MLP], &lay.r2, &mut lay.xn2, d, pool);
-            matmul(&lay.xn2, &ws[base + L_MLP_WGATE], &mut lay.gpre, m, d, f, pool);
-            matmul(&lay.xn2, &ws[base + L_MLP_WUP], &mut lay.u, m, d, f, pool);
+            let g_mlp = ws[base + L_NORM_MLP].dense();
+            rmsnorm_apply(&lay.h_attn, g_mlp, &lay.r2, &mut lay.xn2, d, pool);
+            mm(&lay.xn2, &ws[base + L_MLP_WGATE], &mut lay.gpre, m, d, f, pool);
+            mm(&lay.xn2, &ws[base + L_MLP_WUP], &mut lay.u, m, d, f, pool);
             swiglu_fwd(&lay.gpre, &lay.u, &mut lay.gu, pool);
-            matmul(&lay.gu, &ws[base + L_MLP_WDOWN], &mut s.tmp, m, f, d, pool);
+            mm(&lay.gu, &ws[base + L_MLP_WDOWN], &mut s.tmp, m, f, d, pool);
             add_rows(&lay.h_attn, &s.tmp, hout, pool);
         }
 
         let h_last = &s.hs[cfg.n_layers];
         rms_r(h_last, &mut s.rf, d, pool);
-        rmsnorm_apply(h_last, &ws[self.p_norm_final()], &s.rf, &mut s.xnf, d, pool);
-        matmul(&s.xnf, &ws[self.p_lm_head()], &mut s.logits, m, d, v, pool);
+        rmsnorm_apply(h_last, ws[self.p_norm_final()].dense(), &s.rf, &mut s.xnf, d, pool);
+        mm(&s.xnf, &ws[self.p_lm_head()], &mut s.logits, m, d, v, pool);
         Ok(())
     }
 
@@ -339,13 +380,37 @@ impl LmProgram {
     /// only) — shared by eval and the parity tests.
     fn batch_loss(
         &self,
-        ws: &[Vec<f32>],
+        ws: &[WRef<'_>],
         tokens: &[i32],
         s: &mut LmScratch,
         pool: &Pool,
     ) -> Result<f64> {
         self.forward(ws, tokens, s, pool)?;
         Ok(xent_loss(&s.logits, &s.tgt, self.cfg.vocab, pool))
+    }
+
+    /// Mean val loss over the eval batches at the given weight refs —
+    /// the shared body of `val_loss` (all dense) and `val_loss_packed`.
+    fn val_loss_refs(
+        &self,
+        ws: &[WRef<'_>],
+        ctx: &EvalCtx<'_>,
+        scratch: &mut dyn Any,
+    ) -> Result<f64> {
+        let s = scratch.downcast_mut::<LmScratch>().expect("lm scratch");
+        let data = ctx
+            .data
+            .ok_or_else(|| anyhow::anyhow!("{}: eval got no token batches", self.name))?;
+        let blen = self.batch * (self.cfg.seq_len + 1);
+        if data.is_empty() || data.len() % blen != 0 {
+            bail!("{}: eval data has {} tokens, not a multiple of {blen}", self.name, data.len());
+        }
+        let ke = data.len() / blen;
+        let mut total = 0.0f64;
+        for i in 0..ke {
+            total += self.batch_loss(ws, &data[i * blen..(i + 1) * blen], s, ctx.pool)?;
+        }
+        Ok(total / ke as f64)
     }
 
     /// Logits `[B*T, vocab]` for one `[B, T+1]` batch (the inputs are
@@ -358,7 +423,8 @@ impl LmProgram {
         pool: &Pool,
     ) -> Result<Vec<f32>> {
         let mut s = LmScratch::alloc(&self.cfg, self.batch);
-        self.forward(ws, tokens, &mut s, pool)?;
+        let refs: Vec<WRef<'_>> = ws.iter().map(|w| WRef::Dense(w)).collect();
+        self.forward(&refs, tokens, &mut s, pool)?;
         Ok(s.logits)
     }
 }
@@ -473,7 +539,8 @@ impl NativeProgram for LmProgram {
         let tokens = ctx
             .data
             .ok_or_else(|| anyhow::anyhow!("{}: train step got no token batch", self.name))?;
-        self.forward(wq, tokens, s, ctx.pool)?;
+        let refs: Vec<WRef<'_>> = wq.iter().map(|w| WRef::Dense(w)).collect();
+        self.forward(&refs, tokens, s, ctx.pool)?;
         let loss = xent_loss_grad(&s.logits, &s.tgt, &mut s.dlogits, self.cfg.vocab, ctx.pool);
         self.backward(wq, s, ctx.pool, grads);
         Ok(loss)
@@ -485,20 +552,28 @@ impl NativeProgram for LmProgram {
         ctx: &EvalCtx<'_>,
         scratch: &mut dyn Any,
     ) -> Result<f64> {
-        let s = scratch.downcast_mut::<LmScratch>().expect("lm scratch");
-        let data = ctx
-            .data
-            .ok_or_else(|| anyhow::anyhow!("{}: eval got no token batches", self.name))?;
-        let blen = self.batch * (self.cfg.seq_len + 1);
-        if data.is_empty() || data.len() % blen != 0 {
-            bail!("{}: eval data has {} tokens, not a multiple of {blen}", self.name, data.len());
-        }
-        let ke = data.len() / blen;
-        let mut total = 0.0f64;
-        for i in 0..ke {
-            total += self.batch_loss(params, &data[i * blen..(i + 1) * blen], s, ctx.pool)?;
-        }
-        Ok(total / ke as f64)
+        let refs: Vec<WRef<'_>> = params.iter().map(|w| WRef::Dense(w)).collect();
+        self.val_loss_refs(&refs, ctx, scratch)
+    }
+
+    /// The fused quantized-eval path: packed matmul weights are
+    /// consumed in place by [`matmul_packed`] — no full-f32 `wq`
+    /// buffer is ever materialized (the default impl's decode counter
+    /// stays untouched, asserted by `tests/simd_dispatch.rs`).
+    fn val_loss_packed(
+        &self,
+        params: &[ParamView<'_>],
+        ctx: &EvalCtx<'_>,
+        scratch: &mut dyn Any,
+    ) -> Result<f64> {
+        let refs: Vec<WRef<'_>> = params
+            .iter()
+            .map(|p| match p {
+                ParamView::Dense(w) => WRef::Dense(w),
+                ParamView::Packed(p) => WRef::Packed(p),
+            })
+            .collect();
+        self.val_loss_refs(&refs, ctx, scratch)
     }
 }
 
@@ -637,69 +712,186 @@ fn head_ranges(bh: usize, tt: usize) -> Vec<Range<usize>> {
 const TILE_M: usize = 4;
 const TILE_N: usize = 16;
 
+/// The per-chunk tile loop of [`matmul`]: rows `row0..row0 + out.len()
+/// / n` of `y = x @ w`, register-blocked. Compiled once per SIMD tier
+/// through [`simd_kernel!`] — the tier clones run this exact body, so
+/// the depth summation order (ascending, per output element) is
+/// tier-invariant and the autovectorizer may only widen it.
+#[inline(always)]
+fn matmul_tile_body(x: &[f32], w: &[f32], out: &mut [f32], row0: usize, d: usize, n: usize) {
+    let rows = out.len() / n;
+    let mut i0 = 0;
+    while i0 < rows {
+        let mr = TILE_M.min(rows - i0);
+        let mut j0 = 0;
+        while j0 < n {
+            let nb = TILE_N.min(n - j0);
+            let mut acc = [[0.0f32; TILE_N]; TILE_M];
+            if mr == TILE_M && nb == TILE_N {
+                // full tile: fixed-size loops the compiler unrolls
+                for di in 0..d {
+                    let wrow: &[f32; TILE_N] =
+                        w[di * n + j0..di * n + j0 + TILE_N].try_into().unwrap();
+                    for ii in 0..TILE_M {
+                        let xv = x[(row0 + i0 + ii) * d + di];
+                        for (a, &wv) in acc[ii].iter_mut().zip(wrow) {
+                            *a += xv * wv;
+                        }
+                    }
+                }
+            } else {
+                // edge tile: same loop with clipped bounds
+                for di in 0..d {
+                    let wrow = &w[di * n + j0..di * n + j0 + nb];
+                    for ii in 0..mr {
+                        let xv = x[(row0 + i0 + ii) * d + di];
+                        for (a, &wv) in acc[ii][..nb].iter_mut().zip(wrow) {
+                            *a += xv * wv;
+                        }
+                    }
+                }
+            }
+            for ii in 0..mr {
+                out[(i0 + ii) * n + j0..(i0 + ii) * n + j0 + nb].copy_from_slice(&acc[ii][..nb]);
+            }
+            j0 += nb;
+        }
+        i0 += mr;
+    }
+}
+
+simd_kernel!(
+    fn matmul_tile(tier, x: &[f32], w: &[f32], out: &mut [f32], row0: usize, d: usize, n: usize) =
+        matmul_tile_body
+);
+
 /// `y[M,N] = x[M,D] @ w[D,N]`, row-parallel in fixed [`ROWS_PER_TASK`]
 /// chunks, register-blocked within each chunk. Per output element the
 /// depth summation order is ascending — the same fixed order as the
 /// pre-blocked scalar kernel, so forward logits are bit-identical to
-/// it (and to any thread count).
+/// it (and to any thread count or SIMD tier; the tier is hoisted once
+/// per call and pinned across the parallel region).
 fn matmul(x: &[f32], w: &[f32], y: &mut [f32], m: usize, d: usize, n: usize, pool: &Pool) {
     if m == 0 || n == 0 {
         return;
     }
+    let tier = active_tier();
     pool.for_chunks_mut(y, &row_ranges(m, n), m * d * n, |_, r, out| {
-        let row0 = r.start / n;
-        let rows = out.len() / n;
-        let mut i0 = 0;
-        while i0 < rows {
-            let mr = TILE_M.min(rows - i0);
-            let mut j0 = 0;
-            while j0 < n {
-                let nb = TILE_N.min(n - j0);
-                let mut acc = [[0.0f32; TILE_N]; TILE_M];
-                if mr == TILE_M && nb == TILE_N {
-                    // full tile: fixed-size loops the compiler unrolls
-                    for di in 0..d {
-                        let wrow: &[f32; TILE_N] =
-                            w[di * n + j0..di * n + j0 + TILE_N].try_into().unwrap();
-                        for ii in 0..TILE_M {
-                            let xv = x[(row0 + i0 + ii) * d + di];
-                            for (a, &wv) in acc[ii].iter_mut().zip(wrow) {
-                                *a += xv * wv;
-                            }
+        matmul_tile(tier, x, w, out, r.start / n, d, n);
+    });
+}
+
+/// The packed-weight twin of [`matmul_tile_body`]: `w` stays in its
+/// block-quantized form and each `[TILE_N]` stripe of a `w` row is
+/// dequantized into registers right before use — the fused
+/// dequant-matmul reads ~4-8x fewer weight bytes than a dense f32
+/// matmul and no full-tensor decode ever happens. `pre` is the
+/// prescaled level table (`lut * scale`) when one scale covers the
+/// whole tensor. Tile geometry and accumulation order are exactly
+/// [`matmul_tile_body`]'s, so outputs are bit-identical to running the
+/// dense kernel on the decoded tensor.
+#[inline(always)]
+fn matmul_packed_tile_body(
+    x: &[f32],
+    w: &PackedWeights,
+    pre: Option<&[f32]>,
+    out: &mut [f32],
+    row0: usize,
+    d: usize,
+    n: usize,
+) {
+    let rows = out.len() / n;
+    let lut = w.lut();
+    let mut i0 = 0;
+    while i0 < rows {
+        let mr = TILE_M.min(rows - i0);
+        let mut j0 = 0;
+        while j0 < n {
+            let nb = TILE_N.min(n - j0);
+            let mut acc = [[0.0f32; TILE_N]; TILE_M];
+            let mut wrow = [0.0f32; TILE_N];
+            for di in 0..d {
+                let base = di * n + j0;
+                match pre {
+                    Some(slut) => {
+                        for (jj, wv) in wrow[..nb].iter_mut().enumerate() {
+                            *wv = slut[w.code_at(base + jj) as usize];
                         }
                     }
-                } else {
-                    // edge tile: same loop with clipped bounds
-                    for di in 0..d {
-                        let wrow = &w[di * n + j0..di * n + j0 + nb];
-                        for ii in 0..mr {
-                            let xv = x[(row0 + i0 + ii) * d + di];
-                            for (a, &wv) in acc[ii][..nb].iter_mut().zip(wrow) {
-                                *a += xv * wv;
-                            }
+                    None => {
+                        for (jj, wv) in wrow[..nb].iter_mut().enumerate() {
+                            let idx = base + jj;
+                            *wv = lut[w.code_at(idx) as usize] * w.scale_of(idx);
                         }
                     }
                 }
                 for ii in 0..mr {
-                    out[(i0 + ii) * n + j0..(i0 + ii) * n + j0 + nb]
-                        .copy_from_slice(&acc[ii][..nb]);
+                    let xv = x[(row0 + i0 + ii) * d + di];
+                    for (a, &wv) in acc[ii][..nb].iter_mut().zip(&wrow[..nb]) {
+                        *a += xv * wv;
+                    }
                 }
-                j0 += nb;
             }
-            i0 += mr;
+            for ii in 0..mr {
+                out[(i0 + ii) * n + j0..(i0 + ii) * n + j0 + nb].copy_from_slice(&acc[ii][..nb]);
+            }
+            j0 += nb;
         }
+        i0 += mr;
+    }
+}
+
+simd_kernel!(
+    fn matmul_packed_tile(
+        tier,
+        x: &[f32],
+        w: &PackedWeights,
+        pre: Option<&[f32]>,
+        out: &mut [f32],
+        row0: usize,
+        d: usize,
+        n: usize,
+    ) = matmul_packed_tile_body
+);
+
+/// `y[M,N] = x[M,D] @ dequant(w)[D,N]` with `w` in packed form —
+/// bit-identical to [`matmul`] on the decoded tensor (decode
+/// canonicalizes `-0.0` to `+0.0`, which cannot move a `+0.0`-seeded
+/// accumulator). Per-tensor-scaled weights get a prescaled level table
+/// computed once per call (`lut[c] * s` is the same multiply the
+/// per-element path performs, just hoisted).
+fn matmul_packed(
+    x: &[f32],
+    w: &PackedWeights,
+    y: &mut [f32],
+    m: usize,
+    d: usize,
+    n: usize,
+    pool: &Pool,
+) {
+    if m == 0 || n == 0 {
+        return;
+    }
+    assert_eq!(w.len(), d * n, "packed weight length mismatch");
+    let tier = active_tier();
+    let pre: Option<Vec<f32>> = (w.block_size() == 0)
+        .then(|| w.lut().iter().map(|&lev| lev * w.scales()[0]).collect());
+    pool.for_chunks_mut(y, &row_ranges(m, n), m * d * n, |_, r, out| {
+        matmul_packed_tile(tier, x, w, pre.as_deref(), out, r.start / n, d, n);
     });
 }
 
 /// `dx[M,D] += dy[M,N] @ w[D,N]^T`, row-parallel. Each (row, di)
 /// element is a lane-unrolled dot of two contiguous rows
-/// ([`dot_lanes`]); `w` rows walk the outer loop so one `w` row is
-/// reused across every row of the chunk. Accumulates — the caller
-/// zeroes `dx` before the first contribution.
+/// ([`dot_lanes_tier`], tier hoisted out of the loops); `w` rows walk
+/// the outer loop so one `w` row is reused across every row of the
+/// chunk. Accumulates — the caller zeroes `dx` before the first
+/// contribution.
 fn matmul_dx(dy: &[f32], w: &[f32], dx: &mut [f32], m: usize, d: usize, n: usize, pool: &Pool) {
     if m == 0 || d == 0 {
         return;
     }
+    let tier = active_tier();
     pool.for_chunks_mut(dx, &row_ranges(m, d), m * d * n, |_, r, out| {
         let row0 = r.start / d;
         let rows = out.len() / d;
@@ -707,7 +899,7 @@ fn matmul_dx(dy: &[f32], w: &[f32], dx: &mut [f32], m: usize, d: usize, n: usize
             let wrow = &w[di * n..(di + 1) * n];
             for i in 0..rows {
                 let dyrow = &dy[(row0 + i) * n..(row0 + i + 1) * n];
-                out[i * d + di] += dot_lanes(dyrow, wrow);
+                out[i * d + di] += dot_lanes_tier(tier, dyrow, wrow);
             }
         }
     });
@@ -721,6 +913,55 @@ thread_local! {
     static XPACK: RefCell<Vec<f32>> = RefCell::new(Vec::new());
 }
 
+/// The per-chunk tile loop of [`matmul_dw`] over a pre-packed `x^T`
+/// stripe (`xt[ii * m + mi] = x[mi, drow0 + ii]`). Shared body for the
+/// [`simd_kernel!`] tier clones — same fold order at every tier.
+#[inline(always)]
+fn matmul_dw_tile_body(xt: &[f32], dy: &[f32], out: &mut [f32], m: usize, n: usize) {
+    let drows = out.len() / n;
+    let mut i0 = 0;
+    while i0 < drows {
+        let mr = TILE_M.min(drows - i0);
+        let mut j0 = 0;
+        while j0 < n {
+            let nb = TILE_N.min(n - j0);
+            let mut acc = [[0.0f32; TILE_N]; TILE_M];
+            if mr == TILE_M && nb == TILE_N {
+                for mi in 0..m {
+                    let dyt: &[f32; TILE_N] =
+                        dy[mi * n + j0..mi * n + j0 + TILE_N].try_into().unwrap();
+                    for ii in 0..TILE_M {
+                        let xv = xt[(i0 + ii) * m + mi];
+                        for (a, &dv) in acc[ii].iter_mut().zip(dyt) {
+                            *a += xv * dv;
+                        }
+                    }
+                }
+            } else {
+                for mi in 0..m {
+                    let dyt = &dy[mi * n + j0..mi * n + j0 + nb];
+                    for ii in 0..mr {
+                        let xv = xt[(i0 + ii) * m + mi];
+                        for (a, &dv) in acc[ii][..nb].iter_mut().zip(dyt) {
+                            *a += xv * dv;
+                        }
+                    }
+                }
+            }
+            for ii in 0..mr {
+                out[(i0 + ii) * n + j0..(i0 + ii) * n + j0 + nb].copy_from_slice(&acc[ii][..nb]);
+            }
+            j0 += nb;
+        }
+        i0 += mr;
+    }
+}
+
+simd_kernel!(
+    fn matmul_dw_tile(tier, xt: &[f32], dy: &[f32], out: &mut [f32], m: usize, n: usize) =
+        matmul_dw_tile_body
+);
+
 /// `dw[D,N] = x[M,D]^T @ dy[M,N]`, parallel over rows of `dw`: each
 /// worker owns a row range and folds the M data rows itself in fixed
 /// ascending order, so the result is bit-identical at any thread
@@ -732,6 +973,7 @@ fn matmul_dw(x: &[f32], dy: &[f32], dw: &mut [f32], m: usize, d: usize, n: usize
     if d == 0 || n == 0 {
         return;
     }
+    let tier = active_tier();
     pool.for_chunks_mut(dw, &row_ranges(d, n), m * d * n, |_, r, out| {
         let drow0 = r.start / n;
         let drows = out.len() / n;
@@ -745,43 +987,7 @@ fn matmul_dw(x: &[f32], dy: &[f32], dw: &mut [f32], m: usize, d: usize, n: usize
                     xt[ii * m + mi] = xv;
                 }
             }
-            let mut i0 = 0;
-            while i0 < drows {
-                let mr = TILE_M.min(drows - i0);
-                let mut j0 = 0;
-                while j0 < n {
-                    let nb = TILE_N.min(n - j0);
-                    let mut acc = [[0.0f32; TILE_N]; TILE_M];
-                    if mr == TILE_M && nb == TILE_N {
-                        for mi in 0..m {
-                            let dyt: &[f32; TILE_N] =
-                                dy[mi * n + j0..mi * n + j0 + TILE_N].try_into().unwrap();
-                            for ii in 0..TILE_M {
-                                let xv = xt[(i0 + ii) * m + mi];
-                                for (a, &dv) in acc[ii].iter_mut().zip(dyt) {
-                                    *a += xv * dv;
-                                }
-                            }
-                        }
-                    } else {
-                        for mi in 0..m {
-                            let dyt = &dy[mi * n + j0..mi * n + j0 + nb];
-                            for ii in 0..mr {
-                                let xv = xt[(i0 + ii) * m + mi];
-                                for (a, &dv) in acc[ii][..nb].iter_mut().zip(dyt) {
-                                    *a += xv * dv;
-                                }
-                            }
-                        }
-                    }
-                    for ii in 0..mr {
-                        out[(i0 + ii) * n + j0..(i0 + ii) * n + j0 + nb]
-                            .copy_from_slice(&acc[ii][..nb]);
-                    }
-                    j0 += nb;
-                }
-                i0 += mr;
-            }
+            matmul_dw_tile(tier, xt, dy, out, m, n);
         });
     });
 }
@@ -914,6 +1120,7 @@ fn attn_probs(
 ) {
     let d = nh * hd;
     let scale = 1.0 / (hd as f32).sqrt();
+    let tier = active_tier();
     pool.for_chunks_mut(p, &head_ranges(b * nh, t * t), b * nh * t * t * hd, |bh, _, blk| {
         let (bi, hi) = (bh / nh, bh % nh);
         for ti in 0..t {
@@ -922,7 +1129,7 @@ fn attn_probs(
             let mut mx = f32::NEG_INFINITY;
             for si in 0..=ti {
                 let krow = &k[(bi * t + si) * d + hi * hd..(bi * t + si) * d + hi * hd + hd];
-                let sc = dot_lanes(qrow, krow) * scale;
+                let sc = dot_lanes_tier(tier, qrow, krow) * scale;
                 prow[si] = sc;
                 if sc > mx {
                     mx = sc;
@@ -1025,6 +1232,7 @@ fn attn_bwd_ds(
     pool: &Pool,
 ) {
     let d = nh * hd;
+    let tier = active_tier();
     pool.for_chunks_mut(ds, &head_ranges(b * nh, t * t), b * nh * t * t * hd, |bh, _, blk| {
         let (bi, hi) = (bh / nh, bh % nh);
         let pblk = &p[bh * t * t..(bh + 1) * t * t];
@@ -1034,7 +1242,7 @@ fn attn_bwd_ds(
             let prow = &pblk[ti * t..(ti + 1) * t];
             for si in 0..=ti {
                 let vrow = &v[(bi * t + si) * d + hi * hd..(bi * t + si) * d + hi * hd + hd];
-                dsrow[si] = dot_lanes(dorow, vrow);
+                dsrow[si] = dot_lanes_tier(tier, dorow, vrow);
             }
             let mut rd = 0.0f32;
             for si in 0..=ti {
@@ -1285,7 +1493,8 @@ mod tests {
 
     fn loss_at(prog: &LmProgram, params: &[Vec<f32>], tokens: &[i32]) -> f64 {
         let mut s = LmScratch::alloc(&prog.cfg, prog.batch);
-        prog.batch_loss(params, tokens, &mut s, &Pool::serial()).unwrap()
+        let refs: Vec<WRef<'_>> = params.iter().map(|w| WRef::Dense(w)).collect();
+        prog.batch_loss(&refs, tokens, &mut s, &Pool::serial()).unwrap()
     }
 
     /// The manual backward must match central finite differences of the
@@ -1574,6 +1783,131 @@ mod tests {
         // and the underlying partition helper yields no ranges at n=0
         assert!(chunk_ranges(0, ROWS_PER_TASK).is_empty());
         assert!(row_ranges(0, 5).is_empty());
+    }
+
+    /// Every supported SIMD tier runs the matmul tile kernels bitwise
+    /// identically to the scalar reference, on shapes exercising full
+    /// tiles, edge tiles in both dimensions, and remainder dot lanes.
+    #[test]
+    fn matmul_kernels_are_tier_invariant() {
+        use crate::quant::QuantFormat;
+        use crate::util::simd::{supported_tiers, SimdTier};
+        let pool = Pool::serial();
+        for (m, d, n) in [(1, 1, 1), (4, 8, 16), (9, 17, 33), (5, 3, 16), (2, 40, 70)] {
+            let x = filled(m * d, 21);
+            let w = filled(d * n, 22);
+            let dy = filled(m * n, 23);
+            let xt = filled(d * m, 24); // pre-packed stripe for the dw tile
+
+            let mut y0 = vec![0.0f32; m * n];
+            matmul_tile(SimdTier::Scalar, &x, &w, &mut y0, 0, d, n);
+            let mut dw0 = vec![0.0f32; d * n];
+            matmul_dw_tile(SimdTier::Scalar, &xt, &dy, &mut dw0, m, n);
+            for tier in supported_tiers() {
+                let mut y = vec![0.0f32; m * n];
+                matmul_tile(tier, &x, &w, &mut y, 0, d, n);
+                assert_eq!(y, y0, "matmul_tile {tier:?} {m}x{d}x{n}");
+                let mut dw = vec![0.0f32; d * n];
+                matmul_dw_tile(tier, &xt, &dy, &mut dw, m, n);
+                assert_eq!(dw, dw0, "matmul_dw_tile {tier:?} {m}x{d}x{n}");
+            }
+
+            // packed tile parity across tiers (and vs the dense tile on
+            // the decoded tensor, bitwise)
+            let fmt = QuantFormat::parse("int4", 16).unwrap();
+            let packed = PackedWeights::pack_rtn(&w, &fmt);
+            let mut wq = vec![0.0f32; d * n];
+            packed.decode_into(&mut wq);
+            let mut yq0 = vec![0.0f32; m * n];
+            matmul(&x, &wq, &mut yq0, m, d, n, &pool);
+            for tier in supported_tiers() {
+                let mut yq = vec![0.0f32; m * n];
+                matmul_packed_tile(tier, &x, &packed, None, &mut yq, 0, d, n);
+                assert_eq!(yq, yq0, "matmul_packed_tile {tier:?} {m}x{d}x{n}");
+            }
+        }
+    }
+
+    /// The fused dequant matmul contract: pack → fused matmul equals
+    /// cast_rtn → dense matmul, bitwise, for every format and both
+    /// block granularities (the `-0.0` decode canonicalization cannot
+    /// move a `+0.0`-seeded accumulator).
+    #[test]
+    fn packed_matmul_matches_dense_cast_bitwise() {
+        use crate::quant::{cast_rtn, QuantFormat};
+        let (m, d, n) = (9, 17, 33); // edge tiles in both dims
+        let x = filled(m * d, 31);
+        let w = filled(d * n, 32);
+        for name in ["int4", "int8", "fp4"] {
+            for block in [0usize, 64] {
+                let fmt = QuantFormat::parse(name, block).unwrap();
+                let packed = PackedWeights::pack_rtn(&w, &fmt);
+                let mut wq = w.clone();
+                cast_rtn(&mut wq, &fmt);
+                for pool in [Pool::serial(), Pool::new(3)] {
+                    let mut dense = vec![0.0f32; m * n];
+                    matmul(&x, &wq, &mut dense, m, d, n, &pool);
+                    let mut fused = vec![0.0f32; m * n];
+                    matmul_packed(&x, &packed, &mut fused, m, d, n, &pool);
+                    for i in 0..m * n {
+                        assert_eq!(
+                            fused[i].to_bits(),
+                            dense[i].to_bits(),
+                            "{name} block={block} [{i}]: fused {} vs dense {}",
+                            fused[i],
+                            dense[i]
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    /// Routing a forward pass through packed weight refs gives the
+    /// exact loss of the equivalent dense cast. (The no-dense-decode
+    /// guarantee is asserted in `tests/simd_dispatch.rs`, where the
+    /// process-global decode counter can be read without racing other
+    /// unit tests.)
+    #[test]
+    fn packed_forward_matches_dense_cast_forward() {
+        use crate::quant::{cast_rtn, QuantFormat};
+        let prog = micro();
+        let params = hash_params(&prog, 6);
+        let tokens = tokens_for(&prog, 8);
+        let fmt = QuantFormat::parse("int4", 8).unwrap();
+        let quantized = prog.quantized();
+        let specs = prog.param_specs();
+
+        // dense path: cast the quantized tensors to f32
+        let mut cast_params = params.clone();
+        for (i, spec) in specs.iter().enumerate() {
+            if quantized.contains(&spec.name) {
+                cast_rtn(&mut cast_params[i], &fmt);
+            }
+        }
+        let dense_loss = loss_at(&prog, &cast_params, &tokens);
+
+        // packed path: same tensors in packed form, fused matmuls
+        let packs: Vec<Option<PackedWeights>> = specs
+            .iter()
+            .enumerate()
+            .map(|(i, spec)| {
+                quantized
+                    .contains(&spec.name)
+                    .then(|| PackedWeights::pack_rtn(&params[i], &fmt))
+            })
+            .collect();
+        let refs: Vec<WRef<'_>> = packs
+            .iter()
+            .zip(&params)
+            .map(|(p, w)| match p {
+                Some(p) => WRef::Packed(p),
+                None => WRef::Dense(w),
+            })
+            .collect();
+        let mut s = LmScratch::alloc(&prog.cfg, prog.batch);
+        let packed_loss = prog.batch_loss(&refs, &tokens, &mut s, &Pool::serial()).unwrap();
+        assert_eq!(packed_loss.to_bits(), dense_loss.to_bits());
     }
 
     /// Thread-count invariance of the blocked kernels at a size that

@@ -197,6 +197,35 @@ impl<'e> Session<'e> {
         let out = self.engine.call_to_host(&self.eval, &args, &["val_loss"])?;
         Ok(out[0].scalar_to_f32() as f64)
     }
+
+    /// Run the backend's fused quantized eval entry (`eval_q_*`) at the
+    /// current state. Master FP32 params go in *uncast*; the engine
+    /// RTN-casts the quantized subset into its packed block form and
+    /// consumes it in place — the fused path never materializes a full
+    /// f32 copy of the quantized weights. Returns `Ok(None)` when the
+    /// manifest carries no such entry for this model + format (AOT
+    /// backends); callers fall back to host-side casting through
+    /// [`Session::eval_loss`].
+    pub fn eval_loss_quantized(&self, fmt_name: &str, data: Option<Value>) -> Result<Option<f64>> {
+        let entry = match self.engine.manifest().find_eval_quant(&self.eval.model_name, fmt_name) {
+            Some(e) => e,
+            None => return Ok(None),
+        };
+        let mut args = Vec::with_capacity(entry.inputs.len());
+        for spec in &entry.inputs {
+            let arg = match spec.role {
+                Role::Param => self.state.value(&spec.name)?.clone(),
+                Role::Static => self.static_value(&spec.name)?,
+                Role::Data => data
+                    .clone()
+                    .ok_or_else(|| anyhow!("{} wants a data input", entry.name))?,
+                other => bail!("unexpected eval input role {other:?}"),
+            };
+            args.push(arg);
+        }
+        let out = self.engine.call_to_host(entry, &args, &["val_loss"])?;
+        Ok(Some(out[0].scalar_to_f32() as f64))
+    }
 }
 
 #[cfg(test)]
@@ -284,5 +313,31 @@ mod tests {
             .unwrap();
         assert!(plain.is_finite() && zeroed.is_finite());
         assert_ne!(plain, zeroed);
+    }
+
+    /// The fused `eval_q` route must reproduce host-side RTN casting
+    /// through the plain eval entry bit-for-bit, and degrade to `None`
+    /// for formats the backend did not register.
+    #[test]
+    fn quantized_eval_matches_host_cast_map() {
+        use crate::quant::{cast_rtn, QuantFormat};
+        let engine = NativeEngine::new();
+        let s = Session::open(&engine, &smoke_cfg(), smoke_statics(256), [1, 2]).unwrap();
+        let fmt = QuantFormat::parse("int4", 0).unwrap();
+        let quantized = s.quantized_keys().to_vec();
+        let host = s
+            .eval_loss(None, &mut |spec, v| {
+                Ok(if quantized.contains(&spec.name) {
+                    let mut w = v.as_f32();
+                    cast_rtn(&mut w, &fmt);
+                    value(HostTensor::from_f32(&v.shape, w))
+                } else {
+                    v.clone()
+                })
+            })
+            .unwrap();
+        let fused = s.eval_loss_quantized("int4", None).unwrap().expect("native eval_q entry");
+        assert_eq!(fused.to_bits(), host.to_bits());
+        assert!(s.eval_loss_quantized("int16", None).unwrap().is_none());
     }
 }

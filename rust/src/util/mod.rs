@@ -11,4 +11,5 @@ pub mod stats;
 
 pub use pool::Pool;
 pub use rng::Rng;
+pub use simd::SimdTier;
 pub use stats::Summary;

@@ -1,24 +1,214 @@
-//! Lane-unrolled reduction helpers for the hot kernels (no intrinsics,
-//! no deps — plain loops shaped so the autovectorizer keeps the
-//! accumulators in SIMD registers).
+//! Runtime-dispatched SIMD kernels for the hot loops (`std::arch`
+//! only — no deps). Three tiers: explicit AVX2 on x86_64, NEON on
+//! aarch64, and a portable scalar fallback that doubles as the
+//! bit-exact reference.
 //!
-//! Determinism (DESIGN.md §3): [`LANES`] is a fixed constant, so the
-//! summation order of every helper — lane-strided partials folded in
-//! lane order, scalar tail appended last — is a pure function of the
-//! input length. Nothing here depends on the thread count; results are
-//! bit-identical wherever the call runs.
+//! Determinism (DESIGN.md §3): every vector kernel keeps the *scalar*
+//! reduction semantics — [`LANES`] independent accumulators where lane
+//! `l` sums elements `l, l + LANES, ...`, lanes folded in ascending
+//! lane order, the `len % LANES` tail added last — and never uses a
+//! fused multiply-add (an FMA skips the intermediate rounding the
+//! scalar path performs). One AVX2 register *is* the 8 scalar lanes;
+//! on NEON two 4-lane registers hold lanes 0–3 and 4–7 and fold in
+//! lane order. Results are therefore bit-identical across tiers, ISAs
+//! and thread counts — which is what lets CI run the whole suite under
+//! `LOTION_SIMD=scalar` against goldens produced under `auto`.
+//!
+//! Tier resolution mirrors the pool's thread knob: an explicit
+//! [`set_global_simd`] (the CLI's `--simd`) beats the `LOTION_SIMD`
+//! env var, which beats runtime feature detection; a requested tier
+//! the CPU cannot run falls back to scalar. Larger kernels (the
+//! blocked matmuls, the quant block loops) dispatch through
+//! [`simd_kernel!`], which compiles one shared `#[inline(always)]`
+//! body per tier inside a `#[target_feature]` clone — same Rust code,
+//! same fold order, wider registers.
+
+use std::sync::atomic::{AtomicU8, Ordering};
 
 /// Independent accumulator lanes in the reduction helpers. Wide enough
-/// to fill one AVX register (or two SSE registers) of `f32`s and to
+/// to fill one AVX register (or two NEON registers) of `f32`s and to
 /// break the serial FP dependency chain; never derived from the
 /// machine, so the reduction order is portable.
 pub const LANES: usize = 8;
 
+/// A kernel instruction tier. `Scalar` is the reference everything
+/// else must match bitwise; `Avx2` implies FMA availability (the
+/// matmul clones enable both, though no kernel contracts into FMAs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum SimdTier {
+    Scalar = 0,
+    Avx2 = 1,
+    Neon = 2,
+}
+
+impl SimdTier {
+    pub fn name(self) -> &'static str {
+        match self {
+            SimdTier::Scalar => "scalar",
+            SimdTier::Avx2 => "avx2",
+            SimdTier::Neon => "neon",
+        }
+    }
+
+    /// Parse a `--simd` / `LOTION_SIMD` value; `None` means `auto`
+    /// (resolve by detection at dispatch time).
+    pub fn parse(s: &str) -> anyhow::Result<Option<SimdTier>> {
+        Ok(match s {
+            "auto" => None,
+            "scalar" => Some(SimdTier::Scalar),
+            "avx2" => Some(SimdTier::Avx2),
+            "neon" => Some(SimdTier::Neon),
+            other => anyhow::bail!("unknown SIMD tier {other:?} (expected auto|scalar|avx2|neon)"),
+        })
+    }
+
+    /// Whether this tier can run on the current CPU. Forcing an
+    /// unsupported tier is not an error — [`active_tier`] clamps it to
+    /// scalar — so a config written on one machine runs anywhere.
+    pub fn supported(self) -> bool {
+        match self {
+            SimdTier::Scalar => true,
+            SimdTier::Avx2 => avx2_available(),
+            // NEON is baseline on aarch64
+            SimdTier::Neon => cfg!(target_arch = "aarch64"),
+        }
+    }
+}
+
+fn avx2_available() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+/// Sentinel for "no tier stored" in the atomic slots below.
+const TIER_UNSET: u8 = u8::MAX;
+
+/// The explicit process-wide tier (`--simd`); `TIER_UNSET` = never
+/// set, resolve auto per call. Kept separate from the lazily-resolved
+/// auto value (same reasoning as the pool's `EXPLICIT_THREADS`): an
+/// explicit setting must win no matter when the first kernel ran.
+static EXPLICIT_TIER: AtomicU8 = AtomicU8::new(TIER_UNSET);
+
+/// Cached auto tier (`LOTION_SIMD` / detection), `TIER_UNSET` = not
+/// resolved yet. Detection is process-constant, so one resolution is
+/// enough; caching it apart from [`EXPLICIT_TIER`] means it can never
+/// shadow an explicit setting.
+static AUTO_TIER: AtomicU8 = AtomicU8::new(TIER_UNSET);
+
+fn tier_from_u8(v: u8) -> Option<SimdTier> {
+    match v {
+        0 => Some(SimdTier::Scalar),
+        1 => Some(SimdTier::Avx2),
+        2 => Some(SimdTier::Neon),
+        _ => None,
+    }
+}
+
+/// Install the process-wide tier used by every dispatched kernel:
+/// `None` means auto (`LOTION_SIMD` / detection, re-resolved on use),
+/// `Some(tier)` overrides auto from then on. The CLI calls this with
+/// the `--simd` value.
+pub fn set_global_simd(tier: Option<SimdTier>) {
+    EXPLICIT_TIER.store(tier.map(|t| t as u8).unwrap_or(TIER_UNSET), Ordering::Relaxed);
+}
+
+/// The `LOTION_SIMD` environment override (unset/`auto`/garbage =
+/// auto-detect), mirroring `LOTION_THREADS`.
+pub fn env_simd() -> Option<SimdTier> {
+    std::env::var("LOTION_SIMD").ok().and_then(|v| SimdTier::parse(v.trim()).ok().flatten())
+}
+
+/// The best tier runtime detection finds on this CPU.
+pub fn detect_tier() -> SimdTier {
+    if SimdTier::Avx2.supported() {
+        SimdTier::Avx2
+    } else if SimdTier::Neon.supported() {
+        SimdTier::Neon
+    } else {
+        SimdTier::Scalar
+    }
+}
+
+fn clamp_supported(t: SimdTier) -> SimdTier {
+    if t.supported() {
+        t
+    } else {
+        SimdTier::Scalar
+    }
+}
+
+/// Resolve the tier dispatched kernels run at. Precedence: explicit
+/// [`set_global_simd`] > `LOTION_SIMD` > detection; unsupported
+/// requests clamp to scalar. Hot kernels hoist this once per parallel
+/// region rather than per element — the call is two relaxed atomic
+/// loads, but hoisting also pins one tier per kernel invocation.
+#[inline]
+pub fn active_tier() -> SimdTier {
+    if let Some(t) = tier_from_u8(EXPLICIT_TIER.load(Ordering::Relaxed)) {
+        return clamp_supported(t);
+    }
+    if let Some(t) = tier_from_u8(AUTO_TIER.load(Ordering::Relaxed)) {
+        return t;
+    }
+    let resolved = clamp_supported(env_simd().unwrap_or_else(detect_tier));
+    AUTO_TIER.store(resolved as u8, Ordering::Relaxed);
+    resolved
+}
+
+/// Define a tier-dispatched kernel: `$name(tier, args...)` runs the
+/// shared `#[inline(always)]` `$body` either directly (scalar) or from
+/// inside a `#[target_feature]` clone, so the *same* Rust code — same
+/// operation order, same fold order — is compiled once per ISA tier
+/// and the autovectorizer may widen it without changing results (LLVM
+/// never contracts `a * b + c` into an FMA unless asked to). Callers
+/// hoist [`active_tier`] once per parallel region and pass it down;
+/// passing the tier explicitly is also what lets the parity tests
+/// force tiers without touching the process-wide knob. Passing an
+/// unsupported tier is undefined behavior — route through
+/// [`active_tier`] (which clamps) or check [`SimdTier::supported`].
+#[macro_export]
+macro_rules! simd_kernel {
+    ($vis:vis fn $name:ident(tier $(, $arg:ident : $ty:ty)* $(,)?) $(-> $ret:ty)? = $body:path) => {
+        $vis fn $name(tier: $crate::util::simd::SimdTier $(, $arg: $ty)*) $(-> $ret)? {
+            #[cfg(target_arch = "x86_64")]
+            if tier == $crate::util::simd::SimdTier::Avx2 {
+                debug_assert!($crate::util::simd::SimdTier::Avx2.supported());
+                #[target_feature(enable = "avx2", enable = "fma")]
+                unsafe fn vect($($arg: $ty),*) $(-> $ret)? {
+                    $body($($arg),*)
+                }
+                // SAFETY: the Avx2 tier is only selected once runtime
+                // detection confirmed avx2+fma on this CPU.
+                return unsafe { vect($($arg),*) };
+            }
+            #[cfg(target_arch = "aarch64")]
+            if tier == $crate::util::simd::SimdTier::Neon {
+                #[target_feature(enable = "neon")]
+                unsafe fn vect($($arg: $ty),*) $(-> $ret)? {
+                    $body($($arg),*)
+                }
+                // SAFETY: NEON is baseline on aarch64.
+                return unsafe { vect($($arg),*) };
+            }
+            let _ = tier;
+            $body($($arg),*)
+        }
+    };
+}
+
 /// `sum_i a[i] * b[i]` with [`LANES`] independent accumulators: lane
 /// `l` sums elements `l, l + LANES, ...`; lanes fold in ascending lane
-/// order and the `len % LANES` tail is added last.
-#[inline]
-pub fn dot_lanes(a: &[f32], b: &[f32]) -> f32 {
+/// order and the `len % LANES` tail is added last. The scalar
+/// reference every vector tier must match bitwise.
+#[inline(always)]
+fn dot_scalar(a: &[f32], b: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), b.len());
     let mut acc = [0.0f32; LANES];
     let mut ach = a.chunks_exact(LANES);
@@ -41,10 +231,10 @@ pub fn dot_lanes(a: &[f32], b: &[f32]) -> f32 {
 }
 
 /// `sum_i w[i] * x[i] * x[i]` (a diagonally-weighted squared norm —
-/// the linear2 exact-Fisher reduction), with the same fixed lane
-/// order as [`dot_lanes`].
-#[inline]
-pub fn weighted_sq_lanes(w: &[f32], x: &[f32]) -> f32 {
+/// the linear2 exact-Fisher reduction), with the same fixed lane order
+/// as [`dot_scalar`]: each term evaluates as `(w * x) * x`.
+#[inline(always)]
+fn weighted_sq_scalar(w: &[f32], x: &[f32]) -> f32 {
     debug_assert_eq!(w.len(), x.len());
     let mut acc = [0.0f32; LANES];
     let mut wch = w.chunks_exact(LANES);
@@ -66,10 +256,206 @@ pub fn weighted_sq_lanes(w: &[f32], x: &[f32]) -> f32 {
     s
 }
 
+/// Dot product at the process-wide [`active_tier`].
+#[inline]
+pub fn dot_lanes(a: &[f32], b: &[f32]) -> f32 {
+    dot_lanes_tier(active_tier(), a, b)
+}
+
+/// [`dot_lanes`] at a caller-chosen tier (hoist [`active_tier`] out of
+/// inner loops; also the parity tests' entry point). The AVX2/NEON
+/// paths are hand intrinsics: one `__m256` (or a `float32x4_t` pair)
+/// is exactly the 8 scalar lanes, accumulated with separate mul + add.
+#[inline]
+pub fn dot_lanes_tier(tier: SimdTier, a: &[f32], b: &[f32]) -> f32 {
+    #[cfg(target_arch = "x86_64")]
+    if tier == SimdTier::Avx2 {
+        debug_assert!(SimdTier::Avx2.supported());
+        // SAFETY: Avx2 is only selected when detection confirmed it.
+        return unsafe { x86::dot_avx2(a, b) };
+    }
+    #[cfg(target_arch = "aarch64")]
+    if tier == SimdTier::Neon {
+        // SAFETY: NEON is baseline on aarch64.
+        return unsafe { neon::dot_neon(a, b) };
+    }
+    let _ = tier;
+    dot_scalar(a, b)
+}
+
+/// Weighted squared norm at the process-wide [`active_tier`].
+#[inline]
+pub fn weighted_sq_lanes(w: &[f32], x: &[f32]) -> f32 {
+    weighted_sq_lanes_tier(active_tier(), w, x)
+}
+
+/// [`weighted_sq_lanes`] at a caller-chosen tier.
+#[inline]
+pub fn weighted_sq_lanes_tier(tier: SimdTier, w: &[f32], x: &[f32]) -> f32 {
+    #[cfg(target_arch = "x86_64")]
+    if tier == SimdTier::Avx2 {
+        debug_assert!(SimdTier::Avx2.supported());
+        // SAFETY: Avx2 is only selected when detection confirmed it.
+        return unsafe { x86::weighted_sq_avx2(w, x) };
+    }
+    #[cfg(target_arch = "aarch64")]
+    if tier == SimdTier::Neon {
+        // SAFETY: NEON is baseline on aarch64.
+        return unsafe { neon::weighted_sq_neon(w, x) };
+    }
+    let _ = tier;
+    weighted_sq_scalar(w, x)
+}
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use super::LANES;
+    use std::arch::x86_64::{
+        _mm256_add_ps, _mm256_loadu_ps, _mm256_mul_ps, _mm256_setzero_ps, _mm256_storeu_ps,
+    };
+
+    /// SAFETY: caller must ensure avx2 is available. Separate mul +
+    /// add (never `_mm256_fmadd_ps`): the scalar reference rounds each
+    /// product before accumulating, and cross-tier bit-identity is the
+    /// contract. Register lane `l` is scalar accumulator lane `l`;
+    /// the store-then-sum fold reproduces the ascending lane order.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot_avx2(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        let n8 = a.len() / LANES * LANES;
+        let mut acc = _mm256_setzero_ps();
+        let mut i = 0;
+        while i < n8 {
+            let av = _mm256_loadu_ps(a.as_ptr().add(i));
+            let bv = _mm256_loadu_ps(b.as_ptr().add(i));
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(av, bv));
+            i += LANES;
+        }
+        let mut lanes = [0.0f32; LANES];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+        let mut s = 0.0f32;
+        for l in 0..LANES {
+            s += lanes[l];
+        }
+        for j in n8..a.len() {
+            s += a[j] * b[j];
+        }
+        s
+    }
+
+    /// SAFETY: caller must ensure avx2 is available. Term order is
+    /// `(w * x) * x`, matching the scalar body.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn weighted_sq_avx2(w: &[f32], x: &[f32]) -> f32 {
+        debug_assert_eq!(w.len(), x.len());
+        let n8 = w.len() / LANES * LANES;
+        let mut acc = _mm256_setzero_ps();
+        let mut i = 0;
+        while i < n8 {
+            let wv = _mm256_loadu_ps(w.as_ptr().add(i));
+            let xv = _mm256_loadu_ps(x.as_ptr().add(i));
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(_mm256_mul_ps(wv, xv), xv));
+            i += LANES;
+        }
+        let mut lanes = [0.0f32; LANES];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+        let mut s = 0.0f32;
+        for l in 0..LANES {
+            s += lanes[l];
+        }
+        for j in n8..w.len() {
+            s += w[j] * x[j] * x[j];
+        }
+        s
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use super::LANES;
+    use std::arch::aarch64::{vaddq_f32, vdupq_n_f32, vld1q_f32, vmulq_f32, vst1q_f32};
+
+    /// SAFETY: caller must ensure NEON (baseline on aarch64). Two
+    /// 4-lane registers hold scalar lanes 0–3 and 4–7; separate mul +
+    /// add (never `vmlaq_f32`/`vfmaq_f32`), fold in ascending lane
+    /// order — bitwise the scalar reference.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn dot_neon(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        let n8 = a.len() / LANES * LANES;
+        let mut acc0 = vdupq_n_f32(0.0);
+        let mut acc1 = vdupq_n_f32(0.0);
+        let mut i = 0;
+        while i < n8 {
+            let a0 = vld1q_f32(a.as_ptr().add(i));
+            let b0 = vld1q_f32(b.as_ptr().add(i));
+            let a1 = vld1q_f32(a.as_ptr().add(i + 4));
+            let b1 = vld1q_f32(b.as_ptr().add(i + 4));
+            acc0 = vaddq_f32(acc0, vmulq_f32(a0, b0));
+            acc1 = vaddq_f32(acc1, vmulq_f32(a1, b1));
+            i += LANES;
+        }
+        let mut lanes = [0.0f32; LANES];
+        vst1q_f32(lanes.as_mut_ptr(), acc0);
+        vst1q_f32(lanes.as_mut_ptr().add(4), acc1);
+        let mut s = 0.0f32;
+        for l in 0..LANES {
+            s += lanes[l];
+        }
+        for j in n8..a.len() {
+            s += a[j] * b[j];
+        }
+        s
+    }
+
+    /// SAFETY: caller must ensure NEON. Term order `(w * x) * x`.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn weighted_sq_neon(w: &[f32], x: &[f32]) -> f32 {
+        debug_assert_eq!(w.len(), x.len());
+        let n8 = w.len() / LANES * LANES;
+        let mut acc0 = vdupq_n_f32(0.0);
+        let mut acc1 = vdupq_n_f32(0.0);
+        let mut i = 0;
+        while i < n8 {
+            let w0 = vld1q_f32(w.as_ptr().add(i));
+            let x0 = vld1q_f32(x.as_ptr().add(i));
+            let w1 = vld1q_f32(w.as_ptr().add(i + 4));
+            let x1 = vld1q_f32(x.as_ptr().add(i + 4));
+            acc0 = vaddq_f32(acc0, vmulq_f32(vmulq_f32(w0, x0), x0));
+            acc1 = vaddq_f32(acc1, vmulq_f32(vmulq_f32(w1, x1), x1));
+            i += LANES;
+        }
+        let mut lanes = [0.0f32; LANES];
+        vst1q_f32(lanes.as_mut_ptr(), acc0);
+        vst1q_f32(lanes.as_mut_ptr().add(4), acc1);
+        let mut s = 0.0f32;
+        for l in 0..LANES {
+            s += lanes[l];
+        }
+        for j in n8..w.len() {
+            s += w[j] * x[j] * x[j];
+        }
+        s
+    }
+}
+
+/// Every tier that runs on this CPU (always includes `Scalar`) — the
+/// iteration set for parity tests and bench rows.
+pub fn supported_tiers() -> Vec<SimdTier> {
+    [SimdTier::Scalar, SimdTier::Avx2, SimdTier::Neon]
+        .into_iter()
+        .filter(|t| t.supported())
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::util::rng::Rng;
+    use std::sync::Mutex;
+
+    /// Serializes tests that touch the process-wide tier knob.
+    static TIER_TEST_LOCK: Mutex<()> = Mutex::new(());
 
     fn serial_dot(a: &[f32], b: &[f32]) -> f64 {
         a.iter().zip(b).map(|(x, y)| (*x as f64) * (*y as f64)).sum()
@@ -119,6 +505,81 @@ mod tests {
                 (got - want).abs() < 1e-3 * (1.0 + want.abs()),
                 "n={n}: got {got} want {want}"
             );
+        }
+    }
+
+    /// The cross-tier contract: every supported vector tier is bitwise
+    /// the scalar reference, across lengths hitting every remainder
+    /// lane (and the empty edge).
+    #[test]
+    fn vector_tiers_match_scalar_bitwise() {
+        let mut rng = Rng::new(11);
+        for n in [0usize, 1, 3, 7, 8, 9, 15, 16, 17, 31, 63, 64, 65, 257, 1000] {
+            let mut a = vec![0.0f32; n];
+            let mut b = vec![0.0f32; n];
+            rng.fill_normal(&mut a);
+            rng.fill_normal(&mut b);
+            let dot0 = dot_lanes_tier(SimdTier::Scalar, &a, &b);
+            let wsq0 = weighted_sq_lanes_tier(SimdTier::Scalar, &a, &b);
+            for tier in supported_tiers() {
+                let dot = dot_lanes_tier(tier, &a, &b);
+                let wsq = weighted_sq_lanes_tier(tier, &a, &b);
+                assert_eq!(dot.to_bits(), dot0.to_bits(), "dot {tier:?} n={n}");
+                assert_eq!(wsq.to_bits(), wsq0.to_bits(), "weighted_sq {tier:?} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn parse_names_roundtrip_and_reject_garbage() {
+        assert_eq!(SimdTier::parse("auto").unwrap(), None);
+        for t in [SimdTier::Scalar, SimdTier::Avx2, SimdTier::Neon] {
+            assert_eq!(SimdTier::parse(t.name()).unwrap(), Some(t));
+        }
+        assert!(SimdTier::parse("sse9").is_err());
+        assert!(SimdTier::parse("").is_err());
+    }
+
+    #[test]
+    fn explicit_tier_beats_auto_and_clears_back() {
+        let _guard = TIER_TEST_LOCK.lock().unwrap();
+        assert!(detect_tier().supported());
+        set_global_simd(None);
+        let auto = active_tier();
+        assert!(auto.supported());
+        set_global_simd(Some(SimdTier::Scalar));
+        assert_eq!(active_tier(), SimdTier::Scalar);
+        set_global_simd(None);
+        assert_eq!(active_tier(), auto, "clearing must restore auto resolution");
+    }
+
+    /// A kernel defined via the dispatch macro runs the same body at
+    /// every supported tier, bitwise.
+    #[test]
+    fn simd_kernel_macro_dispatches_bitwise() {
+        #[inline(always)]
+        fn scaled_sum_body(v: &[f32], k: f32, out: &mut [f32]) -> f32 {
+            let mut s = 0.0f32;
+            for (o, x) in out.iter_mut().zip(v) {
+                *o = x * k;
+                s += *o;
+            }
+            s
+        }
+        crate::simd_kernel!(fn scaled_sum(tier, v: &[f32], k: f32, out: &mut [f32]) -> f32 = scaled_sum_body);
+
+        let mut rng = Rng::new(5);
+        for n in [0usize, 1, 9, 64, 130] {
+            let mut v = vec![0.0f32; n];
+            rng.fill_normal(&mut v);
+            let mut out0 = vec![0.0f32; n];
+            let s0 = scaled_sum(SimdTier::Scalar, &v, 1.25, &mut out0);
+            for tier in supported_tiers() {
+                let mut out = vec![0.0f32; n];
+                let s = scaled_sum(tier, &v, 1.25, &mut out);
+                assert_eq!(s.to_bits(), s0.to_bits(), "{tier:?} n={n}");
+                assert_eq!(out, out0, "{tier:?} n={n}");
+            }
         }
     }
 }

@@ -1,0 +1,251 @@
+//! ISSUE 6 acceptance: the runtime-dispatched SIMD kernels and the
+//! fused block-dequant eval path change throughput only, never bits.
+//!
+//! * training + eval output is bit-identical with the tier pinned to
+//!   scalar vs auto-detected (AVX2/NEON where the CPU has them);
+//! * the fused `eval_q` route reproduces host-side `cast_rtn` through
+//!   the plain eval entry bit-for-bit, on the LM without ever decoding
+//!   a packed tensor to a dense f32 buffer;
+//! * the evaluator's fused RTN route leaves its RNG stream exactly
+//!   where the host-cast route would, so later RR evals are unmoved.
+//!
+//! Every test here serializes on one lock: the tier override and the
+//! dense-decode counter are process-wide, and cargo runs integration
+//! tests in this binary on parallel threads.
+
+use lotion::config::{RunConfig, Schedule};
+use lotion::coordinator::{DataSource, Evaluator, MetricsLogger, Trainer};
+use lotion::data::{ByteTokenizer, TokenBatcher, ZipfMarkovCorpus};
+use lotion::experiments::common::synth_statics;
+use lotion::quant::packed::dense_decode_count;
+use lotion::quant::{cast, cast_rtn, QuantFormat, Rounding};
+use lotion::runtime::executor::value;
+use lotion::runtime::native::{LmConfig, LmProgram, ModelSpec, NativeEngine, NativeModel, OptKind};
+use lotion::tensor::HostTensor;
+use lotion::util::rng::Rng;
+use lotion::util::simd::{set_global_simd, SimdTier};
+use std::sync::{Arc, Mutex};
+
+/// Serializes every test in this binary: `set_global_simd` and the
+/// dense-decode counter are process-wide state.
+static GLOBAL_STATE_LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    GLOBAL_STATE_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn bits(t: &HostTensor) -> Vec<u32> {
+    t.as_f32().iter().map(|v| v.to_bits()).collect()
+}
+
+/// A small LM engine whose dims leave remainder lanes (44 % 8 != 0)
+/// and edge tiles (44 % TILE_N != 0), so the vector kernels' tail
+/// paths are exercised, with a trainer a couple of chunks in.
+fn lm_trainer(engine: &NativeEngine) -> Trainer<'_> {
+    let mut cfg = RunConfig::default();
+    cfg.model = "lm-simd-test".into();
+    cfg.method = "lotion".into();
+    cfg.format = "int4".into();
+    cfg.steps = 8;
+    cfg.lr = 3e-3;
+    cfg.lambda = 30.0;
+    cfg.eval_every = 8;
+    cfg.schedule = Schedule::Constant;
+    cfg.seed = 5;
+    let corpus = ZipfMarkovCorpus::generate(30_000, 256, 4, 9);
+    let toks = ByteTokenizer::new().encode(&corpus.bytes);
+    let batcher = TokenBatcher::new(toks, 4, 32, 0.1);
+    let mut trainer = Trainer::new(engine, cfg, vec![], DataSource::Tokens(batcher)).unwrap();
+    let mut metrics = MetricsLogger::in_memory();
+    trainer.chunk(&mut metrics).unwrap();
+    trainer
+}
+
+fn lm_engine() -> NativeEngine {
+    let program = LmProgram::new(
+        "lm-simd-test",
+        LmConfig { vocab: 256, d_model: 44, n_layers: 2, n_heads: 2, seq_len: 32 },
+        4,
+        2,
+    )
+    .unwrap();
+    NativeEngine::with_models(&[NativeModel {
+        program: Arc::new(program),
+        opt: OptKind::Adam,
+        steps_per_call: 4,
+    }])
+}
+
+/// One short linreg run at a forced tier; returns final param bits,
+/// the train-loss trace, and an RTN + an RR eval.
+fn run_linreg(tier: Option<SimdTier>) -> (Vec<u32>, Vec<(usize, f64)>, f64, f64) {
+    set_global_simd(tier);
+    let d = 40_000;
+    let engine = NativeEngine::with_models(&[NativeModel::from_spec(
+        ModelSpec::LinReg { d, batch: 16 },
+        OptKind::Sgd,
+        4,
+    )]);
+    let mut cfg = RunConfig::default();
+    cfg.model = format!("linreg_d{d}");
+    cfg.method = "lotion".into();
+    cfg.format = "int4".into();
+    cfg.steps = 8;
+    cfg.lr = 0.05;
+    cfg.lambda = 1.0;
+    cfg.eval_every = 8;
+    cfg.schedule = Schedule::Constant;
+    cfg.seed = 7;
+    let (statics, _, _) = synth_statics(d, 13);
+    let mut trainer = Trainer::new(&engine, cfg, statics, DataSource::InGraph).unwrap();
+    let mut metrics = MetricsLogger::in_memory();
+    for _ in 0..2 {
+        trainer.chunk(&mut metrics).unwrap();
+    }
+    let params = bits(&trainer.state().fetch("w").unwrap());
+    let mut eval = Evaluator::new(3);
+    let rtn = eval.eval_cast(&trainer, Some(&QuantFormat::int4()), Rounding::Rtn).unwrap();
+    let rr = eval.eval_cast(&trainer, Some(&QuantFormat::int4()), Rounding::Rr).unwrap();
+    set_global_simd(None);
+    (params, metrics.train_losses.clone(), rtn, rr)
+}
+
+#[test]
+fn linreg_training_is_bit_identical_across_simd_tiers() {
+    let _g = lock();
+    let (ps, ls, rtns, rrs) = run_linreg(Some(SimdTier::Scalar));
+    let (pa, la, rtna, rra) = run_linreg(None);
+    assert_eq!(ps, pa, "params differ between scalar and auto tiers");
+    for ((s1, v1), (s2, v2)) in ls.iter().zip(&la) {
+        assert_eq!(s1, s2);
+        assert_eq!(v1.to_bits(), v2.to_bits(), "loss differs at step {s1}");
+    }
+    assert_eq!(rtns.to_bits(), rtna.to_bits(), "RTN eval differs");
+    assert_eq!(rrs.to_bits(), rra.to_bits(), "RR eval differs");
+}
+
+#[test]
+fn lm_training_is_bit_identical_across_simd_tiers() {
+    let _g = lock();
+    let run = |tier: Option<SimdTier>| {
+        set_global_simd(tier);
+        let engine = lm_engine();
+        let trainer = lm_trainer(&engine);
+        let params: Vec<Vec<u32>> = trainer
+            .state()
+            .names
+            .iter()
+            .map(|n| bits(&trainer.state().fetch(n).unwrap()))
+            .collect();
+        let mut eval = Evaluator::new(3);
+        let rtn = eval.eval_cast(&trainer, Some(&QuantFormat::int4()), Rounding::Rtn).unwrap();
+        let rr = eval.eval_cast(&trainer, Some(&QuantFormat::int4()), Rounding::Rr).unwrap();
+        set_global_simd(None);
+        (params, rtn, rr)
+    };
+    let (ps, rtns, rrs) = run(Some(SimdTier::Scalar));
+    let (pa, rtna, rra) = run(None);
+    assert_eq!(ps, pa, "LM params differ between scalar and auto tiers");
+    assert_eq!(rtns.to_bits(), rtna.to_bits(), "LM RTN eval differs");
+    assert_eq!(rrs.to_bits(), rra.to_bits(), "LM RR eval differs");
+}
+
+/// The LM's fused eval consumes packed weights in place: bitwise the
+/// host-cast loss, and **zero** dense decodes — the ISSUE 6 gate that
+/// the fused path allocates no full-f32 `wq` buffer.
+#[test]
+fn lm_fused_eval_matches_host_cast_without_dense_decode() {
+    let _g = lock();
+    let engine = lm_engine();
+    let trainer = lm_trainer(&engine);
+    let ke = trainer.session.eval_entry().eval_batches.max(1);
+    let chunk = match &trainer.data {
+        DataSource::Tokens(b) => value(b.val_chunk(ke, &mut Rng::new(11))),
+        DataSource::InGraph => unreachable!("lm consumes tokens"),
+    };
+    let fmt = QuantFormat::parse("int4", 0).unwrap();
+    let quantized = trainer.quantized_keys().to_vec();
+    let host = trainer
+        .session
+        .eval_loss(Some(chunk.clone()), &mut |spec, v| {
+            Ok(if quantized.iter().any(|k| k == &spec.name) {
+                let mut wq = v.as_f32();
+                cast_rtn(&mut wq, &fmt);
+                value(HostTensor::from_f32(&v.shape, wq))
+            } else {
+                v.clone()
+            })
+        })
+        .unwrap();
+    let before = dense_decode_count();
+    let fused = trainer
+        .session
+        .eval_loss_quantized("int4", Some(chunk))
+        .unwrap()
+        .expect("native eval_q entry");
+    assert_eq!(
+        dense_decode_count(),
+        before,
+        "the LM fused eval path decoded a packed tensor to dense f32"
+    );
+    assert_eq!(fused.to_bits(), host.to_bits(), "fused {fused} vs host-cast {host}");
+}
+
+/// Programs without a fused override (the testbeds) fall back to the
+/// default dense decode — which is what the counter counts, proving
+/// the zero-decode assertion above has teeth.
+#[test]
+fn default_packed_eval_decodes_and_is_counted() {
+    let _g = lock();
+    let engine = NativeEngine::with_models(&[NativeModel::from_spec(
+        ModelSpec::LinReg { d: 256, batch: 16 },
+        OptKind::Sgd,
+        4,
+    )]);
+    let cfg = RunConfig::default();
+    let (statics, _, _) = synth_statics(256, 13);
+    let trainer = Trainer::new(&engine, cfg, statics, DataSource::InGraph).unwrap();
+    let before = dense_decode_count();
+    let fused = trainer.session.eval_loss_quantized("int4", None).unwrap();
+    assert!(fused.is_some());
+    assert!(dense_decode_count() > before, "default val_loss_packed must decode");
+}
+
+/// The evaluator's fused RTN route must leave `self.rng` exactly where
+/// the legacy host-cast route would, so RR evals issued afterwards
+/// draw identical noise either way.
+#[test]
+fn fused_rtn_route_keeps_the_eval_rng_stream_aligned() {
+    let _g = lock();
+    let engine = NativeEngine::new();
+    let cfg = RunConfig::default();
+    let (statics, _, _) = synth_statics(256, 13);
+    let trainer = Trainer::new(&engine, cfg, statics, DataSource::InGraph).unwrap();
+    let fmt = QuantFormat::int4();
+    let quantized = trainer.quantized_keys().to_vec();
+
+    let mut ev_fused = Evaluator::new(3);
+    let mut ev_host = Evaluator::new(3);
+    // fused route (eval_cast lands on eval_q for per-tensor RTN)
+    let rtn_fused = ev_fused.eval_cast(&trainer, Some(&fmt), Rounding::Rtn).unwrap();
+    // legacy route, forking the evaluator RNG per quantized param
+    let rng = &mut ev_host.rng;
+    let rtn_host = trainer
+        .session
+        .eval_loss(None, &mut |spec, v| {
+            Ok(if quantized.iter().any(|k| k == &spec.name) {
+                let mut host = v.as_ref().clone();
+                let mut r = rng.fork(1);
+                host.map_f32_inplace(|w| cast(w, &fmt, Rounding::Rtn, &mut r));
+                value(host)
+            } else {
+                v.clone()
+            })
+        })
+        .unwrap();
+    assert_eq!(rtn_fused.to_bits(), rtn_host.to_bits());
+    // the streams must agree *after* the RTN evals too
+    let rr_fused = ev_fused.eval_cast(&trainer, Some(&fmt), Rounding::Rr).unwrap();
+    let rr_host = ev_host.eval_cast(&trainer, Some(&fmt), Rounding::Rr).unwrap();
+    assert_eq!(rr_fused.to_bits(), rr_host.to_bits(), "RR stream diverged after fused RTN");
+}

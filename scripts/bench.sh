@@ -1,20 +1,21 @@
 #!/usr/bin/env bash
 # Emit the per-PR BENCH_*.json throughput trajectories (ROADMAP): run
 # the micro benches from the repo root so the JSON artifacts land
-# there. Default: runtime_micro only (the train-step hot-path rows the
-# acceptance gates track); `--all` adds quant_micro and exp_tables.
+# there. Default: runtime_micro (train-step + RTN-eval hot-path rows)
+# and quant_micro (kernel tiers, pack/decode); `--all` adds exp_tables.
 #
-#   scripts/bench.sh          # BENCH_runtime_micro.json at repo root
-#   scripts/bench.sh --all    # + BENCH_quant_micro.json, BENCH_exp_tables.json
+#   scripts/bench.sh          # BENCH_runtime_micro.json, BENCH_quant_micro.json
+#   scripts/bench.sh --all    # + BENCH_exp_tables.json
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 echo "== cargo bench --bench runtime_micro =="
 cargo bench --bench runtime_micro
 
+echo "== cargo bench --bench quant_micro =="
+cargo bench --bench quant_micro
+
 if [[ "${1:-}" == "--all" ]]; then
-    echo "== cargo bench --bench quant_micro =="
-    cargo bench --bench quant_micro
     echo "== cargo bench --bench exp_tables =="
     cargo bench --bench exp_tables
 fi

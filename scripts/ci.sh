@@ -15,6 +15,12 @@ echo "== cargo test -q (LOTION_THREADS=1) =="
 # running the whole suite in both modes makes any divergence fail the gate
 LOTION_THREADS=1 cargo test -q
 
+echo "== cargo test -q (LOTION_SIMD=scalar) =="
+# the runtime-dispatched kernels must be bit-identical scalar vs
+# vector (AVX2/NEON); pinning the whole suite to the scalar tier makes
+# any fold-order divergence in a vector path fail the gate
+LOTION_SIMD=scalar cargo test -q
+
 echo "== threading suite (oversubscribed LOTION_THREADS=16) =="
 # more workers than cores shakes out persistent-pool races (lost
 # wakeups, stale-epoch claims) that hide at the natural width; the
