@@ -263,6 +263,38 @@ fn main() {
         }
     }
 
+    // Checkpoint save/load (ISSUE 7): the crash-safety tax at the
+    // lm-150m-sim scale — the atomic temp+fsync+rename save and the
+    // OOM-hardened bounded load of a ~22 MB `.lotn` archive. Items =
+    // archive bytes, so the rows read as disk bandwidth.
+    {
+        use lotion::checkpoint::Checkpoint;
+        use lotion::coordinator::Evaluator;
+        use lotion::util::tempdir::TempDir;
+
+        let engine = NativeEngine::new();
+        let mut cfg = RunConfig::default();
+        cfg.model = "lm-150m-sim".into();
+        cfg.method = "lotion".into();
+        cfg.format = "int4".into();
+        cfg.steps = 1_000_000; // never reached; we only snapshot
+        cfg.lr = 1e-3;
+        cfg.schedule = Schedule::Constant;
+        let trainer =
+            Trainer::new(&engine, cfg, vec![], DataSource::InGraph).expect("lm trainer");
+        let eval = Evaluator::new(7);
+        let dir = TempDir::new();
+        let path = dir.path().join("bench.lotn");
+        trainer.save_checkpoint(&eval, 0, &path).expect("seed save");
+        let sz = std::fs::metadata(&path).expect("checkpoint written").len() as f64;
+        b.run_with_items("ckpt/lm_150m_sim/save", Some(sz), &mut || {
+            trainer.save_checkpoint(&eval, 0, &path).unwrap();
+        });
+        b.run_with_items("ckpt/lm_150m_sim/load", Some(sz), &mut || {
+            std::hint::black_box(Checkpoint::load(&path).unwrap());
+        });
+    }
+
     #[cfg(feature = "pjrt")]
     pjrt_benches(&mut b);
 

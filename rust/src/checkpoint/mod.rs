@@ -4,14 +4,30 @@
 //! Layout: magic "LOTN1\n" | meta_len:u64 | meta json bytes |
 //!         n_tensors:u64 | per tensor: name_len:u64, name, dtype byte,
 //!         ndim:u64, dims:u64*, data_len:u64, raw little-endian data.
+//!
+//! Crash safety (DESIGN.md §7): `save` writes a uniquely-named temp
+//! file, fsyncs it, then atomically renames it over the target and
+//! fsyncs the parent directory — a reader never observes a torn
+//! archive, and a kill between fsync and rename leaves the previous
+//! checkpoint intact. `load` treats every length field as untrusted:
+//! allocations are bounded by the bytes actually remaining in the
+//! file, so a flipped length byte yields a clean error, not an OOM.
 
 use crate::formats::json::Json;
 use crate::tensor::{DType, HostTensor};
+use crate::util::faults;
 use anyhow::{anyhow, bail, Result};
 use std::io::{Read, Write};
 use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
 
 const MAGIC: &[u8; 6] = b"LOTN1\n";
+
+/// Process-wide save sequence: the fault-plan ordinal for the
+/// `ckpt_save` site (first save in a process is ordinal 1) and the
+/// uniqueness tiebreaker in temp-file names when concurrent sweep
+/// workers checkpoint sibling points in one directory.
+static SAVE_SEQ: AtomicU64 = AtomicU64::new(0);
 
 pub struct Checkpoint {
     pub meta: Json,
@@ -35,8 +51,20 @@ impl Checkpoint {
         if let Some(dir) = path.parent() {
             std::fs::create_dir_all(dir)?;
         }
-        let tmp = path.with_extension("tmp");
-        let mut f = std::io::BufWriter::new(std::fs::File::create(&tmp)?);
+        let seq = SAVE_SEQ.fetch_add(1, Ordering::Relaxed) + 1;
+        // unique temp name: pid + process-wide sequence, so concurrent
+        // sweep workers saving siblings never collide on one ".tmp"
+        let tmp = path.with_extension(format!("tmp.{}.{}", std::process::id(), seq));
+        let res = self.save_inner(&tmp, path, seq);
+        if res.is_err() {
+            let _ = std::fs::remove_file(&tmp);
+        }
+        res
+    }
+
+    fn save_inner(&self, tmp: &Path, path: &Path, seq: u64) -> Result<()> {
+        let file = std::fs::File::create(tmp)?;
+        let mut f = std::io::BufWriter::new(file);
         f.write_all(MAGIC)?;
         let meta = self.meta.to_string().into_bytes();
         f.write_all(&(meta.len() as u64).to_le_bytes())?;
@@ -54,47 +82,111 @@ impl Checkpoint {
             f.write_all(t.bytes())?;
         }
         f.flush()?;
-        drop(f);
-        std::fs::rename(&tmp, path)?;
+        let file = f.into_inner().map_err(|e| anyhow!("flushing {tmp:?}: {e}"))?;
+        // durability point: the temp file's bytes reach disk before the
+        // rename can publish them
+        file.sync_all()?;
+        drop(file);
+        // fault site *between* fsync and rename: a kill here must leave
+        // the previous checkpoint untouched (atomicity proof in tests)
+        faults::poke("ckpt_save", seq)?;
+        std::fs::rename(tmp, path)?;
+        // fsync the directory so the rename itself survives a crash
+        #[cfg(unix)]
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::File::open(dir)?.sync_all()?;
+            }
+        }
         Ok(())
     }
 
     pub fn load(path: &Path) -> Result<Checkpoint> {
-        let mut f = std::io::BufReader::new(
-            std::fs::File::open(path).map_err(|e| anyhow!("opening {path:?}: {e}"))?,
-        );
+        let file = std::fs::File::open(path).map_err(|e| anyhow!("opening {path:?}: {e}"))?;
+        // every length field below is untrusted: bound allocations by
+        // the bytes actually left in the file
+        let remaining = file.metadata()?.len();
+        let mut f = Bounded { inner: std::io::BufReader::new(file), remaining };
         let mut magic = [0u8; 6];
-        f.read_exact(&mut magic)?;
+        f.read_bytes(&mut magic)?;
         if &magic != MAGIC {
             bail!("{path:?} is not a LOTN1 checkpoint");
         }
-        let meta_len = read_u64(&mut f)? as usize;
+        let meta_len = f.read_len("meta")?;
         let mut meta_bytes = vec![0u8; meta_len];
-        f.read_exact(&mut meta_bytes)?;
+        f.read_bytes(&mut meta_bytes)?;
         let meta = Json::parse(std::str::from_utf8(&meta_bytes)?)?;
-        let n = read_u64(&mut f)? as usize;
+        let n = f.read_count("tensor count", 25)?;
         let mut tensors = Vec::with_capacity(n);
         for _ in 0..n {
-            let name_len = read_u64(&mut f)? as usize;
+            let name_len = f.read_len("tensor name")?;
             let mut name = vec![0u8; name_len];
-            f.read_exact(&mut name)?;
+            f.read_bytes(&mut name)?;
             let mut db = [0u8; 1];
-            f.read_exact(&mut db)?;
+            f.read_bytes(&mut db)?;
             let dtype = byte_dtype(db[0])?;
-            let ndim = read_u64(&mut f)? as usize;
+            let ndim = f.read_count("ndim", 8)?;
             let mut shape = Vec::with_capacity(ndim);
             for _ in 0..ndim {
-                shape.push(read_u64(&mut f)? as usize);
+                shape.push(f.read_u64()? as usize);
             }
-            let data_len = read_u64(&mut f)? as usize;
+            let data_len = f.read_len("tensor data")?;
             let mut data = vec![0u8; data_len];
-            f.read_exact(&mut data)?;
+            f.read_bytes(&mut data)?;
             tensors.push((
                 String::from_utf8(name)?,
                 HostTensor::from_bytes(dtype, &shape, data)?,
             ));
         }
         Ok(Checkpoint { meta, tensors })
+    }
+}
+
+/// A reader that tracks how many bytes the file can still supply, so
+/// corrupt length prefixes fail fast instead of driving `vec![0; n]`
+/// multi-GB allocations.
+struct Bounded<R> {
+    inner: R,
+    remaining: u64,
+}
+
+impl<R: Read> Bounded<R> {
+    fn read_bytes(&mut self, buf: &mut [u8]) -> Result<()> {
+        if (buf.len() as u64) > self.remaining {
+            bail!(
+                "truncated checkpoint: need {} bytes, {} remain",
+                buf.len(),
+                self.remaining
+            );
+        }
+        self.inner.read_exact(buf)?;
+        self.remaining -= buf.len() as u64;
+        Ok(())
+    }
+
+    fn read_u64(&mut self) -> Result<u64> {
+        let mut b = [0u8; 8];
+        self.read_bytes(&mut b)?;
+        Ok(u64::from_le_bytes(b))
+    }
+
+    /// A byte-length prefix: must not exceed the bytes remaining.
+    fn read_len(&mut self, what: &str) -> Result<usize> {
+        let n = self.read_u64()?;
+        if n > self.remaining {
+            bail!("corrupt checkpoint: {what} length {n} exceeds {} remaining bytes", self.remaining);
+        }
+        Ok(n as usize)
+    }
+
+    /// An element-count prefix where each element occupies at least
+    /// `min_bytes` in the file: bounds `Vec::with_capacity`.
+    fn read_count(&mut self, what: &str, min_bytes: u64) -> Result<usize> {
+        let n = self.read_u64()?;
+        match n.checked_mul(min_bytes) {
+            Some(total) if total <= self.remaining => Ok(n as usize),
+            _ => bail!("corrupt checkpoint: {what} {n} exceeds remaining file size"),
+        }
     }
 }
 
@@ -115,24 +207,24 @@ fn byte_dtype(b: u8) -> Result<DType> {
     })
 }
 
-fn read_u64(f: &mut impl Read) -> Result<u64> {
-    let mut b = [0u8; 8];
-    f.read_exact(&mut b)?;
-    Ok(u64::from_le_bytes(b))
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::faults::ScopedPlan;
     use crate::util::tempdir::TempDir;
+
+    fn sample() -> Checkpoint {
+        let mut c = Checkpoint::new(Json::obj(vec![("step", Json::num(42.0))]));
+        c.push("w", HostTensor::from_f32(&[2, 3], vec![1., 2., 3., 4., 5., 6.]));
+        c.push("toks", HostTensor::from_i32(&[2], vec![7, -8]));
+        c
+    }
 
     #[test]
     fn roundtrip() {
         let dir = TempDir::new();
         let path = dir.path().join("c.lotn");
-        let mut c = Checkpoint::new(Json::obj(vec![("step", Json::num(42.0))]));
-        c.push("w", HostTensor::from_f32(&[2, 3], vec![1., 2., 3., 4., 5., 6.]));
-        c.push("toks", HostTensor::from_i32(&[2], vec![7, -8]));
+        let c = sample();
         c.save(&path).unwrap();
         let back = Checkpoint::load(&path).unwrap();
         assert_eq!(back.meta.get("step").unwrap().as_usize(), Some(42));
@@ -157,6 +249,73 @@ mod tests {
         c.save(&path).unwrap();
         c.save(&path).unwrap(); // second save overwrites cleanly
         assert!(Checkpoint::load(&path).is_ok());
-        assert!(!path.with_extension("tmp").exists());
+        // no temp litter of any suffix left behind
+        let leftovers: Vec<_> = std::fs::read_dir(dir.path())
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.file_name().to_string_lossy().contains("tmp"))
+            .collect();
+        assert!(leftovers.is_empty(), "temp files left: {leftovers:?}");
+    }
+
+    #[test]
+    fn truncated_archives_error_cleanly() {
+        let dir = TempDir::new();
+        let path = dir.path().join("c.lotn");
+        sample().save(&path).unwrap();
+        let full = std::fs::read(&path).unwrap();
+        // every prefix of the archive must load-fail, never panic/OOM
+        for cut in [0, 3, 6, 10, full.len() / 2, full.len() - 1] {
+            let p = dir.path().join("cut.lotn");
+            std::fs::write(&p, &full[..cut]).unwrap();
+            assert!(Checkpoint::load(&p).is_err(), "cut at {cut} loaded");
+        }
+    }
+
+    #[test]
+    fn bit_flipped_lengths_error_cleanly() {
+        let dir = TempDir::new();
+        let path = dir.path().join("c.lotn");
+        sample().save(&path).unwrap();
+        let full = std::fs::read(&path).unwrap();
+        // flip a high byte in each u64 length field so the claimed
+        // size becomes multi-GB: must error, not allocate
+        // meta_len is at offset 6; n_tensors follows the meta
+        let meta_len = u64::from_le_bytes(full[6..14].try_into().unwrap()) as usize;
+        let n_tensors_off = 14 + meta_len;
+        let first_name_len_off = n_tensors_off + 8;
+        for off in [6, n_tensors_off, first_name_len_off] {
+            let mut bad = full.clone();
+            bad[off + 6] ^= 0x7f; // blow up the 2^48 byte
+            let p = dir.path().join("flip.lotn");
+            std::fs::write(&p, &bad).unwrap();
+            assert!(Checkpoint::load(&p).is_err(), "flip at {off} loaded");
+        }
+    }
+
+    #[test]
+    fn io_fault_during_save_leaves_previous_checkpoint() {
+        let dir = TempDir::new();
+        let path = dir.path().join("c.lotn");
+        sample().save(&path).unwrap();
+        let before = std::fs::read(&path).unwrap();
+        // arm an io_err at every save in this scope: the next save's
+        // seq is unknown here, so match a wide window via repeats
+        let seq_now = SAVE_SEQ.load(Ordering::Relaxed);
+        // other tests in this binary may save concurrently and advance
+        // the sequence; a wide ordinal window keeps this deterministic
+        let plan: Vec<String> = (1..=64)
+            .map(|d| format!("io_err@ckpt_save:{}", seq_now + d))
+            .collect();
+        let _g = ScopedPlan::install(&plan.join(",")).unwrap();
+        assert!(sample().save(&path).is_err());
+        // target untouched, temp cleaned up
+        assert_eq!(std::fs::read(&path).unwrap(), before);
+        let leftovers: Vec<_> = std::fs::read_dir(dir.path())
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.file_name().to_string_lossy().contains("tmp"))
+            .collect();
+        assert!(leftovers.is_empty(), "temp files left: {leftovers:?}");
     }
 }

@@ -72,6 +72,16 @@ impl Args {
         }
     }
 
+    /// A usize flag with no default — `None` when absent. Distinguishes
+    /// "not given" from an explicit `0` (e.g. `--ckpt-every 0` disables
+    /// checkpointing even when the config or env sets a cadence).
+    pub fn usize_opt(&self, name: &str) -> Result<Option<usize>> {
+        match self.flag(name) {
+            None => Ok(None),
+            Some(v) => v.parse().map(Some).map_err(|e| anyhow!("--{name}: {e}")),
+        }
+    }
+
     pub fn f64_or(&self, name: &str, default: f64) -> Result<f64> {
         match self.flag(name) {
             None => Ok(default),
@@ -146,6 +156,14 @@ mod tests {
         assert!(a.required("missing").is_err());
         assert_eq!(a.f64_or("lr", 0.5).unwrap(), 0.5);
         assert_eq!(a.str_or("name", "d"), "d");
+    }
+
+    #[test]
+    fn usize_opt_distinguishes_unset_from_zero() {
+        assert_eq!(parse("train").usize_opt("ckpt-every").unwrap(), None);
+        assert_eq!(parse("train --ckpt-every 0").usize_opt("ckpt-every").unwrap(), Some(0));
+        assert_eq!(parse("train --ckpt-every 8").usize_opt("ckpt-every").unwrap(), Some(8));
+        assert!(parse("train --ckpt-every x").usize_opt("ckpt-every").is_err());
     }
 
     #[test]

@@ -7,5 +7,5 @@
 pub mod run;
 pub mod toml;
 
-pub use run::{RunConfig, Schedule};
+pub use run::{env_ckpt_dir, env_ckpt_every, RunConfig, Schedule};
 pub use toml::{TomlDoc, Value};

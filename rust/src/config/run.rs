@@ -41,6 +41,9 @@ pub struct RunConfig {
     pub artifacts_dir: String,
     pub results_dir: String,
     pub checkpoint_every: usize,
+    /// checkpoint directory override (`[train] ckpt_dir`); None = the
+    /// run's output directory
+    pub ckpt_dir: Option<String>,
     /// native-backend worker threads: 0 = auto (`LOTION_THREADS` env
     /// var, else all cores). Output is bit-identical at any value —
     /// a pure throughput knob (DESIGN.md §3).
@@ -73,6 +76,7 @@ impl Default for RunConfig {
             artifacts_dir: "artifacts".into(),
             results_dir: "results".into(),
             checkpoint_every: 0,
+            ckpt_dir: None,
             threads: 0,
             sweep_workers: 0,
         }
@@ -120,6 +124,7 @@ impl RunConfig {
             artifacts_dir: doc.str_or("paths.artifacts", &d.artifacts_dir),
             results_dir: doc.str_or("paths.results", &d.results_dir),
             checkpoint_every: doc.usize_or("train.checkpoint_every", 0),
+            ckpt_dir: doc.get("train.ckpt_dir").and_then(|v| v.as_str().map(String::from)),
             threads: doc.usize_or("train.threads", 0),
             sweep_workers: doc.usize_or("sweep.workers", 0),
         };
@@ -163,6 +168,53 @@ impl RunConfig {
         let fmt = if self.method == "ptq" { "none" } else { self.format.as_str() };
         format!("train_{}_{}_{}", self.model, self.method, fmt)
     }
+
+    /// FNV-1a hash of the *result-determining* configuration: the
+    /// fields that feed the bit-identical training output. Throughput
+    /// knobs (`threads`, `sweep_workers`), paths, the run name and the
+    /// checkpointing knobs are excluded on purpose — a checkpoint or
+    /// sweep journal written at one thread count must resume at any
+    /// other (the determinism contract makes that sound), and changing
+    /// the snapshot cadence must not invalidate existing checkpoints.
+    pub fn digest(&self) -> String {
+        let mut key = format!(
+            "{}|{}|{}|{}|{:016x}|{:016x}|{:?}|{}|{}",
+            self.model,
+            self.method,
+            self.format,
+            self.steps,
+            self.lr.to_bits(),
+            self.lambda.to_bits(),
+            self.schedule,
+            self.seed,
+            self.eval_every,
+        );
+        for r in &self.eval_roundings {
+            key.push('|');
+            key.push_str(r.name());
+        }
+        for f in &self.eval_formats {
+            key.push('|');
+            key.push_str(f);
+        }
+        let mut h: u64 = 0xcbf29ce484222325;
+        for b in key.as_bytes() {
+            h ^= *b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        format!("{h:016x}")
+    }
+}
+
+/// `LOTION_CKPT_EVERY`: checkpoint cadence fallback when neither the
+/// CLI flag nor the config sets one.
+pub fn env_ckpt_every() -> Option<usize> {
+    std::env::var("LOTION_CKPT_EVERY").ok().and_then(|v| v.parse().ok())
+}
+
+/// `LOTION_CKPT_DIR`: checkpoint directory fallback.
+pub fn env_ckpt_dir() -> Option<String> {
+    std::env::var("LOTION_CKPT_DIR").ok().filter(|v| !v.is_empty())
 }
 
 #[cfg(test)]
@@ -202,6 +254,39 @@ mod tests {
         let mut cfg = RunConfig::default();
         cfg.method = "ptq".into();
         assert_eq!(cfg.train_artifact(), "train_linreg_d256_ptq_none");
+    }
+
+    #[test]
+    fn digest_tracks_result_determining_fields_only() {
+        let base = RunConfig::default();
+        let d0 = base.digest();
+        assert_eq!(d0, base.digest(), "digest must be stable");
+        // throughput/path/ckpt knobs do not change the digest
+        let mut c = base.clone();
+        c.threads = 7;
+        c.sweep_workers = 3;
+        c.name = "other".into();
+        c.results_dir = "/elsewhere".into();
+        c.checkpoint_every = 5;
+        c.ckpt_dir = Some("/ckpts".into());
+        assert_eq!(c.digest(), d0);
+        // result-determining fields do
+        let mut c = base.clone();
+        c.lr = 0.2;
+        assert_ne!(c.digest(), d0);
+        let mut c = base.clone();
+        c.seed = 1;
+        assert_ne!(c.digest(), d0);
+        let mut c = base.clone();
+        c.eval_every = 25;
+        assert_ne!(c.digest(), d0);
+    }
+
+    #[test]
+    fn ckpt_dir_from_doc() {
+        let doc = TomlDoc::parse("[train]\nckpt_dir = \"/tmp/ck\"").unwrap();
+        assert_eq!(RunConfig::from_doc(&doc).unwrap().ckpt_dir.as_deref(), Some("/tmp/ck"));
+        assert_eq!(RunConfig::default().ckpt_dir, None);
     }
 
     #[test]

@@ -39,6 +39,18 @@ impl Evaluator {
         Evaluator { rng: Rng::new(seed ^ 0xE7A1_5EED), val_tokens: None }
     }
 
+    /// The pinned validation chunk, if one has been drawn — checkpointed
+    /// so a resumed run evaluates on the *same* data as the original
+    /// (the chunk is drawn lazily from the eval RNG at the first eval).
+    pub fn val_tokens(&self) -> Option<crate::tensor::HostTensor> {
+        self.val_tokens.as_ref().map(|v| v.as_ref().clone())
+    }
+
+    /// Restore a checkpointed validation chunk (resume path).
+    pub fn set_val_tokens(&mut self, t: crate::tensor::HostTensor) {
+        self.val_tokens = Some(value(t));
+    }
+
     /// Evaluate the current weights with a given cast. `format == None`
     /// means FP32 (no cast).
     pub fn eval_cast(

@@ -14,10 +14,22 @@ pub struct EvalPoint {
     pub val_loss: f64,
 }
 
+/// Why a run diverged — captured so sweep journals and JSONL sinks
+/// record *why* a point scored `+inf`, not just that it did.
+#[derive(Clone, Debug)]
+pub struct DivergedRecord {
+    pub step: usize,
+    pub loss: f64,
+    pub method: String,
+    pub lr: f64,
+}
+
 pub struct MetricsLogger {
     file: Option<std::fs::File>,
     pub train_losses: Vec<(usize, f64)>,
     pub eval_points: Vec<EvalPoint>,
+    /// set once if the run diverged (non-finite base loss)
+    pub diverged: Option<DivergedRecord>,
 }
 
 impl MetricsLogger {
@@ -29,11 +41,31 @@ impl MetricsLogger {
             file: Some(std::fs::File::create(path)?),
             train_losses: Vec::new(),
             eval_points: Vec::new(),
+            diverged: None,
+        })
+    }
+
+    /// Append to an existing JSONL sink (resume path): earlier events
+    /// from the interrupted run stay in place, new events follow.
+    pub fn append_to_file(path: &Path) -> Result<MetricsLogger> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        Ok(MetricsLogger {
+            file: Some(std::fs::OpenOptions::new().create(true).append(true).open(path)?),
+            train_losses: Vec::new(),
+            eval_points: Vec::new(),
+            diverged: None,
         })
     }
 
     pub fn in_memory() -> MetricsLogger {
-        MetricsLogger { file: None, train_losses: Vec::new(), eval_points: Vec::new() }
+        MetricsLogger {
+            file: None,
+            train_losses: Vec::new(),
+            eval_points: Vec::new(),
+            diverged: None,
+        }
     }
 
     fn emit(&mut self, j: Json) {
@@ -67,6 +99,20 @@ impl MetricsLogger {
             ("format", Json::str(format)),
             ("rounding", Json::str(rounding)),
             ("val_loss", Json::num(val_loss)),
+        ]));
+    }
+
+    /// Record a divergence (non-finite base loss) as a structured
+    /// event. The loss goes out as a JSON *string*: NaN/inf are not
+    /// valid JSON numbers and would corrupt the JSONL stream.
+    pub fn log_diverged(&mut self, step: usize, loss: f64, method: &str, lr: f64) {
+        self.diverged = Some(DivergedRecord { step, loss, method: method.into(), lr });
+        self.emit(Json::obj(vec![
+            ("kind", Json::str("diverged")),
+            ("step", Json::num(step as f64)),
+            ("loss", Json::str(&format!("{loss}"))),
+            ("method", Json::str(method)),
+            ("lr", Json::num(lr)),
         ]));
     }
 
@@ -111,5 +157,37 @@ mod tests {
         assert_eq!(m.best_eval("int4", "rtn"), Some(2.5));
         assert_eq!(m.final_eval("int4", "rr"), Some(2.7));
         assert_eq!(m.best_eval("int8", "rtn"), None);
+    }
+
+    #[test]
+    fn diverged_record_is_structured_and_valid_json() {
+        let dir = TempDir::new();
+        let path = dir.path().join("run.jsonl");
+        let mut m = MetricsLogger::to_file(&path).unwrap();
+        m.log_diverged(17, f64::NAN, "lotion", 0.5);
+        let rec = m.diverged.as_ref().expect("diverged set");
+        assert_eq!(rec.step, 17);
+        assert!(rec.loss.is_nan());
+        assert_eq!(rec.method, "lotion");
+        drop(m.file.take());
+        let text = std::fs::read_to_string(&path).unwrap();
+        // the NaN loss must not break JSON parsing of the line
+        let j = Json::parse(text.lines().next().unwrap()).unwrap();
+        assert_eq!(j.get("kind").unwrap().as_str(), Some("diverged"));
+        assert_eq!(j.get("loss").unwrap().as_str(), Some("NaN"));
+    }
+
+    #[test]
+    fn append_to_file_preserves_existing_lines() {
+        let dir = TempDir::new();
+        let path = dir.path().join("run.jsonl");
+        let mut m = MetricsLogger::to_file(&path).unwrap();
+        m.log_train(1, 2.0, 2.5, 0.1, 0.01);
+        drop(m.file.take());
+        let mut m2 = MetricsLogger::append_to_file(&path).unwrap();
+        m2.log_train(2, 1.9, 2.4, 0.1, 0.01);
+        drop(m2.file.take());
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 2);
     }
 }

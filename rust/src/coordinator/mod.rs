@@ -15,5 +15,5 @@ pub mod trainer;
 
 pub use evaluator::Evaluator;
 pub use metrics::MetricsLogger;
-pub use sweep::{SweepPoint, SweepResult, SweepRunner};
-pub use trainer::{DataSource, Trainer};
+pub use sweep::{JournalEntry, SweepJournal, SweepPoint, SweepResult, SweepRunner};
+pub use trainer::{CkptPolicy, DataSource, Trainer};

@@ -17,14 +17,16 @@
 //! point computes; scores/metrics are folded in grid order.
 
 use crate::config::RunConfig;
+use crate::formats::json::Json;
 use crate::runtime::{Executor, ExecutorFactory};
 use crate::tensor::HostTensor;
-use crate::util::pool::Pool;
-use crate::util::rng::Rng;
-use anyhow::Result;
+use crate::util::{faults, pool::Pool, rng::Rng};
+use anyhow::{anyhow, Result};
 use std::cell::RefCell;
-use std::path::PathBuf;
+use std::io::Write;
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
 
 use super::evaluator::Evaluator;
 use super::metrics::MetricsLogger;
@@ -66,6 +68,167 @@ pub struct SweepResult {
     /// downstream ordering never sees it)
     pub score: f64,
     pub diverged: bool,
+}
+
+/// One completed grid point in a sweep journal: a JSONL line keyed by
+/// (label, config digest) with a bit-exact score.
+#[derive(Clone, Debug)]
+pub struct JournalEntry {
+    pub label: String,
+    /// [`RunConfig::digest`] of the point — resume skips a journaled
+    /// point only when the digest still matches, so an edited grid
+    /// re-runs instead of silently reusing stale scores
+    pub digest: String,
+    pub lr: f64,
+    /// "ok" | "diverged" | "failed" (panicked through all retries)
+    pub status: String,
+    pub attempts: usize,
+    pub score: f64,
+    pub error: Option<String>,
+}
+
+impl JournalEntry {
+    /// One JSONL line. The score rides as `score_bits` (hex of the f64
+    /// bit pattern): +inf/NaN are not valid JSON numbers, and resume
+    /// must reproduce scores *bitwise*. A human-readable `score` field
+    /// accompanies finite values.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("label", Json::str(&self.label)),
+            ("digest", Json::str(&self.digest)),
+            ("lr", Json::num(self.lr)),
+            ("status", Json::str(&self.status)),
+            ("attempts", Json::num(self.attempts as f64)),
+            ("score_bits", Json::str(&format!("{:016x}", self.score.to_bits()))),
+            (
+                "score",
+                if self.score.is_finite() { Json::num(self.score) } else { Json::Null },
+            ),
+            (
+                "error",
+                match &self.error {
+                    Some(e) => Json::str(e),
+                    None => Json::Null,
+                },
+            ),
+        ])
+    }
+
+    pub fn from_json(line: &str) -> Result<JournalEntry> {
+        let j = Json::parse(line)?;
+        let s = |k: &str| -> Result<String> {
+            j.get(k)
+                .and_then(|v| v.as_str())
+                .map(String::from)
+                .ok_or_else(|| anyhow!("journal line missing {k:?}"))
+        };
+        let bits = u64::from_str_radix(&s("score_bits")?, 16)
+            .map_err(|e| anyhow!("bad score_bits: {e}"))?;
+        Ok(JournalEntry {
+            label: s("label")?,
+            digest: s("digest")?,
+            lr: j.get("lr").and_then(|v| v.as_f64()).ok_or_else(|| anyhow!("missing lr"))?,
+            status: s("status")?,
+            attempts: j.get("attempts").and_then(|v| v.as_usize()).unwrap_or(1),
+            score: f64::from_bits(bits),
+            error: j.get("error").and_then(|v| v.as_str()).map(String::from),
+        })
+    }
+}
+
+/// Append-only JSONL journal of completed sweep points. Each point is
+/// one line written atomically-enough for crash recovery: a torn tail
+/// line (the process died mid-write) parses as garbage and is skipped
+/// by [`SweepJournal::completed`], costing one re-run, never a wrong
+/// result.
+pub struct SweepJournal {
+    path: PathBuf,
+    file: Mutex<std::fs::File>,
+}
+
+impl SweepJournal {
+    /// Open (append mode, created if missing) — existing lines from an
+    /// interrupted sweep stay in place.
+    pub fn open(path: &Path) -> Result<SweepJournal> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let file = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
+        Ok(SweepJournal { path: path.to_path_buf(), file: Mutex::new(file) })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Parse the completed entries of an existing journal. Tolerant of
+    /// a torn final line; a missing file is an empty journal.
+    pub fn completed(path: &Path) -> Result<Vec<JournalEntry>> {
+        let text = match std::fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(Vec::new()),
+            Err(e) => return Err(anyhow!("reading journal {path:?}: {e}")),
+        };
+        let mut out = Vec::new();
+        for line in text.lines() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            match JournalEntry::from_json(line) {
+                Ok(e) => out.push(e),
+                Err(e) => crate::warn_!("journal {path:?}: skipping unparseable line ({e})"),
+            }
+        }
+        Ok(out)
+    }
+
+    /// Append one entry as a single line+newline write, flushed.
+    pub fn append(&self, e: &JournalEntry) -> Result<()> {
+        let mut line = e.to_json().to_string();
+        line.push('\n');
+        let mut f = self.file.lock().unwrap();
+        f.write_all(line.as_bytes())?;
+        f.flush()?;
+        Ok(())
+    }
+
+    /// Journal a finished point; journal I/O failures degrade to a
+    /// warning (the sweep result is still returned in-process).
+    fn record(&self, digest: &str, attempts: usize, r: &SweepResult) {
+        let error = r
+            .metrics
+            .diverged
+            .as_ref()
+            .map(|d| format!("diverged at step {} (loss {}, lr {:.3e})", d.step, d.loss, d.lr));
+        let e = JournalEntry {
+            label: r.label.clone(),
+            digest: digest.to_string(),
+            lr: r.lr,
+            status: if r.diverged { "diverged" } else { "ok" }.to_string(),
+            attempts,
+            score: r.score,
+            error,
+        };
+        if let Err(err) = self.append(&e) {
+            crate::warn_!("journal {:?}: appending {}: {err}", self.path, r.label);
+        }
+    }
+
+    /// Journal a point that panicked through all its retries.
+    fn record_failed(&self, p: &SweepPoint, attempts: usize, error: Option<&str>) {
+        let e = JournalEntry {
+            label: p.label.clone(),
+            digest: p.cfg.digest(),
+            lr: p.cfg.lr,
+            status: "failed".to_string(),
+            attempts,
+            score: f64::INFINITY,
+            error: error.map(String::from),
+        };
+        if let Err(err) = self.append(&e) {
+            crate::warn_!("journal {:?}: appending {}: {err}", self.path, p.label);
+        }
+    }
 }
 
 /// The `LOTION_SWEEP_WORKERS` environment override (0/unset/garbage =
@@ -119,12 +282,26 @@ pub struct SweepRunner<'f> {
     /// engine for the serial path: reuse the caller's (warm scratch,
     /// populated timing report) instead of spawning a throwaway one
     serial_engine: Option<&'f dyn Executor>,
+    /// completed-point journal (None = no journaling)
+    journal: Option<SweepJournal>,
+    /// journaled entries from an interrupted sweep: matching points
+    /// are skipped and their scores folded back in grid order
+    resume: Vec<JournalEntry>,
+    /// extra attempts for a panicking point (each on a fresh engine)
+    retries: usize,
 }
 
 impl<'f> SweepRunner<'f> {
     /// `workers == 0` resolves via [`resolve_sweep_workers`].
     pub fn new(factory: &'f dyn ExecutorFactory, workers: usize) -> SweepRunner<'f> {
-        SweepRunner { factory, workers: resolve_sweep_workers(workers), serial_engine: None }
+        SweepRunner {
+            factory,
+            workers: resolve_sweep_workers(workers),
+            serial_engine: None,
+            journal: None,
+            resume: Vec::new(),
+            retries: 1,
+        }
     }
 
     /// Run the serial (`workers <= 1`) path on this engine instead of a
@@ -137,14 +314,57 @@ impl<'f> SweepRunner<'f> {
         self
     }
 
+    /// Journal completed points to `path`, skipping any point already
+    /// present in `resume` (label + config digest match) — the
+    /// `--resume-sweep` seam. Pass `SweepJournal::completed(path)?` as
+    /// `resume` to fold a previous interrupted run, or an empty vec to
+    /// journal from scratch.
+    pub fn with_journal(mut self, path: &Path, resume: Vec<JournalEntry>) -> Result<Self> {
+        self.journal = Some(SweepJournal::open(path)?);
+        self.resume = resume;
+        Ok(self)
+    }
+
+    /// Extra attempts for a grid point that *panics* (default 1). Each
+    /// retry runs on a freshly spawned engine — the panicking engine's
+    /// scratch may be poisoned. Deterministic divergence is never
+    /// retried: it would diverge identically again.
+    pub fn with_retries(mut self, retries: usize) -> Self {
+        self.retries = retries;
+        self
+    }
+
     pub fn workers(&self) -> usize {
         self.workers
+    }
+
+    /// The journaled result for a point, if its label + digest match a
+    /// resume entry (last entry wins when a label repeats).
+    fn resumed_result(&self, p: &SweepPoint) -> Option<SweepResult> {
+        let digest = p.cfg.digest();
+        let e = self
+            .resume
+            .iter()
+            .rev()
+            .find(|e| e.label == p.label && e.digest == digest)?;
+        crate::info!("sweep {}: resumed from journal (score {:.5})", e.label, e.score);
+        Some(SweepResult {
+            label: e.label.clone(),
+            lr: e.lr,
+            metrics: MetricsLogger::in_memory(),
+            score: e.score,
+            diverged: e.status != "ok",
+        })
     }
 
     /// Run every grid point and fold the results in grid order. Scores
     /// are the final eval under (`score_format`, `score_rounding`);
     /// diverged runs (and NaN scores) fold as +inf rather than failing
-    /// the sweep — a diverged grid point is a data point.
+    /// the sweep — a diverged grid point is a data point. A point that
+    /// *panics* is caught at the point boundary, retried per
+    /// [`SweepRunner::with_retries`], and folds as +inf if exhausted;
+    /// journaled points from [`SweepRunner::with_journal`]'s resume set
+    /// are skipped and their scores folded back in place.
     pub fn run(
         &self,
         points: Vec<SweepPoint>,
@@ -153,40 +373,171 @@ impl<'f> SweepRunner<'f> {
         inputs: &SweepInputs,
     ) -> Result<Vec<SweepResult>> {
         let n = points.len();
-        if self.workers <= 1 || n <= 1 {
-            let spawned;
-            let engine: &dyn Executor = match self.serial_engine {
-                Some(e) => e,
-                None => {
-                    spawned = self.factory.spawn()?;
-                    &*spawned
-                }
-            };
-            return points
-                .iter()
-                .map(|p| Ok(run_point(engine, p, score_format, score_rounding, inputs)))
-                .collect();
+        let mut slots: Vec<Option<SweepResult>> = Vec::new();
+        slots.resize_with(n, || None);
+        let mut pending: Vec<(usize, SweepPoint)> = Vec::new();
+        for (i, p) in points.into_iter().enumerate() {
+            match self.resumed_result(&p) {
+                Some(r) => slots[i] = Some(r),
+                None => pending.push((i, p)),
+            }
         }
-        let epoch = SWEEP_EPOCH.fetch_add(1, Ordering::Relaxed);
-        let pool = Pool::new(self.workers.min(n));
-        let factory = self.factory;
-        // the calling thread participates in the job; make sure its
-        // cached engine is released even if a grid point panics (pool
-        // workers drop theirs with the pool)
-        let _release = ReleaseCallerEngine;
-        let results: Vec<Result<SweepResult>> = pool.run(points, |_, p| {
-            WORKER_ENGINE.with(|slot| {
-                let mut slot = slot.borrow_mut();
-                let stale = !matches!(&*slot, Some((e, _)) if *e == epoch);
-                if stale {
-                    *slot = Some((epoch, factory.spawn()?));
+        if self.workers <= 1 || pending.len() <= 1 {
+            if !pending.is_empty() {
+                let spawned;
+                let base: &dyn Executor = match self.serial_engine {
+                    Some(e) => e,
+                    None => {
+                        spawned = self.factory.spawn()?;
+                        &*spawned
+                    }
+                };
+                // a retried point hands back a fresh engine; later
+                // points keep using it (the old one may be poisoned)
+                let mut owned: Option<Box<dyn Executor>> = None;
+                for (i, p) in &pending {
+                    let engine: &dyn Executor = match &owned {
+                        Some(b) => &**b,
+                        None => base,
+                    };
+                    let (r, fresh) = run_point_guarded(
+                        self.factory,
+                        self.journal.as_ref(),
+                        self.retries,
+                        engine,
+                        *i,
+                        p,
+                        score_format,
+                        score_rounding,
+                        inputs,
+                    )?;
+                    if let Some(f) = fresh {
+                        owned = Some(f);
+                    }
+                    slots[*i] = Some(r);
                 }
-                let engine = &slot.as_ref().expect("engine just installed").1;
-                Ok(run_point(&**engine, &p, score_format, score_rounding, inputs))
-            })
-        });
-        // task order == grid order; a spawn failure fails the sweep
-        results.into_iter().collect()
+            }
+        } else {
+            let epoch = SWEEP_EPOCH.fetch_add(1, Ordering::Relaxed);
+            let pool = Pool::new(self.workers.min(pending.len()));
+            let factory = self.factory;
+            let journal = self.journal.as_ref();
+            let retries = self.retries;
+            // the calling thread participates in the job; make sure its
+            // cached engine is released even if a grid point panics (pool
+            // workers drop theirs with the pool)
+            let _release = ReleaseCallerEngine;
+            let results: Vec<Result<(usize, SweepResult)>> = pool.run(pending, |_, (i, p)| {
+                WORKER_ENGINE.with(|slot| {
+                    let mut slot = slot.borrow_mut();
+                    let stale = !matches!(&*slot, Some((e, _)) if *e == epoch);
+                    if stale {
+                        *slot = Some((epoch, factory.spawn()?));
+                    }
+                    let engine = &slot.as_ref().expect("engine just installed").1;
+                    let (r, fresh) = run_point_guarded(
+                        factory,
+                        journal,
+                        retries,
+                        &**engine,
+                        i,
+                        &p,
+                        score_format,
+                        score_rounding,
+                        inputs,
+                    )?;
+                    if let Some(f) = fresh {
+                        // adopt the retry's fresh engine for the rest of
+                        // this worker's points
+                        *slot = Some((epoch, f));
+                    }
+                    Ok((i, r))
+                })
+            });
+            // task order == grid order; a spawn failure fails the sweep
+            for r in results {
+                let (i, res) = r?;
+                slots[i] = Some(res);
+            }
+        }
+        Ok(slots.into_iter().map(|s| s.expect("every grid slot filled")).collect())
+    }
+}
+
+/// Execute one grid point with the crash boundary around it: the
+/// `point` fault site fires first, then [`run_point`] runs under
+/// `catch_unwind`. A panic (injected or real) is caught, warned, and
+/// retried up to `retries` times on a freshly spawned engine — the
+/// panicking engine's scratch may be poisoned mid-kernel. Exhausted
+/// retries fold as a `failed` +inf result instead of killing the
+/// sweep. Returns the result plus the fresh engine (if one was
+/// spawned) so the caller adopts it for subsequent points.
+///
+/// A free function, not a method: the sharded path calls it from the
+/// pool closure, which must not capture `&SweepRunner` (the serial
+/// engine borrow is not `Sync`).
+#[allow(clippy::too_many_arguments)]
+fn run_point_guarded(
+    factory: &dyn ExecutorFactory,
+    journal: Option<&SweepJournal>,
+    retries: usize,
+    engine: &dyn Executor,
+    index: usize,
+    p: &SweepPoint,
+    score_format: &str,
+    score_rounding: &str,
+    inputs: &SweepInputs,
+) -> Result<(SweepResult, Option<Box<dyn Executor>>)> {
+    let mut fresh: Option<Box<dyn Executor>> = None;
+    let mut last_panic: Option<String> = None;
+    for attempt in 1..=retries + 1 {
+        let eng: &dyn Executor = match &fresh {
+            Some(b) => &**b,
+            None => engine,
+        };
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            if let Err(e) = faults::poke("point", index as u64) {
+                panic!("{e}");
+            }
+            run_point(eng, p, score_format, score_rounding, inputs)
+        }));
+        match caught {
+            Ok(r) => {
+                if let Some(j) = journal {
+                    j.record(&p.cfg.digest(), attempt, &r);
+                }
+                return Ok((r, fresh));
+            }
+            Err(payload) => {
+                let msg = panic_message(payload.as_ref());
+                crate::warn_!("sweep {}: attempt {attempt} panicked: {msg}", p.label);
+                last_panic = Some(msg);
+                if attempt <= retries {
+                    fresh = Some(factory.spawn()?);
+                }
+            }
+        }
+    }
+    if let Some(j) = journal {
+        j.record_failed(p, retries + 1, last_panic.as_deref());
+    }
+    let r = SweepResult {
+        label: p.label.clone(),
+        lr: p.cfg.lr,
+        metrics: MetricsLogger::in_memory(),
+        score: f64::INFINITY,
+        diverged: true,
+    };
+    Ok((r, fresh))
+}
+
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else {
+        "non-string panic payload".to_string()
     }
 }
 
@@ -244,8 +595,20 @@ pub fn lr_sweep(
     score_rounding: &str,
     inputs: &SweepInputs,
 ) -> Result<Vec<SweepResult>> {
-    let points = lrs
-        .iter()
+    SweepRunner::new(factory, workers).run(
+        lr_points(base, lrs),
+        score_format,
+        score_rounding,
+        inputs,
+    )
+}
+
+/// The LR-grid points [`lr_sweep`] runs — exposed so callers that need
+/// a configured [`SweepRunner`] (journaling, retries, resume) build
+/// the identical grid: same labels, same counter-derived seeds, so a
+/// resumed sweep's journal keys line up with the original's.
+pub fn lr_points(base: &RunConfig, lrs: &[f64]) -> Vec<SweepPoint> {
+    lrs.iter()
         .enumerate()
         .map(|(i, &lr)| {
             let mut cfg = base.clone();
@@ -254,8 +617,7 @@ pub fn lr_sweep(
             cfg.seed = Rng::stream_seed(base.seed, &[i as u64]);
             SweepPoint::new(cfg.name.clone(), cfg)
         })
-        .collect();
-    SweepRunner::new(factory, workers).run(points, score_format, score_rounding, inputs)
+        .collect()
 }
 
 /// Index of the best (lowest-score) run. Total order: NaN sorts as
@@ -304,6 +666,59 @@ mod tests {
         assert_eq!(best(&rs), Some(3));
         // all-NaN still returns *an* index rather than panicking
         assert!(best(&[mk(f64::NAN), mk(f64::NAN)]).is_some());
+    }
+
+    #[test]
+    fn journal_entry_roundtrips_bitwise() {
+        for score in [1.25, f64::INFINITY, f64::NAN, -0.0] {
+            let e = JournalEntry {
+                label: "p_lr1e-2".into(),
+                digest: "0123456789abcdef".into(),
+                lr: 0.01,
+                status: "ok".into(),
+                attempts: 2,
+                score,
+                error: Some("why \"quoted\"".into()),
+            };
+            let line = e.to_json().to_string();
+            let back = JournalEntry::from_json(&line).unwrap();
+            assert_eq!(back.label, e.label);
+            assert_eq!(back.digest, e.digest);
+            assert_eq!(back.status, e.status);
+            assert_eq!(back.attempts, 2);
+            assert_eq!(back.score.to_bits(), e.score.to_bits(), "score {score}");
+            assert_eq!(back.error, e.error);
+        }
+    }
+
+    #[test]
+    fn journal_completed_skips_torn_tail() {
+        use crate::util::tempdir::TempDir;
+        let dir = TempDir::new();
+        let path = dir.path().join("sweep.jsonl");
+        let j = SweepJournal::open(&path).unwrap();
+        let mk_entry = |label: &str| JournalEntry {
+            label: label.into(),
+            digest: "d".into(),
+            lr: 0.1,
+            status: "ok".into(),
+            attempts: 1,
+            score: 2.0,
+            error: None,
+        };
+        j.append(&mk_entry("a")).unwrap();
+        j.append(&mk_entry("b")).unwrap();
+        drop(j);
+        // simulate a crash mid-append: torn partial line at the tail
+        let mut text = std::fs::read_to_string(&path).unwrap();
+        text.push_str("{\"label\":\"c\",\"dig");
+        std::fs::write(&path, &text).unwrap();
+        let entries = SweepJournal::completed(&path).unwrap();
+        assert_eq!(entries.len(), 2);
+        assert_eq!(entries[0].label, "a");
+        assert_eq!(entries[1].label, "b");
+        // missing file = empty journal
+        assert!(SweepJournal::completed(&dir.path().join("nope.jsonl")).unwrap().is_empty());
     }
 
     #[test]

@@ -5,18 +5,39 @@
 //! in the run's [`Session`]; this loop owns what is *schedule-shaped*:
 //! per-step LRs, the data stream, the run RNG and the step counter.
 
+use crate::checkpoint::Checkpoint;
 use crate::config::RunConfig;
 use crate::data::TokenBatcher;
+use crate::formats::json::Json;
 use crate::runtime::executor::{value, Executor};
 use crate::runtime::session::{ChunkInputs, Session};
 use crate::runtime::TrainState;
 use crate::tensor::HostTensor;
-use crate::util::rng::Rng;
-use anyhow::{bail, Result};
+use crate::util::{faults, rng::Rng};
+use anyhow::{anyhow, bail, Result};
+use std::path::{Path, PathBuf};
 use std::time::Instant;
 
 use super::evaluator::Evaluator;
 use super::metrics::MetricsLogger;
+
+/// Checkpoint tensor key for the evaluator's pinned validation chunk
+/// (not a state tensor; namespaced so it can never collide with one).
+pub const VAL_TOKENS_KEY: &str = "__evaluator.val_tokens";
+
+/// Periodic-checkpoint policy for [`Trainer::run_with_checkpoints`].
+pub struct CkptPolicy {
+    pub dir: PathBuf,
+    /// snapshot cadence in optimizer steps (rounded to chunk
+    /// boundaries; 0 disables — callers pass `None` instead)
+    pub every: usize,
+}
+
+impl CkptPolicy {
+    pub fn step_path(&self, step: usize) -> PathBuf {
+        self.dir.join(format!("step{step:06}.lotn"))
+    }
+}
 
 /// Where per-step batches come from.
 pub enum DataSource {
@@ -97,6 +118,9 @@ impl<'e> Trainer<'e> {
         let base = out.bases.iter().map(|&v| v as f64).sum::<f64>() / out.bases.len() as f64;
         let total = out.totals.iter().map(|&v| v as f64).sum::<f64>() / out.totals.len() as f64;
         if !base.is_finite() {
+            // structured record first, so sweep journals and JSONL
+            // sinks capture *why* this run scored +inf
+            metrics.log_diverged(self.step, base, &self.cfg.method, self.cfg.lr_at(self.step));
             bail!(
                 "{}: loss diverged (nan/inf) at step {}",
                 self.session.train_entry().name,
@@ -109,15 +133,112 @@ impl<'e> Trainer<'e> {
 
     /// Full run: chunks until `cfg.steps`, evaluating per `eval_every`.
     pub fn run(&mut self, eval: &mut Evaluator, metrics: &mut MetricsLogger) -> Result<()> {
-        let mut next_eval = 0usize;
+        self.run_with_checkpoints(eval, metrics, None, None)
+    }
+
+    /// [`Trainer::run`] with periodic checkpoints and resume support.
+    /// `resume_next_eval` is the eval-cadence position restored by
+    /// [`Trainer::restore`] (None = fresh run, eval at step 0). The
+    /// `step` fault site fires at the top of each loop iteration —
+    /// before the iteration's eval — so a killed-at-step-N run appended
+    /// after resume reproduces the uninterrupted JSONL exactly.
+    pub fn run_with_checkpoints(
+        &mut self,
+        eval: &mut Evaluator,
+        metrics: &mut MetricsLogger,
+        ckpt: Option<&CkptPolicy>,
+        resume_next_eval: Option<usize>,
+    ) -> Result<()> {
+        let mut next_eval = resume_next_eval.unwrap_or(0);
+        // checkpoint cadence re-arms from the step actually saved, so a
+        // resumed run snapshots at the same steps the uninterrupted one
+        // would (chunks advance K steps at a time and may overshoot)
+        let mut next_ckpt = ckpt.map_or(usize::MAX, |p| self.step + p.every.max(1));
         while self.step < self.cfg.steps {
+            faults::poke("step", self.step as u64)?;
             if self.step >= next_eval {
                 eval.eval_all(self, metrics)?;
                 next_eval = self.step + self.cfg.eval_every.max(1);
             }
             self.chunk(metrics)?;
+            if self.step >= next_ckpt {
+                let p = ckpt.expect("next_ckpt is armed only with a policy");
+                // a failed periodic snapshot degrades crash-safety but
+                // must not kill the run it exists to protect
+                if let Err(e) = self.save_checkpoint(eval, next_eval, &p.step_path(self.step)) {
+                    crate::warn_!("checkpoint at step {} failed: {e}", self.step);
+                }
+                next_ckpt = self.step + p.every.max(1);
+            }
         }
         eval.eval_all(self, metrics)?;
         Ok(())
+    }
+
+    /// Snapshot everything a bit-identical resume needs: the train
+    /// state (params + optimizer moments), the step counter, both RNG
+    /// stream positions, the eval-cadence position, and the pinned
+    /// validation chunk. The config digest guards against resuming
+    /// into a different run configuration.
+    pub fn snapshot(&self, eval: &Evaluator, next_eval: usize) -> Result<Checkpoint> {
+        let meta = Json::obj(vec![
+            ("step", Json::num(self.step as f64)),
+            ("next_eval", Json::num(next_eval as f64)),
+            ("model", Json::str(&self.cfg.model)),
+            ("method", Json::str(&self.cfg.method)),
+            ("format", Json::str(&self.cfg.format)),
+            ("config_digest", Json::str(&self.cfg.digest())),
+            ("trainer_rng", Json::str(&self.rng.encode_state())),
+            ("eval_rng", Json::str(&eval.rng.encode_state())),
+        ]);
+        let mut c = Checkpoint::new(meta);
+        for name in &self.session.state.names {
+            c.push(name, self.session.state.fetch(name)?);
+        }
+        if let Some(t) = eval.val_tokens() {
+            c.push(VAL_TOKENS_KEY, t);
+        }
+        Ok(c)
+    }
+
+    /// Snapshot and atomically write a `.lotn` checkpoint.
+    pub fn save_checkpoint(&self, eval: &Evaluator, next_eval: usize, path: &Path) -> Result<()> {
+        self.snapshot(eval, next_eval)?.save(path)
+    }
+
+    /// Restore a checkpoint into this (freshly built) trainer +
+    /// evaluator. Returns the `next_eval` cadence position to pass to
+    /// [`Trainer::run_with_checkpoints`]. Fails if the checkpoint was
+    /// written under a different result-determining configuration.
+    pub fn restore(&mut self, eval: &mut Evaluator, ckpt: &Checkpoint) -> Result<usize> {
+        let meta_str = |key: &str| -> Result<&str> {
+            ckpt.meta
+                .get(key)
+                .and_then(|j| j.as_str())
+                .ok_or_else(|| anyhow!("checkpoint meta missing {key:?}"))
+        };
+        let digest = meta_str("config_digest")?;
+        if digest != self.cfg.digest() {
+            bail!(
+                "checkpoint config digest {digest} does not match this run ({}); \
+                 refusing to resume into a different configuration",
+                self.cfg.digest()
+            );
+        }
+        self.session.restore_state(&ckpt.tensors)?;
+        self.rng = Rng::decode_state(meta_str("trainer_rng")?)?;
+        eval.rng = Rng::decode_state(meta_str("eval_rng")?)?;
+        if let Some(t) = ckpt.get(VAL_TOKENS_KEY) {
+            eval.set_val_tokens(t.clone());
+        }
+        self.step = ckpt
+            .meta
+            .get("step")
+            .and_then(|j| j.as_usize())
+            .ok_or_else(|| anyhow!("checkpoint meta missing step"))?;
+        ckpt.meta
+            .get("next_eval")
+            .and_then(|j| j.as_usize())
+            .ok_or_else(|| anyhow!("checkpoint meta missing next_eval"))
     }
 }

@@ -17,11 +17,11 @@
 use anyhow::{bail, Context, Result};
 use lotion::cli::Args;
 use lotion::config::{RunConfig, TomlDoc};
-use lotion::coordinator::{DataSource, Evaluator, MetricsLogger, Trainer};
+use lotion::coordinator::{CkptPolicy, DataSource, Evaluator, MetricsLogger, SweepJournal, Trainer};
 use lotion::data::{ByteTokenizer, TokenBatcher, ZipfMarkovCorpus};
 use lotion::experiments::{common::ExpCtx, registry};
 use lotion::runtime::{Executor, ExecutorFactory, NativeEngine, NativeFactory, Role};
-use lotion::{checkpoint::Checkpoint, formats::json::Json, info};
+use lotion::{checkpoint::Checkpoint, info};
 use std::path::{Path, PathBuf};
 
 fn main() {
@@ -34,10 +34,28 @@ fn main() {
 
 const USAGE: &str = "usage: lotion-rs <train|exp|sweep|inspect|data-report> [flags]
   train       --config <toml> [--set k=v ...] [--out results/<name>]
+              [--ckpt-every N] [--ckpt-dir dir] [--resume <ckpt|dir>]
   exp         <id|all> [--results results] [--artifacts artifacts]
   sweep       --config <toml> --lrs 0.1,0.3 [--score-format int4] [--score-rounding rtn]
+              [--journal <jsonl>] [--resume-sweep] [--retries N]
   inspect     [--artifacts artifacts]           list programs + execution timings
   data-report [--bytes 1000000]                 corpus statistics
+crash safety (DESIGN.md §7):
+  --ckpt-every N     snapshot params+optimizer+RNG every N steps (also
+                     [train] checkpoint_every, or LOTION_CKPT_EVERY)
+  --ckpt-dir dir     where snapshots go (also [train] ckpt_dir, or
+                     LOTION_CKPT_DIR; default: the --out directory)
+  --resume p         restore a .lotn checkpoint (or the newest one in a
+                     directory) and continue; the finished run is
+                     bit-identical to an uninterrupted one
+  --journal p        JSONL journal of completed sweep points
+                     (default with --resume-sweep:
+                     <results>/<name>_sweep.jsonl)
+  --resume-sweep     skip journaled points, fold their scores back in
+  --retries N        re-attempts for a panicking sweep point on a fresh
+                     engine (default 1); diverged points never retry
+  LOTION_FAULTS      deterministic fault plan for crash testing, e.g.
+                     panic@point:3,io_err@ckpt_save:2,kill@step:40
 common flags:
   --backend {auto|native|pjrt}   execution backend (default: auto — pjrt
                                  if built with it and artifacts exist,
@@ -164,30 +182,48 @@ fn cmd_train(args: &Args) -> Result<()> {
     let out_dir = PathBuf::from(args.str_or("out", &format!("{}/{}", cfg.results_dir, cfg.name)));
     std::fs::create_dir_all(&out_dir)?;
     let (statics, data) = build_inputs(engine, &cfg, 7)?;
-    let mut metrics = MetricsLogger::to_file(&out_dir.join("metrics.jsonl"))?;
     let mut trainer = Trainer::new(engine, cfg.clone(), statics, data)?;
     let mut eval = Evaluator::new(cfg.seed);
 
-    if cfg.checkpoint_every > 0 {
-        // checkpointed loop
-        let mut next_ckpt = cfg.checkpoint_every;
-        let mut next_eval = 0usize;
-        while trainer.step < cfg.steps {
-            if trainer.step >= next_eval {
-                eval.eval_all(&trainer, &mut metrics)?;
-                next_eval = trainer.step + cfg.eval_every.max(1);
-            }
-            trainer.chunk(&mut metrics)?;
-            if trainer.step >= next_ckpt {
-                save_checkpoint(&trainer, &out_dir.join(format!("step{:06}.lotn", trainer.step)))?;
-                next_ckpt = trainer.step + cfg.checkpoint_every;
-            }
+    // --resume restores state/RNGs/cadence before the metrics sink
+    // opens: a resumed run *appends* so the final JSONL matches an
+    // uninterrupted run's line for line
+    let resume_next_eval = match args.flag("resume") {
+        Some(spec) => {
+            let path = resolve_resume_path(Path::new(spec))?;
+            let ckpt = Checkpoint::load(&path)?;
+            let next_eval = trainer.restore(&mut eval, &ckpt)?;
+            info!("resumed {path:?} at step {}", trainer.step);
+            Some(next_eval)
         }
-        eval.eval_all(&trainer, &mut metrics)?;
+        None => None,
+    };
+    let metrics_path = out_dir.join("metrics.jsonl");
+    let mut metrics = if resume_next_eval.is_some() {
+        MetricsLogger::append_to_file(&metrics_path)?
     } else {
-        trainer.run(&mut eval, &mut metrics)?;
-    }
-    save_checkpoint(&trainer, &out_dir.join("final.lotn"))?;
+        MetricsLogger::to_file(&metrics_path)?
+    };
+
+    // cadence: --ckpt-every > [train] checkpoint_every > LOTION_CKPT_EVERY
+    let every = match args.usize_opt("ckpt-every")? {
+        Some(n) => n,
+        None if cfg.checkpoint_every > 0 => cfg.checkpoint_every,
+        None => lotion::config::env_ckpt_every().unwrap_or(0),
+    };
+    // dir: --ckpt-dir > [train] ckpt_dir > LOTION_CKPT_DIR > --out dir
+    let ckpt_dir = args
+        .flag("ckpt-dir")
+        .map(PathBuf::from)
+        .or_else(|| cfg.ckpt_dir.clone().map(PathBuf::from))
+        .or_else(|| lotion::config::env_ckpt_dir().map(PathBuf::from))
+        .unwrap_or_else(|| out_dir.clone());
+    let policy = (every > 0).then(|| CkptPolicy { dir: ckpt_dir, every });
+
+    trainer.run_with_checkpoints(&mut eval, &mut metrics, policy.as_ref(), resume_next_eval)?;
+    let final_path = out_dir.join("final.lotn");
+    trainer.save_checkpoint(&eval, trainer.step + cfg.eval_every.max(1), &final_path)?;
+    info!("checkpoint -> {final_path:?}");
     let fp32 = metrics.final_eval("fp32", "none").unwrap_or(f64::NAN);
     info!("run {} done: {} steps, final fp32 val loss {:.4}", cfg.name, trainer.step, fp32);
     for p in metrics.eval_points.iter().rev().take(8) {
@@ -196,19 +232,35 @@ fn cmd_train(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn save_checkpoint(trainer: &Trainer, path: &Path) -> Result<()> {
-    let mut ckpt = Checkpoint::new(Json::obj(vec![
-        ("step", Json::num(trainer.step as f64)),
-        ("model", Json::str(trainer.cfg.model.clone())),
-        ("method", Json::str(trainer.cfg.method.clone())),
-        ("format", Json::str(trainer.cfg.format.clone())),
-    ]));
-    for name in trainer.state().names.clone() {
-        ckpt.push(&name, trainer.state().fetch(&name)?);
+/// `--resume` accepts a checkpoint file, or a directory holding
+/// `stepNNNNNN.lotn` snapshots (the newest wins, falling back to
+/// `final.lotn`).
+fn resolve_resume_path(spec: &Path) -> Result<PathBuf> {
+    if spec.is_file() {
+        return Ok(spec.to_path_buf());
     }
-    ckpt.save(path)?;
-    info!("checkpoint -> {path:?}");
-    Ok(())
+    if spec.is_dir() {
+        let mut steps: Vec<PathBuf> = std::fs::read_dir(spec)?
+            .filter_map(|e| e.ok())
+            .map(|e| e.path())
+            .filter(|p| {
+                p.file_name()
+                    .and_then(|n| n.to_str())
+                    .is_some_and(|n| n.starts_with("step") && n.ends_with(".lotn"))
+            })
+            .collect();
+        // zero-padded names sort by step
+        steps.sort();
+        if let Some(latest) = steps.pop() {
+            return Ok(latest);
+        }
+        let fin = spec.join("final.lotn");
+        if fin.is_file() {
+            return Ok(fin);
+        }
+        bail!("--resume {spec:?}: no step*.lotn or final.lotn in directory");
+    }
+    bail!("--resume {spec:?}: no such file or directory")
 }
 
 fn cmd_exp(args: &Args) -> Result<()> {
@@ -248,11 +300,28 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     let score_rounding = args.str_or("score-rounding", "rtn");
     let workers = args.sweep_workers(cfg.sweep_workers)?;
     let factory = make_factory(args, &cfg.artifacts_dir, cfg.threads)?;
-    let results = lotion::coordinator::sweep::lr_sweep(
-        &*factory,
-        workers,
-        &cfg,
-        &lrs,
+    let retries = args.usize_or("retries", 1)?;
+    let resume = args.switch("resume-sweep");
+    // journal path: --journal, else the run's canonical journal when
+    // resuming (plain sweeps stay journal-free unless asked)
+    let journal_path = match args.flag("journal") {
+        Some(p) => Some(PathBuf::from(p)),
+        None if resume => {
+            Some(PathBuf::from(format!("{}/{}_sweep.jsonl", cfg.results_dir, cfg.name)))
+        }
+        None => None,
+    };
+    let mut runner =
+        lotion::coordinator::SweepRunner::new(&*factory, workers).with_retries(retries);
+    if let Some(jp) = &journal_path {
+        let done = if resume { SweepJournal::completed(jp)? } else { Vec::new() };
+        if !done.is_empty() {
+            info!("resuming sweep: {} journaled point(s) in {jp:?}", done.len());
+        }
+        runner = runner.with_journal(jp, done)?;
+    }
+    let results = runner.run(
+        lotion::coordinator::sweep::lr_points(&cfg, &lrs),
         &score_fmt,
         &score_rounding,
         &|engine: &dyn Executor, cfg: &RunConfig| build_inputs(engine, cfg, 7),

@@ -88,6 +88,23 @@ impl<'e> Session<'e> {
         self.engine
     }
 
+    /// Restore the full train state from checkpointed tensors. Every
+    /// live state tensor must be present (by name) in the checkpoint;
+    /// extra checkpoint entries (e.g. evaluator-owned tensors) are
+    /// ignored. Dtype/shape mismatches fail loudly via
+    /// [`TrainState::restore`].
+    pub fn restore_state(&mut self, tensors: &[(String, HostTensor)]) -> Result<()> {
+        for name in self.state.names.clone() {
+            let t = tensors
+                .iter()
+                .find(|(n, _)| n == &name)
+                .map(|(_, t)| t)
+                .ok_or_else(|| anyhow!("checkpoint is missing state tensor {name:?}"))?;
+            self.state.restore(&name, t)?;
+        }
+        Ok(())
+    }
+
     pub fn train_entry(&self) -> &ArtifactEntry {
         &self.train
     }

@@ -64,6 +64,25 @@ impl TrainState {
         Ok(())
     }
 
+    /// Restore a named tensor from a checkpoint, validating that its
+    /// dtype and shape match the live state (a checkpoint from a
+    /// different model/config must fail loudly, not corrupt training).
+    pub fn restore(&mut self, name: &str, t: &HostTensor) -> Result<()> {
+        let idx = self.index(name).ok_or_else(|| anyhow!("no tensor {name:?}"))?;
+        let cur = self.values[idx].as_ref();
+        if cur.dtype != t.dtype || cur.shape != t.shape {
+            bail!(
+                "checkpoint tensor {name:?} is {:?}{:?}, state expects {:?}{:?}",
+                t.dtype,
+                t.shape,
+                cur.dtype,
+                cur.shape
+            );
+        }
+        self.values[idx] = value(t.clone());
+        Ok(())
+    }
+
     /// Adopt the leading `names.len()` outputs of a train call as the
     /// new state (the manifest guarantees outputs echo params+opt first,
     /// in input order).
@@ -140,5 +159,25 @@ mod tests {
         st.adopt(&mut outs).unwrap();
         assert_eq!(outs.len(), 1);
         assert_eq!(st.fetch("t").unwrap().scalar_to_f32(), 9.0);
+    }
+
+    #[test]
+    fn restore_validates_dtype_and_shape() {
+        let specs = [TensorSpec {
+            name: "w".into(),
+            shape: vec![3],
+            dtype: DType::F32,
+            role: Role::Param,
+        }];
+        let refs: Vec<&TensorSpec> = specs.iter().collect();
+        let mut st = TrainState::zeros(&refs);
+        st.restore("w", &HostTensor::from_f32(&[3], vec![1.0, 2.0, 3.0])).unwrap();
+        assert_eq!(st.fetch("w").unwrap().as_f32(), vec![1.0, 2.0, 3.0]);
+        // wrong shape
+        assert!(st.restore("w", &HostTensor::from_f32(&[2], vec![1.0, 2.0])).is_err());
+        // wrong dtype
+        assert!(st.restore("w", &HostTensor::from_i32(&[3], vec![1, 2, 3])).is_err());
+        // unknown name
+        assert!(st.restore("zz", &HostTensor::scalar_f32(0.0)).is_err());
     }
 }

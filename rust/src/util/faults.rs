@@ -1,0 +1,300 @@
+//! Deterministic fault injection for crash-safety tests.
+//!
+//! A *fault plan* is a comma-separated list of entries
+//! `kind@site:ordinal[xN]`, e.g.
+//! `LOTION_FAULTS=panic@point:3,io_err@ckpt_save:2,kill@step:40`.
+//! Instrumented code consults [`poke(site, ordinal)`](poke) at
+//! well-defined check-points; when an armed entry matches, the fault
+//! fires: `panic` unwinds, `io_err` returns `std::io::Error`, `kill`
+//! exits the process with [`KILL_EXIT`].
+//!
+//! Determinism: the *caller* supplies the ordinal — a stable logical
+//! position (the trainer step number, the sweep grid index, the
+//! process-wide checkpoint save sequence) rather than a racy hit
+//! count — so the same plan fires at the same logical point at any
+//! `--threads`/`--sweep-workers` width. Each entry fires `N` times
+//! (default 1) and then disarms, so a retried sweep point succeeds on
+//! its second attempt instead of panicking forever.
+//!
+//! Tests install *thread-local* plans via [`ScopedPlan`]; a local plan
+//! takes full precedence over the process-wide `LOTION_FAULTS` plan
+//! (no fallthrough), so parallel unit tests can't poison each other
+//! and CI env plans can't leak into scoped tests. When neither is set,
+//! `poke` is a single relaxed atomic load — zero cost in production.
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, Once};
+
+use anyhow::{bail, Result};
+
+/// Exit code used by `kill` faults, distinguishable from panics (101)
+/// and clean exits so tests can assert the injected kill happened.
+pub const KILL_EXIT: i32 = 86;
+
+/// Sites instrumented in the codebase (callers pass these as `site`):
+/// `step` (trainer loop, ordinal = step), `ckpt_save` (checkpoint
+/// writer, ordinal = process-wide save sequence, consulted after the
+/// temp-file fsync and *before* the rename so a kill there proves
+/// rename atomicity), `point` (sweep point boundary, ordinal = grid
+/// index), `pool_job` (worker-pool task dispatch, ordinal = task
+/// index).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    Panic,
+    IoErr,
+    Kill,
+}
+
+impl FaultKind {
+    fn parse(s: &str) -> Result<FaultKind> {
+        match s {
+            "panic" => Ok(FaultKind::Panic),
+            "io_err" => Ok(FaultKind::IoErr),
+            "kill" => Ok(FaultKind::Kill),
+            _ => bail!("unknown fault kind {s:?} (expected panic|io_err|kill)"),
+        }
+    }
+}
+
+struct FaultEntry {
+    kind: FaultKind,
+    site: String,
+    at: u64,
+    /// shots left; entries disarm at 0 so retries make progress
+    remaining: AtomicU64,
+}
+
+/// A parsed fault plan: a fixed set of armed entries.
+pub struct FaultPlan {
+    entries: Vec<FaultEntry>,
+}
+
+impl FaultPlan {
+    /// Parse `kind@site:ordinal[xN]` entries, comma-separated. Empty
+    /// tokens are skipped so trailing commas are harmless.
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut entries = Vec::new();
+        for tok in spec.split(',') {
+            let tok = tok.trim();
+            if tok.is_empty() {
+                continue;
+            }
+            let (kind_s, rest) = tok
+                .split_once('@')
+                .ok_or_else(|| anyhow::anyhow!("fault entry {tok:?} missing '@'"))?;
+            let (site, at_s) = rest
+                .split_once(':')
+                .ok_or_else(|| anyhow::anyhow!("fault entry {tok:?} missing ':'"))?;
+            let (at_s, times) = match at_s.split_once('x') {
+                Some((a, n)) => {
+                    let n: u64 = n
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("bad repeat count in {tok:?}"))?;
+                    (a, n)
+                }
+                None => (at_s, 1),
+            };
+            let at: u64 = at_s
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad ordinal in fault entry {tok:?}"))?;
+            if site.is_empty() {
+                bail!("fault entry {tok:?} has empty site");
+            }
+            entries.push(FaultEntry {
+                kind: FaultKind::parse(kind_s)?,
+                site: site.to_string(),
+                at,
+                remaining: AtomicU64::new(times),
+            });
+        }
+        Ok(FaultPlan { entries })
+    }
+
+    /// Consume one shot of a matching armed entry, if any. Atomic: a
+    /// single-shot entry observed by two racing threads fires exactly
+    /// once.
+    fn fire(&self, site: &str, ordinal: u64) -> Option<FaultKind> {
+        for e in &self.entries {
+            if e.at == ordinal && e.site == site {
+                let claimed = e
+                    .remaining
+                    .fetch_update(Ordering::AcqRel, Ordering::Acquire, |n| n.checked_sub(1))
+                    .is_ok();
+                if claimed {
+                    return Some(e.kind);
+                }
+            }
+        }
+        None
+    }
+}
+
+static ENV_INIT: Once = Once::new();
+static ENV_ARMED: AtomicBool = AtomicBool::new(false);
+static ENV_PLAN: Mutex<Option<Arc<FaultPlan>>> = Mutex::new(None);
+
+thread_local! {
+    static LOCAL_PLAN: RefCell<Vec<Arc<FaultPlan>>> = RefCell::new(Vec::new());
+    static LOCAL_ARMED: std::cell::Cell<bool> = std::cell::Cell::new(false);
+}
+
+fn env_plan() -> Option<Arc<FaultPlan>> {
+    ENV_INIT.call_once(|| {
+        if let Ok(spec) = std::env::var("LOTION_FAULTS") {
+            if spec.trim().is_empty() {
+                return;
+            }
+            match FaultPlan::parse(&spec) {
+                Ok(plan) => {
+                    *ENV_PLAN.lock().unwrap() = Some(Arc::new(plan));
+                    ENV_ARMED.store(true, Ordering::Release);
+                }
+                Err(e) => {
+                    eprintln!("WARN: ignoring malformed LOTION_FAULTS: {e}");
+                }
+            }
+        }
+    });
+    if !ENV_ARMED.load(Ordering::Acquire) {
+        return None;
+    }
+    ENV_PLAN.lock().unwrap().clone()
+}
+
+fn trip(kind: FaultKind, site: &str, ordinal: u64) -> std::io::Result<()> {
+    match kind {
+        FaultKind::Panic => panic!("fault injection: panic@{site}:{ordinal}"),
+        FaultKind::IoErr => Err(std::io::Error::other(format!(
+            "fault injection: io_err@{site}:{ordinal}"
+        ))),
+        FaultKind::Kill => {
+            eprintln!("fault injection: kill@{site}:{ordinal}");
+            std::process::exit(KILL_EXIT);
+        }
+    }
+}
+
+/// Consult the fault plan at a check-point. The innermost
+/// thread-local [`ScopedPlan`] takes full precedence (no fallthrough
+/// to the env plan while one is installed); otherwise the
+/// `LOTION_FAULTS` plan applies. Zero cost when neither is armed.
+pub fn poke(site: &str, ordinal: u64) -> std::io::Result<()> {
+    if LOCAL_ARMED.with(|a| a.get()) {
+        let fired = LOCAL_PLAN.with(|p| {
+            p.borrow()
+                .last()
+                .and_then(|plan| plan.fire(site, ordinal))
+        });
+        return match fired {
+            Some(kind) => trip(kind, site, ordinal),
+            None => Ok(()),
+        };
+    }
+    if let Some(plan) = env_plan() {
+        if let Some(kind) = plan.fire(site, ordinal) {
+            return trip(kind, site, ordinal);
+        }
+    }
+    Ok(())
+}
+
+/// RAII guard installing a thread-local fault plan for tests. While
+/// installed, this thread's `poke` calls consult only this plan (the
+/// process-wide env plan is shadowed entirely). `!Send` so the Drop
+/// pops on the installing thread.
+pub struct ScopedPlan {
+    _not_send: std::marker::PhantomData<*const ()>,
+}
+
+impl ScopedPlan {
+    pub fn install(spec: &str) -> Result<ScopedPlan> {
+        let plan = Arc::new(FaultPlan::parse(spec)?);
+        LOCAL_PLAN.with(|p| p.borrow_mut().push(plan));
+        LOCAL_ARMED.with(|a| a.set(true));
+        Ok(ScopedPlan { _not_send: std::marker::PhantomData })
+    }
+}
+
+impl Drop for ScopedPlan {
+    fn drop(&mut self) {
+        LOCAL_PLAN.with(|p| {
+            let mut v = p.borrow_mut();
+            v.pop();
+            if v.is_empty() {
+                LOCAL_ARMED.with(|a| a.set(false));
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(FaultPlan::parse("boom@step:3").is_err());
+        assert!(FaultPlan::parse("panic@step").is_err());
+        assert!(FaultPlan::parse("panic:3").is_err());
+        assert!(FaultPlan::parse("panic@:3").is_err());
+        assert!(FaultPlan::parse("panic@step:abc").is_err());
+        assert!(FaultPlan::parse("panic@step:3xzz").is_err());
+    }
+
+    #[test]
+    fn parse_accepts_empty_and_trailing_commas() {
+        assert!(FaultPlan::parse("").unwrap().entries.is_empty());
+        let p = FaultPlan::parse("panic@a:1,,io_err@b:2,").unwrap();
+        assert_eq!(p.entries.len(), 2);
+    }
+
+    #[test]
+    fn scoped_plan_fires_once_then_disarms() {
+        let _g = ScopedPlan::install("io_err@site:7").unwrap();
+        assert!(poke("site", 6).is_ok());
+        assert!(poke("other", 7).is_ok());
+        assert!(poke("site", 7).is_err());
+        // single-shot: disarmed after firing
+        assert!(poke("site", 7).is_ok());
+    }
+
+    #[test]
+    fn repeat_count_fires_n_times() {
+        let _g = ScopedPlan::install("io_err@s:1x3").unwrap();
+        for _ in 0..3 {
+            assert!(poke("s", 1).is_err());
+        }
+        assert!(poke("s", 1).is_ok());
+        // x0 means never
+        let _g2 = ScopedPlan::install("io_err@s:1x0").unwrap();
+        assert!(poke("s", 1).is_ok());
+    }
+
+    #[test]
+    fn scoped_plans_nest_innermost_wins() {
+        let _outer = ScopedPlan::install("io_err@a:1").unwrap();
+        {
+            let _inner = ScopedPlan::install("io_err@b:2").unwrap();
+            // inner shadows outer entirely: a:1 does not fire
+            assert!(poke("a", 1).is_ok());
+            assert!(poke("b", 2).is_err());
+        }
+        assert!(poke("a", 1).is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "fault injection: panic@p:3")]
+    fn panic_kind_panics() {
+        let _g = ScopedPlan::install("panic@p:3").unwrap();
+        let _ = poke("p", 3);
+    }
+
+    #[test]
+    fn unarmed_poke_is_ok() {
+        // no scoped plan on this thread; even if the process has a
+        // LOTION_FAULTS env plan, this site/ordinal is not in CI plans
+        let _g = ScopedPlan::install("").unwrap();
+        assert!(poke("nowhere", 123456).is_ok());
+    }
+}

@@ -1,6 +1,7 @@
 //! Small substrates: deterministic PRNG, summary statistics, logging,
 //! and a mini property-testing harness (proptest is unavailable offline).
 
+pub mod faults;
 pub mod logging;
 pub mod pool;
 pub mod prop;

@@ -97,7 +97,15 @@ impl<'a> JobState<'a> {
             if i >= self.n {
                 break;
             }
-            if let Err(payload) = catch_unwind(AssertUnwindSafe(|| f(i))) {
+            if let Err(payload) = catch_unwind(AssertUnwindSafe(|| {
+                // `pool_job` fault site (ordinal = task index): an
+                // injected panic exercises the pool's panic-payload
+                // plumbing exactly like a real task panic
+                if let Err(e) = crate::util::faults::poke("pool_job", i as u64) {
+                    panic!("{e}");
+                }
+                f(i)
+            })) {
                 self.stop.store(true, Ordering::Relaxed);
                 let mut slot = self.panic.lock().unwrap();
                 if slot.is_none() {

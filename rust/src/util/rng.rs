@@ -145,6 +145,37 @@ impl Rng {
     pub fn jax_key(&mut self) -> [u32; 2] {
         [self.next_u32(), self.next_u32()]
     }
+
+    /// Serialize the full generator state (xoshiro words + the cached
+    /// Box–Muller spare) as hex words. Hex, not JSON numbers: u64
+    /// state words don't survive a round-trip through f64 above 2^53.
+    pub fn encode_state(&self) -> String {
+        let mut s = format!(
+            "{:016x},{:016x},{:016x},{:016x}",
+            self.s[0], self.s[1], self.s[2], self.s[3]
+        );
+        if let Some(z) = self.spare_normal {
+            s.push_str(&format!(",{:016x}", z.to_bits()));
+        }
+        s
+    }
+
+    /// Restore a generator from [`Rng::encode_state`] output. The
+    /// optional fifth word is the cached normal's bit pattern.
+    pub fn decode_state(text: &str) -> anyhow::Result<Rng> {
+        let words: Vec<u64> = text
+            .split(',')
+            .map(|w| u64::from_str_radix(w.trim(), 16))
+            .collect::<Result<_, _>>()
+            .map_err(|e| anyhow::anyhow!("bad rng state {text:?}: {e}"))?;
+        if words.len() != 4 && words.len() != 5 {
+            anyhow::bail!("rng state has {} words, expected 4 or 5", words.len());
+        }
+        Ok(Rng {
+            s: [words[0], words[1], words[2], words[3]],
+            spare_normal: words.get(4).map(|&b| f64::from_bits(b)),
+        })
+    }
 }
 
 #[cfg(test)]
@@ -222,6 +253,34 @@ mod tests {
         // nesting is consistent with one-shot paths
         let nested = Rng::stream(Rng::stream_seed(1, &[2]), &[3]).next_u64();
         assert_eq!(nested, Rng::stream(Rng::stream_seed(1, &[2]), &[3]).next_u64());
+    }
+
+    #[test]
+    fn state_roundtrip_mid_stream() {
+        let mut r = Rng::new(1234);
+        for _ in 0..17 {
+            r.next_u64();
+        }
+        // odd number of normals leaves spare_normal populated
+        let _ = r.normal();
+        let mut restored = Rng::decode_state(&r.encode_state()).unwrap();
+        for _ in 0..8 {
+            assert_eq!(r.next_u64(), restored.next_u64());
+        }
+        // the cached spare must survive: next normal() equal on both
+        let mut r2 = Rng::new(99);
+        let _ = r2.normal();
+        let mut restored2 = Rng::decode_state(&r2.encode_state()).unwrap();
+        assert_eq!(r2.normal().to_bits(), restored2.normal().to_bits());
+        assert_eq!(r2.normal().to_bits(), restored2.normal().to_bits());
+    }
+
+    #[test]
+    fn decode_state_rejects_garbage() {
+        assert!(Rng::decode_state("").is_err());
+        assert!(Rng::decode_state("1,2,3").is_err());
+        assert!(Rng::decode_state("1,2,3,zz").is_err());
+        assert!(Rng::decode_state("1,2,3,4,5,6").is_err());
     }
 
     /// Counter-adjacent streams must look independent: the property

@@ -1,0 +1,708 @@
+//! ISSUE 7 acceptance: crash safety rides on the determinism contract.
+//! A run killed at step N and resumed from its last checkpoint must be
+//! **bit-identical** to the uninterrupted run — final params, train
+//! losses, eval curves, even the JSONL metrics file — at any
+//! `--threads` width. Likewise an interrupted sweep resumed from its
+//! journal folds bitwise-equal results, and a panicking grid point
+//! retried on a fresh engine is transparent to the sweep's output.
+//!
+//! Faults are injected deterministically via `util::faults`: in-process
+//! tests install thread-local `ScopedPlan`s; the subprocess tests drive
+//! the real CLI with `LOTION_FAULTS=kill@...` and assert on exit code
+//! [`KILL_EXIT`] plus the bytes left on disk.
+
+use anyhow::Result;
+use lotion::checkpoint::Checkpoint;
+use lotion::config::{RunConfig, Schedule};
+use lotion::coordinator::sweep::lr_points;
+use lotion::coordinator::{
+    CkptPolicy, DataSource, Evaluator, JournalEntry, MetricsLogger, SweepJournal, SweepResult,
+    SweepRunner, Trainer,
+};
+use lotion::data::{ByteTokenizer, TokenBatcher, ZipfMarkovCorpus};
+use lotion::experiments::common::synth_statics;
+use lotion::runtime::native::{
+    LmConfig, LmProgram, ModelSpec, NativeEngine, NativeFactory, NativeModel, OptKind,
+};
+use lotion::runtime::Executor;
+use lotion::tensor::HostTensor;
+use lotion::util::faults::{ScopedPlan, KILL_EXIT};
+use lotion::util::tempdir::TempDir;
+use std::collections::{BTreeMap, HashSet};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::{Path, PathBuf};
+use std::process::Command;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+
+fn bits(t: &HostTensor) -> Vec<u32> {
+    t.as_f32().iter().map(|v| v.to_bits()).collect()
+}
+
+/// Bit-exact train-loss trace of a run (or run fragment).
+fn trains(m: &MetricsLogger) -> Vec<String> {
+    m.train_losses.iter().map(|(s, l)| format!("t{s}:{:016x}", l.to_bits())).collect()
+}
+
+/// Bit-exact eval curve of a run (or run fragment).
+fn evals(m: &MetricsLogger) -> Vec<String> {
+    m.eval_points
+        .iter()
+        .map(|p| format!("e{}:{}:{}:{:016x}", p.step, p.format, p.rounding, p.val_loss.to_bits()))
+        .collect()
+}
+
+fn concat(a: Vec<String>, b: Vec<String>) -> Vec<String> {
+    let mut v = a;
+    v.extend(b);
+    v
+}
+
+// ---------------------------------------------------------------------------
+// linreg: kill at a step boundary, resume, compare everything bitwise
+// ---------------------------------------------------------------------------
+
+fn linreg_engine(threads: usize) -> NativeEngine {
+    NativeEngine::with_models(&[NativeModel::from_spec(
+        ModelSpec::LinReg { d: 256, batch: 64 },
+        OptKind::Sgd,
+        8,
+    )])
+    .with_threads(threads)
+}
+
+fn linreg_cfg() -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.name = "crash_linreg".into();
+    cfg.method = "lotion".into();
+    cfg.format = "int4".into();
+    cfg.eval_formats = vec!["int4".into()];
+    cfg.steps = 24;
+    cfg.lr = 0.05;
+    cfg.lambda = 1.0;
+    cfg.eval_every = 8;
+    cfg.schedule = Schedule::Constant;
+    cfg.seed = 5;
+    cfg
+}
+
+fn linreg_inputs(
+    _: &dyn Executor,
+    _: &RunConfig,
+) -> Result<(Vec<(String, HostTensor)>, DataSource)> {
+    let (statics, _, _) = synth_statics(256, 3);
+    Ok((statics, DataSource::InGraph))
+}
+
+/// One uninterrupted run with periodic checkpoints into `dir`.
+fn linreg_uninterrupted(threads: usize, dir: &Path) -> (Vec<u32>, MetricsLogger) {
+    let engine = linreg_engine(threads);
+    let (statics, _, _) = synth_statics(256, 3);
+    let mut trainer = Trainer::new(&engine, linreg_cfg(), statics, DataSource::InGraph).unwrap();
+    let mut eval = Evaluator::new(5);
+    let mut metrics = MetricsLogger::in_memory();
+    let policy = CkptPolicy { dir: dir.to_path_buf(), every: 8 };
+    trainer.run_with_checkpoints(&mut eval, &mut metrics, Some(&policy), None).unwrap();
+    (bits(&trainer.state().fetch("w").unwrap()), metrics)
+}
+
+/// The same run interrupted by `panic@step:16`, then resumed on a
+/// *fresh* engine + trainer from the snapshot the interrupted run left.
+fn linreg_interrupted_resumed(
+    threads: usize,
+    dir: &Path,
+) -> (Vec<u32>, MetricsLogger, MetricsLogger) {
+    let policy = CkptPolicy { dir: dir.to_path_buf(), every: 8 };
+    let mut metrics_b = MetricsLogger::in_memory();
+    {
+        let engine = linreg_engine(threads);
+        let (statics, _, _) = synth_statics(256, 3);
+        let mut trainer =
+            Trainer::new(&engine, linreg_cfg(), statics, DataSource::InGraph).unwrap();
+        let mut eval = Evaluator::new(5);
+        let _g = ScopedPlan::install("panic@step:16").unwrap();
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            trainer.run_with_checkpoints(&mut eval, &mut metrics_b, Some(&policy), None)
+        }));
+        assert!(r.is_err(), "injected panic@step:16 did not fire");
+    }
+    let engine = linreg_engine(threads);
+    let (statics, _, _) = synth_statics(256, 3);
+    let mut trainer = Trainer::new(&engine, linreg_cfg(), statics, DataSource::InGraph).unwrap();
+    let mut eval = Evaluator::new(5);
+    let ckpt = Checkpoint::load(&dir.join("step000016.lotn")).unwrap();
+    let next_eval = trainer.restore(&mut eval, &ckpt).unwrap();
+    assert_eq!(trainer.step, 16, "restore must reposition the step counter");
+    assert_eq!(next_eval, 16, "eval cadence must resume where it left off");
+    let mut metrics_c = MetricsLogger::in_memory();
+    trainer
+        .run_with_checkpoints(&mut eval, &mut metrics_c, Some(&policy), Some(next_eval))
+        .unwrap();
+    (bits(&trainer.state().fetch("w").unwrap()), metrics_b, metrics_c)
+}
+
+/// ISSUE 7 acceptance criterion (linreg): interrupted + resumed ==
+/// uninterrupted, bit for bit, at `--threads 1` and auto. The
+/// periodic snapshots the two runs write are themselves byte-identical
+/// files — including the one the interrupted run wrote on its way down.
+#[test]
+fn linreg_kill_resume_is_bit_identical() {
+    for threads in [1usize, 0] {
+        let da = TempDir::new();
+        let db = TempDir::new();
+        let (wa, ma) = linreg_uninterrupted(threads, da.path());
+        let (wb, mb, mc) = linreg_interrupted_resumed(threads, db.path());
+        assert_eq!(wa, wb, "threads={threads}: final params differ after resume");
+        assert_eq!(
+            trains(&ma),
+            concat(trains(&mb), trains(&mc)),
+            "threads={threads}: train-loss trace differs"
+        );
+        assert_eq!(
+            evals(&ma),
+            concat(evals(&mb), evals(&mc)),
+            "threads={threads}: eval curve differs"
+        );
+        for name in ["step000008.lotn", "step000016.lotn", "step000024.lotn"] {
+            let a = std::fs::read(da.path().join(name)).unwrap();
+            let b = std::fs::read(db.path().join(name)).unwrap();
+            assert_eq!(a, b, "threads={threads}: snapshot {name} differs byte-wise");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// transformer LM: resume restores both RNG streams, the token pipeline
+// position and the pinned validation chunk
+// ---------------------------------------------------------------------------
+
+fn lm_engine(threads: usize) -> NativeEngine {
+    let program = LmProgram::new(
+        "lm-crash-test",
+        LmConfig { vocab: 256, d_model: 16, n_layers: 1, n_heads: 2, seq_len: 16 },
+        2,
+        1,
+    )
+    .unwrap();
+    NativeEngine::with_models(&[NativeModel {
+        program: Arc::new(program),
+        opt: OptKind::Adam,
+        steps_per_call: 4,
+    }])
+    .with_threads(threads)
+}
+
+fn lm_cfg() -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.name = "crash_lm".into();
+    cfg.model = "lm-crash-test".into();
+    cfg.method = "lotion".into();
+    cfg.format = "int8".into();
+    cfg.eval_formats = vec!["int8".into()];
+    cfg.steps = 12;
+    cfg.lr = 3e-3;
+    cfg.lambda = 10.0;
+    cfg.eval_every = 4;
+    cfg.schedule = Schedule::Constant;
+    cfg.seed = 23;
+    cfg
+}
+
+fn lm_batcher() -> TokenBatcher {
+    let corpus = ZipfMarkovCorpus::generate(20_000, 256, 4, 9);
+    TokenBatcher::new(ByteTokenizer::new().encode(&corpus.bytes), 2, 16, 0.1)
+}
+
+/// The LM path exercises everything the linreg one cannot: Adam
+/// moments in the snapshot, a host-side token stream driven by the
+/// trainer RNG, RR eval casts driven by the eval RNG mid-stream, and
+/// the pinned validation chunk riding in the checkpoint.
+#[test]
+fn lm_kill_resume_is_bit_identical() {
+    for threads in [1usize, 0] {
+        let da = TempDir::new();
+        let db = TempDir::new();
+        let policy_a = CkptPolicy { dir: da.path().to_path_buf(), every: 4 };
+        let policy_b = CkptPolicy { dir: db.path().to_path_buf(), every: 4 };
+
+        let engine = lm_engine(threads);
+        let mut trainer =
+            Trainer::new(&engine, lm_cfg(), vec![], DataSource::Tokens(lm_batcher())).unwrap();
+        let mut eval = Evaluator::new(23);
+        let mut ma = MetricsLogger::in_memory();
+        trainer.run_with_checkpoints(&mut eval, &mut ma, Some(&policy_a), None).unwrap();
+        let wa = bits(&trainer.state().fetch("embed").unwrap());
+        drop(trainer);
+
+        let mut mb = MetricsLogger::in_memory();
+        {
+            let engine = lm_engine(threads);
+            let mut trainer =
+                Trainer::new(&engine, lm_cfg(), vec![], DataSource::Tokens(lm_batcher())).unwrap();
+            let mut eval = Evaluator::new(23);
+            let _g = ScopedPlan::install("panic@step:8").unwrap();
+            let r = catch_unwind(AssertUnwindSafe(|| {
+                trainer.run_with_checkpoints(&mut eval, &mut mb, Some(&policy_b), None)
+            }));
+            assert!(r.is_err(), "injected panic@step:8 did not fire");
+        }
+        let engine = lm_engine(threads);
+        let mut trainer =
+            Trainer::new(&engine, lm_cfg(), vec![], DataSource::Tokens(lm_batcher())).unwrap();
+        let mut eval = Evaluator::new(23);
+        let ckpt = Checkpoint::load(&db.path().join("step000008.lotn")).unwrap();
+        assert!(
+            ckpt.get(lotion::coordinator::trainer::VAL_TOKENS_KEY).is_some(),
+            "LM snapshot must carry the pinned validation chunk"
+        );
+        let next_eval = trainer.restore(&mut eval, &ckpt).unwrap();
+        let mut mc = MetricsLogger::in_memory();
+        trainer
+            .run_with_checkpoints(&mut eval, &mut mc, Some(&policy_b), Some(next_eval))
+            .unwrap();
+        let wb = bits(&trainer.state().fetch("embed").unwrap());
+
+        assert_eq!(wa, wb, "threads={threads}: LM embed differs after resume");
+        assert_eq!(trains(&ma), concat(trains(&mb), trains(&mc)), "threads={threads}");
+        assert_eq!(evals(&ma), concat(evals(&mb), evals(&mc)), "threads={threads}");
+    }
+}
+
+/// Resuming into a *different* result-determining configuration must
+/// refuse (the digest guard), not silently continue the wrong run.
+#[test]
+fn resume_refuses_a_mismatched_config() {
+    let dir = TempDir::new();
+    let engine = linreg_engine(1);
+    let (statics, _, _) = synth_statics(256, 3);
+    let trainer = Trainer::new(&engine, linreg_cfg(), statics, DataSource::InGraph).unwrap();
+    let eval = Evaluator::new(5);
+    let path = dir.path().join("snap.lotn");
+    trainer.save_checkpoint(&eval, 0, &path).unwrap();
+
+    let mut other = linreg_cfg();
+    other.lr = 0.07; // result-determining: digest changes
+    let engine2 = linreg_engine(1);
+    let (statics, _, _) = synth_statics(256, 3);
+    let mut trainer2 = Trainer::new(&engine2, other, statics, DataSource::InGraph).unwrap();
+    let mut eval2 = Evaluator::new(5);
+    let ckpt = Checkpoint::load(&path).unwrap();
+    let err = trainer2.restore(&mut eval2, &ckpt).unwrap_err();
+    assert!(err.to_string().contains("digest"), "unexpected error: {err}");
+}
+
+// ---------------------------------------------------------------------------
+// sweep journal: interrupted grids resume bitwise, stale digests re-run
+// ---------------------------------------------------------------------------
+
+fn sweep_factory() -> NativeFactory {
+    NativeFactory::new(
+        vec![NativeModel::from_spec(ModelSpec::LinReg { d: 256, batch: 64 }, OptKind::Sgd, 8)],
+        0,
+    )
+}
+
+fn sweep_cfg() -> RunConfig {
+    let mut cfg = linreg_cfg();
+    cfg.name = "crash_sweep".into();
+    cfg.steps = 16;
+    cfg.eval_every = 16;
+    cfg
+}
+
+/// (label, score bits, diverged) per point — what resume must reproduce.
+fn fingerprint(results: &[SweepResult]) -> Vec<String> {
+    results
+        .iter()
+        .map(|r| format!("{} {:016x} {}", r.label, r.score.to_bits(), r.diverged))
+        .collect()
+}
+
+/// An 8-point grid journaled to completion, then "resumed" from a
+/// journal holding only the first 5 entries — one of them with a
+/// corrupted digest. The resumed sweep must execute exactly the 3
+/// missing points plus the stale-digest one, and fold results
+/// bitwise-equal to the full run, serial and sharded.
+#[test]
+fn interrupted_sweep_resume_is_bitwise_equal() {
+    let factory = sweep_factory();
+    let base = sweep_cfg();
+    let lrs: Vec<f64> = (1..=8).map(|i| 0.01 * i as f64).collect();
+    let dir = TempDir::new();
+
+    let r1 = SweepRunner::new(&factory, 1)
+        .with_journal(&dir.path().join("full.jsonl"), Vec::new())
+        .unwrap()
+        .run(lr_points(&base, &lrs), "int4", "rtn", &linreg_inputs)
+        .unwrap();
+    let fp1 = fingerprint(&r1);
+    assert!(r1.iter().all(|r| !r.diverged));
+    let full = SweepJournal::completed(&dir.path().join("full.jsonl")).unwrap();
+    assert_eq!(full.len(), 8);
+
+    let mut resume: Vec<JournalEntry> = full[..5].to_vec();
+    resume[4].digest = "0000000000000000".into(); // stale: must re-run
+    let labels: Vec<String> =
+        lr_points(&base, &lrs).into_iter().map(|p| p.label).collect();
+
+    let executed = Mutex::new(HashSet::new());
+    let inputs = |e: &dyn Executor, cfg: &RunConfig| {
+        executed.lock().unwrap().insert(cfg.name.clone());
+        linreg_inputs(e, cfg)
+    };
+    let r2 = SweepRunner::new(&factory, 1)
+        .with_journal(&dir.path().join("resumed.jsonl"), resume.clone())
+        .unwrap()
+        .run(lr_points(&base, &lrs), "int4", "rtn", &inputs)
+        .unwrap();
+    assert_eq!(fingerprint(&r2), fp1, "serial resume must fold bitwise-equal results");
+    {
+        let ex = executed.lock().unwrap();
+        // env fault plans may retry a point transparently, so count
+        // *distinct labels executed*, not input-builder invocations
+        assert_eq!(ex.len(), 4, "executed: {ex:?}");
+        for i in [4usize, 5, 6, 7] {
+            assert!(ex.contains(&labels[i]), "point {i} ({}) should have re-run", labels[i]);
+        }
+    }
+
+    let r3 = SweepRunner::new(&factory, 3)
+        .with_journal(&dir.path().join("resumed_sharded.jsonl"), resume)
+        .unwrap()
+        .run(lr_points(&base, &lrs), "int4", "rtn", &linreg_inputs)
+        .unwrap();
+    assert_eq!(fingerprint(&r3), fp1, "sharded resume must fold bitwise-equal results");
+
+    // the resumed journal re-journals only what it ran: 4 new lines
+    let resumed = SweepJournal::completed(&dir.path().join("resumed.jsonl")).unwrap();
+    assert_eq!(resumed.len(), 4);
+}
+
+/// A grid point whose first attempt panics is retried on a freshly
+/// spawned engine; determinism makes the retry transparent — the sweep
+/// output equals a clean run bit for bit, serial and sharded — and the
+/// journal records the extra attempt.
+#[test]
+fn panicking_point_is_retried_on_a_fresh_engine() {
+    let factory = sweep_factory();
+    let mut base = sweep_cfg();
+    base.name = "crash_retry".into();
+    let lrs = [0.01, 0.02, 0.03];
+    let clean = SweepRunner::new(&factory, 1)
+        .run(lr_points(&base, &lrs), "int4", "rtn", &linreg_inputs)
+        .unwrap();
+    let fp = fingerprint(&clean);
+    let dir = TempDir::new();
+
+    for workers in [1usize, 3] {
+        let tripped = AtomicBool::new(false);
+        let inputs = |e: &dyn Executor, cfg: &RunConfig| {
+            if cfg.lr == 0.02 && !tripped.swap(true, Ordering::SeqCst) {
+                panic!("transient input failure");
+            }
+            linreg_inputs(e, cfg)
+        };
+        let jp = dir.path().join(format!("retry_w{workers}.jsonl"));
+        let r = SweepRunner::new(&factory, workers)
+            .with_journal(&jp, Vec::new())
+            .unwrap()
+            .run(lr_points(&base, &lrs), "int4", "rtn", &inputs)
+            .unwrap();
+        assert_eq!(fingerprint(&r), fp, "workers={workers}: retry must be transparent");
+        let entries = SweepJournal::completed(&jp).unwrap();
+        let mid = entries.iter().find(|e| e.lr == 0.02).expect("journaled");
+        assert_eq!(mid.status, "ok");
+        assert_eq!(mid.attempts, 2, "workers={workers}: the retry must be recorded");
+    }
+}
+
+/// Exhausted retries fold the point as `failed` / +inf without killing
+/// the sweep or perturbing its siblings.
+#[test]
+fn exhausted_retries_fold_as_failed() {
+    let factory = sweep_factory();
+    let mut base = sweep_cfg();
+    base.name = "crash_exhaust".into();
+    let lrs = [0.01, 0.02, 0.03];
+    let clean = SweepRunner::new(&factory, 1)
+        .run(lr_points(&base, &lrs), "int4", "rtn", &linreg_inputs)
+        .unwrap();
+    let inputs = |e: &dyn Executor, cfg: &RunConfig| {
+        if cfg.lr == 0.02 {
+            panic!("persistent input failure");
+        }
+        linreg_inputs(e, cfg)
+    };
+    let dir = TempDir::new();
+    let jp = dir.path().join("exhaust.jsonl");
+    let r = SweepRunner::new(&factory, 1)
+        .with_retries(2)
+        .with_journal(&jp, Vec::new())
+        .unwrap()
+        .run(lr_points(&base, &lrs), "int4", "rtn", &inputs)
+        .unwrap();
+    assert!(r[1].diverged && r[1].score.is_infinite());
+    assert_eq!(r[0].score.to_bits(), clean[0].score.to_bits(), "sibling 0 perturbed");
+    assert_eq!(r[2].score.to_bits(), clean[2].score.to_bits(), "sibling 2 perturbed");
+    let entries = SweepJournal::completed(&jp).unwrap();
+    let mid = entries.iter().find(|e| e.lr == 0.02).expect("journaled");
+    assert_eq!(mid.status, "failed");
+    assert_eq!(mid.attempts, 3, "retries=2 means 3 attempts");
+    assert_eq!(mid.score.to_bits(), f64::INFINITY.to_bits());
+    assert!(
+        mid.error.as_deref().unwrap_or("").contains("persistent input failure"),
+        "journal must carry the panic message: {:?}",
+        mid.error
+    );
+}
+
+/// Deterministic divergence is a *data point*: recorded structured,
+/// journaled as `diverged` with the step/loss/lr that blew up, and
+/// never retried (it would diverge identically again).
+#[test]
+fn divergence_is_recorded_and_never_retried() {
+    // direct trainer path: the structured record lands before the bail
+    let engine = linreg_engine(1);
+    let (statics, _, _) = synth_statics(256, 3);
+    let mut cfg = linreg_cfg();
+    cfg.lr = 1e8;
+    let mut trainer = Trainer::new(&engine, cfg, statics, DataSource::InGraph).unwrap();
+    let mut eval = Evaluator::new(5);
+    let mut metrics = MetricsLogger::in_memory();
+    assert!(trainer.run(&mut eval, &mut metrics).is_err());
+    let rec = metrics.diverged.as_ref().expect("divergence must be recorded");
+    assert!(!rec.loss.is_finite());
+    assert!(rec.step > 0);
+    assert_eq!(rec.method, "lotion");
+
+    // sweep path: journaled as status=diverged, attempts=1 despite a
+    // generous retry budget
+    let factory = sweep_factory();
+    let mut base = sweep_cfg();
+    base.name = "crash_diverge".into();
+    let calls = Mutex::new(0usize);
+    let inputs = |e: &dyn Executor, cfg: &RunConfig| {
+        *calls.lock().unwrap() += 1;
+        linreg_inputs(e, cfg)
+    };
+    let dir = TempDir::new();
+    let jp = dir.path().join("diverge.jsonl");
+    let r = SweepRunner::new(&factory, 1)
+        .with_retries(3)
+        .with_journal(&jp, Vec::new())
+        .unwrap()
+        .run(lr_points(&base, &[1e8]), "int4", "rtn", &inputs)
+        .unwrap();
+    assert!(r[0].diverged && r[0].score.is_infinite());
+    assert_eq!(*calls.lock().unwrap(), 1, "divergence must not be retried");
+    let entries = SweepJournal::completed(&jp).unwrap();
+    assert_eq!(entries[0].status, "diverged");
+    assert_eq!(entries[0].attempts, 1);
+    assert!(
+        entries[0].error.as_deref().unwrap_or("").contains("diverged at step"),
+        "journal must carry the divergence record: {:?}",
+        entries[0].error
+    );
+}
+
+// ---------------------------------------------------------------------------
+// subprocess: the real CLI under LOTION_FAULTS kill plans
+// ---------------------------------------------------------------------------
+
+/// `--set` overrides pinning a deterministic 24-step linreg run
+/// (default model linreg_d256, K=8 in the default registry).
+const TRAIN_SETS: &[&str] = &[
+    "--set", "train.steps=24",
+    "--set", "eval.every=8",
+    "--set", "train.schedule=constant",
+    "--set", "train.lr=0.05",
+    "--set", "train.lambda=1.0",
+    "--set", "seed=5",
+];
+
+fn train_cmd(cwd: &Path, out: &str) -> Command {
+    let mut c = Command::new(env!("CARGO_BIN_EXE_lotion-rs"));
+    c.current_dir(cwd)
+        .args(["train", "--backend", "native"])
+        .args(TRAIN_SETS)
+        .args(["--ckpt-every", "8", "--out", out])
+        .env_remove("LOTION_FAULTS")
+        .env_remove("LOTION_THREADS")
+        .env_remove("LOTION_CKPT_EVERY")
+        .env_remove("LOTION_CKPT_DIR")
+        .env_remove("LOTION_SWEEP_WORKERS");
+    c
+}
+
+/// The metrics JSONL with the (nondeterministic) wall-clock field
+/// stripped — every other field is bit-determined.
+fn metrics_lines(path: &Path) -> Vec<String> {
+    std::fs::read_to_string(path)
+        .unwrap_or_else(|e| panic!("reading {path:?}: {e}"))
+        .lines()
+        .map(|l| l.split(",\"wall_s\"").next().unwrap().to_string())
+        .collect()
+}
+
+fn assert_success(out: &std::process::Output, what: &str) {
+    assert!(
+        out.status.success(),
+        "{what} failed ({:?}):\n{}",
+        out.status,
+        String::from_utf8_lossy(&out.stderr)
+    );
+}
+
+/// End-to-end CLI contract: a run killed by `LOTION_FAULTS=kill@step:16`
+/// exits with [`KILL_EXIT`], leaves a resumable snapshot, and
+/// `--resume` completes it bit-identical to uninterrupted baselines —
+/// across *different* `LOTION_THREADS` settings for every leg.
+#[test]
+fn cli_kill_at_step_and_resume_is_bit_identical() {
+    let dir = TempDir::new();
+    let a1 = train_cmd(dir.path(), "a1").env("LOTION_THREADS", "1").output().unwrap();
+    assert_success(&a1, "baseline train (threads=1)");
+    let a2 = train_cmd(dir.path(), "a2").output().unwrap();
+    assert_success(&a2, "baseline train (threads=auto)");
+    let final_a1 = std::fs::read(dir.path().join("a1/final.lotn")).unwrap();
+    assert_eq!(
+        final_a1,
+        std::fs::read(dir.path().join("a2/final.lotn")).unwrap(),
+        "final checkpoint differs across LOTION_THREADS"
+    );
+    let lines_a1 = metrics_lines(&dir.path().join("a1/metrics.jsonl"));
+    assert_eq!(lines_a1, metrics_lines(&dir.path().join("a2/metrics.jsonl")));
+
+    let killed = train_cmd(dir.path(), "b")
+        .env("LOTION_FAULTS", "kill@step:16")
+        .output()
+        .unwrap();
+    assert_eq!(
+        killed.status.code(),
+        Some(KILL_EXIT),
+        "kill@step:16 should exit {KILL_EXIT}: {}",
+        String::from_utf8_lossy(&killed.stderr)
+    );
+    assert!(dir.path().join("b/step000016.lotn").exists(), "snapshot missing after kill");
+    assert!(!dir.path().join("b/final.lotn").exists(), "killed run must not finalize");
+
+    // resume at a different thread width than the killed run
+    let resumed = train_cmd(dir.path(), "b")
+        .arg("--resume")
+        .arg(dir.path().join("b"))
+        .env("LOTION_THREADS", "1")
+        .output()
+        .unwrap();
+    assert_success(&resumed, "resume");
+    assert_eq!(
+        final_a1,
+        std::fs::read(dir.path().join("b/final.lotn")).unwrap(),
+        "resumed final checkpoint differs from uninterrupted"
+    );
+    assert_eq!(
+        lines_a1,
+        metrics_lines(&dir.path().join("b/metrics.jsonl")),
+        "appended metrics JSONL differs from uninterrupted"
+    );
+}
+
+/// Atomicity proof at the CLI level: a kill *between the temp-file
+/// fsync and the rename* (the `ckpt_save` site) must leave the target
+/// checkpoint unpublished and the previous snapshot intact — resume
+/// falls back one checkpoint and still converges bit-identically.
+#[test]
+fn cli_kill_during_checkpoint_save_preserves_previous_snapshot() {
+    let dir = TempDir::new();
+    let base = train_cmd(dir.path(), "a").output().unwrap();
+    assert_success(&base, "baseline train");
+    let final_a = std::fs::read(dir.path().join("a/final.lotn")).unwrap();
+
+    // save sequence in a fresh process: step8 = 1, step16 = 2
+    let killed = train_cmd(dir.path(), "b")
+        .env("LOTION_FAULTS", "kill@ckpt_save:2")
+        .output()
+        .unwrap();
+    assert_eq!(killed.status.code(), Some(KILL_EXIT));
+    assert!(
+        !dir.path().join("b/step000016.lotn").exists(),
+        "a kill before the rename must not publish the snapshot"
+    );
+    Checkpoint::load(&dir.path().join("b/step000008.lotn"))
+        .expect("previous snapshot must stay intact");
+
+    let resumed = train_cmd(dir.path(), "b")
+        .arg("--resume")
+        .arg(dir.path().join("b"))
+        .output()
+        .unwrap();
+    assert_success(&resumed, "resume from the previous snapshot");
+    assert_eq!(
+        final_a,
+        std::fs::read(dir.path().join("b/final.lotn")).unwrap(),
+        "resume from an older snapshot must still converge bit-identically"
+    );
+}
+
+/// Sweep CLI: `kill@point:5` journals the 5 completed points and exits
+/// [`KILL_EXIT`]; `--resume-sweep` finishes the remaining 3 and the
+/// union journal carries the same bit-exact scores as a clean sweep.
+#[test]
+fn cli_sweep_kill_and_resume_completes_the_journal() {
+    let dir = TempDir::new();
+    let sets: &[&str] = &[
+        "--set", "train.steps=16",
+        "--set", "eval.every=16",
+        "--set", "train.schedule=constant",
+        "--set", "train.lambda=1.0",
+        "--set", "seed=5",
+    ];
+    let lrs = "0.01,0.02,0.03,0.04,0.05,0.06,0.07,0.08";
+    let sweep_cmd = |journal: &str| {
+        let mut c = Command::new(env!("CARGO_BIN_EXE_lotion-rs"));
+        c.current_dir(dir.path())
+            .args(["sweep", "--backend", "native", "--lrs", lrs, "--journal", journal])
+            .args(sets)
+            .env_remove("LOTION_FAULTS")
+            .env_remove("LOTION_THREADS")
+            .env_remove("LOTION_SWEEP_WORKERS");
+        c
+    };
+    let by_label = |path: &Path| -> BTreeMap<String, (u64, String)> {
+        SweepJournal::completed(path)
+            .unwrap()
+            .into_iter()
+            .map(|e| (e.label, (e.score.to_bits(), e.status)))
+            .collect()
+    };
+
+    let clean = sweep_cmd("clean.jsonl").output().unwrap();
+    assert_success(&clean, "clean sweep");
+    let clean_map = by_label(&dir.path().join("clean.jsonl"));
+    assert_eq!(clean_map.len(), 8);
+
+    let killed = sweep_cmd("sweep.jsonl")
+        .env("LOTION_FAULTS", "kill@point:5")
+        .output()
+        .unwrap();
+    assert_eq!(
+        killed.status.code(),
+        Some(KILL_EXIT),
+        "kill@point:5 should exit {KILL_EXIT}: {}",
+        String::from_utf8_lossy(&killed.stderr)
+    );
+    let journal_path: PathBuf = dir.path().join("sweep.jsonl");
+    assert_eq!(
+        SweepJournal::completed(&journal_path).unwrap().len(),
+        5,
+        "points 0..5 must be journaled before the kill"
+    );
+
+    let resumed = sweep_cmd("sweep.jsonl").arg("--resume-sweep").output().unwrap();
+    assert_success(&resumed, "sweep resume");
+    assert!(
+        String::from_utf8_lossy(&resumed.stdout).contains("best:"),
+        "resumed sweep must report a best point"
+    );
+    let resumed_map = by_label(&journal_path);
+    assert_eq!(resumed_map, clean_map, "resumed journal scores differ from clean sweep");
+}

@@ -33,6 +33,20 @@ echo "== sweep suite (oversubscribed LOTION_SWEEP_WORKERS=8 x LOTION_THREADS=16)
 # that sharded grids stay bit-identical under heavy oversubscription
 LOTION_SWEEP_WORKERS=8 LOTION_THREADS=16 cargo test -q --test sweep
 
+echo "== fault-injection lane (LOTION_FAULTS env plan) =="
+# crash-safety under a process-wide fault plan (skip with
+# LOTION_CI_FAULTS=0): panic@point:3 fires once per test binary at
+# sweep grid index 3 and must be absorbed by the default one-retry
+# policy on a fresh engine — every suite still passes bit-identical.
+# The other entries sit at unreachable ordinals, proving an armed plan
+# costs nothing on the sites it never matches.
+if [[ "${LOTION_CI_FAULTS:-1}" == "1" ]]; then
+    LOTION_FAULTS="panic@point:3,io_err@ckpt_save:999999,kill@step:999999999" \
+        cargo test -q --test sweep --test threading --test crash_safety
+else
+    echo "LOTION_CI_FAULTS=0; skipping fault-injection lane"
+fi
+
 echo "== lm-tiny native smoke train (default threads) =="
 # the transformer interpreter end-to-end at the CLI surface: a short
 # LOTION train on lm-tiny, offline, native backend only
