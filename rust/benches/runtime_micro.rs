@@ -1,7 +1,9 @@
 //! Runtime micro-benchmarks: native-backend train-step throughput
-//! (steps/sec for linreg and linear2 at 1k / 100k parameters) plus,
-//! with `--features pjrt`, the PJRT call-overhead and literal
-//! conversion numbers behind EXPERIMENTS.md §Perf (L3).
+//! (steps/sec for linreg and linear2 at 1k / 100k parameters), the
+//! KV-cache decode hot path (prefill + per-token step, dense vs
+//! packed weights) plus, with `--features pjrt`, the PJRT
+//! call-overhead and literal conversion numbers behind
+//! EXPERIMENTS.md §Perf (L3).
 //!
 //! Emits `BENCH_runtime_micro.json` (benchlib JSON) next to the cwd so
 //! per-PR throughput trajectories can be tracked.
@@ -194,6 +196,46 @@ fn main() {
                 .unwrap();
             std::hint::black_box(loss);
         });
+    }
+
+    // KV-cache decode (ISSUE 8): per-token latency of the serving hot
+    // path at lm-tiny scale — prefill (items = prompt tokens) and the
+    // single-token step, dense f32 weights vs the fused packed routes
+    // (per-tensor int4 and per-block int4@64). The packed rows never
+    // materialize dense weights; items/s reads as tokens/s.
+    {
+        use lotion::runtime::executor::value;
+        use lotion::runtime::Decoder;
+        use lotion::tensor::HostTensor;
+
+        let engine = NativeEngine::new();
+        let init = engine.manifest().find_init("lm-tiny").expect("lm-tiny init").clone();
+        let out = engine
+            .call(&init, &[value(HostTensor::from_u32(&[2], vec![3, 5]))])
+            .expect("init weights");
+        let weights: Vec<_> = init.outputs.iter().map(|s| s.name.clone()).zip(out).collect();
+        for fmt in ["none", "int4", "int4@64"] {
+            let dec = Decoder::open(&engine, "lm-tiny", fmt, &weights).expect("decode entry");
+            let prompt: Vec<i32> = (0..16).map(|i| (i * 11 % 256) as i32).collect();
+            b.run_with_items(
+                &format!("decode_prefill/lm_tiny/{fmt}"),
+                Some(prompt.len() as f64),
+                &mut || {
+                    std::hint::black_box(dec.prefill(0, &prompt).unwrap());
+                },
+            );
+            dec.prefill(0, &prompt).expect("prefill");
+            let mut pos = prompt.len();
+            b.run_with_items(&format!("decode_step/lm_tiny/{fmt}"), Some(1.0), &mut || {
+                if pos >= dec.max_seq() {
+                    // cache full: rewind the slot with a fresh prefill
+                    dec.prefill(0, &prompt).unwrap();
+                    pos = prompt.len();
+                }
+                std::hint::black_box(dec.step(0, pos, 1).unwrap());
+                pos += 1;
+            });
+        }
     }
 
     // Pool-dispatch overhead (ISSUE 4): an element-wise kernel on a

@@ -89,6 +89,11 @@ impl Args {
         }
     }
 
+    /// `f64_or` narrowed to f32 (sampling temperatures and the like).
+    pub fn f32_or(&self, name: &str, default: f32) -> Result<f32> {
+        Ok(self.f64_or(name, default as f64)? as f32)
+    }
+
     pub fn str_or(&self, name: &str, default: &str) -> String {
         self.flag(name).unwrap_or(default).to_string()
     }
@@ -156,6 +161,9 @@ mod tests {
         assert!(a.required("missing").is_err());
         assert_eq!(a.f64_or("lr", 0.5).unwrap(), 0.5);
         assert_eq!(a.str_or("name", "d"), "d");
+        assert_eq!(a.f32_or("temperature", 0.8).unwrap(), 0.8);
+        assert_eq!(parse("x --temperature 1.5").f32_or("temperature", 0.8).unwrap(), 1.5);
+        assert!(parse("x --temperature warm").f32_or("temperature", 0.8).is_err());
     }
 
     #[test]

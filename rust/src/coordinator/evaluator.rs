@@ -65,15 +65,15 @@ impl Evaluator {
             None
         };
         let quantized = trainer.quantized_keys();
-        // RTN casts of a backend-registered per-tensor format route
-        // through the fused `eval_q` entry: the engine packs the
-        // quantized subset into block codes and never materializes a
-        // full-f32 copy. The fork burn keeps `self.rng` bit-aligned
-        // with the host-cast path below, which forks once per
-        // quantized param in eval-entry order — later RR evals must
-        // see the same stream either way.
+        // RTN casts of any backend-registered format (per-tensor or
+        // per-block, e.g. "int4@64") route through the fused `eval_q`
+        // entry: the engine packs the quantized subset into block codes
+        // and never materializes a full-f32 copy. The fork burn keeps
+        // `self.rng` bit-aligned with the host-cast path below, which
+        // forks once per quantized param in eval-entry order — later RR
+        // evals must see the same stream either way.
         if rounding == Rounding::Rtn {
-            if let Some(fmt) = format.filter(|f| f.block_size == 0) {
+            if let Some(fmt) = format {
                 if let Some(loss) =
                     trainer.session.eval_loss_quantized(&fmt.name, data.clone())?
                 {

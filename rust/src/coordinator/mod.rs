@@ -7,13 +7,17 @@
 //! * [`sweep`] — sharded grid sweeps over factory-spawned engines
 //!   (best-per-method over the App. A.5 LR grids, as the paper
 //!   reports).
+//! * [`serve`] — continuous-batched token generation over an engine
+//!   pool (the `lotion serve` / `bench-serve` harness, DESIGN.md §8).
 
 pub mod evaluator;
 pub mod metrics;
+pub mod serve;
 pub mod sweep;
 pub mod trainer;
 
 pub use evaluator::Evaluator;
 pub use metrics::MetricsLogger;
+pub use serve::{ServeConfig, ServeReport};
 pub use sweep::{JournalEntry, SweepJournal, SweepPoint, SweepResult, SweepRunner};
 pub use trainer::{CkptPolicy, DataSource, Trainer};

@@ -1,0 +1,460 @@
+//! Serving harness: continuous-batched token generation over an
+//! [`ExecutorFactory`]-spawned engine pool (DESIGN.md §8).
+//!
+//! Shape of the workload: a shared FIFO of [`Request`]s feeds N worker
+//! threads; each worker owns one engine (spawned from the factory, the
+//! sweep-runner idiom) and a [`Decoder`] over it, and runs a
+//! continuous-batching loop — admit requests from the queue whenever a
+//! sequence slot is free, advance every live sequence by one decode
+//! step per round, retire sequences the moment they finish. Slots are
+//! recycled, so engine-side KV memory is bounded by `max_batch`
+//! regardless of how many requests drain through a worker.
+//!
+//! Determinism contract: the *text* is scheduling-independent. A
+//! request's token sequence is `sample_token(logits, temperature,
+//! sample_seed, request_id, position)` over logits that depend only on
+//! (weights, prompt, generated prefix) — and the decode kernels are
+//! bit-identical at every `--threads` width — so completions are
+//! bitwise-identical across any engine count, batch width, or
+//! admission order. Only the *timing* (TTFT, per-token latency,
+//! tokens/s) reflects the schedule, which is exactly what the serve
+//! bench measures.
+
+use crate::formats::json::Json;
+use crate::runtime::executor::value;
+use crate::runtime::{sample_token, Decoder, ExecutorFactory, Value};
+use crate::tensor::HostTensor;
+use crate::util::{pool::Pool, rng::Rng, stats::Summary};
+use anyhow::{anyhow, bail, Result};
+use std::collections::VecDeque;
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Disjoint sub-seed domains under one serve seed: synthetic prompts
+/// and sampling draws must never share a counter stream.
+const STREAM_PROMPT: u64 = 1;
+const STREAM_SAMPLE: u64 = 2;
+
+/// One serving workload description (the `lotion serve` /
+/// `lotion bench-serve` knobs).
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    pub model: String,
+    /// decode-entry format: `"none"` (dense) or a quantized format name
+    pub format: String,
+    /// worker threads, one factory-spawned engine each
+    pub engines: usize,
+    /// concurrent sequence slots per engine
+    pub max_batch: usize,
+    /// synthetic-load request count
+    pub requests: usize,
+    pub prompt_len: usize,
+    /// tokens generated per request (>= 1; the first comes from the
+    /// prefill logits)
+    pub gen_len: usize,
+    /// `<= 0` is greedy
+    pub temperature: f32,
+    pub seed: u64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            model: "lm-tiny".to_string(),
+            format: "int4".to_string(),
+            engines: 1,
+            max_batch: 4,
+            requests: 16,
+            prompt_len: 8,
+            gen_len: 16,
+            temperature: 0.8,
+            seed: 42,
+        }
+    }
+}
+
+/// One generation request.
+pub struct Request {
+    pub id: u64,
+    pub prompt: Vec<i32>,
+    pub gen_len: usize,
+}
+
+/// One finished request: its tokens plus the timing the scheduler gave
+/// it. Tokens are schedule-independent; the timing fields are not.
+pub struct Completion {
+    pub id: u64,
+    pub tokens: Vec<i32>,
+    /// request arrival (= serve start for synthetic load) to first token
+    pub ttft_s: f64,
+    /// per-token intervals, `[0]` being the prefill-to-first-token time
+    pub token_lat_s: Vec<f64>,
+}
+
+/// The drained workload: completions (sorted by request id) + wall
+/// clock + the config that produced them.
+pub struct ServeReport {
+    pub cfg: ServeConfig,
+    pub completions: Vec<Completion>,
+    pub wall_s: f64,
+}
+
+impl ServeReport {
+    pub fn generated_tokens(&self) -> usize {
+        self.completions.iter().map(|c| c.tokens.len()).sum()
+    }
+
+    pub fn tokens_per_sec(&self) -> f64 {
+        self.generated_tokens() as f64 / self.wall_s
+    }
+
+    /// Per-token latency distribution across all completions.
+    pub fn token_latency(&self) -> Summary {
+        let mut s = Summary::new();
+        for c in &self.completions {
+            for &v in &c.token_lat_s {
+                s.add(v);
+            }
+        }
+        s
+    }
+
+    /// Time-to-first-token distribution across requests.
+    pub fn ttft(&self) -> Summary {
+        let mut s = Summary::new();
+        for c in &self.completions {
+            s.add(c.ttft_s);
+        }
+        s
+    }
+
+    /// One `BENCH_serve.json` result row.
+    pub fn to_json(&self) -> Json {
+        let lat = self.token_latency();
+        let ttft = self.ttft();
+        Json::obj(vec![
+            (
+                "name",
+                Json::str(format!(
+                    "serve_{}_{}_e{}_b{}",
+                    self.cfg.model, self.cfg.format, self.cfg.engines, self.cfg.max_batch
+                )),
+            ),
+            ("model", Json::str(&self.cfg.model)),
+            ("format", Json::str(&self.cfg.format)),
+            ("engines", Json::num(self.cfg.engines as f64)),
+            ("max_batch", Json::num(self.cfg.max_batch as f64)),
+            ("requests", Json::num(self.completions.len() as f64)),
+            ("prompt_len", Json::num(self.cfg.prompt_len as f64)),
+            ("gen_len", Json::num(self.cfg.gen_len as f64)),
+            ("generated_tokens", Json::num(self.generated_tokens() as f64)),
+            ("wall_s", Json::num(self.wall_s)),
+            ("tokens_per_sec", Json::num(self.tokens_per_sec())),
+            ("tok_lat_p50_s", Json::num(lat.percentile(50.0))),
+            ("tok_lat_p99_s", Json::num(lat.percentile(99.0))),
+            ("tok_lat_mean_s", Json::num(lat.mean())),
+            ("ttft_p50_s", Json::num(ttft.percentile(50.0))),
+            ("ttft_p99_s", Json::num(ttft.percentile(99.0))),
+        ])
+    }
+
+    /// Human-readable one-config summary.
+    pub fn table(&self) -> String {
+        let lat = self.token_latency();
+        let ttft = self.ttft();
+        format!(
+            "{} fmt={} engines={} batch={}: {} req, {} tok in {:.3}s  \
+             -> {:.1} tok/s | tok p50 {:.3}ms p99 {:.3}ms | ttft p50 {:.3}ms p99 {:.3}ms",
+            self.cfg.model,
+            self.cfg.format,
+            self.cfg.engines,
+            self.cfg.max_batch,
+            self.completions.len(),
+            self.generated_tokens(),
+            self.wall_s,
+            self.tokens_per_sec(),
+            lat.percentile(50.0) * 1e3,
+            lat.percentile(99.0) * 1e3,
+            ttft.percentile(50.0) * 1e3,
+            ttft.percentile(99.0) * 1e3,
+        )
+    }
+}
+
+/// Deterministic synthetic load: request `i` draws `prompt_len` tokens
+/// from the counter stream `(seed, [STREAM_PROMPT, i])` — independent
+/// of every other request and of the sampling streams.
+pub fn synthetic_requests(cfg: &ServeConfig, vocab: usize) -> Vec<Request> {
+    let prompt_seed = Rng::stream_seed(cfg.seed, &[STREAM_PROMPT]);
+    (0..cfg.requests as u64)
+        .map(|id| {
+            let mut rng = Rng::stream(prompt_seed, &[id]);
+            Request {
+                id,
+                prompt: (0..cfg.prompt_len).map(|_| rng.below(vocab as u64) as i32).collect(),
+                gen_len: cfg.gen_len,
+            }
+        })
+        .collect()
+}
+
+/// Drive the synthetic workload end to end: spawn a probe engine to
+/// resolve the decode geometry, build the requests, then drain them
+/// through [`run_serve`].
+pub fn serve_synthetic(
+    factory: &dyn ExecutorFactory,
+    weights: &[(String, HostTensor)],
+    cfg: &ServeConfig,
+) -> Result<ServeReport> {
+    let probe = factory.spawn()?;
+    let entry = probe
+        .manifest()
+        .find_decode(&cfg.model, &cfg.format)
+        .ok_or_else(|| {
+            anyhow!("no decode entry for model {:?} format {:?}", cfg.model, cfg.format)
+        })?;
+    let vocab = entry.outputs[0].shape[0];
+    let max_seq = entry
+        .input_index("tokens")
+        .map(|i| entry.inputs[i].shape[0])
+        .unwrap_or(0);
+    if cfg.prompt_len == 0 || cfg.gen_len == 0 {
+        bail!("serve wants prompt_len >= 1 and gen_len >= 1");
+    }
+    // token i of the generation sits at position prompt_len + i
+    if cfg.prompt_len + cfg.gen_len > max_seq {
+        bail!(
+            "prompt_len {} + gen_len {} exceeds {}'s context of {max_seq}",
+            cfg.prompt_len,
+            cfg.gen_len,
+            cfg.model
+        );
+    }
+    drop(probe);
+    run_serve(factory, weights, cfg, synthetic_requests(cfg, vocab))
+}
+
+/// Drain `requests` through an engine pool (module docs). Weights are
+/// FP32 masters shared read-only across workers; each engine casts and
+/// packs its own copy once, on first call.
+pub fn run_serve(
+    factory: &dyn ExecutorFactory,
+    weights: &[(String, HostTensor)],
+    cfg: &ServeConfig,
+    requests: Vec<Request>,
+) -> Result<ServeReport> {
+    for r in &requests {
+        if r.prompt.is_empty() || r.gen_len == 0 {
+            bail!("request {}: empty prompt or zero gen_len", r.id);
+        }
+    }
+    let sample_seed = Rng::stream_seed(cfg.seed, &[STREAM_SAMPLE]);
+    let n_req = requests.len();
+    let queue = Mutex::new(VecDeque::from(requests));
+    let workers = cfg.engines.max(1).min(n_req.max(1));
+    let start = Instant::now();
+    let outs: Vec<Result<Vec<Completion>>> =
+        Pool::new(workers).run((0..workers).collect(), |_, _wid| {
+            let engine = factory.spawn()?;
+            let named: Vec<(String, Value)> =
+                weights.iter().map(|(n, t)| (n.clone(), value(t.clone()))).collect();
+            let dec = Decoder::open(&*engine, &cfg.model, &cfg.format, &named)?;
+            drain(&dec, &queue, cfg, sample_seed, start)
+        });
+    let wall_s = start.elapsed().as_secs_f64();
+    let mut completions = Vec::with_capacity(n_req);
+    for out in outs {
+        completions.extend(out?);
+    }
+    completions.sort_by_key(|c| c.id);
+    Ok(ServeReport { cfg: cfg.clone(), completions, wall_s })
+}
+
+/// One live sequence on a worker's decoder.
+struct Active {
+    req: Request,
+    slot: i32,
+    tokens: Vec<i32>,
+    ttft_s: f64,
+    lat: Vec<f64>,
+    last: Instant,
+}
+
+/// Retire a finished sequence: recycle its slot, emit its completion.
+fn retire(a: Active, free: &mut Vec<i32>, done: &mut Vec<Completion>) {
+    free.push(a.slot);
+    done.push(Completion {
+        id: a.req.id,
+        tokens: a.tokens,
+        ttft_s: a.ttft_s,
+        token_lat_s: a.lat,
+    });
+}
+
+/// One worker's continuous-batching loop: admit at step boundaries
+/// while slots are free, advance every live sequence one step per
+/// round, retire finished sequences (recycling their slot).
+fn drain(
+    dec: &Decoder<'_>,
+    queue: &Mutex<VecDeque<Request>>,
+    cfg: &ServeConfig,
+    sample_seed: u64,
+    start: Instant,
+) -> Result<Vec<Completion>> {
+    let mut free: Vec<i32> = (0..cfg.max_batch.max(1) as i32).rev().collect();
+    let mut active: Vec<Active> = Vec::new();
+    let mut done: Vec<Completion> = Vec::new();
+    loop {
+        // admission boundary: top up the batch from the shared queue
+        while !free.is_empty() {
+            let req = match queue.lock().unwrap().pop_front() {
+                Some(r) => r,
+                None => break,
+            };
+            let slot = free.pop().expect("slot just checked");
+            let t0 = Instant::now();
+            let logits = dec.prefill(slot, &req.prompt)?;
+            let tok = sample_token(&logits, cfg.temperature, sample_seed, req.id, 0) as i32;
+            let now = Instant::now();
+            let a = Active {
+                slot,
+                tokens: vec![tok],
+                ttft_s: now.duration_since(start).as_secs_f64(),
+                lat: vec![now.duration_since(t0).as_secs_f64()],
+                last: now,
+                req,
+            };
+            if a.tokens.len() >= a.req.gen_len {
+                retire(a, &mut free, &mut done);
+            } else {
+                active.push(a);
+            }
+        }
+        if active.is_empty() {
+            return Ok(done);
+        }
+        // one decode step per live sequence, then re-check admission
+        let mut still = Vec::with_capacity(active.len());
+        for mut a in active {
+            let pos = a.req.prompt.len() + a.tokens.len() - 1;
+            let logits = dec.step(a.slot, pos, *a.tokens.last().expect("nonempty"))?;
+            let tok = sample_token(
+                &logits,
+                cfg.temperature,
+                sample_seed,
+                a.req.id,
+                a.tokens.len() as u64,
+            ) as i32;
+            a.tokens.push(tok);
+            let now = Instant::now();
+            a.lat.push(now.duration_since(a.last).as_secs_f64());
+            a.last = now;
+            if a.tokens.len() >= a.req.gen_len {
+                retire(a, &mut free, &mut done);
+            } else {
+                still.push(a);
+            }
+        }
+        active = still;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::native::NativeFactory;
+    use crate::runtime::Executor;
+
+    fn lm_tiny_weights(factory: &dyn ExecutorFactory) -> Vec<(String, HostTensor)> {
+        let e = factory.spawn().unwrap();
+        let init = e.manifest().find_init("lm-tiny").unwrap().clone();
+        let key = value(HostTensor::from_u32(&[2], vec![3, 5]));
+        let out = e.call(&init, &[key]).unwrap();
+        init.outputs
+            .iter()
+            .zip(out)
+            .map(|(s, v)| (s.name.clone(), v.as_ref().clone()))
+            .collect()
+    }
+
+    fn tiny_cfg() -> ServeConfig {
+        ServeConfig {
+            requests: 6,
+            prompt_len: 4,
+            gen_len: 5,
+            temperature: 0.7,
+            ..ServeConfig::default()
+        }
+    }
+
+    #[test]
+    fn synthetic_requests_are_deterministic_and_in_vocab() {
+        let cfg = tiny_cfg();
+        let a = synthetic_requests(&cfg, 256);
+        let b = synthetic_requests(&cfg, 256);
+        assert_eq!(a.len(), 6);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.prompt, y.prompt);
+            assert!(x.prompt.iter().all(|&t| (0..256).contains(&t)));
+        }
+        // distinct requests draw distinct prompts
+        assert_ne!(a[0].prompt, a[1].prompt);
+    }
+
+    /// The serving determinism contract: completions are bitwise
+    /// independent of engine count, batch width, and hence admission
+    /// order (a 1-engine/1-slot pool is strictly serial FIFO; a
+    /// 2-engine/3-slot pool interleaves).
+    #[test]
+    fn completions_are_schedule_independent() {
+        let factory = NativeFactory::with_default_models(1);
+        let weights = lm_tiny_weights(&factory);
+        let serial =
+            serve_synthetic(&factory, &weights, &ServeConfig { engines: 1, max_batch: 1, ..tiny_cfg() })
+                .unwrap();
+        let pooled =
+            serve_synthetic(&factory, &weights, &ServeConfig { engines: 2, max_batch: 3, ..tiny_cfg() })
+                .unwrap();
+        assert_eq!(serial.completions.len(), 6);
+        assert_eq!(pooled.completions.len(), 6);
+        assert_eq!(serial.generated_tokens(), 6 * 5);
+        for (a, b) in serial.completions.iter().zip(&pooled.completions) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.tokens, b.tokens, "request {} diverged across schedules", a.id);
+            assert!(a.tokens.iter().all(|&t| (0..256).contains(&t)));
+            assert_eq!(a.token_lat_s.len(), a.tokens.len());
+            assert!(a.ttft_s >= 0.0);
+        }
+    }
+
+    #[test]
+    fn report_row_carries_throughput_and_percentiles() {
+        let factory = NativeFactory::with_default_models(1);
+        let weights = lm_tiny_weights(&factory);
+        let cfg = ServeConfig { engines: 1, max_batch: 2, ..tiny_cfg() };
+        let r = serve_synthetic(&factory, &weights, &cfg).unwrap();
+        assert!(r.tokens_per_sec() > 0.0);
+        let row = r.to_json();
+        assert_eq!(row.get("name").unwrap().as_str(), Some("serve_lm-tiny_int4_e1_b2"));
+        assert_eq!(row.get("generated_tokens").unwrap().as_usize(), Some(30));
+        for k in ["tokens_per_sec", "tok_lat_p50_s", "tok_lat_p99_s", "ttft_p50_s", "ttft_p99_s"] {
+            let v = row.get(k).unwrap().as_f64().unwrap();
+            assert!(v.is_finite() && v >= 0.0, "{k} = {v}");
+        }
+        assert!(r.table().contains("tok/s"));
+    }
+
+    #[test]
+    fn serve_rejects_bad_geometry() {
+        let factory = NativeFactory::with_default_models(1);
+        let weights = lm_tiny_weights(&factory);
+        // context overflow: lm-tiny's T is 64
+        let cfg = ServeConfig { prompt_len: 60, gen_len: 10, requests: 1, ..tiny_cfg() };
+        assert!(serve_synthetic(&factory, &weights, &cfg).is_err());
+        let cfg = ServeConfig { gen_len: 0, requests: 1, ..tiny_cfg() };
+        assert!(serve_synthetic(&factory, &weights, &cfg).is_err());
+        // unknown decode format
+        let cfg = ServeConfig { format: "int16".into(), ..tiny_cfg() };
+        assert!(serve_synthetic(&factory, &weights, &cfg).is_err());
+    }
+}

@@ -32,12 +32,20 @@ fn main() {
     }
 }
 
-const USAGE: &str = "usage: lotion-rs <train|exp|sweep|inspect|data-report> [flags]
+const USAGE: &str = "usage: lotion-rs <train|exp|sweep|serve|bench-serve|inspect|data-report> [flags]
   train       --config <toml> [--set k=v ...] [--out results/<name>]
               [--ckpt-every N] [--ckpt-dir dir] [--resume <ckpt|dir>]
   exp         <id|all> [--results results] [--artifacts artifacts]
   sweep       --config <toml> --lrs 0.1,0.3 [--score-format int4] [--score-rounding rtn]
               [--journal <jsonl>] [--resume-sweep] [--retries N]
+  serve       [--model lm-tiny] [--format int4] [--weights final.lotn]
+              [--engines 1] [--max-batch 4] [--requests 16]
+              [--prompt-len 8] [--gen-len 16] [--temperature 0.8] [--seed 42]
+              drain a synthetic request load through an engine pool
+  bench-serve [serve flags] [--formats none,int4,int4@64,int8,fp4]
+              [--out BENCH_serve.json]
+              serve bench across decode formats: tokens/s, per-token
+              p50/p99 latency, TTFT per format
   inspect     [--artifacts artifacts]           list programs + execution timings
   data-report [--bytes 1000000]                 corpus statistics
 crash safety (DESIGN.md §7):
@@ -78,6 +86,8 @@ fn run() -> Result<()> {
         "train" => cmd_train(&args),
         "exp" => cmd_exp(&args),
         "sweep" => cmd_sweep(&args),
+        "serve" => cmd_serve(&args, false),
+        "bench-serve" => cmd_serve(&args, true),
         "inspect" => cmd_inspect(&args),
         "data-report" => cmd_data_report(&args),
         "" => bail!("{USAGE}"),
@@ -333,6 +343,99 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     if let Some(i) = lotion::coordinator::sweep::best(&results) {
         println!("best: lr={:.4e} score={:.6}", results[i].lr, results[i].score);
     }
+    Ok(())
+}
+
+/// Serve weights: `--weights <ckpt.lotn>` loads a trained artifact
+/// (tensors matched to the decode entry's param specs by name — the
+/// names `cmd_train`'s `final.lotn` saves), otherwise fresh init via
+/// the model's init entry at a seed-derived key.
+fn serve_weights(
+    engine: &dyn Executor,
+    model: &str,
+    args: &Args,
+    seed: u64,
+) -> Result<Vec<(String, lotion::tensor::HostTensor)>> {
+    use lotion::runtime::executor::{check_value, value};
+    match args.flag("weights") {
+        Some(p) => {
+            let entry = engine
+                .manifest()
+                .find_decode(model, "none")
+                .with_context(|| format!("model {model:?} has no decode entries"))?;
+            let ckpt = Checkpoint::load(Path::new(p))?;
+            entry
+                .input_specs(Role::Param)
+                .into_iter()
+                .map(|s| {
+                    let t = ckpt.get(&s.name).ok_or_else(|| {
+                        anyhow::anyhow!("checkpoint {p:?} is missing tensor {:?}", s.name)
+                    })?;
+                    check_value(t, s).with_context(|| format!("checkpoint {p:?}"))?;
+                    Ok((s.name.clone(), t.clone()))
+                })
+                .collect()
+        }
+        None => {
+            let init = engine.manifest().find_init(model)?.clone();
+            let key = value(lotion::tensor::HostTensor::from_u32(
+                &[2],
+                vec![seed as u32, (seed >> 32) as u32],
+            ));
+            let out = engine.call(&init, &[key])?;
+            Ok(init
+                .outputs
+                .iter()
+                .zip(out)
+                .map(|(s, v)| (s.name.clone(), v.as_ref().clone()))
+                .collect())
+        }
+    }
+}
+
+/// `serve` (one config) and `bench-serve` (a decode-format grid with a
+/// `BENCH_serve.json` emission) share everything but the loop.
+fn cmd_serve(args: &Args, bench: bool) -> Result<()> {
+    use lotion::coordinator::serve::{serve_synthetic, ServeConfig};
+    use lotion::formats::json::Json;
+    let artifacts = args.str_or("artifacts", "artifacts");
+    let factory = make_factory(args, &artifacts, 0)?;
+    let base = ServeConfig {
+        model: args.str_or("model", "lm-tiny"),
+        format: args.str_or("format", "int4"),
+        engines: args.usize_or("engines", 1)?,
+        max_batch: args.usize_or("max-batch", 4)?,
+        requests: args.usize_or("requests", 16)?,
+        prompt_len: args.usize_or("prompt-len", 8)?,
+        gen_len: args.usize_or("gen-len", 16)?,
+        temperature: args.f32_or("temperature", 0.8)?,
+        seed: args.usize_or("seed", 42)? as u64,
+    };
+    let probe = factory.spawn()?;
+    let weights = serve_weights(&*probe, &base.model, args, base.seed)?;
+    drop(probe);
+    if !bench {
+        let report = serve_synthetic(&*factory, &weights, &base)?;
+        println!("{}", report.table());
+        return Ok(());
+    }
+    let formats: Vec<String> = args
+        .str_or("formats", "none,int4,int4@64,int8,fp4")
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    let mut rows = Vec::new();
+    for fmt in &formats {
+        let cfg = ServeConfig { format: fmt.clone(), ..base.clone() };
+        let report = serve_synthetic(&*factory, &weights, &cfg)?;
+        println!("{}", report.table());
+        rows.push(report.to_json());
+    }
+    let out = args.str_or("out", "BENCH_serve.json");
+    let doc = Json::obj(vec![("suite", Json::str("serve")), ("results", Json::Arr(rows))]);
+    std::fs::write(&out, doc.to_string())?;
+    info!("serve bench -> {out}");
     Ok(())
 }
 

@@ -22,6 +22,21 @@ pub struct QuantFormat {
 impl QuantFormat {
     pub fn parse(name: &str, block_size: usize) -> Result<QuantFormat> {
         let lower = name.to_ascii_lowercase();
+        // `<base>@<block>` names carry their block size inline (e.g.
+        // "int4@64"): the suffix overrides the argument and the full
+        // string stays the format's registry key, so per-block formats
+        // flow through config strings and manifest entry names
+        // unchanged.
+        if let Some((base, block_s)) = lower.split_once('@') {
+            let block: usize = block_s
+                .parse()
+                .ok()
+                .filter(|&b| b > 0)
+                .ok_or_else(|| anyhow::anyhow!("bad block size in format {name:?}"))?;
+            let mut fmt = Self::parse(base, block)?;
+            fmt.name = lower.clone();
+            return Ok(fmt);
+        }
         if let Some(bits_s) = lower.strip_prefix("int") {
             let bits: u32 = bits_s.parse()?;
             if !(2..=8).contains(&bits) {
@@ -145,6 +160,24 @@ mod tests {
         assert_eq!(QuantFormat::fp4().qmax, 6.0);
         assert!(QuantFormat::parse("int16", 0).is_err());
         assert!(QuantFormat::parse("fp8", 0).is_err());
+    }
+
+    #[test]
+    fn parse_block_suffix() {
+        let f = QuantFormat::parse("int4@64", 0).unwrap();
+        assert_eq!(f.name, "int4@64");
+        assert_eq!(f.bits, 4);
+        assert_eq!(f.qmax, 7.0);
+        assert_eq!(f.block_size, 64);
+        let g = QuantFormat::parse("fp4@32", 0).unwrap();
+        assert_eq!(g.name, "fp4@32");
+        assert!(!g.uniform);
+        assert_eq!(g.block_size, 32);
+        // suffix beats the argument; bad suffixes are rejected
+        assert_eq!(QuantFormat::parse("int8@16", 128).unwrap().block_size, 16);
+        assert!(QuantFormat::parse("int4@0", 0).is_err());
+        assert!(QuantFormat::parse("int4@x", 0).is_err());
+        assert!(QuantFormat::parse("bf16@64", 0).is_err());
     }
 
     #[test]

@@ -1,0 +1,251 @@
+//! A typed generation handle over one engine: the [`Decoder`] is to the
+//! `decode_*` entries what [`Session`](super::Session) is to the
+//! train/eval entries — it owns the resolved entry, the FP32 weight
+//! `Value`s, and the `[tokens, ctl]` argument packing, so callers speak
+//! "prefill this prompt into slot 3, then step it" instead of the raw
+//! positional calling convention.
+//!
+//! The weight `Value`s are held for the handle's lifetime and shipped
+//! *by `Rc` identity* on every call: the native engine keys its packed
+//! weight cache on those pointers, so the expensive RTN pack happens
+//! exactly once per `Decoder`, and every subsequent prefill/step runs
+//! the fused packed-GEMV path with zero dense decodes.
+//!
+//! Sampling lives here too ([`sample_token`]) and is pure host-side
+//! arithmetic off counter-split RNG streams: the sampled token for
+//! `(seed, request, position)` is a function of the logits alone —
+//! independent of thread count, engine assignment, and the order the
+//! serving layer admits requests in.
+
+use super::executor::{value, Executor, Value};
+use super::manifest::{ArtifactEntry, Role};
+use crate::tensor::HostTensor;
+use crate::util::rng::Rng;
+use anyhow::{anyhow, bail, Result};
+
+/// One model's generation handle on an engine (see module docs).
+pub struct Decoder<'e> {
+    engine: &'e dyn Executor,
+    entry: ArtifactEntry,
+    /// weight args in entry order; `Rc` identity doubles as the
+    /// engine-side packed-cache key
+    params: Vec<Value>,
+    vocab: usize,
+    max_seq: usize,
+}
+
+impl<'e> Decoder<'e> {
+    /// Open a decoder: resolve `decode_{model}_{format}` from the
+    /// engine's manifest (`format: "none"` is the dense-weight entry)
+    /// and validate the named FP32 master weights against its param
+    /// specs. Weights are adopted as-is — quantized formats are cast
+    /// and packed engine-side on first use.
+    pub fn open(
+        engine: &'e dyn Executor,
+        model: &str,
+        format: &str,
+        weights: &[(String, Value)],
+    ) -> Result<Decoder<'e>> {
+        let entry = engine
+            .manifest()
+            .find_decode(model, format)
+            .ok_or_else(|| anyhow!("no decode entry for model {model:?} format {format:?}"))?
+            .clone();
+        let logits = entry
+            .outputs
+            .first()
+            .ok_or_else(|| anyhow!("{}: decode entry has no outputs", entry.name))?;
+        let vocab = logits.shape[0];
+        let max_seq = entry
+            .input_index("tokens")
+            .map(|i| entry.inputs[i].shape[0])
+            .ok_or_else(|| anyhow!("{}: decode entry has no tokens input", entry.name))?;
+        let mut params = Vec::new();
+        for spec in entry.input_specs(Role::Param) {
+            let v = weights
+                .iter()
+                .find(|(n, _)| n == &spec.name)
+                .map(|(_, v)| v.clone())
+                .ok_or_else(|| anyhow!("{}: missing weight {:?}", entry.name, spec.name))?;
+            super::executor::check_value(&v, spec)?;
+            params.push(v);
+        }
+        Ok(Decoder { engine, entry, params, vocab, max_seq })
+    }
+
+    /// Logits width per step.
+    pub fn vocab(&self) -> usize {
+        self.vocab
+    }
+
+    /// Maximum cached positions per sequence (prompt + generation).
+    pub fn max_seq(&self) -> usize {
+        self.max_seq
+    }
+
+    pub fn entry(&self) -> &ArtifactEntry {
+        &self.entry
+    }
+
+    fn call(&self, tokens: Vec<i32>, ctl: [i32; 3]) -> Result<Vec<f32>> {
+        let mut args = self.params.clone();
+        args.push(value(HostTensor::from_i32(&[self.max_seq], tokens)));
+        args.push(value(HostTensor::from_i32(&[3], ctl.to_vec())));
+        let out = self.engine.call(&self.entry, &args)?;
+        Ok(out[0].as_f32())
+    }
+
+    /// Ingest `prompt` into sequence slot `slot` (opening it, or
+    /// resetting it if it was live) and return the logits at the
+    /// prompt's last position.
+    pub fn prefill(&self, slot: i32, prompt: &[i32]) -> Result<Vec<f32>> {
+        if prompt.is_empty() || prompt.len() > self.max_seq {
+            bail!(
+                "{}: prompt of {} tokens (want 1..={})",
+                self.entry.name,
+                prompt.len(),
+                self.max_seq
+            );
+        }
+        let mut tokens = vec![0i32; self.max_seq];
+        tokens[..prompt.len()].copy_from_slice(prompt);
+        self.call(tokens, [slot, 0, prompt.len() as i32])
+    }
+
+    /// Append `token` to slot `slot` at position `pos` (== the slot's
+    /// current length) and return the next-token logits.
+    pub fn step(&self, slot: i32, pos: usize, token: i32) -> Result<Vec<f32>> {
+        let mut tokens = vec![0i32; self.max_seq];
+        tokens[0] = token;
+        self.call(tokens, [slot, pos as i32, 1])
+    }
+}
+
+/// Sample a token from next-token logits. `temperature <= 0` is greedy
+/// (argmax, first max wins). Otherwise: f64 softmax at the given
+/// temperature, inverted at a single uniform drawn from the
+/// counter-split stream `(seed, [request, position])` — so the result
+/// depends only on `(logits, temperature, seed, request, position)`,
+/// never on sampling order, thread count, or which engine ran the step
+/// (the serving layer's determinism contract, DESIGN.md §8).
+pub fn sample_token(
+    logits: &[f32],
+    temperature: f32,
+    seed: u64,
+    request: u64,
+    position: u64,
+) -> usize {
+    debug_assert!(!logits.is_empty());
+    if temperature <= 0.0 {
+        let mut best = 0;
+        for (i, &v) in logits.iter().enumerate() {
+            if v > logits[best] {
+                best = i;
+            }
+        }
+        return best;
+    }
+    let inv_t = 1.0 / temperature as f64;
+    let max = logits.iter().fold(f64::NEG_INFINITY, |m, &v| m.max(v as f64));
+    let weights: Vec<f64> = logits.iter().map(|&v| ((v as f64 - max) * inv_t).exp()).collect();
+    let total: f64 = weights.iter().sum();
+    let u = Rng::stream(seed, &[request, position]).uniform() * total;
+    let mut acc = 0.0;
+    for (i, w) in weights.iter().enumerate() {
+        acc += w;
+        if u < acc {
+            return i;
+        }
+    }
+    logits.len() - 1 // u == total under rounding: clamp to the last token
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::NativeEngine;
+
+    /// Init a model's weights through its init entry, named per spec.
+    fn init_weights(engine: &NativeEngine, model: &str, key: [u32; 2]) -> Vec<(String, Value)> {
+        let init = engine.manifest().find_init(model).unwrap().clone();
+        let args = vec![value(HostTensor::from_u32(&[2], key.to_vec()))];
+        let out = engine.call(&init, &args).unwrap();
+        init.outputs.iter().map(|s| s.name.clone()).zip(out).collect()
+    }
+
+    #[test]
+    fn decoder_prefills_and_steps_lm_tiny() {
+        let engine = NativeEngine::new();
+        let weights = init_weights(&engine, "lm-tiny", [3, 5]);
+        let dec = Decoder::open(&engine, "lm-tiny", "int4", &weights).unwrap();
+        assert_eq!(dec.vocab(), 256);
+        assert_eq!(dec.max_seq(), 64);
+        let prompt = [5i32, 9, 2];
+        let l0 = dec.prefill(0, &prompt).unwrap();
+        assert_eq!(l0.len(), 256);
+        let t0 = sample_token(&l0, 0.0, 1, 0, 0) as i32;
+        let l1 = dec.step(0, prompt.len(), t0).unwrap();
+        assert_eq!(l1.len(), 256);
+        // a second prefill of the same prompt into another slot must
+        // reproduce the first bitwise (packed cache is weight-keyed,
+        // slot state is independent)
+        let l0b = dec.prefill(1, &prompt).unwrap();
+        assert_eq!(
+            l0.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            l0b.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+        // prompt-length guards fire before the engine call
+        assert!(dec.prefill(2, &[]).is_err());
+        assert!(dec.prefill(2, &vec![1i32; 65]).is_err());
+    }
+
+    #[test]
+    fn decoder_open_validates_weights() {
+        let engine = NativeEngine::new();
+        let mut weights = init_weights(&engine, "lm-tiny", [3, 5]);
+        // unregistered format -> no entry
+        assert!(Decoder::open(&engine, "lm-tiny", "int2", &weights).is_err());
+        // missing weight
+        let dropped = weights.remove(0);
+        let err = Decoder::open(&engine, "lm-tiny", "none", &weights).unwrap_err();
+        assert!(err.to_string().contains("missing weight"), "{err}");
+        // wrong shape
+        weights.insert(
+            0,
+            (dropped.0.clone(), value(HostTensor::zeros(crate::tensor::DType::F32, &[3]))),
+        );
+        assert!(Decoder::open(&engine, "lm-tiny", "none", &weights).is_err());
+        // no decode entry for testbed models
+        assert!(Decoder::open(&engine, "linreg_d256", "none", &[]).is_err());
+    }
+
+    #[test]
+    fn greedy_sampling_prefers_first_max() {
+        assert_eq!(sample_token(&[0.1, 0.9, 0.9, 0.3], 0.0, 0, 0, 0), 1);
+        assert_eq!(sample_token(&[2.0, 1.0], -1.0, 0, 0, 0), 0);
+    }
+
+    #[test]
+    fn sampling_is_a_pure_function_of_seed_and_counters() {
+        let logits: Vec<f32> = (0..16).map(|i| ((i * 7 % 16) as f32) * 0.25).collect();
+        let a = sample_token(&logits, 0.8, 42, 3, 9);
+        let b = sample_token(&logits, 0.8, 42, 3, 9);
+        assert_eq!(a, b);
+        // distinct counters decorrelate: across many positions the
+        // samples must not all collapse to one token
+        let mut seen = std::collections::HashSet::new();
+        for pos in 0..64 {
+            seen.insert(sample_token(&logits, 1.5, 42, 3, pos));
+        }
+        assert!(seen.len() > 4, "only {} distinct tokens", seen.len());
+        assert!(seen.iter().all(|&t| t < 16));
+    }
+
+    #[test]
+    fn low_temperature_approaches_greedy() {
+        let logits = [0.0f32, 4.0, 1.0, 3.9];
+        for pos in 0..32 {
+            assert_eq!(sample_token(&logits, 0.01, 7, 1, pos), 1);
+        }
+    }
+}

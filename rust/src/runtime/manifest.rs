@@ -193,6 +193,15 @@ impl Manifest {
         self.artifacts.get(&format!("eval_q_{model}_{format}"))
     }
 
+    /// The autoregressive decode entry for (model, format), when the
+    /// backend registers one (`decode_{model}_{fmt}`; `"none"` is the
+    /// dense-weight entry). Like [`Manifest::find_eval_quant`], native
+    /// engines only — programs without a generation path register
+    /// nothing and callers get `None`.
+    pub fn find_decode(&self, model: &str, format: &str) -> Option<&ArtifactEntry> {
+        self.artifacts.get(&format!("decode_{model}_{format}"))
+    }
+
     pub fn find_init(&self, model: &str) -> Result<&ArtifactEntry> {
         self.get(&format!("init_{model}")).map_err(|_| {
             anyhow!(

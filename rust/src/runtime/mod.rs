@@ -3,6 +3,8 @@
 //! state shared by all of them.
 //!
 //! * [`executor`] — the backend trait + the [`Value`] tensor currency.
+//! * [`decode`] — [`Decoder`]: a typed generation handle over the
+//!   `decode_*` entries, plus host-side counter-split sampling.
 //! * [`manifest`] — typed program registry (the backend⇄coordinator
 //!   contract; for PJRT it is `artifacts/manifest.json`, the native
 //!   backend synthesizes an equivalent one in memory).
@@ -19,6 +21,7 @@
 //! * [`session`] — [`Session`]: a typed per-run handle owning the
 //!   train/eval entries, the state round-trip and the argument packing.
 
+pub mod decode;
 #[cfg(feature = "pjrt")]
 pub mod engine;
 pub mod executor;
@@ -30,6 +33,7 @@ pub mod native;
 pub mod session;
 pub mod state;
 
+pub use self::decode::{sample_token, Decoder};
 #[cfg(feature = "pjrt")]
 pub use self::engine::Engine;
 pub use self::executor::{Executor, Value};

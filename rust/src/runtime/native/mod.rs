@@ -34,7 +34,7 @@ pub mod testbeds;
 pub mod transformer;
 
 pub use self::optim::OptKind;
-pub use self::program::{EvalCtx, Method, NativeProgram, ParamView, StepCtx, StepStreams};
+pub use self::program::{DecodeSpec, EvalCtx, Method, NativeProgram, ParamView, StepCtx, StepStreams};
 pub use self::testbeds::ModelSpec;
 pub use self::transformer::{LmConfig, LmProgram};
 
@@ -136,6 +136,38 @@ enum Program {
     /// ships a full-f32 quantized copy.
     EvalQuant { model: NativeModel, fmt: QuantFormat },
     Init { model: NativeModel },
+    /// Autoregressive decode (`decode_{model}_{fmt}`): prefill + one-
+    /// token steps against engine-owned KV slots. With a format, the
+    /// quantized subset is packed once per weight set and every decode
+    /// GEMV reads nibble codes in place — no dense `wq` ever exists.
+    Decode { model: NativeModel, fmt: Option<QuantFormat> },
+}
+
+/// One weight tensor as the decode cache holds it: dense f32, or
+/// packed codes for the quantized subset of a formatted decode entry.
+enum CachedParam {
+    Dense(Vec<f32>),
+    Packed(PackedWeights),
+}
+
+/// One live sequence: the program's KV/state box plus the engine-side
+/// position counter the calling convention is validated against.
+struct DecodeSlot {
+    state: Box<dyn Any>,
+    len: usize,
+}
+
+/// Engine-side serving state for one decode entry: the weight set the
+/// caches were built from plus the per-slot sequences decoding against
+/// it. `anchors` holds strong [`Value`] clones of the exact argument
+/// tensors — `Rc::ptr_eq` against incoming args detects a weight swap
+/// (the held clone keeps each allocation alive, so pointer equality
+/// cannot false-positive through address reuse), which invalidates
+/// every slot and triggers a single re-pack.
+struct DecodeCache {
+    anchors: Vec<Value>,
+    params: Vec<CachedParam>,
+    slots: HashMap<i32, DecodeSlot>,
 }
 
 /// Reusable per-model driver buffers: the program's own scratch (the
@@ -162,6 +194,8 @@ pub struct NativeEngine {
     timings: RefCell<HashMap<String, (u64, f64)>>,
     /// per-model reusable train-call buffers (keyed by program name)
     scratch: RefCell<HashMap<String, DriverScratch>>,
+    /// per-decode-entry serving state (packed weights + KV slots)
+    decode: RefCell<HashMap<String, DecodeCache>>,
 }
 
 impl Default for NativeEngine {
@@ -223,11 +257,23 @@ impl NativeEngine {
                 }
             }
             add(eval_entry(m), Program::Eval { model: m.clone() });
-            for name in ["int4", "int8", "fp4"] {
+            // "int4@64" exercises the per-block fused path through the
+            // same entry surface as the per-tensor formats
+            for name in ["int4", "int8", "fp4", "int4@64"] {
                 let fmt = QuantFormat::parse(name, 0).expect("builtin format");
                 add(eval_quant_entry(m, &fmt), Program::EvalQuant { model: m.clone(), fmt });
             }
             add(init_entry(m), Program::Init { model: m.clone() });
+            if m.program.decode_spec().is_some() {
+                let mut fmts: Vec<Option<QuantFormat>> = vec![None];
+                for name in ["int4", "int8", "fp4", "int4@64"] {
+                    fmts.push(Some(QuantFormat::parse(name, 0).expect("builtin format")));
+                }
+                for fmt in fmts {
+                    let entry = decode_entry(m, fmt.as_ref());
+                    add(entry, Program::Decode { model: m.clone(), fmt });
+                }
+            }
         }
         NativeEngine {
             manifest: Manifest { dir: PathBuf::from("<native>"), artifacts },
@@ -235,6 +281,7 @@ impl NativeEngine {
             pool: Pool::new(0),
             timings: RefCell::new(HashMap::new()),
             scratch: RefCell::new(HashMap::new()),
+            decode: RefCell::new(HashMap::new()),
         }
     }
 
@@ -549,6 +596,107 @@ impl NativeEngine {
             .map(|(o, p)| value(HostTensor::from_f32(&o.shape, p)))
             .collect())
     }
+
+    /// One decode call, following the `decode_{model}_{fmt}` calling
+    /// convention: `ctl = [slot, pos, len]`. `pos == 0` opens (or
+    /// reuses) sequence slot `slot` and prefills `tokens[..len]`;
+    /// `pos > 0` requires `len == 1` and `pos` equal to the slot's
+    /// cached length, and appends `tokens[0]`. Returns the next-token
+    /// logits either way. The weight set is packed (quantized formats)
+    /// or copied (dense) once per distinct argument tensors; every
+    /// subsequent call with the same `Value`s reuses it.
+    fn run_decode(
+        &self,
+        entry: &ArtifactEntry,
+        model: &NativeModel,
+        fmt: Option<&QuantFormat>,
+        args: &[Value],
+    ) -> Result<Vec<Value>> {
+        let program = &*model.program;
+        let spec = program
+            .decode_spec()
+            .ok_or_else(|| anyhow!("{}: program has no decode path", entry.name))?;
+        let get = input_lookup(entry, args);
+        let ctl = get("ctl")?.as_i32();
+        let (slot, pos, len) = (ctl[0], ctl[1], ctl[2]);
+        if pos < 0 || len < 0 || len as usize > spec.max_seq {
+            bail!("{}: bad ctl [slot={slot}, pos={pos}, len={len}]", entry.name);
+        }
+        let (pos, len) = (pos as usize, len as usize);
+        let tokens = get("tokens")?.as_i32();
+
+        let param_specs = entry.input_specs(Role::Param);
+        let anchors: Vec<Value> = param_specs
+            .iter()
+            .map(|s| Ok(args[entry.input_index(&s.name).expect("param input")].clone()))
+            .collect::<Result<Vec<_>>>()?;
+        let mut cache_map = self.decode.borrow_mut();
+        let stale = match cache_map.get(&entry.name) {
+            Some(c) => {
+                c.anchors.len() != anchors.len()
+                    || c.anchors.iter().zip(&anchors).any(|(a, b)| !std::rc::Rc::ptr_eq(a, b))
+            }
+            None => true,
+        };
+        if stale {
+            // new weight set: pack the quantized subset once (packing
+            // reads master f32s through `code_of`, never the decode
+            // counter) and drop every slot — their caches were built
+            // against the old weights
+            let quantized = program.quantized();
+            let params: Vec<CachedParam> = param_specs
+                .iter()
+                .zip(&anchors)
+                .map(|(s, a)| {
+                    let w = a.as_f32();
+                    match fmt {
+                        Some(fmt) if quantized.iter().any(|q| q == &s.name) => {
+                            CachedParam::Packed(PackedWeights::pack_rtn_pool(&w, fmt, &self.pool))
+                        }
+                        _ => CachedParam::Dense(w),
+                    }
+                })
+                .collect();
+            cache_map.insert(
+                entry.name.clone(),
+                DecodeCache { anchors, params, slots: HashMap::new() },
+            );
+        }
+        let cache = cache_map.get_mut(&entry.name).expect("decode cache just ensured");
+        let views: Vec<ParamView<'_>> = cache
+            .params
+            .iter()
+            .map(|p| match p {
+                CachedParam::Dense(w) => ParamView::Dense(w),
+                CachedParam::Packed(pk) => ParamView::Packed(pk),
+            })
+            .collect();
+
+        let logits = if pos == 0 {
+            if len == 0 {
+                bail!("{}: prefill of zero tokens", entry.name);
+            }
+            let mut state = program.make_decode_state()?;
+            let logits = program.prefill(&views, &tokens[..len], state.as_mut(), &self.pool)?;
+            cache.slots.insert(slot, DecodeSlot { state, len });
+            logits
+        } else {
+            if len != 1 {
+                bail!("{}: incremental step wants len=1, got {len}", entry.name);
+            }
+            let sl = cache
+                .slots
+                .get_mut(&slot)
+                .ok_or_else(|| anyhow!("{}: slot {slot} has no prefilled sequence", entry.name))?;
+            if pos != sl.len {
+                bail!("{}: slot {slot} is at position {}, not {pos}", entry.name, sl.len);
+            }
+            let logits = program.decode_step(&views, tokens[0], sl.state.as_mut(), &self.pool)?;
+            sl.len += 1;
+            logits
+        };
+        Ok(vec![value(HostTensor::from_f32(&[spec.vocab], logits))])
+    }
 }
 
 impl Executor for NativeEngine {
@@ -570,6 +718,7 @@ impl Executor for NativeEngine {
             Program::Eval { model } => self.run_eval(entry, model, args),
             Program::EvalQuant { model, fmt } => self.run_eval_quant(entry, model, fmt, args),
             Program::Init { model } => self.run_init(entry, model, args),
+            Program::Decode { model, fmt } => self.run_decode(entry, model, fmt.as_ref(), args),
         }?;
         let mut t = self.timings.borrow_mut();
         let slot = t.entry(entry.name.clone()).or_insert((0, 0.0));
@@ -720,6 +869,51 @@ fn eval_quant_entry(m: &NativeModel, fmt: &QuantFormat) -> ArtifactEntry {
     }
 }
 
+/// The autoregressive decode entry, `decode_{model}_{fmt}`: params +
+/// a `[max_seq]` token buffer (prompt on prefill, the single appended
+/// token on steps; trailing positions are padding) + `ctl = [slot,
+/// pos, len]`, returning `[vocab]` next-token logits. Like the eval_q
+/// entries, callers ship FP32 master weights — the cast-and-pack is
+/// the engine's, so the packed representation never crosses the API.
+fn decode_entry(m: &NativeModel, fmt: Option<&QuantFormat>) -> ArtifactEntry {
+    let program = &*m.program;
+    let spec = program.decode_spec().expect("decode entries need a decode_spec");
+    let mut inputs = program.param_specs();
+    inputs.push(TensorSpec {
+        name: "tokens".to_string(),
+        shape: vec![spec.max_seq],
+        dtype: DType::I32,
+        role: Role::Data,
+    });
+    inputs.push(TensorSpec {
+        name: "ctl".to_string(),
+        shape: vec![3],
+        dtype: DType::I32,
+        role: Role::Data,
+    });
+    let fmt_name = fmt.map(|f| f.name.clone()).unwrap_or_else(|| "none".to_string());
+    let name = format!("decode_{}_{}", program.name(), fmt_name);
+    ArtifactEntry {
+        file: PathBuf::from(format!("native:{name}")),
+        name,
+        inputs,
+        outputs: vec![TensorSpec {
+            name: "logits".to_string(),
+            shape: vec![spec.vocab],
+            dtype: DType::F32,
+            role: Role::Metric,
+        }],
+        kind: "decode".to_string(),
+        model_name: program.name(),
+        method: String::new(),
+        format: fmt_name,
+        steps_per_call: 0,
+        eval_batches: 0,
+        optimizer: String::new(),
+        quantized: program.quantized(),
+    }
+}
+
 fn init_entry(m: &NativeModel) -> ArtifactEntry {
     let program = &*m.program;
     let name = format!("init_{}", program.name());
@@ -805,6 +999,85 @@ mod tests {
         let ed = m.find_eval("lm-150m-sim").unwrap();
         let dspec = ed.inputs.iter().find(|s| s.role == Role::Data).unwrap();
         assert_eq!(dspec.shape, vec![8, 4, 129]);
+        // decode entries: every LM preset, dense + all quant formats
+        // (including the per-block one); testbeds have none
+        for fmt in ["none", "int4", "int8", "fp4", "int4@64"] {
+            let dec = m.find_decode("lm-tiny", fmt).expect(fmt);
+            assert_eq!(dec.kind, "decode");
+            assert_eq!(dec.outputs[0].shape, vec![256]);
+            let toks = dec.inputs.iter().find(|s| s.name == "tokens").unwrap();
+            assert_eq!(toks.shape, vec![64]);
+        }
+        assert!(m.find_decode("linreg_d256", "none").is_none());
+        assert!(m.find_eval_quant("lm-tiny", "int4@64").is_some());
+    }
+
+    /// The decode entry's slot protocol end to end: prefill + N
+    /// incremental steps give bitwise the logits of a fresh full
+    /// prefill at every position, slot misuse errors instead of
+    /// corrupting caches, and swapping the weight tensors invalidates
+    /// the live slots.
+    #[test]
+    fn decode_entry_matches_fresh_prefill_bitwise() {
+        let cfg = LmConfig { vocab: 17, d_model: 8, n_layers: 1, n_heads: 2, seq_len: 8 };
+        let prog = LmProgram::new("lm-dec-entry", cfg, 1, 1).unwrap();
+        let eng = NativeEngine::with_models(&[NativeModel {
+            program: Arc::new(prog),
+            opt: OptKind::Adam,
+            steps_per_call: 1,
+        }]);
+        let m = eng.manifest();
+        let init = m.find_init("lm-dec-entry").unwrap();
+        let params = eng.call(init, &zero_args(init)).unwrap();
+        let t = 8usize;
+        let mut rng = Rng::new(17);
+        let toks: Vec<i32> = (0..t).map(|_| rng.below(17) as i32).collect();
+        for fmt in ["none", "int4", "int4@64", "fp4"] {
+            let dec = m.find_decode("lm-dec-entry", fmt).expect(fmt).clone();
+            let mk_args = |slot: i32, pos: usize, len: usize, window: &[i32]| -> Vec<Value> {
+                let mut args = zero_args(&dec);
+                for (spec, p) in dec.input_specs(Role::Param).iter().zip(&params) {
+                    args[dec.input_index(&spec.name).unwrap()] = p.clone();
+                }
+                let mut padded = window.to_vec();
+                padded.resize(t, 0);
+                args[dec.input_index("tokens").unwrap()] =
+                    value(HostTensor::from_i32(&[t], padded));
+                args[dec.input_index("ctl").unwrap()] =
+                    value(HostTensor::from_i32(&[3], vec![slot, pos as i32, len as i32]));
+                args
+            };
+            let call = |slot: i32, pos: usize, len: usize, window: &[i32]| -> Vec<f32> {
+                eng.call(&dec, &mk_args(slot, pos, len, window)).unwrap()[0].as_f32()
+            };
+            let mut inc = call(5, 0, 3, &toks[..3]);
+            for p in 3..t {
+                let fresh = call(9, 0, p, &toks[..p]);
+                assert_eq!(
+                    inc.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                    fresh.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                    "{fmt}: pos {p}"
+                );
+                inc = call(5, p, 1, &[toks[p]]);
+            }
+            // misuse: unknown slot, stale position, bad step length
+            assert!(eng.call(&dec, &mk_args(42, 3, 1, &[1])).is_err());
+            assert!(eng.call(&dec, &mk_args(5, 2, 1, &[1])).is_err());
+            assert!(eng.call(&dec, &mk_args(5, t, 2, &toks[..2])).is_err());
+            assert!(eng.call(&dec, &mk_args(5, 0, 0, &[])).is_err());
+            // swapping weights drops live slots: the next step errors
+            let fresh_params = {
+                let mut args = zero_args(init);
+                args[init.input_index("key").unwrap()] =
+                    value(HostTensor::from_u32(&[2], vec![5, 6]));
+                eng.call(init, &args).unwrap()
+            };
+            let mut args = mk_args(5, t - 1, 1, &[toks[0]]);
+            for (spec, p) in dec.input_specs(Role::Param).iter().zip(&fresh_params) {
+                args[dec.input_index(&spec.name).unwrap()] = p.clone();
+            }
+            assert!(eng.call(&dec, &args).is_err(), "{fmt}: slot survived a weight swap");
+        }
     }
 
     /// The engine-side packed eval entry must give bitwise the loss of

@@ -89,6 +89,15 @@ pub enum ParamView<'a> {
     Packed(&'a PackedWeights),
 }
 
+/// Geometry of a program's autoregressive decode surface.
+#[derive(Clone, Copy, Debug)]
+pub struct DecodeSpec {
+    /// logits width per decode step
+    pub vocab: usize,
+    /// maximum cached positions per sequence (prompt + generation)
+    pub max_seq: usize,
+}
+
 /// Look up a static-role input by name.
 pub fn static_slice<'a>(statics: &'a [(String, Vec<f32>)], name: &str) -> Result<&'a [f32]> {
     statics
@@ -207,6 +216,46 @@ pub trait NativeProgram: Send + Sync {
             })
             .collect();
         self.val_loss(&dense, ctx, scratch)
+    }
+
+    /// Geometry of the autoregressive decode surface, or `None` for
+    /// programs with no generation path (the synthetic testbeds). The
+    /// engine registers `decode_*` entries only when this is `Some`.
+    fn decode_spec(&self) -> Option<DecodeSpec> {
+        None
+    }
+
+    /// Fresh per-sequence decode state (KV caches + step buffers); the
+    /// engine owns one per live sequence slot and hands it back to
+    /// [`NativeProgram::prefill`]/[`NativeProgram::decode_step`].
+    fn make_decode_state(&self) -> Result<Box<dyn Any>> {
+        bail!("{}: program has no decode path", self.name())
+    }
+
+    /// Ingest a prompt into the decode state and return the logits at
+    /// its last position. Params may arrive packed (the quantized
+    /// serving path) — programs with fused kernels consume them in
+    /// place.
+    fn prefill(
+        &self,
+        _params: &[ParamView<'_>],
+        _tokens: &[i32],
+        _state: &mut dyn Any,
+        _pool: &Pool,
+    ) -> Result<Vec<f32>> {
+        bail!("{}: program has no decode path", self.name())
+    }
+
+    /// Append one token to the cached sequence and return the
+    /// next-token logits.
+    fn decode_step(
+        &self,
+        _params: &[ParamView<'_>],
+        _token: i32,
+        _state: &mut dyn Any,
+        _pool: &Pool,
+    ) -> Result<Vec<f32>> {
+        bail!("{}: program has no decode path", self.name())
     }
 }
 

@@ -31,7 +31,7 @@ use std::any::Any;
 use std::cell::RefCell;
 use std::ops::Range;
 
-use super::program::{EvalCtx, NativeProgram, ParamView, StepCtx};
+use super::program::{DecodeSpec, EvalCtx, NativeProgram, ParamView, StepCtx};
 
 /// Rows per parallel task in the row-parallel kernels — a fixed
 /// constant (never derived from the thread count), per the DESIGN.md
@@ -235,8 +235,27 @@ impl LmProgram {
         s: &mut LmScratch,
         pool: &Pool,
     ) -> Result<()> {
+        self.forward_bt(ws, tokens, self.batch, self.cfg.seq_len, s, pool)
+    }
+
+    /// The forward body at explicit batch/length `(b, t)` with
+    /// `t <= seq_len` — the training path runs it at the preset
+    /// geometry; decode prefill runs it at `(1, prompt_len)`. Every
+    /// kernel sums ascending over depth and row `p` of causal
+    /// attention reads only rows `<= p`, so row `p` of the outputs is
+    /// a pure function of tokens `0..=p` — bitwise independent of `b`,
+    /// `t` and the trailing tokens. That row-stability is what makes
+    /// KV-cache decode bit-equal to full recompute.
+    fn forward_bt(
+        &self,
+        ws: &[WRef<'_>],
+        tokens: &[i32],
+        b: usize,
+        t: usize,
+        s: &mut LmScratch,
+        pool: &Pool,
+    ) -> Result<()> {
         let cfg = &self.cfg;
-        let (b, t) = (self.batch, cfg.seq_len);
         let (d, f, v) = (cfg.d_model, cfg.ffn_dim(), cfg.vocab);
         let (nh, hd) = (cfg.n_heads, cfg.head_dim());
         let m = b * t;
@@ -427,6 +446,234 @@ impl LmProgram {
         self.forward(&refs, tokens, &mut s, pool)?;
         Ok(s.logits)
     }
+
+    /// Prompt ingestion for one sequence: run the blocked forward at
+    /// `(b=1, t=len)`, copy the rotated-K / raw-V rows into the decode
+    /// state's caches, and return the last position's logits. Row `p`
+    /// of every activation is bitwise what a longer forward computes
+    /// (see [`LmProgram::forward_bt`]), so the cache seeds incremental
+    /// decode without any numeric seam.
+    fn prefill_refs(
+        &self,
+        ws: &[WRef<'_>],
+        tokens: &[i32],
+        st: &mut LmDecodeState,
+        pool: &Pool,
+    ) -> Result<Vec<f32>> {
+        let cfg = &self.cfg;
+        let (d, v) = (cfg.d_model, cfg.vocab);
+        let len = tokens.len();
+        if len == 0 || len > cfg.seq_len {
+            bail!("{}: prompt of {len} tokens (want 1..={})", self.name, cfg.seq_len);
+        }
+        // forward_bt consumes a [1, len+1] batch; the appended
+        // next-token target is a dummy that only feeds `s.tgt`, which
+        // decode never reads.
+        let mut seq = Vec::with_capacity(len + 1);
+        seq.extend_from_slice(tokens);
+        seq.push(0);
+        let mut s = LmScratch::alloc_bt(cfg, 1, len);
+        self.forward_bt(ws, &seq, 1, len, &mut s, pool)?;
+        for l in 0..cfg.n_layers {
+            st.kc[l][..len * d].copy_from_slice(&s.layers[l].k[..len * d]);
+            st.vc[l][..len * d].copy_from_slice(&s.layers[l].v[..len * d]);
+        }
+        st.len = len;
+        Ok(s.logits[(len - 1) * v..len * v].to_vec())
+    }
+
+    /// One incremental decode step: append `token` at position
+    /// `st.len`, extend the KV caches, and return the next-token
+    /// logits. Every matmul runs at `m = 1` through [`mm`] — on the
+    /// quantized path that is the fused packed GEMV, so decode reads
+    /// nibble codes and never materializes a dense `wq`. Each kernel
+    /// application is the single-row restriction of the blocked
+    /// forward's (per-row ops, m-independent GEMV rows, causal
+    /// attention over cached rows), so the logits are bit-identical to
+    /// a full recompute over the extended sequence.
+    fn decode_step_refs(
+        &self,
+        ws: &[WRef<'_>],
+        token: i32,
+        st: &mut LmDecodeState,
+        pool: &Pool,
+    ) -> Result<Vec<f32>> {
+        let cfg = &self.cfg;
+        let (d, f, v) = (cfg.d_model, cfg.ffn_dim(), cfg.vocab);
+        let (nh, hd) = (cfg.n_heads, cfg.head_dim());
+        let half = hd / 2;
+        let pos = st.len;
+        if pos == 0 {
+            bail!("{}: decode_step before prefill", self.name);
+        }
+        if pos >= cfg.seq_len {
+            bail!("{}: context full at {} tokens", self.name, cfg.seq_len);
+        }
+        if token < 0 || token as usize >= v {
+            bail!("{}: token out of range for vocab {v}", self.name);
+        }
+        // the RoPE table row at `pos` is the entire table of a
+        // (b=1, t=1) problem, so the full-seq kernel rotates this one
+        // row with bit-identical math
+        let cos_p = &st.cos[pos * half..(pos + 1) * half];
+        let sin_p = &st.sin[pos * half..(pos + 1) * half];
+        let tk = token as usize;
+        st.x.copy_from_slice(&ws[P_EMBED].dense()[tk * d..(tk + 1) * d]);
+        for l in 0..cfg.n_layers {
+            let base = p_layer(l, 0);
+            rms_r(&st.x, &mut st.r, d, pool);
+            rmsnorm_apply(&st.x, ws[base + L_NORM_ATTN].dense(), &st.r, &mut st.xn, d, pool);
+            mm(&st.xn, &ws[base + L_ATTN_WQ], &mut st.q, 1, d, d, pool);
+            rope_apply(&mut st.q, cos_p, sin_p, 1, 1, nh, hd, 1.0, pool);
+            {
+                let krow = &mut st.kc[l][pos * d..(pos + 1) * d];
+                mm(&st.xn, &ws[base + L_ATTN_WK], krow, 1, d, d, pool);
+                rope_apply(krow, cos_p, sin_p, 1, 1, nh, hd, 1.0, pool);
+            }
+            mm(&st.xn, &ws[base + L_ATTN_WV], &mut st.vc[l][pos * d..(pos + 1) * d], 1, d, d, pool);
+            decode_attn(&st.q, &st.kc[l], &st.vc[l], &mut st.probs, &mut st.o, pos, nh, hd);
+            mm(&st.o, &ws[base + L_ATTN_WO], &mut st.tmp, 1, d, d, pool);
+            add_rows(&st.x, &st.tmp, &mut st.h, pool);
+            rms_r(&st.h, &mut st.r, d, pool);
+            rmsnorm_apply(&st.h, ws[base + L_NORM_MLP].dense(), &st.r, &mut st.xn, d, pool);
+            mm(&st.xn, &ws[base + L_MLP_WGATE], &mut st.gpre, 1, d, f, pool);
+            mm(&st.xn, &ws[base + L_MLP_WUP], &mut st.u, 1, d, f, pool);
+            swiglu_fwd(&st.gpre, &st.u, &mut st.gu, pool);
+            mm(&st.gu, &ws[base + L_MLP_WDOWN], &mut st.tmp, 1, f, d, pool);
+            add_rows(&st.h, &st.tmp, &mut st.x, pool);
+        }
+        rms_r(&st.x, &mut st.r, d, pool);
+        rmsnorm_apply(&st.x, ws[self.p_norm_final()].dense(), &st.r, &mut st.xn, d, pool);
+        mm(&st.xn, &ws[self.p_lm_head()], &mut st.logits, 1, d, v, pool);
+        st.len = pos + 1;
+        Ok(st.logits.clone())
+    }
+}
+
+/// Single-query causal attention against the KV cache: row `pos` of
+/// [`attn_probs`] + [`attn_mix`] with the identical per-head
+/// score/softmax/mix summation orders, run serially (one row of work
+/// — far below [`PAR_MIN`]). The tier is hoisted exactly as in the
+/// blocked kernels, so decode attention is bitwise the full-recompute
+/// row at every SIMD tier and thread count.
+fn decode_attn(
+    q: &[f32],
+    kc: &[f32],
+    vc: &[f32],
+    probs: &mut [f32],
+    o: &mut [f32],
+    pos: usize,
+    nh: usize,
+    hd: usize,
+) {
+    let d = nh * hd;
+    let scale = 1.0 / (hd as f32).sqrt();
+    let tier = active_tier();
+    o.fill(0.0);
+    for hi in 0..nh {
+        let qrow = &q[hi * hd..(hi + 1) * hd];
+        let mut mx = f32::NEG_INFINITY;
+        for si in 0..=pos {
+            let krow = &kc[si * d + hi * hd..si * d + hi * hd + hd];
+            let sc = dot_lanes_tier(tier, qrow, krow) * scale;
+            probs[si] = sc;
+            if sc > mx {
+                mx = sc;
+            }
+        }
+        let mut z = 0.0f32;
+        for si in 0..=pos {
+            let e = (probs[si] - mx).exp();
+            probs[si] = e;
+            z += e;
+        }
+        let inv = 1.0 / z;
+        for p in probs[..=pos].iter_mut() {
+            *p *= inv;
+        }
+        let osub = &mut o[hi * hd..(hi + 1) * hd];
+        for si in 0..=pos {
+            let w = probs[si];
+            let vrow = &vc[si * d + hi * hd..si * d + hi * hd + hd];
+            for (ov, &vv) in osub.iter_mut().zip(vrow) {
+                *ov += w * vv;
+            }
+        }
+    }
+}
+
+/// Per-sequence KV-cache decode state: rotated-K / raw-V rows for every
+/// generated position plus the `m = 1` activation buffers one decode
+/// step needs. Owned by the engine's decode slot map (one per live
+/// sequence), never shared across sequences.
+pub struct LmDecodeState {
+    /// tokens cached so far; the next step appends at this position
+    len: usize,
+    /// per-layer caches, `[seq_len, d_model]` rows (K rows are stored
+    /// *rotated*, exactly as the blocked forward leaves `lay.k`)
+    kc: Vec<Vec<f32>>,
+    vc: Vec<Vec<f32>>,
+    /// full-length RoPE tables `[seq_len, head_dim/2]`
+    cos: Vec<f32>,
+    sin: Vec<f32>,
+    x: Vec<f32>,
+    h: Vec<f32>,
+    xn: Vec<f32>,
+    r: Vec<f32>,
+    q: Vec<f32>,
+    o: Vec<f32>,
+    probs: Vec<f32>,
+    tmp: Vec<f32>,
+    gpre: Vec<f32>,
+    u: Vec<f32>,
+    gu: Vec<f32>,
+    logits: Vec<f32>,
+}
+
+impl LmDecodeState {
+    fn alloc(cfg: &LmConfig) -> LmDecodeState {
+        let (t, d, f, v) = (cfg.seq_len, cfg.d_model, cfg.ffn_dim(), cfg.vocab);
+        let half = cfg.head_dim() / 2;
+        // same f64 angle math as LmScratch::alloc_bt, of which this
+        // full-length table is the elementwise superset
+        let (mut cos, mut sin) = (vec![0.0f32; t * half], vec![0.0f32; t * half]);
+        for ti in 0..t {
+            for j in 0..half {
+                let freq = (10000.0f64).powf(-(j as f64) / half as f64);
+                let ang = ti as f64 * freq;
+                cos[ti * half + j] = ang.cos() as f32;
+                sin[ti * half + j] = ang.sin() as f32;
+            }
+        }
+        LmDecodeState {
+            len: 0,
+            kc: (0..cfg.n_layers).map(|_| vec![0.0; t * d]).collect(),
+            vc: (0..cfg.n_layers).map(|_| vec![0.0; t * d]).collect(),
+            cos,
+            sin,
+            x: vec![0.0; d],
+            h: vec![0.0; d],
+            xn: vec![0.0; d],
+            r: vec![0.0; 1],
+            q: vec![0.0; d],
+            o: vec![0.0; d],
+            probs: vec![0.0; t],
+            tmp: vec![0.0; d],
+            gpre: vec![0.0; f],
+            u: vec![0.0; f],
+            gu: vec![0.0; f],
+            logits: vec![0.0; v],
+        }
+    }
+
+    /// Number of positions currently cached.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
 }
 
 impl NativeProgram for LmProgram {
@@ -575,6 +822,50 @@ impl NativeProgram for LmProgram {
             .collect();
         self.val_loss_refs(&refs, ctx, scratch)
     }
+
+    fn decode_spec(&self) -> Option<DecodeSpec> {
+        Some(DecodeSpec { vocab: self.cfg.vocab, max_seq: self.cfg.seq_len })
+    }
+
+    fn make_decode_state(&self) -> Result<Box<dyn Any>> {
+        Ok(Box::new(LmDecodeState::alloc(&self.cfg)))
+    }
+
+    fn prefill(
+        &self,
+        params: &[ParamView<'_>],
+        tokens: &[i32],
+        state: &mut dyn Any,
+        pool: &Pool,
+    ) -> Result<Vec<f32>> {
+        let st = state.downcast_mut::<LmDecodeState>().expect("lm decode state");
+        let refs: Vec<WRef<'_>> = params
+            .iter()
+            .map(|p| match p {
+                ParamView::Dense(w) => WRef::Dense(w),
+                ParamView::Packed(p) => WRef::Packed(p),
+            })
+            .collect();
+        self.prefill_refs(&refs, tokens, st, pool)
+    }
+
+    fn decode_step(
+        &self,
+        params: &[ParamView<'_>],
+        token: i32,
+        state: &mut dyn Any,
+        pool: &Pool,
+    ) -> Result<Vec<f32>> {
+        let st = state.downcast_mut::<LmDecodeState>().expect("lm decode state");
+        let refs: Vec<WRef<'_>> = params
+            .iter()
+            .map(|p| match p {
+                ParamView::Dense(w) => WRef::Dense(w),
+                ParamView::Packed(p) => WRef::Packed(p),
+            })
+            .collect();
+        self.decode_step_refs(&refs, token, st, pool)
+    }
 }
 
 /// Per-layer saved activations for the backward pass.
@@ -626,7 +917,14 @@ struct LmScratch {
 
 impl LmScratch {
     fn alloc(cfg: &LmConfig, batch: usize) -> LmScratch {
-        let (t, d, f, v) = (cfg.seq_len, cfg.d_model, cfg.ffn_dim(), cfg.vocab);
+        Self::alloc_bt(cfg, batch, cfg.seq_len)
+    }
+
+    /// Scratch for an explicit `(batch, t)` geometry — decode prefill
+    /// allocates at `(1, prompt_len)` so short prompts don't pay the
+    /// full `seq_len^2` attention scratch.
+    fn alloc_bt(cfg: &LmConfig, batch: usize, t: usize) -> LmScratch {
+        let (d, f, v) = (cfg.d_model, cfg.ffn_dim(), cfg.vocab);
         let (nh, hd) = (cfg.n_heads, cfg.head_dim());
         let half = hd / 2;
         let m = batch * t;
@@ -819,9 +1117,22 @@ fn matmul_packed_tile_body(
                         }
                     }
                     None => {
-                        for (jj, wv) in wrow[..nb].iter_mut().enumerate() {
+                        // per-block scales: walk the stripe in runs
+                        // that share one block, hoisting the scale
+                        // lookup out of the inner dequant loop. The
+                        // per-element multiply `lut[c] * s` is
+                        // unchanged, so outputs stay bit-identical to
+                        // the unhoisted form.
+                        let bs = w.block_size();
+                        let mut jj = 0;
+                        while jj < nb {
                             let idx = base + jj;
-                            *wv = lut[w.code_at(idx) as usize] * w.scale_of(idx);
+                            let run = if bs == 0 { nb - jj } else { (bs - idx % bs).min(nb - jj) };
+                            let s = w.scale_of(idx);
+                            for (off, wv) in wrow[jj..jj + run].iter_mut().enumerate() {
+                                *wv = lut[w.code_at(idx + off) as usize] * s;
+                            }
+                            jj += run;
                         }
                     }
                 }
@@ -1935,5 +2246,126 @@ mod tests {
             assert_eq!(dx1, dx, "matmul_dx differs at {threads} threads");
             assert_eq!(dw1, dw, "matmul_dw differs at {threads} threads");
         }
+    }
+
+    // -- KV-cache decode ----------------------------------------------------
+
+    fn bits(v: &[f32]) -> Vec<u32> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    fn decode_prog() -> LmProgram {
+        LmProgram::new(
+            "lm-dec",
+            LmConfig { vocab: 11, d_model: 8, n_layers: 2, n_heads: 2, seq_len: 8 },
+            1,
+            1,
+        )
+        .unwrap()
+    }
+
+    /// The KV-decode contract: incremental decode logits are bitwise
+    /// the full-recompute `forward_logits` row at every position and
+    /// every thread count, and prefill at any prefix length agrees.
+    #[test]
+    fn kv_decode_matches_full_forward_bitwise() {
+        let prog = decode_prog();
+        let params = hash_params(&prog, 41);
+        let tokens = tokens_for(&prog, 42); // [1, T+1]
+        let (t, v) = (prog.cfg.seq_len, prog.cfg.vocab);
+        for pool in [Pool::serial(), Pool::new(3)] {
+            let full = prog.forward_logits(&params, &tokens, &pool).unwrap();
+            let refs: Vec<WRef<'_>> = params.iter().map(|w| WRef::Dense(w)).collect();
+            let mut st = LmDecodeState::alloc(&prog.cfg);
+            let mut got = prog.prefill_refs(&refs, &tokens[..1], &mut st, &pool).unwrap();
+            for p in 1..t {
+                assert_eq!(bits(&got), bits(&full[(p - 1) * v..p * v]), "pos {}", p - 1);
+                got = prog.decode_step_refs(&refs, tokens[p], &mut st, &pool).unwrap();
+            }
+            assert_eq!(bits(&got), bits(&full[(t - 1) * v..t * v]), "pos {}", t - 1);
+            assert_eq!(st.len(), t);
+            // fresh full prefill at every prefix length agrees too
+            for p in 1..=t {
+                let mut st2 = LmDecodeState::alloc(&prog.cfg);
+                let lg = prog.prefill_refs(&refs, &tokens[..p], &mut st2, &pool).unwrap();
+                assert_eq!(bits(&lg), bits(&full[(p - 1) * v..p * v]), "prefix {p}");
+            }
+        }
+    }
+
+    /// Decode through packed weight refs (the fused GEMV path) is
+    /// bitwise the dense host-cast decode, for every format and both
+    /// scale granularities — prefill and every incremental step.
+    #[test]
+    fn kv_decode_packed_matches_dense_cast_bitwise() {
+        use crate::quant::{cast_rtn, QuantFormat};
+        let prog = decode_prog();
+        let params = hash_params(&prog, 43);
+        let tokens = tokens_for(&prog, 44);
+        let quantized = prog.quantized();
+        let specs = prog.param_specs();
+        let pool = Pool::new(2);
+        for name in ["int4", "int4@4", "int8", "fp4"] {
+            let fmt = QuantFormat::parse(name, 0).unwrap();
+            let mut cast_params = params.clone();
+            for (i, spec) in specs.iter().enumerate() {
+                if quantized.contains(&spec.name) {
+                    cast_rtn(&mut cast_params[i], &fmt);
+                }
+            }
+            let dense_refs: Vec<WRef<'_>> = cast_params.iter().map(|w| WRef::Dense(w)).collect();
+            let packs: Vec<Option<PackedWeights>> = specs
+                .iter()
+                .enumerate()
+                .map(|(i, spec)| {
+                    quantized
+                        .contains(&spec.name)
+                        .then(|| PackedWeights::pack_rtn(&params[i], &fmt))
+                })
+                .collect();
+            let packed_refs: Vec<WRef<'_>> = packs
+                .iter()
+                .zip(&params)
+                .map(|(p, w)| match p {
+                    Some(p) => WRef::Packed(p),
+                    None => WRef::Dense(w),
+                })
+                .collect();
+            let mut sd = LmDecodeState::alloc(&prog.cfg);
+            let mut sp = LmDecodeState::alloc(&prog.cfg);
+            let ld = prog.prefill_refs(&dense_refs, &tokens[..3], &mut sd, &pool).unwrap();
+            let lp = prog.prefill_refs(&packed_refs, &tokens[..3], &mut sp, &pool).unwrap();
+            assert_eq!(bits(&ld), bits(&lp), "{name}: prefill");
+            for p in 3..prog.cfg.seq_len {
+                let ld = prog.decode_step_refs(&dense_refs, tokens[p], &mut sd, &pool).unwrap();
+                let lp = prog.decode_step_refs(&packed_refs, tokens[p], &mut sp, &pool).unwrap();
+                assert_eq!(bits(&ld), bits(&lp), "{name}: pos {p}");
+            }
+        }
+    }
+
+    /// Decode state misuse fails loudly instead of corrupting caches.
+    #[test]
+    fn decode_guards_reject_misuse() {
+        let prog = decode_prog();
+        let params = hash_params(&prog, 45);
+        let tokens = tokens_for(&prog, 46);
+        let refs: Vec<WRef<'_>> = params.iter().map(|w| WRef::Dense(w)).collect();
+        let pool = Pool::serial();
+        let mut st = LmDecodeState::alloc(&prog.cfg);
+        // step before prefill
+        assert!(prog.decode_step_refs(&refs, 0, &mut st, &pool).is_err());
+        // empty and over-long prompts
+        assert!(prog.prefill_refs(&refs, &[], &mut st, &pool).is_err());
+        let long = vec![0i32; prog.cfg.seq_len + 1];
+        assert!(prog.prefill_refs(&refs, &long, &mut st, &pool).is_err());
+        // fill the context, then one step past the end fails
+        prog.prefill_refs(&refs, &tokens[..prog.cfg.seq_len], &mut st, &pool).unwrap();
+        assert!(prog.decode_step_refs(&refs, 0, &mut st, &pool).is_err());
+        // out-of-vocab token
+        let mut st2 = LmDecodeState::alloc(&prog.cfg);
+        prog.prefill_refs(&refs, &tokens[..1], &mut st2, &pool).unwrap();
+        let bad = prog.cfg.vocab as i32;
+        assert!(prog.decode_step_refs(&refs, bad, &mut st2, &pool).is_err());
     }
 }

@@ -356,5 +356,25 @@ mod tests {
         let fused = s.eval_loss_quantized("int4", None).unwrap().expect("native eval_q entry");
         assert_eq!(fused.to_bits(), host.to_bits());
         assert!(s.eval_loss_quantized("int16", None).unwrap().is_none());
+
+        // per-block formats route through the fused path too: the
+        // packed per-block scales must reproduce the block-aware host
+        // cast bitwise (PR 8 satellite)
+        let fmt_b = QuantFormat::parse("int4@64", 0).unwrap();
+        let host_b = s
+            .eval_loss(None, &mut |spec, v| {
+                Ok(if quantized.contains(&spec.name) {
+                    let mut w = v.as_f32();
+                    cast_rtn(&mut w, &fmt_b);
+                    value(HostTensor::from_f32(&v.shape, w))
+                } else {
+                    v.clone()
+                })
+            })
+            .unwrap();
+        let fused_b =
+            s.eval_loss_quantized("int4@64", None).unwrap().expect("native int4@64 eval_q entry");
+        assert_eq!(fused_b.to_bits(), host_b.to_bits());
+        assert_ne!(fused_b.to_bits(), fused.to_bits(), "per-block scales changed nothing");
     }
 }

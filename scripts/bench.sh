@@ -1,10 +1,13 @@
 #!/usr/bin/env bash
 # Emit the per-PR BENCH_*.json throughput trajectories (ROADMAP): run
 # the micro benches from the repo root so the JSON artifacts land
-# there. Default: runtime_micro (train-step + RTN-eval hot-path rows)
-# and quant_micro (kernel tiers, pack/decode); `--all` adds exp_tables.
+# there. Default: runtime_micro (train-step + decode + RTN-eval
+# hot-path rows), quant_micro (kernel tiers, pack/decode), and the
+# serving bench (tokens/s + latency percentiles per decode format);
+# `--all` adds exp_tables.
 #
-#   scripts/bench.sh          # BENCH_runtime_micro.json, BENCH_quant_micro.json
+#   scripts/bench.sh          # BENCH_runtime_micro.json, BENCH_quant_micro.json,
+#                             # BENCH_serve.json
 #   scripts/bench.sh --all    # + BENCH_exp_tables.json
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -14,6 +17,14 @@ cargo bench --bench runtime_micro
 
 echo "== cargo bench --bench quant_micro =="
 cargo bench --bench quant_micro
+
+echo "== lotion-rs bench-serve (BENCH_serve.json) =="
+# end-to-end serving throughput: lm-tiny synthetic load across the
+# decode-format grid, engine pool + continuous batching (DESIGN.md §8)
+cargo build --release
+./target/release/lotion-rs bench-serve --backend native \
+    --model lm-tiny --engines 2 --max-batch 4 \
+    --requests 32 --prompt-len 8 --gen-len 24
 
 if [[ "${1:-}" == "--all" ]]; then
     echo "== cargo bench --bench exp_tables =="

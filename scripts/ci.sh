@@ -61,6 +61,25 @@ LOTION_THREADS=1 ./target/release/lotion-rs train --backend native \
     --set train.steps=8 --set eval.every=8 --set train.lambda=100 \
     --set train.lr=0.003 --out /tmp/lotion_ci_lm_t1
 
+echo "== serve smoke lane (lotion bench-serve, lm-tiny) =="
+# the serving engine end-to-end at the CLI surface (skip with
+# LOTION_CI_SERVE=0): a short continuous-batched generation run on
+# lm-tiny, dense + packed formats, default kernels and pinned-scalar —
+# exercises decode entries, the engine pool, and BENCH_serve.json
+# emission without depending on wall-clock numbers
+if [[ "${LOTION_CI_SERVE:-1}" == "1" ]]; then
+    ./target/release/lotion-rs bench-serve --backend native \
+        --model lm-tiny --formats none,int4,int4@64 \
+        --engines 2 --max-batch 2 --requests 6 --prompt-len 6 --gen-len 8 \
+        --out /tmp/lotion_ci_serve.json
+    LOTION_SIMD=scalar ./target/release/lotion-rs bench-serve --backend native \
+        --model lm-tiny --formats int4 \
+        --engines 1 --max-batch 2 --requests 4 --prompt-len 6 --gen-len 8 \
+        --out /tmp/lotion_ci_serve_scalar.json
+else
+    echo "LOTION_CI_SERVE=0; skipping serve smoke lane"
+fi
+
 echo "== cargo fmt --check =="
 if cargo fmt --version >/dev/null 2>&1; then
     cargo fmt --check
