@@ -13,7 +13,7 @@ use lotion::config::{RunConfig, Schedule};
 use lotion::coordinator::{DataSource, MetricsLogger, Trainer};
 use lotion::data::{ByteTokenizer, TokenBatcher, ZipfMarkovCorpus};
 use lotion::experiments::common::synth_statics;
-use lotion::runtime::native::{ModelSpec, NativeEngine, NativeModel, OptKind};
+use lotion::runtime::native::{EstSchedule, ModelSpec, NativeEngine, NativeModel, OptKind};
 use lotion::runtime::{Executor, Role};
 use std::path::Path;
 
@@ -82,6 +82,40 @@ fn main() {
     native_train_bench(&mut b, &engine, "linreg_d100000", "linreg/100k_params", 100_000);
     native_train_bench(&mut b, &engine, "linear2_d500_k2", "linear2/1k_params", 500);
     native_train_bench(&mut b, &engine, "linear2_d50000_k2", "linear2/100k_params", 50_000);
+
+    // Estimator dispatch (ISSUE 9): one fixed linreg chunk driven
+    // through three plug-ins — QAT's RTN cast, LOTION's Fisher
+    // penalty, and the annealed-noise cast with its per-step σ_t
+    // schedule — so the per-PR BENCH json tracks the trait layer's
+    // per-method cost on an identical workload.
+    {
+        let d = 100_000;
+        for method in ["qat", "lotion", "anneal"] {
+            let engine = NativeEngine::with_models(&[NativeModel::from_spec(
+                ModelSpec::LinReg { d, batch: 32 },
+                OptKind::Sgd,
+                8,
+            )]);
+            let mut cfg = RunConfig::default();
+            cfg.model = format!("linreg_d{d}");
+            cfg.method = method.into();
+            cfg.format = "int4".into();
+            cfg.steps = 1_000_000; // never reached; we call chunk() directly
+            cfg.lr = 0.05;
+            cfg.lambda = 1.0;
+            cfg.schedule = Schedule::Constant;
+            cfg.est_schedule = EstSchedule::Cosine;
+            cfg.est_sigma0 = 0.5;
+            let (statics, _, _) = synth_statics(d, 42);
+            let mut trainer =
+                Trainer::new(&engine, cfg, statics, DataSource::InGraph).expect("est trainer");
+            let k = trainer.steps_per_call() as f64;
+            let mut metrics = MetricsLogger::in_memory();
+            b.run_with_items(&format!("estimator_dispatch/{method}"), Some(k), &mut || {
+                trainer.chunk(&mut metrics).unwrap();
+            });
+        }
+    }
 
     // Thread-scaling entries (ISSUE 2): the same workloads pinned to
     // 1 / 2 / all worker threads, so the per-PR BENCH json tracks the

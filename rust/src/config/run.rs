@@ -2,6 +2,7 @@
 
 use super::toml::TomlDoc;
 use crate::quant::Rounding;
+use crate::runtime::native::estimator::{self, EstSchedule};
 use anyhow::{bail, Result};
 
 /// LR schedule selector (the coordinator computes per-step LRs; the AOT
@@ -53,6 +54,12 @@ pub struct RunConfig {
     /// env var, else 1 — serial). Sweep output is bit-identical at any
     /// value — a pure throughput knob (DESIGN.md §3).
     pub sweep_workers: usize,
+    /// estimator-schedule shape for scheduled methods (`[est] schedule`)
+    pub est_schedule: EstSchedule,
+    /// annealing noise width at step 0 (`[est] sigma0`, "anneal" only)
+    pub est_sigma0: f64,
+    /// gradient scale at step 0 (`[est] grad_scale`, "cge" only)
+    pub est_grad_scale: f64,
 }
 
 impl Default for RunConfig {
@@ -79,6 +86,9 @@ impl Default for RunConfig {
             ckpt_dir: None,
             threads: 0,
             sweep_workers: 0,
+            est_schedule: EstSchedule::Constant,
+            est_sigma0: 1.0,
+            est_grad_scale: 1.0,
         }
     }
 }
@@ -127,25 +137,44 @@ impl RunConfig {
             ckpt_dir: doc.get("train.ckpt_dir").and_then(|v| v.as_str().map(String::from)),
             threads: doc.usize_or("train.threads", 0),
             sweep_workers: doc.usize_or("sweep.workers", 0),
+            est_schedule: EstSchedule::parse(&doc.str_or("est.schedule", "constant"))?,
+            est_sigma0: doc.f64_or("est.sigma0", d.est_sigma0),
+            est_grad_scale: doc.f64_or("est.grad_scale", d.est_grad_scale),
         };
         cfg.validate()?;
         Ok(cfg)
     }
 
     pub fn validate(&self) -> Result<()> {
-        if !["ptq", "qat", "rat", "lotion"].contains(&self.method.as_str()) {
-            bail!("unknown method {:?}", self.method);
-        }
+        // registry-driven: an unknown method lists the known estimators
+        let est = estimator::parse(&self.method)?;
         if self.steps == 0 {
             bail!("train.steps must be > 0");
         }
         if self.lr <= 0.0 {
             bail!("train.lr must be > 0");
         }
-        if self.method != "ptq" && self.format == "none" {
+        if !est.formats().is_empty() && self.format == "none" {
             bail!("method {:?} requires a quantization format", self.method);
         }
+        if self.est_sigma0 < 0.0 {
+            bail!("est.sigma0 must be >= 0");
+        }
         Ok(())
+    }
+
+    /// Per-step schedule value for scheduled estimators: σ_t for
+    /// "anneal" (σ→0 annealing from `est.sigma0`), the gradient scale
+    /// for "cge", a plain decay factor otherwise. Pure function of the
+    /// step, so resumed runs recompute exactly what the uninterrupted
+    /// run saw.
+    pub fn est_sched_at(&self, step: usize) -> f64 {
+        let base = match self.method.as_str() {
+            "anneal" => self.est_sigma0,
+            "cge" => self.est_grad_scale,
+            _ => 1.0,
+        };
+        base * self.est_schedule.value_at(step, self.steps)
     }
 
     /// Per-step learning rate under the configured schedule.
@@ -196,6 +225,19 @@ impl RunConfig {
         for f in &self.eval_formats {
             key.push('|');
             key.push_str(f);
+        }
+        // estimator-schedule knobs join the key only when they differ
+        // from the defaults, so every digest computed before the
+        // estimator layer existed — including those inside old
+        // checkpoints — hashes exactly as it always did
+        let d = (EstSchedule::Constant, 1.0f64, 1.0f64);
+        if (self.est_schedule, self.est_sigma0, self.est_grad_scale) != d {
+            key.push_str(&format!(
+                "|est:{}:{:016x}:{:016x}",
+                self.est_schedule.name(),
+                self.est_sigma0.to_bits(),
+                self.est_grad_scale.to_bits()
+            ));
         }
         let mut h: u64 = 0xcbf29ce484222325;
         for b in key.as_bytes() {
@@ -292,7 +334,63 @@ mod tests {
     #[test]
     fn validation_catches_bad_method() {
         let doc = TomlDoc::parse("method = \"magic\"").unwrap();
+        let err = RunConfig::from_doc(&doc).unwrap_err().to_string();
+        // the error lists the known estimators (registry-driven)
+        assert!(err.contains("known estimators"), "{err}");
+        assert!(err.contains("anneal"), "{err}");
+    }
+
+    #[test]
+    fn est_knobs_from_doc() {
+        let doc = TomlDoc::parse(
+            "method = \"anneal\"\n[est]\nschedule = \"cosine\"\nsigma0 = 0.5\ngrad_scale = 2.0",
+        )
+        .unwrap();
+        let cfg = RunConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.est_schedule, EstSchedule::Cosine);
+        assert_eq!(cfg.est_sigma0, 0.5);
+        assert_eq!(cfg.est_grad_scale, 2.0);
+        assert!((cfg.est_sched_at(0) - 0.5).abs() < 1e-12, "sigma0 scales the schedule");
+        assert!(cfg.est_sched_at(cfg.steps).abs() < 1e-12, "cosine anneals to 0");
+        // defaults: constant schedule at unit scale
+        let d = RunConfig::default();
+        assert_eq!(d.est_schedule, EstSchedule::Constant);
+        assert_eq!(d.est_sched_at(0), 1.0);
+        assert_eq!(d.est_sched_at(d.steps), 1.0);
+        // cge routes through grad_scale, legacy methods stay at 1
+        let mut c = cfg.clone();
+        c.method = "cge".into();
+        assert_eq!(c.est_sched_at(0), 2.0);
+        c.method = "lotion".into();
+        assert_eq!(c.est_sched_at(0), 1.0);
+        // bad knobs fail loudly
+        let doc = TomlDoc::parse("[est]\nschedule = \"warp\"").unwrap();
+        let err = RunConfig::from_doc(&doc).unwrap_err().to_string();
+        assert!(err.contains("known schedules"), "{err}");
+        let doc = TomlDoc::parse("method = \"anneal\"\n[est]\nsigma0 = -1.0").unwrap();
         assert!(RunConfig::from_doc(&doc).is_err());
+    }
+
+    /// Default-valued estimator knobs must hash exactly as the
+    /// pre-estimator-layer digest did, so checkpoints from old runs
+    /// stay loadable; non-default knobs move the digest.
+    #[test]
+    fn est_knobs_are_digest_stable_for_old_configs() {
+        let base = RunConfig::default();
+        let d0 = base.digest();
+        // literal pin: the digest of the default config as the
+        // pre-estimator-layer code computed it — if this moves, every
+        // existing checkpoint refuses to resume
+        assert_eq!(d0, "b01037eef8a5832c");
+        let mut c = base.clone();
+        c.est_schedule = EstSchedule::Cosine;
+        assert_ne!(c.digest(), d0);
+        let mut c = base.clone();
+        c.est_sigma0 = 0.5;
+        assert_ne!(c.digest(), d0);
+        let mut c = base.clone();
+        c.est_grad_scale = 2.0;
+        assert_ne!(c.digest(), d0);
     }
 
     #[test]

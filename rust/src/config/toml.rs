@@ -256,6 +256,22 @@ block_size = 0
         assert!(d.set_override("no-equals").is_err());
     }
 
+    /// The estimator-schedule block rides the same grammar: `[est]`
+    /// keys land under `est.*` and `--set est.k=v` overrides them, so
+    /// `--method anneal --est-sigma0 0.5` round-trips through the doc.
+    #[test]
+    fn est_section_and_overrides() {
+        let mut d =
+            TomlDoc::parse("method = \"anneal\"\n[est]\nschedule = \"cosine\"\nsigma0 = 0.5")
+                .unwrap();
+        assert_eq!(d.str_or("est.schedule", "constant"), "cosine");
+        assert_eq!(d.f64_or("est.sigma0", 1.0), 0.5);
+        d.set_override("est.schedule=linear").unwrap();
+        d.set_override("est.grad_scale=2.0").unwrap();
+        assert_eq!(d.str_or("est.schedule", "constant"), "linear");
+        assert_eq!(d.f64_or("est.grad_scale", 1.0), 2.0);
+    }
+
     #[test]
     fn hash_inside_string() {
         let d = TomlDoc::parse(r##"k = "a#b" # real comment"##).unwrap();

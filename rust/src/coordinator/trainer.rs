@@ -108,9 +108,19 @@ impl<'e> Trainer<'e> {
             None
         };
         let key = self.rng.jax_key();
+        // scheduled estimators get their per-step σ_t / gradient scale
+        // as a pure function of the global step, so a resumed run
+        // recomputes exactly the values the uninterrupted one saw —
+        // no estimator state needs to live in the snapshot
+        let est_sched: Option<Vec<f32>> = self
+            .session
+            .train_entry()
+            .input_index("est_sched")
+            .map(|_| (0..k).map(|i| self.cfg.est_sched_at(self.step + i) as f32).collect());
         let out = self.session.train_chunk(ChunkInputs {
             lrs,
             lam_reg: self.cfg.lambda as f32,
+            est_sched,
             key,
             data,
         })?;
@@ -188,6 +198,12 @@ impl<'e> Trainer<'e> {
             ("method", Json::str(&self.cfg.method)),
             ("format", Json::str(&self.cfg.format)),
             ("config_digest", Json::str(&self.cfg.digest())),
+            // estimator schedule knobs, for human inspection: resume
+            // needs only the digest (which covers them when non-default)
+            // plus the step — schedule values are recomputed, not stored
+            ("est_schedule", Json::str(self.cfg.est_schedule.name())),
+            ("est_sigma0", Json::num(self.cfg.est_sigma0)),
+            ("est_grad_scale", Json::num(self.cfg.est_grad_scale)),
             ("trainer_rng", Json::str(&self.rng.encode_state())),
             ("eval_rng", Json::str(&eval.rng.encode_state())),
         ]);

@@ -1,0 +1,198 @@
+//! Estimator-family experiments riding the sharded [`SweepRunner`]
+//! (DESIGN.md §9): the two method families the pluggable estimator
+//! layer adds beyond the paper's four.
+//!
+//! * `est-equiv` — the LR-rescaling equivalence of Schoenbauer et al.
+//!   ("Custom Gradient Estimators are Straight-Through Estimators in
+//!   Disguise"): on an SGD task, a custom gradient estimator that
+//!   scales the quantized subset's gradients by a constant `c` is the
+//!   same algorithm as plain QAT at learning rate `c·lr`. The
+//!   experiment trains `cge(lr, c)` next to `qat(c·lr)` for several
+//!   `c` on identical data/init streams and tabulates the deviation of
+//!   their final quantized val losses — near-zero (f32 rounding only),
+//!   which is the paper's point.
+//! * `anneal` — additive noise annealing (Spallanzani et al.): QAT
+//!   next to `anneal` at several σ₀ and σ→0 schedule shapes on the
+//!   tiny LM, with the usual curves + final-loss table.
+//!
+//! Both run as one sweep grid each, so `--sweep-workers N` trains the
+//! legs concurrently on factory-spawned engines, bit-identical to the
+//! serial pass at any width.
+//!
+//! [`SweepRunner`]: crate::coordinator::sweep::SweepRunner
+
+use crate::config::{RunConfig, Schedule};
+use crate::coordinator::sweep::SweepPoint;
+use crate::coordinator::{DataSource, MetricsLogger};
+use crate::formats::csv::CsvWriter;
+use crate::runtime::native::estimator::EstSchedule;
+use crate::runtime::Executor;
+use crate::tensor::HostTensor;
+use anyhow::{anyhow, Result};
+use std::path::Path;
+
+use super::common::{scaled, synth_statics, write_curves, write_table, ExpCtx, TableRow};
+use super::lm_exps::make_batcher;
+
+/// Gradient scales for the equivalence grid; 1.0 is covered by the
+/// shared QAT baseline.
+const EQUIV_SCALES: [f64; 2] = [0.5, 2.0];
+
+/// `est-equiv` leg config: SGD linreg (the equivalence argument is an
+/// SGD identity; Adam's normalizer breaks it, which `exp anneal`'s LM
+/// legs do not rely on). Constant LR schedule, so `qat(c·lr)` scales
+/// every per-step LR exactly.
+fn equiv_cfg(label: &str, method: &str, lr: f64, grad_scale: f64, steps: usize) -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.name = format!("est_equiv_{label}");
+    cfg.model = "linreg_d256".into();
+    cfg.method = method.into();
+    cfg.format = "int4".into();
+    cfg.eval_formats = vec!["int4".into()];
+    cfg.steps = steps;
+    cfg.lr = lr;
+    cfg.lambda = 1.0;
+    cfg.eval_every = (steps / 8).max(8);
+    cfg.schedule = Schedule::Constant;
+    cfg.seed = 17;
+    cfg.est_schedule = EstSchedule::Constant;
+    cfg.est_grad_scale = grad_scale;
+    cfg
+}
+
+/// Schoenbauer et al.'s equivalence, measured: `cge(lr, c)` vs
+/// `qat(c·lr)` for each `c`, plus the shared QAT baseline.
+pub fn run_equiv(ctx: &ExpCtx<'_>, out_dir: &Path) -> Result<()> {
+    std::fs::create_dir_all(out_dir)?;
+    let steps = scaled(240);
+    let lr = 0.05;
+    let mut points = vec![SweepPoint::new("qat_base", equiv_cfg("qat_base", "qat", lr, 1.0, steps))
+        .with_metrics_path(out_dir.join("qat_base.jsonl"))];
+    for &c in &EQUIV_SCALES {
+        for (label, method, lr, scale) in [
+            (format!("cge_c{c}"), "cge", lr, c),
+            (format!("qat_lr_x{c}"), "qat", lr * c, 1.0),
+        ] {
+            points.push(
+                SweepPoint::new(label.clone(), equiv_cfg(&label, method, lr, scale, steps))
+                    .with_metrics_path(out_dir.join(format!("{label}.jsonl"))),
+            );
+        }
+    }
+    let inputs = |_: &dyn Executor,
+                  _: &RunConfig|
+     -> Result<(Vec<(String, HostTensor)>, DataSource)> {
+        let (statics, _, _) = synth_statics(256, 42);
+        Ok((statics, DataSource::InGraph))
+    };
+    let results = ctx.runner().run(points, "int4", "rtn", &inputs)?;
+    let loss_of = |label: &str| -> Result<f64> {
+        results
+            .iter()
+            .find(|r| r.label == label && !r.diverged)
+            .and_then(|r| r.metrics.final_eval("int4", "rtn"))
+            .ok_or_else(|| anyhow!("equivalence leg {label:?} produced no final eval"))
+    };
+
+    // the equivalence table: one row per c, with the relative deviation
+    // between the two runs that the Schoenbauer argument says coincide
+    let mut w = CsvWriter::create(
+        &out_dir.join("equiv.csv"),
+        &["grad_scale", "cge_loss", "qat_rescaled_loss", "rel_deviation"],
+    )?;
+    let mut text = format!(
+        "\n== est-equiv — cge(lr, c) vs qat(c*lr), linreg_d256/int4 ==\n\
+         {:<12} {:>14} {:>18} {:>14}\n",
+        "grad_scale", "cge loss", "qat(c*lr) loss", "rel. dev."
+    );
+    for &c in &EQUIV_SCALES {
+        let (a, b) = (loss_of(&format!("cge_c{c}"))?, loss_of(&format!("qat_lr_x{c}"))?);
+        let dev = (a - b).abs() / b.abs().max(f64::MIN_POSITIVE);
+        w.row(&[format!("{c}"), format!("{a:.8}"), format!("{b:.8}"), format!("{dev:.3e}")])?;
+        text.push_str(&format!("{c:<12} {a:>14.6} {b:>18.6} {dev:>14.3e}\n"));
+    }
+    text.push_str(&format!("(qat baseline at lr={lr}: {:.6})\n", loss_of("qat_base")?));
+    println!("{text}");
+    std::fs::write(out_dir.join("equiv.txt"), &text)?;
+
+    let labelled: Vec<(String, &MetricsLogger)> =
+        results.iter().map(|r| (r.label.clone(), &r.metrics)).collect();
+    write_curves(out_dir, &labelled)?;
+    Ok(())
+}
+
+/// `anneal` leg config: lm-tiny with a σ→0 schedule against the QAT
+/// baseline (σ ≡ 0), identical data/init streams.
+fn anneal_cfg(
+    label: &str,
+    method: &str,
+    sched: EstSchedule,
+    sigma0: f64,
+    steps: usize,
+) -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.name = format!("anneal_{label}");
+    cfg.model = "lm-tiny".into();
+    cfg.method = method.into();
+    cfg.format = "int4".into();
+    cfg.eval_formats = vec!["int4".into()];
+    cfg.steps = steps;
+    cfg.lr = 3e-3;
+    cfg.lambda = 1.0;
+    cfg.eval_every = (steps / 8).max(8);
+    cfg.schedule = Schedule::Cosine { warmup: steps / 20, final_frac: 0.1 };
+    cfg.seed = 17;
+    cfg.est_schedule = sched;
+    cfg.est_sigma0 = sigma0;
+    cfg
+}
+
+/// Additive-noise-annealing on the tiny LM: σ₀ × schedule-shape grid
+/// against the QAT baseline.
+pub fn run_anneal(ctx: &ExpCtx<'_>, out_dir: &Path) -> Result<()> {
+    std::fs::create_dir_all(out_dir)?;
+    let steps = scaled(96);
+    let legs: [(&str, &str, EstSchedule, f64); 4] = [
+        ("qat", "qat", EstSchedule::Constant, 0.0),
+        ("anneal_s0.5_cos", "anneal", EstSchedule::Cosine, 0.5),
+        ("anneal_s1_cos", "anneal", EstSchedule::Cosine, 1.0),
+        ("anneal_s1_lin", "anneal", EstSchedule::Linear, 1.0),
+    ];
+    let points: Vec<SweepPoint> = legs
+        .iter()
+        .map(|&(label, method, sched, sigma0)| {
+            SweepPoint::new(label, anneal_cfg(label, method, sched, sigma0, steps))
+                .with_metrics_path(out_dir.join(format!("{label}.jsonl")))
+        })
+        .collect();
+    let inputs = |engine: &dyn Executor,
+                  cfg: &RunConfig|
+     -> Result<(Vec<(String, HostTensor)>, DataSource)> {
+        Ok((vec![], DataSource::Tokens(make_batcher(&cfg.model, engine)?)))
+    };
+    let results = ctx.runner().run(points, "int4", "rtn", &inputs)?;
+
+    let mut rows: Vec<TableRow> = Vec::new();
+    let mut labelled: Vec<(String, &MetricsLogger)> = Vec::new();
+    for r in &results {
+        if r.diverged {
+            crate::warn_!("[{}] failed; omitting from curves/table", r.label);
+            continue;
+        }
+        for ro in ["rtn", "rr"] {
+            if let Some(v) = r.metrics.final_eval("int4", ro) {
+                rows.push(TableRow {
+                    method: r.label.clone(),
+                    metric: ro.to_uppercase(),
+                    format: "int4".into(),
+                    val_loss: v,
+                });
+            }
+        }
+        labelled.push((r.label.clone(), &r.metrics));
+    }
+    write_curves(out_dir, &labelled)?;
+    let title = "anneal — lm-tiny σ→0 annealing vs QAT, final quantized val CE";
+    write_table(out_dir, title, &rows)?;
+    Ok(())
+}

@@ -90,8 +90,10 @@ pub const FIG12: LmExp = LmExp {
 };
 
 /// Corpus shared by every run in an experiment (identical data stream
-/// per method, as in the paper's controlled comparisons).
-fn make_batcher(model: &str, engine: &dyn Executor) -> Result<TokenBatcher> {
+/// per method, as in the paper's controlled comparisons). Shared with
+/// the estimator experiments (`est_exps`), which compare method
+/// families on the same token stream.
+pub(super) fn make_batcher(model: &str, engine: &dyn Executor) -> Result<TokenBatcher> {
     // read batch geometry from the eval artifact's data spec
     let eval = engine.manifest().find_eval(model)?;
     let data = eval

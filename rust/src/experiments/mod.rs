@@ -3,6 +3,7 @@
 
 pub mod ablation;
 pub mod common;
+pub mod est_exps;
 pub mod fig2;
 pub mod fig3;
 pub mod fig6;

@@ -9,15 +9,24 @@
 //! | fig10 | Fig. 1 / Fig. 10 (extended budget)   |
 //! | fig11 | Fig. 4 / Fig. 11 + Table 2 (300m)    |
 //! | fig12 | Fig. 5 / Fig. 12 (FP4)               |
-//! | all   | everything above                     |
+//!
+//! Beyond the paper's artifacts, the estimator layer's two extra
+//! method families get their own regenerators (DESIGN.md §9):
+//!
+//! | id        | artifact                                      |
+//! |-----------|-----------------------------------------------|
+//! | est-equiv | cge(lr, c) vs qat(c·lr) equivalence table     |
+//! | anneal    | σ→0 noise-annealing curves/table (lm-tiny)    |
+//! | all       | everything above                              |
 
 use anyhow::{bail, Result};
 use std::path::Path;
 
 use super::common::ExpCtx;
-use super::{ablation, fig2, fig3, fig6, lm_exps};
+use super::{ablation, est_exps, fig2, fig3, fig6, lm_exps};
 
-pub const ALL: [&str; 7] = ["fig6", "fig2", "fig3", "fig9", "fig10", "fig11", "fig12"];
+pub const ALL: [&str; 9] =
+    ["fig6", "fig2", "fig3", "fig9", "fig10", "fig11", "fig12", "est-equiv", "anneal"];
 
 /// Paper-artifact aliases accepted on the CLI.
 pub fn canonical(id: &str) -> &str {
@@ -40,6 +49,8 @@ fn required_models(id: &str) -> Vec<String> {
         "fig3" => fig3::KS.iter().map(|k| format!("linear2_d12000_k{k}")).collect(),
         "fig9" | "fig10" | "fig12" => vec!["lm-150m-sim".to_string()],
         "fig11" => vec!["lm-300m-sim".to_string()],
+        "est-equiv" => vec!["linreg_d256".to_string()],
+        "anneal" => vec!["lm-tiny".to_string()],
         _ => Vec::new(),
     }
 }
@@ -86,6 +97,8 @@ pub fn run(ctx: &ExpCtx<'_>, id: &str, results_dir: &Path) -> Result<()> {
         "fig10" => lm_exps::run_exp(ctx, &lm_exps::FIG10, &out),
         "fig11" => lm_exps::run_exp(ctx, &lm_exps::FIG11, &out),
         "fig12" => lm_exps::run_exp(ctx, &lm_exps::FIG12, &out),
+        "est-equiv" => est_exps::run_equiv(ctx, &out),
+        "anneal" => est_exps::run_anneal(ctx, &out),
         "ablation" => ablation::run(ctx.engine, &out),
         other => bail!("unknown experiment {other:?} (try: {:?} or all)", ALL),
     }

@@ -34,6 +34,9 @@ fn main() {
 
 const USAGE: &str = "usage: lotion-rs <train|exp|sweep|serve|bench-serve|inspect|data-report> [flags]
   train       --config <toml> [--set k=v ...] [--out results/<name>]
+              [--method ptq|qat|rat|lotion|cge|anneal]
+              [--est-schedule constant|linear|cosine] [--est-sigma0 s]
+              [--est-grad-scale c]
               [--ckpt-every N] [--ckpt-dir dir] [--resume <ckpt|dir>]
   exp         <id|all> [--results results] [--artifacts artifacts]
   sweep       --config <toml> --lrs 0.1,0.3 [--score-format int4] [--score-rounding rtn]
@@ -147,6 +150,18 @@ fn load_config(args: &Args) -> Result<RunConfig> {
     };
     for ov in args.flag_all("set") {
         doc.set_override(ov)?;
+    }
+    // estimator selection + schedule knobs as first-class flags; they
+    // apply after --set, so `--method anneal` beats `--set method=qat`
+    for (flag, key) in [
+        ("method", "method"),
+        ("est-schedule", "est.schedule"),
+        ("est-sigma0", "est.sigma0"),
+        ("est-grad-scale", "est.grad_scale"),
+    ] {
+        if let Some(v) = args.flag(flag) {
+            doc.set_override(&format!("{key}={v}"))?;
+        }
     }
     RunConfig::from_doc(&doc)
 }

@@ -28,7 +28,7 @@ pub mod rounding;
 pub use format::{QuantFormat, FP4_LEVELS};
 pub use packed::PackedWeights;
 pub use rounding::{
-    cast, cast_rr, cast_rr_seeded, cast_rtn, cast_rtn_pool, lotion_penalty,
+    cast, cast_anneal_seeded, cast_rr, cast_rr_seeded, cast_rtn, cast_rtn_pool, lotion_penalty,
     lotion_penalty_and_grad, lotion_penalty_and_grad_pool, lotion_penalty_grad, sigma2,
     sigma2_pool, Rounding,
 };

@@ -105,6 +105,20 @@ fn penalty_block_body(
 
 simd_kernel!(pub(crate) fn penalty_block(tier, w: &[f32], fisher: &[f32], g: &mut [f32], sb: f32, fmt: &QuantFormat) -> f64 = penalty_block_body);
 
+/// One shared-scale block of the additive-noise-annealing cast
+/// (Spallanzani et al.): perturb with uniform noise `sigma * s_B *
+/// (nz - 0.5)` and round-to-nearest on the *pre-noise* block scale.
+/// `noise` is pre-filled `[0, 1)` uniforms, aligned with `chunk`.
+#[inline(always)]
+fn anneal_block_body(chunk: &mut [f32], noise: &[f32], sigma: f32, sb: f32, fmt: &QuantFormat) {
+    for (v, nz) in chunk.iter_mut().zip(noise) {
+        let z = (*v + sigma * sb * (*nz - 0.5)) / sb;
+        *v = fmt.rtn(z) * sb;
+    }
+}
+
+simd_kernel!(pub(crate) fn anneal_block(tier, chunk: &mut [f32], noise: &[f32], sigma: f32, sb: f32, fmt: &QuantFormat) = anneal_block_body);
+
 thread_local! {
     /// RR noise buffer, at most one chunk (`PAR_CHUNK` f32s) long —
     /// replaces the old full-tensor-length noise `Vec` per call. Pool
@@ -193,6 +207,45 @@ pub fn cast_rr_seeded(w: &mut [f32], fmt: &QuantFormat, seed: u64, pool: &Pool) 
                     tier,
                     &mut chunk[s - r.start..e - r.start],
                     &noise[s - r.start..e - r.start],
+                    scales[bi],
+                    fmt,
+                );
+            }
+        });
+    };
+    pool.for_chunks_mut(w, &chunk_ranges(n, PAR_CHUNK), n, kernel);
+}
+
+/// In-place additive-noise-annealing cast (Spallanzani et al., "Additive
+/// Noise Annealing"): each element is perturbed with uniform noise of
+/// width `sigma` *measured in block-scale units* — `w + sigma * s_B * u`
+/// with `u ~ U[-0.5, 0.5)` — then rounded to nearest on the block scale
+/// computed from the **unperturbed** tensor. At `sigma = 0` the noise
+/// term vanishes and the cast collapses to [`cast_rtn_pool`]'s lattice
+/// map, which is what lets a σ→0 schedule anneal the estimator into
+/// QAT over a run. The noise model mirrors [`cast_rr_seeded`]: uniforms
+/// for elements `[c*PAR_CHUNK, (c+1)*PAR_CHUNK)` come from the counter
+/// stream `Rng::stream(seed, &[c])`, so the cast is bit-identical at
+/// any thread count.
+pub fn cast_anneal_seeded(w: &mut [f32], fmt: &QuantFormat, sigma: f32, seed: u64, pool: &Pool) {
+    let n = w.len();
+    let scales = block_scales_pool(w, fmt, pool);
+    let tier = active_tier();
+    let kernel = |ci: usize, r: Range<usize>, chunk: &mut [f32]| {
+        let mut rng = Rng::stream(seed, &[ci as u64]);
+        NOISE.with(|buf| {
+            let mut noise = buf.borrow_mut();
+            if noise.len() < r.len() {
+                noise.resize(r.len(), 0.0);
+            }
+            let noise = &mut noise[..r.len()];
+            rng.fill_uniform(noise);
+            for (bi, s, e) in block_ranges_in(n, fmt.block_size, r.start, r.end) {
+                anneal_block(
+                    tier,
+                    &mut chunk[s - r.start..e - r.start],
+                    &noise[s - r.start..e - r.start],
+                    sigma,
                     scales[bi],
                     fmt,
                 );
@@ -549,6 +602,53 @@ mod tests {
                     assert_eq!(g, g0, "pen grad {} {tier:?} n={n}", fmt.name);
                 }
             }
+        }
+    }
+
+    /// σ = 0 must collapse the annealing cast to the plain RTN lattice
+    /// map bit-for-bit — that reduction is what makes a σ→0 schedule
+    /// anneal the estimator into QAT.
+    #[test]
+    fn anneal_sigma_zero_is_rtn() {
+        let mut rng = Rng::new(31);
+        for n in [5usize, 1000, 100_000] {
+            let mut w = vec![0f32; n];
+            rng.fill_normal(&mut w);
+            for block in [0usize, 64] {
+                let fmt = QuantFormat::parse("int4", block).unwrap();
+                let mut a = w.clone();
+                cast_anneal_seeded(&mut a, &fmt, 0.0, 77, &Pool::new(2));
+                let mut r = w.clone();
+                cast_rtn_pool(&mut r, &fmt, &Pool::new(2));
+                assert_eq!(a, r, "n={n} block={block}");
+            }
+        }
+    }
+
+    /// The annealing cast keeps the crate's determinism contract:
+    /// bit-identical at any thread count, per-seed deterministic, and
+    /// actually perturbed by a nonzero σ.
+    #[test]
+    fn anneal_cast_is_thread_invariant_and_seeded() {
+        let mut rng = Rng::new(37);
+        let mut w = vec![0f32; 100_000];
+        rng.fill_normal(&mut w);
+        let fmt = QuantFormat::int4();
+        let cast_with = |sigma: f32, seed: u64, threads: usize| {
+            let mut v = w.clone();
+            cast_anneal_seeded(&mut v, &fmt, sigma, seed, &Pool::new(threads));
+            v
+        };
+        assert_eq!(cast_with(0.8, 7, 1), cast_with(0.8, 7, 3));
+        assert_eq!(cast_with(0.8, 7, 1), cast_with(0.8, 7, 4));
+        assert_eq!(cast_with(0.8, 7, 2), cast_with(0.8, 7, 2));
+        assert_ne!(cast_with(0.8, 7, 2), cast_with(0.8, 8, 2), "seed must move the noise");
+        assert_ne!(cast_with(0.8, 7, 2), cast_with(0.0, 7, 2), "sigma must move the cast");
+        // every output still lies on the (pre-noise scale) lattice
+        let scales = block_scales(&w, &fmt);
+        for &q in &cast_with(1.0, 9, 2) {
+            let z = q / scales[0];
+            assert!((z - fmt.rtn(z)).abs() < 1e-5, "off-lattice output {q}");
         }
     }
 

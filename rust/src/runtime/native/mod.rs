@@ -8,15 +8,21 @@
 //! `Evaluator`, sweeps and the experiment regenerators run unchanged on
 //! either backend.
 //!
-//! Since the program-layer refactor the backend is two pieces:
+//! Since the program-layer and estimator-layer refactors the backend
+//! is three pieces:
 //!
-//! * a **model-agnostic driver** (this module): it interprets a
-//!   scanned K-step train program as a loop of {build forward weights
-//!   (the QAT/RTN or RAT/RR STE cast over the quantized subset), call
-//!   the program's `loss_grad`, add the Eq. 3 LOTION σ²-penalty per
-//!   quantized tensor (exact Gauss-Newton diagonal when the program
-//!   has one, Adam's bias-corrected second moment otherwise), step
-//!   SGD/Adam} — the method transformation never touches model math;
+//! * a **model- and method-agnostic driver** (this module): it
+//!   interprets a scanned K-step train program as a thin loop of
+//!   {copy + [`Estimator::cast_step`] forward weights, call the
+//!   program's `loss_grad`, [`Estimator::grad_step`], refresh the
+//!   Fisher diagonal for penalty methods (exact Gauss-Newton when the
+//!   program has one, Adam's bias-corrected second moment otherwise),
+//!   [`Estimator::penalty_step`], step SGD/Adam} — the driver owns no
+//!   method math and no model math;
+//! * pluggable [`Estimator`]s ([`estimator`]): PTQ/QAT/RAT/LOTION
+//!   rebuilt as plug-ins bitwise-identical to the old hard-coded
+//!   driver, plus the custom-gradient-estimator and additive-noise-
+//!   annealing families from the related work;
 //! * pluggable [`NativeProgram`]s: the synthetic testbeds
 //!   ([`testbeds`]) and the decoder-only transformer LM
 //!   ([`transformer`], unlocking fig9–fig12 offline).
@@ -28,13 +34,15 @@
 //! (activations, gradients, cast/Fisher buffers) is cached on the
 //! engine across train calls.
 
+pub mod estimator;
 pub mod optim;
 pub mod program;
 pub mod testbeds;
 pub mod transformer;
 
+pub use self::estimator::{EstCtx, EstSchedule, Estimator};
 pub use self::optim::OptKind;
-pub use self::program::{DecodeSpec, EvalCtx, Method, NativeProgram, ParamView, StepCtx, StepStreams};
+pub use self::program::{DecodeSpec, EvalCtx, NativeProgram, ParamView, StepCtx, StepStreams};
 pub use self::testbeds::ModelSpec;
 pub use self::transformer::{LmConfig, LmProgram};
 
@@ -42,9 +50,7 @@ use self::optim::OptState;
 use super::executor::{check_args, value, Executor, Value};
 use super::factory::ExecutorFactory;
 use super::manifest::{ArtifactEntry, Manifest, Role, TensorSpec};
-use crate::quant::{
-    cast_rr_seeded, cast_rtn_pool, lotion_penalty_and_grad_pool, PackedWeights, QuantFormat,
-};
+use crate::quant::{PackedWeights, QuantFormat};
 use crate::tensor::{DType, HostTensor};
 use crate::util::pool::Pool;
 use crate::util::rng::Rng;
@@ -128,7 +134,7 @@ impl ExecutorFactory for NativeFactory {
 
 /// One executable native program (the registry value behind an entry).
 enum Program {
-    Train { model: NativeModel, method: Method, fmt: Option<QuantFormat> },
+    Train { model: NativeModel, est: &'static dyn Estimator, fmt: Option<QuantFormat> },
     Eval { model: NativeModel },
     /// RTN-quantized eval (`eval_q_{model}_{fmt}`): casts happen
     /// engine-side into packed block storage and the program consumes
@@ -242,18 +248,18 @@ impl NativeEngine {
             artifacts.insert(entry.name.clone(), entry);
         };
         for m in models {
-            for method in [Method::Ptq, Method::Qat, Method::Rat, Method::Lotion] {
-                let fmts: Vec<Option<QuantFormat>> = if method == Method::Ptq {
+            for est in estimator::all() {
+                let fmts: Vec<Option<QuantFormat>> = if est.formats().is_empty() {
                     vec![None]
                 } else {
-                    ["int4", "int8", "fp4"]
+                    est.formats()
                         .iter()
                         .map(|n| Some(QuantFormat::parse(n, 0).expect("builtin format")))
                         .collect()
                 };
                 for fmt in fmts {
-                    let entry = train_entry(m, method, fmt.as_ref());
-                    add(entry, Program::Train { model: m.clone(), method, fmt });
+                    let entry = train_entry(m, *est, fmt.as_ref());
+                    add(entry, Program::Train { model: m.clone(), est: *est, fmt });
                 }
             }
             add(eval_entry(m), Program::Eval { model: m.clone() });
@@ -323,7 +329,7 @@ impl NativeEngine {
         &self,
         entry: &ArtifactEntry,
         model: &NativeModel,
-        method: Method,
+        est: &dyn Estimator,
         fmt: Option<&QuantFormat>,
         args: &[Value],
     ) -> Result<Vec<Value>> {
@@ -335,6 +341,19 @@ impl NativeEngine {
         if lrs.len() != k {
             bail!("{}: lrs has {} entries, expected K={k}", entry.name, lrs.len());
         }
+        // per-step schedule values (σ_t, gradient scale) for scheduled
+        // estimators; legacy entries carry no such input and their
+        // hooks see a constant 1.0
+        let sched: Option<Vec<f32>> = match entry.input_index("est_sched") {
+            Some(_) => {
+                let s = get("est_sched")?.as_f32();
+                if s.len() != k {
+                    bail!("{}: est_sched has {} entries, expected K={k}", entry.name, s.len());
+                }
+                Some(s)
+            }
+            None => None,
+        };
         let param_names: Vec<String> = entry
             .input_specs(Role::Param)
             .iter()
@@ -376,11 +395,11 @@ impl NativeEngine {
         // interpreted loop parallelizes and stays bit-identical at any
         // thread count.
         let chunk_seed = key_seed(get("key")?);
-        // Forward-weight buffers exist only for the casting methods:
+        // Forward-weight buffers exist only for the casting estimators:
         // PTQ/LOTION train on the FP32 master weights directly, so the
         // LM hot path pays no per-step full-model copy.
-        let casts = fmt.is_some() && matches!(method, Method::Qat | Method::Rat);
-        let needs_fisher = method == Method::Lotion && fmt.is_some();
+        let casts = fmt.is_some() && est.casts();
+        let needs_fisher = est.needs_fisher() && fmt.is_some();
         // Take the model's cached driver scratch (or build it fresh);
         // it goes back into the cache after the chunk, so activations,
         // gradients, cast copies and Fisher buffers are allocated once
@@ -418,53 +437,38 @@ impl NativeEngine {
                 streams,
                 pool: &self.pool,
             };
-            // forward weights: the method's STE cast over the
-            // quantized subset (per-tensor counter streams for RR,
-            // mirroring the per-tensor key splits in methods.py);
-            // PTQ/LOTION forward the master weights themselves
+            let ectx = EstCtx {
+                fmt,
+                quant_idx: &quant_idx,
+                pool: &self.pool,
+                lam_reg,
+                sched: sched.as_ref().map(|s| s[i]).unwrap_or(1.0),
+                streams,
+            };
+            // forward weights: the estimator's cast over the quantized
+            // subset; non-casting estimators (PTQ/LOTION) forward the
+            // master weights themselves
             let fwd: &[Vec<f32>] = if casts {
-                let fmt = fmt.expect("cast methods carry a format");
                 for (pi, w) in wq.iter_mut().enumerate() {
                     w.copy_from_slice(&params[pi]);
                 }
-                match method {
-                    Method::Qat => {
-                        for &pi in &quant_idx {
-                            cast_rtn_pool(&mut wq[pi], fmt, &self.pool);
-                        }
-                    }
-                    Method::Rat => {
-                        for (qi, &pi) in quant_idx.iter().enumerate() {
-                            let seed = Rng::stream_seed(streams.round, &[qi as u64]);
-                            cast_rr_seeded(&mut wq[pi], fmt, seed, &self.pool);
-                        }
-                    }
-                    Method::Ptq | Method::Lotion => unreachable!("non-casting method"),
-                }
+                est.cast_step(wq, &ectx)?;
                 &wq
             } else {
                 &params
             };
             let base = program.loss_grad(fwd, &ctx, scratch.as_mut(), &mut grads)?;
             let mut total = base;
-            if method == Method::Lotion {
-                if let Some(fmt) = fmt {
-                    // Fisher is stop-grad, evaluated at the master
-                    // weights: the program's exact Gauss-Newton
-                    // diagonal when it has one, Adam's moments else.
-                    if !program.fisher_exact_into(&params, &ctx, &mut fisher)? {
-                        opt.fisher_into(&quant_idx, &mut fisher)?;
-                    }
-                    for (qi, &pi) in quant_idx.iter().enumerate() {
-                        let (pen, pg) =
-                            lotion_penalty_and_grad_pool(&params[pi], &fisher[qi], fmt, &self.pool);
-                        total += lam_reg as f64 * pen;
-                        for (g, p) in grads[pi].iter_mut().zip(&pg) {
-                            *g += lam_reg * p;
-                        }
-                    }
+            est.grad_step(grads, &ectx)?;
+            if needs_fisher {
+                // Fisher is stop-grad, evaluated at the master
+                // weights: the program's exact Gauss-Newton diagonal
+                // when it has one, Adam's moments else.
+                if !program.fisher_exact_into(&params, &ctx, &mut fisher)? {
+                    opt.fisher_into(&quant_idx, &mut fisher)?;
                 }
             }
+            est.penalty_step(&params, grads, fisher, &mut total, &ectx)?;
             opt.update(&mut params, &grads, lrs[i])?;
             bases.push(base as f32);
             totals.push(total as f32);
@@ -712,8 +716,8 @@ impl Executor for NativeEngine {
             .ok_or_else(|| anyhow!("{:?} is not a native program", entry.name))?;
         let t0 = Instant::now();
         let out = match prog {
-            Program::Train { model, method, fmt } => {
-                self.run_train(entry, model, *method, fmt.as_ref(), args)
+            Program::Train { model, est, fmt } => {
+                self.run_train(entry, model, *est, fmt.as_ref(), args)
             }
             Program::Eval { model } => self.run_eval(entry, model, args),
             Program::EvalQuant { model, fmt } => self.run_eval_quant(entry, model, fmt, args),
@@ -762,7 +766,7 @@ fn scalar_spec(name: &str, role: Role) -> TensorSpec {
     TensorSpec { name: name.to_string(), shape: vec![], dtype: DType::F32, role }
 }
 
-fn train_entry(m: &NativeModel, method: Method, fmt: Option<&QuantFormat>) -> ArtifactEntry {
+fn train_entry(m: &NativeModel, est: &dyn Estimator, fmt: Option<&QuantFormat>) -> ArtifactEntry {
     let program = &*m.program;
     let k = m.steps_per_call.max(1);
     let params = program.param_specs();
@@ -785,6 +789,14 @@ fn train_entry(m: &NativeModel, method: Method, fmt: Option<&QuantFormat>) -> Ar
         dtype: DType::F32,
         role: Role::Scalar,
     });
+    if est.scheduled() {
+        inputs.push(TensorSpec {
+            name: "est_sched".to_string(),
+            shape: vec![k],
+            dtype: DType::F32,
+            role: Role::Scalar,
+        });
+    }
     inputs.push(scalar_spec("lam_reg", Role::Scalar));
     let mut outputs = params;
     outputs.extend(opt);
@@ -797,7 +809,7 @@ fn train_entry(m: &NativeModel, method: Method, fmt: Option<&QuantFormat>) -> Ar
         });
     }
     let fmt_name = fmt.map(|f| f.name.clone()).unwrap_or_else(|| "none".to_string());
-    let name = format!("train_{}_{}_{}_k{}", program.name(), method.name(), fmt_name, k);
+    let name = format!("train_{}_{}_{}_k{}", program.name(), est.name(), fmt_name, k);
     ArtifactEntry {
         file: PathBuf::from(format!("native:{name}")),
         name,
@@ -805,7 +817,7 @@ fn train_entry(m: &NativeModel, method: Method, fmt: Option<&QuantFormat>) -> Ar
         outputs,
         kind: "train".to_string(),
         model_name: program.name(),
-        method: method.name().to_string(),
+        method: est.name().to_string(),
         format: fmt_name,
         steps_per_call: k,
         eval_batches: 0,
@@ -973,6 +985,49 @@ mod tests {
         assert!(m.find_train("linreg_d256", "ptq", "int4").is_ok());
         let methods = m.methods_for("linreg_d256");
         assert!(methods.iter().any(|(me, f)| me == "lotion" && f == "fp4"));
+    }
+
+    /// Scheduled estimators (cge/anneal) register train entries with a
+    /// per-step `est_sched` scalar input; the four legacy estimators'
+    /// entries carry no such input, so their calling convention (and
+    /// every existing golden) is byte-identical to the pre-refactor
+    /// registry.
+    #[test]
+    fn scheduled_entries_carry_est_sched() {
+        let eng = NativeEngine::new();
+        let m = eng.manifest();
+        for method in ["cge", "anneal"] {
+            let t = m.find_train("linreg_d256", method, "int4").unwrap();
+            let idx = t.input_index("est_sched").unwrap_or_else(|| panic!("{method}"));
+            let spec = &t.inputs[idx];
+            assert_eq!(spec.shape, vec![t.steps_per_call]);
+            assert_eq!(spec.role, Role::Scalar);
+            // est_sched sits between lrs and lam_reg
+            assert_eq!(idx, t.input_index("lrs").unwrap() + 1);
+            assert_eq!(idx + 1, t.input_index("lam_reg").unwrap());
+        }
+        for method in ["ptq", "qat", "rat", "lotion"] {
+            let fmt = if method == "ptq" { "none" } else { "int4" };
+            let t = m.find_train("linreg_d256", method, fmt).unwrap();
+            assert!(t.input_index("est_sched").is_none(), "{method}");
+        }
+        // a scheduled entry trains end to end through the driver; the
+        // zero-filled schedule makes anneal's cast exactly RTN, so the
+        // call must match QAT bitwise on identical inputs
+        let qat = m.find_train("linreg_d256", "qat", "int4").unwrap();
+        let ann = m.find_train("linreg_d256", "anneal", "int4").unwrap();
+        let fill = |entry: &ArtifactEntry| {
+            let mut args = zero_args(entry);
+            let d = 256;
+            args[entry.input_index("wstar").unwrap()] =
+                value(HostTensor::from_f32(&[d], (0..d).map(|i| (i as f32).sin()).collect()));
+            args[entry.input_index("lam").unwrap()] =
+                value(HostTensor::from_f32(&[d], vec![0.5; d]));
+            args
+        };
+        let wq = eng.call(qat, &fill(qat)).unwrap();
+        let wa = eng.call(ann, &fill(ann)).unwrap();
+        assert_eq!(wq[0].as_ref(), wa[0].as_ref(), "anneal at sigma=0 must be QAT");
     }
 
     #[test]

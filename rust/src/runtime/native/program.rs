@@ -2,11 +2,12 @@
 //! [`NativeProgram`] supplies *model math only* — parameter layout,
 //! init, base loss + gradients at given forward weights, optional
 //! exact Gauss-Newton diagonals, and validation loss — while the
-//! *method* transformation (the STE casts for QAT/RAT, the Eq. 3
-//! LOTION penalty) and the SGD/Adam loop live in the shared driver
-//! (`native::mod`). That split is the structural point of LOTION: the
-//! smoothing is a model-agnostic transformation of the loss under
-//! randomized-rounding noise, so the code keeps it out of the models.
+//! *method* transformation (the casts, gradient relaxations and
+//! penalties, owned by the pluggable [`super::estimator::Estimator`]s)
+//! and the SGD/Adam loop live in the shared driver (`native::mod`).
+//! That split is the structural point of LOTION: the smoothing is a
+//! model-agnostic transformation of the loss under randomized-rounding
+//! noise, so the code keeps it out of the models.
 //!
 //! Implementations: the synthetic testbeds ([`super::testbeds`]) and
 //! the decoder-only transformer LM ([`super::transformer`]). Future
@@ -18,36 +19,6 @@ use crate::util::pool::Pool;
 use crate::util::rng::Rng;
 use anyhow::{anyhow, bail, Result};
 use std::any::Any;
-
-/// Training-method transformation of the base loss (methods.py).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum Method {
-    Ptq,
-    Qat,
-    Rat,
-    Lotion,
-}
-
-impl Method {
-    pub fn parse(s: &str) -> Result<Method> {
-        Ok(match s {
-            "ptq" => Method::Ptq,
-            "qat" => Method::Qat,
-            "rat" => Method::Rat,
-            "lotion" => Method::Lotion,
-            other => bail!("unknown method {other:?}"),
-        })
-    }
-
-    pub fn name(self) -> &'static str {
-        match self {
-            Method::Ptq => "ptq",
-            Method::Qat => "qat",
-            Method::Rat => "rat",
-            Method::Lotion => "lotion",
-        }
-    }
-}
 
 /// Per-step RNG stream roots (counter-split, DESIGN.md §3): consumers
 /// derive their own `Rng::stream` keyed by row / chunk counters, so
@@ -262,14 +233,6 @@ pub trait NativeProgram: Send + Sync {
 #[cfg(test)]
 mod tests {
     use super::*;
-
-    #[test]
-    fn method_parse_roundtrip() {
-        for m in [Method::Ptq, Method::Qat, Method::Rat, Method::Lotion] {
-            assert_eq!(Method::parse(m.name()).unwrap(), m);
-        }
-        assert!(Method::parse("sgd").is_err());
-    }
 
     #[test]
     fn static_slice_finds_by_name() {

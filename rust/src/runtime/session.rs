@@ -33,6 +33,10 @@ pub struct ChunkInputs {
     pub lrs: Vec<f32>,
     /// the LOTION regularization weight (paper's lambda)
     pub lam_reg: f32,
+    /// per-step estimator-schedule values (σ_t, gradient scale) for
+    /// scheduled estimators; `None` when the entry carries no
+    /// `est_sched` input (the four legacy methods)
+    pub est_sched: Option<Vec<f32>>,
     /// the chunk's PRNG key (drives in-graph sampling + RR rounding)
     pub key: [u32; 2],
     /// the `[K, B, T+1]` token chunk for data-fed programs, `None` for
@@ -170,6 +174,12 @@ impl<'e> Session<'e> {
                 Role::Key => value(HostTensor::from_u32(&[2], inp.key.to_vec())),
                 Role::Scalar => match spec.name.as_str() {
                     "lrs" => value(HostTensor::from_f32(&[inp.lrs.len()], inp.lrs.clone())),
+                    "est_sched" => {
+                        let s = inp.est_sched.clone().ok_or_else(|| {
+                            anyhow!("{} wants an est_sched input", self.train.name)
+                        })?;
+                        value(HostTensor::from_f32(&[s.len()], s))
+                    }
                     "lam_reg" => value(HostTensor::scalar_f32(inp.lam_reg)),
                     other => bail!("unknown scalar input {other:?}"),
                 },
@@ -294,6 +304,7 @@ mod tests {
             .train_chunk(ChunkInputs {
                 lrs: vec![0.05; k],
                 lam_reg: 1.0,
+                est_sched: None,
                 key: [7, 11],
                 data: None,
             })
@@ -307,6 +318,7 @@ mod tests {
             .train_chunk(ChunkInputs {
                 lrs: vec![0.05; k + 1],
                 lam_reg: 1.0,
+                est_sched: None,
                 key: [7, 11],
                 data: None,
             })

@@ -1,0 +1,592 @@
+//! ISSUE 9 acceptance: the pluggable estimator layer is a pure
+//! refactor for the four paper methods and a well-behaved extension
+//! for the two new families.
+//!
+//! * PTQ/QAT/RAT/LOTION driven through the `Estimator` trait must be
+//!   **bitwise-identical** to the pre-refactor driver. The reference
+//!   here is an independent re-implementation of the legacy per-step
+//!   loop (`{cast, loss_grad, fisher, penalty, opt.update}` written
+//!   out by hand against the quant/optim primitives — no `Estimator`
+//!   anywhere), checked against the engine's train entries on linreg,
+//!   linear2 and the lm-tiny preset at `--threads 1` and auto.
+//! * `anneal` at σ₀ = 0 collapses to QAT exactly, end to end through
+//!   the `Trainer`.
+//! * The scheduled families (`cge`, `anneal`) train to decreasing
+//!   loss on lm-tiny, run as sweep grids at any `--sweep-workers`
+//!   width, and a run killed mid-anneal via `LOTION_FAULTS` resumes
+//!   bit-identical to the uninterrupted run — σ_t is a pure function
+//!   of the absolute step, so no schedule state crosses the snapshot.
+
+use anyhow::Result;
+use lotion::config::{RunConfig, Schedule};
+use lotion::coordinator::sweep::SweepPoint;
+use lotion::coordinator::{
+    DataSource, Evaluator, MetricsLogger, SweepResult, SweepRunner, Trainer,
+};
+use lotion::data::{ByteTokenizer, TokenBatcher, ZipfMarkovCorpus};
+use lotion::experiments::common::synth_statics;
+use lotion::quant::{cast_rr_seeded, cast_rtn_pool, lotion_penalty_and_grad_pool, QuantFormat};
+use lotion::runtime::executor::value;
+use lotion::runtime::native::optim::OptState;
+use lotion::runtime::native::{
+    EstSchedule, ModelSpec, NativeEngine, NativeFactory, NativeModel, OptKind, StepCtx,
+    StepStreams,
+};
+use lotion::runtime::{Executor, Role, Value};
+use lotion::tensor::HostTensor;
+use lotion::util::faults::KILL_EXIT;
+use lotion::util::pool::Pool;
+use lotion::util::rng::Rng;
+use lotion::util::tempdir::TempDir;
+use std::collections::HashMap;
+use std::path::Path;
+use std::process::Command;
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Bit-exact train-loss trace of a run.
+fn trains(m: &MetricsLogger) -> Vec<String> {
+    m.train_losses.iter().map(|(s, l)| format!("t{s}:{:016x}", l.to_bits())).collect()
+}
+
+// ---------------------------------------------------------------------------
+// the legacy loop, reimplemented without the Estimator trait
+// ---------------------------------------------------------------------------
+
+/// Training state threaded across reference chunks.
+struct RefState {
+    params: Vec<Vec<f32>>,
+    opt: OptState,
+    scratch: Box<dyn std::any::Any>,
+}
+
+fn ref_init(model: &NativeModel, init_params: &[Vec<f32>]) -> RefState {
+    let program = &*model.program;
+    let pspecs = program.param_specs();
+    let param_names: Vec<String> = pspecs.iter().map(|s| s.name.clone()).collect();
+    let named: Vec<(String, Vec<f32>)> = model
+        .opt
+        .state_specs(&pspecs)
+        .iter()
+        .map(|s| (s.name.clone(), vec![0.0; s.elements()]))
+        .collect();
+    RefState {
+        params: init_params.to_vec(),
+        opt: OptState::unpack(model.opt, &param_names, &named).unwrap(),
+        scratch: program.make_scratch(),
+    }
+}
+
+/// One K-step chunk of the pre-refactor driver, written out by hand
+/// against the quant/optim primitives: RTN cast for QAT, per-tensor
+/// seeded RR cast for RAT, Fisher-weighted σ² penalty for LOTION,
+/// nothing for PTQ (`fmt = None`). This is the behavioral spec the
+/// `Estimator` plug-ins must reproduce bit for bit.
+#[allow(clippy::too_many_arguments)]
+fn ref_chunk(
+    model: &NativeModel,
+    st: &mut RefState,
+    method: &str,
+    fmt: Option<&QuantFormat>,
+    statics: &[(String, Vec<f32>)],
+    data: Option<&[i32]>,
+    key: (u32, u32),
+    lr: f32,
+    lam_reg: f32,
+) -> (Vec<f32>, Vec<f32>) {
+    let program = &*model.program;
+    let k = model.steps_per_call;
+    let pool = Pool::serial();
+    let param_names: Vec<String> =
+        program.param_specs().iter().map(|s| s.name.clone()).collect();
+    let quantized = program.quantized();
+    let quant_idx: Vec<usize> = param_names
+        .iter()
+        .enumerate()
+        .filter(|(_, n)| quantized.iter().any(|q| q.as_str() == n.as_str()))
+        .map(|(i, _)| i)
+        .collect();
+    let chunk_seed = ((key.0 as u64) << 32) | key.1 as u64;
+    let step_len = data.map(|d| d.len() / k).unwrap_or(0);
+    let casts = fmt.is_some() && matches!(method, "qat" | "rat");
+    let mut grads: Vec<Vec<f32>> = st.params.iter().map(|p| vec![0.0; p.len()]).collect();
+    let mut wq: Vec<Vec<f32>> = if casts {
+        st.params.iter().map(|p| vec![0.0; p.len()]).collect()
+    } else {
+        Vec::new()
+    };
+    let mut fisher: Vec<Vec<f32>> = if method == "lotion" && fmt.is_some() {
+        quant_idx.iter().map(|&i| vec![0.0; st.params[i].len()]).collect()
+    } else {
+        Vec::new()
+    };
+    let (mut bases, mut totals) = (Vec::new(), Vec::new());
+    for i in 0..k {
+        let streams = StepStreams {
+            data: Rng::stream_seed(chunk_seed, &[i as u64, 1]),
+            round: Rng::stream_seed(chunk_seed, &[i as u64, 2]),
+        };
+        let ctx = StepCtx {
+            statics,
+            data: data.map(|d| &d[i * step_len..(i + 1) * step_len]),
+            streams,
+            pool: &pool,
+        };
+        let fwd: &[Vec<f32>] = if casts {
+            let f = fmt.unwrap();
+            for (w, p) in wq.iter_mut().zip(&st.params) {
+                w.copy_from_slice(p);
+            }
+            if method == "qat" {
+                for &pi in &quant_idx {
+                    cast_rtn_pool(&mut wq[pi], f, &pool);
+                }
+            } else {
+                for (qi, &pi) in quant_idx.iter().enumerate() {
+                    let seed = Rng::stream_seed(streams.round, &[qi as u64]);
+                    cast_rr_seeded(&mut wq[pi], f, seed, &pool);
+                }
+            }
+            &wq
+        } else {
+            &st.params
+        };
+        let base = program.loss_grad(fwd, &ctx, st.scratch.as_mut(), &mut grads).unwrap();
+        let mut total = base;
+        if method == "lotion" {
+            if let Some(f) = fmt {
+                if !program.fisher_exact_into(&st.params, &ctx, &mut fisher).unwrap() {
+                    st.opt.fisher_into(&quant_idx, &mut fisher).unwrap();
+                }
+                for (qi, &pi) in quant_idx.iter().enumerate() {
+                    let (pen, pg) =
+                        lotion_penalty_and_grad_pool(&st.params[pi], &fisher[qi], f, &pool);
+                    total += lam_reg as f64 * pen;
+                    for (g, p) in grads[pi].iter_mut().zip(&pg) {
+                        *g += lam_reg * p;
+                    }
+                }
+            }
+        }
+        st.opt.update(&mut st.params, &grads, lr).unwrap();
+        bases.push(base as f32);
+        totals.push(total as f32);
+    }
+    (bases, totals)
+}
+
+/// The same chunks through the engine's train entry (the traited
+/// driver), chaining param/opt outputs back by name.
+#[allow(clippy::too_many_arguments)]
+fn engine_chunks(
+    engine: &NativeEngine,
+    model_name: &str,
+    method: &str,
+    fmt_key: &str,
+    init_params: &[Vec<f32>],
+    statics: &[(String, Value)],
+    data_per_chunk: &[Vec<i32>],
+    keys: &[(u32, u32)],
+    lr: f32,
+    lam_reg: f32,
+) -> (Vec<Vec<f32>>, Vec<f32>, Vec<f32>) {
+    let entry = engine.manifest().find_train(model_name, method, fmt_key).unwrap();
+    let mut state: HashMap<String, Value> = HashMap::new();
+    for (spec, p) in entry.input_specs(Role::Param).iter().zip(init_params) {
+        state.insert(spec.name.clone(), value(HostTensor::from_f32(&spec.shape, p.clone())));
+    }
+    for spec in entry.input_specs(Role::Opt) {
+        state.insert(spec.name.clone(), value(HostTensor::zeros(spec.dtype, &spec.shape)));
+    }
+    let (mut bases, mut totals) = (Vec::new(), Vec::new());
+    for (c, &key) in keys.iter().enumerate() {
+        let args: Vec<Value> = entry
+            .inputs
+            .iter()
+            .map(|s| match s.role {
+                Role::Param | Role::Opt => state[&s.name].clone(),
+                Role::Static => {
+                    statics.iter().find(|(n, _)| n == &s.name).unwrap_or_else(|| {
+                        panic!("no static input named {:?}", s.name)
+                    }).1.clone()
+                }
+                Role::Data => value(HostTensor::from_i32(&s.shape, data_per_chunk[c].clone())),
+                Role::Key => value(HostTensor::from_u32(&[2], vec![key.0, key.1])),
+                Role::Scalar if s.name == "lrs" => {
+                    value(HostTensor::from_f32(&s.shape, vec![lr; s.elements()]))
+                }
+                Role::Scalar if s.name == "lam_reg" => {
+                    value(HostTensor::from_f32(&s.shape, vec![lam_reg; s.elements()]))
+                }
+                _ => panic!("unexpected train input {:?} ({:?})", s.name, s.role),
+            })
+            .collect();
+        let out = engine.call(entry, &args).unwrap();
+        for (o, v) in entry.outputs.iter().zip(&out) {
+            match o.role {
+                Role::Param | Role::Opt => {
+                    state.insert(o.name.clone(), v.clone());
+                }
+                Role::Metric if o.name == "base_losses" => bases.extend(v.as_f32()),
+                Role::Metric if o.name == "total_losses" => totals.extend(v.as_f32()),
+                _ => {}
+            }
+        }
+    }
+    let params: Vec<Vec<f32>> =
+        entry.input_specs(Role::Param).iter().map(|s| state[&s.name].as_f32()).collect();
+    (params, bases, totals)
+}
+
+/// Drive the four paper methods through both implementations and
+/// compare parameters + loss streams bitwise, engine at `--threads 1`
+/// and auto (the reference pool is serial; bit-identity across pool
+/// widths is the backend's standing contract).
+fn parity_case(
+    model: NativeModel,
+    model_name: &str,
+    statics: Vec<(String, HostTensor)>,
+    data_per_chunk: Vec<Vec<i32>>,
+    keys: Vec<(u32, u32)>,
+    lr: f32,
+    lam_reg: f32,
+) {
+    let int4 = QuantFormat::int4();
+    let statics_f32: Vec<(String, Vec<f32>)> =
+        statics.iter().map(|(n, t)| (n.clone(), t.as_f32())).collect();
+    let static_vals: Vec<(String, Value)> =
+        statics.into_iter().map(|(n, t)| (n, value(t))).collect();
+    // same key-seeded init on both sides
+    let seed_engine = NativeEngine::with_models(&[model.clone()]).with_threads(1);
+    let init = seed_engine.manifest().find_init(model_name).unwrap();
+    let init_out =
+        seed_engine.call(init, &[value(HostTensor::from_u32(&[2], vec![3, 5]))]).unwrap();
+    let init_params: Vec<Vec<f32>> = init_out.iter().map(|v| v.as_f32()).collect();
+
+    let cases: [(&str, &str, Option<&QuantFormat>); 4] = [
+        ("ptq", "none", None),
+        ("qat", "int4", Some(&int4)),
+        ("rat", "int4", Some(&int4)),
+        ("lotion", "int4", Some(&int4)),
+    ];
+    for (method, fmt_key, fmt) in cases {
+        let mut st = ref_init(&model, &init_params);
+        let (mut ref_bases, mut ref_totals) = (Vec::new(), Vec::new());
+        for (c, &key) in keys.iter().enumerate() {
+            let d = data_per_chunk.get(c).map(|v| v.as_slice());
+            let (b, t) =
+                ref_chunk(&model, &mut st, method, fmt, &statics_f32, d, key, lr, lam_reg);
+            ref_bases.extend(b);
+            ref_totals.extend(t);
+        }
+        for threads in [1usize, 0] {
+            let engine = NativeEngine::with_models(&[model.clone()]).with_threads(threads);
+            let (params, bases, totals) = engine_chunks(
+                &engine,
+                model_name,
+                method,
+                fmt_key,
+                &init_params,
+                &static_vals,
+                &data_per_chunk,
+                &keys,
+                lr,
+                lam_reg,
+            );
+            for (i, (a, b)) in st.params.iter().zip(&params).enumerate() {
+                assert_eq!(
+                    bits(a),
+                    bits(b),
+                    "{model_name}/{method}: param {i} diverges from the legacy loop \
+                     (threads={threads})"
+                );
+            }
+            assert_eq!(
+                bits(&ref_bases),
+                bits(&bases),
+                "{model_name}/{method}: base losses diverge (threads={threads})"
+            );
+            assert_eq!(
+                bits(&ref_totals),
+                bits(&totals),
+                "{model_name}/{method}: total losses diverge (threads={threads})"
+            );
+        }
+    }
+}
+
+/// Parity on linreg: in-graph data, SGD, exact Gauss-Newton Fisher;
+/// `d` large enough to engage the parallel cast/penalty kernels.
+#[test]
+fn estimators_match_legacy_loop_on_linreg() {
+    let d = 40_000;
+    let model = NativeModel::from_spec(ModelSpec::LinReg { d, batch: 16 }, OptKind::Sgd, 4);
+    let (statics, _, _) = synth_statics(d, 13);
+    parity_case(model, &format!("linreg_d{d}"), statics, vec![], vec![(7, 11), (7, 12)], 0.05, 1.0);
+}
+
+/// Parity on the rank-k quadratic testbed.
+#[test]
+fn estimators_match_legacy_loop_on_linear2() {
+    let (d, k) = (12_000, 4);
+    let model = NativeModel::from_spec(ModelSpec::Linear2 { d, k }, OptKind::Sgd, 4);
+    let (statics, _, _) = synth_statics(d, 29);
+    parity_case(
+        model,
+        &format!("linear2_d{d}_k{k}"),
+        statics,
+        vec![],
+        vec![(7, 11), (7, 12)],
+        0.2,
+        1.0,
+    );
+}
+
+/// Parity on the transformer preset: token data path, Adam, the
+/// optimizer-moment Fisher fallback.
+#[test]
+fn estimators_match_legacy_loop_on_lm_tiny() {
+    let model = NativeModel::lm("lm-tiny", OptKind::Adam).unwrap();
+    let spec = model.program.train_data_spec(model.steps_per_call).unwrap();
+    let tokens: Vec<i32> = (0..spec.elements()).map(|i| ((i * 131 + 7) % 256) as i32).collect();
+    parity_case(model, "lm-tiny", vec![], vec![tokens], vec![(7, 11)], 3e-3, 10.0);
+}
+
+// ---------------------------------------------------------------------------
+// the new families: collapse, learning, sweep sharding, crash-resume
+// ---------------------------------------------------------------------------
+
+/// `anneal` at σ₀ = 0 adds exactly zero noise before rounding, so a
+/// full Trainer run must match QAT bit for bit — params and every
+/// train loss.
+#[test]
+fn anneal_at_sigma_zero_matches_qat_through_the_trainer() {
+    let run = |method: &str, sigma0: f64| {
+        let engine = NativeEngine::with_models(&[NativeModel::from_spec(
+            ModelSpec::LinReg { d: 256, batch: 64 },
+            OptKind::Sgd,
+            8,
+        )])
+        .with_threads(0);
+        let mut cfg = RunConfig::default();
+        cfg.model = "linreg_d256".into();
+        cfg.method = method.into();
+        cfg.format = "int4".into();
+        cfg.eval_formats = vec!["int4".into()];
+        cfg.steps = 16;
+        cfg.lr = 0.05;
+        cfg.lambda = 1.0;
+        cfg.eval_every = 8;
+        cfg.schedule = Schedule::Constant;
+        cfg.seed = 5;
+        cfg.est_schedule = EstSchedule::Constant;
+        cfg.est_sigma0 = sigma0;
+        let (statics, _, _) = synth_statics(256, 3);
+        let mut trainer = Trainer::new(&engine, cfg, statics, DataSource::InGraph).unwrap();
+        let mut eval = Evaluator::new(5);
+        let mut metrics = MetricsLogger::in_memory();
+        trainer.run(&mut eval, &mut metrics).unwrap();
+        (bits(&trainer.state().fetch("w").unwrap().as_f32()), trains(&metrics))
+    };
+    let (wq, lq) = run("qat", 1.0);
+    let (wa, la) = run("anneal", 0.0);
+    assert_eq!(wq, wa, "anneal at sigma0=0 must collapse to QAT bitwise");
+    assert_eq!(lq, la, "train-loss traces differ between qat and anneal at sigma0=0");
+}
+
+/// Acceptance: both new families train to decreasing loss on lm-tiny.
+#[test]
+fn scheduled_families_learn_on_lm_tiny() {
+    for (method, sigma0, grad_scale) in [("cge", 1.0, 0.5), ("anneal", 0.5, 1.0)] {
+        let model = NativeModel::lm("lm-tiny", OptKind::Adam).unwrap();
+        let engine = NativeEngine::with_models(&[model]).with_threads(0);
+        let mut cfg = RunConfig::default();
+        cfg.model = "lm-tiny".into();
+        cfg.method = method.into();
+        cfg.format = "int4".into();
+        cfg.eval_formats = vec!["int4".into()];
+        cfg.steps = 24;
+        cfg.lr = 3e-3;
+        cfg.lambda = 1.0;
+        cfg.eval_every = 24;
+        cfg.schedule = Schedule::Constant;
+        cfg.seed = 7;
+        cfg.est_schedule = EstSchedule::Cosine;
+        cfg.est_sigma0 = sigma0;
+        cfg.est_grad_scale = grad_scale;
+        let corpus = ZipfMarkovCorpus::generate(200_000, 512, 4, 7);
+        let toks = ByteTokenizer::new().encode(&corpus.bytes);
+        let batcher = TokenBatcher::new(toks, 8, 64, 0.05);
+        let mut trainer =
+            Trainer::new(&engine, cfg, vec![], DataSource::Tokens(batcher)).unwrap();
+        let mut eval = Evaluator::new(5);
+        let mut metrics = MetricsLogger::in_memory();
+        trainer.run(&mut eval, &mut metrics).unwrap();
+        let l = &metrics.train_losses;
+        assert!(l.len() >= 8, "{method}: expected a full loss trace, got {}", l.len());
+        let head: f64 = l[..4].iter().map(|(_, v)| v).sum::<f64>() / 4.0;
+        let tail: f64 = l[l.len() - 4..].iter().map(|(_, v)| v).sum::<f64>() / 4.0;
+        assert!(
+            tail < head,
+            "{method}: loss should decrease on lm-tiny (first4 {head:.4} -> last4 {tail:.4})"
+        );
+    }
+}
+
+/// Both families run as a sweep grid through the sharded runner —
+/// results are bit-identical at any `--sweep-workers` width.
+#[test]
+fn scheduled_family_sweep_is_worker_count_invariant() {
+    let factory = NativeFactory::new(
+        vec![NativeModel::from_spec(ModelSpec::LinReg { d: 256, batch: 64 }, OptKind::Sgd, 8)],
+        1,
+    );
+    let mk = |label: &str, method: &str, sched: EstSchedule, sigma0: f64, scale: f64| {
+        let mut cfg = RunConfig::default();
+        cfg.name = label.into();
+        cfg.model = "linreg_d256".into();
+        cfg.method = method.into();
+        cfg.format = "int4".into();
+        cfg.eval_formats = vec!["int4".into()];
+        cfg.steps = 16;
+        cfg.lr = 0.05;
+        cfg.lambda = 1.0;
+        cfg.eval_every = 8;
+        cfg.schedule = Schedule::Constant;
+        cfg.seed = 5;
+        cfg.est_schedule = sched;
+        cfg.est_sigma0 = sigma0;
+        cfg.est_grad_scale = scale;
+        SweepPoint::new(label, cfg)
+    };
+    let points = || {
+        vec![
+            mk("anneal_s0.5_cos", "anneal", EstSchedule::Cosine, 0.5, 1.0),
+            mk("anneal_s1_cos", "anneal", EstSchedule::Cosine, 1.0, 1.0),
+            mk("anneal_s1_lin", "anneal", EstSchedule::Linear, 1.0, 1.0),
+            mk("cge_c0.5", "cge", EstSchedule::Constant, 1.0, 0.5),
+        ]
+    };
+    let inputs = |_: &dyn Executor,
+                  _: &RunConfig|
+     -> Result<(Vec<(String, HostTensor)>, DataSource)> {
+        let (statics, _, _) = synth_statics(256, 3);
+        Ok((statics, DataSource::InGraph))
+    };
+    let fp = |rs: &[SweepResult]| -> Vec<String> {
+        rs.iter().map(|r| format!("{}:{:016x}", r.label, r.score.to_bits())).collect()
+    };
+    let serial = SweepRunner::new(&factory, 1).run(points(), "int4", "rtn", &inputs).unwrap();
+    let wide = SweepRunner::new(&factory, 3).run(points(), "int4", "rtn", &inputs).unwrap();
+    assert!(serial.iter().all(|r| !r.diverged), "grid point diverged in the serial pass");
+    assert_eq!(fp(&serial), fp(&wide), "sweep results differ across --sweep-workers");
+}
+
+// ---------------------------------------------------------------------------
+// subprocess: kill mid-anneal, resume, compare to uninterrupted
+// ---------------------------------------------------------------------------
+
+/// `--set` overrides pinning a deterministic 24-step annealed run on
+/// the default registry's linreg_d256 (K=8): cosine σ-schedule from
+/// σ₀ = 0.5, so step 16 sits mid-anneal with σ_t strictly between
+/// σ₀ and 0.
+const ANNEAL_SETS: &[&str] = &[
+    "--set", "train.steps=24",
+    "--set", "eval.every=8",
+    "--set", "train.schedule=constant",
+    "--set", "train.lr=0.05",
+    "--set", "train.lambda=1.0",
+    "--set", "seed=5",
+];
+
+fn anneal_cmd(cwd: &Path, out: &str) -> Command {
+    let mut c = Command::new(env!("CARGO_BIN_EXE_lotion-rs"));
+    c.current_dir(cwd)
+        .args(["train", "--backend", "native", "--method", "anneal"])
+        .args(["--est-schedule", "cosine", "--est-sigma0", "0.5"])
+        .args(ANNEAL_SETS)
+        .args(["--ckpt-every", "8", "--out", out])
+        .env_remove("LOTION_FAULTS")
+        .env_remove("LOTION_THREADS")
+        .env_remove("LOTION_CKPT_EVERY")
+        .env_remove("LOTION_CKPT_DIR")
+        .env_remove("LOTION_SWEEP_WORKERS");
+    c
+}
+
+/// The metrics JSONL with the (nondeterministic) wall-clock field
+/// stripped — every other field is bit-determined.
+fn metrics_lines(path: &Path) -> Vec<String> {
+    std::fs::read_to_string(path)
+        .unwrap_or_else(|e| panic!("reading {path:?}: {e}"))
+        .lines()
+        .map(|l| l.split(",\"wall_s\"").next().unwrap().to_string())
+        .collect()
+}
+
+/// Schedule-resume bit-identity at the CLI: a run killed mid-anneal
+/// by `LOTION_FAULTS=kill@step:16` exits with [`KILL_EXIT`], leaves a
+/// resumable snapshot, and `--resume` completes it bit-identical to
+/// the uninterrupted baselines — σ_t is recomputed from the absolute
+/// step on the resumed side, never read from the snapshot.
+#[test]
+fn cli_kill_mid_anneal_and_resume_is_bit_identical() {
+    let dir = TempDir::new();
+    let a1 = anneal_cmd(dir.path(), "a1").env("LOTION_THREADS", "1").output().unwrap();
+    assert!(
+        a1.status.success(),
+        "baseline anneal train (threads=1) failed: {}",
+        String::from_utf8_lossy(&a1.stderr)
+    );
+    let a2 = anneal_cmd(dir.path(), "a2").output().unwrap();
+    assert!(
+        a2.status.success(),
+        "baseline anneal train (threads=auto) failed: {}",
+        String::from_utf8_lossy(&a2.stderr)
+    );
+    let final_a1 = std::fs::read(dir.path().join("a1/final.lotn")).unwrap();
+    assert_eq!(
+        final_a1,
+        std::fs::read(dir.path().join("a2/final.lotn")).unwrap(),
+        "annealed final checkpoint differs across LOTION_THREADS"
+    );
+    let lines_a1 = metrics_lines(&dir.path().join("a1/metrics.jsonl"));
+    assert_eq!(lines_a1, metrics_lines(&dir.path().join("a2/metrics.jsonl")));
+
+    let killed =
+        anneal_cmd(dir.path(), "b").env("LOTION_FAULTS", "kill@step:16").output().unwrap();
+    assert_eq!(
+        killed.status.code(),
+        Some(KILL_EXIT),
+        "kill@step:16 should exit {KILL_EXIT}: {}",
+        String::from_utf8_lossy(&killed.stderr)
+    );
+    assert!(dir.path().join("b/step000016.lotn").exists(), "snapshot missing after kill");
+    assert!(!dir.path().join("b/final.lotn").exists(), "killed run must not finalize");
+
+    // resume at a different thread width than the killed run; the σ
+    // schedule must pick up at σ_16, not restart from σ₀
+    let resumed = anneal_cmd(dir.path(), "b")
+        .arg("--resume")
+        .arg(dir.path().join("b"))
+        .env("LOTION_THREADS", "1")
+        .output()
+        .unwrap();
+    assert!(
+        resumed.status.success(),
+        "anneal resume failed: {}",
+        String::from_utf8_lossy(&resumed.stderr)
+    );
+    assert_eq!(
+        final_a1,
+        std::fs::read(dir.path().join("b/final.lotn")).unwrap(),
+        "resumed annealed run differs from uninterrupted"
+    );
+    assert_eq!(
+        lines_a1,
+        metrics_lines(&dir.path().join("b/metrics.jsonl")),
+        "appended metrics JSONL differs from uninterrupted anneal baseline"
+    );
+}

@@ -80,6 +80,25 @@ else
     echo "LOTION_CI_SERVE=0; skipping serve smoke lane"
 fi
 
+echo "== estimator lane (exp est-equiv + exp anneal) =="
+# the pluggable-estimator families end-to-end at the CLI surface (skip
+# with LOTION_CI_EST=0): the cge-vs-rescaled-QAT equivalence table on
+# linreg_d256 and the σ→0 annealing grid on lm-tiny, both through the
+# sharded SweepRunner — default kernels and pinned-scalar, scaled down
+# via LOTION_EXP_SCALE so the lane stays a smoke test
+if [[ "${LOTION_CI_EST:-1}" == "1" ]]; then
+    LOTION_EXP_SCALE=0.1 ./target/release/lotion-rs exp est-equiv \
+        --backend native --results /tmp/lotion_ci_est
+    LOTION_EXP_SCALE=0.1 ./target/release/lotion-rs exp anneal \
+        --backend native --sweep-workers 2 --results /tmp/lotion_ci_est
+    LOTION_SIMD=scalar LOTION_EXP_SCALE=0.1 ./target/release/lotion-rs exp est-equiv \
+        --backend native --results /tmp/lotion_ci_est_scalar
+    LOTION_SIMD=scalar LOTION_EXP_SCALE=0.1 ./target/release/lotion-rs exp anneal \
+        --backend native --results /tmp/lotion_ci_est_scalar
+else
+    echo "LOTION_CI_EST=0; skipping estimator lane"
+fi
+
 echo "== cargo fmt --check =="
 if cargo fmt --version >/dev/null 2>&1; then
     cargo fmt --check
