@@ -339,6 +339,26 @@ fn main() {
         }
     }
 
+    // Sweep-spec DSL (ISSUE 10): parse + full expansion of the
+    // embedded fig2 grid (DESIGN.md §10). Pure host-side work — these
+    // rows track the before-anything-spawns cost of the spec path;
+    // items = grid points for the expand row.
+    {
+        const SPEC: &str = include_str!("../../examples/fig2.sweep");
+        b.run("spec_parse/fig2", || {
+            std::hint::black_box(lotion::spec::parse(SPEC).unwrap());
+        });
+        let n = lotion::spec::plan(SPEC, "fig2.sweep", &RunConfig::default(), None)
+            .expect("fig2 spec expands")
+            .points
+            .len() as f64;
+        b.run_with_items("spec_expand/fig2", Some(n), &mut || {
+            std::hint::black_box(
+                lotion::spec::plan(SPEC, "fig2.sweep", &RunConfig::default(), None).unwrap(),
+            );
+        });
+    }
+
     // Checkpoint save/load (ISSUE 7): the crash-safety tax at the
     // lm-150m-sim scale — the atomic temp+fsync+rename save and the
     // OOM-hardened bounded load of a ~22 MB `.lotn` archive. Items =

@@ -127,6 +127,33 @@ impl Args {
     pub fn sweep_workers(&self, cfg_default: usize) -> Result<usize> {
         self.usize_or("sweep-workers", cfg_default)
     }
+
+    /// The sweep-spec source for `lotion sweep`: `--spec-str <text>`
+    /// (inline) or `--spec <file|->` (`-` reads stdin), mutually
+    /// exclusive. Returns `(origin, source)` where `origin` is the name
+    /// spec errors render under (`file.sweep:3:7: ...`), or `None` when
+    /// neither flag is given (the `[sweep] spec` config seam and the
+    /// legacy `--lrs` path take over).
+    pub fn spec_source(&self) -> Result<Option<(String, String)>> {
+        match (self.flag("spec"), self.flag("spec-str")) {
+            (Some(_), Some(_)) => bail!("--spec and --spec-str are mutually exclusive"),
+            (None, None) => Ok(None),
+            (None, Some(s)) => Ok(Some(("<spec-str>".to_string(), s.to_string()))),
+            (Some("-"), None) => {
+                use std::io::Read;
+                let mut text = String::new();
+                std::io::stdin()
+                    .read_to_string(&mut text)
+                    .map_err(|e| anyhow!("reading spec from stdin: {e}"))?;
+                Ok(Some(("<stdin>".to_string(), text)))
+            }
+            (Some(path), None) => {
+                let text = std::fs::read_to_string(path)
+                    .map_err(|e| anyhow!("reading spec {path:?}: {e}"))?;
+                Ok(Some((path.to_string(), text)))
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -189,6 +216,34 @@ mod tests {
         assert_eq!(parse("train --simd scalar").simd().unwrap(), Some(SimdTier::Scalar));
         assert_eq!(parse("train --simd avx2").simd().unwrap(), Some(SimdTier::Avx2));
         assert!(parse("train --simd sse9").simd().is_err());
+    }
+
+    #[test]
+    fn spec_source_resolves_inline_and_file() {
+        assert_eq!(parse("sweep").spec_source().unwrap(), None);
+        let (origin, text) =
+            parse("sweep --spec-str steps=16").spec_source().unwrap().unwrap();
+        assert_eq!(origin, "<spec-str>");
+        assert_eq!(text, "steps=16");
+
+        let dir = crate::util::tempdir::TempDir::new();
+        let path = dir.path().join("t.sweep");
+        std::fs::write(&path, "grid: lr=[0.1]\n").unwrap();
+        let argv = vec![
+            "sweep".to_string(),
+            "--spec".to_string(),
+            path.to_string_lossy().into_owned(),
+        ];
+        let (origin, text) = Args::parse(&argv).unwrap().spec_source().unwrap().unwrap();
+        assert_eq!(origin, path.to_string_lossy());
+        assert_eq!(text, "grid: lr=[0.1]\n");
+
+        let err = parse("sweep --spec a.sweep --spec-str steps=1")
+            .spec_source()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("mutually exclusive"), "{err}");
+        assert!(parse("sweep --spec /nope/missing.sweep").spec_source().is_err());
     }
 
     #[test]

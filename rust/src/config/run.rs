@@ -60,6 +60,11 @@ pub struct RunConfig {
     pub est_sigma0: f64,
     /// gradient scale at step 0 (`[est] grad_scale`, "cge" only)
     pub est_grad_scale: f64,
+    /// sweep-spec source path (`[sweep] spec`): `lotion sweep` without
+    /// `--spec`/`--lrs` runs this spec. Never result-determining — the
+    /// spec's own digest guards its journal — so it is excluded from
+    /// [`RunConfig::digest`].
+    pub sweep_spec: Option<String>,
 }
 
 impl Default for RunConfig {
@@ -89,12 +94,87 @@ impl Default for RunConfig {
             est_schedule: EstSchedule::Constant,
             est_sigma0: 1.0,
             est_grad_scale: 1.0,
+            sweep_spec: None,
         }
     }
 }
 
+/// Every key [`RunConfig::from_doc`] reads — the strict-key whitelist.
+/// Any other key in a config file (or `--set` override) errors with a
+/// nearest-key suggestion instead of passing silently, matching how an
+/// unknown `--method` lists the estimator registry.
+const KNOWN_DOC_KEYS: [&str; 24] = [
+    "name",
+    "model",
+    "method",
+    "seed",
+    "train.schedule",
+    "train.warmup",
+    "train.final_frac",
+    "train.lr",
+    "train.steps",
+    "train.lambda",
+    "train.checkpoint_every",
+    "train.ckpt_dir",
+    "train.threads",
+    "quant.format",
+    "eval.roundings",
+    "eval.formats",
+    "eval.every",
+    "paths.artifacts",
+    "paths.results",
+    "sweep.workers",
+    "sweep.spec",
+    "est.schedule",
+    "est.sigma0",
+    "est.grad_scale",
+];
+
+/// Reject unknown config keys. The suggestion tries the full dotted
+/// key first (`train.stpes` → `train.steps`), then the bare segment
+/// (top-level `steps` → `train.steps`); with no plausible typo it
+/// lists the section's known keys.
+fn check_known_keys(doc: &TomlDoc) -> Result<()> {
+    use crate::util::text::{edit_distance, nearest};
+    for key in doc.entries.keys() {
+        if KNOWN_DOC_KEYS.contains(&key.as_str()) {
+            continue;
+        }
+        let suggestion = nearest(key, KNOWN_DOC_KEYS.iter().copied()).or_else(|| {
+            let last = key.rsplit('.').next().unwrap_or(key);
+            KNOWN_DOC_KEYS
+                .iter()
+                .copied()
+                .map(|k| (edit_distance(last, k.rsplit('.').next().unwrap_or(k)), k))
+                .min_by_key(|&(d, k)| (d, k.len()))
+                .filter(|&(d, _)| d <= 2 && d < last.chars().count())
+                .map(|(_, k)| k)
+        });
+        if let Some(s) = suggestion {
+            bail!("unknown config key {key:?} (did you mean {s:?}?)");
+        }
+        let section = key.split_once('.').map(|(s, _)| s);
+        let known: Vec<&str> = match section {
+            Some(s) => {
+                let prefix = format!("{s}.");
+                KNOWN_DOC_KEYS.iter().copied().filter(|k| k.starts_with(&prefix)).collect()
+            }
+            None => KNOWN_DOC_KEYS.iter().copied().filter(|k| !k.contains('.')).collect(),
+        };
+        if known.is_empty() {
+            bail!("unknown config key {key:?} (known keys: {})", KNOWN_DOC_KEYS.join(", "));
+        }
+        match section {
+            Some(s) => bail!("unknown config key {key:?} (known [{s}] keys: {})", known.join(", ")),
+            None => bail!("unknown config key {key:?} (known top-level keys: {})", known.join(", ")),
+        }
+    }
+    Ok(())
+}
+
 impl RunConfig {
     pub fn from_doc(doc: &TomlDoc) -> Result<RunConfig> {
+        check_known_keys(doc)?;
         let d = RunConfig::default();
         let schedule = match doc.str_or("train.schedule", "cosine").as_str() {
             "constant" => Schedule::Constant,
@@ -140,6 +220,7 @@ impl RunConfig {
             est_schedule: EstSchedule::parse(&doc.str_or("est.schedule", "constant"))?,
             est_sigma0: doc.f64_or("est.sigma0", d.est_sigma0),
             est_grad_scale: doc.f64_or("est.grad_scale", d.est_grad_scale),
+            sweep_spec: doc.get("sweep.spec").and_then(|v| v.as_str().map(String::from)),
         };
         cfg.validate()?;
         Ok(cfg)
@@ -391,6 +472,45 @@ mod tests {
         let mut c = base.clone();
         c.est_grad_scale = 2.0;
         assert_ne!(c.digest(), d0);
+    }
+
+    /// Satellite (ISSUE 10): unknown config keys error with a
+    /// nearest-known-key suggestion instead of passing silently.
+    #[test]
+    fn unknown_keys_error_with_suggestion() {
+        let doc = TomlDoc::parse("[train]\nstpes = 16").unwrap();
+        let err = RunConfig::from_doc(&doc).unwrap_err().to_string();
+        assert!(err.contains("unknown config key \"train.stpes\""), "{err}");
+        assert!(err.contains("did you mean \"train.steps\"?"), "{err}");
+
+        let doc = TomlDoc::parse("[sweep]\nworker = 4").unwrap();
+        let err = RunConfig::from_doc(&doc).unwrap_err().to_string();
+        assert!(err.contains("did you mean \"sweep.workers\"?"), "{err}");
+
+        let doc = TomlDoc::parse("[est]\nsigma = 0.5").unwrap();
+        let err = RunConfig::from_doc(&doc).unwrap_err().to_string();
+        assert!(err.contains("did you mean \"est.sigma0\"?"), "{err}");
+
+        // a bare key that belongs in a section suggests the dotted form
+        let doc = TomlDoc::parse("steps = 16").unwrap();
+        let err = RunConfig::from_doc(&doc).unwrap_err().to_string();
+        assert!(err.contains("did you mean \"train.steps\"?"), "{err}");
+
+        // nothing plausible: list the section's known keys
+        let doc = TomlDoc::parse("[train]\nwhatnow = 1").unwrap();
+        let err = RunConfig::from_doc(&doc).unwrap_err().to_string();
+        assert!(err.contains("known [train] keys"), "{err}");
+        assert!(err.contains("train.lr"), "{err}");
+    }
+
+    #[test]
+    fn sweep_spec_from_doc_and_digest_neutral() {
+        let doc = TomlDoc::parse("[sweep]\nspec = \"examples/fig2.sweep\"").unwrap();
+        let cfg = RunConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.sweep_spec.as_deref(), Some("examples/fig2.sweep"));
+        // pointing a config at a spec must not move the run digest
+        assert_eq!(cfg.digest(), RunConfig::default().digest());
+        assert_eq!(RunConfig::default().sweep_spec, None);
     }
 
     #[test]

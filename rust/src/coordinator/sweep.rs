@@ -41,6 +41,7 @@ pub type SweepInputs =
 
 /// One grid point: a full run config plus its display label and an
 /// optional JSONL metrics sink.
+#[derive(Clone, Debug)]
 pub struct SweepPoint {
     pub label: String,
     pub cfg: RunConfig,
@@ -85,6 +86,10 @@ pub struct JournalEntry {
     pub attempts: usize,
     pub score: f64,
     pub error: Option<String>,
+    /// [`crate::spec::digest`] of the sweep-spec source that produced
+    /// this point (spec-driven sweeps only): resume against an *edited*
+    /// spec is refused outright rather than silently mixing grids
+    pub spec: Option<String>,
 }
 
 impl JournalEntry {
@@ -111,6 +116,13 @@ impl JournalEntry {
                     None => Json::Null,
                 },
             ),
+            (
+                "spec",
+                match &self.spec {
+                    Some(d) => Json::str(d),
+                    None => Json::Null,
+                },
+            ),
         ])
     }
 
@@ -132,6 +144,8 @@ impl JournalEntry {
             attempts: j.get("attempts").and_then(|v| v.as_usize()).unwrap_or(1),
             score: f64::from_bits(bits),
             error: j.get("error").and_then(|v| v.as_str()).map(String::from),
+            // absent in pre-spec journals: those resume as before
+            spec: j.get("spec").and_then(|v| v.as_str()).map(String::from),
         })
     }
 }
@@ -194,7 +208,7 @@ impl SweepJournal {
 
     /// Journal a finished point; journal I/O failures degrade to a
     /// warning (the sweep result is still returned in-process).
-    fn record(&self, digest: &str, attempts: usize, r: &SweepResult) {
+    fn record(&self, digest: &str, spec: Option<&str>, attempts: usize, r: &SweepResult) {
         let error = r
             .metrics
             .diverged
@@ -208,6 +222,7 @@ impl SweepJournal {
             attempts,
             score: r.score,
             error,
+            spec: spec.map(String::from),
         };
         if let Err(err) = self.append(&e) {
             crate::warn_!("journal {:?}: appending {}: {err}", self.path, r.label);
@@ -215,7 +230,13 @@ impl SweepJournal {
     }
 
     /// Journal a point that panicked through all its retries.
-    fn record_failed(&self, p: &SweepPoint, attempts: usize, error: Option<&str>) {
+    fn record_failed(
+        &self,
+        p: &SweepPoint,
+        spec: Option<&str>,
+        attempts: usize,
+        error: Option<&str>,
+    ) {
         let e = JournalEntry {
             label: p.label.clone(),
             digest: p.cfg.digest(),
@@ -224,6 +245,7 @@ impl SweepJournal {
             attempts,
             score: f64::INFINITY,
             error: error.map(String::from),
+            spec: spec.map(String::from),
         };
         if let Err(err) = self.append(&e) {
             crate::warn_!("journal {:?}: appending {}: {err}", self.path, p.label);
@@ -289,6 +311,9 @@ pub struct SweepRunner<'f> {
     resume: Vec<JournalEntry>,
     /// extra attempts for a panicking point (each on a fresh engine)
     retries: usize,
+    /// spec-source digest stamped into journal entries (spec-driven
+    /// sweeps only; see [`crate::spec::digest`])
+    spec_digest: Option<String>,
 }
 
 impl<'f> SweepRunner<'f> {
@@ -301,6 +326,7 @@ impl<'f> SweepRunner<'f> {
             journal: None,
             resume: Vec::new(),
             retries: 1,
+            spec_digest: None,
         }
     }
 
@@ -331,6 +357,15 @@ impl<'f> SweepRunner<'f> {
     /// retried: it would diverge identically again.
     pub fn with_retries(mut self, retries: usize) -> Self {
         self.retries = retries;
+        self
+    }
+
+    /// Stamp every journal entry with the sweep-spec source digest
+    /// (`lotion sweep --spec`). The CLI refuses to resume a journal
+    /// whose entries carry a *different* spec digest, so an edited spec
+    /// can never silently mix with an old journal's grid.
+    pub fn with_spec_digest(mut self, digest: impl Into<String>) -> Self {
+        self.spec_digest = Some(digest.into());
         self
     }
 
@@ -403,6 +438,7 @@ impl<'f> SweepRunner<'f> {
                     let (r, fresh) = run_point_guarded(
                         self.factory,
                         self.journal.as_ref(),
+                        self.spec_digest.as_deref(),
                         self.retries,
                         engine,
                         *i,
@@ -422,6 +458,7 @@ impl<'f> SweepRunner<'f> {
             let pool = Pool::new(self.workers.min(pending.len()));
             let factory = self.factory;
             let journal = self.journal.as_ref();
+            let spec_digest = self.spec_digest.as_deref();
             let retries = self.retries;
             // the calling thread participates in the job; make sure its
             // cached engine is released even if a grid point panics (pool
@@ -438,6 +475,7 @@ impl<'f> SweepRunner<'f> {
                     let (r, fresh) = run_point_guarded(
                         factory,
                         journal,
+                        spec_digest,
                         retries,
                         &**engine,
                         i,
@@ -480,6 +518,7 @@ impl<'f> SweepRunner<'f> {
 fn run_point_guarded(
     factory: &dyn ExecutorFactory,
     journal: Option<&SweepJournal>,
+    spec_digest: Option<&str>,
     retries: usize,
     engine: &dyn Executor,
     index: usize,
@@ -504,7 +543,7 @@ fn run_point_guarded(
         match caught {
             Ok(r) => {
                 if let Some(j) = journal {
-                    j.record(&p.cfg.digest(), attempt, &r);
+                    j.record(&p.cfg.digest(), spec_digest, attempt, &r);
                 }
                 return Ok((r, fresh));
             }
@@ -519,7 +558,7 @@ fn run_point_guarded(
         }
     }
     if let Some(j) = journal {
-        j.record_failed(p, retries + 1, last_panic.as_deref());
+        j.record_failed(p, spec_digest, retries + 1, last_panic.as_deref());
     }
     let r = SweepResult {
         label: p.label.clone(),
@@ -622,7 +661,10 @@ pub fn lr_points(base: &RunConfig, lrs: &[f64]) -> Vec<SweepPoint> {
 
 /// Index of the best (lowest-score) run. Total order: NaN sorts as
 /// +inf, so a backend that ever reports NaN instead of the diverged
-/// sentinel cannot panic the selection.
+/// sentinel cannot panic the selection. Ties on the exact score bits
+/// break toward the **lowest grid index** — explicitly, not via
+/// `min_by`'s first-wins behavior, so spec-driven grids with duplicate
+/// scores pick a stable winner by contract rather than by accident.
 pub fn best(results: &[SweepResult]) -> Option<usize> {
     fn key(s: f64) -> f64 {
         if s.is_nan() {
@@ -634,7 +676,7 @@ pub fn best(results: &[SweepResult]) -> Option<usize> {
     results
         .iter()
         .enumerate()
-        .min_by(|a, b| key(a.1.score).total_cmp(&key(b.1.score)))
+        .min_by(|a, b| key(a.1.score).total_cmp(&key(b.1.score)).then_with(|| a.0.cmp(&b.0)))
         .map(|(i, _)| i)
 }
 
@@ -668,6 +710,18 @@ mod tests {
         assert!(best(&[mk(f64::NAN), mk(f64::NAN)]).is_some());
     }
 
+    /// Satellite (ISSUE 10): bit-equal scores break toward the lowest
+    /// grid index, so duplicate-score spec grids pick a stable winner.
+    #[test]
+    fn best_breaks_ties_toward_lowest_index() {
+        let rs = vec![mk(2.0), mk(0.5), mk(0.5), mk(0.5)];
+        assert_eq!(best(&rs), Some(1));
+        let rs = vec![mk(f64::NAN), mk(f64::NAN)];
+        assert_eq!(best(&rs), Some(0), "all-NaN ties break to index 0 too");
+        let rs = vec![mk(-0.0), mk(0.0)];
+        assert_eq!(best(&rs), Some(0), "total_cmp orders -0 < +0, no tie here");
+    }
+
     #[test]
     fn journal_entry_roundtrips_bitwise() {
         for score in [1.25, f64::INFINITY, f64::NAN, -0.0] {
@@ -679,6 +733,7 @@ mod tests {
                 attempts: 2,
                 score,
                 error: Some("why \"quoted\"".into()),
+                spec: Some("32e004e1b0e69803".into()),
             };
             let line = e.to_json().to_string();
             let back = JournalEntry::from_json(&line).unwrap();
@@ -688,7 +743,13 @@ mod tests {
             assert_eq!(back.attempts, 2);
             assert_eq!(back.score.to_bits(), e.score.to_bits(), "score {score}");
             assert_eq!(back.error, e.error);
+            assert_eq!(back.spec, e.spec);
         }
+        // pre-spec journal lines (no "spec" field) still parse
+        let legacy = r#"{"label":"a","digest":"d","lr":0.1,"status":"ok","attempts":1,"score_bits":"4000000000000000","score":2}"#;
+        let back = JournalEntry::from_json(legacy).unwrap();
+        assert_eq!(back.spec, None);
+        assert_eq!(back.score, 2.0);
     }
 
     #[test]
@@ -705,6 +766,7 @@ mod tests {
             attempts: 1,
             score: 2.0,
             error: None,
+            spec: None,
         };
         j.append(&mk_entry("a")).unwrap();
         j.append(&mk_entry("b")).unwrap();

@@ -6,12 +6,13 @@ use crate::config::RunConfig;
 use crate::coordinator::sweep::SweepRunner;
 use crate::coordinator::{DataSource, Evaluator, MetricsLogger, Trainer};
 use crate::data::{power_law_spectrum, sample_wstar};
+use crate::data::{ByteTokenizer, TokenBatcher, ZipfMarkovCorpus};
 use crate::formats::csv::CsvWriter;
 use crate::info;
-use crate::runtime::{Executor, ExecutorFactory};
+use crate::runtime::{Executor, ExecutorFactory, Role};
 use crate::tensor::HostTensor;
 use crate::util::rng::Rng;
-use anyhow::Result;
+use anyhow::{Context, Result};
 use std::path::Path;
 
 /// What an experiment regenerator runs against: a borrowed engine for
@@ -63,6 +64,43 @@ pub fn run_method(
         metrics.final_eval("fp32", "none").unwrap_or(f64::NAN)
     );
     Ok(metrics)
+}
+
+/// Build the data source a model needs (token batcher for LMs,
+/// in-graph sampling for the synthetic tasks) plus synthetic statics.
+/// Shared by `cmd_train`, the generic sweep paths (`--lrs` and
+/// `--spec`), and the `.sweep`-file experiment ids, so a config sweeps
+/// to the same inputs no matter which door it came in through.
+pub fn build_inputs(
+    engine: &dyn Executor,
+    cfg: &RunConfig,
+    corpus_seed: u64,
+) -> Result<(Vec<(String, HostTensor)>, DataSource)> {
+    let train = engine.manifest().find_train(&cfg.model, &cfg.method, &cfg.format)?;
+    let wants_data = train.inputs.iter().any(|s| s.role == Role::Data);
+    let wants_statics = train.inputs.iter().any(|s| s.role == Role::Static);
+    if wants_data {
+        let data = train
+            .inputs
+            .iter()
+            .find(|s| s.role == Role::Data)
+            .expect("data spec");
+        let (batch, t1) = (data.shape[1], data.shape[2]);
+        let corpus = ZipfMarkovCorpus::generate(2_000_000, 2048, 4, corpus_seed);
+        let toks = ByteTokenizer::new().encode(&corpus.bytes);
+        Ok((vec![], DataSource::Tokens(TokenBatcher::new(toks, batch, t1 - 1, 0.05))))
+    } else if wants_statics {
+        let d = train
+            .inputs
+            .iter()
+            .find(|s| s.name == "lam")
+            .map(|s| s.shape[0])
+            .context("no lam static")?;
+        let (statics, _, _) = synth_statics(d, 42);
+        Ok((statics, DataSource::InGraph))
+    } else {
+        Ok((vec![], DataSource::InGraph))
+    }
 }
 
 /// Statics for the synthetic tasks: (lam, wstar) plus the raw vectors

@@ -13,7 +13,8 @@
 //!   which is the paper's point.
 //! * `anneal` — additive noise annealing (Spallanzani et al.): QAT
 //!   next to `anneal` at several σ₀ and σ→0 schedule shapes on the
-//!   tiny LM, with the usual curves + final-loss table.
+//!   tiny LM, with the usual curves + final-loss table. Its grid is
+//!   `examples/anneal.sweep`, expanded through the sweep-spec DSL.
 //!
 //! Both run as one sweep grid each, so `--sweep-workers N` trains the
 //! legs concurrently on factory-spawned engines, bit-identical to the
@@ -121,56 +122,38 @@ pub fn run_equiv(ctx: &ExpCtx<'_>, out_dir: &Path) -> Result<()> {
     Ok(())
 }
 
-/// `anneal` leg config: lm-tiny with a σ→0 schedule against the QAT
-/// baseline (σ ≡ 0), identical data/init streams.
-fn anneal_cfg(
-    label: &str,
-    method: &str,
-    sched: EstSchedule,
-    sigma0: f64,
-    steps: usize,
-) -> RunConfig {
-    let mut cfg = RunConfig::default();
-    cfg.name = format!("anneal_{label}");
-    cfg.model = "lm-tiny".into();
-    cfg.method = method.into();
-    cfg.format = "int4".into();
-    cfg.eval_formats = vec!["int4".into()];
-    cfg.steps = steps;
-    cfg.lr = 3e-3;
-    cfg.lambda = 1.0;
-    cfg.eval_every = (steps / 8).max(8);
-    cfg.schedule = Schedule::Cosine { warmup: steps / 20, final_frac: 0.1 };
-    cfg.seed = 17;
-    cfg.est_schedule = sched;
-    cfg.est_sigma0 = sigma0;
-    cfg
-}
+/// The anneal grid definition — `exp anneal` expands this embedded
+/// spec (σ₀ × schedule-shape legs against the QAT baseline) through
+/// the sweep-spec DSL (DESIGN.md §10).
+pub const ANNEAL_SPEC: &str = include_str!("../../../examples/anneal.sweep");
 
 /// Additive-noise-annealing on the tiny LM: σ₀ × schedule-shape grid
-/// against the QAT baseline.
+/// against the QAT baseline (σ ≡ 0), identical data/init streams.
 pub fn run_anneal(ctx: &ExpCtx<'_>, out_dir: &Path) -> Result<()> {
     std::fs::create_dir_all(out_dir)?;
     let steps = scaled(96);
-    let legs: [(&str, &str, EstSchedule, f64); 4] = [
-        ("qat", "qat", EstSchedule::Constant, 0.0),
-        ("anneal_s0.5_cos", "anneal", EstSchedule::Cosine, 0.5),
-        ("anneal_s1_cos", "anneal", EstSchedule::Cosine, 1.0),
-        ("anneal_s1_lin", "anneal", EstSchedule::Linear, 1.0),
-    ];
-    let points: Vec<SweepPoint> = legs
-        .iter()
-        .map(|&(label, method, sched, sigma0)| {
-            SweepPoint::new(label, anneal_cfg(label, method, sched, sigma0, steps))
-                .with_metrics_path(out_dir.join(format!("{label}.jsonl")))
-        })
-        .collect();
+    let models = ctx.factory.model_names();
+    let plan = crate::spec::plan(
+        ANNEAL_SPEC,
+        "examples/anneal.sweep",
+        &RunConfig::default(),
+        models.as_deref(),
+    )?;
+    let mut points = plan.points;
+    for p in &mut points {
+        // the spec pins the nominal budget; `exp` runs rescale it
+        p.cfg.steps = steps;
+        p.cfg.eval_every = (steps / 8).max(8);
+        p.cfg.schedule = Schedule::Cosine { warmup: steps / 20, final_frac: 0.1 };
+        p.metrics_path = Some(out_dir.join(format!("{}.jsonl", p.label)));
+    }
     let inputs = |engine: &dyn Executor,
                   cfg: &RunConfig|
      -> Result<(Vec<(String, HostTensor)>, DataSource)> {
         Ok((vec![], DataSource::Tokens(make_batcher(&cfg.model, engine)?)))
     };
-    let results = ctx.runner().run(points, "int4", "rtn", &inputs)?;
+    let results =
+        ctx.runner().run(points, &plan.score_format, &plan.score_rounding, &inputs)?;
 
     let mut rows: Vec<TableRow> = Vec::new();
     let mut labelled: Vec<(String, &MetricsLogger)> = Vec::new();

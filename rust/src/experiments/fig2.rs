@@ -3,13 +3,14 @@
 //! loss under RTN and RR casts, plus the paper's "quantized w*" PTQ
 //! oracle rows. Fig. 2 is the best-variant view of the Fig. 7 table.
 //!
-//! The per-method LR grid (the paper's best-over-App.-A.5 protocol)
-//! runs through the sharded `SweepRunner`: with `--sweep-workers N`
-//! the grid points train on N factory-spawned engines, bit-identical
-//! to the serial pass.
+//! The per-method LR grid lives in `examples/fig2.sweep` (embedded at
+//! compile time) and expands through the sweep-spec DSL (DESIGN.md
+//! §10) into the same sharded `SweepRunner` every spec-driven sweep
+//! uses: with `--sweep-workers N` the grid points train on N
+//! factory-spawned engines, bit-identical to the serial pass.
 
-use crate::config::{RunConfig, Schedule};
-use crate::coordinator::sweep::{SweepPoint, SweepResult};
+use crate::config::RunConfig;
+use crate::coordinator::sweep::SweepResult;
 use crate::coordinator::DataSource;
 use crate::data::synth::population_loss;
 use crate::quant::{cast, QuantFormat, Rounding};
@@ -23,20 +24,13 @@ use super::common::{scaled, synth_statics, write_curves, write_table, ExpCtx, Ta
 
 const D: usize = 12000;
 
-fn cfg_for(method: &str, lr: f64, steps: usize) -> RunConfig {
-    let mut cfg = RunConfig::default();
-    cfg.name = format!("fig2_{method}");
-    cfg.model = format!("linreg_d{D}");
-    cfg.method = method.into();
-    cfg.format = if method == "ptq" { "none".into() } else { "int4".into() };
-    cfg.eval_formats = vec!["int4".into()];
-    cfg.steps = steps;
-    cfg.lr = lr;
-    cfg.lambda = 1.0; // exact GN diagonal => Eq. 3 is parameter-free here
-    cfg.eval_every = (steps / 12).max(16);
-    cfg.schedule = Schedule::Cosine { warmup: 0, final_frac: 0.05 };
-    cfg
-}
+/// The grid definition — living documentation as well as the actual
+/// source `exp fig2` expands.
+pub const SPEC: &str = include_str!("../../../examples/fig2.sweep");
+
+/// Spec axis order, for draining per-method blocks from the
+/// method-major result vector.
+const METHODS: [&str; 4] = ["lotion", "qat", "rat", "ptq"];
 
 /// The figure's selection score: best final quantized loss over both
 /// roundings (the run_point score covers one rounding only).
@@ -50,9 +44,6 @@ fn rtn_rr_score(r: &SweepResult) -> f64 {
 pub fn run(ctx: &ExpCtx<'_>, out_dir: &Path) -> Result<()> {
     std::fs::create_dir_all(out_dir)?;
     let steps = scaled(3000);
-    // Small per-method LR grid (the paper sweeps App. A.5 and reports
-    // the best run per method; same protocol, smaller grid).
-    let lr_grid: &[f64] = &[0.3, 0.6];
     let fmt = QuantFormat::int4();
     let inputs = |_: &dyn Executor,
                   _: &RunConfig|
@@ -63,23 +54,30 @@ pub fn run(ctx: &ExpCtx<'_>, out_dir: &Path) -> Result<()> {
 
     // One combined (method x lr) grid — a single sharded sweep, so at
     // `--sweep-workers N` all 8 runs are in flight, not 2 per method.
-    const METHODS: [&str; 4] = ["lotion", "qat", "rat", "ptq"];
-    let points: Vec<SweepPoint> = METHODS
-        .iter()
-        .flat_map(|&method| lr_grid.iter().map(move |&lr| (method, lr)))
-        .map(|(method, lr)| {
-            let label = format!("{method}_lr{lr}");
-            SweepPoint::new(label.clone(), cfg_for(method, lr, steps))
-                .with_metrics_path(out_dir.join(format!("{label}.jsonl")))
-        })
-        .collect();
-    let mut results = ctx.runner().run(points, "int4", "rtn", &inputs)?;
+    let models = ctx.factory.model_names();
+    let plan = crate::spec::plan(
+        SPEC,
+        "examples/fig2.sweep",
+        &RunConfig::default(),
+        models.as_deref(),
+    )?;
+    let per_method = plan.points.len() / METHODS.len();
+    let mut points = plan.points;
+    for p in &mut points {
+        // the spec pins the paper's full budget; `exp` runs rescale it
+        p.cfg.steps = steps;
+        p.cfg.eval_every = (steps / 12).max(16);
+        p.metrics_path = Some(out_dir.join(format!("{}.jsonl", p.label)));
+    }
+    let mut results =
+        ctx.runner().run(points, &plan.score_format, &plan.score_rounding, &inputs)?;
 
     let mut rows: Vec<TableRow> = Vec::new();
     let mut all_runs: Vec<(String, SweepResult)> = Vec::new();
     for method in METHODS {
         // grid order is method-major: drain this method's lr block
-        let block: Vec<SweepResult> = results.drain(..lr_grid.len()).collect();
+        let block: Vec<SweepResult> = results.drain(..per_method).collect();
+        debug_assert!(block.iter().all(|r| r.label.starts_with(method)));
         let best = block
             .into_iter()
             .reduce(|a, b| if rtn_rr_score(&b) < rtn_rr_score(&a) { b } else { a })

@@ -18,6 +18,11 @@
 //! | est-equiv | cge(lr, c) vs qat(c·lr) equivalence table     |
 //! | anneal    | σ→0 noise-annealing curves/table (lm-tiny)    |
 //! | all       | everything above                              |
+//!
+//! An id ending in `.sweep` is a sweep-spec *file* (DESIGN.md §10):
+//! `exp path/to/grid.sweep` expands it and runs the grid through the
+//! same sharded path, writing curves + per-point metrics under
+//! `<results>/<spec name>/`.
 
 use anyhow::{bail, Result};
 use std::path::Path;
@@ -56,6 +61,9 @@ fn required_models(id: &str) -> Vec<String> {
 }
 
 pub fn run(ctx: &ExpCtx<'_>, id: &str, results_dir: &Path) -> Result<()> {
+    if id.ends_with(".sweep") {
+        return run_spec_file(ctx, id, results_dir);
+    }
     let id = canonical(id);
     if id == "all" {
         // a failing experiment is a data point, not a batch-killer —
@@ -102,6 +110,41 @@ pub fn run(ctx: &ExpCtx<'_>, id: &str, results_dir: &Path) -> Result<()> {
         "ablation" => ablation::run(ctx.engine, &out),
         other => bail!("unknown experiment {other:?} (try: {:?} or all)", ALL),
     }
+}
+
+/// `exp <file>.sweep`: expand an arbitrary spec file and run its grid
+/// through the same sharded runner the named experiments use.
+fn run_spec_file(ctx: &ExpCtx<'_>, path: &str, results_dir: &Path) -> Result<()> {
+    use crate::config::RunConfig;
+    use crate::runtime::Executor;
+
+    let src = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("reading spec {path:?}: {e}"))?;
+    let models = ctx.factory.model_names();
+    let plan = crate::spec::plan(&src, path, &RunConfig::default(), models.as_deref())?;
+    let out = results_dir.join(&plan.name);
+    std::fs::create_dir_all(&out)?;
+    let mut points = plan.points;
+    for p in &mut points {
+        p.metrics_path = Some(out.join(format!("{}.jsonl", p.label)));
+    }
+    let results = ctx.runner().run(
+        points,
+        &plan.score_format,
+        &plan.score_rounding,
+        &|engine: &dyn Executor, cfg: &RunConfig| super::common::build_inputs(engine, cfg, 7),
+    )?;
+    let labelled: Vec<(String, &crate::coordinator::MetricsLogger)> =
+        results.iter().map(|r| (r.label.clone(), &r.metrics)).collect();
+    super::common::write_curves(&out, &labelled)?;
+    println!("{:<28} {:>12} {:>14} {:>10}", "label", "lr", "score", "diverged");
+    for r in &results {
+        println!("{:<28} {:>12.4e} {:>14.6} {:>10}", r.label, r.lr, r.score, r.diverged);
+    }
+    if let Some(i) = crate::coordinator::sweep::best(&results) {
+        println!("best: {} score={:.6}", results[i].label, results[i].score);
+    }
+    Ok(())
 }
 
 #[cfg(test)]

@@ -33,6 +33,8 @@
 //!   (feature-gated) the PJRT engine.
 //! * [`coordinator`] — trainer, evaluator, LR schedules, sharded
 //!   sweeps, metrics.
+//! * [`spec`] — sweep-spec DSL: lexer + recursive-descent parser +
+//!   grid expansion feeding the sharded `SweepRunner`.
 //! * [`checkpoint`] — binary tensor archive.
 //! * [`experiments`] — one regenerator per paper figure/table.
 //! * [`benchlib`] — micro-benchmark harness (criterion unavailable).
@@ -47,6 +49,7 @@ pub mod experiments;
 pub mod formats;
 pub mod quant;
 pub mod runtime;
+pub mod spec;
 pub mod tensor;
 pub mod util;
 

@@ -17,9 +17,10 @@
 use anyhow::{bail, Context, Result};
 use lotion::cli::Args;
 use lotion::config::{RunConfig, TomlDoc};
-use lotion::coordinator::{CkptPolicy, DataSource, Evaluator, MetricsLogger, SweepJournal, Trainer};
-use lotion::data::{ByteTokenizer, TokenBatcher, ZipfMarkovCorpus};
-use lotion::experiments::{common::ExpCtx, registry};
+use lotion::coordinator::{CkptPolicy, Evaluator, MetricsLogger, SweepJournal, Trainer};
+use lotion::data::{ByteTokenizer, ZipfMarkovCorpus};
+use lotion::experiments::common::{build_inputs, ExpCtx};
+use lotion::experiments::registry;
 use lotion::runtime::{Executor, ExecutorFactory, NativeEngine, NativeFactory, Role};
 use lotion::{checkpoint::Checkpoint, info};
 use std::path::{Path, PathBuf};
@@ -38,9 +39,17 @@ const USAGE: &str = "usage: lotion-rs <train|exp|sweep|serve|bench-serve|inspect
               [--est-schedule constant|linear|cosine] [--est-sigma0 s]
               [--est-grad-scale c]
               [--ckpt-every N] [--ckpt-dir dir] [--resume <ckpt|dir>]
-  exp         <id|all> [--results results] [--artifacts artifacts]
+  exp         <id|all|file.sweep> [--results results] [--artifacts artifacts]
   sweep       --config <toml> --lrs 0.1,0.3 [--score-format int4] [--score-rounding rtn]
               [--journal <jsonl>] [--resume-sweep] [--retries N]
+              spec-driven grids (DESIGN.md §10; replaces --lrs):
+              [--spec <file.sweep|->] [--spec-str <text>] ([sweep] spec
+              in the config names a default file)
+              [--dry-run]            print the expanded grid, spawn nothing
+              [--sweep-out <jsonl>]  machine-readable results (label, lr,
+                                     score_bits, score, diverged)
+              [--out dir]            per-point metrics dir (default:
+                                     <results>/<spec name>)
   serve       [--model lm-tiny] [--format int4] [--weights final.lotn]
               [--engines 1] [--max-batch 4] [--requests 16]
               [--prompt-len 8] [--gen-len 16] [--temperature 0.8] [--seed 42]
@@ -166,40 +175,6 @@ fn load_config(args: &Args) -> Result<RunConfig> {
     RunConfig::from_doc(&doc)
 }
 
-/// Build the data source a model needs (token batcher for LMs,
-/// in-graph sampling for the synthetic tasks) plus synthetic statics.
-fn build_inputs(
-    engine: &dyn Executor,
-    cfg: &RunConfig,
-    corpus_seed: u64,
-) -> Result<(Vec<(String, lotion::tensor::HostTensor)>, DataSource)> {
-    let train = engine.manifest().find_train(&cfg.model, &cfg.method, &cfg.format)?;
-    let wants_data = train.inputs.iter().any(|s| s.role == Role::Data);
-    let wants_statics = train.inputs.iter().any(|s| s.role == Role::Static);
-    if wants_data {
-        let data = train
-            .inputs
-            .iter()
-            .find(|s| s.role == Role::Data)
-            .expect("data spec");
-        let (batch, t1) = (data.shape[1], data.shape[2]);
-        let corpus = ZipfMarkovCorpus::generate(2_000_000, 2048, 4, corpus_seed);
-        let toks = ByteTokenizer::new().encode(&corpus.bytes);
-        Ok((vec![], DataSource::Tokens(TokenBatcher::new(toks, batch, t1 - 1, 0.05))))
-    } else if wants_statics {
-        let d = train
-            .inputs
-            .iter()
-            .find(|s| s.name == "lam")
-            .map(|s| s.shape[0])
-            .context("no lam static")?;
-        let (statics, _, _) = lotion::experiments::common::synth_statics(d, 42);
-        Ok((statics, DataSource::InGraph))
-    } else {
-        Ok((vec![], DataSource::InGraph))
-    }
-}
-
 fn cmd_train(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
     let engine = make_executor(args, &cfg.artifacts_dir, cfg.threads)?;
@@ -316,6 +291,22 @@ fn cmd_exp(args: &Args) -> Result<()> {
 
 fn cmd_sweep(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
+    // spec source precedence: --spec-str / --spec, then `[sweep] spec`
+    // in the config; the legacy --lrs grid only when none of those
+    let spec = match args.spec_source()? {
+        Some(s) => Some(s),
+        None => match &cfg.sweep_spec {
+            Some(path) => {
+                let text = std::fs::read_to_string(path)
+                    .with_context(|| format!("reading [sweep] spec {path:?}"))?;
+                Some((path.clone(), text))
+            }
+            None => None,
+        },
+    };
+    if let Some((origin, src)) = spec {
+        return run_spec_sweep(args, &cfg, &origin, &src);
+    }
     let lrs: Vec<f64> = args
         .required("lrs")?
         .split(',')
@@ -357,6 +348,123 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     }
     if let Some(i) = lotion::coordinator::sweep::best(&results) {
         println!("best: lr={:.4e} score={:.6}", results[i].lr, results[i].score);
+    }
+    Ok(())
+}
+
+/// The spec-driven sweep path (DESIGN.md §10): expand + validate the
+/// grid before anything spawns, stamp every journal entry with the
+/// spec digest, and refuse to resume a journal written by a *different*
+/// spec instead of silently mixing grids.
+fn run_spec_sweep(args: &Args, cfg: &RunConfig, origin: &str, src: &str) -> Result<()> {
+    let factory = make_factory(args, &cfg.artifacts_dir, cfg.threads)?;
+    let models = factory.model_names();
+    let mut plan = lotion::spec::plan(src, origin, cfg, models.as_deref())?;
+    // CLI score knobs override the spec's score_format/score_rounding
+    if let Some(f) = args.flag("score-format") {
+        plan.score_format = f.to_string();
+    }
+    if let Some(r) = args.flag("score-rounding") {
+        plan.score_rounding = r.to_string();
+    }
+
+    if args.switch("dry-run") {
+        println!(
+            "spec {origin} (digest {}): {} point(s), score {}/{}",
+            plan.digest,
+            plan.points.len(),
+            plan.score_format,
+            plan.score_rounding
+        );
+        println!(
+            "{:<4} {:<28} {:<14} {:<8} {:<8} {:>10} {:>7} {:>20}  {}",
+            "idx", "label", "model", "method", "format", "lr", "steps", "seed", "cfg_digest"
+        );
+        for (i, p) in plan.points.iter().enumerate() {
+            println!(
+                "{:<4} {:<28} {:<14} {:<8} {:<8} {:>10.4e} {:>7} {:>20}  {}",
+                i,
+                p.label,
+                p.cfg.model,
+                p.cfg.method,
+                p.cfg.format,
+                p.cfg.lr,
+                p.cfg.steps,
+                p.cfg.seed,
+                p.cfg.digest()
+            );
+        }
+        return Ok(());
+    }
+
+    let out_dir =
+        PathBuf::from(args.str_or("out", &format!("{}/{}", cfg.results_dir, plan.name)));
+    std::fs::create_dir_all(&out_dir)?;
+    let workers = args.sweep_workers(cfg.sweep_workers)?;
+    let retries = args.usize_or("retries", 1)?;
+    let resume = args.switch("resume-sweep");
+    let journal_path = match args.flag("journal") {
+        Some(p) => Some(PathBuf::from(p)),
+        None if resume => {
+            Some(PathBuf::from(format!("{}/{}_sweep.jsonl", cfg.results_dir, plan.name)))
+        }
+        None => None,
+    };
+    let mut runner = lotion::coordinator::SweepRunner::new(&*factory, workers)
+        .with_retries(retries)
+        .with_spec_digest(plan.digest.as_str());
+    if let Some(jp) = &journal_path {
+        let done = if resume { SweepJournal::completed(jp)? } else { Vec::new() };
+        if let Some(stale) =
+            done.iter().find_map(|e| e.spec.as_deref().filter(|d| *d != plan.digest))
+        {
+            bail!(
+                "journal {jp:?} was written by a different spec \
+                 (journal digest {stale}, this spec {}); delete the journal \
+                 or revert the spec",
+                plan.digest
+            );
+        }
+        if !done.is_empty() {
+            info!("resuming sweep: {} journaled point(s) in {jp:?}", done.len());
+        }
+        runner = runner.with_journal(jp, done)?;
+    }
+    let mut points = plan.points;
+    for p in &mut points {
+        p.metrics_path = Some(out_dir.join(format!("{}.jsonl", p.label)));
+    }
+    let results = runner.run(
+        points,
+        &plan.score_format,
+        &plan.score_rounding,
+        &|engine: &dyn Executor, cfg: &RunConfig| build_inputs(engine, cfg, 7),
+    )?;
+
+    println!("{:<28} {:>12} {:>14} {:>10}", "label", "lr", "score", "diverged");
+    for r in &results {
+        println!("{:<28} {:>12.4e} {:>14.6} {:>10}", r.label, r.lr, r.score, r.diverged);
+    }
+    if let Some(i) = lotion::coordinator::sweep::best(&results) {
+        println!("best: {} score={:.6}", results[i].label, results[i].score);
+    }
+    if let Some(out) = args.flag("sweep-out") {
+        use lotion::formats::json::Json;
+        let mut text = String::new();
+        for r in &results {
+            let row = Json::obj(vec![
+                ("label", Json::str(r.label.clone())),
+                ("lr", Json::num(r.lr)),
+                ("score_bits", Json::str(format!("{:016x}", r.score.to_bits()))),
+                // NaN (a diverged score) is not a JSON number
+                ("score", if r.score.is_finite() { Json::num(r.score) } else { Json::Null }),
+                ("diverged", Json::Bool(r.diverged)),
+            ]);
+            text.push_str(&row.to_string());
+            text.push('\n');
+        }
+        std::fs::write(out, text)?;
+        info!("sweep results -> {out}");
     }
     Ok(())
 }

@@ -32,6 +32,15 @@ pub trait ExecutorFactory: Send + Sync {
     fn describe(&self) -> String {
         "executor factory".to_string()
     }
+
+    /// The model presets engines from this factory will carry, when the
+    /// backend can enumerate them without spawning (the native backend
+    /// can; artifact-backed backends may not). `None` = unknown —
+    /// callers (e.g. sweep-spec expansion) skip up-front model
+    /// validation and rely on spawn-time errors instead.
+    fn model_names(&self) -> Option<Vec<String>> {
+        None
+    }
 }
 
 #[cfg(test)]

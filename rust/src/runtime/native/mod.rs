@@ -130,6 +130,10 @@ impl ExecutorFactory for NativeFactory {
     fn describe(&self) -> String {
         format!("native ({} models, threads={})", self.models.len(), self.threads)
     }
+
+    fn model_names(&self) -> Option<Vec<String>> {
+        Some(self.models.iter().map(|m| m.program.name()).collect())
+    }
 }
 
 /// One executable native program (the registry value behind an entry).

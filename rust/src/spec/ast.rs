@@ -1,0 +1,191 @@
+//! Sweep-spec syntax tree + spanned errors.
+//!
+//! Every node carries a byte-offset [`Span`] into the source text so
+//! both parse-time and expansion-time diagnostics render as
+//! caret-underlined messages pointing at the offending token
+//! ([`SpecError::render`]).
+
+use std::fmt;
+
+/// Half-open byte range `[start, end)` into the spec source.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Span {
+    pub start: usize,
+    pub end: usize,
+}
+
+impl Span {
+    pub fn new(start: usize, end: usize) -> Span {
+        Span { start, end }
+    }
+
+    /// The smallest span covering both.
+    pub fn join(self, other: Span) -> Span {
+        Span { start: self.start.min(other.start), end: self.end.max(other.end) }
+    }
+}
+
+/// A spec error anchored to a source span. Render with the source text
+/// to get the `origin:line:col` + caret-underline form; `Display`
+/// alone prints just the message (for contexts without the source).
+#[derive(Clone, Debug)]
+pub struct SpecError {
+    pub msg: String,
+    pub span: Span,
+}
+
+impl SpecError {
+    pub fn new(msg: impl Into<String>, span: Span) -> SpecError {
+        SpecError { msg: msg.into(), span }
+    }
+
+    /// `origin:line:col: msg` plus the source line with the span
+    /// caret-underlined:
+    ///
+    /// ```text
+    /// fig2.sweep:3:15: unknown key "stpes" (did you mean "steps"?)
+    ///   grid: lr=[1] x stpes=[2]
+    ///                  ^^^^^
+    /// ```
+    pub fn render(&self, src: &str, origin: &str) -> String {
+        let start = self.span.start.min(src.len());
+        let line_start = src[..start].rfind('\n').map(|i| i + 1).unwrap_or(0);
+        let line_end = src[start..].find('\n').map(|i| start + i).unwrap_or(src.len());
+        let line_no = src[..start].matches('\n').count() + 1;
+        let col = start - line_start + 1;
+        let line = &src[line_start..line_end];
+        let carets = self.span.end.min(line_end).saturating_sub(start).max(1);
+        format!(
+            "{origin}:{line_no}:{col}: {msg}\n  {line}\n  {pad}{carets}",
+            msg = self.msg,
+            pad = " ".repeat(col - 1),
+            carets = "^".repeat(carets),
+        )
+    }
+
+    /// The rendered form as an `anyhow::Error` (the CLI surface).
+    pub fn to_anyhow(&self, src: &str, origin: &str) -> anyhow::Error {
+        anyhow::anyhow!("{}", self.render(src, origin))
+    }
+}
+
+impl fmt::Display for SpecError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)
+    }
+}
+
+impl std::error::Error for SpecError {}
+
+/// An atomic value: a number or a bare word (idents like `lotion`,
+/// `lm-tiny`, `int4@64`; quoted strings land here too).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Scalar {
+    Num(f64),
+    Word(String),
+}
+
+impl Scalar {
+    /// The value as it appears in point labels (`0.3`, `lotion`).
+    pub fn display(&self) -> String {
+        match self {
+            Scalar::Num(n) => format!("{n}"),
+            Scalar::Word(w) => w.clone(),
+        }
+    }
+}
+
+/// A scalar with its source span.
+#[derive(Clone, Debug)]
+pub struct ScalarNode {
+    pub v: Scalar,
+    pub span: Span,
+}
+
+/// The right-hand side of an assignment: a single scalar or a list
+/// (explicit `[...]` or an expanded `linspace`/`logspace` range).
+#[derive(Clone, Debug)]
+pub enum ValueNode {
+    Scalar(ScalarNode),
+    List(Vec<ScalarNode>, Span),
+}
+
+impl ValueNode {
+    pub fn span(&self) -> Span {
+        match self {
+            ValueNode::Scalar(s) => s.span,
+            ValueNode::List(_, span) => *span,
+        }
+    }
+}
+
+/// `key = value` — a spec-level default, or an override inside a
+/// `when` clause.
+#[derive(Clone, Debug)]
+pub struct Assign {
+    pub key: String,
+    pub key_span: Span,
+    pub value: ValueNode,
+}
+
+/// One axis of a `grid:` statement: `key=[v1,v2,...]` (ranges are
+/// expanded to explicit value lists at parse time).
+#[derive(Clone, Debug)]
+pub struct Axis {
+    pub key: String,
+    pub key_span: Span,
+    pub values: Vec<ScalarNode>,
+}
+
+/// One `key=value` condition of a `when` clause.
+#[derive(Clone, Debug)]
+pub struct Cond {
+    pub key: String,
+    pub key_span: Span,
+    pub value: ScalarNode,
+}
+
+/// A top-level statement.
+#[derive(Clone, Debug)]
+pub enum Stmt {
+    /// `key = value` — applies to every point (defaults)
+    Assign(Assign),
+    /// `grid: a=[..] x b=[..]` — one product block of the point grid
+    Grid { axes: Vec<Axis>, span: Span },
+    /// `when k=v, ...: key=value, ...` — conditional per-point override
+    When { conds: Vec<Cond>, assigns: Vec<Assign> },
+}
+
+/// A parsed spec: statements in file order.
+#[derive(Clone, Debug, Default)]
+pub struct SpecAst {
+    pub stmts: Vec<Stmt>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_points_at_the_span() {
+        let src = "a = 1\nb = nope\n";
+        let e = SpecError::new("bad value", Span::new(10, 14));
+        let r = e.render(src, "t.sweep");
+        assert_eq!(r, "t.sweep:2:5: bad value\n  b = nope\n      ^^^^");
+    }
+
+    #[test]
+    fn render_clamps_eof_spans() {
+        let src = "a = 1";
+        let e = SpecError::new("unexpected end", Span::new(5, 5));
+        let r = e.render(src, "t");
+        assert!(r.starts_with("t:1:6: unexpected end"), "{r}");
+        assert!(r.ends_with('^'), "{r}");
+    }
+
+    #[test]
+    fn span_join_covers_both() {
+        let s = Span::new(3, 5).join(Span::new(8, 12));
+        assert_eq!(s, Span::new(3, 12));
+    }
+}

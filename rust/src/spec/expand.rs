@@ -1,0 +1,721 @@
+//! Spec → grid expansion: turns a parsed [`SpecAst`] into labeled,
+//! validated [`SweepPoint`]s in deterministic grid order.
+//!
+//! Semantics (DESIGN.md §10):
+//!
+//! * **Defaults.** Plain `key = value` assignments apply to every
+//!   point, wherever they appear in the file. Three keys configure the
+//!   plan rather than the points: `seeds` (replicates per point),
+//!   `score_format` and `score_rounding` (the eval the runner scores
+//!   by; default the training format / `rtn`).
+//! * **Grids.** Each `grid:` statement contributes its full axis
+//!   product; multiple statements concatenate in file order, so
+//!   irregular (non-product) grids are a sequence of `grid:` lines.
+//!   Within one product the **first axis is outermost** — e.g.
+//!   `grid: method=[a,b] x lr=[1,2]` yields `a,1 a,2 b,1 b,2` — the
+//!   same method-major order the hard-coded experiments use.
+//! * **Conditionals.** `when k=v, ...: key=val, ...` applies its
+//!   assignments to every point matching *all* conditions, evaluated
+//!   in file order after the point's axis values are in place.
+//! * **Seeds.** `seeds = N` (N > 1) replicates every point with
+//!   `_s{k}` label suffixes and per-replicate seeds derived via
+//!   [`Rng::stream_seed`] from the point's base seed — decorrelated
+//!   streams, stable under grid edits elsewhere.
+//! * **Labels.** One part per axis: bare words keep the value
+//!   (`lotion`), numbers prefix the key's last dot-segment (`lr0.3`,
+//!   `sigma00.5`); parts join with `_`. `cfg.name` becomes
+//!   `{base_name}_{label}`. Duplicate labels are an error.
+//! * **Validation.** Every key/value is checked at apply time (methods
+//!   against the estimator registry, formats against the quantizer,
+//!   models against the engine's preset list when available) and every
+//!   expanded point runs [`RunConfig::validate`] — all *before* any
+//!   engine spawns, with caret-spanned errors.
+
+use crate::config::{RunConfig, Schedule};
+use crate::coordinator::sweep::SweepPoint;
+use crate::quant::{QuantFormat, Rounding};
+use crate::runtime::native::estimator::{self, EstSchedule};
+use crate::util::text::nearest;
+use crate::util::Rng;
+
+use super::ast::{Assign, Scalar, ScalarNode, Span, SpecAst, SpecError, Stmt, ValueNode};
+
+/// Per-point config keys a spec may assign or sweep.
+pub const KNOWN_KEYS: [&str; 17] = [
+    "name",
+    "model",
+    "method",
+    "format",
+    "steps",
+    "lr",
+    "lambda",
+    "seed",
+    "eval_every",
+    "schedule",
+    "warmup",
+    "final_frac",
+    "eval_formats",
+    "eval_roundings",
+    "est.schedule",
+    "est.sigma0",
+    "est.grad_scale",
+];
+
+/// Plan-level keys: configure the sweep, not individual points.
+pub const PLAN_KEYS: [&str; 3] = ["seeds", "score_format", "score_rounding"];
+
+/// An expanded, validated sweep: what `lotion sweep --spec` hands to
+/// the sharded `SweepRunner`.
+#[derive(Clone, Debug)]
+pub struct SweepPlan {
+    /// base name (the spec's `name` default) — journal/output prefix
+    pub name: String,
+    /// labeled points in deterministic grid order
+    pub points: Vec<SweepPoint>,
+    /// eval format the runner scores by
+    pub score_format: String,
+    /// eval rounding the runner scores by
+    pub score_rounding: String,
+    /// replicates per grid point (`seeds = N`)
+    pub seeds: usize,
+    /// FNV-1a digest of the spec source (filled by [`super::plan`];
+    /// empty when expanding a bare AST)
+    pub digest: String,
+}
+
+fn unknown_key(key: &str, span: Span) -> SpecError {
+    let all = KNOWN_KEYS.iter().chain(PLAN_KEYS.iter()).copied();
+    match nearest(key, all) {
+        Some(s) => SpecError::new(format!("unknown key {key:?} (did you mean {s:?}?)"), span),
+        None => SpecError::new(
+            format!(
+                "unknown key {key:?} (known keys: {}; plan keys: {})",
+                KNOWN_KEYS.join(", "),
+                PLAN_KEYS.join(", ")
+            ),
+            span,
+        ),
+    }
+}
+
+fn want_word<'a>(key: &str, v: &'a ScalarNode) -> Result<&'a str, SpecError> {
+    match &v.v {
+        Scalar::Word(w) => Ok(w),
+        Scalar::Num(n) => Err(SpecError::new(
+            format!("{key} expects a name, got number {n}"),
+            v.span,
+        )),
+    }
+}
+
+fn want_num(key: &str, v: &ScalarNode) -> Result<f64, SpecError> {
+    match &v.v {
+        Scalar::Num(n) => Ok(*n),
+        Scalar::Word(w) => Err(SpecError::new(
+            format!("{key} expects a number, got {w:?}"),
+            v.span,
+        )),
+    }
+}
+
+fn want_uint(key: &str, v: &ScalarNode) -> Result<usize, SpecError> {
+    let n = want_num(key, v)?;
+    if n.fract() != 0.0 || n < 0.0 || n > u32::MAX as f64 {
+        return Err(SpecError::new(
+            format!("{key} must be a non-negative integer, got {n}"),
+            v.span,
+        ));
+    }
+    Ok(n as usize)
+}
+
+/// Apply one scalar `key = value` to a config. Validates the value
+/// against the relevant registry (estimators, quant formats, schedule
+/// names, model presets) so bad points fail before any engine spawns.
+fn apply(
+    cfg: &mut RunConfig,
+    key: &str,
+    key_span: Span,
+    v: &ScalarNode,
+    known_models: Option<&[String]>,
+) -> Result<(), SpecError> {
+    match key {
+        "name" => cfg.name = want_word(key, v)?.to_string(),
+        "model" => {
+            let w = want_word(key, v)?;
+            if let Some(models) = known_models {
+                if !models.iter().any(|m| m == w) {
+                    let msg = match nearest(w, models.iter().map(|m| m.as_str())) {
+                        Some(s) => format!("unknown model {w:?} (did you mean {s:?}?)"),
+                        None => format!(
+                            "unknown model {w:?} (known models: {})",
+                            models.join(", ")
+                        ),
+                    };
+                    return Err(SpecError::new(msg, v.span));
+                }
+            }
+            cfg.model = w.to_string();
+        }
+        "method" => {
+            let w = want_word(key, v)?;
+            // registry-driven: the error lists the known estimators
+            estimator::parse(w).map_err(|e| SpecError::new(e.to_string(), v.span))?;
+            cfg.method = w.to_string();
+        }
+        "format" => {
+            let w = want_word(key, v)?;
+            if w != "none" {
+                QuantFormat::parse(w, 0).map_err(|e| SpecError::new(e.to_string(), v.span))?;
+            }
+            cfg.format = w.to_string();
+        }
+        "steps" => cfg.steps = want_uint(key, v)?,
+        "lr" => cfg.lr = want_num(key, v)?,
+        "lambda" => cfg.lambda = want_num(key, v)?,
+        "seed" => cfg.seed = want_uint(key, v)? as u64,
+        "eval_every" => cfg.eval_every = want_uint(key, v)?,
+        "schedule" => match want_word(key, v)? {
+            "constant" => cfg.schedule = Schedule::Constant,
+            "cosine" => {
+                if !matches!(cfg.schedule, Schedule::Cosine { .. }) {
+                    let d = RunConfig::default();
+                    cfg.schedule = d.schedule;
+                }
+            }
+            other => {
+                return Err(SpecError::new(
+                    format!("unknown schedule {other:?} (known schedules: constant, cosine)"),
+                    v.span,
+                ))
+            }
+        },
+        "warmup" => {
+            let n = want_uint(key, v)?;
+            match &mut cfg.schedule {
+                Schedule::Cosine { warmup, .. } => *warmup = n,
+                Schedule::Constant => {
+                    return Err(SpecError::new(
+                        "warmup requires schedule=cosine (set `schedule = cosine` first)",
+                        key_span,
+                    ))
+                }
+            }
+        }
+        "final_frac" => {
+            let n = want_num(key, v)?;
+            match &mut cfg.schedule {
+                Schedule::Cosine { final_frac, .. } => *final_frac = n,
+                Schedule::Constant => {
+                    return Err(SpecError::new(
+                        "final_frac requires schedule=cosine (set `schedule = cosine` first)",
+                        key_span,
+                    ))
+                }
+            }
+        }
+        "eval_formats" => {
+            let w = want_word(key, v)?;
+            if w != "none" {
+                QuantFormat::parse(w, 0).map_err(|e| SpecError::new(e.to_string(), v.span))?;
+            }
+            cfg.eval_formats = vec![w.to_string()];
+        }
+        "eval_roundings" => {
+            let r = Rounding::parse(want_word(key, v)?)
+                .map_err(|e| SpecError::new(e.to_string(), v.span))?;
+            cfg.eval_roundings = vec![r];
+        }
+        "est.schedule" => {
+            cfg.est_schedule = EstSchedule::parse(want_word(key, v)?)
+                .map_err(|e| SpecError::new(e.to_string(), v.span))?;
+        }
+        "est.sigma0" => cfg.est_sigma0 = want_num(key, v)?,
+        "est.grad_scale" => cfg.est_grad_scale = want_num(key, v)?,
+        _ => return Err(unknown_key(key, key_span)),
+    }
+    Ok(())
+}
+
+/// Apply a defaults assignment, which may be list-valued for the two
+/// list-typed config fields; any other list value points at `grid:`.
+fn apply_default(
+    cfg: &mut RunConfig,
+    a: &Assign,
+    known_models: Option<&[String]>,
+) -> Result<(), SpecError> {
+    match (&a.value, a.key.as_str()) {
+        (ValueNode::List(vs, _), "eval_formats") => {
+            let mut out = Vec::with_capacity(vs.len());
+            for v in vs {
+                let w = want_word(&a.key, v)?;
+                if w != "none" {
+                    QuantFormat::parse(w, 0).map_err(|e| SpecError::new(e.to_string(), v.span))?;
+                }
+                out.push(w.to_string());
+            }
+            cfg.eval_formats = out;
+            Ok(())
+        }
+        (ValueNode::List(vs, _), "eval_roundings") => {
+            let mut out = Vec::with_capacity(vs.len());
+            for v in vs {
+                out.push(
+                    Rounding::parse(want_word(&a.key, v)?)
+                        .map_err(|e| SpecError::new(e.to_string(), v.span))?,
+                );
+            }
+            cfg.eval_roundings = out;
+            Ok(())
+        }
+        (ValueNode::List(_, span), key) => Err(SpecError::new(
+            format!("list value for scalar key {key:?} — use `grid: {key}=[...]` to sweep it"),
+            *span,
+        )),
+        (ValueNode::Scalar(v), _) => apply(cfg, &a.key, a.key_span, v, known_models),
+    }
+}
+
+/// Current config value of a key, for `when` condition matching.
+/// `None` = the key exists but is not testable (list-typed, or
+/// schedule params under a non-cosine schedule).
+fn current(cfg: &RunConfig, key: &str) -> Result<Option<Scalar>, ()> {
+    Ok(Some(match key {
+        "name" => Scalar::Word(cfg.name.clone()),
+        "model" => Scalar::Word(cfg.model.clone()),
+        "method" => Scalar::Word(cfg.method.clone()),
+        "format" => Scalar::Word(cfg.format.clone()),
+        "steps" => Scalar::Num(cfg.steps as f64),
+        "lr" => Scalar::Num(cfg.lr),
+        "lambda" => Scalar::Num(cfg.lambda),
+        "seed" => Scalar::Num(cfg.seed as f64),
+        "eval_every" => Scalar::Num(cfg.eval_every as f64),
+        "schedule" => Scalar::Word(
+            match cfg.schedule {
+                Schedule::Constant => "constant",
+                Schedule::Cosine { .. } => "cosine",
+            }
+            .into(),
+        ),
+        "warmup" => match cfg.schedule {
+            Schedule::Cosine { warmup, .. } => Scalar::Num(warmup as f64),
+            Schedule::Constant => return Ok(None),
+        },
+        "final_frac" => match cfg.schedule {
+            Schedule::Cosine { final_frac, .. } => Scalar::Num(final_frac),
+            Schedule::Constant => return Ok(None),
+        },
+        "est.schedule" => Scalar::Word(cfg.est_schedule.name().into()),
+        "est.sigma0" => Scalar::Num(cfg.est_sigma0),
+        "est.grad_scale" => Scalar::Num(cfg.est_grad_scale),
+        "eval_formats" | "eval_roundings" => return Ok(None),
+        _ => return Err(()),
+    }))
+}
+
+/// One label part per axis value: bare words as-is, numbers prefixed
+/// with the key's last dot-segment (`est.sigma0` → `sigma0`).
+fn label_part(key: &str, v: &Scalar) -> String {
+    match v {
+        Scalar::Word(w) => w.clone(),
+        Scalar::Num(_) => {
+            let short = key.rsplit('.').next().unwrap_or(key);
+            format!("{short}{}", v.display())
+        }
+    }
+}
+
+/// Expand a parsed spec against a base config. `known_models`, when
+/// available (native backend), validates `model` values up front. The
+/// returned plan's `digest` is empty — [`super::plan`] stamps it from
+/// the raw source.
+pub fn expand(
+    ast: &SpecAst,
+    base: &RunConfig,
+    known_models: Option<&[String]>,
+) -> Result<SweepPlan, SpecError> {
+    let mut defaults = base.clone();
+    let mut seeds: usize = 1;
+    let mut score_format: Option<String> = None;
+    let mut score_rounding: Option<String> = None;
+    let mut grids: Vec<(&[super::ast::Axis], Span)> = Vec::new();
+    let mut whens: Vec<(&[super::ast::Cond], &[Assign])> = Vec::new();
+
+    // pass 1: defaults + plan keys, collect grids/whens in file order
+    for stmt in &ast.stmts {
+        match stmt {
+            Stmt::Assign(a) => match a.key.as_str() {
+                "seeds" => {
+                    let v = match &a.value {
+                        ValueNode::Scalar(s) => s,
+                        ValueNode::List(_, span) => {
+                            return Err(SpecError::new(
+                                "seeds expects a single integer",
+                                *span,
+                            ))
+                        }
+                    };
+                    seeds = want_uint("seeds", v)?;
+                    if seeds == 0 {
+                        return Err(SpecError::new("seeds must be >= 1", v.span));
+                    }
+                }
+                "score_format" | "score_rounding" => {
+                    let v = match &a.value {
+                        ValueNode::Scalar(s) => s,
+                        ValueNode::List(_, span) => {
+                            return Err(SpecError::new(
+                                format!("{} expects a single value", a.key),
+                                *span,
+                            ))
+                        }
+                    };
+                    let w = want_word(&a.key, v)?.to_string();
+                    if a.key == "score_rounding" {
+                        Rounding::parse(&w)
+                            .map_err(|e| SpecError::new(e.to_string(), v.span))?;
+                        score_rounding = Some(w);
+                    } else {
+                        if w != "none" {
+                            QuantFormat::parse(&w, 0)
+                                .map_err(|e| SpecError::new(e.to_string(), v.span))?;
+                        }
+                        score_format = Some(w);
+                    }
+                }
+                _ => apply_default(&mut defaults, a, known_models)?,
+            },
+            Stmt::Grid { axes, span } => grids.push((axes.as_slice(), *span)),
+            Stmt::When { conds, assigns } => whens.push((conds.as_slice(), assigns.as_slice())),
+        }
+    }
+
+    // axis/when keys must be per-point config keys, never plan keys
+    for (axes, _) in &grids {
+        for ax in axes.iter() {
+            if PLAN_KEYS.contains(&ax.key.as_str()) {
+                return Err(SpecError::new(
+                    format!("{:?} is a plan-level key; it cannot be a grid axis", ax.key),
+                    ax.key_span,
+                ));
+            }
+            if ax.key == "name" {
+                return Err(SpecError::new("name cannot be swept", ax.key_span));
+            }
+            if !KNOWN_KEYS.contains(&ax.key.as_str()) {
+                return Err(unknown_key(&ax.key, ax.key_span));
+            }
+        }
+    }
+    for (conds, assigns) in &whens {
+        for c in conds.iter() {
+            if current(&defaults, &c.key).is_err() {
+                return Err(unknown_key(&c.key, c.key_span));
+            }
+        }
+        for a in assigns.iter() {
+            if PLAN_KEYS.contains(&a.key.as_str()) || a.key == "name" {
+                return Err(SpecError::new(
+                    format!("{:?} cannot be assigned in a `when` clause", a.key),
+                    a.key_span,
+                ));
+            }
+            // static check, so a typo in a never-matching clause still errors
+            if !KNOWN_KEYS.contains(&a.key.as_str()) {
+                return Err(unknown_key(&a.key, a.key_span));
+            }
+        }
+    }
+
+    // pass 2: expand each grid's product, first axis outermost
+    const MAX_POINTS: usize = 100_000;
+    let mut labeled: Vec<(String, RunConfig, Span)> = Vec::new();
+    for &(axes, span) in &grids {
+        let total: usize = axes.iter().map(|a| a.values.len()).product();
+        if labeled.len().saturating_add(total).saturating_mul(seeds.max(1)) > MAX_POINTS {
+            return Err(SpecError::new(
+                format!("spec expands to more than {MAX_POINTS} points"),
+                span,
+            ));
+        }
+        for k in 0..total {
+            let mut idx = k;
+            let mut pos = vec![0usize; axes.len()];
+            for i in (0..axes.len()).rev() {
+                pos[i] = idx % axes[i].values.len();
+                idx /= axes[i].values.len();
+            }
+            let mut cfg = defaults.clone();
+            let mut parts = Vec::with_capacity(axes.len());
+            for (i, ax) in axes.iter().enumerate() {
+                let v = &ax.values[pos[i]];
+                apply(&mut cfg, &ax.key, ax.key_span, v, known_models)?;
+                parts.push(label_part(&ax.key, &v.v));
+            }
+            apply_whens(&mut cfg, &whens, known_models)?;
+            labeled.push((parts.join("_"), cfg, span));
+        }
+    }
+    if grids.is_empty() {
+        // a grid-less spec is a single run of the defaults
+        let mut cfg = defaults.clone();
+        apply_whens(&mut cfg, &whens, known_models)?;
+        let span = Span::new(0, 0);
+        labeled.push((defaults.name.clone(), cfg, span));
+    }
+
+    // seeds replicates + final naming/validation
+    let base_name = defaults.name.clone();
+    let mut points = Vec::with_capacity(labeled.len() * seeds);
+    let mut seen = std::collections::BTreeSet::new();
+    for (label, cfg, span) in labeled {
+        for s in 0..seeds {
+            let mut c = cfg.clone();
+            let label = if seeds > 1 { format!("{label}_s{s}") } else { label.clone() };
+            if seeds > 1 {
+                c.seed = Rng::stream_seed(c.seed, &[s as u64]);
+            }
+            if c.name == base_name || c.name.is_empty() {
+                c.name = if label == base_name {
+                    base_name.clone()
+                } else {
+                    format!("{base_name}_{label}")
+                };
+            }
+            if !seen.insert(label.clone()) {
+                return Err(SpecError::new(
+                    format!("duplicate point label {label:?} — grids overlap"),
+                    span,
+                ));
+            }
+            c.validate()
+                .map_err(|e| SpecError::new(format!("point {label:?}: {e}"), span))?;
+            points.push(SweepPoint::new(label, c));
+        }
+    }
+    if points.is_empty() {
+        return Err(SpecError::new("spec expands to zero points", Span::new(0, 0)));
+    }
+
+    Ok(SweepPlan {
+        name: base_name,
+        score_format: score_format.unwrap_or_else(|| defaults.format.clone()),
+        score_rounding: score_rounding.unwrap_or_else(|| "rtn".into()),
+        seeds,
+        digest: String::new(),
+        points,
+    })
+}
+
+/// Apply every matching `when` clause, in file order, against the
+/// point's current values (so later clauses see earlier overrides).
+fn apply_whens(
+    cfg: &mut RunConfig,
+    whens: &[(&[super::ast::Cond], &[Assign])],
+    known_models: Option<&[String]>,
+) -> Result<(), SpecError> {
+    for (conds, assigns) in whens {
+        let mut all = true;
+        for c in conds.iter() {
+            let cur = match current(cfg, &c.key) {
+                Ok(Some(v)) => v,
+                Ok(None) => {
+                    all = false;
+                    break;
+                }
+                Err(()) => return Err(unknown_key(&c.key, c.key_span)),
+            };
+            let m = match (&cur, &c.value.v) {
+                (Scalar::Word(a), Scalar::Word(b)) => a == b,
+                (Scalar::Num(a), Scalar::Num(b)) => a == b,
+                (have, want) => {
+                    return Err(SpecError::new(
+                        format!(
+                            "type mismatch: {} is {}, condition compares against {}",
+                            c.key,
+                            kind(have),
+                            kind(want)
+                        ),
+                        c.value.span,
+                    ))
+                }
+            };
+            if !m {
+                all = false;
+                break;
+            }
+        }
+        if !all {
+            continue;
+        }
+        for a in assigns.iter() {
+            let v = match &a.value {
+                ValueNode::Scalar(s) => s,
+                ValueNode::List(_, span) => {
+                    return Err(SpecError::new(
+                        "`when` overrides take single values, not lists",
+                        *span,
+                    ))
+                }
+            };
+            apply(cfg, &a.key, a.key_span, v, known_models)?;
+        }
+    }
+    Ok(())
+}
+
+fn kind(s: &Scalar) -> &'static str {
+    match s {
+        Scalar::Num(_) => "a number",
+        Scalar::Word(_) => "a name",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::parser::parse;
+    use super::*;
+
+    fn base() -> RunConfig {
+        RunConfig::default()
+    }
+
+    fn labels(p: &SweepPlan) -> Vec<&str> {
+        p.points.iter().map(|p| p.label.as_str()).collect()
+    }
+
+    const GOLDEN: &str = "name = g\nmodel = linreg_d256\nsteps = 16\n\
+                          grid: method=[qat,lotion] x lr=[0.1,0.2]\n\
+                          when method=lotion: lambda=0.5\n";
+
+    #[test]
+    fn golden_expansion_order_and_overrides() {
+        let plan = expand(&parse(GOLDEN).unwrap(), &base(), None).unwrap();
+        // first axis outermost: method-major, exactly like exp fig2
+        assert_eq!(labels(&plan), ["qat_lr0.1", "qat_lr0.2", "lotion_lr0.1", "lotion_lr0.2"]);
+        assert_eq!(plan.name, "g");
+        assert_eq!(plan.score_format, "int4"); // defaults to the training format
+        assert_eq!(plan.score_rounding, "rtn");
+        let p = &plan.points[3];
+        assert_eq!(p.cfg.name, "g_lotion_lr0.2");
+        assert_eq!(p.cfg.method, "lotion");
+        assert_eq!(p.cfg.lr, 0.2);
+        assert_eq!(p.cfg.lambda, 0.5, "when-clause applied to lotion points");
+        assert_eq!(plan.points[0].cfg.lambda, 1.0, "qat points keep the default");
+        assert_eq!(p.cfg.steps, 16);
+    }
+
+    #[test]
+    fn multiple_grids_concatenate_in_file_order() {
+        let src = "grid: method=[qat]\ngrid: method=[anneal] x est.sigma0=[0.5,1]\n";
+        let plan = expand(&parse(src).unwrap(), &base(), None).unwrap();
+        assert_eq!(labels(&plan), ["qat", "anneal_sigma00.5", "anneal_sigma01"]);
+        assert_eq!(plan.points[2].cfg.est_sigma0, 1.0);
+    }
+
+    #[test]
+    fn seeds_replicate_with_stream_seeds() {
+        let src = "seeds = 3\nseed = 7\ngrid: method=[qat,lotion]\n";
+        let plan = expand(&parse(src).unwrap(), &base(), None).unwrap();
+        assert_eq!(
+            labels(&plan),
+            ["qat_s0", "qat_s1", "qat_s2", "lotion_s0", "lotion_s1", "lotion_s2"]
+        );
+        let seeds: Vec<u64> = plan.points.iter().map(|p| p.cfg.seed).collect();
+        assert_eq!(seeds[0], Rng::stream_seed(7, &[0]));
+        assert_eq!(seeds[2], Rng::stream_seed(7, &[2]));
+        assert_eq!(seeds[0], seeds[3], "same replicate index → same derived seed");
+        assert_ne!(seeds[0], seeds[1]);
+    }
+
+    #[test]
+    fn no_grid_spec_is_a_single_point() {
+        let src = "name = solo\nmethod = qat\nsteps = 8\n";
+        let plan = expand(&parse(src).unwrap(), &base(), None).unwrap();
+        assert_eq!(labels(&plan), ["solo"]);
+        assert_eq!(plan.points[0].cfg.name, "solo");
+        assert_eq!(plan.points[0].cfg.method, "qat");
+    }
+
+    #[test]
+    fn unknown_keys_suggest_the_nearest() {
+        let src = "stpes = 16\n";
+        let e = expand(&parse(src).unwrap(), &base(), None).unwrap_err();
+        assert_eq!(e.msg, "unknown key \"stpes\" (did you mean \"steps\"?)");
+        let src = "grid: lamda=[0.1]\n";
+        let e = expand(&parse(src).unwrap(), &base(), None).unwrap_err();
+        assert!(e.msg.contains("did you mean \"lambda\"?"), "{}", e.msg);
+        let src = "when method=qat: lamda=0.1\n";
+        let e = expand(&parse(src).unwrap(), &base(), None).unwrap_err();
+        assert!(e.msg.contains("did you mean \"lambda\"?"), "{}", e.msg);
+    }
+
+    #[test]
+    fn registry_backed_value_errors() {
+        let e = expand(&parse("method = magic\n").unwrap(), &base(), None).unwrap_err();
+        assert!(e.msg.contains("known estimators"), "{}", e.msg);
+        let e = expand(&parse("format = int99\n").unwrap(), &base(), None).unwrap_err();
+        assert!(e.msg.contains("int99"), "{}", e.msg);
+        let e = expand(&parse("est.schedule = warp\n").unwrap(), &base(), None).unwrap_err();
+        assert!(e.msg.contains("known schedules"), "{}", e.msg);
+        let models = vec!["linreg_d256".to_string(), "lm-tiny".to_string()];
+        let e =
+            expand(&parse("model = lm-tinny\n").unwrap(), &base(), Some(&models)).unwrap_err();
+        assert!(e.msg.contains("did you mean \"lm-tiny\"?"), "{}", e.msg);
+        assert!(expand(&parse("model = lm-tiny\n").unwrap(), &base(), Some(&models)).is_ok());
+    }
+
+    #[test]
+    fn per_point_validation_names_the_point() {
+        let e = expand(&parse("grid: lr=[0.1,-1]\n").unwrap(), &base(), None).unwrap_err();
+        assert!(e.msg.starts_with("point \"lr-1\":"), "{}", e.msg);
+        assert!(e.msg.contains("train.lr must be > 0"), "{}", e.msg);
+    }
+
+    #[test]
+    fn duplicate_labels_error() {
+        let src = "grid: method=[qat]\ngrid: method=[qat]\n";
+        let e = expand(&parse(src).unwrap(), &base(), None).unwrap_err();
+        assert!(e.msg.contains("duplicate point label \"qat\""), "{}", e.msg);
+    }
+
+    #[test]
+    fn plan_keys_cannot_be_axes() {
+        let e = expand(&parse("grid: seeds=[1,2]\n").unwrap(), &base(), None).unwrap_err();
+        assert!(e.msg.contains("plan-level key"), "{}", e.msg);
+    }
+
+    #[test]
+    fn when_type_mismatch_is_an_error() {
+        let src = "grid: method=[qat]\nwhen lr=qat: lambda=0.5\n";
+        let e = expand(&parse(src).unwrap(), &base(), None).unwrap_err();
+        assert!(e.msg.contains("type mismatch"), "{}", e.msg);
+    }
+
+    #[test]
+    fn list_for_scalar_key_points_at_grid() {
+        let e = expand(&parse("lr = [0.1, 0.2]\n").unwrap(), &base(), None).unwrap_err();
+        assert!(e.msg.contains("use `grid: lr=[...]`"), "{}", e.msg);
+    }
+
+    #[test]
+    fn schedule_and_est_fields_apply() {
+        let src = "schedule = cosine\nwarmup = 4\nfinal_frac = 0.2\n\
+                   eval_formats = [int4, int8]\neval_roundings = [rr]\n\
+                   score_format = int4\nscore_rounding = rr\n\
+                   grid: method=[anneal] x est.schedule=[cosine,linear]\n";
+        let plan = expand(&parse(src).unwrap(), &base(), None).unwrap();
+        assert_eq!(labels(&plan), ["anneal_cosine", "anneal_linear"]);
+        let c = &plan.points[0].cfg;
+        assert_eq!(c.schedule, Schedule::Cosine { warmup: 4, final_frac: 0.2 });
+        assert_eq!(c.eval_formats, ["int4", "int8"]);
+        assert_eq!(c.eval_roundings, vec![Rounding::Rr]);
+        assert_eq!(c.est_schedule, EstSchedule::Cosine);
+        assert_eq!(plan.points[1].cfg.est_schedule, EstSchedule::Linear);
+        assert_eq!(plan.score_rounding, "rr");
+        // warmup under an explicit constant schedule is rejected
+        let e = expand(&parse("schedule = constant\nwarmup = 4\n").unwrap(), &base(), None)
+            .unwrap_err();
+        assert!(e.msg.contains("requires schedule=cosine"), "{}", e.msg);
+    }
+}

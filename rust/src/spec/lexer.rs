@@ -1,0 +1,238 @@
+//! Sweep-spec lexer: byte-offset spanned tokens, `#` comments,
+//! newline-terminated statements.
+//!
+//! Idents are permissive on purpose — `lm-150m-sim`, `int4@64` and
+//! dotted keys like `est.sigma0` are single tokens — while anything
+//! starting with a digit (or a sign followed by a digit/dot) lexes as
+//! a number, so `3e-3` and `-0.5` are numbers, not idents.
+
+use super::ast::{Span, SpecError};
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Tok {
+    Ident(String),
+    Num(f64),
+    Str(String),
+    Eq,
+    LBracket,
+    RBracket,
+    LParen,
+    RParen,
+    Comma,
+    Colon,
+    Newline,
+    Eof,
+}
+
+impl Tok {
+    /// Short human name for "expected X, found Y" diagnostics.
+    pub fn describe(&self) -> String {
+        match self {
+            Tok::Ident(s) => format!("{s:?}"),
+            Tok::Num(n) => format!("number {n}"),
+            Tok::Str(s) => format!("string {s:?}"),
+            Tok::Eq => "'='".into(),
+            Tok::LBracket => "'['".into(),
+            Tok::RBracket => "']'".into(),
+            Tok::LParen => "'('".into(),
+            Tok::RParen => "')'".into(),
+            Tok::Comma => "','".into(),
+            Tok::Colon => "':'".into(),
+            Tok::Newline => "end of line".into(),
+            Tok::Eof => "end of spec".into(),
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Token {
+    pub tok: Tok,
+    pub span: Span,
+}
+
+fn is_ident_start(b: u8) -> bool {
+    b.is_ascii_alphabetic() || b == b'_'
+}
+
+fn is_ident_continue(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || matches!(b, b'_' | b'-' | b'.' | b'@')
+}
+
+/// Tokenize the whole source; the final token is always [`Tok::Eof`].
+pub fn lex(src: &str) -> Result<Vec<Token>, SpecError> {
+    let bytes = src.as_bytes();
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < bytes.len() {
+        let b = bytes[i];
+        match b {
+            b' ' | b'\t' | b'\r' => i += 1,
+            b'#' => {
+                while i < bytes.len() && bytes[i] != b'\n' {
+                    i += 1;
+                }
+            }
+            b'\n' => {
+                out.push(Token { tok: Tok::Newline, span: Span::new(i, i + 1) });
+                i += 1;
+            }
+            b'=' | b'[' | b']' | b'(' | b')' | b',' | b':' => {
+                let tok = match b {
+                    b'=' => Tok::Eq,
+                    b'[' => Tok::LBracket,
+                    b']' => Tok::RBracket,
+                    b'(' => Tok::LParen,
+                    b')' => Tok::RParen,
+                    b',' => Tok::Comma,
+                    _ => Tok::Colon,
+                };
+                out.push(Token { tok, span: Span::new(i, i + 1) });
+                i += 1;
+            }
+            b'"' => {
+                let start = i;
+                i += 1;
+                let s0 = i;
+                while i < bytes.len() && bytes[i] != b'"' && bytes[i] != b'\n' {
+                    i += 1;
+                }
+                if i >= bytes.len() || bytes[i] != b'"' {
+                    return Err(SpecError::new(
+                        "unterminated string",
+                        Span::new(start, i),
+                    ));
+                }
+                out.push(Token {
+                    tok: Tok::Str(src[s0..i].to_string()),
+                    span: Span::new(start, i + 1),
+                });
+                i += 1;
+            }
+            _ if is_ident_start(b) => {
+                let start = i;
+                while i < bytes.len() && is_ident_continue(bytes[i]) {
+                    i += 1;
+                }
+                out.push(Token {
+                    tok: Tok::Ident(src[start..i].to_string()),
+                    span: Span::new(start, i),
+                });
+            }
+            _ if b.is_ascii_digit()
+                || ((b == b'-' || b == b'+')
+                    && i + 1 < bytes.len()
+                    && (bytes[i + 1].is_ascii_digit() || bytes[i + 1] == b'.')) =>
+            {
+                let start = i;
+                if b == b'-' || b == b'+' {
+                    i += 1;
+                }
+                while i < bytes.len() && (bytes[i].is_ascii_digit() || bytes[i] == b'.') {
+                    i += 1;
+                }
+                // exponent: e/E, optional sign, at least one digit
+                if i < bytes.len() && (bytes[i] == b'e' || bytes[i] == b'E') {
+                    let mut j = i + 1;
+                    if j < bytes.len() && (bytes[j] == b'-' || bytes[j] == b'+') {
+                        j += 1;
+                    }
+                    if j < bytes.len() && bytes[j].is_ascii_digit() {
+                        i = j;
+                        while i < bytes.len() && bytes[i].is_ascii_digit() {
+                            i += 1;
+                        }
+                    }
+                }
+                let span = Span::new(start, i);
+                let text = &src[start..i];
+                let n: f64 = text.parse().map_err(|_| {
+                    SpecError::new(format!("invalid number {text:?}"), span)
+                })?;
+                out.push(Token { tok: Tok::Num(n), span });
+            }
+            _ => {
+                let ch = src[i..].chars().next().unwrap_or('?');
+                return Err(SpecError::new(
+                    format!("unexpected character {ch:?}"),
+                    Span::new(i, i + ch.len_utf8()),
+                ));
+            }
+        }
+    }
+    out.push(Token { tok: Tok::Eof, span: Span::new(bytes.len(), bytes.len()) });
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<Tok> {
+        lex(src).unwrap().into_iter().map(|t| t.tok).collect()
+    }
+
+    #[test]
+    fn lexes_axis_product_line() {
+        let toks = kinds("grid: method=[qat,lotion] x lr=logspace(-3,-1,8)");
+        assert_eq!(toks[0], Tok::Ident("grid".into()));
+        assert_eq!(toks[1], Tok::Colon);
+        assert_eq!(toks[2], Tok::Ident("method".into()));
+        assert_eq!(toks[3], Tok::Eq);
+        assert_eq!(toks[4], Tok::LBracket);
+        assert_eq!(toks[5], Tok::Ident("qat".into()));
+        assert!(toks.contains(&Tok::Ident("x".into())));
+        assert!(toks.contains(&Tok::Ident("logspace".into())));
+        assert!(toks.contains(&Tok::Num(-3.0)));
+        assert_eq!(*toks.last().unwrap(), Tok::Eof);
+    }
+
+    #[test]
+    fn numbers_idents_and_formats() {
+        assert_eq!(kinds("3e-3")[0], Tok::Num(3e-3));
+        assert_eq!(kinds("-0.5")[0], Tok::Num(-0.5));
+        assert_eq!(kinds("int4@64")[0], Tok::Ident("int4@64".into()));
+        assert_eq!(kinds("lm-150m-sim")[0], Tok::Ident("lm-150m-sim".into()));
+        assert_eq!(kinds("est.sigma0")[0], Tok::Ident("est.sigma0".into()));
+        assert_eq!(kinds("\"two words\"")[0], Tok::Str("two words".into()));
+    }
+
+    #[test]
+    fn comments_and_newlines() {
+        let toks = kinds("a = 1 # trailing\n# full line\nb = 2");
+        assert_eq!(
+            toks,
+            vec![
+                Tok::Ident("a".into()),
+                Tok::Eq,
+                Tok::Num(1.0),
+                Tok::Newline,
+                Tok::Newline,
+                Tok::Ident("b".into()),
+                Tok::Eq,
+                Tok::Num(2.0),
+                Tok::Eof,
+            ]
+        );
+    }
+
+    #[test]
+    fn spans_are_byte_offsets() {
+        let toks = lex("ab = 12").unwrap();
+        assert_eq!(toks[0].span, Span::new(0, 2));
+        assert_eq!(toks[1].span, Span::new(3, 4));
+        assert_eq!(toks[2].span, Span::new(5, 7));
+        assert_eq!(toks[3].span, Span::new(7, 7)); // Eof
+    }
+
+    #[test]
+    fn bad_inputs_error_with_spans() {
+        let e = lex("a = 1.2.3").unwrap_err();
+        assert!(e.msg.contains("invalid number"), "{}", e.msg);
+        assert_eq!(e.span.start, 4);
+        let e = lex("a = \"open").unwrap_err();
+        assert!(e.msg.contains("unterminated string"), "{}", e.msg);
+        let e = lex("a = !").unwrap_err();
+        assert!(e.msg.contains("unexpected character"), "{}", e.msg);
+        assert_eq!(e.span.start, 4);
+    }
+}

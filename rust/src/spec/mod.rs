@@ -1,0 +1,141 @@
+//! Sweep-spec DSL (DESIGN.md §10): a small experiment language that
+//! feeds parsed grids straight into the sharded
+//! [`SweepRunner`](crate::coordinator::sweep::SweepRunner).
+//!
+//! A spec is a line-oriented text file:
+//!
+//! ```text
+//! # fig2-style product, method-major
+//! name  = demo
+//! model = linreg_d256
+//! steps = 200
+//!
+//! grid: method=[qat,rat,lotion] x lr=logspace(-3,-1,8)
+//! when method=lotion: lambda=0.1
+//! seeds = 3
+//! ```
+//!
+//! * [`parse`] — lexer + recursive-descent parser; byte-offset spans,
+//!   caret-underlined errors ([`SpecError::render`]).
+//! * [`expand`] — deterministic grid expansion into labeled, validated
+//!   [`SweepPoint`](crate::coordinator::sweep::SweepPoint)s.
+//! * [`plan`] — the CLI entry: parse + expand + stamp the source
+//!   [`digest`] used to guard journal resume against edited specs.
+//!
+//! No new dependencies: the parser is hand-rolled, the digest is the
+//! same FNV-1a the config layer uses.
+
+pub mod ast;
+pub mod expand;
+pub mod lexer;
+pub mod parser;
+
+pub use ast::{SpecAst, SpecError};
+pub use expand::{expand, SweepPlan, KNOWN_KEYS, PLAN_KEYS};
+pub use parser::parse;
+
+use crate::config::RunConfig;
+
+/// FNV-1a 64 digest of the raw spec source. Stamped into every journal
+/// entry a spec-driven sweep writes, so `--resume-sweep` against a
+/// *changed* spec is refused instead of silently mixing grids.
+pub fn digest(src: &str) -> String {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in src.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    format!("{h:016x}")
+}
+
+/// Parse + expand a spec source into a runnable [`SweepPlan`], with
+/// errors rendered against the source as `origin:line:col` + caret
+/// underline. `known_models` (when the backend can enumerate presets)
+/// validates `model =` values before anything spawns.
+pub fn plan(
+    src: &str,
+    origin: &str,
+    base: &RunConfig,
+    known_models: Option<&[String]>,
+) -> anyhow::Result<SweepPlan> {
+    let ast = parse(src).map_err(|e| e.to_anyhow(src, origin))?;
+    let mut plan = expand(&ast, base, known_models).map_err(|e| e.to_anyhow(src, origin))?;
+    plan.digest = digest(src);
+    Ok(plan)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    const GOLDEN: &str = "name = g\nmodel = linreg_d256\nsteps = 16\n\
+                          grid: method=[qat,lotion] x lr=[0.1,0.2]\n\
+                          when method=lotion: lambda=0.5\n";
+
+    /// Pinned digests: the journal refusal contract depends on these
+    /// staying put across refactors (entries written by one build must
+    /// resume under the next).
+    #[test]
+    fn digest_is_pinned_fnv1a() {
+        assert_eq!(digest(""), "cbf29ce484222325");
+        assert_eq!(digest("abc"), "e71fa2190541574b");
+        assert_eq!(digest(GOLDEN), "32e004e1b0e69803");
+        assert_ne!(digest(GOLDEN), digest(&GOLDEN.replace("16", "32")));
+    }
+
+    #[test]
+    fn plan_stamps_digest_and_renders_errors() {
+        let base = RunConfig::default();
+        let p = plan(GOLDEN, "g.sweep", &base, None).unwrap();
+        assert_eq!(p.digest, digest(GOLDEN));
+        assert_eq!(p.points.len(), 4);
+
+        let src = "grid: method [qat]\n";
+        let err = plan(src, "bad.sweep", &base, None).unwrap_err().to_string();
+        // rendered, caret-underlined, pointing into the named origin
+        assert!(err.starts_with("bad.sweep:1:14:"), "{err}");
+        assert!(err.contains('^'), "{err}");
+        assert!(err.contains("grid: method [qat]"), "{err}");
+    }
+
+    /// Hand-rolled fuzz loop (proptest is unavailable offline): random
+    /// byte mutations of a valid spec must never panic — every input
+    /// either parses or returns a spanned `Err`.
+    #[test]
+    fn fuzz_mutations_never_panic() {
+        let base = RunConfig::default();
+        let seed_corpus: [&str; 4] = [
+            GOLDEN,
+            "grid: method=[qat,rat,lotion,anneal] x lr=logspace(-3,-1,8) x format=[fp4,int8,int4@64]\n",
+            "seeds = 5\nschedule = cosine\nwarmup = 2\nwhen method=lotion, lr=0.1: lambda=0.1\ngrid: method=[lotion] x lr=[0.1]\n",
+            "est.schedule = cosine\nest.sigma0 = 0.5\neval_formats = [int4, int8]\n",
+        ];
+        let mut rng = Rng::new(0xF00D);
+        for src in &seed_corpus {
+            for round in 0..400 {
+                let mut bytes = src.as_bytes().to_vec();
+                for _ in 0..=(round % 4) {
+                    match rng.below(3) {
+                        0 if !bytes.is_empty() => {
+                            // flip a byte to a random printable-ish value
+                            let i = rng.below(bytes.len() as u64) as usize;
+                            bytes[i] = (rng.below(96) + 32) as u8;
+                        }
+                        1 if !bytes.is_empty() => {
+                            let i = rng.below(bytes.len() as u64) as usize;
+                            bytes.remove(i);
+                        }
+                        _ => {
+                            let i = rng.below(bytes.len() as u64 + 1) as usize;
+                            bytes.insert(i, (rng.below(96) + 32) as u8);
+                        }
+                    }
+                }
+                let mutated = String::from_utf8_lossy(&bytes).into_owned();
+                // must not panic; Ok and Err are both acceptable
+                let _ = plan(&mutated, "fuzz.sweep", &base, None);
+            }
+        }
+    }
+}

@@ -1,0 +1,430 @@
+//! Hand-rolled recursive-descent parser for the sweep-spec grammar.
+//!
+//! ```text
+//! spec    := (stmt? NEWLINE)* stmt?
+//! stmt    := grid | when | assign
+//! grid    := 'grid' ':' axis ('x' axis)*
+//! axis    := KEY '=' value
+//! when    := 'when' cond (',' cond)* ':' assign (',' assign)*
+//! cond    := KEY '=' scalar
+//! assign  := KEY '=' value
+//! value   := scalar | list | range
+//! list    := '[' scalar (',' scalar)* ']'
+//! range   := ('linspace' | 'logspace') '(' NUM ',' NUM ',' NUM ')'
+//! scalar  := NUM | IDENT | STRING
+//! ```
+//!
+//! `grid` and `when` are contextual keywords: `grid` is only a keyword
+//! when followed by `:`, `when` only when *not* followed by `=`, so
+//! both remain usable as config keys. Ranges are expanded to explicit
+//! value lists here at parse time; every expanded element keeps the
+//! range call's span so later errors still point at the source.
+
+use super::ast::{Assign, Axis, Cond, Scalar, ScalarNode, Span, SpecAst, SpecError, Stmt, ValueNode};
+use super::lexer::{lex, Tok, Token};
+
+/// Parse a spec source into its AST. Errors carry byte-offset spans;
+/// render them against `src` with [`SpecError::render`].
+pub fn parse(src: &str) -> Result<SpecAst, SpecError> {
+    let tokens = lex(src)?;
+    Parser { tokens, pos: 0 }.spec()
+}
+
+struct Parser {
+    tokens: Vec<Token>,
+    pos: usize,
+}
+
+impl Parser {
+    fn peek(&self) -> &Token {
+        &self.tokens[self.pos]
+    }
+
+    fn peek2(&self) -> &Token {
+        &self.tokens[(self.pos + 1).min(self.tokens.len() - 1)]
+    }
+
+    fn bump(&mut self) -> Token {
+        let t = self.tokens[self.pos].clone();
+        if self.pos + 1 < self.tokens.len() {
+            self.pos += 1;
+        }
+        t
+    }
+
+    fn expect(&mut self, want: &Tok, what: &str) -> Result<Token, SpecError> {
+        let t = self.peek().clone();
+        if std::mem::discriminant(&t.tok) == std::mem::discriminant(want) {
+            Ok(self.bump())
+        } else {
+            Err(SpecError::new(
+                format!("expected {what}, found {}", t.tok.describe()),
+                t.span,
+            ))
+        }
+    }
+
+    fn spec(&mut self) -> Result<SpecAst, SpecError> {
+        let mut stmts = Vec::new();
+        loop {
+            match &self.peek().tok {
+                Tok::Eof => break,
+                Tok::Newline => {
+                    self.bump();
+                }
+                _ => {
+                    stmts.push(self.stmt()?);
+                    // a statement must end the line
+                    let t = self.peek().clone();
+                    match t.tok {
+                        Tok::Newline => {
+                            self.bump();
+                        }
+                        Tok::Eof => {}
+                        _ => {
+                            return Err(SpecError::new(
+                                format!("expected end of line, found {}", t.tok.describe()),
+                                t.span,
+                            ))
+                        }
+                    }
+                }
+            }
+        }
+        Ok(SpecAst { stmts })
+    }
+
+    fn stmt(&mut self) -> Result<Stmt, SpecError> {
+        let t = self.peek().clone();
+        match &t.tok {
+            Tok::Ident(w) if w == "grid" && self.peek2().tok == Tok::Colon => self.grid(),
+            Tok::Ident(w) if w == "when" && self.peek2().tok != Tok::Eq => self.when(),
+            Tok::Ident(_) => Ok(Stmt::Assign(self.assign()?)),
+            _ => Err(SpecError::new(
+                format!(
+                    "expected a statement (`key = value`, `grid:`, or `when`), found {}",
+                    t.tok.describe()
+                ),
+                t.span,
+            )),
+        }
+    }
+
+    /// `grid ':' axis ('x' axis)*`
+    fn grid(&mut self) -> Result<Stmt, SpecError> {
+        let kw = self.bump(); // 'grid'
+        self.expect(&Tok::Colon, "':' after `grid`")?;
+        let mut axes = vec![self.axis()?];
+        loop {
+            match &self.peek().tok {
+                Tok::Ident(w) if w == "x" => {
+                    self.bump();
+                    axes.push(self.axis()?);
+                }
+                _ => break,
+            }
+        }
+        let span = kw.span.join(axes.last().map(|a| a.key_span).unwrap_or(kw.span));
+        Ok(Stmt::Grid { axes, span })
+    }
+
+    /// `KEY '=' value` where the value is coerced to a list (a scalar
+    /// axis is a 1-element axis).
+    fn axis(&mut self) -> Result<Axis, SpecError> {
+        let (key, key_span) = self.key("axis name")?;
+        self.expect(&Tok::Eq, "'=' after axis name")?;
+        let values = match self.value()? {
+            ValueNode::Scalar(s) => vec![s],
+            ValueNode::List(vs, _) => vs,
+        };
+        Ok(Axis { key, key_span, values })
+    }
+
+    /// `when cond (',' cond)* ':' assign (',' assign)*`
+    fn when(&mut self) -> Result<Stmt, SpecError> {
+        self.bump(); // 'when'
+        let mut conds = vec![self.cond()?];
+        while self.peek().tok == Tok::Comma {
+            self.bump();
+            conds.push(self.cond()?);
+        }
+        self.expect(&Tok::Colon, "':' after `when` conditions")?;
+        let mut assigns = vec![self.assign()?];
+        while self.peek().tok == Tok::Comma {
+            self.bump();
+            assigns.push(self.assign()?);
+        }
+        Ok(Stmt::When { conds, assigns })
+    }
+
+    fn cond(&mut self) -> Result<Cond, SpecError> {
+        let (key, key_span) = self.key("condition key")?;
+        self.expect(&Tok::Eq, "'=' in `when` condition")?;
+        let value = self.scalar()?;
+        Ok(Cond { key, key_span, value })
+    }
+
+    fn assign(&mut self) -> Result<Assign, SpecError> {
+        let (key, key_span) = self.key("config key")?;
+        self.expect(&Tok::Eq, "'=' after key")?;
+        let value = self.value()?;
+        Ok(Assign { key, key_span, value })
+    }
+
+    fn key(&mut self, what: &str) -> Result<(String, Span), SpecError> {
+        let t = self.peek().clone();
+        match t.tok {
+            Tok::Ident(w) => {
+                self.bump();
+                Ok((w, t.span))
+            }
+            _ => Err(SpecError::new(
+                format!("expected {what}, found {}", t.tok.describe()),
+                t.span,
+            )),
+        }
+    }
+
+    fn value(&mut self) -> Result<ValueNode, SpecError> {
+        let t = self.peek().clone();
+        match &t.tok {
+            Tok::LBracket => self.list(),
+            Tok::Ident(w) if (w == "linspace" || w == "logspace") && self.peek2().tok == Tok::LParen => {
+                self.range()
+            }
+            _ => Ok(ValueNode::Scalar(self.scalar()?)),
+        }
+    }
+
+    /// `'[' scalar (',' scalar)* ']'` — empty lists are an error.
+    fn list(&mut self) -> Result<ValueNode, SpecError> {
+        let open = self.bump(); // '['
+        if self.peek().tok == Tok::RBracket {
+            let close = self.bump();
+            return Err(SpecError::new("empty list", open.span.join(close.span)));
+        }
+        let mut vs = vec![self.scalar()?];
+        while self.peek().tok == Tok::Comma {
+            self.bump();
+            vs.push(self.scalar()?);
+        }
+        let close = self.expect(&Tok::RBracket, "']' or ',' in list")?;
+        Ok(ValueNode::List(vs, open.span.join(close.span)))
+    }
+
+    /// `linspace(a, b, n)` / `logspace(a, b, n)` — expanded here to an
+    /// explicit value list. `logspace` yields `10^x` over the linear
+    /// ramp, so `logspace(-3, -1, 3)` is `[1e-3, 1e-2, 1e-1]`.
+    fn range(&mut self) -> Result<ValueNode, SpecError> {
+        let kw = self.bump();
+        let name = match &kw.tok {
+            Tok::Ident(w) => w.clone(),
+            _ => unreachable!("range called off a non-ident"),
+        };
+        self.expect(&Tok::LParen, "'('")?;
+        let a = self.num()?;
+        self.expect(&Tok::Comma, "',' between range arguments")?;
+        let b = self.num()?;
+        self.expect(&Tok::Comma, "',' between range arguments")?;
+        let (n, n_span) = self.num_spanned()?;
+        let close = self.expect(&Tok::RParen, "')'")?;
+        let span = kw.span.join(close.span);
+        if n.fract() != 0.0 || n < 1.0 || n > 1_000_000.0 {
+            return Err(SpecError::new(
+                format!("{name} count must be an integer >= 1, got {n}"),
+                n_span,
+            ));
+        }
+        let n = n as usize;
+        let mut vs = Vec::with_capacity(n);
+        for k in 0..n {
+            let t = if n == 1 { 0.0 } else { k as f64 / (n - 1) as f64 };
+            let x = a + (b - a) * t;
+            let v = if name == "logspace" { 10f64.powf(x) } else { x };
+            vs.push(ScalarNode { v: Scalar::Num(v), span });
+        }
+        Ok(ValueNode::List(vs, span))
+    }
+
+    fn num(&mut self) -> Result<f64, SpecError> {
+        self.num_spanned().map(|(n, _)| n)
+    }
+
+    fn num_spanned(&mut self) -> Result<(f64, Span), SpecError> {
+        let t = self.peek().clone();
+        match t.tok {
+            Tok::Num(n) => {
+                self.bump();
+                Ok((n, t.span))
+            }
+            _ => Err(SpecError::new(
+                format!("expected a number, found {}", t.tok.describe()),
+                t.span,
+            )),
+        }
+    }
+
+    fn scalar(&mut self) -> Result<ScalarNode, SpecError> {
+        let t = self.peek().clone();
+        match t.tok {
+            Tok::Num(n) => {
+                self.bump();
+                Ok(ScalarNode { v: Scalar::Num(n), span: t.span })
+            }
+            Tok::Ident(w) => {
+                self.bump();
+                Ok(ScalarNode { v: Scalar::Word(w), span: t.span })
+            }
+            Tok::Str(s) => {
+                self.bump();
+                Ok(ScalarNode { v: Scalar::Word(s), span: t.span })
+            }
+            _ => Err(SpecError::new(
+                format!("expected a value, found {}", t.tok.describe()),
+                t.span,
+            )),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn nums(vs: &[ScalarNode]) -> Vec<f64> {
+        vs.iter()
+            .map(|s| match s.v {
+                Scalar::Num(n) => n,
+                _ => panic!("expected number"),
+            })
+            .collect()
+    }
+
+    fn words(vs: &[ScalarNode]) -> Vec<&str> {
+        vs.iter()
+            .map(|s| match &s.v {
+                Scalar::Word(w) => w.as_str(),
+                _ => panic!("expected word"),
+            })
+            .collect()
+    }
+
+    #[test]
+    fn parses_defaults_grid_and_when() {
+        let ast = parse(
+            "name = demo\n\
+             model = linreg_d256\n\
+             grid: method=[qat,lotion] x lr=[0.1,0.2]\n\
+             when method=lotion: lambda=0.5\n",
+        )
+        .unwrap();
+        assert_eq!(ast.stmts.len(), 4);
+        match &ast.stmts[2] {
+            Stmt::Grid { axes, .. } => {
+                assert_eq!(axes.len(), 2);
+                assert_eq!(axes[0].key, "method");
+                assert_eq!(words(&axes[0].values), ["qat", "lotion"]);
+                assert_eq!(axes[1].key, "lr");
+                assert_eq!(nums(&axes[1].values), [0.1, 0.2]);
+            }
+            s => panic!("expected grid, got {s:?}"),
+        }
+        match &ast.stmts[3] {
+            Stmt::When { conds, assigns } => {
+                assert_eq!(conds[0].key, "method");
+                assert_eq!(conds[0].value.v, Scalar::Word("lotion".into()));
+                assert_eq!(assigns[0].key, "lambda");
+            }
+            s => panic!("expected when, got {s:?}"),
+        }
+    }
+
+    #[test]
+    fn expands_linspace_and_logspace() {
+        let ast = parse("grid: lr=logspace(-3,-1,3)\nsigma = linspace(0,1,5)\n").unwrap();
+        match &ast.stmts[0] {
+            Stmt::Grid { axes, .. } => {
+                let v = nums(&axes[0].values);
+                assert_eq!(v.len(), 3);
+                assert!((v[0] - 1e-3).abs() < 1e-12, "{v:?}");
+                assert!((v[1] - 1e-2).abs() < 1e-12, "{v:?}");
+                assert!((v[2] - 1e-1).abs() < 1e-12, "{v:?}");
+            }
+            s => panic!("expected grid, got {s:?}"),
+        }
+        match &ast.stmts[1] {
+            Stmt::Assign(a) => match &a.value {
+                ValueNode::List(vs, _) => assert_eq!(nums(vs), [0.0, 0.25, 0.5, 0.75, 1.0]),
+                v => panic!("expected list, got {v:?}"),
+            },
+            s => panic!("expected assign, got {s:?}"),
+        }
+    }
+
+    #[test]
+    fn single_element_range_and_scalar_axis() {
+        let ast = parse("grid: lr=linspace(2,9,1) x method=qat\n").unwrap();
+        match &ast.stmts[0] {
+            Stmt::Grid { axes, .. } => {
+                assert_eq!(nums(&axes[0].values), [2.0]);
+                assert_eq!(words(&axes[1].values), ["qat"]);
+            }
+            s => panic!("expected grid, got {s:?}"),
+        }
+    }
+
+    #[test]
+    fn grid_and_when_stay_usable_as_keys() {
+        // `grid = 4` (no colon) and `when = x` (followed by '=') are
+        // plain assignments, not keywords.
+        let ast = parse("grid = 4\nwhen = off\n").unwrap();
+        assert_eq!(ast.stmts.len(), 2);
+        assert!(matches!(&ast.stmts[0], Stmt::Assign(a) if a.key == "grid"));
+        assert!(matches!(&ast.stmts[1], Stmt::Assign(a) if a.key == "when"));
+    }
+
+    #[test]
+    fn golden_error_positions() {
+        // missing '=' in an axis
+        let src = "grid: method [qat]\n";
+        let e = parse(src).unwrap_err();
+        let r = e.render(src, "t.sweep");
+        assert_eq!(
+            r,
+            "t.sweep:1:14: expected '=' after axis name, found '['\n  grid: method [qat]\n               ^"
+        );
+
+        // unterminated list
+        let src = "lrs = [0.1, 0.2\n";
+        let e = parse(src).unwrap_err();
+        let r = e.render(src, "t.sweep");
+        assert_eq!(
+            r,
+            "t.sweep:1:16: expected ']' or ',' in list, found end of line\n  lrs = [0.1, 0.2\n                 ^"
+        );
+
+        // non-integer range count
+        let src = "lr = logspace(-3, -1, 2.5)\n";
+        let e = parse(src).unwrap_err();
+        assert!(e.msg.contains("count must be an integer"), "{}", e.msg);
+        assert_eq!(&src[e.span.start..e.span.end], "2.5");
+
+        // trailing junk after a statement
+        let src = "steps = 16 32\n";
+        let e = parse(src).unwrap_err();
+        assert!(e.msg.contains("expected end of line"), "{}", e.msg);
+        assert_eq!(&src[e.span.start..e.span.end], "32");
+    }
+
+    #[test]
+    fn empty_list_is_an_error() {
+        let e = parse("lrs = []\n").unwrap_err();
+        assert_eq!(e.msg, "empty list");
+    }
+
+    #[test]
+    fn eof_without_trailing_newline_is_fine() {
+        let ast = parse("steps = 16").unwrap();
+        assert_eq!(ast.stmts.len(), 1);
+    }
+}

@@ -9,6 +9,7 @@ pub mod rng;
 pub mod simd;
 pub mod tempdir;
 pub mod stats;
+pub mod text;
 
 pub use pool::Pool;
 pub use rng::Rng;

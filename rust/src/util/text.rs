@@ -1,0 +1,66 @@
+//! Tiny text helpers: edit distance + nearest-candidate suggestion for
+//! "unknown key — did you mean ...?" diagnostics (sweep-spec keys,
+//! strict config-TOML keys).
+
+/// Levenshtein edit distance (insert/delete/substitute, all cost 1).
+pub fn edit_distance(a: &str, b: &str) -> usize {
+    let a: Vec<char> = a.chars().collect();
+    let b: Vec<char> = b.chars().collect();
+    if a.is_empty() {
+        return b.len();
+    }
+    if b.is_empty() {
+        return a.len();
+    }
+    // one rolling row
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    let mut cur = vec![0usize; b.len() + 1];
+    for (i, ca) in a.iter().enumerate() {
+        cur[0] = i + 1;
+        for (j, cb) in b.iter().enumerate() {
+            let sub = prev[j] + usize::from(ca != cb);
+            cur[j + 1] = sub.min(prev[j + 1] + 1).min(cur[j] + 1);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[b.len()]
+}
+
+/// The candidate closest to `target` by edit distance, if any is close
+/// enough to plausibly be a typo (distance ≤ 2, and strictly less than
+/// the target's own length so 2-char keys don't match everything).
+pub fn nearest<'a>(target: &str, candidates: impl IntoIterator<Item = &'a str>) -> Option<&'a str> {
+    candidates
+        .into_iter()
+        .map(|c| (edit_distance(target, c), c))
+        .min_by_key(|&(d, c)| (d, c.len()))
+        .filter(|&(d, _)| d <= 2 && d < target.chars().count())
+        .map(|(_, c)| c)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn distance_basics() {
+        assert_eq!(edit_distance("", ""), 0);
+        assert_eq!(edit_distance("abc", "abc"), 0);
+        assert_eq!(edit_distance("abc", ""), 3);
+        assert_eq!(edit_distance("kitten", "sitting"), 3);
+        assert_eq!(edit_distance("stpes", "steps"), 2);
+        assert_eq!(edit_distance("lamda", "lambda"), 1);
+    }
+
+    #[test]
+    fn nearest_suggests_plausible_typos_only() {
+        let keys = ["steps", "lr", "lambda", "schedule"];
+        assert_eq!(nearest("stpes", keys), Some("steps"));
+        assert_eq!(nearest("lamda", keys), Some("lambda"));
+        assert_eq!(nearest("zzzzzz", keys), None);
+        // exact match still reports itself (callers check membership first)
+        assert_eq!(nearest("lr", keys), Some("lr"));
+        // a 2-char unknown must not fuzzy-match a 2-char key
+        assert_eq!(nearest("qq", keys), None);
+    }
+}

@@ -187,6 +187,82 @@ fn diverged_point_is_a_data_point_not_a_sweep_failure() {
     assert_eq!(sweep::best(&results), Some(0));
 }
 
+/// A spec-expanded grid (DESIGN.md §10) — the `--spec` door into the
+/// same runner — is bit-identical at `--sweep-workers 1` and `4`.
+#[test]
+fn spec_driven_sweep_is_bit_identical_at_any_width() {
+    const SRC: &str = "name = spec_ident\n\
+                       model = linreg_d256\n\
+                       format = int4\n\
+                       eval_formats = int4\n\
+                       steps = 16\n\
+                       eval_every = 16\n\
+                       lambda = 1\n\
+                       schedule = constant\n\
+                       seed = 5\n\
+                       grid: method=[qat,lotion] x lr=[0.04,0.08]\n";
+    let factory = linreg_factory();
+    let models = factory.model_names();
+    let plan =
+        lotion::spec::plan(SRC, "test.sweep", &RunConfig::default(), models.as_deref()).unwrap();
+    assert_eq!(plan.digest, lotion::spec::digest(SRC));
+    let run = |workers: usize| {
+        SweepRunner::new(&factory, workers)
+            .run(plan.points.clone(), &plan.score_format, &plan.score_rounding, &linreg_inputs)
+            .unwrap()
+    };
+    let serial = run(1);
+    assert_eq!(serial.len(), 4);
+    assert!(serial.iter().all(|r| !r.diverged));
+    assert_eq!(fingerprint(&run(4)), fingerprint(&serial));
+}
+
+/// Spec expansion produces the *same runs* as hand-built configs: a
+/// fig2-shaped method×lr product expands to points whose labels, config
+/// digests, and trained results match a hand-rolled grid bit for bit.
+#[test]
+fn spec_grid_matches_handbuilt_points() {
+    const SRC: &str = "name = par\n\
+                       model = linreg_d256\n\
+                       format = int4\n\
+                       eval_formats = int4\n\
+                       steps = 16\n\
+                       eval_every = 16\n\
+                       lambda = 1\n\
+                       schedule = constant\n\
+                       seed = 5\n\
+                       grid: method=[lotion,qat] x lr=[0.04,0.08]\n\
+                       when method=lotion: lambda=0.5\n";
+    let factory = linreg_factory();
+    let plan = lotion::spec::plan(SRC, "test.sweep", &RunConfig::default(), None).unwrap();
+
+    // the hand-built twin of the same grid, method-major
+    let mut hand = Vec::new();
+    for method in ["lotion", "qat"] {
+        for lr in [0.04, 0.08] {
+            let mut cfg = linreg_base_cfg();
+            cfg.method = method.into();
+            cfg.lr = lr;
+            cfg.lambda = if method == "lotion" { 0.5 } else { 1.0 };
+            let label = format!("{method}_lr{lr}");
+            cfg.name = format!("par_{label}");
+            hand.push(SweepPoint::new(label, cfg));
+        }
+    }
+    assert_eq!(
+        plan.points.iter().map(|p| p.label.as_str()).collect::<Vec<_>>(),
+        hand.iter().map(|p| p.label.as_str()).collect::<Vec<_>>()
+    );
+    for (s, h) in plan.points.iter().zip(&hand) {
+        assert_eq!(s.cfg.digest(), h.cfg.digest(), "config mismatch at {}", s.label);
+        assert_eq!(s.cfg.name, h.cfg.name);
+    }
+    let run = |points: Vec<SweepPoint>| {
+        SweepRunner::new(&factory, 1).run(points, "int4", "rtn", &linreg_inputs).unwrap()
+    };
+    assert_eq!(fingerprint(&run(plan.points.clone())), fingerprint(&run(hand)));
+}
+
 /// Factories hand every worker its own engine; the trait object is
 /// shareable across threads by contract.
 #[test]

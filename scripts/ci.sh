@@ -99,6 +99,54 @@ else
     echo "LOTION_CI_EST=0; skipping estimator lane"
 fi
 
+echo "== sweep-spec lane (--spec goldens + lm-tiny grid) =="
+# the sweep-spec DSL end-to-end at the CLI surface (skip with
+# LOTION_CI_SPEC=0): a dry-run of the in-repo fig2 grid (expansion +
+# validation only — spawns nothing), then a tiny lm-tiny spec swept at
+# --sweep-workers 1 and 4, whose JSONL results must be byte-identical;
+# finally a journaled resume (same spec: every point skipped, same
+# bytes out) and a digest-refusal negative test (edited spec + old
+# journal must be refused, not silently mixed)
+if [[ "${LOTION_CI_SPEC:-1}" == "1" ]]; then
+    ./target/release/lotion-rs sweep --backend native \
+        --spec examples/fig2.sweep --dry-run
+    SPEC_DIR=/tmp/lotion_ci_spec
+    rm -rf "$SPEC_DIR" && mkdir -p "$SPEC_DIR"
+    cat > "$SPEC_DIR/tiny.sweep" <<'EOF'
+name         = ci_tiny
+model        = lm-tiny
+format       = int4
+eval_formats = int4
+steps        = 8
+eval_every   = 8
+lambda       = 100
+schedule     = constant
+grid: method=[qat,lotion] x lr=[0.002,0.004]
+EOF
+    for w in 1 4; do
+        ./target/release/lotion-rs sweep --backend native \
+            --spec "$SPEC_DIR/tiny.sweep" --sweep-workers "$w" \
+            --out "$SPEC_DIR/w$w" --sweep-out "$SPEC_DIR/results_w$w.jsonl" \
+            --journal "$SPEC_DIR/journal_w$w.jsonl"
+    done
+    cmp "$SPEC_DIR/results_w1.jsonl" "$SPEC_DIR/results_w4.jsonl"
+    ./target/release/lotion-rs sweep --backend native \
+        --spec "$SPEC_DIR/tiny.sweep" \
+        --out "$SPEC_DIR/w1" --sweep-out "$SPEC_DIR/results_resume.jsonl" \
+        --journal "$SPEC_DIR/journal_w1.jsonl" --resume-sweep
+    cmp "$SPEC_DIR/results_w1.jsonl" "$SPEC_DIR/results_resume.jsonl"
+    sed 's/lambda       = 100/lambda       = 50/' \
+        "$SPEC_DIR/tiny.sweep" > "$SPEC_DIR/edited.sweep"
+    if ./target/release/lotion-rs sweep --backend native \
+        --spec "$SPEC_DIR/edited.sweep" --out "$SPEC_DIR/edited" \
+        --journal "$SPEC_DIR/journal_w1.jsonl" --resume-sweep \
+        >/dev/null 2>&1; then
+        echo "ERROR: an edited spec resumed a stale journal"; exit 1
+    fi
+else
+    echo "LOTION_CI_SPEC=0; skipping sweep-spec lane"
+fi
+
 echo "== cargo fmt --check =="
 if cargo fmt --version >/dev/null 2>&1; then
     cargo fmt --check
